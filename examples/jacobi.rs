@@ -1,0 +1,72 @@
+//! Distributed Jacobi solver — the paper's §IV-C application.
+//!
+//! Runs the solver on an in-process cluster, verifies the result against the
+//! serial oracle, and prints the timing breakdown. Hardware workers
+//! (`--hw`) run their sweeps through the AOT-compiled XLA executable behind
+//! a GAScore; tile shapes must exist in `artifacts/` (see aot.py).
+//!
+//! Examples:
+//!   cargo run --release --example jacobi -- --grid 130 --workers 2 --iters 200
+//!   cargo run --release --example jacobi -- --grid 130 --workers 2 --hw
+//!   cargo run --release --example jacobi -- --grid 258 --workers 4 --nodes 2 --hw
+
+use shoal::apps::jacobi::{compute, run_with_grid, JacobiConfig};
+use shoal::util::cli::{flag, opt, Args};
+
+fn main() -> shoal::Result<()> {
+    let args = Args::parse(vec![
+        opt("grid", "grid edge length n (n×n cells)", "130"),
+        opt("workers", "worker kernels", "2"),
+        opt("nodes", "nodes hosting the workers", "1"),
+        opt("iters", "Jacobi iterations", "200"),
+        flag("hw", "hardware workers (GAScore + XLA compute)"),
+        flag("chunked", "enable the chunked-transfer extension"),
+        flag("no-verify", "skip the serial-oracle check (large grids)"),
+    ]);
+    if args.wants_help() {
+        print!("{}", args.usage("Distributed Jacobi over Shoal (paper §IV-C)"));
+        return Ok(());
+    }
+
+    let cfg = JacobiConfig {
+        n: args.get_usize("grid", 130),
+        iters: args.get_usize("iters", 200),
+        workers: args.get_usize("workers", 2),
+        nodes: args.get_usize("nodes", 1),
+        hw: args.flag("hw"),
+        chunked: args.flag("chunked"),
+    };
+    println!(
+        "jacobi: grid {0}×{0}, {1} iters, {2} {3} worker(s) on {4} node(s)",
+        cfg.n,
+        cfg.iters,
+        cfg.workers,
+        if cfg.hw { "hardware" } else { "software" },
+        cfg.nodes
+    );
+
+    let initial = compute::hot_plate(cfg.n, cfg.n);
+    let report = run_with_grid(&cfg, initial.clone())?;
+
+    if !args.flag("no-verify") {
+        report.verify(&initial)?;
+        println!("verified against the serial oracle ✓");
+    }
+
+    println!("wall time   : {:.3} s", report.wall.as_secs_f64());
+    println!("  distribute: {:.3} s", report.distribute.as_secs_f64());
+    println!("  compute   : {:.3} s (max worker)", report.compute.as_secs_f64());
+    println!("  sync      : {:.3} s (max worker)", report.sync.as_secs_f64());
+    println!("  gather    : {:.3} s", report.gather.as_secs_f64());
+    for w in &report.worker_reports {
+        println!(
+            "  worker {:2}: compute {:.3} s, sync {:.3} s",
+            w.worker,
+            w.compute.as_secs_f64(),
+            w.sync.as_secs_f64()
+        );
+    }
+    let mid = report.grid[(cfg.n / 2) * cfg.n + cfg.n / 2];
+    println!("centre temperature after {} iters: {mid:.3}", cfg.iters);
+    Ok(())
+}

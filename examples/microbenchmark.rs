@@ -1,0 +1,104 @@
+//! Microbenchmarks — measured and modeled (paper §IV-B).
+//!
+//! Two modes:
+//! - `--measured`: run the real Benchmark-IP kernels through the library
+//!   (in-process / loopback TCP / loopback UDP) and print wall-clock median
+//!   latency and throughput per AM type. These are the numbers used to
+//!   calibrate the DES software constants.
+//! - default (modeled): print the paper's Fig. 4/5/6 series from the
+//!   calibrated cost model across all six topologies.
+//!
+//! Examples:
+//!   cargo run --release --example microbenchmark
+//!   cargo run --release --example microbenchmark -- --measured --transport tcp
+//!   cargo run --release --example microbenchmark -- --measured --payloads 8,512,4096
+
+use shoal::bench::micro::{measure_latency, measure_throughput, BenchPlacement};
+use shoal::bench::report;
+use shoal::config::TransportKind;
+use shoal::sim::{CostModel, MsgKind};
+use shoal::util::cli::{flag, opt, Args};
+use shoal::util::table::Table;
+use shoal::util::{fmt_ns, fmt_rate};
+
+fn main() -> shoal::Result<()> {
+    let args = Args::parse(vec![
+        flag("measured", "run real kernels instead of the model"),
+        opt("transport", "measured mode: local | tcp | udp", "local"),
+        opt("payloads", "comma-separated payload sizes", "8,64,512,4096"),
+        opt("samples", "latency samples per point", "200"),
+        opt("count", "messages per throughput point", "500"),
+    ]);
+    if args.wants_help() {
+        print!("{}", args.usage("Shoal microbenchmarks (paper §IV-B)"));
+        return Ok(());
+    }
+
+    if args.flag("measured") {
+        run_measured(&args)
+    } else {
+        let cm = CostModel::paper();
+        println!("{}", report::fig4_latency(&cm).render());
+        println!("{}", report::fig5_udp_speedup(&cm).render());
+        println!("{}", report::fig6_throughput(&cm).render());
+        println!("(modeled series; run with --measured for wall-clock numbers)");
+        Ok(())
+    }
+}
+
+fn run_measured(args: &Args) -> shoal::Result<()> {
+    let payloads = args.get_usize_list("payloads", &[8, 64, 512, 4096]);
+    let samples = args.get_usize("samples", 200);
+    let count = args.get_usize("count", 500);
+    let transport = match args.get_or("transport", "local") {
+        "tcp" => TransportKind::Tcp,
+        "udp" => TransportKind::Udp,
+        _ => TransportKind::Local,
+    };
+    let placement = if transport == TransportKind::Local {
+        BenchPlacement::sw_same()
+    } else {
+        BenchPlacement::sw_diff(transport)
+    };
+    println!(
+        "measured microbenchmarks: transport {}, {} samples/point",
+        args.get_or("transport", "local"),
+        samples
+    );
+
+    let kinds = [
+        MsgKind::MediumFifo,
+        MsgKind::Medium,
+        MsgKind::LongFifo,
+        MsgKind::Long,
+        MsgKind::MediumGet,
+        MsgKind::LongGet,
+    ];
+
+    let mut lat = Table::new("measured median round-trip latency").header(
+        std::iter::once("payload (B)".to_string()).chain(kinds.iter().map(|k| k.label().to_string())),
+    );
+    for &p in &payloads {
+        let mut row = vec![p.to_string()];
+        for kind in kinds {
+            let s = measure_latency(placement, kind, p, samples, samples / 10)?;
+            row.push(fmt_ns(s.median()));
+        }
+        lat.row(row);
+    }
+    println!("{}", lat.render());
+
+    let mut tput = Table::new("measured throughput (payload bytes)").header(
+        std::iter::once("payload (B)".to_string()).chain(kinds.iter().map(|k| k.label().to_string())),
+    );
+    for &p in &payloads {
+        let mut row = vec![p.to_string()];
+        for kind in kinds {
+            let bps = measure_throughput(placement, kind, p, count)?;
+            row.push(fmt_rate(bps));
+        }
+        tput.row(row);
+    }
+    println!("{}", tput.render());
+    Ok(())
+}

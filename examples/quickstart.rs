@@ -1,0 +1,100 @@
+//! Quickstart: a tour of the Shoal API on a tiny heterogeneous cluster.
+//!
+//! Builds one software node (two kernels) plus one simulated-FPGA node (one
+//! kernel behind a GAScore), then exercises every message class: Short,
+//! Medium (FIFO + from-memory), Long put/get, strided/vectored puts, user
+//! handlers and barriers.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use shoal::config::{ClusterBuilder, Platform};
+use shoal::prelude::*;
+
+fn main() -> Result<()> {
+    // -- describe the cluster ------------------------------------------------
+    let mut b = ClusterBuilder::new();
+    let cpu = b.node("cpu0", Platform::Sw);
+    let fpga = b.node("fpga0", Platform::Hw);
+    let k_main = b.kernel(cpu); // kernel 0: orchestrator
+    let k_peer = b.kernel(cpu); // kernel 1: software peer
+    let k_hw = b.kernel(fpga); // kernel 2: hardware kernel
+    let spec = b.build()?;
+
+    let cluster = ShoalCluster::launch(&spec)?;
+    println!("cluster up: {} kernels on {} nodes", spec.kernel_count(), spec.nodes.len());
+
+    // A user handler on the software peer: sums the payload bytes into its
+    // partition at the offset named by args[0].
+    cluster.register_handler(k_peer, 16, |h| {
+        let sum: u64 = h.payload.iter().map(|&b| b as u64).sum();
+        h.segment.write(h.args[0], &sum.to_le_bytes()).unwrap();
+    })?;
+
+    // -- software peer ---------------------------------------------------------
+    cluster.run_kernel(k_peer, move |mut k| {
+        // Receive Medium messages on the kernel stream.
+        let m = k.recv_medium().unwrap();
+        println!("[peer] medium from k{}: {:?}", m.src, String::from_utf8_lossy(&m.payload));
+        let _handler_msg = k.recv_medium().unwrap();
+        k.barrier().unwrap();
+        // After the barrier, the orchestrator's Long put has landed.
+        let stamped = k.mem().read(256, 4).unwrap();
+        println!("[peer] partition bytes at 256: {stamped:?}");
+        let handler_sum = u64::from_le_bytes(k.mem().read(64, 8).unwrap().try_into().unwrap());
+        println!("[peer] user handler wrote sum = {handler_sum}");
+        assert_eq!(handler_sum, 15);
+        k.barrier().unwrap();
+    });
+
+    // -- hardware kernel ----------------------------------------------------------
+    cluster.run_kernel(k_hw, move |mut k| {
+        k.barrier().unwrap();
+        // Its partition was written remotely; serve it back via gets later.
+        let v = k.mem().read_f32(0, 4).unwrap();
+        println!("[hw] partition holds {v:?}");
+        k.barrier().unwrap();
+    });
+
+    // -- orchestrator ---------------------------------------------------------------
+    cluster.run_kernel(k_main, move |mut k| {
+        // 1. Medium FIFO put: payload straight from the kernel.
+        k.am_medium(k_peer, handlers::NOP, &[], b"hello shoal").unwrap();
+
+        // 2. Medium put through a *user handler* (id 16) with args.
+        k.am_medium(k_peer, 16, &[64], &[1, 2, 3, 4, 5]).unwrap();
+
+        // 3. Long put into the software peer's partition.
+        k.am_long(k_peer, handlers::NOP, &[], &[9, 9, 9, 9], 256).unwrap();
+
+        // 4. Long put of f32 data into the hardware kernel's partition.
+        let xs: Vec<u8> = [1.5f32, 2.5, 3.5, 4.5].iter().flat_map(|v| v.to_le_bytes()).collect();
+        k.am_long(k_hw, handlers::NOP, &[], &xs, 0).unwrap();
+
+        // Each non-async request produces one reply.
+        k.wait_replies(4).unwrap();
+        println!("[main] 4 puts acknowledged");
+        k.barrier().unwrap();
+
+        // 5. Long get: read the hardware kernel's partition back into ours.
+        let r = k.am_long_get(k_hw, handlers::NOP, 0, 16, 0).unwrap();
+        k.wait_replies(r.messages).unwrap();
+        println!("[main] long get -> {:?}", k.mem().read_f32(0, 4).unwrap());
+
+        // 6. Medium get: stream bytes from the peer's partition.
+        let r = k.am_medium_get(k_peer, handlers::NOP, 256, 4).unwrap();
+        let m = k.recv_medium().unwrap();
+        println!("[main] medium get -> {:?}", m.payload);
+        k.wait_replies(r.messages).unwrap();
+
+        // 7. Strided put: scatter 4 blocks of 8 bytes at stride 16.
+        let data: Vec<u8> = (0..32).collect();
+        k.am_long_strided(k_peer, handlers::NOP, &[], &data, 512, 16, 8).unwrap();
+        k.wait_replies(1).unwrap();
+        println!("[main] strided put done");
+        k.barrier().unwrap();
+    });
+
+    cluster.join()?;
+    println!("quickstart OK");
+    Ok(())
+}

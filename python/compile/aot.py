@@ -1,0 +1,104 @@
+"""AOT pipeline: lower the L2 graph to HLO text artifacts + manifest.
+
+Run once at build time (``make artifacts``):
+
+    python -m compile.aot --out-dir ../artifacts
+
+Produces ``jacobi_r{rows}_c{cols}.hlo.txt`` for every tile shape the rust
+examples/benches request, plus ``manifest.json`` describing them. The rust
+``runtime::Engine`` reads the manifest, compiles each module on the PJRT CPU
+client once, and serves executions from the request path.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+
+# Tile shapes (rows, cols) used by examples, tests and benches. A grid of
+# n×n cells with w workers yields tiles of ((n-2)/w, n): cols always equal
+# the grid edge, rows are the worker's strip of interior rows.
+#  - (16,34)/(32,66)/(16,66): quickstart + integration tests (grids 34, 66);
+#  - (64,130): jacobi example default (grid 130, 2 workers);
+#  - (64,258)/(128,258): heat_diffusion example (grid 258, 2 or 4 workers);
+#  - (256,1026): mid-size bench point (grid 1026, 4 workers);
+#  - (256,4098)/(512,4098): full Fig-8 (grid-4096 interior, 16 or 8 kernels).
+DEFAULT_SHAPES = [
+    (16, 34),
+    (32, 66),
+    (16, 66),
+    (64, 130),
+    (64, 258),
+    (128, 258),
+    (256, 1026),
+    (256, 4098),
+    (512, 4098),
+]
+
+
+def artifact_name(rows, cols):
+    return f"jacobi_r{rows}_c{cols}"
+
+
+def build_artifacts(out_dir, shapes, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for rows, cols in shapes:
+        name = artifact_name(rows, cols)
+        fname = f"{name}.hlo.txt"
+        spec = jax.ShapeDtypeStruct((rows + 2, cols), jnp.float32)
+        text = model.lower_to_hlo_text(model.jacobi_step, spec)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "name": name,
+                "file": fname,
+                "kind": "jacobi_step",
+                "rows": rows,
+                "cols": cols,
+                "input": [rows + 2, cols],
+                "output": [rows, cols],
+                "dtype": "f32",
+            }
+        )
+        if verbose:
+            print(f"  {fname}: {len(text)} chars")
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def parse_shapes(text):
+    """Parse ``64x128,256x512`` into [(64, 128), (256, 512)]."""
+    shapes = []
+    for tok in text.split(","):
+        r, c = tok.lower().split("x")
+        shapes.append((int(r), int(c)))
+    return shapes
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated RxC tile shapes (default: the standard set)",
+    )
+    args = ap.parse_args(argv)
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    build_artifacts(args.out_dir, shapes)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

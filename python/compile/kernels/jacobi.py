@@ -1,0 +1,106 @@
+"""Layer 1 — the Jacobi von Neumann stencil as a Pallas kernel.
+
+The paper's hardware Jacobi kernels use "an optimized VHDL core from [7]": a
+systolic line-buffer pipeline that streams the local grid and emits the
+4-neighbour average. This kernel is the TPU-shaped rethink of that core
+(DESIGN.md §Hardware-Adaptation):
+
+* the FPGA's BRAM line buffers become **VMEM-resident row slabs** — the grid
+  is blocked over rows, and each Pallas grid step works on a
+  ``(block_rows + 2, cols)`` slab (one halo row above and below, the same
+  overlap a line buffer provides);
+* the FPGA's one-cell-per-cycle systolic datapath becomes **full-width VPU
+  vector ops** — the von Neumann average is four shifted adds over the slab,
+  no MXU involvement;
+* the AXI DataMover's HBM↔BRAM bursts become the implicit HBM↔VMEM block
+  transfers expressed by the BlockSpec/grid schedule.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the same
+artifact runs under the rust runtime (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-block size for the VMEM schedule. 64 rows × 4096 f32 cols ≈ 1 MiB per
+# input slab — comfortably inside a TPU core's ~16 MiB VMEM with double
+# buffering, and a multiple of the 8-row f32 sublane tile.
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _stencil_block(g_ref, o_ref):
+    """Pallas kernel body: 4-neighbour average over one padded row slab.
+
+    ``g_ref`` is a ``(block_rows + 2, cols)`` slab (halo row above/below);
+    ``o_ref`` is the ``(block_rows, cols - 2)`` interior update.
+    """
+    g = g_ref[...]
+    up = g[:-2, 1:-1]
+    down = g[2:, 1:-1]
+    left = g[1:-1, :-2]
+    right = g[1:-1, 2:]
+    o_ref[...] = (up + down + left + right) * 0.25
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def jacobi_interior(grid, block_rows=DEFAULT_BLOCK_ROWS):
+    """One Jacobi sweep over the interior of ``grid``.
+
+    ``grid`` is ``(rows + 2, cols)``: the local tile plus one halo row above
+    and below (received from neighbour kernels via Shoal Long AMs). Returns
+    the ``(rows, cols - 2)`` updated interior (boundary columns are
+    reattached by :func:`compile.model.jacobi_step` at Layer 2).
+    """
+    rows = grid.shape[0] - 2
+    cols = grid.shape[1]
+    block_rows = min(block_rows, rows)
+    if rows % block_rows != 0:
+        # Fall back to a single slab when the tile does not block evenly —
+        # correctness first; the AOT shapes are chosen to block evenly.
+        block_rows = rows
+    nblocks = rows // block_rows
+
+    if nblocks == 1:
+        return pl.pallas_call(
+            _stencil_block,
+            out_shape=jax.ShapeDtypeStruct((rows, cols - 2), grid.dtype),
+            interpret=True,
+        )(grid)
+
+    # Overlapping slabs: block i covers grid rows [i*block_rows,
+    # i*block_rows + block_rows + 2). BlockSpec's blocked indexing cannot
+    # express overlap, so the index map is written against an element-level
+    # view: each grid step receives the full array and slices its slab; the
+    # HBM→VMEM traffic this implies is the same a line-buffered FPGA core
+    # performs (each row is read at most twice across adjacent slabs).
+    def _blocked_kernel(g_ref, o_ref):
+        i = pl.program_id(0)
+        slab = pl.load(
+            g_ref, (pl.dslice(i * block_rows, block_rows + 2), pl.dslice(0, cols))
+        )
+        up = slab[:-2, 1:-1]
+        down = slab[2:, 1:-1]
+        left = slab[1:-1, :-2]
+        right = slab[1:-1, 2:]
+        out = (up + down + left + right) * 0.25
+        o_ref[pl.dslice(i * block_rows, block_rows), pl.dslice(0, cols - 2)] = out
+
+    return pl.pallas_call(
+        _blocked_kernel,
+        grid=(nblocks,),
+        out_shape=jax.ShapeDtypeStruct((rows, cols - 2), grid.dtype),
+        interpret=True,
+    )(grid)
+
+
+def vmem_bytes(block_rows, cols, dtype_bytes=4):
+    """Estimated VMEM footprint of one grid step (input slab + output block),
+    used by the DESIGN.md §Perf analysis — interpret-mode wallclock is not a
+    TPU proxy, so we optimize structure against this budget instead."""
+    slab = (block_rows + 2) * cols * dtype_bytes
+    out = block_rows * (cols - 2) * dtype_bytes
+    return slab + out

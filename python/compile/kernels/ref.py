@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the pytest/hypothesis suites check the Pallas
+implementations against, and the reference the rust serial oracle mirrors
+(rust/src/apps/jacobi/compute.rs `SerialOracle`).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def jacobi_interior_ref(grid):
+    """4-neighbour (von Neumann) average over the interior of a padded tile.
+
+    ``grid`` is ``(rows + 2, cols)``; returns ``(rows, cols - 2)``.
+    """
+    up = grid[:-2, 1:-1]
+    down = grid[2:, 1:-1]
+    left = grid[1:-1, :-2]
+    right = grid[1:-1, 2:]
+    return (up + down + left + right) * 0.25
+
+
+def jacobi_step_ref(grid):
+    """One full-tile step: interior update + fixed boundary columns.
+
+    Same contract as :func:`compile.model.jacobi_step`.
+    """
+    inner = jacobi_interior_ref(grid)
+    return jnp.concatenate([grid[1:-1, :1], inner, grid[1:-1, -1:]], axis=1)
+
+
+def jacobi_global_ref(grid, iters):
+    """Multi-iteration Jacobi over a full (un-tiled) grid with fixed
+    boundary — the oracle for the distributed runs.
+
+    ``grid`` is ``(n, m)`` float; boundary cells (first/last row and column)
+    are Dirichlet-fixed. Implemented in numpy for clarity.
+    """
+    g = np.array(grid, dtype=np.float32, copy=True)
+    for _ in range(iters):
+        new = g.copy()
+        new[1:-1, 1:-1] = 0.25 * (
+            g[:-2, 1:-1] + g[2:, 1:-1] + g[1:-1, :-2] + g[1:-1, 2:]
+        )
+        g = new
+    return g

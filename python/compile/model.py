@@ -1,0 +1,62 @@
+"""Layer 2 — the JAX compute graph the rust runtime executes.
+
+The distributed Jacobi application (paper §IV-C) splits the grid into
+per-kernel tiles; every iteration each kernel exchanges halo rows with its
+neighbours over Shoal Long AMs and then sweeps its tile. The sweep is this
+module's ``jacobi_step``: the Layer-1 Pallas stencil over the padded tile
+plus the boundary-column reattachment, fused by XLA into one executable.
+
+``aot.py`` lowers ``jacobi_step`` once per tile shape to HLO text; the rust
+coordinator (rust/src/runtime) loads and invokes the result on the request
+path. Python never runs at application time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.jacobi import jacobi_interior
+
+
+def jacobi_step(grid):
+    """One Jacobi sweep over a padded tile.
+
+    ``grid``: ``(rows + 2, cols)`` — the kernel's tile plus one halo row
+    above and below. Column 0 and column ``cols-1`` are global Dirichlet
+    boundary and are copied through unchanged.
+
+    Returns a 1-tuple of the updated ``(rows, cols)`` tile (tuple because the
+    AOT path lowers with ``return_tuple=True`` — see aot.py).
+    """
+    inner = jacobi_interior(grid)
+    left = grid[1:-1, :1]
+    right = grid[1:-1, -1:]
+    return (jnp.concatenate([left, inner, right], axis=1),)
+
+
+def residual_step(grid):
+    """Sweep + sum-of-squared-change, for convergence-checked runs.
+
+    Returns ``(new_tile, residual_scalar)``.
+    """
+    (new,) = jacobi_step(grid)
+    old = grid[1:-1, :]
+    res = jnp.sum((new - old) ** 2)
+    return (new, res)
+
+
+def lower_to_hlo_text(fn, *arg_specs):
+    """Lower a jitted function to HLO **text**.
+
+    jax ≥ 0.5 serialized HloModuleProto uses 64-bit instruction ids which the
+    xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+    text parser reassigns ids, so text is the interchange format
+    (/opt/xla-example/README.md).
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,108 @@
+"""L1 correctness: the Pallas Jacobi kernel against the pure-jnp oracle."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.jacobi import jacobi_interior, vmem_bytes, DEFAULT_BLOCK_ROWS
+from compile.kernels.ref import jacobi_interior_ref, jacobi_step_ref, jacobi_global_ref
+
+
+def rand_grid(rng, rows, cols):
+    return rng.standard_normal((rows + 2, cols)).astype(np.float32)
+
+
+def test_single_slab_matches_ref():
+    rng = np.random.default_rng(0)
+    g = rand_grid(rng, 8, 16)
+    got = np.asarray(jacobi_interior(g))
+    want = np.asarray(jacobi_interior_ref(g))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_multi_block_matches_ref():
+    rng = np.random.default_rng(1)
+    g = rand_grid(rng, 4 * DEFAULT_BLOCK_ROWS, 128)
+    got = np.asarray(jacobi_interior(g))
+    want = np.asarray(jacobi_interior_ref(g))
+    assert got.shape == (4 * DEFAULT_BLOCK_ROWS, 126)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_non_divisible_rows_fall_back():
+    rng = np.random.default_rng(2)
+    g = rand_grid(rng, 67, 32)  # 67 % 64 != 0
+    got = np.asarray(jacobi_interior(g))
+    want = np.asarray(jacobi_interior_ref(g))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=96),
+    cols=st.integers(min_value=3, max_value=96),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    block=st.sampled_from([4, 8, 16, 64]),
+)
+def test_kernel_matches_ref_property(rows, cols, seed, block):
+    """Hypothesis sweep over shapes, seeds and block sizes."""
+    rng = np.random.default_rng(seed)
+    g = rand_grid(rng, rows, cols)
+    got = np.asarray(jacobi_interior(g, block_rows=block))
+    want = np.asarray(jacobi_interior_ref(g))
+    assert got.shape == (rows, cols - 2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(min_value=2, max_value=32),
+    cols=st.integers(min_value=3, max_value=32),
+)
+def test_kernel_handles_extreme_values(rows, cols):
+    """Stencil must be exact for constant grids and stable for large values."""
+    const = np.full((rows + 2, cols), 7.5, dtype=np.float32)
+    out = np.asarray(jacobi_interior(const))
+    np.testing.assert_allclose(out, 7.5, rtol=1e-6)
+
+    big = np.full((rows + 2, cols), 1e30, dtype=np.float32)
+    out = np.asarray(jacobi_interior(big))
+    assert np.all(np.isfinite(out))
+
+
+def test_dtype_f64_input_downcasts_gracefully():
+    """Without jax x64 mode, float64 inputs run in float32 — values must
+    still match the oracle at f32 tolerance (no silent corruption)."""
+    rng = np.random.default_rng(3)
+    g = rng.standard_normal((10, 16))  # float64 input
+    got = np.asarray(jacobi_interior(g))
+    want = np.asarray(jacobi_interior_ref(g.astype(np.float32)))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_step_ref_preserves_boundary_columns():
+    rng = np.random.default_rng(4)
+    g = rand_grid(rng, 6, 10)
+    out = np.asarray(jacobi_step_ref(g))
+    np.testing.assert_array_equal(out[:, 0], g[1:-1, 0])
+    np.testing.assert_array_equal(out[:, -1], g[1:-1, -1])
+
+
+def test_global_ref_converges_to_boundary_mean():
+    """Heat-equation sanity: with hot top edge, interior warms monotonically."""
+    n = 16
+    g = np.zeros((n, n), dtype=np.float32)
+    g[0, :] = 100.0
+    r1 = jacobi_global_ref(g, 10)
+    r2 = jacobi_global_ref(g, 200)
+    # Interior temperature increases with iterations and stays bounded.
+    assert r2[1:-1, 1:-1].mean() > r1[1:-1, 1:-1].mean() > 0.0
+    assert r2.max() <= 100.0 + 1e-4
+
+
+def test_vmem_budget():
+    """The default block fits VMEM with double buffering (≈16 MiB/core)."""
+    assert vmem_bytes(DEFAULT_BLOCK_ROWS, 4096) * 2 < 16 * 1024 * 1024

@@ -1,0 +1,78 @@
+//! Fig. 4 — average median latency of communication methods with TCP.
+//!
+//! Emits the modeled series for all six topologies (the paper's testbed is
+//! simulated; DESIGN.md §3), then runs the *measured* software points over
+//! the real library (in-process and loopback TCP) next to the model's SW
+//! constants — the calibration evidence recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo bench --bench fig4_latency`
+//! Quick mode: `SHOAL_BENCH_QUICK=1 cargo bench --bench fig4_latency`
+
+use shoal::bench::micro::{measure_latency, BenchPlacement};
+use shoal::bench::report;
+use shoal::config::TransportKind;
+use shoal::sim::{CostModel, MsgKind, Protocol, Topology};
+use shoal::util::fmt_ns;
+use shoal::util::table::Table;
+
+fn main() {
+    let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
+    let cm = CostModel::paper();
+
+    // -- the figure -----------------------------------------------------------
+    let t = report::fig4_latency(&cm);
+    println!("{}", t.render());
+    if let Ok(p) = report::save_csv(&t, "fig4_latency") {
+        println!("csv: {}\n", p.display());
+    }
+
+    // -- paper shape assertions -------------------------------------------------
+    let avg = |topo, p| report::avg_latency_ns(&cm, topo, Protocol::Tcp, p).unwrap();
+    let shape = [
+        ("HW-HW(same) < HW-HW(diff)", avg(Topology::HwHwSame, 512) < avg(Topology::HwHwDiff, 512)),
+        ("HW-HW(diff) < SW-HW", avg(Topology::HwHwDiff, 512) < avg(Topology::SwHw, 512)),
+        (
+            "HW-HW(diff) < SW-SW(same)  [paper's headline]",
+            avg(Topology::HwHwDiff, 4096) < avg(Topology::SwSwSame, 4096),
+        ),
+        (
+            "SW-SW(same) flat in payload",
+            (avg(Topology::SwSwSame, 4096) - avg(Topology::SwSwSame, 8))
+                / avg(Topology::SwSwSame, 8)
+                < 0.10,
+        ),
+    ];
+    println!("shape checks vs paper:");
+    for (name, ok) in shape {
+        println!("  [{}] {}", if ok { "✓" } else { "✗" }, name);
+    }
+    println!();
+
+    // -- measured software calibration points -------------------------------------
+    let samples = if quick { 50 } else { 400 };
+    let warmup = samples / 10;
+    let mut m = Table::new("measured (this machine, real library) vs model SW constants")
+        .header(["point", "payload", "measured median", "model"]);
+    for (label, placement, topo) in [
+        ("SW-SW same (in-proc)", BenchPlacement::sw_same(), Topology::SwSwSame),
+        ("SW-SW diff (loopback TCP)", BenchPlacement::sw_diff(TransportKind::Tcp), Topology::SwSwDiff),
+    ] {
+        for payload in [8usize, 512, 4096] {
+            let s = measure_latency(placement, MsgKind::MediumFifo, payload, samples, warmup)
+                .expect("bench run");
+            let model = cm.latency_ns(topo, Protocol::Tcp, MsgKind::MediumFifo, payload).unwrap();
+            m.row([
+                label.to_string(),
+                payload.to_string(),
+                fmt_ns(s.median()),
+                fmt_ns(model),
+            ]);
+        }
+    }
+    println!("{}", m.render());
+    println!(
+        "note: measured numbers come from this machine's scheduler/loopback and are\n\
+         expected to differ in absolute value from the paper's testbed; the model\n\
+         columns are the constants used for the figure above."
+    );
+}

@@ -1,0 +1,76 @@
+//! Fig. 5 — speedup of median latency using UDP instead of TCP.
+//!
+//! Modeled series for the four cross-node topologies, with the paper's
+//! missing hardware points (2048/4096 B — IP fragmentation unsupported by
+//! the FPGA UDP core) reproduced as `n/a`. A measured software UDP-vs-TCP
+//! comparison over loopback follows as calibration evidence.
+//!
+//! Run: `cargo bench --bench fig5_udp_speedup`
+
+use shoal::bench::micro::{measure_latency, BenchPlacement};
+use shoal::bench::report;
+use shoal::config::TransportKind;
+use shoal::sim::{CostModel, MsgKind, Protocol, Topology};
+use shoal::util::table::Table;
+
+fn main() {
+    let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
+    let cm = CostModel::paper();
+
+    let t = report::fig5_udp_speedup(&cm);
+    println!("{}", t.render());
+    if let Ok(p) = report::save_csv(&t, "fig5_udp_speedup") {
+        println!("csv: {}\n", p.display());
+    }
+
+    // -- paper shape assertions ---------------------------------------------------
+    let mut checks = Vec::new();
+    let mut all_faster = true;
+    for topo in [Topology::SwSwDiff, Topology::SwHw, Topology::HwHwDiff] {
+        for p in [8usize, 64, 512, 1024] {
+            let tcp = report::avg_latency_ns(&cm, topo, Protocol::Tcp, p).unwrap();
+            let udp = report::avg_latency_ns(&cm, topo, Protocol::Udp, p).unwrap();
+            all_faster &= udp < tcp;
+        }
+    }
+    checks.push(("UDP faster than TCP at every supported point", all_faster));
+    let gap = report::avg_latency_ns(&cm, Topology::HwHwDiff, Protocol::Udp, 2048).is_none()
+        && report::avg_latency_ns(&cm, Topology::SwHw, Protocol::Udp, 4096).is_none()
+        && report::avg_latency_ns(&cm, Topology::SwSwDiff, Protocol::Udp, 4096).is_some();
+    checks.push(("HW 2048/4096 B points missing (fragmentation), SW present", gap));
+    println!("shape checks vs paper:");
+    for (name, ok) in checks {
+        println!("  [{}] {}", if ok { "✓" } else { "✗" }, name);
+    }
+    println!();
+
+    // -- measured loopback UDP vs TCP ------------------------------------------------
+    let samples = if quick { 50 } else { 300 };
+    let mut m = Table::new("measured SW-SW(diff) over loopback: UDP vs TCP")
+        .header(["payload", "tcp median (µs)", "udp median (µs)", "speedup"]);
+    for payload in [8usize, 512, 1024] {
+        let tcp = measure_latency(
+            BenchPlacement::sw_diff(TransportKind::Tcp),
+            MsgKind::MediumFifo,
+            payload,
+            samples,
+            samples / 10,
+        )
+        .expect("tcp bench");
+        let udp = measure_latency(
+            BenchPlacement::sw_diff(TransportKind::Udp),
+            MsgKind::MediumFifo,
+            payload,
+            samples,
+            samples / 10,
+        )
+        .expect("udp bench");
+        m.row([
+            payload.to_string(),
+            format!("{:.1}", tcp.median() / 1000.0),
+            format!("{:.1}", udp.median() / 1000.0),
+            format!("{:.2}x", tcp.median() / udp.median()),
+        ]);
+    }
+    println!("{}", m.render());
+}

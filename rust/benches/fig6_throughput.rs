@@ -1,0 +1,70 @@
+//! Fig. 6 — average throughput of communication methods with TCP.
+//!
+//! Modeled series for all six topologies plus measured software throughput
+//! over the real library (pipelined non-blocking sends, wait-all-replies —
+//! the paper's §IV-B methodology).
+//!
+//! Run: `cargo bench --bench fig6_throughput`
+
+use shoal::bench::micro::{measure_throughput, BenchPlacement};
+use shoal::bench::report;
+use shoal::config::TransportKind;
+use shoal::sim::{CostModel, MsgKind, Protocol, Topology};
+use shoal::util::fmt_rate;
+use shoal::util::table::Table;
+
+fn main() {
+    let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
+    let cm = CostModel::paper();
+
+    let t = report::fig6_throughput(&cm);
+    println!("{}", t.render());
+    if let Ok(p) = report::save_csv(&t, "fig6_throughput") {
+        println!("csv: {}\n", p.display());
+    }
+
+    // -- paper shape assertions ----------------------------------------------------
+    let tput = |topo, p| report::avg_throughput_bps(&cm, topo, Protocol::Tcp, p).unwrap();
+    let checks = [
+        (
+            "throughput rises with payload (all topologies)",
+            Topology::ALL.iter().all(|&t| tput(t, 4096) > tput(t, 8) * 10.0),
+        ),
+        (
+            "HW significantly higher than SW",
+            tput(Topology::HwHwSame, 4096) > 3.0 * tput(Topology::SwSwSame, 4096),
+        ),
+        (
+            "at 4096 B HW-HW(diff) close to HW-HW(same)",
+            tput(Topology::HwHwDiff, 4096) > 0.6 * tput(Topology::HwHwSame, 4096),
+        ),
+    ];
+    println!("shape checks vs paper:");
+    for (name, ok) in checks {
+        println!("  [{}] {}", if ok { "✓" } else { "✗" }, name);
+    }
+    println!();
+
+    // -- measured software throughput ---------------------------------------------------
+    let count = if quick { 200 } else { 2000 };
+    let mut m = Table::new("measured SW throughput (real library)")
+        .header(["placement", "payload", "medium-fifo", "long-fifo", "long (mem)"]);
+    for (label, placement) in [
+        ("in-proc", BenchPlacement::sw_same()),
+        ("loopback TCP", BenchPlacement::sw_diff(TransportKind::Tcp)),
+    ] {
+        for payload in [64usize, 1024, 4096] {
+            let mf = measure_throughput(placement, MsgKind::MediumFifo, payload, count).unwrap();
+            let lf = measure_throughput(placement, MsgKind::LongFifo, payload, count).unwrap();
+            let lm = measure_throughput(placement, MsgKind::Long, payload, count).unwrap();
+            m.row([
+                label.to_string(),
+                payload.to_string(),
+                fmt_rate(mf),
+                fmt_rate(lf),
+                fmt_rate(lm),
+            ]);
+        }
+    }
+    println!("{}", m.render());
+}

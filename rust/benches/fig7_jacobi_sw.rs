@@ -1,0 +1,93 @@
+//! Fig. 7 — the Jacobi application in software for 1024 iterations.
+//!
+//! Two parts:
+//! 1. **Measured**: real distributed runs through the full library at a
+//!    reduced scale (grids 130–1026, iterations scaled down; set
+//!    SHOAL_FIG7_FULL=1 for the 1024-iteration version). Every run is
+//!    verified against the serial oracle.
+//! 2. **Modeled**: the paper's full grid × kernel sweep, with the grid-4096
+//!    2/4-kernel configurations marked `n/s` — "too large to send in a
+//!    single AM" (§IV-C1).
+//!
+//! Run: `cargo bench --bench fig7_jacobi_sw`
+
+use shoal::apps::jacobi::{compute, run_with_grid, JacobiConfig};
+use shoal::bench::report;
+use shoal::sim::CostModel;
+use shoal::util::table::Table;
+
+fn main() {
+    let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
+    let full = std::env::var("SHOAL_FIG7_FULL").is_ok();
+    let iters = if full {
+        1024
+    } else if quick {
+        16
+    } else {
+        64
+    };
+
+    // -- measured reduced-scale sweep ------------------------------------------
+    let grids: &[usize] = if quick { &[130, 258] } else { &[130, 258, 514, 1026] };
+    let kernel_counts: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let mut t = Table::new(format!(
+        "Fig. 7 (measured, reduced scale): Jacobi SW wall time (s), {iters} iterations"
+    ))
+    .header(
+        std::iter::once("grid".to_string())
+            .chain(kernel_counts.iter().map(|k| format!("{k} kernels"))),
+    );
+    let mut sync_t = Table::new("sync share of wall time (max worker)").header(
+        std::iter::once("grid".to_string())
+            .chain(kernel_counts.iter().map(|k| format!("{k} kernels"))),
+    );
+
+    for &n in grids {
+        let mut row = vec![n.to_string()];
+        let mut srow = vec![n.to_string()];
+        for &w in kernel_counts {
+            let cfg = JacobiConfig { n, iters, workers: w, nodes: 1, hw: false, chunked: false };
+            let initial = compute::hot_plate(n, n);
+            match run_with_grid(&cfg, initial.clone()) {
+                Ok(rep) => {
+                    if n <= 258 {
+                        rep.verify(&initial).expect("verification");
+                    }
+                    row.push(format!("{:.3}", rep.wall.as_secs_f64()));
+                    srow.push(format!(
+                        "{:.0}%",
+                        rep.sync.as_secs_f64() / rep.wall.as_secs_f64().max(1e-9) * 100.0
+                    ));
+                }
+                Err(e) => {
+                    row.push(format!("n/s ({e})"));
+                    srow.push("—".into());
+                }
+            }
+        }
+        t.row(row);
+        sync_t.row(srow);
+    }
+    println!("{}", t.render());
+    println!("{}", sync_t.render());
+    if let Ok(p) = report::save_csv(&t, "fig7_measured") {
+        println!("csv: {}\n", p.display());
+    }
+
+    // -- modeled full-scale sweep ---------------------------------------------------
+    let model = report::fig7_model(
+        &CostModel::paper(),
+        &[256, 512, 1024, 2048, 4096],
+        &[1, 2, 4, 8, 16],
+        1024,
+    );
+    println!("{}", model.render());
+    if let Ok(p) = report::save_csv(&model, "fig7_jacobi_sw") {
+        println!("csv: {}", p.display());
+    }
+    println!(
+        "\npaper shapes: small grids slow down with more kernels; crossover at 1024;\n\
+         grid 4096 with 2/4 kernels n/s (AM > 9000 B, §IV-C1). See the model's\n\
+         unit tests (apps::jacobi::model) for the asserted orderings."
+    );
+}

@@ -1,0 +1,73 @@
+//! Fig. 8 — Jacobi run time at grid 4096 in different topologies.
+//!
+//! Three parts:
+//! 1. **Functional validation**: a real hardware-worker run (GAScore + XLA
+//!    sweeps over loopback) at reduced scale, verified against the oracle —
+//!    proof the HW path computes correctly.
+//! 2. **Measured reduced-scale comparison**: SW vs HW workers, 1 vs 2 nodes,
+//!    on this machine.
+//! 3. **Modeled full scale**: the paper's grid-4096 / 1024-iteration bars
+//!    (SW 1 node vs HW 1/2/4 FPGAs × 8/16 kernels) from the calibrated
+//!    model — no FPGA is attached (DESIGN.md §3).
+//!
+//! Run: `cargo bench --bench fig8_jacobi_hw`
+
+use shoal::apps::jacobi::{compute, run_with_grid, JacobiConfig};
+use shoal::bench::report;
+use shoal::sim::CostModel;
+use shoal::util::table::Table;
+
+fn main() {
+    let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
+    let iters = if quick { 16 } else { 64 };
+
+    // -- functional validation ---------------------------------------------------
+    let n = 258;
+    let cfg = JacobiConfig { n, iters, workers: 2, nodes: 2, hw: true, chunked: false };
+    let initial = compute::hot_plate(n, n);
+    let rep = run_with_grid(&cfg, initial.clone()).expect("hw run");
+    rep.verify(&initial).expect("hw verification");
+    println!(
+        "functional: {n}×{n}, {iters} iters, 2 HW workers on 2 simulated FPGAs — \
+         verified against the serial oracle ✓ (wall {:.3} s)\n",
+        rep.wall.as_secs_f64()
+    );
+
+    // -- measured reduced scale ------------------------------------------------------
+    let mut t = Table::new(format!(
+        "measured (reduced scale): grid 258, {iters} iters — SW vs HW workers"
+    ))
+    .header(["configuration", "wall (s)", "compute (s)", "sync (s)"]);
+    for (label, workers, nodes, hw) in [
+        ("SW, 1 node, 2 workers", 2usize, 1usize, false),
+        ("SW, 1 node, 4 workers", 4, 1, false),
+        ("HW, 1 FPGA, 2 workers", 2, 1, true),
+        ("HW, 2 FPGAs, 2 workers", 2, 2, true),
+        ("HW, 1 FPGA, 4 workers", 4, 1, true),
+        ("HW, 2 FPGAs, 4 workers", 4, 2, true),
+    ] {
+        let cfg = JacobiConfig { n, iters, workers, nodes, hw, chunked: false };
+        match run_with_grid(&cfg, compute::hot_plate(n, n)) {
+            Ok(rep) => t.row([
+                label.to_string(),
+                format!("{:.3}", rep.wall.as_secs_f64()),
+                format!("{:.3}", rep.compute.as_secs_f64()),
+                format!("{:.3}", rep.sync.as_secs_f64()),
+            ]),
+            Err(e) => t.row([label.to_string(), format!("error: {e}"), String::new(), String::new()]),
+        }
+    }
+    println!("{}", t.render());
+
+    // -- modeled full scale ---------------------------------------------------------------
+    let model = report::fig8_model(&CostModel::paper(), 1024);
+    println!("{}", model.render());
+    if let Ok(p) = report::save_csv(&model, "fig8_jacobi_hw") {
+        println!("csv: {}", p.display());
+    }
+    println!(
+        "\npaper shapes (asserted in apps::jacobi::model tests): spreading a fixed\n\
+         kernel count over more FPGAs helps; >1 FPGA markedly faster than the\n\
+         single software node; 16 kernels improve on 8 but less than 2×."
+    );
+}

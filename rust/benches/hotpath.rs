@@ -1,0 +1,123 @@
+//! Hot-path microbenchmarks — the §Perf harness (EXPERIMENTS.md).
+//!
+//! Times the individual stages of the L3 request path so optimization work
+//! has a stable baseline:
+//!
+//! - AM header encode/decode rate
+//! - PGAS segment read/write bandwidth (incl. strided)
+//! - in-process Medium round trip (API → router → handler → reply)
+//! - in-process Long-put throughput
+//! - GAScore ingress pipeline rate
+//! - XLA engine jacobi-step execution time per tile shape
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use std::time::Instant;
+
+use shoal::am::header::{AmMessage, Descriptor};
+use shoal::am::types::{handler_ids, AmFlags, AmType};
+use shoal::bench::micro::{measure_latency, measure_throughput, BenchPlacement};
+use shoal::memory::Segment;
+use shoal::sim::MsgKind;
+use shoal::util::{fmt_ns, fmt_rate};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // Warmup.
+    for _ in 0..iters / 10 + 1 {
+        f();
+    }
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+    println!("  {name:<44} {:>12}/op", fmt_ns(per));
+    per
+}
+
+fn main() {
+    let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
+    let n = if quick { 2_000 } else { 20_000 };
+
+    println!("== hotpath: codec ==");
+    let msg = AmMessage {
+        am_type: AmType::Long,
+        flags: AmFlags::new().with(AmFlags::FIFO),
+        src: 1,
+        dst: 2,
+        handler: handler_ids::NOP,
+        token: 7,
+        args: vec![1, 2],
+        desc: Descriptor::Long { dst_addr: 4096 },
+        payload: vec![0xAB; 1024],
+    };
+    let encoded = msg.encode().unwrap();
+    bench("encode long AM (1 KiB payload)", n, || {
+        std::hint::black_box(msg.encode().unwrap());
+    });
+    bench("decode long AM (1 KiB payload)", n, || {
+        std::hint::black_box(AmMessage::decode(&encoded).unwrap());
+    });
+
+    println!("== hotpath: PGAS segment ==");
+    let seg = Segment::new(16 << 20);
+    let buf = vec![0x5Au8; 64 << 10];
+    let w = bench("segment write 64 KiB", n / 4, || {
+        seg.write(0, &buf).unwrap();
+    });
+    println!("      -> {}", fmt_rate(buf.len() as f64 / w * 1e9));
+    let r = bench("segment read 64 KiB", n / 4, || {
+        std::hint::black_box(seg.read(0, 64 << 10).unwrap());
+    });
+    println!("      -> {}", fmt_rate((64 << 10) as f64 / r * 1e9));
+    bench("segment strided write 64×1 KiB", n / 8, || {
+        seg.write_strided(0, 2048, 1024, &buf).unwrap();
+    });
+
+    println!("== hotpath: end-to-end (real library, in-proc) ==");
+    let samples = if quick { 100 } else { 1000 };
+    let lat = measure_latency(BenchPlacement::sw_same(), MsgKind::MediumFifo, 64, samples, 50)
+        .unwrap();
+    println!(
+        "  medium-FIFO 64 B round trip            median {:>10}  p99 {:>10}",
+        fmt_ns(lat.median()),
+        fmt_ns(lat.p99())
+    );
+    let lat = measure_latency(BenchPlacement::sw_same(), MsgKind::LongFifo, 4096, samples, 50)
+        .unwrap();
+    println!(
+        "  long-FIFO 4 KiB round trip             median {:>10}  p99 {:>10}",
+        fmt_ns(lat.median()),
+        fmt_ns(lat.p99())
+    );
+    let count = if quick { 500 } else { 5000 };
+    let bps = measure_throughput(BenchPlacement::sw_same(), MsgKind::LongFifo, 8192, count)
+        .unwrap();
+    println!("  long-FIFO 8 KiB pipelined throughput   {}", fmt_rate(bps));
+
+    println!("== hotpath: XLA engine ==");
+    match shoal::runtime::Engine::load_default() {
+        Ok(engine) => {
+            for (rows, cols) in [(16usize, 34usize), (64, 258), (256, 4098)] {
+                if engine.find_jacobi(rows, cols).is_none() {
+                    continue;
+                }
+                let padded = vec![1.0f32; (rows + 2) * cols];
+                engine.jacobi_step(rows, cols, &padded).unwrap(); // compile
+                let iters = if quick { 20 } else { 200 };
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    std::hint::black_box(engine.jacobi_step(rows, cols, &padded).unwrap());
+                }
+                let per = t0.elapsed().as_nanos() as f64 / iters as f64;
+                let cells = (rows * cols) as f64;
+                println!(
+                    "  jacobi_step {rows:>4}×{cols:<5} {:>12}/sweep  ({:.0} Mcells/s)",
+                    fmt_ns(per),
+                    cells / per * 1000.0
+                );
+            }
+        }
+        Err(e) => println!("  (engine unavailable: {e})"),
+    }
+}

@@ -1,0 +1,94 @@
+//! Table I — GAScore resource utilization on the 8K5.
+//!
+//! Prints the reproduced table for 1 kernel (the paper's configuration),
+//! the kernel-count scaling the §IV-A prose describes, and the modular-API
+//! ablation (paper §V-A future work, implemented here).
+//!
+//! Run: `cargo bench --bench table1_resources`
+
+use shoal::config::ApiProfile;
+use shoal::gascore::resources::{gascore_utilization, shell_utilization, ADM_8K5};
+use shoal::util::table::Table;
+
+fn main() {
+    // -- the paper's Table I (one kernel) ------------------------------------
+    let one = gascore_utilization(1, &ApiProfile::full());
+    println!("{}", one.to_table().render());
+
+    // Paper headline row for comparison.
+    println!("paper Table I GAScore row: 3595 LUTs, 4634 FFs, 28.0 BRAMs");
+    let t = one.total();
+    println!(
+        "ours (row sum)           : {:.0} LUTs, {:.0} FFs, {:.1} BRAMs  \
+         (Δ {:+.1}% / {:+.1}% / {:+.1}%)\n",
+        t.luts,
+        t.ffs,
+        t.brams,
+        (t.luts - 3595.0) / 3595.0 * 100.0,
+        (t.ffs - 4634.0) / 4634.0 * 100.0,
+        (t.brams - 28.0) / 28.0 * 100.0,
+    );
+
+    // -- kernel-count scaling --------------------------------------------------
+    let mut scale = Table::new("GAScore scaling with kernel count (§IV-A prose)")
+        .header(["kernels", "LUTs", "FFs", "BRAMs", "Δ LUTs/kernel"]);
+    let mut prev = None;
+    for k in [1u16, 2, 4, 8, 16] {
+        let r = gascore_utilization(k, &ApiProfile::full()).total();
+        let delta = prev
+            .map(|p: f64| format!("{:+.0}", (r.luts - p) / f64::from(k.max(2) - k / 2)))
+            .unwrap_or_else(|| "—".into());
+        scale.row([
+            k.to_string(),
+            format!("{:.0}", r.luts),
+            format!("{:.0}", r.ffs),
+            format!("{:.1}", r.brams),
+            delta,
+        ]);
+        prev = Some(r.luts);
+    }
+    println!("{}", scale.render());
+
+    // -- §IV-A overhead claim -----------------------------------------------------
+    println!(
+        "overhead claim (§IV-A): \"under 8000 LUTs and FFs and fewer than 30 BRAMs\" — \
+         ours: {:.0} LUTs {} / {:.0} FFs {} / {:.1} BRAMs {}\n",
+        t.luts,
+        if t.luts < 8000.0 { "✓" } else { "✗" },
+        t.ffs,
+        if t.ffs < 8000.0 { "✓" } else { "✗" },
+        t.brams,
+        if t.brams < 30.0 { "✓" } else { "✗" },
+    );
+
+    // -- modular API ablation (§V-A) ------------------------------------------------
+    let mut ab = Table::new("Ablation: modular API profiles (§V-A, implemented)")
+        .header(["profile", "LUTs", "FFs", "BRAMs", "saved LUTs"]);
+    for (name, p) in [
+        ("full (monolith)", ApiProfile::full()),
+        ("point_to_point", ApiProfile::point_to_point()),
+        ("remote_memory", ApiProfile::remote_memory()),
+    ] {
+        let r = gascore_utilization(1, &p).total();
+        ab.row([
+            name.to_string(),
+            format!("{:.0}", r.luts),
+            format!("{:.0}", r.ffs),
+            format!("{:.1}", r.brams),
+            format!("{:.0}", t.luts - r.luts),
+        ]);
+    }
+    println!("{}", ab.render());
+
+    // -- shell -----------------------------------------------------------------------
+    let s = shell_utilization();
+    println!(
+        "Galapagos shell (§IV-A prose): {:.0} LUTs ({:.0}%), {:.0} FFs ({:.0}%), {:.1} BRAMs ({:.0}%)",
+        s.luts,
+        s.luts / ADM_8K5.luts * 100.0,
+        s.ffs,
+        s.ffs / ADM_8K5.ffs * 100.0,
+        s.brams,
+        s.brams / ADM_8K5.brams * 100.0
+    );
+}

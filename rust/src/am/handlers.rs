@@ -1,0 +1,180 @@
+//! Handler-function tables.
+//!
+//! Active Messages "differ from conventional messaging in that they can
+//! trigger computation upon receipt through the use of handler functions"
+//! (paper §II-C1). Shoal keeps two built-in handlers in the runtime — the
+//! reply counter and the barrier — and allows *software* kernels to register
+//! custom handlers ("While this functionality has been maintained in Shoal
+//! software kernels ... it is not as applicable in hardware", §III-A; the
+//! GAScore simulator therefore refuses user handlers).
+
+use std::collections::HashMap;
+use std::sync::RwLock;
+
+use super::header::AmMessage;
+use crate::error::{Error, Result};
+use crate::memory::Segment;
+
+pub use super::types::handler_ids::{BARRIER, NOP, REPLY, USER_BASE};
+
+/// What a user handler sees when invoked.
+pub struct HandlerArgs<'a> {
+    /// The handler arguments carried in the AM header.
+    pub args: &'a [u64],
+    /// The message payload (empty for Short AMs).
+    pub payload: &'a [u8],
+    /// Sender kernel id.
+    pub src: u16,
+    /// The receiving kernel's memory partition.
+    pub segment: &'a Segment,
+}
+
+/// A user handler function. Runs on the handler thread of the receiving
+/// kernel; must not block on communication (the classic AM restriction).
+pub type HandlerFn = Box<dyn Fn(HandlerArgs<'_>) + Send + Sync>;
+
+/// Per-kernel handler table.
+#[derive(Default)]
+pub struct HandlerTable {
+    user: RwLock<HashMap<u8, HandlerFn>>,
+    /// Hardware kernels cannot register user handlers (paper §III-A).
+    allow_user: bool,
+}
+
+impl HandlerTable {
+    /// Table for a software kernel (user handlers allowed).
+    pub fn software() -> Self {
+        Self { user: RwLock::new(HashMap::new()), allow_user: true }
+    }
+
+    /// Table for a hardware kernel (built-ins only).
+    pub fn hardware() -> Self {
+        Self { user: RwLock::new(HashMap::new()), allow_user: false }
+    }
+
+    /// Register a user handler at `id` (must be ≥ `USER_BASE`).
+    pub fn register(&self, id: u8, f: HandlerFn) -> Result<()> {
+        if !self.allow_user {
+            return Err(Error::ProfileViolation("user handlers on a hardware kernel"));
+        }
+        if id < USER_BASE {
+            return Err(Error::Config(format!(
+                "handler id {id} is reserved (user ids start at {USER_BASE})"
+            )));
+        }
+        self.user.write().unwrap().insert(id, f);
+        Ok(())
+    }
+
+    /// Invoke the user handler for `msg` if one is registered.
+    /// Returns true if a handler ran.
+    pub fn dispatch(&self, msg: &AmMessage, segment: &Segment) -> Result<bool> {
+        if msg.handler < USER_BASE {
+            return Ok(false); // built-ins handled by the engine
+        }
+        let table = self.user.read().unwrap();
+        match table.get(&msg.handler) {
+            Some(f) => {
+                f(HandlerArgs {
+                    args: &msg.args,
+                    payload: &msg.payload,
+                    src: msg.src,
+                    segment,
+                });
+                Ok(true)
+            }
+            None => Err(Error::UnknownHandler(msg.handler)),
+        }
+    }
+
+    pub fn has(&self, id: u8) -> bool {
+        self.user.read().unwrap().contains_key(&id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::types::{AmFlags, AmType};
+    use crate::am::Descriptor;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn msg(handler: u8, args: Vec<u64>) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new(),
+            src: 1,
+            dst: 2,
+            handler,
+            token: 0,
+            args,
+            desc: Descriptor::None,
+            payload: vec![5, 6],
+        }
+    }
+
+    #[test]
+    fn software_table_registers_and_dispatches() {
+        let t = HandlerTable::software();
+        let hits = Arc::new(AtomicU64::new(0));
+        let h2 = Arc::clone(&hits);
+        t.register(
+            20,
+            Box::new(move |a| {
+                assert_eq!(a.args, &[7]);
+                assert_eq!(a.payload, &[5, 6]);
+                h2.fetch_add(1, Ordering::SeqCst);
+            }),
+        )
+        .unwrap();
+        let seg = Segment::new(16);
+        assert!(t.dispatch(&msg(20, vec![7]), &seg).unwrap());
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    fn builtin_ids_skip_user_dispatch() {
+        let t = HandlerTable::software();
+        let seg = Segment::new(16);
+        assert!(!t.dispatch(&msg(REPLY, vec![]), &seg).unwrap());
+        assert!(!t.dispatch(&msg(BARRIER, vec![]), &seg).unwrap());
+    }
+
+    #[test]
+    fn unknown_user_handler_errors() {
+        let t = HandlerTable::software();
+        let seg = Segment::new(16);
+        assert!(matches!(
+            t.dispatch(&msg(33, vec![]), &seg),
+            Err(Error::UnknownHandler(33))
+        ));
+    }
+
+    #[test]
+    fn hardware_table_rejects_registration() {
+        let t = HandlerTable::hardware();
+        assert!(t.register(20, Box::new(|_| {})).is_err());
+    }
+
+    #[test]
+    fn reserved_ids_rejected() {
+        let t = HandlerTable::software();
+        assert!(t.register(NOP, Box::new(|_| {})).is_err());
+    }
+
+    #[test]
+    fn handler_can_write_segment() {
+        let t = HandlerTable::software();
+        t.register(
+            21,
+            Box::new(|a| {
+                a.segment.write(a.args[0], a.payload).unwrap();
+            }),
+        )
+        .unwrap();
+        let seg = Segment::new(64);
+        t.dispatch(&msg(21, vec![8]), &seg).unwrap();
+        assert_eq!(seg.read(8, 2).unwrap(), vec![5, 6]);
+    }
+}

@@ -1,0 +1,555 @@
+//! Binary Active Message codec.
+//!
+//! The packet format is a sequence of little-endian 64-bit words — the word
+//! width of the GAScore's AXI4-Stream datapath — followed by the payload
+//! bytes:
+//!
+//! ```text
+//! word 0:  type:8 | flags:8 | src:16 | dst:16 | handler:8 | nargs:8
+//! word 1:  payload_len:32 | token:32
+//! words:   nargs × handler argument (u64 each, nargs ≤ 8)
+//! words:   type/flag-specific descriptor (see `Descriptor`)
+//! bytes:   payload (payload_len bytes, padded to a word boundary on wire)
+//! ```
+//!
+//! `xpams_tx` in hardware decodes word 0 to route the message (§III-C step
+//! 2); `am_tx`/`am_rx` use the descriptor words to issue DataMover commands.
+
+use super::types::{AmFlags, AmType};
+use crate::error::{Error, Result};
+use crate::galapagos::packet::MAX_PAYLOAD_BYTES;
+
+/// Maximum handler arguments an AM may carry (GASNet allows 16 for Mediums;
+/// 8 keeps the header within two DataMover bursts and suffices for every
+/// workload in the paper).
+pub const MAX_ARGS: usize = 8;
+
+/// Maximum entries in a Vectored Long message.
+pub const MAX_VECTORED: usize = 16;
+
+/// Type-specific addressing information.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Descriptor {
+    /// Short; Medium put; Medium data reply.
+    None,
+    /// Medium *get*: read `len` bytes at `src_addr` in the destination
+    /// kernel's partition and return them to the source kernel's stream.
+    MediumGet { src_addr: u64, len: u32 },
+    /// Long put (and Long data reply): write payload at `dst_addr` in the
+    /// destination kernel's partition.
+    Long { dst_addr: u64 },
+    /// Long *get*: read `len` bytes at `src_addr` in the destination kernel's
+    /// partition; the reply writes them at `reply_addr` in the *source*
+    /// kernel's partition.
+    LongGet { src_addr: u64, len: u32, reply_addr: u64 },
+    /// Strided scatter: block `i` of `block_len` bytes lands at
+    /// `dst_addr + i * stride` (THeGASNet's in-built strided access).
+    Strided { dst_addr: u64, stride: u32, block_len: u32, nblocks: u32 },
+    /// Vectored scatter over explicit (addr, len) extents.
+    Vectored { entries: Vec<(u64, u32)> },
+}
+
+/// A decoded Active Message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AmMessage {
+    pub am_type: AmType,
+    pub flags: AmFlags,
+    pub src: u16,
+    pub dst: u16,
+    pub handler: u8,
+    pub token: u32,
+    pub args: Vec<u64>,
+    pub desc: Descriptor,
+    pub payload: Vec<u8>,
+}
+
+impl AmMessage {
+    /// Validate invariants that the codec relies on.
+    pub fn validate(&self) -> Result<()> {
+        if self.args.len() > MAX_ARGS {
+            return Err(Error::MalformedAm(format!("{} args > max {}", self.args.len(), MAX_ARGS)));
+        }
+        match (&self.am_type, &self.desc) {
+            (AmType::Short, Descriptor::None) => {
+                if !self.payload.is_empty() {
+                    return Err(Error::MalformedAm("short message with payload".into()));
+                }
+            }
+            (AmType::Medium, Descriptor::None) => {}
+            (AmType::Medium, Descriptor::MediumGet { .. }) => {
+                if !self.flags.is_get() {
+                    return Err(Error::MalformedAm("MediumGet descriptor without GET flag".into()));
+                }
+            }
+            (AmType::Long, Descriptor::Long { .. }) => {}
+            (AmType::Long, Descriptor::LongGet { .. }) => {
+                if !self.flags.is_get() {
+                    return Err(Error::MalformedAm("LongGet descriptor without GET flag".into()));
+                }
+            }
+            (AmType::LongStrided, Descriptor::Strided { block_len, nblocks, stride, .. }) => {
+                let total = *block_len as u64 * *nblocks as u64;
+                if total != self.payload.len() as u64 {
+                    return Err(Error::BadDescriptor(format!(
+                        "strided: {nblocks} blocks × {block_len} B = {total} ≠ payload {}",
+                        self.payload.len()
+                    )));
+                }
+                if *stride < *block_len && *nblocks > 1 {
+                    return Err(Error::BadDescriptor(
+                        "strided: stride smaller than block (overlapping scatter)".into(),
+                    ));
+                }
+            }
+            (AmType::LongVectored, Descriptor::Vectored { entries }) => {
+                if entries.len() > MAX_VECTORED {
+                    return Err(Error::BadDescriptor(format!(
+                        "vectored: {} entries > max {MAX_VECTORED}",
+                        entries.len()
+                    )));
+                }
+                let total: u64 = entries.iter().map(|(_, l)| *l as u64).sum();
+                if total != self.payload.len() as u64 {
+                    return Err(Error::BadDescriptor(format!(
+                        "vectored: extents sum {total} ≠ payload {}",
+                        self.payload.len()
+                    )));
+                }
+            }
+            (t, d) => {
+                return Err(Error::MalformedAm(format!(
+                    "descriptor {d:?} invalid for type {t}"
+                )))
+            }
+        }
+        if self.payload.len() > MAX_PAYLOAD_BYTES {
+            return Err(Error::AmTooLarge {
+                payload: self.payload.len(),
+                limit: MAX_PAYLOAD_BYTES,
+            });
+        }
+        Ok(())
+    }
+
+    /// Encode to wire bytes (the Galapagos packet `data`).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        self.validate()?;
+        let mut w = Vec::with_capacity(32 + self.payload.len());
+        // word 0
+        w.push(self.am_type as u8);
+        w.push(self.flags.0);
+        w.extend_from_slice(&self.src.to_le_bytes());
+        w.extend_from_slice(&self.dst.to_le_bytes());
+        w.push(self.handler);
+        w.push(self.args.len() as u8);
+        // word 1
+        w.extend_from_slice(&(self.payload.len() as u32).to_le_bytes());
+        w.extend_from_slice(&self.token.to_le_bytes());
+        // args
+        for a in &self.args {
+            w.extend_from_slice(&a.to_le_bytes());
+        }
+        // descriptor
+        match &self.desc {
+            Descriptor::None => {}
+            Descriptor::MediumGet { src_addr, len } => {
+                w.extend_from_slice(&src_addr.to_le_bytes());
+                w.extend_from_slice(&len.to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes());
+            }
+            Descriptor::Long { dst_addr } => {
+                w.extend_from_slice(&dst_addr.to_le_bytes());
+            }
+            Descriptor::LongGet { src_addr, len, reply_addr } => {
+                w.extend_from_slice(&src_addr.to_le_bytes());
+                w.extend_from_slice(&len.to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes());
+                w.extend_from_slice(&reply_addr.to_le_bytes());
+            }
+            Descriptor::Strided { dst_addr, stride, block_len, nblocks } => {
+                w.extend_from_slice(&dst_addr.to_le_bytes());
+                w.extend_from_slice(&stride.to_le_bytes());
+                w.extend_from_slice(&block_len.to_le_bytes());
+                w.extend_from_slice(&nblocks.to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes()); // pad to word
+            }
+            Descriptor::Vectored { entries } => {
+                w.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes()); // pad
+                for (addr, len) in entries {
+                    w.extend_from_slice(&addr.to_le_bytes());
+                    w.extend_from_slice(&len.to_le_bytes());
+                    w.extend_from_slice(&0u32.to_le_bytes()); // pad
+                }
+            }
+        }
+        w.extend_from_slice(&self.payload);
+        Ok(w)
+    }
+
+    /// Decode from an owned buffer, reusing its allocation for the payload.
+    ///
+    /// The payload is the buffer's tail, so `split_off` turns the packet's
+    /// own Vec into the message payload without a fresh allocation + copy —
+    /// the ingress hot path uses this (§Perf).
+    pub fn decode_owned(mut buf: Vec<u8>) -> Result<AmMessage> {
+        let (mut msg, payload_start, payload_len) = Self::decode_parts(&buf)?;
+        if payload_start + payload_len != buf.len() {
+            // Trailing garbage: keep strict framing semantics.
+            return Err(Error::MalformedAm(format!(
+                "payload does not terminate the buffer ({} + {} ≠ {})",
+                payload_start,
+                payload_len,
+                buf.len()
+            )));
+        }
+        msg.payload = buf.split_off(payload_start);
+        msg.validate()?;
+        Ok(msg)
+    }
+
+    /// Decode from wire bytes.
+    pub fn decode(buf: &[u8]) -> Result<AmMessage> {
+        let (mut msg, payload_start, payload_len) = Self::decode_parts(buf)?;
+        msg.payload = buf[payload_start..payload_start + payload_len].to_vec();
+        msg.validate()?;
+        Ok(msg)
+    }
+
+    /// Parse everything but the payload; returns the message (with an empty
+    /// payload), the payload's byte offset, and its length.
+    fn decode_parts(buf: &[u8]) -> Result<(AmMessage, usize, usize)> {
+        let mut r = Reader { b: buf, i: 0 };
+        let am_type = AmType::from_u8(r.u8()?)?;
+        let flags = AmFlags(r.u8()?);
+        let src = r.u16()?;
+        let dst = r.u16()?;
+        let handler = r.u8()?;
+        let nargs = r.u8()? as usize;
+        if nargs > MAX_ARGS {
+            return Err(Error::MalformedAm(format!("nargs {nargs} > {MAX_ARGS}")));
+        }
+        let payload_len = r.u32()? as usize;
+        let token = r.u32()?;
+        let mut args = Vec::with_capacity(nargs);
+        for _ in 0..nargs {
+            args.push(r.u64()?);
+        }
+        let desc = match (am_type, flags.is_get()) {
+            (AmType::Short, _) => Descriptor::None,
+            (AmType::Medium, false) => Descriptor::None,
+            (AmType::Medium, true) => {
+                let src_addr = r.u64()?;
+                let len = r.u32()?;
+                let _pad = r.u32()?;
+                Descriptor::MediumGet { src_addr, len }
+            }
+            (AmType::Long, false) => Descriptor::Long { dst_addr: r.u64()? },
+            (AmType::Long, true) => {
+                let src_addr = r.u64()?;
+                let len = r.u32()?;
+                let _pad = r.u32()?;
+                let reply_addr = r.u64()?;
+                Descriptor::LongGet { src_addr, len, reply_addr }
+            }
+            (AmType::LongStrided, _) => {
+                let dst_addr = r.u64()?;
+                let stride = r.u32()?;
+                let block_len = r.u32()?;
+                let nblocks = r.u32()?;
+                let _pad = r.u32()?;
+                Descriptor::Strided { dst_addr, stride, block_len, nblocks }
+            }
+            (AmType::LongVectored, _) => {
+                let count = r.u32()? as usize;
+                let _pad = r.u32()?;
+                if count > MAX_VECTORED {
+                    return Err(Error::MalformedAm(format!("vectored count {count}")));
+                }
+                let mut entries = Vec::with_capacity(count);
+                for _ in 0..count {
+                    let addr = r.u64()?;
+                    let len = r.u32()?;
+                    let _pad = r.u32()?;
+                    entries.push((addr, len));
+                }
+                Descriptor::Vectored { entries }
+            }
+        };
+        // Validate the payload's extent without copying it.
+        let payload_start = r.i;
+        let _ = r.take(payload_len)?;
+        let msg = AmMessage {
+            am_type,
+            flags,
+            src,
+            dst,
+            handler,
+            token,
+            args,
+            desc,
+            payload: Vec::new(),
+        };
+        Ok((msg, payload_start, payload_len))
+    }
+
+    /// Size of the encoded message without the payload (header + descriptor
+    /// words) — what the GAScore's `add_size` accounts for beyond data.
+    pub fn header_overhead(&self) -> usize {
+        16 + 8 * self.args.len()
+            + match &self.desc {
+                Descriptor::None => 0,
+                Descriptor::MediumGet { .. } => 16,
+                Descriptor::Long { .. } => 8,
+                Descriptor::LongGet { .. } => 24,
+                Descriptor::Strided { .. } => 24,
+                Descriptor::Vectored { entries } => 8 + 16 * entries.len(),
+            }
+    }
+
+    /// Largest payload a message with this header shape can carry in one
+    /// Galapagos packet.
+    pub fn max_payload_for(&self) -> usize {
+        MAX_PAYLOAD_BYTES - self.header_overhead()
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            return Err(Error::MalformedAm(format!(
+                "truncated message: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            )));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::types::handler_ids;
+
+    fn roundtrip(msg: &AmMessage) {
+        let wire = msg.encode().unwrap();
+        let back = AmMessage::decode(&wire).unwrap();
+        assert_eq!(&back, msg);
+    }
+
+    #[test]
+    fn short_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new().with(AmFlags::REPLY),
+            src: 1,
+            dst: 2,
+            handler: handler_ids::REPLY,
+            token: 77,
+            args: vec![1, 2, 3],
+            desc: Descriptor::None,
+            payload: vec![],
+        });
+    }
+
+    #[test]
+    fn medium_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: 3,
+            dst: 4,
+            handler: handler_ids::NOP,
+            token: 1,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![9; 100],
+        });
+    }
+
+    #[test]
+    fn medium_get_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::GET),
+            src: 3,
+            dst: 4,
+            handler: handler_ids::NOP,
+            token: 5,
+            args: vec![42],
+            desc: Descriptor::MediumGet { src_addr: 0x1000, len: 256 },
+            payload: vec![],
+        });
+    }
+
+    #[test]
+    fn long_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 9,
+            args: vec![7, 8],
+            desc: Descriptor::Long { dst_addr: 0xdead_beef },
+            payload: vec![1, 2, 3, 4],
+        });
+    }
+
+    #[test]
+    fn long_get_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new().with(AmFlags::GET),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 2,
+            args: vec![],
+            desc: Descriptor::LongGet { src_addr: 64, len: 512, reply_addr: 128 },
+            payload: vec![],
+        });
+    }
+
+    #[test]
+    fn strided_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::LongStrided,
+            flags: AmFlags::new(),
+            src: 5,
+            dst: 6,
+            handler: handler_ids::NOP,
+            token: 3,
+            args: vec![],
+            desc: Descriptor::Strided { dst_addr: 1024, stride: 64, block_len: 16, nblocks: 4 },
+            payload: vec![0xAB; 64],
+        });
+    }
+
+    #[test]
+    fn vectored_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::LongVectored,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: 7,
+            dst: 8,
+            handler: handler_ids::NOP,
+            token: 4,
+            args: vec![11],
+            desc: Descriptor::Vectored { entries: vec![(0, 8), (100, 24)] },
+            payload: vec![0xCD; 32],
+        });
+    }
+
+    #[test]
+    fn rejects_short_with_payload() {
+        let m = AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 0,
+            handler: 0,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![1],
+        };
+        assert!(m.encode().is_err());
+    }
+
+    #[test]
+    fn rejects_strided_length_mismatch() {
+        let m = AmMessage {
+            am_type: AmType::LongStrided,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 0,
+            handler: 0,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Strided { dst_addr: 0, stride: 16, block_len: 8, nblocks: 3 },
+            payload: vec![0; 20], // should be 24
+        };
+        assert!(matches!(m.encode(), Err(Error::BadDescriptor(_))));
+    }
+
+    #[test]
+    fn rejects_overlapping_stride() {
+        let m = AmMessage {
+            am_type: AmType::LongStrided,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 0,
+            handler: 0,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Strided { dst_addr: 0, stride: 4, block_len: 8, nblocks: 2 },
+            payload: vec![0; 16],
+        };
+        assert!(m.encode().is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_buffers() {
+        let m = AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: 2,
+            token: 3,
+            args: vec![4],
+            desc: Descriptor::Long { dst_addr: 5 },
+            payload: vec![6; 10],
+        };
+        let wire = m.encode().unwrap();
+        for cut in [1, 8, 15, wire.len() - 1] {
+            assert!(AmMessage::decode(&wire[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn header_overhead_matches_encoding() {
+        let m = AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: 2,
+            token: 3,
+            args: vec![4, 5],
+            desc: Descriptor::Long { dst_addr: 5 },
+            payload: vec![6; 10],
+        };
+        let wire = m.encode().unwrap();
+        assert_eq!(wire.len(), m.header_overhead() + m.payload.len());
+    }
+}

@@ -1,0 +1,24 @@
+//! The Shoal Active Message layer.
+//!
+//! Shoal defines three classes of AMs — Short, Medium and Long — plus
+//! Strided and Vectored Long variants, *put* and *get* directions, FIFO and
+//! shared-memory payload sources, and asynchronous (no-reply) sends (paper
+//! §III-A). This module contains:
+//!
+//! - [`types`]   — message classes and flag bits;
+//! - [`header`]  — the binary packet codec (64-bit-word layout, the format
+//!   the GAScore parses in hardware);
+//! - [`handlers`] — handler-function tables: built-in reply/barrier handlers
+//!   and user-registered handlers (software kernels only, as in the paper);
+//! - [`engine`]  — the shared ingress state machine used by both the
+//!   software handler threads (§III-B) and the GAScore simulator (§III-C):
+//!   parse, write payload to the PGAS segment or forward to the kernel,
+//!   invoke handlers, emit replies.
+
+pub mod engine;
+pub mod handlers;
+pub mod header;
+pub mod types;
+
+pub use header::{AmMessage, Descriptor};
+pub use types::{AmFlags, AmType};

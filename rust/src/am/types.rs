@@ -1,0 +1,142 @@
+//! Active Message classes and flags.
+
+use crate::error::{Error, Result};
+
+/// The three AM classes of GASNet/THeGASNet, plus the Strided and Vectored
+/// Long variants Shoal carries forward (paper §III-A).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum AmType {
+    /// No payload; signaling and replies.
+    Short = 0,
+    /// Payload delivered to the destination kernel's stream (temporary
+    /// buffer in GASNet terms).
+    Medium = 1,
+    /// Payload written to the destination's shared-memory partition.
+    Long = 2,
+    /// Long whose destination placement is a strided scatter.
+    LongStrided = 3,
+    /// Long whose destination placement is a scatter over (addr, len) pairs.
+    LongVectored = 4,
+}
+
+impl AmType {
+    pub fn from_u8(v: u8) -> Result<AmType> {
+        Ok(match v {
+            0 => AmType::Short,
+            1 => AmType::Medium,
+            2 => AmType::Long,
+            3 => AmType::LongStrided,
+            4 => AmType::LongVectored,
+            other => return Err(Error::MalformedAm(format!("bad AM type {other}"))),
+        })
+    }
+
+    /// True for the Long family (payload goes to shared memory).
+    pub fn is_long(self) -> bool {
+        matches!(self, AmType::Long | AmType::LongStrided | AmType::LongVectored)
+    }
+}
+
+impl std::fmt::Display for AmType {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            AmType::Short => "short",
+            AmType::Medium => "medium",
+            AmType::Long => "long",
+            AmType::LongStrided => "long-strided",
+            AmType::LongVectored => "long-vectored",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Flag bits carried in the AM header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct AmFlags(pub u8);
+
+impl AmFlags {
+    /// Request is asynchronous: the receiver must not send a reply.
+    pub const ASYNC: u8 = 1 << 0;
+    /// Request direction is *get*: bring data from the destination.
+    pub const GET: u8 = 1 << 1;
+    /// Payload originated from the kernel stream (FIFO variant) rather than
+    /// from the source kernel's memory partition.
+    pub const FIFO: u8 = 1 << 2;
+    /// This message is a reply to an earlier request.
+    pub const REPLY: u8 = 1 << 3;
+
+    pub fn new() -> AmFlags {
+        AmFlags(0)
+    }
+
+    pub fn with(mut self, bit: u8) -> AmFlags {
+        self.0 |= bit;
+        self
+    }
+
+    pub fn is_async(self) -> bool {
+        self.0 & Self::ASYNC != 0
+    }
+
+    pub fn is_get(self) -> bool {
+        self.0 & Self::GET != 0
+    }
+
+    pub fn is_fifo(self) -> bool {
+        self.0 & Self::FIFO != 0
+    }
+
+    pub fn is_reply(self) -> bool {
+        self.0 & Self::REPLY != 0
+    }
+}
+
+/// Well-known handler ids (the handler table indices every kernel has).
+pub mod handler_ids {
+    /// Increments the per-kernel reply counter — "Reply messages are Short
+    /// messages that trigger a handler function that increments a variable"
+    /// (paper §III-A).
+    pub const REPLY: u8 = 0;
+    /// Barrier protocol messages.
+    pub const BARRIER: u8 = 1;
+    /// No-op handler for data-only messages.
+    pub const NOP: u8 = 2;
+    /// First id available for user-registered handlers.
+    pub const USER_BASE: u8 = 16;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn type_roundtrip() {
+        for t in [
+            AmType::Short,
+            AmType::Medium,
+            AmType::Long,
+            AmType::LongStrided,
+            AmType::LongVectored,
+        ] {
+            assert_eq!(AmType::from_u8(t as u8).unwrap(), t);
+        }
+        assert!(AmType::from_u8(200).is_err());
+    }
+
+    #[test]
+    fn long_family() {
+        assert!(AmType::Long.is_long());
+        assert!(AmType::LongStrided.is_long());
+        assert!(AmType::LongVectored.is_long());
+        assert!(!AmType::Short.is_long());
+        assert!(!AmType::Medium.is_long());
+    }
+
+    #[test]
+    fn flags_compose() {
+        let f = AmFlags::new().with(AmFlags::ASYNC).with(AmFlags::GET);
+        assert!(f.is_async() && f.is_get());
+        assert!(!f.is_fifo() && !f.is_reply());
+    }
+}

@@ -1,0 +1,169 @@
+//! Compute backends for the Jacobi sweep.
+//!
+//! The paper splits the hardware kernel into HLS control logic plus "an
+//! optimized VHDL core" for the stencil (§IV-C). Here:
+//!
+//! - [`RustSweep`]   — the software kernels' compute (portable scalar code
+//!   with a cache-friendly row walk).
+//! - [`XlaSweep`]    — the hardware kernels' compute: the AOT-compiled
+//!   Pallas/XLA executable, invoked through PJRT (the VHDL core stand-in).
+//! - [`jacobi_serial`] — the single-threaded full-grid oracle used by tests
+//!   and the benchmark's correctness check (mirrors python `ref.py`).
+
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::runtime::Engine;
+
+/// One Jacobi sweep over a padded tile.
+///
+/// `padded` has `(rows + 2) × cols` f32 values: halo row, `rows` tile rows,
+/// halo row. Returns the updated `rows × cols` tile: interior columns get
+/// the 4-neighbour average; boundary columns (0 and cols-1) are copied
+/// through unchanged (global Dirichlet boundary).
+pub trait JacobiCompute: Send + Sync {
+    fn step(&self, rows: usize, cols: usize, padded: &[f32]) -> Result<Vec<f32>>;
+
+    /// Short label for reports.
+    fn label(&self) -> &'static str;
+}
+
+/// Portable scalar sweep for software kernels.
+pub struct RustSweep;
+
+impl JacobiCompute for RustSweep {
+    fn step(&self, rows: usize, cols: usize, padded: &[f32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(padded.len(), (rows + 2) * cols);
+        let mut out = vec![0f32; rows * cols];
+        for r in 0..rows {
+            let up = &padded[r * cols..(r + 1) * cols];
+            let mid = &padded[(r + 1) * cols..(r + 2) * cols];
+            let down = &padded[(r + 2) * cols..(r + 3) * cols];
+            let dst = &mut out[r * cols..(r + 1) * cols];
+            dst[0] = mid[0];
+            dst[cols - 1] = mid[cols - 1];
+            // The compiler auto-vectorizes this contiguous walk.
+            for c in 1..cols - 1 {
+                dst[c] = 0.25 * (up[c] + down[c] + mid[c - 1] + mid[c + 1]);
+            }
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> &'static str {
+        "rust-sw"
+    }
+}
+
+/// Hardware-kernel compute: the AOT XLA executable via PJRT.
+pub struct XlaSweep {
+    engine: Arc<Engine>,
+}
+
+impl XlaSweep {
+    pub fn new(engine: Arc<Engine>) -> Self {
+        Self { engine }
+    }
+}
+
+impl JacobiCompute for XlaSweep {
+    fn step(&self, rows: usize, cols: usize, padded: &[f32]) -> Result<Vec<f32>> {
+        self.engine.jacobi_step(rows, cols, padded)
+    }
+
+    fn label(&self) -> &'static str {
+        "xla-hw"
+    }
+}
+
+/// Full-grid serial oracle: `iters` Jacobi iterations over an `n × m` grid
+/// with fixed boundary (first/last rows and columns).
+pub fn jacobi_serial(grid: &[f32], n: usize, m: usize, iters: usize) -> Vec<f32> {
+    assert_eq!(grid.len(), n * m);
+    let mut g = grid.to_vec();
+    let mut next = grid.to_vec();
+    for _ in 0..iters {
+        for r in 1..n - 1 {
+            for c in 1..m - 1 {
+                next[r * m + c] = 0.25
+                    * (g[(r - 1) * m + c]
+                        + g[(r + 1) * m + c]
+                        + g[r * m + c - 1]
+                        + g[r * m + c + 1]);
+            }
+        }
+        std::mem::swap(&mut g, &mut next);
+    }
+    g
+}
+
+/// Standard initial condition for the examples and benches: zero interior,
+/// hot top edge (a heat-diffusion plate).
+pub fn hot_plate(n: usize, m: usize) -> Vec<f32> {
+    let mut g = vec![0f32; n * m];
+    for c in 0..m {
+        g[c] = 100.0;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn padded_from_grid(grid: &[f32], m: usize, start: usize, rows: usize) -> Vec<f32> {
+        // rows are global tile rows [start, start+rows); halos are rows
+        // start-1 and start+rows.
+        let mut p = Vec::with_capacity((rows + 2) * m);
+        for r in (start - 1)..(start + rows + 1) {
+            p.extend_from_slice(&grid[r * m..(r + 1) * m]);
+        }
+        p
+    }
+
+    #[test]
+    fn rust_sweep_matches_serial_one_iter() {
+        let (n, m) = (10, 12);
+        let grid: Vec<f32> = (0..n * m).map(|i| ((i * 13) % 29) as f32).collect();
+        let want = jacobi_serial(&grid, n, m, 1);
+
+        // One tile covering all interior rows.
+        let padded = padded_from_grid(&grid, m, 1, n - 2);
+        let got = RustSweep.step(n - 2, m, &padded).unwrap();
+        for r in 1..n - 1 {
+            for c in 0..m {
+                let g = got[(r - 1) * m + c];
+                let w = want[r * m + c];
+                assert!((g - w).abs() < 1e-5, "({r},{c}): {g} vs {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn serial_keeps_boundary_fixed() {
+        let g = hot_plate(8, 8);
+        let out = jacobi_serial(&g, 8, 8, 50);
+        for c in 0..8 {
+            assert_eq!(out[c], 100.0);
+            assert_eq!(out[7 * 8 + c], 0.0);
+        }
+        // Interior warmed up.
+        assert!(out[3 * 8 + 4] > 0.0);
+        assert!(out[3 * 8 + 4] < 100.0);
+    }
+
+    #[test]
+    fn xla_sweep_matches_rust_sweep() {
+        let engine = Engine::load_default().expect("make artifacts");
+        let xla = XlaSweep::new(engine);
+        let (rows, cols) = (16, 34);
+        let padded: Vec<f32> =
+            (0..(rows + 2) * cols).map(|i| ((i * 7) % 41) as f32 * 0.25).collect();
+        let a = xla.step(rows, cols, &padded).unwrap();
+        let b = RustSweep.step(rows, cols, &padded).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

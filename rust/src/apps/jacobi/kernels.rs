@@ -1,0 +1,228 @@
+//! The distributed Jacobi kernels (control + workers) over the Shoal API.
+//!
+//! Mirrors the paper's structure (§IV-C): a control kernel (always software)
+//! distributes the grid, participates in the synchronization barriers, and
+//! gathers the result; worker kernels exchange halo rows with their vertical
+//! neighbours via Long AMs each iteration and sweep their strip with either
+//! the rust (software) or XLA (hardware) compute backend.
+//!
+//! Per-iteration protocol (all kernels, including control, hit the same two
+//! barriers):
+//!
+//! 1. each worker `am_long_from_mem`s its top row to its upper neighbour's
+//!    `halo_bot` and its bottom row to its lower neighbour's `halo_top`;
+//! 2. `wait_replies` for its own puts, then **barrier** — every halo is now
+//!    written (a put's reply is emitted only after the payload is in the
+//!    destination partition);
+//! 3. sweep the padded tile, write the result back into the partition, then
+//!    **barrier** — nobody starts the next exchange until every tile is
+//!    updated.
+
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::compute::JacobiCompute;
+use super::partition::{SegmentLayout, Strip};
+use crate::am::handlers;
+use crate::error::Result;
+use crate::shoal_node::api::ShoalKernel;
+
+/// Timing breakdown reported by each worker.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WorkerReport {
+    pub worker: usize,
+    pub compute: Duration,
+    /// Halo sends + reply waits + barriers.
+    pub sync: Duration,
+    pub iters_done: usize,
+}
+
+/// Kernel id of worker `w` (kernel 0 is the control kernel).
+pub fn worker_kid(w: usize) -> u16 {
+    (w + 1) as u16
+}
+
+/// The worker kernel function.
+#[allow(clippy::too_many_arguments)]
+pub fn worker_kernel(
+    mut k: ShoalKernel,
+    w: usize,
+    workers: usize,
+    layout: SegmentLayout,
+    compute: Arc<dyn JacobiCompute>,
+    iters: usize,
+    report_tx: Sender<WorkerReport>,
+) -> Result<()> {
+    let rows = layout.rows;
+    let cols = layout.cols;
+    let row_bytes = layout.row_bytes();
+
+    // Wait for the control kernel to finish distribution.
+    k.barrier()?;
+
+    let mut compute_t = Duration::ZERO;
+    let mut sync_t = Duration::ZERO;
+    let mut padded = vec![0f32; (rows + 2) * cols];
+
+    for _ in 0..iters {
+        // -- halo exchange ---------------------------------------------------
+        let t0 = Instant::now();
+        let mut outstanding = 0u64;
+        if w > 0 {
+            let r = k.am_long_from_mem(
+                worker_kid(w - 1),
+                handlers::NOP,
+                &[],
+                layout.tile_row(0),
+                row_bytes,
+                layout.halo_bot(),
+            )?;
+            outstanding += r.messages;
+        }
+        if w < workers - 1 {
+            let r = k.am_long_from_mem(
+                worker_kid(w + 1),
+                handlers::NOP,
+                &[],
+                layout.tile_row(rows - 1),
+                row_bytes,
+                SegmentLayout::HALO_TOP,
+            )?;
+            outstanding += r.messages;
+        }
+        k.wait_replies(outstanding)?;
+        k.barrier()?; // all halos written cluster-wide
+        sync_t += t0.elapsed();
+
+        // -- sweep -----------------------------------------------------------
+        let t1 = Instant::now();
+        let seg = k.mem();
+        // Assemble halo_top | tile | halo_bot directly into the reused
+        // padded buffer (no per-iteration allocation, §Perf).
+        let (top, rest) = padded.split_at_mut(cols);
+        let (mid, bot) = rest.split_at_mut(rows * cols);
+        seg.read_f32_into(SegmentLayout::HALO_TOP, top)?;
+        seg.read_f32_into(layout.tile(), mid)?;
+        seg.read_f32_into(layout.halo_bot(), bot)?;
+        let new_tile = compute.step(rows, cols, &padded)?;
+        seg.write_f32(layout.tile(), &new_tile)?;
+        compute_t += t1.elapsed();
+
+        let t2 = Instant::now();
+        k.barrier()?; // everyone's tile updated before next exchange
+        sync_t += t2.elapsed();
+    }
+
+    // Gather phase: control long-gets our tile; stay alive until it signals
+    // completion with a final barrier.
+    k.barrier()?;
+
+    let _ = report_tx.send(WorkerReport {
+        worker: w,
+        compute: compute_t,
+        sync: sync_t,
+        iters_done: iters,
+    });
+    Ok(())
+}
+
+/// What the control kernel returns.
+#[derive(Clone, Debug)]
+pub struct ControlReport {
+    /// The final grid (n × n, row-major) after `iters` iterations.
+    pub grid: Vec<f32>,
+    pub wall: Duration,
+    /// Time spent in the initial distribution.
+    pub distribute: Duration,
+    /// Time spent gathering the result.
+    pub gather: Duration,
+}
+
+/// The control kernel function: distribute → iterate barriers → gather.
+pub fn control_kernel(
+    mut k: ShoalKernel,
+    grid: Vec<f32>,
+    n: usize,
+    strips: Vec<Strip>,
+    iters: usize,
+) -> Result<ControlReport> {
+    let cols = n;
+    let workers = strips.len();
+    let t_start = Instant::now();
+
+    // Keep the full grid in our own partition: gathered tiles land over it.
+    let seg = k.mem();
+    seg.write_f32(0, &grid)?;
+
+    // -- distribution ---------------------------------------------------------
+    // Tiles are sent one grid row per Long AM: a row is the natural exchange
+    // unit of the solver, and it is exactly the quantity the 9000 B
+    // Galapagos cap constrains (§IV-C1 — 4096-wide rows cannot be sent in a
+    // single AM, 2048-wide rows can).
+    let t_dist = Instant::now();
+    let mut outstanding = 0u64;
+    for (w, s) in strips.iter().enumerate() {
+        let layout = SegmentLayout::new(s.rows, cols);
+        for r in 0..s.rows {
+            let row: Vec<u8> = grid[(s.start_row + r) * cols..(s.start_row + r + 1) * cols]
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            let receipt =
+                k.am_long(worker_kid(w), handlers::NOP, &[], &row, layout.tile_row(r))?;
+            outstanding += receipt.messages;
+        }
+        // Edge workers' fixed global boundary rows live in their halo slots.
+        if w == 0 {
+            let top: Vec<u8> = grid[..cols].iter().flat_map(|v| v.to_le_bytes()).collect();
+            let r = k.am_long(worker_kid(0), handlers::NOP, &[], &top, SegmentLayout::HALO_TOP)?;
+            outstanding += r.messages;
+        }
+        if w == workers - 1 {
+            let bot: Vec<u8> = grid[(n - 1) * cols..n * cols]
+                .iter()
+                .flat_map(|v| v.to_le_bytes())
+                .collect();
+            let r = k.am_long(worker_kid(w), handlers::NOP, &[], &bot, layout.halo_bot())?;
+            outstanding += r.messages;
+        }
+    }
+    k.wait_replies(outstanding)?;
+    let distribute = t_dist.elapsed();
+    k.barrier()?; // workers may start
+
+    // -- iteration barriers (control participates as barrier master) ----------
+    for _ in 0..iters {
+        k.barrier()?; // halos written
+        k.barrier()?; // tiles updated
+    }
+
+    // -- gather ----------------------------------------------------------------
+    let t_gather = Instant::now();
+    let mut outstanding = 0u64;
+    for (w, s) in strips.iter().enumerate() {
+        let layout = SegmentLayout::new(s.rows, cols);
+        for r in 0..s.rows {
+            let receipt = k.am_long_get(
+                worker_kid(w),
+                handlers::NOP,
+                layout.tile_row(r),
+                cols * 4,
+                ((s.start_row + r) * cols * 4) as u64,
+            )?;
+            outstanding += receipt.messages;
+        }
+    }
+    k.wait_replies(outstanding)?;
+    let gather = t_gather.elapsed();
+    k.barrier()?; // workers may exit
+
+    let final_grid = k.mem().read_f32(0, n * cols)?;
+    Ok(ControlReport {
+        grid: final_grid,
+        wall: t_start.elapsed(),
+        distribute,
+        gather,
+    })
+}

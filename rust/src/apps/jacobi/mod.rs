@@ -1,0 +1,245 @@
+//! The distributed Jacobi solver (paper §IV-C).
+//!
+//! ```no_run
+//! use shoal::apps::jacobi::{JacobiConfig, run};
+//!
+//! let report = run(&JacobiConfig {
+//!     n: 256,
+//!     iters: 64,
+//!     workers: 4,
+//!     nodes: 1,
+//!     hw: false,
+//!     chunked: false,
+//! }).unwrap();
+//! println!("{} s", report.wall.as_secs_f64());
+//! ```
+
+pub mod compute;
+pub mod kernels;
+pub mod model;
+pub mod partition;
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::config::{ChunkPolicy, ClusterBuilder, Platform};
+use crate::error::{Error, Result};
+use crate::prelude::ShoalCluster;
+use compute::{JacobiCompute, RustSweep, XlaSweep};
+use kernels::{control_kernel, worker_kernel, ControlReport, WorkerReport};
+use partition::{strips, SegmentLayout};
+
+/// A Jacobi run configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct JacobiConfig {
+    /// Grid size (n × n, f32).
+    pub n: usize,
+    /// Jacobi iterations.
+    pub iters: usize,
+    /// Worker kernels (the control kernel is extra, always software).
+    pub workers: usize,
+    /// Nodes hosting the workers (1 = the paper's single-node runs; >1
+    /// spreads workers contiguously).
+    pub nodes: usize,
+    /// Hardware workers (GAScore + XLA compute) vs software workers.
+    pub hw: bool,
+    /// Enable the chunked-transfer extension (paper §IV-C1 proposes it as
+    /// the fix for AMs beyond the packet cap but leaves it unimplemented;
+    /// `false` reproduces the paper's failures).
+    pub chunked: bool,
+}
+
+impl JacobiConfig {
+    /// Middleware transport for multi-node runs. The paper's hardware tests
+    /// run "over TCP to ensure reliability" (§IV-C2); in-process clusters
+    /// default to the local fabric and use loopback TCP when
+    /// `SHOAL_TRANSPORT=tcp` is set.
+    fn transport(&self) -> crate::config::TransportKind {
+        match std::env::var("SHOAL_TRANSPORT").as_deref() {
+            Ok("tcp") => crate::config::TransportKind::Tcp,
+            Ok("udp") => crate::config::TransportKind::Udp,
+            _ => crate::config::TransportKind::Local,
+        }
+    }
+}
+
+/// The result of a run.
+#[derive(Clone, Debug)]
+pub struct JacobiReport {
+    pub config: JacobiConfig,
+    /// Final grid, row-major n × n.
+    pub grid: Vec<f32>,
+    pub wall: Duration,
+    pub distribute: Duration,
+    pub gather: Duration,
+    /// Max worker compute time (the critical path).
+    pub compute: Duration,
+    /// Max worker sync (halo waits + barriers) time.
+    pub sync: Duration,
+    pub worker_reports: Vec<WorkerReport>,
+}
+
+impl JacobiReport {
+    /// Compare against the serial oracle (small grids; tests).
+    pub fn verify(&self, initial: &[f32]) -> Result<()> {
+        let want = compute::jacobi_serial(initial, self.config.n, self.config.n, self.config.iters);
+        if want.len() != self.grid.len() {
+            return Err(Error::Config("verify: size mismatch".into()));
+        }
+        for (i, (g, w)) in self.grid.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-3 {
+                return Err(Error::Config(format!(
+                    "verify failed at cell {i}: got {g}, want {w}"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run the distributed solver on an in-process cluster with the standard
+/// hot-plate initial condition.
+pub fn run(cfg: &JacobiConfig) -> Result<JacobiReport> {
+    run_with_grid(cfg, compute::hot_plate(cfg.n, cfg.n))
+}
+
+/// Run with an explicit initial grid.
+pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport> {
+    if grid.len() != cfg.n * cfg.n {
+        return Err(Error::Config(format!(
+            "grid length {} ≠ {}²",
+            grid.len(),
+            cfg.n
+        )));
+    }
+    if cfg.nodes == 0 || cfg.workers == 0 {
+        return Err(Error::Config("need ≥1 node and ≥1 worker".into()));
+    }
+    if cfg.nodes > cfg.workers {
+        return Err(Error::Config("more nodes than workers".into()));
+    }
+    let strips_v = strips(cfg.n, cfg.workers);
+
+    // The paper's §IV-C1 limitation: without chunking, any AM whose payload
+    // exceeds one Galapagos packet makes the configuration unusable ("using
+    // two and four kernels does not currently work... too large to send in a
+    // single AM"). Detect it up front — the same check the paper proposes
+    // ("detect whether the message size exceeds the limit") — and fail fast
+    // instead of deadlocking workers mid-run.
+    if !cfg.chunked {
+        // Grid rows are the AM unit (distribution, halo exchange, gather):
+        // a 4096-wide f32 row is 16 KiB and cannot be sent in a single AM,
+        // while 2048-wide rows fit — the paper's exact crossover.
+        let max = crate::galapagos::packet::MAX_PAYLOAD_BYTES - 64; // header slack
+        let row_bytes = cfg.n * 4;
+        if row_bytes > max {
+            return Err(Error::AmTooLarge { payload: row_bytes, limit: max });
+        }
+    }
+
+    // Hardware workers need an AOT artifact per strip shape.
+    let engine = if cfg.hw {
+        let e = crate::runtime::Engine::shared()?;
+        for s in &strips_v {
+            if e.find_jacobi(s.rows, cfg.n).is_none() {
+                return Err(Error::Artifact(format!(
+                    "no jacobi artifact for {}×{} tiles; regenerate with \
+                     `python -m compile.aot --shapes {}x{}`",
+                    s.rows, cfg.n, s.rows, cfg.n
+                )));
+            }
+        }
+        Some(e)
+    } else {
+        None
+    };
+
+    // -- cluster spec ------------------------------------------------------------
+    let transport = cfg.transport();
+    let mut b = ClusterBuilder::new();
+    b.transport(transport);
+    b.chunk_policy(if cfg.chunked { ChunkPolicy::Chunked } else { ChunkPolicy::Reject });
+    let networked = transport != crate::config::TransportKind::Local;
+    let add_node = |b: &mut ClusterBuilder, name: &str, p: Platform| {
+        if networked {
+            b.node_at(name, p, "127.0.0.1:0")
+        } else {
+            b.node(name, p)
+        }
+    };
+    let control_node = add_node(&mut b, "control", Platform::Sw);
+    // Control kernel (id 0) needs the whole grid plus slack.
+    b.kernel_with_segment(control_node, cfg.n * cfg.n * 4 + 4096);
+
+    let worker_platform = if cfg.hw { Platform::Hw } else { Platform::Sw };
+    // Workers on `nodes` nodes, contiguous blocks (neighbours co-located).
+    let mut worker_nodes = Vec::with_capacity(cfg.nodes);
+    for i in 0..cfg.nodes {
+        // The paper's single-software-node runs put workers on the control
+        // node's machine; we mirror that for nodes == 1 && !hw.
+        if !cfg.hw && cfg.nodes == 1 {
+            worker_nodes.push(control_node);
+        } else {
+            worker_nodes.push(add_node(&mut b, &format!("worker-node-{i}"), worker_platform));
+        }
+    }
+    let per_node = cfg.workers.div_ceil(cfg.nodes);
+    for (w, s) in strips_v.iter().enumerate() {
+        let node = worker_nodes[(w / per_node).min(cfg.nodes - 1)];
+        let layout = SegmentLayout::new(s.rows, cfg.n);
+        b.kernel_with_segment(node, layout.segment_bytes() + 4096);
+    }
+    let spec = b.build()?;
+
+    // -- launch ---------------------------------------------------------------------
+    let cluster = ShoalCluster::launch(&spec)?;
+    let (wtx, wrx) = mpsc::channel::<WorkerReport>();
+    let (ctx, crx) = mpsc::channel::<Result<ControlReport>>();
+
+    for (w, s) in strips_v.iter().enumerate() {
+        let layout = SegmentLayout::new(s.rows, cfg.n);
+        let compute: Arc<dyn JacobiCompute> = match &engine {
+            Some(e) => Arc::new(XlaSweep::new(Arc::clone(e))),
+            None => Arc::new(RustSweep),
+        };
+        let wtx = wtx.clone();
+        let (workers, iters, wi) = (cfg.workers, cfg.iters, w);
+        cluster.run_kernel(kernels::worker_kid(w), move |k| {
+            if let Err(e) = worker_kernel(k, wi, workers, layout, compute, iters, wtx) {
+                // The error surfaces through the missing report + join.
+                log::error!("worker {wi}: {e}");
+                panic!("worker {wi} failed: {e}");
+            }
+        });
+    }
+    {
+        let strips_v = strips_v.clone();
+        let (n, iters) = (cfg.n, cfg.iters);
+        cluster.run_kernel(0, move |k| {
+            let _ = ctx.send(control_kernel(k, grid, n, strips_v, iters));
+        });
+    }
+
+    let control = crx
+        .recv_timeout(Duration::from_secs(600))
+        .map_err(|_| Error::Timeout("control kernel"))??;
+    cluster.join()?;
+    drop(wtx);
+    let mut worker_reports: Vec<WorkerReport> = wrx.try_iter().collect();
+    worker_reports.sort_by_key(|r| r.worker);
+
+    let compute_max = worker_reports.iter().map(|r| r.compute).max().unwrap_or_default();
+    let sync_max = worker_reports.iter().map(|r| r.sync).max().unwrap_or_default();
+
+    Ok(JacobiReport {
+        config: *cfg,
+        grid: control.grid,
+        wall: control.wall,
+        distribute: control.distribute,
+        gather: control.gather,
+        compute: compute_max,
+        sync: sync_max,
+        worker_reports,
+    })
+}

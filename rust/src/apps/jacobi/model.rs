@@ -1,0 +1,262 @@
+//! Modeled run time for Jacobi configurations — the time base for the
+//! hardware bars of Fig. 8 (no FPGA is attached; see DESIGN.md §3).
+//!
+//! Per iteration, three terms:
+//!
+//! - **compute**: hardware kernels emulate the paper's systolic VHDL core at
+//!   one cell per 200 MHz cycle; software kernels at a calibrated ns/cell.
+//!   When a node's working set exceeds its fast memory (FPGA BRAM / CPU LLC),
+//!   the node's shared DRAM bandwidth bounds the sweep — the paper's
+//!   "contention for RAM" that makes spreading kernels across FPGAs
+//!   profitable at large grids (§IV-C2) while a single FPGA stays better for
+//!   modest grids.
+//! - **halo exchange**: one Long-put round trip per neighbour pair over the
+//!   DES latency model, plus the node router's serialization: on a software
+//!   node every halo put, reply and barrier message of every local kernel
+//!   funnels through one libGalapagos router thread — the §IV-C1 small-grid
+//!   overhead that makes more kernels *slower*.
+//! - **barriers**: 2 per iteration; enter/release Short AMs to the master
+//!   (the software control kernel).
+
+use crate::sim::{CostModel, MsgKind, Protocol, Topology};
+
+/// Compute-side calibration.
+#[derive(Clone, Copy, Debug)]
+pub struct ComputeModel {
+    /// Hardware systolic throughput: cells per cycle per kernel (the paper's
+    /// VHDL core streams one cell per cycle).
+    pub hw_cells_per_cycle: f64,
+    /// Fabric clock (Hz).
+    pub hw_clock_hz: f64,
+    /// Software sweep speed per kernel thread (ns per cell) — a 2012-era
+    /// Xeon E5-2650 core on non-vectorized stencil code.
+    pub sw_ns_per_cell: f64,
+    /// Effective shared DRAM bandwidth per FPGA node (bytes/s): one DDR4
+    /// channel under many-master AXI contention.
+    pub hw_dram_bps: f64,
+    /// Effective shared memory bandwidth per software node (bytes/s).
+    pub sw_mem_bps: f64,
+    /// AXI multi-master degradation: each extra kernel on an FPGA costs this
+    /// fraction of DRAM efficiency ("contention for RAM", §IV-C2).
+    pub hw_dram_contention: f64,
+    /// CPU last-level cache per software node; grids that fit skip the
+    /// memory-bandwidth bound.
+    pub sw_cache_bytes: usize,
+    /// End-to-end per-message cost through a software node's runtime (router
+    /// hop + handler work + wakeups under contention), ns.
+    pub sw_per_msg_ns: f64,
+    /// Per-message occupancy of a GAScore (pipelined hardware), ns.
+    pub hw_per_msg_ns: f64,
+    /// Runtime messages per worker per iteration: 2 halo puts + 2 put
+    /// deliveries + 2 replies + 2 reply deliveries + barrier enter/release
+    /// each crossing the router twice.
+    pub msgs_per_worker_iter: f64,
+}
+
+impl Default for ComputeModel {
+    fn default() -> Self {
+        ComputeModel {
+            hw_cells_per_cycle: 1.0,
+            hw_clock_hz: 200e6,
+            sw_ns_per_cell: 6.0,
+            hw_dram_bps: 6.0e9,
+            sw_mem_bps: 6.0e9,
+            hw_dram_contention: 0.12,
+            sw_cache_bytes: 16 << 20,
+            sw_per_msg_ns: 30_000.0,
+            hw_per_msg_ns: 200.0,
+            msgs_per_worker_iter: 12.0,
+        }
+    }
+}
+
+/// A Jacobi placement to model.
+#[derive(Clone, Copy, Debug)]
+pub struct Placement {
+    pub n: usize,
+    pub iters: usize,
+    pub workers: usize,
+    /// Nodes hosting workers (1 software node, or 1/2/4 FPGAs).
+    pub nodes: usize,
+    pub hw: bool,
+}
+
+/// Modeled time breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ModeledTime {
+    pub total_s: f64,
+    pub compute_s: f64,
+    pub comm_s: f64,
+    pub sync_s: f64,
+}
+
+/// Model the run time of a placement.
+pub fn model_time(p: Placement, cm: &ComputeModel, net: &CostModel) -> ModeledTime {
+    let rows_per_worker = (p.n - 2).div_ceil(p.workers);
+    let cells_per_worker = rows_per_worker as f64 * p.n as f64;
+    let workers_per_node = p.workers.div_ceil(p.nodes);
+    let tile_bytes = cells_per_worker * 4.0;
+
+    // -- compute per iteration -------------------------------------------------
+    let raw = if p.hw {
+        cells_per_worker / (cm.hw_cells_per_cycle * cm.hw_clock_hz)
+    } else {
+        cells_per_worker * cm.sw_ns_per_cell * 1e-9
+    };
+    // Memory bound: tiles live in node DRAM (the FPGA core's BRAM line
+    // buffers hold only a few rows). Multi-master AXI access degrades
+    // effective bandwidth per extra kernel on the node.
+    let node_bytes = workers_per_node as f64 * tile_bytes;
+    let traffic = node_bytes * 2.0; // read + write per sweep
+    let compute_iter = if p.hw {
+        let eff = cm.hw_dram_bps / (1.0 + cm.hw_dram_contention * (workers_per_node as f64 - 1.0));
+        raw.max(traffic / eff)
+    } else if node_bytes <= cm.sw_cache_bytes as f64 {
+        raw // working set cached: the LLC absorbs the sweeps
+    } else {
+        raw.max(traffic / cm.sw_mem_bps)
+    };
+
+    // -- halo exchange per iteration ---------------------------------------------
+    let row_bytes = p.n * 4;
+    let topo = match (p.hw, p.nodes) {
+        (false, 1) => Topology::SwSwSame,
+        (false, _) => Topology::SwSwDiff,
+        (true, 1) => Topology::HwHwSame,
+        (true, _) => Topology::HwHwDiff,
+    };
+    let halo_latency = if p.workers > 1 {
+        net.latency_ns(topo, Protocol::Tcp, MsgKind::Long, row_bytes)
+            .unwrap_or_else(|| {
+                // Oversized halos run chunked (extension enabled).
+                let max = crate::galapagos::packet::MAX_PAYLOAD_BYTES - 64;
+                let chunks = row_bytes.div_ceil(max);
+                chunks as f64
+                    * net
+                        .latency_ns(topo, Protocol::Tcp, MsgKind::Long, max.min(row_bytes))
+                        .unwrap_or(50_000.0)
+            })
+            * 1e-9
+    } else {
+        0.0
+    };
+
+    // Runtime serialization: every halo put, delivery, reply and barrier AM
+    // of every local kernel funnels through one runtime thread per node (the
+    // libGalapagos router; the GAScore in hardware, which is pipelined and
+    // far cheaper).
+    let per_msg = if p.hw { cm.hw_per_msg_ns } else { cm.sw_per_msg_ns };
+    let occupancy = if p.workers > 1 {
+        cm.msgs_per_worker_iter * workers_per_node as f64 * per_msg * 1e-9
+    } else {
+        0.0
+    };
+    let comm_iter = halo_latency + occupancy;
+
+    // -- barriers per iteration ------------------------------------------------------
+    // Master is the software control kernel; hardware workers' enter/release
+    // AMs cross the network to it, and the master's handler thread processes
+    // the k ENTER messages serially.
+    let barrier_topo = if p.hw { Topology::SwHw } else { topo };
+    let barrier_rt = net
+        .latency_ns(barrier_topo, Protocol::Tcp, MsgKind::Short, 0)
+        .unwrap_or(20_000.0)
+        * 1e-9;
+    let master_serial = p.workers as f64 * cm.sw_per_msg_ns * 1e-9;
+    let sync_iter = if p.workers > 1 { 2.0 * (barrier_rt + master_serial) } else { 0.0 };
+
+    let compute_s = compute_iter * p.iters as f64;
+    let comm_s = comm_iter * p.iters as f64;
+    let sync_s = sync_iter * p.iters as f64;
+    ModeledTime { total_s: compute_s + comm_s + sync_s, compute_s, comm_s, sync_s }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn place(n: usize, workers: usize, nodes: usize, hw: bool) -> ModeledTime {
+        model_time(
+            Placement { n, iters: 1024, workers, nodes, hw },
+            &ComputeModel::default(),
+            &CostModel::paper(),
+        )
+    }
+
+    #[test]
+    fn fig8_spreading_fpgas_helps() {
+        // "holding the total number of kernels constant but spreading them
+        // out over multiple nodes improves performance as it decreases
+        // contention of local resources."
+        let one = place(4096, 8, 1, true);
+        let two = place(4096, 8, 2, true);
+        let four = place(4096, 8, 4, true);
+        assert!(two.total_s < one.total_s, "one {} two {}", one.total_s, two.total_s);
+        assert!(four.total_s <= two.total_s * 1.001);
+    }
+
+    #[test]
+    fn fig8_multi_fpga_beats_single_sw_node() {
+        // "With more than one FPGA, the hardware is markedly faster than a
+        // single software node."
+        let sw = place(4096, 8, 1, false);
+        let hw2 = place(4096, 8, 2, true);
+        assert!(hw2.total_s < 0.7 * sw.total_s, "sw {} hw2 {}", sw.total_s, hw2.total_s);
+    }
+
+    #[test]
+    fn fig8_more_kernels_helps_less_dramatically() {
+        // "Increasing the number of kernels also improves run time but not
+        // necessarily as dramatically."
+        let k8 = place(4096, 8, 4, true);
+        let k16 = place(4096, 16, 4, true);
+        assert!(k16.total_s < k8.total_s);
+        // Not a full 2× win: DRAM bounds it.
+        assert!(k16.total_s > k8.total_s / 2.0);
+    }
+
+    #[test]
+    fn fig7_small_grids_lose_with_more_kernels() {
+        // "For small grid sizes, the overhead of communication,
+        // synchronization and memory contention dominates and results in
+        // longer execution times as the number of kernels is increased."
+        for n in [256, 512] {
+            let k1 = place(n, 1, 1, false);
+            let k4 = place(n, 4, 1, false);
+            let k16 = place(n, 16, 1, false);
+            assert!(k4.total_s > k1.total_s, "n={n}: k1 {} k4 {}", k1.total_s, k4.total_s);
+            assert!(k16.total_s > k4.total_s, "n={n}: k4 {} k16 {}", k4.total_s, k16.total_s);
+        }
+    }
+
+    #[test]
+    fn fig7_large_grids_gain_from_kernels() {
+        // "At a grid size of 1024, this trend changes and increasing the
+        // number of kernels improves the run time to a point."
+        let k1 = place(1024, 1, 1, false);
+        let k8 = place(1024, 8, 1, false);
+        let k16 = place(1024, 16, 1, false);
+        assert!(k8.total_s < k1.total_s, "k1 {} k8 {}", k1.total_s, k8.total_s);
+        // "With 16 kernels on one node ... the significantly increased time
+        // spent in synchronization offsets this saving."
+        assert!(k16.total_s > k8.total_s * 0.9, "k8 {} k16 {}", k8.total_s, k16.total_s);
+    }
+
+    #[test]
+    fn fewer_kernels_on_one_fpga_better_for_modest_grids() {
+        // "Until at least a grid size of 2048, it is better to use a single
+        // FPGA and a reduced number of kernels. Having many kernels on a
+        // single FPGA creates contention for RAM and decreases performance
+        // for these grid sizes."
+        let k2 = place(1024, 2, 1, true);
+        let k8 = place(1024, 8, 1, true);
+        assert!(k2.total_s < k8.total_s, "k2 {} k8 {}", k2.total_s, k8.total_s);
+    }
+
+    #[test]
+    fn sync_grows_with_kernel_count() {
+        let k4 = place(1024, 4, 1, false);
+        let k16 = place(1024, 16, 1, false);
+        assert!(k16.comm_s + k16.sync_s > k4.comm_s + k4.sync_s);
+    }
+}

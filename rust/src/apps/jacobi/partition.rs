@@ -1,0 +1,123 @@
+//! Grid partitioning for the distributed Jacobi solver.
+//!
+//! The global grid is `n × n` (f32) with Dirichlet boundary: the first/last
+//! rows and columns stay fixed. The `n - 2` interior rows are split into
+//! contiguous row strips, one per worker kernel — each worker's halo is then
+//! exactly one row from each vertical neighbour, exchanged per iteration via
+//! Long AMs (paper §IV-C, von Neumann neighbourhood).
+
+/// A worker's strip of interior rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Strip {
+    /// First interior row (global index, 1-based within the grid: row 0 is
+    /// boundary).
+    pub start_row: usize,
+    /// Number of rows in this strip.
+    pub rows: usize,
+}
+
+/// Partition `interior` rows among `workers` as evenly as possible; earlier
+/// workers take the remainder.
+pub fn strips(n: usize, workers: usize) -> Vec<Strip> {
+    assert!(n >= 3, "grid must have interior rows");
+    assert!(workers >= 1);
+    let interior = n - 2;
+    assert!(workers <= interior, "more workers than interior rows");
+    let base = interior / workers;
+    let extra = interior % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut row = 1; // global row 0 is boundary
+    for w in 0..workers {
+        let rows = base + usize::from(w < extra);
+        out.push(Strip { start_row: row, rows });
+        row += rows;
+    }
+    out
+}
+
+/// Per-worker segment layout (byte offsets in the kernel's PGAS partition).
+///
+/// ```text
+/// 0                cols*4            2*cols*4           2*cols*4 + rows*cols*4
+/// | halo_top row  | halo_bottom row | tile (rows×cols) |
+/// ```
+#[derive(Clone, Copy, Debug)]
+pub struct SegmentLayout {
+    pub cols: usize,
+    pub rows: usize,
+}
+
+impl SegmentLayout {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols }
+    }
+
+    pub const HALO_TOP: u64 = 0;
+
+    pub fn halo_bot(&self) -> u64 {
+        (self.cols * 4) as u64
+    }
+
+    pub fn tile(&self) -> u64 {
+        (2 * self.cols * 4) as u64
+    }
+
+    /// Byte offset of tile row `r`.
+    pub fn tile_row(&self, r: usize) -> u64 {
+        self.tile() + (r * self.cols * 4) as u64
+    }
+
+    pub fn row_bytes(&self) -> usize {
+        self.cols * 4
+    }
+
+    pub fn tile_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// Minimum segment size for this layout.
+    pub fn segment_bytes(&self) -> usize {
+        2 * self.row_bytes() + self.tile_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_cover_interior_exactly() {
+        for (n, w) in [(16, 1), (16, 2), (16, 7), (1024, 16), (258, 16)] {
+            let ss = strips(n, w);
+            assert_eq!(ss.len(), w);
+            assert_eq!(ss[0].start_row, 1);
+            let total: usize = ss.iter().map(|s| s.rows).sum();
+            assert_eq!(total, n - 2, "n={n} w={w}");
+            // Contiguous.
+            for i in 1..ss.len() {
+                assert_eq!(ss[i].start_row, ss[i - 1].start_row + ss[i - 1].rows);
+            }
+            // Balanced within 1.
+            let min = ss.iter().map(|s| s.rows).min().unwrap();
+            let max = ss.iter().map(|s| s.rows).max().unwrap();
+            assert!(max - min <= 1);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn too_many_workers_panics() {
+        strips(4, 3); // 2 interior rows, 3 workers
+    }
+
+    #[test]
+    fn layout_offsets_disjoint() {
+        let l = SegmentLayout::new(8, 32);
+        assert_eq!(SegmentLayout::HALO_TOP, 0);
+        assert_eq!(l.halo_bot(), 128);
+        assert_eq!(l.tile(), 256);
+        assert_eq!(l.tile_row(0), 256);
+        assert_eq!(l.tile_row(7), 256 + 7 * 128);
+        assert_eq!(l.segment_bytes(), 2 * 128 + 8 * 32 * 4);
+    }
+}

@@ -1,0 +1,8 @@
+//! Applications built on the Shoal API.
+//!
+//! [`jacobi`] is the paper's evaluation application (§IV-C): the Jacobi
+//! iterative method over a 2-D grid with a von Neumann stencil, distributed
+//! across software and/or hardware kernels with halo exchange over Long AMs
+//! and barrier synchronization.
+
+pub mod jacobi;

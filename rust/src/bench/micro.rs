@@ -1,0 +1,289 @@
+//! The Benchmark IP: Sender/Receiver kernels over the real library.
+//!
+//! "For latency, time is measured from when the Sender sends the message to
+//! when it receives the reply from the Receiver. For throughput, the Sender
+//! sends all the messages in a loop and then waits for all the replies."
+//! (§IV-B). These run against actual clusters (in-process, loopback TCP or
+//! UDP), producing wall-clock numbers; the figure benches use them to
+//! calibrate and sanity-check the DES model's software constants.
+
+use std::time::Instant;
+
+use crate::am::handlers;
+use crate::config::{ClusterBuilder, ClusterSpec, Platform, TransportKind};
+use crate::error::Result;
+use crate::prelude::ShoalCluster;
+use crate::sim::MsgKind;
+use crate::util::stats::Summary;
+
+/// Where the two benchmark kernels live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BenchPlacement {
+    pub sender: Platform,
+    pub receiver: Platform,
+    pub same_node: bool,
+    pub transport: TransportKind,
+}
+
+impl BenchPlacement {
+    pub fn sw_same() -> Self {
+        BenchPlacement {
+            sender: Platform::Sw,
+            receiver: Platform::Sw,
+            same_node: true,
+            transport: TransportKind::Local,
+        }
+    }
+
+    pub fn sw_diff(transport: TransportKind) -> Self {
+        BenchPlacement {
+            sender: Platform::Sw,
+            receiver: Platform::Sw,
+            same_node: false,
+            transport,
+        }
+    }
+
+    pub fn sw_to_hw(transport: TransportKind) -> Self {
+        BenchPlacement {
+            sender: Platform::Sw,
+            receiver: Platform::Hw,
+            same_node: false,
+            transport,
+        }
+    }
+
+    pub fn hw_same() -> Self {
+        BenchPlacement {
+            sender: Platform::Hw,
+            receiver: Platform::Hw,
+            same_node: true,
+            transport: TransportKind::Local,
+        }
+    }
+
+    fn spec(&self) -> Result<ClusterSpec> {
+        let mut b = ClusterBuilder::new();
+        b.transport(self.transport);
+        b.default_segment(1 << 20);
+        let addr = |_i: usize| "127.0.0.1:0".to_string();
+        let mk = |b: &mut ClusterBuilder, name: &str, p: Platform, t: TransportKind, i: usize| {
+            if t == TransportKind::Local {
+                b.node(name, p)
+            } else {
+                b.node_at(name, p, &addr(i))
+            }
+        };
+        if self.same_node {
+            let n0 = mk(&mut b, "bench0", self.sender, self.transport, 0);
+            b.kernel(n0);
+            b.kernel(n0);
+        } else {
+            let n0 = mk(&mut b, "bench0", self.sender, self.transport, 0);
+            let n1 = mk(&mut b, "bench1", self.receiver, self.transport, 1);
+            b.kernel(n0);
+            b.kernel(n1);
+        }
+        b.build()
+    }
+}
+
+/// Sentinel arg value marking the end-of-benchmark Medium message.
+const DONE: u64 = u64::MAX;
+
+/// Receiver kernel body: drain Medium traffic until the DONE sentinel.
+fn receiver_loop(mut k: crate::shoal_node::api::ShoalKernel) {
+    k.mem().write(0, &vec![7u8; 8192]).unwrap();
+    k.barrier().unwrap(); // partition seeded
+    loop {
+        let m = k.recv_medium().unwrap();
+        if m.args.first() == Some(&DONE) {
+            break;
+        }
+    }
+}
+
+/// Result of one measurement sweep.
+#[derive(Clone, Debug)]
+pub struct MicroResult {
+    /// Round-trip latency samples in nanoseconds.
+    pub latency: Summary,
+    /// Payload bytes per second (throughput runs only).
+    pub throughput_bps: f64,
+}
+
+/// Send one AM of `kind` and wait for its completion; returns outstanding
+/// replies consumed. Runs inside the sender kernel.
+fn send_one(
+    k: &mut crate::shoal_node::api::ShoalKernel,
+    kind: MsgKind,
+    payload: &[u8],
+    receiver: u16,
+) -> Result<u64> {
+    let r = match kind {
+        MsgKind::Short => k.am_short(receiver, handlers::NOP, &[])?,
+        MsgKind::MediumFifo => k.am_medium(receiver, handlers::NOP, &[], payload)?,
+        MsgKind::Medium => {
+            k.mem().write(0, payload)?;
+            k.am_medium_from_mem(receiver, handlers::NOP, &[], 0, payload.len())?
+        }
+        MsgKind::LongFifo => k.am_long(receiver, handlers::NOP, &[], payload, 4096)?,
+        MsgKind::Long => {
+            k.mem().write(0, payload)?;
+            k.am_long_from_mem(receiver, handlers::NOP, &[], 0, payload.len(), 4096)?
+        }
+        MsgKind::LongStrided => {
+            let block = 64.min(payload.len()).max(1) as u32;
+            if payload.len() % block as usize != 0 {
+                k.am_long(receiver, handlers::NOP, &[], payload, 4096)?
+            } else {
+                k.am_long_strided(receiver, handlers::NOP, &[], payload, 4096, block * 2, block)?
+            }
+        }
+        MsgKind::LongVectored => {
+            let quarter = (payload.len() / 4).max(1);
+            let entries: Vec<(u64, u32)> = (0..4u64)
+                .map(|i| (4096 + i * 8192, quarter as u32))
+                .collect();
+            let pl = &payload[..quarter * 4];
+            k.am_long_vectored(receiver, handlers::NOP, &[], pl, &entries)?
+        }
+        MsgKind::MediumGet => {
+            let r = k.am_medium_get(receiver, handlers::NOP, 0, payload.len())?;
+            for _ in 0..r.messages {
+                let _ = k.recv_medium()?;
+            }
+            r
+        }
+        MsgKind::LongGet => k.am_long_get(receiver, handlers::NOP, 0, payload.len(), 0)?,
+    };
+    Ok(r.messages)
+}
+
+/// Measure round-trip latency: `samples` timed round trips after `warmup`.
+pub fn measure_latency(
+    placement: BenchPlacement,
+    kind: MsgKind,
+    payload_len: usize,
+    samples: usize,
+    warmup: usize,
+) -> Result<Summary> {
+    let spec = placement.spec()?;
+    let cluster = ShoalCluster::launch(&spec)?;
+    let (tx, rx) = std::sync::mpsc::channel::<Summary>();
+
+    // Receiver: seed its partition for gets, drain mediums until DONE.
+    cluster.run_kernel(1, receiver_loop);
+
+    cluster.run_kernel(0, move |mut k| {
+        k.barrier().unwrap();
+        let payload = vec![0xA5u8; payload_len];
+        let mut summary = Summary::new();
+        for i in 0..warmup + samples {
+            let t0 = Instant::now();
+            let msgs = send_one(&mut k, kind, &payload, 1).unwrap();
+            if msgs > 0 {
+                k.wait_replies(msgs).unwrap();
+            }
+            if i >= warmup {
+                summary.push(t0.elapsed().as_nanos() as f64);
+            }
+        }
+        let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
+        k.wait_replies(r.messages).unwrap();
+        tx.send(summary).unwrap();
+    });
+
+    let summary = rx
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .map_err(|_| crate::error::Error::Timeout("latency bench"))?;
+    cluster.join()?;
+    Ok(summary)
+}
+
+/// Measure sustained throughput: `count` back-to-back sends, then wait for
+/// all replies. Returns payload bytes/second.
+pub fn measure_throughput(
+    placement: BenchPlacement,
+    kind: MsgKind,
+    payload_len: usize,
+    count: usize,
+) -> Result<f64> {
+    let spec = placement.spec()?;
+    let cluster = ShoalCluster::launch(&spec)?;
+    let (tx, rx) = std::sync::mpsc::channel::<f64>();
+
+    cluster.run_kernel(1, receiver_loop);
+
+    cluster.run_kernel(0, move |mut k| {
+        k.barrier().unwrap();
+        let payload = vec![0x5Au8; payload_len];
+        let t0 = Instant::now();
+        let mut outstanding = 0u64;
+        for _ in 0..count {
+            outstanding += send_one(&mut k, kind, &payload, 1).unwrap();
+        }
+        if outstanding > 0 {
+            k.wait_replies(outstanding).unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
+        k.wait_replies(r.messages).unwrap();
+        tx.send(count as f64 * payload_len as f64 / dt).unwrap();
+    });
+
+    let bps = rx
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .map_err(|_| crate::error::Error::Timeout("throughput bench"))?;
+    cluster.join()?;
+    Ok(bps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_sw_same_node() {
+        let s = measure_latency(BenchPlacement::sw_same(), MsgKind::MediumFifo, 64, 50, 10)
+            .unwrap();
+        assert_eq!(s.count(), 50);
+        assert!(s.median() > 0.0);
+        // Round trips through threads take at least a microsecond.
+        assert!(s.median() > 500.0, "median {} ns", s.median());
+    }
+
+    #[test]
+    fn throughput_sw_same_node() {
+        let bps =
+            measure_throughput(BenchPlacement::sw_same(), MsgKind::LongFifo, 1024, 200).unwrap();
+        assert!(bps > 1e5, "throughput {bps} B/s");
+    }
+
+    #[test]
+    fn latency_over_tcp_loopback() {
+        let s = measure_latency(
+            BenchPlacement::sw_diff(TransportKind::Tcp),
+            MsgKind::LongFifo,
+            256,
+            30,
+            5,
+        )
+        .unwrap();
+        assert!(s.median() > 1_000.0, "tcp median {} ns", s.median());
+    }
+
+    #[test]
+    fn latency_gets_roundtrip_data() {
+        let s = measure_latency(BenchPlacement::sw_same(), MsgKind::MediumGet, 128, 20, 5)
+            .unwrap();
+        assert_eq!(s.count(), 20);
+    }
+
+    #[test]
+    fn hw_placement_works() {
+        let s =
+            measure_latency(BenchPlacement::hw_same(), MsgKind::LongFifo, 512, 20, 5).unwrap();
+        assert!(s.median() > 0.0);
+    }
+}

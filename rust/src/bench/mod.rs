@@ -1,0 +1,11 @@
+//! Benchmark harness.
+//!
+//! - [`micro`]  — the "Benchmark IP" of §IV-B: Sender/Receiver kernel pairs
+//!   measuring *real* wall-clock latency and throughput through the full
+//!   library (used for calibration and the L3 perf work).
+//! - [`report`] — regenerates the paper's figures from the calibrated DES
+//!   model (Figs. 4–6) and the Jacobi runs (Figs. 7–8), as aligned tables
+//!   and CSV series.
+
+pub mod micro;
+pub mod report;

@@ -1,0 +1,235 @@
+//! Figure/table generation — one function per paper artifact.
+//!
+//! Each function returns a [`Table`] whose rows/series match what the paper
+//! reports; the bench binaries print it and drop a CSV next to it (under
+//! `bench_results/`). Figures 4–6 come from the calibrated DES model; Fig. 7
+//! runs the real software solver; Fig. 8 combines a functional hardware run
+//! with the modeled time base (DESIGN.md §3).
+
+use crate::apps::jacobi::model::{model_time, ComputeModel, Placement};
+use crate::sim::{CostModel, MsgKind, Protocol, Topology};
+use crate::util::table::Table;
+
+/// Payload sizes the paper sweeps (8 B – 4096 B).
+pub const PAYLOADS: [usize; 10] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+
+/// Mean latency across the payload-carrying AM kinds (what Figs. 4–5 plot
+/// per topology: "the average of the different types of AMs").
+pub fn avg_latency_ns(
+    cm: &CostModel,
+    topo: Topology,
+    proto: Protocol,
+    payload: usize,
+) -> Option<f64> {
+    let mut sum = 0.0;
+    for k in MsgKind::PAYLOAD_KINDS {
+        sum += cm.latency_ns(topo, proto, k, payload)?;
+    }
+    Some(sum / MsgKind::PAYLOAD_KINDS.len() as f64)
+}
+
+/// Mean throughput across AM kinds.
+pub fn avg_throughput_bps(
+    cm: &CostModel,
+    topo: Topology,
+    proto: Protocol,
+    payload: usize,
+) -> Option<f64> {
+    let mut sum = 0.0;
+    for k in MsgKind::PAYLOAD_KINDS {
+        sum += cm.throughput_bps(topo, proto, k, payload)?;
+    }
+    Some(sum / MsgKind::PAYLOAD_KINDS.len() as f64)
+}
+
+/// Fig. 4: median latency (µs) by topology × payload, TCP.
+pub fn fig4_latency(cm: &CostModel) -> Table {
+    let mut t = Table::new("Fig. 4: average median latency (µs), TCP").header(
+        std::iter::once("payload (B)".to_string())
+            .chain(Topology::ALL.iter().map(|t| t.label().to_string())),
+    );
+    for p in PAYLOADS {
+        let mut row = vec![p.to_string()];
+        for topo in Topology::ALL {
+            let v = avg_latency_ns(cm, topo, Protocol::Tcp, p).unwrap();
+            row.push(format!("{:.1}", v / 1000.0));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 5: UDP-over-TCP median latency speedup (×) by topology × payload.
+/// Same-node topologies are excluded ("no network protocol is used"); the
+/// hardware 2048/4096 B points are `n/a` (IP fragmentation unsupported).
+pub fn fig5_udp_speedup(cm: &CostModel) -> Table {
+    let topos = [Topology::SwSwDiff, Topology::SwHw, Topology::HwSw, Topology::HwHwDiff];
+    let mut t = Table::new("Fig. 5: speedup of median latency, UDP vs TCP").header(
+        std::iter::once("payload (B)".to_string())
+            .chain(topos.iter().map(|t| t.label().to_string())),
+    );
+    for p in PAYLOADS {
+        let mut row = vec![p.to_string()];
+        for topo in topos {
+            let tcp = avg_latency_ns(cm, topo, Protocol::Tcp, p).unwrap();
+            match avg_latency_ns(cm, topo, Protocol::Udp, p) {
+                Some(udp) => row.push(format!("{:.2}x", tcp / udp)),
+                None => row.push("n/a".to_string()),
+            }
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 6: average throughput (MB/s) by topology × payload, TCP.
+pub fn fig6_throughput(cm: &CostModel) -> Table {
+    let mut t = Table::new("Fig. 6: average throughput (MB/s), TCP").header(
+        std::iter::once("payload (B)".to_string())
+            .chain(Topology::ALL.iter().map(|t| t.label().to_string())),
+    );
+    for p in PAYLOADS {
+        let mut row = vec![p.to_string()];
+        for topo in Topology::ALL {
+            let v = avg_throughput_bps(cm, topo, Protocol::Tcp, p).unwrap();
+            row.push(format!("{:.1}", v / 1e6));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 7 companion: modeled software run times (s) for the full grid ×
+/// kernel sweep (the measured sweep is produced by the fig7 bench binary,
+/// which runs the real solver; this model extends it to the paper's full
+/// scale). "n/s" marks configurations the paper reports as not working
+/// (AM beyond the packet cap, §IV-C1).
+pub fn fig7_model(cm_net: &CostModel, grids: &[usize], kernel_counts: &[usize], iters: usize) -> Table {
+    let cmp = ComputeModel::default();
+    let mut t = Table::new(format!("Fig. 7 (modeled): Jacobi SW run time (s), {iters} iterations"))
+        .header(
+            std::iter::once("grid".to_string())
+                .chain(kernel_counts.iter().map(|k| format!("{k} kernels"))),
+        );
+    for &n in grids {
+        let mut row = vec![n.to_string()];
+        for &k in kernel_counts {
+            // The paper's 9000 B cap: a halo row of n*4 bytes must fit one AM
+            // (chunking unimplemented in the paper).
+            let unsupported = k > 1 && n * 4 > crate::galapagos::packet::MAX_PAYLOAD_BYTES - 64;
+            if unsupported {
+                row.push("n/s".to_string());
+            } else {
+                let m = model_time(
+                    Placement { n, iters, workers: k, nodes: 1, hw: false },
+                    &cmp,
+                    cm_net,
+                );
+                row.push(format!("{:.2}", m.total_s));
+            }
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 8: Jacobi at grid 4096, 1024 iterations — SW (1 node) vs HW over
+/// 1/2/4 FPGAs, 8 and 16 total kernels (modeled time base).
+pub fn fig8_model(cm_net: &CostModel, iters: usize) -> Table {
+    let cmp = ComputeModel::default();
+    let mut t = Table::new(format!(
+        "Fig. 8 (modeled): Jacobi run time (s), grid 4096, {iters} iterations"
+    ))
+    .header(["configuration", "8 kernels", "16 kernels"]);
+    let mut add = |label: &str, nodes: usize, hw: bool| {
+        let mut row = vec![label.to_string()];
+        for workers in [8usize, 16] {
+            let m = model_time(
+                Placement { n: 4096, iters, workers, nodes, hw },
+                &cmp,
+                cm_net,
+            );
+            row.push(format!("{:.2}", m.total_s));
+        }
+        t.row(row);
+    };
+    add("SW, 1 node", 1, false);
+    add("HW, 1 FPGA", 1, true);
+    add("HW, 2 FPGAs", 2, true);
+    add("HW, 4 FPGAs", 4, true);
+    t
+}
+
+/// Write a table's CSV under `bench_results/`.
+pub fn save_csv(table: &Table, name: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("bench_results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    std::fs::write(&path, table.to_csv())?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_table_has_all_series() {
+        let t = fig4_latency(&CostModel::paper());
+        let s = t.render();
+        assert!(s.contains("SW-SW (same)"));
+        assert!(s.contains("HW-HW (diff)"));
+        assert_eq!(t.to_csv().lines().count(), PAYLOADS.len() + 1);
+    }
+
+    #[test]
+    fn fig5_marks_missing_hw_points() {
+        let t = fig5_udp_speedup(&CostModel::paper());
+        let csv = t.to_csv();
+        let l2048: Vec<&str> = csv.lines().find(|l| l.starts_with("2048")).unwrap().split(',').collect();
+        // SW-SW(diff) has a number; hardware columns are n/a.
+        assert!(l2048[1].ends_with('x'));
+        assert_eq!(l2048[2], "n/a");
+        assert_eq!(l2048[4], "n/a");
+    }
+
+    #[test]
+    fn fig7_marks_unsupported_4096() {
+        let t = fig7_model(&CostModel::paper(), &[256, 1024, 4096], &[1, 2, 4, 8, 16], 1024);
+        let csv = t.to_csv();
+        let l4096: Vec<&str> =
+            csv.lines().find(|l| l.starts_with("4096")).unwrap().split(',').collect();
+        assert_ne!(l4096[1], "n/s"); // 1 kernel: no exchange
+        assert_eq!(l4096[2], "n/s"); // 2 kernels: paper footnote
+        assert_eq!(l4096[3], "n/s"); // 4 kernels: paper footnote
+    }
+
+    #[test]
+    fn fig8_hw_multi_fpga_wins() {
+        let t = fig8_model(&CostModel::paper(), 1024);
+        let csv = t.to_csv();
+        let get = |prefix: &str| -> f64 {
+            // Quoted label contains a comma: the 8-kernel column is the
+            // second-to-last field.
+            let line = csv.lines().find(|l| l.starts_with(prefix)).unwrap();
+            let fields: Vec<&str> = line.split(',').collect();
+            fields[fields.len() - 2].parse().unwrap()
+        };
+        let sw = get("\"SW, 1 node\"");
+        let hw2 = get("\"HW, 2 FPGAs\"");
+        assert!(hw2 < sw, "sw {sw} hw2 {hw2}");
+    }
+
+    #[test]
+    fn csv_saving_works() {
+        let t = fig4_latency(&CostModel::paper());
+        let tmp = std::env::temp_dir().join("shoal_csv_test");
+        std::fs::create_dir_all(&tmp).unwrap();
+        let old = std::env::current_dir().unwrap();
+        // save_csv writes relative to CWD; run in a temp dir.
+        std::env::set_current_dir(&tmp).unwrap();
+        let p = save_csv(&t, "fig4_test").unwrap();
+        assert!(p.exists());
+        std::env::set_current_dir(old).unwrap();
+    }
+}

@@ -1,0 +1,327 @@
+//! Cluster configuration.
+//!
+//! Galapagos describes a cluster through user-provided configuration files: a
+//! *logical* file (kernels and their requirements) and a *map* file (which
+//! node hosts which kernel). `ClusterSpec` mirrors that split in one
+//! structure: nodes with a platform (`Sw` processor / `Hw` FPGA), kernels
+//! mapped onto nodes, the middleware transport, and Shoal-level policy knobs
+//! (API profile, chunking).
+//!
+//! Specs can be built programmatically (the common path in examples/tests) or
+//! parsed from a small TOML-subset file (`parse` module) for CLI use.
+
+pub mod parse;
+pub mod profile;
+
+use crate::error::{Error, Result};
+pub use profile::ApiProfile;
+
+/// Whether a node is a processor (software kernels = threads) or an FPGA
+/// (hardware kernels behind a shared GAScore).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Platform {
+    Sw,
+    Hw,
+}
+
+impl Platform {
+    pub fn is_hw(self) -> bool {
+        matches!(self, Platform::Hw)
+    }
+}
+
+impl std::fmt::Display for Platform {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Platform::Sw => write!(f, "sw"),
+            Platform::Hw => write!(f, "hw"),
+        }
+    }
+}
+
+/// Network protocol used between nodes (Galapagos middleware layer choice;
+/// paper supports TCP, UDP and raw Ethernet — we implement TCP and UDP).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportKind {
+    /// In-process channels only (single-node clusters / tests).
+    #[default]
+    Local,
+    Tcp,
+    Udp,
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportKind::Local => write!(f, "local"),
+            TransportKind::Tcp => write!(f, "tcp"),
+            TransportKind::Udp => write!(f, "udp"),
+        }
+    }
+}
+
+/// Policy for AM payloads larger than one Galapagos packet.
+///
+/// `Reject` reproduces the paper's behaviour (§IV-C1: "too large to send in a
+/// single AM ... has not been implemented"); `Chunked` implements the
+/// resolution the paper describes as future work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ChunkPolicy {
+    #[default]
+    Reject,
+    Chunked,
+}
+
+/// One node of the cluster.
+#[derive(Clone, Debug)]
+pub struct NodeSpec {
+    pub id: u16,
+    pub name: String,
+    pub platform: Platform,
+    /// Bind address for TCP/UDP transports ("ip:port"); ignored for Local.
+    pub address: Option<String>,
+}
+
+/// One kernel (independent computing element with a globally unique ID).
+#[derive(Clone, Debug)]
+pub struct KernelSpec {
+    pub id: u16,
+    pub node: u16,
+    /// Size in bytes of this kernel's partition of the global address space.
+    pub segment_size: usize,
+}
+
+/// Full cluster description.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub nodes: Vec<NodeSpec>,
+    pub kernels: Vec<KernelSpec>,
+    pub transport: TransportKind,
+    pub chunk_policy: ChunkPolicy,
+    pub profile: ApiProfile,
+    /// Default segment size for kernels that don't override it.
+    pub default_segment: usize,
+}
+
+/// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
+/// plus halos in the Jacobi workload).
+pub const DEFAULT_SEGMENT: usize = 64 << 20;
+
+impl ClusterSpec {
+    /// A single software node with `kernels` kernels — the simplest cluster.
+    pub fn single_node(name: &str, kernels: u16) -> ClusterSpec {
+        let mut b = ClusterBuilder::new();
+        b.node(name, Platform::Sw);
+        for _ in 0..kernels {
+            b.kernel(0);
+        }
+        b.build().expect("single node spec is always valid")
+    }
+
+    /// Look up a kernel spec by global kernel id.
+    pub fn kernel(&self, id: u16) -> Result<&KernelSpec> {
+        self.kernels
+            .iter()
+            .find(|k| k.id == id)
+            .ok_or(Error::UnknownKernel(id))
+    }
+
+    /// Look up a node spec.
+    pub fn node(&self, id: u16) -> Result<&NodeSpec> {
+        self.nodes
+            .iter()
+            .find(|n| n.id == id)
+            .ok_or(Error::UnknownNode(id))
+    }
+
+    /// The node hosting a kernel.
+    pub fn node_of(&self, kernel: u16) -> Result<u16> {
+        Ok(self.kernel(kernel)?.node)
+    }
+
+    /// Kernel ids hosted on a node, in id order.
+    pub fn kernels_on(&self, node: u16) -> Vec<u16> {
+        let mut ids: Vec<u16> = self
+            .kernels
+            .iter()
+            .filter(|k| k.node == node)
+            .map(|k| k.id)
+            .collect();
+        ids.sort_unstable();
+        ids
+    }
+
+    pub fn kernel_count(&self) -> usize {
+        self.kernels.len()
+    }
+
+    /// True if the two kernels live on the same node.
+    pub fn same_node(&self, a: u16, b: u16) -> Result<bool> {
+        Ok(self.node_of(a)? == self.node_of(b)?)
+    }
+
+    /// Validate internal consistency (unique ids, kernels map to nodes,
+    /// addresses present when a network transport is selected).
+    pub fn validate(&self) -> Result<()> {
+        let mut node_ids = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if !node_ids.insert(n.id) {
+                return Err(Error::Config(format!("duplicate node id {}", n.id)));
+            }
+            if self.transport != TransportKind::Local && n.address.is_none() {
+                return Err(Error::Config(format!(
+                    "node {} needs an address for transport {}",
+                    n.name, self.transport
+                )));
+            }
+        }
+        let mut kernel_ids = std::collections::HashSet::new();
+        for k in &self.kernels {
+            if !kernel_ids.insert(k.id) {
+                return Err(Error::Config(format!("duplicate kernel id {}", k.id)));
+            }
+            if !node_ids.contains(&k.node) {
+                return Err(Error::Config(format!(
+                    "kernel {} maps to unknown node {}",
+                    k.id, k.node
+                )));
+            }
+            if k.segment_size == 0 {
+                return Err(Error::Config(format!("kernel {} has a zero-size segment", k.id)));
+            }
+        }
+        if self.kernels.is_empty() {
+            return Err(Error::Config("cluster has no kernels".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Fluent builder for `ClusterSpec`.
+#[derive(Debug, Default)]
+pub struct ClusterBuilder {
+    nodes: Vec<NodeSpec>,
+    kernels: Vec<KernelSpec>,
+    transport: TransportKind,
+    chunk_policy: ChunkPolicy,
+    profile: ApiProfile,
+    default_segment: usize,
+}
+
+impl ClusterBuilder {
+    pub fn new() -> Self {
+        Self { default_segment: DEFAULT_SEGMENT, ..Default::default() }
+    }
+
+    /// Add a node; returns its id.
+    pub fn node(&mut self, name: &str, platform: Platform) -> u16 {
+        let id = self.nodes.len() as u16;
+        self.nodes.push(NodeSpec { id, name: name.to_string(), platform, address: None });
+        id
+    }
+
+    /// Add a node with an explicit bind address.
+    pub fn node_at(&mut self, name: &str, platform: Platform, addr: &str) -> u16 {
+        let id = self.node(name, platform);
+        self.nodes[id as usize].address = Some(addr.to_string());
+        id
+    }
+
+    /// Add a kernel on `node`; returns its globally unique id.
+    pub fn kernel(&mut self, node: u16) -> u16 {
+        let id = self.kernels.len() as u16;
+        self.kernels.push(KernelSpec { id, node, segment_size: self.default_segment });
+        id
+    }
+
+    /// Add a kernel with an explicit segment size.
+    pub fn kernel_with_segment(&mut self, node: u16, segment_size: usize) -> u16 {
+        let id = self.kernel(node);
+        self.kernels[id as usize].segment_size = segment_size;
+        id
+    }
+
+    pub fn transport(&mut self, t: TransportKind) -> &mut Self {
+        self.transport = t;
+        self
+    }
+
+    pub fn chunk_policy(&mut self, p: ChunkPolicy) -> &mut Self {
+        self.chunk_policy = p;
+        self
+    }
+
+    pub fn profile(&mut self, p: ApiProfile) -> &mut Self {
+        self.profile = p;
+        self
+    }
+
+    pub fn default_segment(&mut self, bytes: usize) -> &mut Self {
+        self.default_segment = bytes;
+        self
+    }
+
+    pub fn build(self) -> Result<ClusterSpec> {
+        let spec = ClusterSpec {
+            nodes: self.nodes,
+            kernels: self.kernels,
+            transport: self.transport,
+            chunk_policy: self.chunk_policy,
+            profile: self.profile,
+            default_segment: self.default_segment,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_spec() {
+        let s = ClusterSpec::single_node("n0", 4);
+        assert_eq!(s.nodes.len(), 1);
+        assert_eq!(s.kernel_count(), 4);
+        assert_eq!(s.kernels_on(0), vec![0, 1, 2, 3]);
+        assert!(s.same_node(0, 3).unwrap());
+    }
+
+    #[test]
+    fn builder_multi_node() {
+        let mut b = ClusterBuilder::new();
+        let n0 = b.node("cpu0", Platform::Sw);
+        let n1 = b.node("fpga0", Platform::Hw);
+        let k0 = b.kernel(n0);
+        let k1 = b.kernel(n1);
+        let s = b.build().unwrap();
+        assert_eq!(s.node_of(k0).unwrap(), n0);
+        assert_eq!(s.node_of(k1).unwrap(), n1);
+        assert!(!s.same_node(k0, k1).unwrap());
+        assert!(s.node(n1).unwrap().platform.is_hw());
+    }
+
+    #[test]
+    fn validation_rejects_missing_address() {
+        let mut b = ClusterBuilder::new();
+        let n = b.node("x", Platform::Sw);
+        b.kernel(n);
+        b.transport(TransportKind::Tcp);
+        assert!(matches!(b.build(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn validation_rejects_empty_cluster() {
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        assert!(b.build().is_err());
+    }
+
+    #[test]
+    fn unknown_lookups_error() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert!(matches!(s.kernel(9), Err(Error::UnknownKernel(9))));
+        assert!(matches!(s.node(9), Err(Error::UnknownNode(9))));
+    }
+}

@@ -1,0 +1,298 @@
+//! Text format for cluster files — a small TOML subset.
+//!
+//! Example (see `examples/clusters/*.toml`):
+//!
+//! ```toml
+//! # Shoal cluster description
+//! transport = "tcp"
+//! chunking = "reject"          # or "chunked"
+//! profile = "full"             # full | point_to_point | remote_memory
+//! default_segment = 67108864
+//!
+//! [[node]]
+//! name = "cpu0"
+//! platform = "sw"
+//! address = "127.0.0.1:7100"
+//!
+//! [[node]]
+//! name = "fpga0"
+//! platform = "hw"
+//! address = "127.0.0.1:7101"
+//!
+//! [[kernel]]
+//! node = "cpu0"
+//! count = 2                    # two kernels on cpu0
+//!
+//! [[kernel]]
+//! node = "fpga0"
+//! segment = 16777216
+//! ```
+//!
+//! Supported syntax: `key = value` (string/int/bool), `[[node]]` /
+//! `[[kernel]]` array-of-table headers, `#` comments. This is all Galapagos
+//! config files need; it is not a general TOML parser.
+
+use super::{ChunkPolicy, ClusterBuilder, ClusterSpec, Platform, TransportKind};
+use crate::config::profile::ApiProfile;
+use crate::error::{Error, Result};
+
+/// Parse a cluster file from text.
+pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
+    #[derive(Default)]
+    struct NodeSec {
+        name: Option<String>,
+        platform: Option<String>,
+        address: Option<String>,
+    }
+    #[derive(Default)]
+    struct KernelSec {
+        node: Option<String>,
+        count: usize,
+        segment: Option<usize>,
+    }
+
+    enum Section {
+        Top,
+        Node(NodeSec),
+        Kernel(KernelSec),
+    }
+
+    let mut transport = TransportKind::Local;
+    let mut chunking = ChunkPolicy::Reject;
+    let mut profile = ApiProfile::full();
+    let mut default_segment: Option<usize> = None;
+    let mut nodes: Vec<NodeSec> = Vec::new();
+    let mut kernels: Vec<KernelSec> = Vec::new();
+
+    let mut section = Section::Top;
+
+    let flush = |section: &mut Section, nodes: &mut Vec<NodeSec>, kernels: &mut Vec<KernelSec>| {
+        match std::mem::replace(section, Section::Top) {
+            Section::Node(n) => nodes.push(n),
+            Section::Kernel(k) => kernels.push(k),
+            Section::Top => {}
+        }
+    };
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| Error::Config(format!("line {}: {msg}", lineno + 1));
+
+        if line == "[[node]]" {
+            flush(&mut section, &mut nodes, &mut kernels);
+            section = Section::Node(NodeSec::default());
+            continue;
+        }
+        if line == "[[kernel]]" {
+            flush(&mut section, &mut nodes, &mut kernels);
+            section = Section::Kernel(KernelSec { count: 1, ..Default::default() });
+            continue;
+        }
+        if line.starts_with('[') {
+            return Err(err(&format!("unknown section {line}")));
+        }
+
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err("expected 'key = value'"))?;
+        let key = key.trim();
+        let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+
+        match &mut section {
+            Section::Top => match key {
+                "transport" => {
+                    transport = match value.as_str() {
+                        "local" => TransportKind::Local,
+                        "tcp" => TransportKind::Tcp,
+                        "udp" => TransportKind::Udp,
+                        v => return Err(err(&format!("unknown transport '{v}'"))),
+                    }
+                }
+                "chunking" => {
+                    chunking = match value.as_str() {
+                        "reject" => ChunkPolicy::Reject,
+                        "chunked" => ChunkPolicy::Chunked,
+                        v => return Err(err(&format!("unknown chunking '{v}'"))),
+                    }
+                }
+                "profile" => {
+                    profile = match value.as_str() {
+                        "full" => ApiProfile::full(),
+                        "point_to_point" => ApiProfile::point_to_point(),
+                        "remote_memory" => ApiProfile::remote_memory(),
+                        v => return Err(err(&format!("unknown profile '{v}'"))),
+                    }
+                }
+                "default_segment" => {
+                    default_segment =
+                        Some(value.parse().map_err(|_| err("default_segment must be an integer"))?)
+                }
+                k => return Err(err(&format!("unknown top-level key '{k}'"))),
+            },
+            Section::Node(n) => match key {
+                "name" => n.name = Some(value),
+                "platform" => n.platform = Some(value),
+                "address" => n.address = Some(value),
+                k => return Err(err(&format!("unknown node key '{k}'"))),
+            },
+            Section::Kernel(kr) => match key {
+                "node" => kr.node = Some(value),
+                "count" => kr.count = value.parse().map_err(|_| err("count must be an integer"))?,
+                "segment" => {
+                    kr.segment =
+                        Some(value.parse().map_err(|_| err("segment must be an integer"))?)
+                }
+                k => return Err(err(&format!("unknown kernel key '{k}'"))),
+            },
+        }
+    }
+    flush(&mut section, &mut nodes, &mut kernels);
+
+    // Assemble the spec.
+    let mut b = ClusterBuilder::new();
+    b.transport(transport).chunk_policy(chunking).profile(profile);
+    if let Some(seg) = default_segment {
+        b.default_segment(seg);
+    }
+
+    let mut node_ids: Vec<(String, u16)> = Vec::new();
+    for n in nodes {
+        let name = n.name.ok_or_else(|| Error::Config("node missing 'name'".into()))?;
+        let platform = match n.platform.as_deref() {
+            Some("sw") | None => Platform::Sw,
+            Some("hw") => Platform::Hw,
+            Some(p) => return Err(Error::Config(format!("unknown platform '{p}'"))),
+        };
+        let id = match n.address {
+            Some(addr) => b.node_at(&name, platform, &addr),
+            None => b.node(&name, platform),
+        };
+        node_ids.push((name, id));
+    }
+
+    for k in kernels {
+        let node_name =
+            k.node.ok_or_else(|| Error::Config("kernel missing 'node'".into()))?;
+        let node_id = node_ids
+            .iter()
+            .find(|(n, _)| *n == node_name)
+            .map(|(_, id)| *id)
+            .ok_or_else(|| Error::Config(format!("kernel references unknown node '{node_name}'")))?;
+        for _ in 0..k.count.max(1) {
+            match k.segment {
+                Some(seg) => b.kernel_with_segment(node_id, seg),
+                None => b.kernel(node_id),
+            };
+        }
+    }
+
+    b.build()
+}
+
+/// Load a cluster file from disk.
+pub fn load_cluster(path: &std::path::Path) -> Result<ClusterSpec> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::Config(format!("cannot read {}: {e}", path.display())))?;
+    parse_cluster(&text)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(raw: &str) -> std::result::Result<String, String> {
+    let raw = raw.trim();
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let inner = stripped
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        Ok(inner.to_string())
+    } else if raw.is_empty() {
+        Err("empty value".into())
+    } else {
+        Ok(raw.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample cluster
+transport = "tcp"
+chunking = "chunked"
+profile = "point_to_point"
+default_segment = 1048576
+
+[[node]]
+name = "cpu0"
+platform = "sw"
+address = "127.0.0.1:7100"
+
+[[node]]
+name = "fpga0"
+platform = "hw"
+address = "127.0.0.1:7101"
+
+[[kernel]]
+node = "cpu0"
+count = 2
+
+[[kernel]]
+node = "fpga0"
+segment = 4096
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let s = parse_cluster(SAMPLE).unwrap();
+        assert_eq!(s.transport, TransportKind::Tcp);
+        assert_eq!(s.chunk_policy, ChunkPolicy::Chunked);
+        assert_eq!(s.profile, ApiProfile::point_to_point());
+        assert_eq!(s.nodes.len(), 2);
+        assert_eq!(s.kernel_count(), 3);
+        assert_eq!(s.kernels_on(0).len(), 2);
+        assert_eq!(s.kernels[2].segment_size, 4096);
+        assert_eq!(s.kernels[0].segment_size, 1048576);
+        assert!(s.node(1).unwrap().platform.is_hw());
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        assert!(parse_cluster("bogus = 1").is_err());
+        assert!(parse_cluster("[[node]]\nwat = \"x\"").is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_node_reference() {
+        let text = "[[node]]\nname=\"a\"\n[[kernel]]\nnode=\"b\"";
+        assert!(parse_cluster(text).is_err());
+    }
+
+    #[test]
+    fn local_transport_needs_no_address() {
+        let text = "[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"";
+        let s = parse_cluster(text).unwrap();
+        assert_eq!(s.transport, TransportKind::Local);
+        assert_eq!(s.kernel_count(), 1);
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ignored() {
+        let text = "\n# hi\n[[node]]\nname = \"a\" # inline\n[[kernel]]\nnode = \"a\"\n";
+        assert!(parse_cluster(text).is_ok());
+    }
+}

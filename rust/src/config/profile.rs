@@ -1,0 +1,115 @@
+//! Modular API profiles — the paper's §V-A future work, implemented.
+//!
+//! Shoal as specified is a monolith: every node must be able to handle every
+//! message type, paying constant cost for conditions that are never true. An
+//! `ApiProfile` declares the subset of the specification an application uses;
+//! the runtime enforces it at the API boundary and the GAScore resource model
+//! (`gascore::resources`) prices only the enabled components.
+
+/// Individual API capabilities that can be switched on or off.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ApiProfile {
+    pub short: bool,
+    pub medium: bool,
+    pub long: bool,
+    pub strided: bool,
+    pub vectored: bool,
+    pub gets: bool,
+    pub barrier: bool,
+    pub user_handlers: bool,
+}
+
+impl Default for ApiProfile {
+    /// The full monolithic specification (paper default).
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+impl ApiProfile {
+    /// Everything enabled — THeGASNet-compatible monolith.
+    pub const fn full() -> Self {
+        ApiProfile {
+            short: true,
+            medium: true,
+            long: true,
+            strided: true,
+            vectored: true,
+            gets: true,
+            barrier: true,
+            user_handlers: true,
+        }
+    }
+
+    /// The paper's example: "enabling barriers and Medium messages only
+    /// creates a simple point-to-point communication protocol that can be
+    /// used as a thin layer on top of libGalapagos".
+    pub const fn point_to_point() -> Self {
+        ApiProfile {
+            short: true, // replies are Short messages; always needed
+            medium: true,
+            long: false,
+            strided: false,
+            vectored: false,
+            gets: false,
+            barrier: true,
+            user_handlers: false,
+        }
+    }
+
+    /// Remote-memory profile: Long put/get without Medium streaming.
+    pub const fn remote_memory() -> Self {
+        ApiProfile {
+            short: true,
+            medium: false,
+            long: true,
+            strided: true,
+            vectored: true,
+            gets: true,
+            barrier: true,
+            user_handlers: false,
+        }
+    }
+
+    /// Count of enabled message-type components (used by the resource model).
+    pub fn enabled_components(&self) -> usize {
+        [
+            self.short,
+            self.medium,
+            self.long,
+            self.strided,
+            self.vectored,
+            self.gets,
+            self.barrier,
+            self.user_handlers,
+        ]
+        .iter()
+        .filter(|&&b| b)
+        .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_profile_enables_everything() {
+        let p = ApiProfile::full();
+        assert!(p.short && p.medium && p.long && p.strided && p.vectored);
+        assert!(p.gets && p.barrier && p.user_handlers);
+        assert_eq!(p.enabled_components(), 8);
+    }
+
+    #[test]
+    fn p2p_profile_matches_paper_example() {
+        let p = ApiProfile::point_to_point();
+        assert!(p.medium && p.barrier && p.short);
+        assert!(!p.long && !p.gets && !p.strided && !p.vectored);
+    }
+
+    #[test]
+    fn default_is_full() {
+        assert_eq!(ApiProfile::default(), ApiProfile::full());
+    }
+}

@@ -1,0 +1,94 @@
+//! Error types for the Shoal library.
+
+use thiserror::Error;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// All errors that Shoal operations can produce.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A Galapagos packet exceeded the middleware maximum (9000 bytes, the
+    /// Ethernet jumbo-frame cap imposed by the hardware TCP/IP core — paper
+    /// §IV-C1 footnote 2).
+    #[error("packet of {got} bytes exceeds the Galapagos maximum of {max} bytes")]
+    PacketTooLarge { got: usize, max: usize },
+
+    /// An AM payload does not fit in a single packet and chunked transfers
+    /// are disabled (the paper's unimplemented resolution; we implement it
+    /// behind `ChunkPolicy::Chunked`).
+    #[error("AM payload of {payload} bytes cannot be sent in a single packet (limit {limit}); enable chunking")]
+    AmTooLarge { payload: usize, limit: usize },
+
+    /// Destination kernel ID is not present in the cluster map.
+    #[error("unknown kernel id {0}")]
+    UnknownKernel(u16),
+
+    /// Node ID out of range for this cluster.
+    #[error("unknown node id {0}")]
+    UnknownNode(u16),
+
+    /// Handler ID has no registered handler function.
+    #[error("no handler registered for handler id {0}")]
+    UnknownHandler(u8),
+
+    /// A malformed Active Message header or truncated packet was received.
+    #[error("malformed active message: {0}")]
+    MalformedAm(String),
+
+    /// Access outside a kernel's memory segment.
+    #[error("segment access out of bounds: offset {offset} + len {len} > segment size {size}")]
+    SegmentOutOfBounds { offset: u64, len: usize, size: usize },
+
+    /// PGAS allocation failure.
+    #[error("out of segment memory allocating {0} bytes")]
+    OutOfMemory(usize),
+
+    /// Strided descriptor inconsistent with payload length.
+    #[error("invalid strided/vectored descriptor: {0}")]
+    BadDescriptor(String),
+
+    /// The channel to a kernel, router or handler thread is closed.
+    #[error("channel to {0} disconnected")]
+    Disconnected(&'static str),
+
+    /// Configuration file parse or validation error.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Transport-level I/O error.
+    #[error("transport error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// The hardware UDP core cannot handle IP-fragmented datagrams
+    /// (paper §IV-B1): payload + headers exceeded the MTU.
+    #[error("hardware UDP core cannot send/receive fragmented datagram ({0} bytes > MTU)")]
+    UdpFragmentation(usize),
+
+    /// XLA / PJRT runtime error.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Artifact manifest missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// An operation is not permitted by the active API profile
+    /// (paper §V-A modular-API future work, implemented here).
+    #[error("message type {0} is disabled by the active API profile")]
+    ProfileViolation(&'static str),
+
+    /// Timed out waiting for replies / barrier / recv.
+    #[error("timeout waiting for {0}")]
+    Timeout(&'static str),
+
+    /// Catch-all for JSON parse errors in manifests and reports.
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

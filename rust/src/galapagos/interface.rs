@@ -1,0 +1,103 @@
+//! Galapagos Interfaces (GIs).
+//!
+//! libGalapagos hands each kernel a pair of stream interfaces to send and
+//! receive data (paper §III-B: "a pair of Galapagos Interfaces (GIs) to send
+//! and receive data from other kernels"). Here a GI is an mpsc channel pair:
+//! `send` goes to the node router, `recv` is this kernel's inbox, filled by
+//! the router (SW nodes) or the GAScore (HW nodes).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
+
+use super::packet::Packet;
+use crate::error::{Error, Result};
+use crate::galapagos::router::RouterMsg;
+
+/// The stream pair a kernel uses to communicate.
+pub struct GalapagosInterface {
+    /// This kernel's id (destination addressing uses globally unique ids).
+    pub kernel_id: u16,
+    to_router: Sender<RouterMsg>,
+    inbox: Receiver<Packet>,
+}
+
+impl GalapagosInterface {
+    pub(crate) fn new(kernel_id: u16, to_router: Sender<RouterMsg>, inbox: Receiver<Packet>) -> Self {
+        Self { kernel_id, to_router, inbox }
+    }
+
+    /// Send a packet toward its destination kernel (local or remote — the
+    /// router decides).
+    pub fn send(&self, pkt: Packet) -> Result<()> {
+        self.to_router
+            .send(RouterMsg::FromKernel(pkt))
+            .map_err(|_| Error::Disconnected("router"))
+    }
+
+    /// Blocking receive.
+    pub fn recv(&self) -> Result<Packet> {
+        self.inbox.recv().map_err(|_| Error::Disconnected("inbox"))
+    }
+
+    /// Receive with a timeout.
+    pub fn recv_timeout(&self, dur: Duration) -> Result<Packet> {
+        self.inbox.recv_timeout(dur).map_err(|e| match e {
+            RecvTimeoutError::Timeout => Error::Timeout("packet receive"),
+            RecvTimeoutError::Disconnected => Error::Disconnected("inbox"),
+        })
+    }
+
+    /// Non-blocking receive; `Ok(None)` when no packet is waiting.
+    pub fn try_recv(&self) -> Result<Option<Packet>> {
+        match self.inbox.try_recv() {
+            Ok(p) => Ok(Some(p)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Err(Error::Disconnected("inbox"))
+            }
+        }
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn pair() -> (GalapagosInterface, Receiver<RouterMsg>, Sender<Packet>) {
+        let (to_router, router_rx) = mpsc::channel();
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        (GalapagosInterface::new(5, to_router, inbox_rx), router_rx, inbox_tx)
+    }
+
+    #[test]
+    fn send_reaches_router() {
+        let (gi, router_rx, _inbox) = pair();
+        gi.send(Packet::new(1, 5, vec![42]).unwrap()).unwrap();
+        match router_rx.recv().unwrap() {
+            RouterMsg::FromKernel(p) => assert_eq!(p.data, vec![42]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_from_inbox() {
+        let (gi, _router_rx, inbox) = pair();
+        inbox.send(Packet::new(5, 1, vec![7]).unwrap()).unwrap();
+        assert_eq!(gi.recv().unwrap().data, vec![7]);
+    }
+
+    #[test]
+    fn try_recv_empty_is_none() {
+        let (gi, _router_rx, _inbox) = pair();
+        assert!(gi.try_recv().unwrap().is_none());
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (gi, _router_rx, _inbox) = pair();
+        let r = gi.recv_timeout(Duration::from_millis(10));
+        assert!(matches!(r, Err(Error::Timeout(_))));
+    }
+}

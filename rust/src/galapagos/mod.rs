@@ -1,0 +1,28 @@
+//! Galapagos-style middleware substrate.
+//!
+//! The paper builds Shoal on Galapagos [12], which provides node/kernel
+//! identity, per-node routing, and pluggable network transports behind a
+//! stream interface. We reproduce that layer here:
+//!
+//! - [`packet`] — the middleware packet: destination/source kernel ids plus a
+//!   size side-channel (the AXIS `TUSER` metadata in hardware), capped at
+//!   9000 bytes (Ethernet jumbo frame, the limit the hardware TCP/IP core
+//!   imposes — paper footnote 2).
+//! - [`interface`] — `GalapagosInterface` (GI): the stream pair each kernel
+//!   uses to exchange packets with its node's router.
+//! - [`router`] — the per-node router thread: local kernels are delivered
+//!   in-process; packets for kernels on other nodes go to the transport.
+//! - [`transport`] — `local` (in-process fabric), `tcp`, `udp` drivers over
+//!   `std::net`.
+//! - [`node`] — node lifecycle: builds the router, binds transports, hands
+//!   out kernel interfaces.
+
+pub mod interface;
+pub mod node;
+pub mod packet;
+pub mod router;
+pub mod transport;
+
+pub use interface::GalapagosInterface;
+pub use node::GalapagosNode;
+pub use packet::{Packet, MAX_PACKET_BYTES, MAX_PAYLOAD_BYTES, WIRE_HEADER_BYTES};

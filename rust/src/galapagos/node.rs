@@ -1,0 +1,299 @@
+//! Galapagos node lifecycle.
+//!
+//! A node is "a processor, FPGA or another device in a cluster that has a
+//! unique network address"; each node hosts one or more kernels (paper
+//! §II-B). `GalapagosNode` wires together the router, the transport for the
+//! cluster's middleware protocol, and per-kernel delivery channels.
+//!
+//! Construction is two-phase so multi-node clusters can use OS-assigned
+//! ports: `bind` reserves the network endpoint (and reports the actual
+//! address), `start` connects egress to every peer and launches the router.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{self, Receiver, Sender};
+
+use super::interface::GalapagosInterface;
+use super::packet::Packet;
+use super::router::{Router, RouterMsg, RouterStats, RoutingTable};
+use super::transport::local::LocalFabric;
+use super::transport::tcp::{TcpEgress, TcpIngress};
+use super::transport::udp::{UdpEgress, UdpIngress};
+use super::transport::Egress;
+use crate::config::{ClusterSpec, TransportKind};
+use crate::error::{Error, Result};
+
+/// A node that has bound its network endpoint but not yet started routing.
+pub struct BoundNode {
+    node_id: u16,
+    spec: ClusterSpec,
+    router_tx: Sender<RouterMsg>,
+    router_rx: Receiver<RouterMsg>,
+    tcp_ingress: Option<TcpIngress>,
+    udp_socket: Option<std::net::UdpSocket>,
+    udp_hw_core: bool,
+    /// The address peers should use to reach this node.
+    pub advertised_addr: Option<String>,
+}
+
+impl BoundNode {
+    /// The node this endpoint belongs to.
+    pub fn node_id(&self) -> u16 {
+        self.node_id
+    }
+
+    /// Bind the node's ingress endpoint according to the cluster transport.
+    pub fn bind(spec: &ClusterSpec, node_id: u16) -> Result<BoundNode> {
+        let node = spec.node(node_id)?.clone();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut tcp_ingress = None;
+        let mut udp_socket = None;
+        let mut advertised = None;
+        let udp_hw_core = node.platform.is_hw();
+
+        match spec.transport {
+            TransportKind::Local => {}
+            TransportKind::Tcp => {
+                let addr = node
+                    .address
+                    .as_deref()
+                    .ok_or_else(|| Error::Config(format!("node {} has no address", node.name)))?;
+                let ing = TcpIngress::bind(addr, router_tx.clone())?;
+                advertised = Some(ing.local_addr().to_string());
+                tcp_ingress = Some(ing);
+            }
+            TransportKind::Udp => {
+                let addr = node
+                    .address
+                    .as_deref()
+                    .ok_or_else(|| Error::Config(format!("node {} has no address", node.name)))?;
+                let sock = std::net::UdpSocket::bind(addr)?;
+                advertised = Some(sock.local_addr()?.to_string());
+                udp_socket = Some(sock);
+            }
+        }
+
+        Ok(BoundNode {
+            node_id,
+            spec: spec.clone(),
+            router_tx,
+            router_rx,
+            tcp_ingress,
+            udp_socket,
+            udp_hw_core,
+            advertised_addr: advertised,
+        })
+    }
+
+    /// Launch the router with a default delivery map: a fresh channel per
+    /// local kernel. Returns the node plus the per-kernel receivers.
+    pub fn start(
+        self,
+        peer_addrs: HashMap<u16, String>,
+        fabric: &LocalFabric,
+    ) -> Result<(GalapagosNode, HashMap<u16, Receiver<Packet>>)> {
+        let mut delivery: HashMap<u16, Sender<Packet>> = HashMap::new();
+        let mut receivers: HashMap<u16, Receiver<Packet>> = HashMap::new();
+        for kid in self.spec.kernels_on(self.node_id) {
+            let (tx, rx) = mpsc::channel();
+            delivery.insert(kid, tx);
+            receivers.insert(kid, rx);
+        }
+        let node = self.start_with_delivery(peer_addrs, fabric, delivery)?;
+        Ok((node, receivers))
+    }
+
+    /// Launch the router with a caller-provided delivery map. `peer_addrs`
+    /// maps every *other* node id to its advertised address (TCP/UDP
+    /// transports); `fabric` connects routers for the Local transport.
+    ///
+    /// Software nodes use one channel per kernel (handler thread per kernel,
+    /// §III-B); hardware nodes route *all* local kernels into a single
+    /// channel — the GAScore's one "From Network" AXIS interface shared by
+    /// every kernel on the FPGA (§III-C).
+    pub fn start_with_delivery(
+        self,
+        peer_addrs: HashMap<u16, String>,
+        fabric: &LocalFabric,
+        delivery: HashMap<u16, Sender<Packet>>,
+    ) -> Result<GalapagosNode> {
+        let table = RoutingTable::new(self.spec.kernels.iter().map(|k| (k.id, k.node)));
+
+        // Ingress registration + egress construction.
+        let egress: Box<dyn Egress> = match self.spec.transport {
+            TransportKind::Local => {
+                fabric.register(self.node_id, self.router_tx.clone());
+                Box::new(fabric.egress())
+            }
+            TransportKind::Tcp => Box::new(TcpEgress::new(peer_addrs)),
+            TransportKind::Udp => {
+                let sock = self
+                    .udp_socket
+                    .as_ref()
+                    .expect("udp transport bound a socket")
+                    .try_clone()?;
+                Box::new(UdpEgress::new(sock, peer_addrs, self.udp_hw_core))
+            }
+        };
+
+        let udp_ingress = match (&self.spec.transport, self.udp_socket) {
+            (TransportKind::Udp, Some(sock)) => {
+                Some(UdpIngress::start(sock, self.router_tx.clone(), self.udp_hw_core)?)
+            }
+            _ => None,
+        };
+
+        let router = Router::spawn(
+            self.node_id,
+            table,
+            delivery,
+            egress,
+            self.router_rx,
+            self.router_tx.clone(),
+        );
+
+        Ok(GalapagosNode {
+            node_id: self.node_id,
+            router,
+            _tcp_ingress: self.tcp_ingress,
+            _udp_ingress: udp_ingress,
+        })
+    }
+}
+
+/// A running Galapagos node.
+pub struct GalapagosNode {
+    pub node_id: u16,
+    router: Router,
+    _tcp_ingress: Option<TcpIngress>,
+    _udp_ingress: Option<UdpIngress>,
+}
+
+impl GalapagosNode {
+    /// Sender into this node's router (used to construct kernel interfaces).
+    pub fn router_tx(&self) -> Sender<RouterMsg> {
+        self.router.tx.clone()
+    }
+
+    /// Router statistics (delivered/forwarded/dropped counts).
+    pub fn stats(&self) -> &RouterStats {
+        &self.router.stats
+    }
+
+    /// Build a kernel's stream interface from its delivery receiver.
+    pub fn interface(&self, kernel_id: u16, inbox: Receiver<Packet>) -> GalapagosInterface {
+        GalapagosInterface::new(kernel_id, self.router.tx.clone(), inbox)
+    }
+
+    /// Stop the router thread (transports stop on drop).
+    pub fn shutdown(&mut self) {
+        self.router.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterBuilder, Platform};
+
+    #[test]
+    fn single_node_local_delivery() {
+        let spec = ClusterSpec::single_node("n0", 2);
+        let fabric = LocalFabric::new();
+        let bound = BoundNode::bind(&spec, 0).unwrap();
+        let (node, mut rxs) = bound.start(HashMap::new(), &fabric).unwrap();
+
+        let gi0 = node.interface(0, rxs.remove(&0).unwrap());
+        let gi1 = node.interface(1, rxs.remove(&1).unwrap());
+
+        gi0.send(Packet::new(1, 0, vec![11]).unwrap()).unwrap();
+        let got = gi1.recv_timeout(std::time::Duration::from_secs(1)).unwrap();
+        assert_eq!(got.data, vec![11]);
+        assert_eq!(got.src, 0);
+    }
+
+    #[test]
+    fn two_nodes_over_local_fabric() {
+        let mut b = ClusterBuilder::new();
+        let n0 = b.node("a", Platform::Sw);
+        let n1 = b.node("b", Platform::Sw);
+        let k0 = b.kernel(n0);
+        let k1 = b.kernel(n1);
+        let spec = b.build().unwrap();
+
+        let fabric = LocalFabric::new();
+        let b0 = BoundNode::bind(&spec, n0).unwrap();
+        let b1 = BoundNode::bind(&spec, n1).unwrap();
+        let (node0, mut rx0) = b0.start(HashMap::new(), &fabric).unwrap();
+        let (node1, mut rx1) = b1.start(HashMap::new(), &fabric).unwrap();
+
+        let gi0 = node0.interface(k0, rx0.remove(&k0).unwrap());
+        let gi1 = node1.interface(k1, rx1.remove(&k1).unwrap());
+
+        gi0.send(Packet::new(k1, k0, vec![1, 2]).unwrap()).unwrap();
+        assert_eq!(gi1.recv_timeout(std::time::Duration::from_secs(1)).unwrap().data, vec![1, 2]);
+
+        gi1.send(Packet::new(k0, k1, vec![3]).unwrap()).unwrap();
+        assert_eq!(gi0.recv_timeout(std::time::Duration::from_secs(1)).unwrap().data, vec![3]);
+    }
+
+    #[test]
+    fn two_nodes_over_tcp_loopback() {
+        let mut b = ClusterBuilder::new();
+        b.transport(TransportKind::Tcp);
+        let n0 = b.node_at("a", Platform::Sw, "127.0.0.1:0");
+        let n1 = b.node_at("b", Platform::Sw, "127.0.0.1:0");
+        let k0 = b.kernel(n0);
+        let k1 = b.kernel(n1);
+        let spec = b.build().unwrap();
+
+        let fabric = LocalFabric::new();
+        let b0 = BoundNode::bind(&spec, n0).unwrap();
+        let b1 = BoundNode::bind(&spec, n1).unwrap();
+        let a0 = b0.advertised_addr.clone().unwrap();
+        let a1 = b1.advertised_addr.clone().unwrap();
+
+        let (node0, mut rx0) =
+            b0.start(HashMap::from([(n1, a1.clone())]), &fabric).unwrap();
+        let (node1, mut rx1) =
+            b1.start(HashMap::from([(n0, a0.clone())]), &fabric).unwrap();
+
+        let gi0 = node0.interface(k0, rx0.remove(&k0).unwrap());
+        let gi1 = node1.interface(k1, rx1.remove(&k1).unwrap());
+
+        gi0.send(Packet::new(k1, k0, vec![9; 1000]).unwrap()).unwrap();
+        let got = gi1.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        assert_eq!(got.data, vec![9; 1000]);
+
+        gi1.send(Packet::new(k0, k1, vec![4]).unwrap()).unwrap();
+        assert_eq!(gi0.recv_timeout(std::time::Duration::from_secs(5)).unwrap().data, vec![4]);
+    }
+
+    #[test]
+    fn two_nodes_over_udp_loopback() {
+        let mut b = ClusterBuilder::new();
+        b.transport(TransportKind::Udp);
+        let n0 = b.node_at("a", Platform::Sw, "127.0.0.1:0");
+        let n1 = b.node_at("b", Platform::Sw, "127.0.0.1:0");
+        let k0 = b.kernel(n0);
+        let k1 = b.kernel(n1);
+        let spec = b.build().unwrap();
+
+        let fabric = LocalFabric::new();
+        let b0 = BoundNode::bind(&spec, n0).unwrap();
+        let b1 = BoundNode::bind(&spec, n1).unwrap();
+        let a1 = b1.advertised_addr.clone().unwrap();
+        let a0 = b0.advertised_addr.clone().unwrap();
+
+        let (node0, mut rx0) = b0.start(HashMap::from([(n1, a1)]), &fabric).unwrap();
+        let (node1, mut rx1) = b1.start(HashMap::from([(n0, a0)]), &fabric).unwrap();
+
+        let gi0 = node0.interface(k0, rx0.remove(&k0).unwrap());
+        let gi1 = node1.interface(k1, rx1.remove(&k1).unwrap());
+
+        gi0.send(Packet::new(k1, k0, vec![5; 128]).unwrap()).unwrap();
+        assert_eq!(
+            gi1.recv_timeout(std::time::Duration::from_secs(5)).unwrap().data,
+            vec![5; 128]
+        );
+    }
+}

@@ -1,0 +1,141 @@
+//! The Galapagos middleware packet.
+//!
+//! In hardware this is an AXI4-Stream flit sequence with a `TDEST` routing
+//! field and a `TUSER` side channel carrying the message size in words; in
+//! software (libGalapagos) it is a routed message between kernel streams. The
+//! representation here carries both roles: `dest`/`src` kernel ids and a
+//! length-checked payload.
+
+use crate::error::{Error, Result};
+
+/// Maximum size of one middleware packet on the wire, in bytes.
+///
+/// libGalapagos enforces a 9000-byte maximum packet — the Ethernet
+/// jumbo-frame size — due to limitations of the hardware TCP/IP core
+/// (paper §IV-C1, footnote 2).
+pub const MAX_PACKET_BYTES: usize = 9000;
+
+/// Bytes of wire header: dest u16 + src u16 + payload length u32.
+pub const WIRE_HEADER_BYTES: usize = 8;
+
+/// Maximum payload a single packet can carry.
+pub const MAX_PAYLOAD_BYTES: usize = MAX_PACKET_BYTES - WIRE_HEADER_BYTES;
+
+/// Word size of the AXIS data path (64-bit streams throughout the GAScore).
+pub const WORD_BYTES: usize = 8;
+
+/// A middleware packet routed between kernels.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Packet {
+    /// Destination kernel id (globally unique, Galapagos-assigned).
+    pub dest: u16,
+    /// Source kernel id.
+    pub src: u16,
+    /// Message bytes (Shoal AM header + payload).
+    pub data: Vec<u8>,
+}
+
+impl Packet {
+    /// Construct a packet, enforcing the middleware size cap.
+    pub fn new(dest: u16, src: u16, data: Vec<u8>) -> Result<Packet> {
+        if WIRE_HEADER_BYTES + data.len() > MAX_PACKET_BYTES {
+            return Err(Error::PacketTooLarge {
+                got: WIRE_HEADER_BYTES + data.len(),
+                max: MAX_PACKET_BYTES,
+            });
+        }
+        Ok(Packet { dest, src, data })
+    }
+
+    /// Total bytes this packet occupies on the wire.
+    pub fn wire_len(&self) -> usize {
+        WIRE_HEADER_BYTES + self.data.len()
+    }
+
+    /// The `TUSER` size metadata: message size in 64-bit words, rounded up
+    /// (what the GAScore `add_size` stage computes — §III-C step 4).
+    pub fn size_words(&self) -> u32 {
+        self.data.len().div_ceil(WORD_BYTES) as u32
+    }
+
+    /// Serialize to wire bytes (length-prefixed framing is added by the TCP
+    /// transport; UDP sends this buffer as one datagram).
+    pub fn to_wire(&self) -> Vec<u8> {
+        let mut w = Vec::with_capacity(self.wire_len());
+        w.extend_from_slice(&self.dest.to_le_bytes());
+        w.extend_from_slice(&self.src.to_le_bytes());
+        w.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
+        w.extend_from_slice(&self.data);
+        w
+    }
+
+    /// Parse from wire bytes.
+    pub fn from_wire(buf: &[u8]) -> Result<Packet> {
+        if buf.len() < WIRE_HEADER_BYTES {
+            return Err(Error::MalformedAm(format!(
+                "wire packet too short: {} bytes",
+                buf.len()
+            )));
+        }
+        if buf.len() > MAX_PACKET_BYTES {
+            return Err(Error::PacketTooLarge { got: buf.len(), max: MAX_PACKET_BYTES });
+        }
+        let dest = u16::from_le_bytes([buf[0], buf[1]]);
+        let src = u16::from_le_bytes([buf[2], buf[3]]);
+        let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+        if buf.len() != WIRE_HEADER_BYTES + len {
+            return Err(Error::MalformedAm(format!(
+                "wire length mismatch: header says {len}, buffer has {}",
+                buf.len() - WIRE_HEADER_BYTES
+            )));
+        }
+        Ok(Packet { dest, src, data: buf[WIRE_HEADER_BYTES..].to_vec() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_roundtrip() {
+        let p = Packet::new(3, 7, vec![1, 2, 3, 4, 5]).unwrap();
+        let w = p.to_wire();
+        assert_eq!(w.len(), p.wire_len());
+        let q = Packet::from_wire(&w).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn enforces_max_size() {
+        let ok = Packet::new(0, 0, vec![0; MAX_PAYLOAD_BYTES]);
+        assert!(ok.is_ok());
+        let too_big = Packet::new(0, 0, vec![0; MAX_PAYLOAD_BYTES + 1]);
+        assert!(matches!(too_big, Err(Error::PacketTooLarge { .. })));
+    }
+
+    #[test]
+    fn size_words_rounds_up() {
+        assert_eq!(Packet::new(0, 0, vec![0; 8]).unwrap().size_words(), 1);
+        assert_eq!(Packet::new(0, 0, vec![0; 9]).unwrap().size_words(), 2);
+        assert_eq!(Packet::new(0, 0, vec![]).unwrap().size_words(), 0);
+    }
+
+    #[test]
+    fn from_wire_rejects_garbage() {
+        assert!(Packet::from_wire(&[1, 2, 3]).is_err());
+        // Length field lies about the payload size.
+        let mut w = Packet::new(1, 2, vec![9; 4]).unwrap().to_wire();
+        w.truncate(w.len() - 1);
+        assert!(Packet::from_wire(&w).is_err());
+    }
+
+    #[test]
+    fn empty_payload_ok() {
+        let p = Packet::new(1, 2, vec![]).unwrap();
+        let q = Packet::from_wire(&p.to_wire()).unwrap();
+        assert_eq!(q.data.len(), 0);
+        assert_eq!(q.dest, 1);
+        assert_eq!(q.src, 2);
+    }
+}

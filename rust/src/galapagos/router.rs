@@ -1,0 +1,243 @@
+//! The per-node router.
+//!
+//! "All local kernels on the node communicate using a router thread in
+//! libGalapagos while data for external kernels are routed from this router
+//! to an external driver such as TCP" (paper §III-B). The router owns a map
+//! from *local* kernel id → delivery sender, a kernel→node table for the
+//! whole cluster, and an egress driver for remote traffic.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::packet::Packet;
+use super::transport::Egress;
+use crate::error::{Error, Result};
+
+/// Messages processed by the router thread.
+#[derive(Debug)]
+pub enum RouterMsg {
+    /// Sent by a local kernel (or its handler thread / GAScore) toward any
+    /// destination.
+    FromKernel(Packet),
+    /// Arrived from the network (transport ingress).
+    FromNetwork(Packet),
+    /// Stop the router thread.
+    Shutdown,
+}
+
+/// Counters exposed for tests and the bench harness.
+#[derive(Debug, Default)]
+pub struct RouterStats {
+    pub local_delivered: AtomicU64,
+    pub forwarded: AtomicU64,
+    pub received_external: AtomicU64,
+    pub dropped_unknown: AtomicU64,
+}
+
+/// Routing table: kernel id → node id for every kernel in the cluster.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingTable {
+    map: HashMap<u16, u16>,
+}
+
+impl RoutingTable {
+    pub fn new(entries: impl IntoIterator<Item = (u16, u16)>) -> Self {
+        Self { map: entries.into_iter().collect() }
+    }
+
+    pub fn node_of(&self, kernel: u16) -> Result<u16> {
+        self.map.get(&kernel).copied().ok_or(Error::UnknownKernel(kernel))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// Handle to a running router thread.
+pub struct Router {
+    pub tx: Sender<RouterMsg>,
+    pub stats: Arc<RouterStats>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Router {
+    /// Spawn the router thread for `node_id`.
+    ///
+    /// `local` maps each local kernel id to the sender that delivers into
+    /// that kernel's runtime (handler thread inbox on SW nodes, GAScore
+    /// ingress on HW nodes). `egress` carries packets for other nodes.
+    pub fn spawn(
+        node_id: u16,
+        table: RoutingTable,
+        local: HashMap<u16, Sender<Packet>>,
+        mut egress: Box<dyn Egress>,
+        rx: Receiver<RouterMsg>,
+        tx: Sender<RouterMsg>,
+    ) -> Router {
+        let stats = Arc::new(RouterStats::default());
+        let stats2 = Arc::clone(&stats);
+        let handle = std::thread::Builder::new()
+            .name(format!("router-n{node_id}"))
+            .spawn(move || {
+                Self::run(node_id, table, local, &mut *egress, rx, &stats2);
+            })
+            .expect("spawn router thread");
+        Router { tx, stats, handle: Some(handle) }
+    }
+
+    fn run(
+        node_id: u16,
+        table: RoutingTable,
+        local: HashMap<u16, Sender<Packet>>,
+        egress: &mut dyn Egress,
+        rx: Receiver<RouterMsg>,
+        stats: &RouterStats,
+    ) {
+        while let Ok(msg) = rx.recv() {
+            match msg {
+                RouterMsg::Shutdown => break,
+                RouterMsg::FromKernel(pkt) => {
+                    match table.node_of(pkt.dest) {
+                        Ok(dest_node) if dest_node == node_id => {
+                            Self::deliver_local(&local, pkt, stats);
+                        }
+                        Ok(dest_node) => match egress.send(dest_node, pkt) {
+                            Ok(()) => {
+                                stats.forwarded.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                log::warn!("router n{node_id}: egress failed: {e}");
+                                stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
+                            }
+                        },
+                        Err(_) => {
+                            log::warn!(
+                                "router n{node_id}: dropping packet for unknown kernel {}",
+                                pkt.dest
+                            );
+                            stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                RouterMsg::FromNetwork(pkt) => {
+                    stats.received_external.fetch_add(1, Ordering::Relaxed);
+                    Self::deliver_local(&local, pkt, stats);
+                }
+            }
+        }
+    }
+
+    fn deliver_local(local: &HashMap<u16, Sender<Packet>>, pkt: Packet, stats: &RouterStats) {
+        match local.get(&pkt.dest) {
+            Some(tx) => {
+                if tx.send(pkt).is_ok() {
+                    stats.local_delivered.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            None => {
+                log::warn!("packet for kernel {} arrived at wrong node", pkt.dest);
+                stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Ask the router to stop and join its thread.
+    pub fn shutdown(&mut self) {
+        let _ = self.tx.send(RouterMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::galapagos::transport::NullEgress;
+    use std::sync::mpsc;
+
+    fn table2() -> RoutingTable {
+        RoutingTable::new([(0u16, 0u16), (1, 0), (2, 1)])
+    }
+
+    #[test]
+    fn routes_to_local_kernel() {
+        let (tx, rx) = mpsc::channel();
+        let (k0_tx, k0_rx) = mpsc::channel();
+        let mut local = HashMap::new();
+        local.insert(0u16, k0_tx);
+        let mut r = Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone());
+        tx.send(RouterMsg::FromKernel(Packet::new(0, 1, vec![9]).unwrap())).unwrap();
+        let got = k0_rx.recv_timeout(std::time::Duration::from_secs(1)).unwrap();
+        assert_eq!(got.data, vec![9]);
+        r.shutdown();
+        assert_eq!(r.stats.local_delivered.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn forwards_remote_to_egress() {
+        #[derive(Default)]
+        struct Cap(std::sync::Arc<std::sync::Mutex<Vec<(u16, Packet)>>>);
+        impl Egress for Cap {
+            fn send(&mut self, node: u16, pkt: Packet) -> Result<()> {
+                self.0.lock().unwrap().push((node, pkt));
+                Ok(())
+            }
+        }
+        let cap = Cap::default();
+        let sink = std::sync::Arc::clone(&cap.0);
+        let (tx, rx) = mpsc::channel();
+        let mut r = Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone());
+        tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![1]).unwrap())).unwrap();
+        // Wait for processing.
+        for _ in 0..100 {
+            if !sink.lock().unwrap().is_empty() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        r.shutdown();
+        let got = sink.lock().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, 1); // node 1 hosts kernel 2
+    }
+
+    #[test]
+    fn drops_unknown_kernel() {
+        let (tx, rx) = mpsc::channel();
+        let mut r =
+            Router::spawn(0, table2(), HashMap::new(), Box::new(NullEgress), rx, tx.clone());
+        tx.send(RouterMsg::FromKernel(Packet::new(99, 0, vec![]).unwrap())).unwrap();
+        r.shutdown();
+        assert_eq!(r.stats.dropped_unknown.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn network_packets_delivered_locally() {
+        let (tx, rx) = mpsc::channel();
+        let (k1_tx, k1_rx) = mpsc::channel();
+        let mut local = HashMap::new();
+        local.insert(1u16, k1_tx);
+        let mut r = Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone());
+        tx.send(RouterMsg::FromNetwork(Packet::new(1, 2, vec![5]).unwrap())).unwrap();
+        assert_eq!(k1_rx.recv_timeout(std::time::Duration::from_secs(1)).unwrap().data, vec![5]);
+        r.shutdown();
+        assert_eq!(r.stats.received_external.load(Ordering::Relaxed), 1);
+    }
+}

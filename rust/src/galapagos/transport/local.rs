@@ -1,0 +1,79 @@
+//! In-process fabric: connects routers in the same process directly.
+//!
+//! Used for single-process clusters (the common test/bench topology) — the
+//! analogue of libGalapagos routing between kernels of one application
+//! process, generalized to connect multiple logical "nodes" without sockets.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+
+use super::Egress;
+use crate::error::{Error, Result};
+use crate::galapagos::packet::Packet;
+use crate::galapagos::router::RouterMsg;
+
+/// Shared registry of router ingress senders, one per node.
+#[derive(Clone, Default)]
+pub struct LocalFabric {
+    inner: Arc<Mutex<HashMap<u16, Sender<RouterMsg>>>>,
+}
+
+impl LocalFabric {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register `node`'s router ingress.
+    pub fn register(&self, node: u16, tx: Sender<RouterMsg>) {
+        self.inner.lock().unwrap().insert(node, tx);
+    }
+
+    /// Create the egress half for one node.
+    pub fn egress(&self) -> LocalEgress {
+        LocalEgress { fabric: self.clone() }
+    }
+}
+
+/// Egress that hands packets straight to the destination router's queue.
+pub struct LocalEgress {
+    fabric: LocalFabric,
+}
+
+impl Egress for LocalEgress {
+    fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()> {
+        let guard = self.fabric.inner.lock().unwrap();
+        let tx = guard.get(&dest_node).ok_or(Error::UnknownNode(dest_node))?;
+        tx.send(RouterMsg::FromNetwork(pkt))
+            .map_err(|_| Error::Disconnected("remote router"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn delivers_between_registered_nodes() {
+        let fabric = LocalFabric::new();
+        let (tx1, rx1) = mpsc::channel();
+        fabric.register(1, tx1);
+        let mut egress = fabric.egress();
+        egress.send(1, Packet::new(2, 0, vec![8]).unwrap()).unwrap();
+        match rx1.recv().unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![8]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_node_errors() {
+        let fabric = LocalFabric::new();
+        let mut egress = fabric.egress();
+        assert!(matches!(
+            egress.send(7, Packet::new(0, 0, vec![]).unwrap()),
+            Err(Error::UnknownNode(7))
+        ));
+    }
+}

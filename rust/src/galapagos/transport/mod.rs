@@ -1,0 +1,36 @@
+//! Network transports under the Galapagos middleware layer.
+//!
+//! "Galapagos currently supports TCP, UDP and raw Ethernet packets for
+//! communication — which can be chosen in the Middleware layer and changed
+//! transparently to the application" (paper §II-B2). The `Egress` trait is
+//! that choice point: routers send remote packets through it, while each
+//! transport's ingress side feeds received packets back into the router.
+//!
+//! Implementations:
+//! - [`local`]  — in-process fabric connecting routers directly (single
+//!   process, no sockets); also the backend for same-node communication.
+//! - [`tcp`]   — length-prefixed frames over `std::net::TcpStream`, one
+//!   lazily-established connection per peer node.
+//! - [`udp`]   — one datagram per packet over `std::net::UdpSocket`.
+
+pub mod local;
+pub mod tcp;
+pub mod udp;
+
+use super::packet::Packet;
+use crate::error::Result;
+
+/// Outbound half of a transport: deliver `pkt` to `dest_node`.
+pub trait Egress: Send {
+    fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()>;
+}
+
+/// Egress that rejects everything — used by single-node clusters where no
+/// remote destinations exist, and by router unit tests.
+pub struct NullEgress;
+
+impl Egress for NullEgress {
+    fn send(&mut self, dest_node: u16, _pkt: Packet) -> Result<()> {
+        Err(crate::error::Error::UnknownNode(dest_node))
+    }
+}

@@ -1,0 +1,261 @@
+//! TCP transport: length-prefixed packet frames over `std::net`.
+//!
+//! Each node binds a listener at its configured address. Outbound
+//! connections are established lazily per peer and cached. Frames are
+//! `u32` little-endian wire length + `Packet::to_wire()` bytes. `TCP_NODELAY`
+//! is set — the microbenchmarks measure per-message latency and Nagle would
+//! dominate it.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::Sender;
+use std::thread::JoinHandle;
+
+use super::Egress;
+use crate::error::{Error, Result};
+use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
+use crate::galapagos::router::RouterMsg;
+
+/// Outbound half: per-peer cached connections.
+pub struct TcpEgress {
+    /// node id → address, for every peer node.
+    peers: HashMap<u16, String>,
+    conns: HashMap<u16, TcpStream>,
+}
+
+impl TcpEgress {
+    pub fn new(peers: HashMap<u16, String>) -> Self {
+        Self { peers, conns: HashMap::new() }
+    }
+
+    fn conn(&mut self, node: u16) -> Result<&mut TcpStream> {
+        if !self.conns.contains_key(&node) {
+            let addr = self.peers.get(&node).ok_or(Error::UnknownNode(node))?;
+            // The destination node's listener may not be up yet during
+            // cluster launch; retry briefly.
+            let mut last_err: Option<std::io::Error> = None;
+            for _ in 0..50 {
+                match TcpStream::connect(addr) {
+                    Ok(s) => {
+                        s.set_nodelay(true)?;
+                        self.conns.insert(node, s);
+                        last_err = None;
+                        break;
+                    }
+                    Err(e) => {
+                        last_err = Some(e);
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                }
+            }
+            if let Some(e) = last_err {
+                return Err(Error::Io(e));
+            }
+        }
+        Ok(self.conns.get_mut(&node).unwrap())
+    }
+}
+
+impl Egress for TcpEgress {
+    fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()> {
+        let wire = pkt.to_wire();
+        let stream = self.conn(dest_node)?;
+        let mut frame = Vec::with_capacity(4 + wire.len());
+        frame.extend_from_slice(&(wire.len() as u32).to_le_bytes());
+        frame.extend_from_slice(&wire);
+        if let Err(e) = stream.write_all(&frame) {
+            // Connection died; drop it so the next send reconnects.
+            self.conns.remove(&dest_node);
+            return Err(Error::Io(e));
+        }
+        Ok(())
+    }
+}
+
+/// Inbound half: accept loop + per-connection reader threads feeding the
+/// router ingress.
+pub struct TcpIngress {
+    accept_handle: Option<JoinHandle<()>>,
+    local_addr: std::net::SocketAddr,
+    shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl TcpIngress {
+    /// Bind `addr` and start accepting. Received packets go to `router_tx`.
+    pub fn bind(addr: &str, router_tx: Sender<RouterMsg>) -> Result<TcpIngress> {
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sd = std::sync::Arc::clone(&shutdown);
+        listener.set_nonblocking(true)?;
+        let accept_handle = std::thread::Builder::new()
+            .name(format!("tcp-accept-{local_addr}"))
+            .spawn(move || {
+                let mut readers = Vec::new();
+                loop {
+                    if sd.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _peer)) => {
+                            stream.set_nonblocking(false).ok();
+                            stream.set_nodelay(true).ok();
+                            let tx = router_tx.clone();
+                            let sd2 = std::sync::Arc::clone(&sd);
+                            readers.push(std::thread::spawn(move || {
+                                read_frames(stream, tx, sd2);
+                            }));
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(2));
+                        }
+                        Err(e) => {
+                            log::warn!("tcp accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+                // Reader threads exit when their peer closes or on shutdown
+                // flag; detach rather than join to avoid blocking teardown on
+                // an idle read.
+                drop(readers);
+            })
+            .expect("spawn tcp accept thread");
+        Ok(TcpIngress { accept_handle: Some(accept_handle), local_addr, shutdown })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpIngress {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn read_frames(
+    mut stream: TcpStream,
+    tx: Sender<RouterMsg>,
+    shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
+) {
+    // Bounded read timeout so the thread notices shutdown.
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_millis(100)))
+        .ok();
+    let mut len_buf = [0u8; 4];
+    'outer: loop {
+        if shutdown.load(std::sync::atomic::Ordering::Relaxed) {
+            break;
+        }
+        // Read the 4-byte length prefix, tolerating timeouts.
+        let mut got = 0usize;
+        while got < 4 {
+            match stream.read(&mut len_buf[got..]) {
+                Ok(0) => break 'outer, // peer closed
+                Ok(n) => got += n,
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(std::sync::atomic::Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                    if got == 0 {
+                        continue 'outer;
+                    }
+                }
+                Err(_) => break 'outer,
+            }
+        }
+        let len = u32::from_le_bytes(len_buf) as usize;
+        if len > MAX_PACKET_BYTES {
+            log::warn!("tcp frame of {len} bytes exceeds packet cap; closing connection");
+            break;
+        }
+        let mut buf = vec![0u8; len];
+        let mut read = 0usize;
+        while read < len {
+            match stream.read(&mut buf[read..]) {
+                Ok(0) => break 'outer,
+                Ok(n) => read += n,
+                Err(ref e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut =>
+                {
+                    if shutdown.load(std::sync::atomic::Ordering::Relaxed) {
+                        break 'outer;
+                    }
+                }
+                Err(_) => break 'outer,
+            }
+        }
+        match Packet::from_wire(&buf) {
+            Ok(pkt) => {
+                if tx.send(RouterMsg::FromNetwork(pkt)).is_err() {
+                    break; // router gone
+                }
+            }
+            Err(e) => {
+                log::warn!("tcp: malformed packet dropped: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let addr = ingress.local_addr().to_string();
+
+        let mut egress = TcpEgress::new(HashMap::from([(1u16, addr)]));
+        let pkt = Packet::new(3, 4, vec![1, 2, 3]).unwrap();
+        egress.send(1, pkt.clone()).unwrap();
+
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p, pkt),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn many_packets_in_order_per_connection() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let addr = ingress.local_addr().to_string();
+        let mut egress = TcpEgress::new(HashMap::from([(1u16, addr)]));
+        for i in 0..100u8 {
+            egress.send(1, Packet::new(0, 0, vec![i]).unwrap()).unwrap();
+        }
+        for i in 0..100u8 {
+            match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![i]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_peer_errors() {
+        let mut egress = TcpEgress::new(HashMap::new());
+        assert!(matches!(
+            egress.send(9, Packet::new(0, 0, vec![]).unwrap()),
+            Err(Error::UnknownNode(9))
+        ));
+    }
+}

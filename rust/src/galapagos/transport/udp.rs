@@ -1,0 +1,173 @@
+//! UDP transport: one datagram per Galapagos packet.
+//!
+//! The paper's hardware UDP core cannot handle IP fragmentation: datagrams
+//! larger than the Ethernet MTU "are marked as IP fragmented, which is
+//! unsupported by the hardware UDP core on the FPGA" and large packets sent
+//! *from* the FPGA are dropped by the core (§IV-B1). `UdpEgress` models that
+//! restriction when `hw_core` is set, which is how Fig. 5's missing
+//! 2048/4096-byte points arise; software endpoints use OS fragmentation and
+//! are unrestricted (up to the 9000-byte middleware cap).
+
+use std::collections::HashMap;
+use std::net::UdpSocket;
+use std::sync::mpsc::Sender;
+use std::thread::JoinHandle;
+
+use super::Egress;
+use crate::error::{Error, Result};
+use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
+use crate::galapagos::router::RouterMsg;
+
+/// Standard Ethernet MTU payload available to a UDP datagram
+/// (1500 − 20 IP − 8 UDP).
+pub const UDP_MTU_PAYLOAD: usize = 1472;
+
+/// Outbound half.
+pub struct UdpEgress {
+    socket: UdpSocket,
+    peers: HashMap<u16, String>,
+    /// Model the FPGA UDP core: refuse to emit datagrams that would fragment.
+    hw_core: bool,
+}
+
+impl UdpEgress {
+    pub fn new(socket: UdpSocket, peers: HashMap<u16, String>, hw_core: bool) -> Self {
+        Self { socket, peers, hw_core }
+    }
+}
+
+impl Egress for UdpEgress {
+    fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()> {
+        let addr = self.peers.get(&dest_node).ok_or(Error::UnknownNode(dest_node))?;
+        let wire = pkt.to_wire();
+        if self.hw_core && wire.len() > UDP_MTU_PAYLOAD {
+            // Hardware UDP core drops or refuses fragmented datagrams.
+            return Err(Error::UdpFragmentation(wire.len()));
+        }
+        self.socket.send_to(&wire, addr)?;
+        Ok(())
+    }
+}
+
+/// Inbound half: a reader thread on the bound socket.
+pub struct UdpIngress {
+    handle: Option<JoinHandle<()>>,
+    local_addr: std::net::SocketAddr,
+    shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
+}
+
+impl UdpIngress {
+    /// Start receiving on `socket` (must already be bound); packets go to
+    /// `router_tx`. When `hw_core` is set, datagrams longer than the MTU are
+    /// dropped (fragmented receive unsupported on the FPGA core).
+    pub fn start(socket: UdpSocket, router_tx: Sender<RouterMsg>, hw_core: bool) -> Result<UdpIngress> {
+        let local_addr = socket.local_addr()?;
+        let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let sd = std::sync::Arc::clone(&shutdown);
+        socket.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+        let handle = std::thread::Builder::new()
+            .name(format!("udp-rx-{local_addr}"))
+            .spawn(move || {
+                let mut buf = vec![0u8; MAX_PACKET_BYTES + 64];
+                loop {
+                    if sd.load(std::sync::atomic::Ordering::Relaxed) {
+                        break;
+                    }
+                    match socket.recv_from(&mut buf) {
+                        Ok((n, _peer)) => {
+                            if hw_core && n > UDP_MTU_PAYLOAD {
+                                log::warn!("hw udp core dropped fragmented datagram of {n} bytes");
+                                continue;
+                            }
+                            match Packet::from_wire(&buf[..n]) {
+                                Ok(pkt) => {
+                                    if router_tx.send(RouterMsg::FromNetwork(pkt)).is_err() {
+                                        break;
+                                    }
+                                }
+                                Err(e) => log::warn!("udp: malformed packet dropped: {e}"),
+                            }
+                        }
+                        Err(ref e)
+                            if e.kind() == std::io::ErrorKind::WouldBlock
+                                || e.kind() == std::io::ErrorKind::TimedOut => {}
+                        Err(e) => {
+                            log::warn!("udp recv error: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawn udp reader");
+        Ok(UdpIngress { handle: Some(handle), local_addr, shutdown })
+    }
+
+    pub fn local_addr(&self) -> std::net::SocketAddr {
+        self.local_addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for UdpIngress {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    #[test]
+    fn roundtrip_over_loopback() {
+        let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let addr = rx_sock.local_addr().unwrap().to_string();
+        let (tx, rx) = mpsc::channel();
+        let _ingress = UdpIngress::start(rx_sock, tx, false).unwrap();
+
+        let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let mut egress = UdpEgress::new(tx_sock, HashMap::from([(1u16, addr)]), false);
+        let pkt = Packet::new(1, 2, vec![42; 100]).unwrap();
+        egress.send(1, pkt.clone()).unwrap();
+
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p, pkt),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hw_core_rejects_fragmented_send() {
+        let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let mut egress =
+            UdpEgress::new(tx_sock, HashMap::from([(1u16, "127.0.0.1:9".into())]), true);
+        let big = Packet::new(1, 2, vec![0; 2048]).unwrap();
+        assert!(matches!(egress.send(1, big), Err(Error::UdpFragmentation(_))));
+        // Small packets still pass the size gate (send to discard port).
+        let small = Packet::new(1, 2, vec![0; 64]).unwrap();
+        assert!(egress.send(1, small).is_ok());
+    }
+
+    #[test]
+    fn sw_core_sends_large_datagrams() {
+        let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let addr = rx_sock.local_addr().unwrap().to_string();
+        let (tx, rx) = mpsc::channel();
+        let _ingress = UdpIngress::start(rx_sock, tx, false).unwrap();
+        let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let mut egress = UdpEgress::new(tx_sock, HashMap::from([(1u16, addr)]), false);
+        let pkt = Packet::new(1, 2, vec![7; 4096]).unwrap();
+        egress.send(1, pkt.clone()).unwrap();
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p.data.len(), 4096),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

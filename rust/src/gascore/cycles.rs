@@ -1,0 +1,264 @@
+//! GAScore cycle-cost model.
+//!
+//! The Alpha Data 8K5's Kintex UltraScale fabric comfortably closes timing
+//! at 200 MHz for the Galapagos shell, so every cost below is in 200 MHz
+//! cycles (5 ns). The AXIS datapath is 64 bits wide: streaming one word per
+//! cycle moves 1.6 GB/s, slightly above the 10 Gb/s (1.25 GB/s) network —
+//! the link, not the GAScore, is the steady-state bottleneck, matching the
+//! paper's observation that Shoal adds latency "primarily through packet
+//! parsing" rather than throughput loss.
+//!
+//! Fixed per-stage latencies are estimates of small HLS/RTL FSMs (a few to a
+//! dozen states); the DataMover costs come from the AXI DataMover product
+//! guide's command-to-first-data figures. The paper remarks the GAScore "is
+//! currently modular in design. By more tightly integrating the different
+//! components, packet latency through it can be further reduced" — the
+//! per-stage handoff cost below (`STAGE_HANDOFF`) is exactly that modularity
+//! tax, and the ablation bench removes it to quantify the remark.
+
+use crate::am::header::AmMessage;
+use crate::am::types::AmType;
+
+/// Fabric clock frequency in Hz (200 MHz).
+pub const CLOCK_HZ: u64 = 200_000_000;
+
+/// Nanoseconds per cycle.
+pub const NS_PER_CYCLE: f64 = 1e9 / CLOCK_HZ as f64;
+
+/// Bytes per AXIS beat (64-bit datapath).
+pub const WORD_BYTES: u64 = 8;
+
+/// Cycle cost parameters for the GAScore pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct CycleModel {
+    /// Header decode in `xpams_tx` / `xpams_rx`.
+    pub xpams_decode: u64,
+    /// Command parse in `am_tx` / `am_rx`.
+    pub am_parse: u64,
+    /// DataMover command issue → first data beat (read or write path).
+    pub datamover_cmd: u64,
+    /// Extra DRAM access latency charged once per memory command.
+    pub dram_access: u64,
+    /// `add_size` metadata insertion.
+    pub add_size: u64,
+    /// Hold-buffer drain control for Long AMs (header held while payload is
+    /// written to memory).
+    pub hold_buffer_ctl: u64,
+    /// Built-in handler invocation (register write + FSM).
+    pub handler: u64,
+    /// Reply packet creation in `xpams_rx`.
+    pub reply_create: u64,
+    /// Inter-stage AXIS register-slice handoff (the "modular design" tax).
+    pub stage_handoff: u64,
+}
+
+impl Default for CycleModel {
+    fn default() -> Self {
+        CycleModel {
+            xpams_decode: 4,
+            am_parse: 8,
+            datamover_cmd: 12,
+            dram_access: 30,
+            add_size: 2,
+            hold_buffer_ctl: 4,
+            handler: 2,
+            reply_create: 6,
+            stage_handoff: 2,
+        }
+    }
+}
+
+impl CycleModel {
+    /// A hypothetical tightly-integrated GAScore (paper §IV-B1 future
+    /// optimization): stage handoffs collapse to zero and decode stages
+    /// overlap.
+    pub fn tightly_integrated() -> Self {
+        CycleModel { stage_handoff: 0, xpams_decode: 2, am_parse: 4, ..Default::default() }
+    }
+
+    /// Cycles to stream `bytes` across the 64-bit datapath.
+    pub fn stream_words(&self, bytes: usize) -> u64 {
+        (bytes as u64).div_ceil(WORD_BYTES)
+    }
+
+    /// Egress path (§III-C steps 1–4): kernel packet → xpams_tx → am_tx
+    /// (+ DataMover read for non-FIFO payloads) → add_size → network.
+    pub fn egress_cycles(&self, msg: &AmMessage) -> u64 {
+        let mut c = 0;
+        // step 2: decode in xpams_tx
+        c += self.xpams_decode + self.stage_handoff;
+        // step 3: am_tx parses the command packet
+        c += self.am_parse + self.stage_handoff;
+        // non-FIFO payloads are fetched from memory by the DataMover
+        if !msg.payload.is_empty() {
+            if !msg.flags.is_fifo() {
+                c += self.datamover_cmd + self.dram_access;
+            }
+            c += self.stream_words(msg.payload.len());
+        }
+        // step 4: add_size counts words and sets TUSER
+        c += self.add_size + self.stage_handoff;
+        c
+    }
+
+    /// Ingress path (§III-C steps 1–3): network → am_rx (+ hold buffer and
+    /// DataMover write for Longs) → xpams_rx (handlers, kernel forward,
+    /// reply creation).
+    pub fn ingress_cycles(&self, msg: &AmMessage, generates_reply: bool) -> u64 {
+        let mut c = 0;
+        // step 2: am_rx parses and forwards
+        c += self.am_parse + self.stage_handoff;
+        match msg.am_type {
+            AmType::Long | AmType::LongStrided | AmType::LongVectored => {
+                if msg.flags.is_get() {
+                    // Get request: DataMover read on the reply path.
+                    c += self.datamover_cmd + self.dram_access;
+                } else {
+                    // Payload written to memory while the header waits in the
+                    // hold buffer.
+                    c += self.hold_buffer_ctl
+                        + self.datamover_cmd
+                        + self.dram_access
+                        + self.stream_words(msg.payload.len());
+                    // Strided/vectored scatters issue one DataMover command
+                    // per extent.
+                    c += match &msg.desc {
+                        crate::am::header::Descriptor::Strided { nblocks, .. } => {
+                            (*nblocks as u64).saturating_sub(1) * self.datamover_cmd
+                        }
+                        crate::am::header::Descriptor::Vectored { entries } => {
+                            (entries.len() as u64).saturating_sub(1) * self.datamover_cmd
+                        }
+                        _ => 0,
+                    };
+                }
+            }
+            AmType::Medium => {
+                if msg.flags.is_get() {
+                    c += self.datamover_cmd + self.dram_access;
+                } else {
+                    // Medium payload streams through to the kernel.
+                    c += self.stream_words(msg.payload.len());
+                }
+            }
+            AmType::Short => {}
+        }
+        // step 3: xpams_rx hands handler data to the handlers...
+        c += self.xpams_decode + self.handler + self.stage_handoff;
+        // ...and creates the reply packet.
+        if generates_reply {
+            c += self.reply_create;
+        }
+        c
+    }
+
+    /// Convert cycles to nanoseconds.
+    pub fn to_ns(&self, cycles: u64) -> f64 {
+        cycles as f64 * NS_PER_CYCLE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::header::Descriptor;
+    use crate::am::types::{handler_ids, AmFlags};
+
+    fn medium(payload: usize, fifo: bool) -> AmMessage {
+        let mut flags = AmFlags::new();
+        if fifo {
+            flags = flags.with(AmFlags::FIFO);
+        }
+        AmMessage {
+            am_type: AmType::Medium,
+            flags,
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![0; payload],
+        }
+    }
+
+    fn long(payload: usize) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Long { dst_addr: 0 },
+            payload: vec![0; payload],
+        }
+    }
+
+    #[test]
+    fn stream_words_rounds_up() {
+        let m = CycleModel::default();
+        assert_eq!(m.stream_words(0), 0);
+        assert_eq!(m.stream_words(1), 1);
+        assert_eq!(m.stream_words(8), 1);
+        assert_eq!(m.stream_words(9), 2);
+        assert_eq!(m.stream_words(4096), 512);
+    }
+
+    #[test]
+    fn larger_payloads_cost_more() {
+        let m = CycleModel::default();
+        assert!(m.egress_cycles(&medium(4096, true)) > m.egress_cycles(&medium(8, true)));
+        assert!(m.ingress_cycles(&long(4096), true) > m.ingress_cycles(&long(8), true));
+    }
+
+    #[test]
+    fn memory_sourced_payload_costs_datamover() {
+        let m = CycleModel::default();
+        // Same payload size; non-FIFO reads from DRAM.
+        assert!(m.egress_cycles(&medium(256, false)) > m.egress_cycles(&medium(256, true)));
+    }
+
+    #[test]
+    fn long_ingress_pays_hold_buffer_and_dram() {
+        let m = CycleModel::default();
+        let l = m.ingress_cycles(&long(256), true);
+        let md = m.ingress_cycles(&medium(256, true), true);
+        assert!(l > md, "long {l} should exceed medium {md}");
+    }
+
+    #[test]
+    fn tightly_integrated_is_faster() {
+        let m = CycleModel::default();
+        let t = CycleModel::tightly_integrated();
+        let msg = long(1024);
+        assert!(t.ingress_cycles(&msg, true) < m.ingress_cycles(&msg, true));
+        assert!(t.egress_cycles(&msg) < m.egress_cycles(&msg));
+    }
+
+    #[test]
+    fn short_messages_are_cheap() {
+        let m = CycleModel::default();
+        let s = AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::REPLY,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![],
+        };
+        // A short ingress is a couple dozen cycles — ~100ns at 200 MHz.
+        let c = m.ingress_cycles(&s, false);
+        assert!(c < 40, "short ingress {c} cycles");
+    }
+
+    #[test]
+    fn ns_conversion() {
+        let m = CycleModel::default();
+        assert!((m.to_ns(200) - 1000.0).abs() < 1e-9); // 200 cycles @ 200MHz = 1µs
+    }
+}

@@ -1,0 +1,28 @@
+//! The GAScore — hardware support for the PGAS model (paper §III-C).
+//!
+//! On a real FPGA the GAScore is "a direct memory access (DMA) engine to
+//! facilitate remote memory access", shared by all kernels on the node and
+//! built from the submodules of Fig. 3: `xpams_tx`, `am_tx`, the AXI
+//! DataMover, `add_size`, `am_rx`, the hold buffer, `xpams_rx`, and a
+//! handler wrapper with one handler block per kernel.
+//!
+//! No FPGA is available in this reproduction, so this module is a
+//! **functional, cycle-accounted simulator**:
+//!
+//! - [`stages`]    — each Fig. 3 submodule as a pure function over messages:
+//!   the same decode/route/command decisions the RTL makes, with a cycle
+//!   cost per step. Unit-tested individually.
+//! - [`server`]    — the per-node GAScore thread: drains the node's single
+//!   "From Network"/"From Kernels" stream, runs the stage pipeline (which
+//!   internally uses the shared AM engine for memory/stream effects), sends
+//!   replies, accumulates cycles.
+//! - [`cycles`]    — the clock/cost model (200 MHz fabric, 64-bit AXIS).
+//! - [`resources`] — the Table I LUT/FF/BRAM model, including handler
+//!   scaling with kernel count and the modular-profile reduction (§V-A).
+
+pub mod cycles;
+pub mod resources;
+pub mod server;
+pub mod stages;
+
+pub use server::GAScoreStats;

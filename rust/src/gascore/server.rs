@@ -1,0 +1,384 @@
+//! The per-node GAScore server thread.
+//!
+//! "The GAScore is shared among all kernels on a node unlike handler threads
+//! that are created per kernel" (§III-C). The node router delivers every
+//! local kernel's traffic into one channel — the GAScore's single
+//! "From Network" interface — and this thread runs the ingress pipeline:
+//!
+//! ```text
+//!   packet → am_rx parse → hold buffer (Long puts) → xpams_rx dispatch
+//!          → handler / kernel stream / partition write → reply via am_tx
+//! ```
+//!
+//! Semantics come from the shared AM engine; this thread adds the Fig. 3
+//! structure (hold-buffer ordering) and the cycle accounting that feeds the
+//! hardware latency model of the figures.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::cycles::CycleModel;
+use super::stages::{am_rx_parse, xpams_tx_route, EgressRoute, HoldBuffer};
+use crate::am::engine::KernelRuntime;
+use crate::galapagos::packet::Packet;
+use crate::galapagos::router::RouterMsg;
+
+/// Traffic entering the GAScore: packets from the network (`am_rx` side) or
+/// command packets from local kernels (`xpams_tx` side, §III-C egress
+/// step 1 "A Shoal kernel packet arrives at the 'From Kernels' interface").
+#[derive(Debug)]
+pub enum GAScoreMsg {
+    FromNetwork(Packet),
+    FromKernels(Packet),
+}
+
+/// Counters accumulated by a GAScore server.
+#[derive(Debug, Default)]
+pub struct GAScoreStats {
+    pub messages_in: AtomicU64,
+    pub replies_out: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+    /// Modeled cycles spent on the ingress pipeline.
+    pub ingress_cycles: AtomicU64,
+    /// Modeled cycles spent emitting replies (egress pipeline).
+    pub egress_cycles: AtomicU64,
+    pub malformed: AtomicU64,
+    /// Deepest hold-buffer occupancy observed.
+    pub hold_buffer_peak: AtomicU64,
+    /// Egress messages xpams_tx looped back internally (local Short /
+    /// Medium-FIFO destinations, §III-C egress step 2).
+    pub internal_routed: AtomicU64,
+}
+
+impl GAScoreStats {
+    /// Total modeled time in nanoseconds at the fabric clock.
+    pub fn modeled_ns(&self) -> f64 {
+        let cycles =
+            self.ingress_cycles.load(Ordering::Relaxed) + self.egress_cycles.load(Ordering::Relaxed);
+        cycles as f64 * super::cycles::NS_PER_CYCLE
+    }
+}
+
+/// Handle to a running GAScore.
+pub struct GAScoreServer {
+    node_id: u16,
+    stats: Arc<GAScoreStats>,
+    /// "From Kernels" interface: local kernels' command packets enter here
+    /// (the ShoalKernel API of hardware kernels sends through this).
+    /// Dropped at join time so the pipeline thread sees disconnect.
+    kernel_tx: Option<Sender<GAScoreMsg>>,
+    handle: Option<JoinHandle<()>>,
+    forwarder: Option<JoinHandle<()>>,
+}
+
+impl GAScoreServer {
+    /// Spawn the GAScore for `node_id`, serving `runtimes` (one per local
+    /// kernel). `inbox` is the shared network-delivery channel from the
+    /// router; egress (including replies) goes out through `router_tx`.
+    pub fn spawn(
+        node_id: u16,
+        runtimes: Vec<KernelRuntime>,
+        inbox: Receiver<Packet>,
+        router_tx: Sender<RouterMsg>,
+    ) -> GAScoreServer {
+        let stats = Arc::new(GAScoreStats::default());
+        let stats2 = Arc::clone(&stats);
+        let (msg_tx, msg_rx) = std::sync::mpsc::channel::<GAScoreMsg>();
+
+        // Forwarder: adapts the router's per-kernel delivery channel (plain
+        // packets) onto the unified GAScore stream — the mux in front of the
+        // single "From Network" AXIS port.
+        let net_tx = msg_tx.clone();
+        let forwarder = std::thread::Builder::new()
+            .name(format!("gascore-mux-n{node_id}"))
+            .spawn(move || {
+                while let Ok(pkt) = inbox.recv() {
+                    if net_tx.send(GAScoreMsg::FromNetwork(pkt)).is_err() {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn gascore mux thread");
+
+        let handle = std::thread::Builder::new()
+            .name(format!("gascore-n{node_id}"))
+            .spawn(move || {
+                run(node_id, runtimes, msg_rx, router_tx, &stats2);
+            })
+            .expect("spawn gascore thread");
+        GAScoreServer {
+            node_id,
+            stats,
+            kernel_tx: Some(msg_tx),
+            handle: Some(handle),
+            forwarder: Some(forwarder),
+        }
+    }
+
+    /// Sender for local kernels' command packets ("From Kernels").
+    pub fn kernel_tx(&self) -> Sender<GAScoreMsg> {
+        self.kernel_tx.as_ref().expect("gascore already joined").clone()
+    }
+
+    pub fn node_id(&self) -> u16 {
+        self.node_id
+    }
+
+    pub fn stats(&self) -> Arc<GAScoreStats> {
+        Arc::clone(&self.stats)
+    }
+
+    pub fn join(&mut self) {
+        // Release our "From Kernels" sender so the pipeline thread can see
+        // disconnect once the forwarder and all kernel handles are gone.
+        self.kernel_tx = None;
+        if let Some(h) = self.forwarder.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct Pipeline {
+    node_id: u16,
+    model: CycleModel,
+    by_kernel: HashMap<u16, KernelRuntime>,
+    local_kernels: Vec<u16>,
+    hold: HoldBuffer,
+    router_tx: Sender<RouterMsg>,
+    /// Set when the router side disconnected: time to exit.
+    dead: bool,
+}
+
+fn run(
+    node_id: u16,
+    runtimes: Vec<KernelRuntime>,
+    inbox: Receiver<GAScoreMsg>,
+    router_tx: Sender<RouterMsg>,
+    stats: &GAScoreStats,
+) {
+    let local_kernels: Vec<u16> = runtimes.iter().map(|r| r.kernel_id).collect();
+    let mut pl = Pipeline {
+        node_id,
+        model: CycleModel::default(),
+        by_kernel: runtimes.into_iter().map(|rt| (rt.kernel_id, rt)).collect(),
+        local_kernels,
+        hold: HoldBuffer::new(),
+        router_tx,
+        dead: false,
+    };
+
+    while let Ok(msg) = inbox.recv() {
+        match msg {
+            GAScoreMsg::FromNetwork(pkt) => pl.ingress(pkt, stats),
+            GAScoreMsg::FromKernels(pkt) => pl.egress(pkt, stats),
+        }
+        if pl.dead {
+            return;
+        }
+    }
+    log::debug!("gascore n{node_id}: exiting");
+}
+
+impl Pipeline {
+    /// Ingress path (§III-C): am_rx → hold buffer → xpams_rx → engine.
+    fn ingress(&mut self, pkt: Packet, stats: &GAScoreStats) {
+        stats.messages_in.fetch_add(1, Ordering::Relaxed);
+        stats.bytes_in.fetch_add(pkt.wire_len() as u64, Ordering::Relaxed);
+
+        // am_rx: parse the header.
+        let msg = match am_rx_parse(pkt) {
+            Ok(m) => m,
+            Err(e) => {
+                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                log::warn!("gascore n{}: dropping malformed AM: {e}", self.node_id);
+                return;
+            }
+        };
+
+        // Hold buffer: Long puts wait for their memory write; the simulator
+        // performs the write inside the engine, so admission is immediately
+        // followed by completion — but the ordering contract (nothing
+        // overtakes a held header) is preserved and tested.
+        let ready = {
+            let mut r = self.hold.admit(msg);
+            while !self.hold.is_empty() {
+                r.extend(self.hold.write_complete());
+            }
+            stats
+                .hold_buffer_peak
+                .fetch_max(self.hold.max_depth as u64, Ordering::Relaxed);
+            r
+        };
+
+        for m in ready {
+            self.dispatch(m, stats);
+        }
+    }
+
+    /// Deliver one parsed AM to its local kernel runtime; emit replies
+    /// through the egress pipeline.
+    fn dispatch(&mut self, m: crate::am::header::AmMessage, stats: &GAScoreStats) {
+        let Some(rt) = self.by_kernel.get(&m.dst) else {
+            log::warn!("gascore n{}: AM for non-local kernel {}", self.node_id, m.dst);
+            return;
+        };
+        // Cycle accounting for the ingress pipeline.
+        let will_reply = !m.flags.is_async() && !m.flags.is_reply();
+        stats
+            .ingress_cycles
+            .fetch_add(self.model.ingress_cycles(&m, will_reply), Ordering::Relaxed);
+
+        let mut replies = Vec::new();
+        let res = rt.process_ingress(m, &mut |reply| replies.push(reply));
+        if let Err(e) = res {
+            log::warn!("gascore n{}: ingress error: {e}", self.node_id);
+        }
+        for reply in replies {
+            self.egress_am(reply, stats);
+        }
+    }
+
+    /// Egress path (§III-C steps 1–4): kernel command packet → xpams_tx →
+    /// am_tx → add_size → network (or internal loop-back for local Short /
+    /// Medium-FIFO destinations).
+    fn egress(&mut self, pkt: Packet, stats: &GAScoreStats) {
+        let msg = match am_rx_parse(pkt) {
+            Ok(m) => m,
+            Err(e) => {
+                stats.malformed.fetch_add(1, Ordering::Relaxed);
+                log::warn!("gascore n{}: malformed kernel packet: {e}", self.node_id);
+                return;
+            }
+        };
+        self.egress_am(msg, stats);
+    }
+
+    fn egress_am(&mut self, msg: crate::am::header::AmMessage, stats: &GAScoreStats) {
+        stats
+            .egress_cycles
+            .fetch_add(self.model.egress_cycles(&msg), Ordering::Relaxed);
+        // xpams_tx: "For the special cases of Short messages and Medium FIFO
+        // messages intended for local kernels, this module will route data to
+        // the handler internally" (§III-C egress step 2).
+        match xpams_tx_route(&msg, &self.local_kernels) {
+            EgressRoute::Internal => {
+                stats.internal_routed.fetch_add(1, Ordering::Relaxed);
+                self.dispatch(msg, stats);
+            }
+            EgressRoute::ToAmTx => {
+                // am_tx + add_size, then out through the node router.
+                match msg.encode().and_then(|bytes| Packet::new(msg.dst, msg.src, bytes)) {
+                    Ok(p) => {
+                        stats.bytes_out.fetch_add(p.wire_len() as u64, Ordering::Relaxed);
+                        if msg.flags.is_reply() {
+                            stats.replies_out.fetch_add(1, Ordering::Relaxed);
+                        }
+                        if self.router_tx.send(RouterMsg::FromKernel(p)).is_err() {
+                            self.dead = true;
+                        }
+                    }
+                    Err(e) => {
+                        log::error!("gascore n{}: encode egress failed: {e}", self.node_id)
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::engine::{BarrierState, ReplyState};
+    use crate::am::handlers::HandlerTable;
+    use crate::am::header::{AmMessage, Descriptor};
+    use crate::am::types::{handler_ids, AmFlags, AmType};
+    use crate::memory::Segment;
+    use std::sync::mpsc;
+    use std::time::Duration;
+
+    fn runtime(kernel_id: u16) -> (KernelRuntime, Segment, mpsc::Receiver<crate::am::engine::ReceivedMedium>) {
+        let seg = Segment::new(4096);
+        let (tx, rx) = mpsc::channel();
+        (
+            KernelRuntime {
+                kernel_id,
+                segment: seg.clone(),
+                replies: ReplyState::new(),
+                barrier: BarrierState::new(),
+                handlers: Arc::new(HandlerTable::hardware()),
+                medium_tx: tx,
+            },
+            seg,
+            rx,
+        )
+    }
+
+    #[test]
+    fn serves_multiple_kernels_from_one_channel() {
+        let (rt2, seg2, _mrx2) = runtime(2);
+        let (rt3, seg3, _mrx3) = runtime(3);
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut g = GAScoreServer::spawn(0, vec![rt2, rt3], inbox_rx, router_tx);
+
+        for (dst, val) in [(2u16, 7u8), (3, 9)] {
+            let m = AmMessage {
+                am_type: AmType::Long,
+                flags: AmFlags::new().with(AmFlags::FIFO),
+                src: 0,
+                dst,
+                handler: handler_ids::NOP,
+                token: dst as u32,
+                args: vec![],
+                desc: Descriptor::Long { dst_addr: 64 },
+                payload: vec![val; 8],
+            };
+            inbox_tx.send(Packet::new(dst, 0, m.encode().unwrap()).unwrap()).unwrap();
+        }
+
+        // Both replies come back through the router.
+        for _ in 0..2 {
+            match router_rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+                RouterMsg::FromKernel(p) => {
+                    let r = AmMessage::decode(&p.data).unwrap();
+                    assert!(r.flags.is_reply());
+                    assert_eq!(r.dst, 0);
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(seg2.read(64, 8).unwrap(), vec![7; 8]);
+        assert_eq!(seg3.read(64, 8).unwrap(), vec![9; 8]);
+
+        let stats = g.stats();
+        assert_eq!(stats.messages_in.load(Ordering::Relaxed), 2);
+        assert_eq!(stats.replies_out.load(Ordering::Relaxed), 2);
+        assert!(stats.ingress_cycles.load(Ordering::Relaxed) > 0);
+        assert!(stats.modeled_ns() > 0.0);
+
+        drop(inbox_tx);
+        g.join();
+    }
+
+    #[test]
+    fn malformed_packets_counted_not_fatal() {
+        let (rt, _seg, _mrx) = runtime(2);
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, _router_rx) = mpsc::channel();
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+        inbox_tx.send(Packet::new(2, 0, vec![0xEE; 5]).unwrap()).unwrap();
+        // Let the server process.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(g.stats().malformed.load(Ordering::Relaxed), 1);
+        drop(inbox_tx);
+        g.join();
+    }
+}

@@ -1,0 +1,236 @@
+//! The GAScore's internal stages (Fig. 3), as testable units.
+//!
+//! Each submodule of the hardware pipeline is modeled as a small piece of
+//! behaviour the server composes. The cycle *costs* live in
+//! [`cycles`](super::cycles); these types carry the *functional* decisions:
+//! where a packet is routed, when a held header may proceed, what the size
+//! side-channel says.
+
+use std::collections::VecDeque;
+
+use crate::am::header::AmMessage;
+use crate::am::types::AmType;
+use crate::error::Result;
+use crate::galapagos::packet::Packet;
+
+/// `am_rx` — parse a packet arriving from the network (§III-C ingress
+/// step 2). Consumes the packet: its buffer becomes the AM payload
+/// (single-copy ingress, §Perf).
+pub fn am_rx_parse(pkt: Packet) -> Result<AmMessage> {
+    AmMessage::decode_owned(pkt.data)
+}
+
+/// `xpams_tx` routing decision for egress packets (§III-C egress step 2):
+/// "For the special cases of Short messages and Medium FIFO messages
+/// intended for local kernels, this module will route data to the handler
+/// internally ... Other message types, whether they are to local or remote
+/// kernels, need access to memory and so proceed unaltered to am_tx."
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EgressRoute {
+    /// Loop back inside the GAScore (local handler + kernel stream).
+    Internal,
+    /// Continue to `am_tx` (and onward to the network or memory).
+    ToAmTx,
+}
+
+pub fn xpams_tx_route(msg: &AmMessage, local_kernels: &[u16]) -> EgressRoute {
+    let local = local_kernels.contains(&msg.dst);
+    let fifo_medium = msg.am_type == AmType::Medium && msg.flags.is_fifo() && !msg.flags.is_get();
+    if local && (msg.am_type == AmType::Short || fifo_medium) {
+        EgressRoute::Internal
+    } else {
+        EgressRoute::ToAmTx
+    }
+}
+
+/// `add_size` — compute the TUSER size metadata Galapagos needs (§III-C
+/// egress step 4): the final message size in 64-bit words.
+pub fn add_size(wire: &[u8]) -> u32 {
+    (wire.len() as u32).div_ceil(8)
+}
+
+/// The hold buffer — "a special FIFO that buffers the forwarded data in the
+/// case of Long AMs. While the payload is being written to memory, the AM's
+/// header is held at the buffer. After it has been written, the message is
+/// allowed to proceed" (§III-C ingress step 2).
+///
+/// Functionally this enforces *ordering*: a Long AM's handler/reply must not
+/// run until its payload is durably in the partition. The simulator performs
+/// the write synchronously and then releases, preserving FIFO order across
+/// interleaved Long and non-Long traffic.
+#[derive(Debug, Default)]
+pub struct HoldBuffer {
+    held: VecDeque<AmMessage>,
+    pub max_depth: usize,
+}
+
+impl HoldBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// True if this message class must pass through the hold buffer.
+    pub fn holds(msg: &AmMessage) -> bool {
+        msg.am_type.is_long() && !msg.flags.is_get()
+    }
+
+    /// Admit a message; Long puts are held, everything else passes through.
+    /// Returns the messages that may proceed *now*, in order.
+    pub fn admit(&mut self, msg: AmMessage) -> Vec<AmMessage> {
+        if Self::holds(&msg) {
+            self.held.push_back(msg);
+            self.max_depth = self.max_depth.max(self.held.len());
+            vec![]
+        } else if self.held.is_empty() {
+            vec![msg]
+        } else {
+            // Preserve FIFO order behind held headers.
+            self.held.push_back(msg);
+            self.max_depth = self.max_depth.max(self.held.len());
+            vec![]
+        }
+    }
+
+    /// The memory write for the oldest held Long completed; release every
+    /// message up to and including the next hold-class message.
+    pub fn write_complete(&mut self) -> Vec<AmMessage> {
+        let mut out = Vec::new();
+        // Release the completed Long...
+        if let Some(m) = self.held.pop_front() {
+            out.push(m);
+        }
+        // ...and any pass-through messages queued behind it.
+        while let Some(front) = self.held.front() {
+            if Self::holds(front) {
+                break;
+            }
+            out.push(self.held.pop_front().unwrap());
+        }
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.held.is_empty()
+    }
+
+    pub fn depth(&self) -> usize {
+        self.held.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::header::Descriptor;
+    use crate::am::types::{handler_ids, AmFlags};
+
+    fn short(dst: u16) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new(),
+            src: 0,
+            dst,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![],
+        }
+    }
+
+    fn medium_fifo(dst: u16) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: 0,
+            dst,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![1],
+        }
+    }
+
+    fn long(dst: u16, token: u32) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: 0,
+            dst,
+            handler: handler_ids::NOP,
+            token,
+            args: vec![],
+            desc: Descriptor::Long { dst_addr: 0 },
+            payload: vec![2; 8],
+        }
+    }
+
+    #[test]
+    fn xpams_tx_internal_routing() {
+        let locals = [1u16, 2];
+        assert_eq!(xpams_tx_route(&short(1), &locals), EgressRoute::Internal);
+        assert_eq!(xpams_tx_route(&medium_fifo(2), &locals), EgressRoute::Internal);
+        // Remote destinations always go to am_tx.
+        assert_eq!(xpams_tx_route(&short(5), &locals), EgressRoute::ToAmTx);
+        // Longs need memory even when local.
+        assert_eq!(xpams_tx_route(&long(1, 0), &locals), EgressRoute::ToAmTx);
+    }
+
+    #[test]
+    fn add_size_words() {
+        assert_eq!(add_size(&[0; 16]), 2);
+        assert_eq!(add_size(&[0; 17]), 3);
+        assert_eq!(add_size(&[]), 0);
+    }
+
+    #[test]
+    fn hold_buffer_passthrough_when_empty() {
+        let mut hb = HoldBuffer::new();
+        let out = hb.admit(short(1));
+        assert_eq!(out.len(), 1);
+        assert!(hb.is_empty());
+    }
+
+    #[test]
+    fn hold_buffer_holds_longs_and_preserves_order() {
+        let mut hb = HoldBuffer::new();
+        assert!(hb.admit(long(1, 100)).is_empty());
+        assert!(hb.admit(short(1)).is_empty()); // queued behind the long
+        assert!(hb.admit(long(1, 101)).is_empty());
+
+        let first = hb.write_complete();
+        assert_eq!(first.len(), 2); // long(100) + the short behind it
+        assert_eq!(first[0].token, 100);
+        assert_eq!(first[0].am_type, AmType::Long);
+        assert_eq!(first[1].am_type, AmType::Short);
+
+        let second = hb.write_complete();
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].token, 101);
+        assert!(hb.is_empty());
+    }
+
+    #[test]
+    fn hold_buffer_tracks_depth() {
+        let mut hb = HoldBuffer::new();
+        hb.admit(long(1, 0));
+        hb.admit(long(1, 1));
+        hb.admit(long(1, 2));
+        assert_eq!(hb.depth(), 3);
+        assert_eq!(hb.max_depth, 3);
+        hb.write_complete();
+        assert!(hb.depth() < 3);
+    }
+
+    #[test]
+    fn long_gets_are_not_held() {
+        let mut hb = HoldBuffer::new();
+        let mut g = long(1, 0);
+        g.flags = AmFlags::new().with(AmFlags::GET);
+        g.desc = Descriptor::LongGet { src_addr: 0, len: 8, reply_addr: 0 };
+        g.payload = vec![];
+        assert!(!HoldBuffer::holds(&g));
+        assert_eq!(hb.admit(g).len(), 1);
+    }
+}

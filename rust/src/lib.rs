@@ -1,0 +1,54 @@
+//! # Shoal — a PGAS communication library for heterogeneous clusters
+//!
+//! This crate is a full reproduction of *"A PGAS Communication Library for
+//! Heterogeneous Clusters"* (Sharma & Chow, 2021). Shoal provides an Active
+//! Message (AM) API over a Partitioned Global Address Space for clusters
+//! mixing **software kernels** (threads) and **hardware kernels** (FPGA IPs —
+//! here, a cycle-accounted simulator whose compute runs through AOT-compiled
+//! XLA executables via PJRT).
+//!
+//! ## Architecture
+//!
+//! ```text
+//!  user kernels (closures / HW sim)          examples/, apps::jacobi
+//!        │  ShoalKernel API: am_short/medium/long, get/put, barrier
+//!  ┌─────▼──────────────────────────────────────────────────────────┐
+//!  │ shoal runtime:  am codec · PGAS memory · handler threads ·     │
+//!  │                 barriers · GAScore simulator (HW nodes)        │
+//!  ├─────────────────────────────────────────────────────────────────┤
+//!  │ galapagos middleware: per-node router · kernel interfaces ·    │
+//!  │                 transports: local / TCP / UDP (std::net)       │
+//!  └─────────────────────────────────────────────────────────────────┘
+//!        compute for HW kernels: runtime::Engine → PJRT (xla crate)
+//!        time for figures:       sim:: discrete-event cost model
+//! ```
+//!
+//! See `DESIGN.md` for the paper→module map and `EXPERIMENTS.md` for the
+//! reproduction of every table and figure.
+
+pub mod am;
+pub mod apps;
+pub mod bench;
+pub mod config;
+pub mod error;
+pub mod galapagos;
+pub mod gascore;
+pub mod memory;
+pub mod runtime;
+pub mod shoal_node;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for application authors.
+pub mod prelude {
+    pub use crate::am::handlers;
+    pub use crate::am::types::{AmFlags, AmType};
+    pub use crate::config::ClusterSpec;
+    pub use crate::error::{Error, Result};
+    pub use crate::am::engine::ReceivedMedium;
+    pub use crate::memory::GlobalAddress;
+    pub use crate::shoal_node::api::{SendReceipt, ShoalKernel};
+    pub use crate::shoal_node::cluster::ShoalCluster;
+}

@@ -1,0 +1,304 @@
+//! The `shoal` command-line launcher.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation artifacts:
+//!
+//! ```text
+//! shoal table1 [--kernels K] [--profile P]   Table I resource utilization
+//! shoal fig4                                  latency model series
+//! shoal fig5                                  UDP speedup series
+//! shoal fig6                                  throughput model series
+//! shoal fig7 [--grids ...] [--kernels ...]    Jacobi SW sweep (modeled)
+//! shoal fig8                                  Jacobi HW comparison (modeled)
+//! shoal jacobi [--grid N --workers W ...]     one Jacobi run
+//! shoal info                                  artifact + calibration info
+//! ```
+
+use shoal::bench::report;
+use shoal::config::ApiProfile;
+use shoal::gascore::resources;
+use shoal::sim::CostModel;
+use shoal::util::cli::{flag, opt, Args};
+
+const USAGE: &str = "\
+Shoal — a PGAS communication library for heterogeneous clusters
+
+USAGE: shoal <COMMAND> [OPTIONS]
+
+COMMANDS:
+  table1   GAScore resource utilization (paper Table I)
+  fig4     average median latency by topology (paper Fig. 4)
+  fig5     UDP-vs-TCP latency speedup (paper Fig. 5)
+  fig6     average throughput by topology (paper Fig. 6)
+  fig7     Jacobi software sweep (paper Fig. 7; modeled full scale)
+  fig8     Jacobi hardware comparison at grid 4096 (paper Fig. 8)
+  jacobi   run the distributed Jacobi solver once
+  micro    measured microbenchmarks over the real library
+  info     show artifacts and calibration constants
+  help     this message
+
+Run `shoal <COMMAND> --help` for per-command options.
+";
+
+fn main() -> shoal::Result<()> {
+    let argv: Vec<String> = std::env::args().collect();
+    let cmd = argv.get(1).map(String::as_str).unwrap_or("help");
+    // Re-parse remaining args per command.
+    let rest: Vec<String> = std::iter::once(argv[0].clone())
+        .chain(argv.iter().skip(2).cloned())
+        .collect();
+
+    match cmd {
+        "table1" => table1(&rest),
+        "fig4" => {
+            let t = report::fig4_latency(&CostModel::paper());
+            println!("{}", t.render());
+            let p = report::save_csv(&t, "fig4_latency")?;
+            println!("csv: {}", p.display());
+            Ok(())
+        }
+        "fig5" => {
+            let t = report::fig5_udp_speedup(&CostModel::paper());
+            println!("{}", t.render());
+            let p = report::save_csv(&t, "fig5_udp_speedup")?;
+            println!("csv: {}", p.display());
+            Ok(())
+        }
+        "fig6" => {
+            let t = report::fig6_throughput(&CostModel::paper());
+            println!("{}", t.render());
+            let p = report::save_csv(&t, "fig6_throughput")?;
+            println!("csv: {}", p.display());
+            Ok(())
+        }
+        "fig7" => fig7(&rest),
+        "fig8" => {
+            let t = report::fig8_model(&CostModel::paper(), 1024);
+            println!("{}", t.render());
+            let p = report::save_csv(&t, "fig8_jacobi_hw")?;
+            println!("csv: {}", p.display());
+            Ok(())
+        }
+        "jacobi" => jacobi(&rest),
+        "micro" => {
+            println!("see `cargo run --release --example microbenchmark -- --help`");
+            Ok(())
+        }
+        "info" => info(),
+        "validate" => validate(&rest),
+        "serve" => serve(&rest),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+/// Host one node of a multi-process cluster: bind this node's transport and
+/// run a built-in application on its kernels. Peer nodes are reached at the
+/// addresses in the cluster file (one `shoal serve` per node — the Galapagos
+/// deployment model across real processes).
+fn serve(argv: &[String]) -> shoal::Result<()> {
+    let args = Args::parse_from(
+        vec![
+            opt("cluster", "cluster description file (explicit ports)", ""),
+            opt("node", "node id this process hosts", "0"),
+            opt("app", "application: echo | sink", "echo"),
+            opt("max-msgs", "exit after this many messages per kernel (0 = run forever)", "0"),
+        ],
+        argv,
+    );
+    if args.wants_help() {
+        print!("{}", args.usage("Host one node of a multi-process Shoal cluster"));
+        return Ok(());
+    }
+    let path = args
+        .get("cluster")
+        .ok_or_else(|| shoal::Error::Config("--cluster <file> is required".into()))?;
+    let spec = shoal::config::parse::load_cluster(std::path::Path::new(path))?;
+    let node_id = args.get_usize("node", 0) as u16;
+    let app = args.get_or("app", "echo").to_string();
+    let max_msgs = args.get_u64("max-msgs", 0);
+
+    let cluster = shoal::shoal_node::cluster::ShoalCluster::launch_node(&spec, node_id)?;
+    let kernels = spec.kernels_on(node_id);
+    println!("serve: node {node_id} up, kernels {kernels:?}, app '{app}'");
+
+    for &kid in &kernels {
+        let app = app.clone();
+        cluster.run_kernel(kid, move |mut k| {
+            let mut seen = 0u64;
+            loop {
+                match k.recv_medium() {
+                    Ok(m) => {
+                        seen += 1;
+                        if app == "echo" {
+                            // Echo the payload back to the sender's stream.
+                            let _ = k.am_medium_async(m.src, m.handler, &m.args, &m.payload);
+                        }
+                        if max_msgs > 0 && seen >= max_msgs {
+                            break;
+                        }
+                    }
+                    Err(_) => break, // timeout or shutdown
+                }
+            }
+            println!("serve: kernel {kid} handled {seen} messages, exiting");
+        });
+    }
+    cluster.join()
+}
+
+/// Parse and validate a cluster description file, printing the topology.
+fn validate(argv: &[String]) -> shoal::Result<()> {
+    let args = Args::parse_from(vec![], argv);
+    let Some(path) = args.positional().first() else {
+        println!("usage: shoal validate <cluster.toml>");
+        return Ok(());
+    };
+    let spec = shoal::config::parse::load_cluster(std::path::Path::new(path))?;
+    println!(
+        "{path}: valid — {} nodes, {} kernels, transport {}, profile components {}",
+        spec.nodes.len(),
+        spec.kernel_count(),
+        spec.transport,
+        spec.profile.enabled_components()
+    );
+    for n in &spec.nodes {
+        let kernels = spec.kernels_on(n.id);
+        println!(
+            "  node {} '{}' [{}] {} — kernels {:?}",
+            n.id,
+            n.name,
+            n.platform,
+            n.address.as_deref().unwrap_or("(local)"),
+            kernels
+        );
+    }
+    Ok(())
+}
+
+fn table1(argv: &[String]) -> shoal::Result<()> {
+    let args = Args::parse_from(
+        vec![
+            opt("kernels", "kernels on the FPGA", "1"),
+            opt("profile", "full | point_to_point | remote_memory", "full"),
+            flag("shell", "also print the Galapagos shell utilization"),
+        ],
+        argv,
+    );
+    if args.wants_help() {
+        print!("{}", args.usage("Table I: GAScore resource utilization"));
+        return Ok(());
+    }
+    let profile = match args.get_or("profile", "full") {
+        "point_to_point" => ApiProfile::point_to_point(),
+        "remote_memory" => ApiProfile::remote_memory(),
+        _ => ApiProfile::full(),
+    };
+    let r = resources::gascore_utilization(args.get_usize("kernels", 1) as u16, &profile);
+    println!("{}", r.to_table().render());
+    let f = r.fraction_of_8k5();
+    println!(
+        "GAScore fraction of the 8K5: {:.2}% LUTs, {:.2}% FFs, {:.2}% BRAMs",
+        f.luts * 100.0,
+        f.ffs * 100.0,
+        f.brams * 100.0
+    );
+    if args.flag("shell") {
+        let s = resources::shell_utilization();
+        println!(
+            "Galapagos shell (§IV-A): {:.0} LUTs (12%), {:.0} FFs (8%), {:.1} BRAMs (8%)",
+            s.luts, s.ffs, s.brams
+        );
+    }
+    Ok(())
+}
+
+fn fig7(argv: &[String]) -> shoal::Result<()> {
+    let args = Args::parse_from(
+        vec![
+            opt("grids", "grid sizes", "256,512,1024,2048,4096"),
+            opt("kernels", "kernel counts", "1,2,4,8,16"),
+            opt("iters", "iterations", "1024"),
+        ],
+        argv,
+    );
+    if args.wants_help() {
+        print!("{}", args.usage("Fig. 7: Jacobi software sweep (modeled)"));
+        return Ok(());
+    }
+    let grids = args.get_usize_list("grids", &[256, 512, 1024, 2048, 4096]);
+    let kernels = args.get_usize_list("kernels", &[1, 2, 4, 8, 16]);
+    let t = report::fig7_model(
+        &CostModel::paper(),
+        &grids,
+        &kernels,
+        args.get_usize("iters", 1024),
+    );
+    println!("{}", t.render());
+    let p = report::save_csv(&t, "fig7_jacobi_sw")?;
+    println!("csv: {}", p.display());
+    Ok(())
+}
+
+fn jacobi(argv: &[String]) -> shoal::Result<()> {
+    let args = Args::parse_from(
+        vec![
+            opt("grid", "grid edge length", "130"),
+            opt("workers", "worker kernels", "2"),
+            opt("nodes", "worker nodes", "1"),
+            opt("iters", "iterations", "100"),
+            flag("hw", "hardware workers"),
+            flag("chunked", "chunked transfers"),
+        ],
+        argv,
+    );
+    if args.wants_help() {
+        print!("{}", args.usage("One distributed Jacobi run"));
+        return Ok(());
+    }
+    let cfg = shoal::apps::jacobi::JacobiConfig {
+        n: args.get_usize("grid", 130),
+        iters: args.get_usize("iters", 100),
+        workers: args.get_usize("workers", 2),
+        nodes: args.get_usize("nodes", 1),
+        hw: args.flag("hw"),
+        chunked: args.flag("chunked"),
+    };
+    let report = shoal::apps::jacobi::run(&cfg)?;
+    println!(
+        "grid {}×{} · {} iters · {} workers · wall {:.3} s (compute {:.3} s, sync {:.3} s)",
+        cfg.n,
+        cfg.n,
+        cfg.iters,
+        cfg.workers,
+        report.wall.as_secs_f64(),
+        report.compute.as_secs_f64(),
+        report.sync.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn info() -> shoal::Result<()> {
+    println!("shoal {} — reproduction of Sharma & Chow, 2021", env!("CARGO_PKG_VERSION"));
+    match shoal::runtime::Engine::load_default() {
+        Ok(e) => {
+            println!("artifacts ({}):", e.manifest().artifacts.len());
+            for a in &e.manifest().artifacts {
+                println!(
+                    "  {} — {} {}×{} ({:?} → {:?})",
+                    a.name, a.kind, a.rows, a.cols, a.input, a.output
+                );
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    let cm = CostModel::paper();
+    println!("\ncalibration (sim::costs):");
+    println!("  sw router hop  : {} ns", cm.sw.router_hop_ns);
+    println!("  sw tcp tx/rx   : {} / {} ns", cm.sw.tcp_tx_ns, cm.sw.tcp_rx_ns);
+    println!("  sw udp tx/rx   : {} / {} ns", cm.sw.udp_tx_ns, cm.sw.udp_rx_ns);
+    println!("  hw tcp core    : {} ns", cm.hw.tcp_core_tx_ns);
+    println!("  wire           : {} ns/B + {} ns switch", cm.net.wire_ns_per_byte, cm.net.switch_ns);
+    Ok(())
+}

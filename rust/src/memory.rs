@@ -1,0 +1,433 @@
+//! The Partitioned Global Address Space.
+//!
+//! "Each node in a PGAS cluster has one partition of the global address
+//! space" (paper §II-A3) — in Shoal the partition granularity is the kernel:
+//! every kernel owns a `Segment` of shared memory that remote kernels can
+//! target with Long AMs and *get* requests. A `GlobalAddress` names a byte
+//! offset within a specific kernel's partition.
+//!
+//! On FPGAs the segments live in off-chip DRAM behind the AXI DataMover; in
+//! software they are the buffers the handler thread serves. Either way the
+//! owning kernel accesses its partition directly (local access), while
+//! remote kernels go through AMs (remote access) — the PGAS local/remote
+//! distinction.
+//!
+//! Concurrency: a segment has exactly two writers — the owning kernel (local
+//! stores) and its runtime component (handler thread / GAScore DMA writes) —
+//! so an `RwLock` around the buffer is uncontended in steady state. The
+//! allocator hands out non-overlapping ranges; allocation is coarse
+//! (application setup time), not hot-path.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
+
+use crate::error::{Error, Result};
+
+/// A location in the global address space: byte `offset` within kernel
+/// `kernel`'s partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GlobalAddress {
+    pub kernel: u16,
+    pub offset: u64,
+}
+
+impl GlobalAddress {
+    pub fn new(kernel: u16, offset: u64) -> Self {
+        Self { kernel, offset }
+    }
+
+    /// Displace within the same partition.
+    pub fn plus(self, bytes: u64) -> Self {
+        Self { kernel: self.kernel, offset: self.offset + bytes }
+    }
+}
+
+/// One kernel's partition of the global address space.
+#[derive(Clone)]
+pub struct Segment {
+    inner: Arc<SegmentInner>,
+}
+
+struct SegmentInner {
+    buf: RwLock<Box<[u8]>>,
+    /// Free-list allocator state: offset → length of free block.
+    alloc: RwLock<Allocator>,
+    size: usize,
+}
+
+impl Segment {
+    /// Create a zero-initialized segment of `size` bytes.
+    pub fn new(size: usize) -> Segment {
+        Segment {
+            inner: Arc::new(SegmentInner {
+                buf: RwLock::new(vec![0u8; size].into_boxed_slice()),
+                alloc: RwLock::new(Allocator::new(size)),
+                size,
+            }),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        self.inner.size
+    }
+
+    fn check(&self, offset: u64, len: usize) -> Result<()> {
+        if offset as usize + len > self.inner.size {
+            return Err(Error::SegmentOutOfBounds { offset, len, size: self.inner.size });
+        }
+        Ok(())
+    }
+
+    /// Copy bytes out of the segment.
+    pub fn read(&self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        self.check(offset, len)?;
+        let buf = self.inner.buf.read().unwrap();
+        Ok(buf[offset as usize..offset as usize + len].to_vec())
+    }
+
+    /// Copy bytes out into a caller-provided buffer (no allocation).
+    pub fn read_into(&self, offset: u64, out: &mut [u8]) -> Result<()> {
+        self.check(offset, out.len())?;
+        let buf = self.inner.buf.read().unwrap();
+        out.copy_from_slice(&buf[offset as usize..offset as usize + out.len()]);
+        Ok(())
+    }
+
+    /// Write bytes into the segment.
+    pub fn write(&self, offset: u64, data: &[u8]) -> Result<()> {
+        self.check(offset, data.len())?;
+        let mut buf = self.inner.buf.write().unwrap();
+        buf[offset as usize..offset as usize + data.len()].copy_from_slice(data);
+        Ok(())
+    }
+
+    /// Strided scatter: block `i` of `block_len` bytes from `data` lands at
+    /// `offset + i*stride`.
+    pub fn write_strided(&self, offset: u64, stride: u32, block_len: u32, data: &[u8]) -> Result<()> {
+        if block_len == 0 {
+            return Err(Error::BadDescriptor("strided write with block_len=0".into()));
+        }
+        if data.len() % block_len as usize != 0 {
+            return Err(Error::BadDescriptor(format!(
+                "payload {} not a multiple of block {}",
+                data.len(),
+                block_len
+            )));
+        }
+        let nblocks = data.len() / block_len as usize;
+        let span = if nblocks == 0 {
+            0
+        } else {
+            (nblocks - 1) * stride as usize + block_len as usize
+        };
+        self.check(offset, span)?;
+        let mut buf = self.inner.buf.write().unwrap();
+        for i in 0..nblocks {
+            let dst = offset as usize + i * stride as usize;
+            let src = i * block_len as usize;
+            buf[dst..dst + block_len as usize]
+                .copy_from_slice(&data[src..src + block_len as usize]);
+        }
+        Ok(())
+    }
+
+    /// Strided gather: the inverse of `write_strided`.
+    pub fn read_strided(&self, offset: u64, stride: u32, block_len: u32, nblocks: u32) -> Result<Vec<u8>> {
+        if block_len == 0 {
+            return Err(Error::BadDescriptor("strided read with block_len=0".into()));
+        }
+        let span = if nblocks == 0 {
+            0
+        } else {
+            (nblocks as usize - 1) * stride as usize + block_len as usize
+        };
+        self.check(offset, span)?;
+        let buf = self.inner.buf.read().unwrap();
+        let mut out = Vec::with_capacity(block_len as usize * nblocks as usize);
+        for i in 0..nblocks as usize {
+            let src = offset as usize + i * stride as usize;
+            out.extend_from_slice(&buf[src..src + block_len as usize]);
+        }
+        Ok(out)
+    }
+
+    /// Vectored scatter over (addr, len) extents.
+    pub fn write_vectored(&self, entries: &[(u64, u32)], data: &[u8]) -> Result<()> {
+        let total: u64 = entries.iter().map(|(_, l)| *l as u64).sum();
+        if total != data.len() as u64 {
+            return Err(Error::BadDescriptor(format!(
+                "vectored extents sum {total} ≠ payload {}",
+                data.len()
+            )));
+        }
+        for (addr, len) in entries {
+            self.check(*addr, *len as usize)?;
+        }
+        let mut buf = self.inner.buf.write().unwrap();
+        let mut cursor = 0usize;
+        for (addr, len) in entries {
+            let len = *len as usize;
+            buf[*addr as usize..*addr as usize + len]
+                .copy_from_slice(&data[cursor..cursor + len]);
+            cursor += len;
+        }
+        Ok(())
+    }
+
+    /// Vectored gather.
+    pub fn read_vectored(&self, entries: &[(u64, u32)]) -> Result<Vec<u8>> {
+        for (addr, len) in entries {
+            self.check(*addr, *len as usize)?;
+        }
+        let buf = self.inner.buf.read().unwrap();
+        let total: usize = entries.iter().map(|(_, l)| *l as usize).sum();
+        let mut out = Vec::with_capacity(total);
+        for (addr, len) in entries {
+            out.extend_from_slice(&buf[*addr as usize..*addr as usize + *len as usize]);
+        }
+        Ok(out)
+    }
+
+    // -- typed helpers ------------------------------------------------------
+
+    /// Write a slice of f32 values (little-endian) at a byte offset.
+    pub fn write_f32(&self, offset: u64, vals: &[f32]) -> Result<()> {
+        self.check(offset, vals.len() * 4)?;
+        let mut buf = self.inner.buf.write().unwrap();
+        let base = offset as usize;
+        for (i, v) in vals.iter().enumerate() {
+            buf[base + 4 * i..base + 4 * i + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    /// Read `count` f32 values from a byte offset.
+    pub fn read_f32(&self, offset: u64, count: usize) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; count];
+        self.read_f32_into(offset, &mut out)?;
+        Ok(out)
+    }
+
+    /// Read f32 values into a caller-provided buffer (no allocation — the
+    /// Jacobi worker hot loop uses this for halo+tile assembly).
+    pub fn read_f32_into(&self, offset: u64, out: &mut [f32]) -> Result<()> {
+        self.check(offset, out.len() * 4)?;
+        let buf = self.inner.buf.read().unwrap();
+        let base = offset as usize;
+        for (i, v) in out.iter_mut().enumerate() {
+            *v = f32::from_le_bytes(buf[base + 4 * i..base + 4 * i + 4].try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    // -- allocation ---------------------------------------------------------
+
+    /// Allocate `len` bytes (8-byte aligned); returns the offset.
+    pub fn alloc(&self, len: usize) -> Result<u64> {
+        self.inner.alloc.write().unwrap().alloc(len)
+    }
+
+    /// Free a previously allocated block.
+    pub fn free(&self, offset: u64) -> Result<()> {
+        self.inner.alloc.write().unwrap().free(offset)
+    }
+
+    /// Bytes currently allocated.
+    pub fn allocated_bytes(&self) -> usize {
+        self.inner.alloc.read().unwrap().allocated
+    }
+}
+
+/// First-fit free-list allocator with coalescing.
+struct Allocator {
+    /// offset → len of free blocks.
+    free: BTreeMap<u64, usize>,
+    /// offset → len of live allocations.
+    live: BTreeMap<u64, usize>,
+    allocated: usize,
+}
+
+const ALIGN: usize = 8;
+
+impl Allocator {
+    fn new(size: usize) -> Self {
+        let mut free = BTreeMap::new();
+        if size > 0 {
+            free.insert(0, size);
+        }
+        Self { free, live: BTreeMap::new(), allocated: 0 }
+    }
+
+    fn alloc(&mut self, len: usize) -> Result<u64> {
+        if len == 0 {
+            return Err(Error::OutOfMemory(0));
+        }
+        let len = len.div_ceil(ALIGN) * ALIGN;
+        let slot = self
+            .free
+            .iter()
+            .find(|(_, &flen)| flen >= len)
+            .map(|(&off, &flen)| (off, flen));
+        match slot {
+            Some((off, flen)) => {
+                self.free.remove(&off);
+                if flen > len {
+                    self.free.insert(off + len as u64, flen - len);
+                }
+                self.live.insert(off, len);
+                self.allocated += len;
+                Ok(off)
+            }
+            None => Err(Error::OutOfMemory(len)),
+        }
+    }
+
+    fn free(&mut self, offset: u64) -> Result<()> {
+        let len = self
+            .live
+            .remove(&offset)
+            .ok_or_else(|| Error::BadDescriptor(format!("free of unallocated offset {offset}")))?;
+        self.allocated -= len;
+        // Insert and coalesce with neighbours.
+        let mut start = offset;
+        let mut size = len;
+        if let Some((&poff, &plen)) = self.free.range(..offset).next_back() {
+            if poff + plen as u64 == offset {
+                self.free.remove(&poff);
+                start = poff;
+                size += plen;
+            }
+        }
+        if let Some(&nlen) = self.free.get(&(offset + len as u64)) {
+            self.free.remove(&(offset + len as u64));
+            size += nlen;
+        }
+        self.free.insert(start, size);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn read_write_roundtrip() {
+        let s = Segment::new(1024);
+        s.write(100, &[1, 2, 3]).unwrap();
+        assert_eq!(s.read(100, 3).unwrap(), vec![1, 2, 3]);
+        assert_eq!(s.read(99, 1).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn bounds_checked() {
+        let s = Segment::new(16);
+        assert!(matches!(s.write(10, &[0; 7]), Err(Error::SegmentOutOfBounds { .. })));
+        assert!(s.read(16, 1).is_err());
+        assert!(s.write(0, &[0; 16]).is_ok());
+    }
+
+    #[test]
+    fn f32_typed_access() {
+        let s = Segment::new(64);
+        s.write_f32(8, &[1.5, -2.25, 3.0]).unwrap();
+        assert_eq!(s.read_f32(8, 3).unwrap(), vec![1.5, -2.25, 3.0]);
+    }
+
+    #[test]
+    fn strided_scatter_gather() {
+        let s = Segment::new(256);
+        let data: Vec<u8> = (0..32).collect();
+        s.write_strided(0, 16, 8, &data).unwrap(); // 4 blocks of 8 at stride 16
+        assert_eq!(s.read(0, 8).unwrap(), (0..8).collect::<Vec<u8>>());
+        assert_eq!(s.read(16, 8).unwrap(), (8..16).collect::<Vec<u8>>());
+        assert_eq!(s.read(8, 8).unwrap(), vec![0; 8]); // gaps untouched
+        let back = s.read_strided(0, 16, 8, 4).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn strided_rejects_bad_payload() {
+        let s = Segment::new(256);
+        assert!(s.write_strided(0, 16, 8, &[0; 12]).is_err()); // not multiple
+        assert!(s.write_strided(0, 16, 0, &[]).is_err());
+        assert!(s.write_strided(240, 16, 8, &[0; 16]).is_err()); // out of bounds
+    }
+
+    #[test]
+    fn vectored_scatter_gather() {
+        let s = Segment::new(128);
+        let entries = [(0u64, 4u32), (100, 8), (50, 4)];
+        let data: Vec<u8> = (1..=16).collect();
+        s.write_vectored(&entries, &data).unwrap();
+        assert_eq!(s.read(0, 4).unwrap(), vec![1, 2, 3, 4]);
+        assert_eq!(s.read(100, 8).unwrap(), (5..=12).collect::<Vec<u8>>());
+        assert_eq!(s.read(50, 4).unwrap(), vec![13, 14, 15, 16]);
+        assert_eq!(s.read_vectored(&entries).unwrap(), data);
+    }
+
+    #[test]
+    fn vectored_rejects_mismatch() {
+        let s = Segment::new(128);
+        assert!(s.write_vectored(&[(0, 4)], &[0; 5]).is_err());
+        assert!(s.write_vectored(&[(126, 4)], &[0; 4]).is_err());
+    }
+
+    #[test]
+    fn allocator_basics() {
+        let s = Segment::new(1024);
+        let a = s.alloc(100).unwrap();
+        let b = s.alloc(100).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(s.allocated_bytes(), 104 + 104); // 8-byte aligned
+        s.free(a).unwrap();
+        let c = s.alloc(50).unwrap();
+        assert_eq!(c, a); // first fit reuses the hole
+        assert!(s.free(999).is_err());
+    }
+
+    #[test]
+    fn allocator_exhaustion_and_coalesce() {
+        let s = Segment::new(256);
+        let a = s.alloc(128).unwrap();
+        let b = s.alloc(128).unwrap();
+        assert!(s.alloc(8).is_err());
+        s.free(a).unwrap();
+        s.free(b).unwrap();
+        // Full coalesce: a 256-byte allocation must fit again.
+        let c = s.alloc(256).unwrap();
+        assert_eq!(c, 0);
+    }
+
+    #[test]
+    fn allocations_never_overlap() {
+        let s = Segment::new(4096);
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        for i in 0..32 {
+            let len = 32 + (i % 7) * 24;
+            let off = s.alloc(len).unwrap();
+            for &(o, l) in &live {
+                let sep = off + len as u64 <= o || o + l as u64 <= off;
+                assert!(sep, "overlap: ({off},{len}) vs ({o},{l})");
+            }
+            live.push((off, len));
+        }
+    }
+
+    #[test]
+    fn concurrent_readers_and_writer() {
+        let s = Segment::new(4096);
+        let s2 = s.clone();
+        let w = std::thread::spawn(move || {
+            for i in 0..1000u32 {
+                s2.write(0, &i.to_le_bytes()).unwrap();
+            }
+        });
+        for _ in 0..1000 {
+            let v = s.read(0, 4).unwrap();
+            let x = u32::from_le_bytes(v.try_into().unwrap());
+            assert!(x < 1000);
+        }
+        w.join().unwrap();
+    }
+}

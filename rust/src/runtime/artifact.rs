@@ -1,0 +1,126 @@
+//! Artifact manifest schema (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py`; one entry per AOT-lowered tile shape.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One lowered executable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    /// Graph kind (currently `jacobi_step`).
+    pub kind: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Input literal shape.
+    pub input: Vec<usize>,
+    /// Output literal shape.
+    pub output: Vec<usize>,
+    pub dtype: String,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub version: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text)?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact("manifest missing 'version'".into()))?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let arts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| Error::Artifact("manifest missing 'artifacts'".into()))?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for (i, a) in arts.iter().enumerate() {
+            let field = |k: &str| -> Result<&Json> {
+                a.get(k)
+                    .ok_or_else(|| Error::Artifact(format!("artifact {i} missing '{k}'")))
+            };
+            let s = |k: &str| -> Result<String> {
+                field(k)?
+                    .as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Artifact(format!("artifact {i}: '{k}' not a string")))
+            };
+            let n = |k: &str| -> Result<usize> {
+                field(k)?
+                    .as_usize()
+                    .ok_or_else(|| Error::Artifact(format!("artifact {i}: '{k}' not a number")))
+            };
+            let shape = |k: &str| -> Result<Vec<usize>> {
+                field(k)?
+                    .as_arr()
+                    .map(|xs| xs.iter().filter_map(Json::as_usize).collect())
+                    .ok_or_else(|| Error::Artifact(format!("artifact {i}: '{k}' not an array")))
+            };
+            artifacts.push(ArtifactEntry {
+                name: s("name")?,
+                file: s("file")?,
+                kind: s("kind")?,
+                rows: n("rows")?,
+                cols: n("cols")?,
+                input: shape("input")?,
+                output: shape("output")?,
+                dtype: s("dtype")?,
+            });
+        }
+        Ok(Manifest { version, artifacts })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "artifacts": [
+        {"name": "jacobi_r8_c16", "file": "jacobi_r8_c16.hlo.txt",
+         "kind": "jacobi_step", "rows": 8, "cols": 16,
+         "input": [10, 16], "output": [8, 16], "dtype": "f32"}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        assert_eq!(m.artifacts.len(), 1);
+        let a = &m.artifacts[0];
+        assert_eq!(a.name, "jacobi_r8_c16");
+        assert_eq!(a.input, vec![10, 16]);
+        assert_eq!(a.rows, 8);
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        assert!(Manifest::parse(r#"{"version": 9, "artifacts": []}"#).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let bad = r#"{"version": 1, "artifacts": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,635 @@
+//! `ShoalKernel` — the heterogeneous communication API (paper §III-A).
+//!
+//! The same function prototypes serve software and hardware kernels; only
+//! the runtime behind them differs (handler thread vs. GAScore). Message
+//! classes:
+//!
+//! | call                  | class        | payload source | destination    |
+//! |-----------------------|--------------|----------------|----------------|
+//! | `am_short`            | Short        | —              | handler only   |
+//! | `am_medium`           | Medium FIFO  | kernel         | kernel stream  |
+//! | `am_medium_from_mem`  | Medium       | shared memory  | kernel stream  |
+//! | `am_long`             | Long FIFO    | kernel         | shared memory  |
+//! | `am_long_from_mem`    | Long         | shared memory  | shared memory  |
+//! | `am_long_strided`     | Long Strided | kernel         | strided scatter|
+//! | `am_long_vectored`    | Long Vectored| kernel         | extent scatter |
+//! | `am_medium_get`       | Medium get   | remote memory  | kernel stream  |
+//! | `am_long_get`         | Long get     | remote memory  | local memory   |
+//!
+//! Every non-async request elicits exactly one reply at the destination;
+//! `wait_replies(n)` blocks until `n` outstanding replies have arrived
+//! ("Kernels can therefore send several messages and then collectively wait
+//! for the same number of replies").
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::am::engine::{barrier_op, BarrierState, ReceivedMedium, ReplyState};
+use crate::am::handlers::HandlerTable;
+use crate::am::header::{AmMessage, Descriptor};
+use crate::am::types::{handler_ids, AmFlags, AmType};
+use crate::config::{ApiProfile, ChunkPolicy, ClusterSpec};
+use crate::error::{Error, Result};
+use crate::galapagos::packet::Packet;
+use crate::galapagos::router::RouterMsg;
+use crate::memory::Segment;
+
+pub use crate::am::engine::ReceivedMedium as Medium;
+
+/// Default timeout for blocking waits. Generous: the Jacobi benchmarks keep
+/// thousands of AMs in flight over loopback TCP.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Receipt returned by send operations: the number of AMs actually emitted
+/// (> 1 when the chunking extension split an oversized payload), which is
+/// also the number of replies the operation will generate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SendReceipt {
+    pub messages: u64,
+}
+
+/// The per-kernel API handle. Obtained from
+/// [`ShoalCluster`](crate::shoal_node::cluster::ShoalCluster); moved into the
+/// kernel function's thread.
+pub struct ShoalKernel {
+    pub(crate) id: u16,
+    pub(crate) spec: Arc<ClusterSpec>,
+    pub(crate) router_tx: std::sync::mpsc::Sender<RouterMsg>,
+    pub(crate) segment: Segment,
+    pub(crate) replies: Arc<ReplyState>,
+    pub(crate) barrier_state: Arc<BarrierState>,
+    pub(crate) handlers: Arc<HandlerTable>,
+    pub(crate) medium_rx: Receiver<ReceivedMedium>,
+    /// Replies consumed by previous `wait_replies` calls.
+    consumed: u64,
+    /// Barrier epoch counter (local).
+    epoch: u64,
+    token: u32,
+    pub timeout: Duration,
+}
+
+impl ShoalKernel {
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        id: u16,
+        spec: Arc<ClusterSpec>,
+        router_tx: std::sync::mpsc::Sender<RouterMsg>,
+        segment: Segment,
+        replies: Arc<ReplyState>,
+        barrier_state: Arc<BarrierState>,
+        handlers: Arc<HandlerTable>,
+        medium_rx: Receiver<ReceivedMedium>,
+    ) -> ShoalKernel {
+        ShoalKernel {
+            id,
+            spec,
+            router_tx,
+            segment,
+            replies,
+            barrier_state,
+            handlers,
+            medium_rx,
+            consumed: 0,
+            epoch: 0,
+            token: 0,
+            timeout: DEFAULT_TIMEOUT,
+        }
+    }
+
+    /// This kernel's globally unique id.
+    pub fn id(&self) -> u16 {
+        self.id
+    }
+
+    /// Number of kernels in the cluster.
+    pub fn kernel_count(&self) -> usize {
+        self.spec.kernel_count()
+    }
+
+    /// This kernel's partition of the global address space (local access —
+    /// the cheap side of the PGAS local/remote distinction).
+    pub fn mem(&self) -> &Segment {
+        &self.segment
+    }
+
+    /// The cluster description.
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    fn profile(&self) -> &ApiProfile {
+        &self.spec.profile
+    }
+
+    fn next_token(&mut self) -> u32 {
+        self.token = self.token.wrapping_add(1);
+        self.token
+    }
+
+    fn send_msg(&self, msg: &AmMessage) -> Result<()> {
+        let bytes = msg.encode()?;
+        let pkt = Packet::new(msg.dst, msg.src, bytes)?;
+        self.router_tx
+            .send(RouterMsg::FromKernel(pkt))
+            .map_err(|_| Error::Disconnected("router"))
+    }
+
+    // -- Short ---------------------------------------------------------------
+
+    /// Send a Short AM (signaling; no payload). Returns after local emit.
+    pub fn am_short(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<SendReceipt> {
+        self.am_short_flags(dst, handler, args, AmFlags::new())
+    }
+
+    /// Asynchronous Short AM — no reply will be generated.
+    pub fn am_short_async(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<SendReceipt> {
+        self.am_short_flags(dst, handler, args, AmFlags::new().with(AmFlags::ASYNC))
+    }
+
+    fn am_short_flags(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        flags: AmFlags,
+    ) -> Result<SendReceipt> {
+        if !self.profile().short {
+            return Err(Error::ProfileViolation("short"));
+        }
+        self.spec.kernel(dst)?;
+        let token = self.next_token();
+        self.send_msg(&AmMessage {
+            am_type: AmType::Short,
+            flags,
+            src: self.id,
+            dst,
+            handler,
+            token,
+            args: args.to_vec(),
+            desc: Descriptor::None,
+            payload: vec![],
+        })?;
+        Ok(SendReceipt { messages: if flags.is_async() { 0 } else { 1 } })
+    }
+
+    // -- Medium ---------------------------------------------------------------
+
+    /// Medium FIFO put: payload from this kernel to the destination kernel's
+    /// stream ("point-to-point communication for one kernel to send data
+    /// directly to another kernel").
+    pub fn am_medium(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+    ) -> Result<SendReceipt> {
+        self.medium_impl(dst, handler, args, payload.to_vec(), AmFlags::new().with(AmFlags::FIFO))
+    }
+
+    /// Asynchronous Medium FIFO put.
+    pub fn am_medium_async(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+    ) -> Result<SendReceipt> {
+        self.medium_impl(
+            dst,
+            handler,
+            args,
+            payload.to_vec(),
+            AmFlags::new().with(AmFlags::FIFO).with(AmFlags::ASYNC),
+        )
+    }
+
+    /// Medium put whose payload the runtime reads from this kernel's memory
+    /// partition (`src_offset`, `len`) — the non-FIFO variant of §III-A.
+    pub fn am_medium_from_mem(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        src_offset: u64,
+        len: usize,
+    ) -> Result<SendReceipt> {
+        let payload = self.segment.read(src_offset, len)?;
+        self.medium_impl(dst, handler, args, payload, AmFlags::new())
+    }
+
+    fn medium_impl(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: Vec<u8>,
+        flags: AmFlags,
+    ) -> Result<SendReceipt> {
+        if !self.profile().medium {
+            return Err(Error::ProfileViolation("medium"));
+        }
+        self.spec.kernel(dst)?;
+        let token = self.next_token();
+        let msg = AmMessage {
+            am_type: AmType::Medium,
+            flags,
+            src: self.id,
+            dst,
+            handler,
+            token,
+            args: args.to_vec(),
+            desc: Descriptor::None,
+            payload,
+        };
+        if msg.payload.len() > msg.max_payload_for() {
+            // Medium payloads are a kernel-stream datum; chunking would change
+            // message boundaries, so it is always an error (the Jacobi halo
+            // exchange failure mode of §IV-C1).
+            return Err(Error::AmTooLarge {
+                payload: msg.payload.len(),
+                limit: msg.max_payload_for(),
+            });
+        }
+        self.send_msg(&msg)?;
+        Ok(SendReceipt { messages: if flags.is_async() { 0 } else { 1 } })
+    }
+
+    /// Medium get: bring `len` bytes at `src_addr` in the destination
+    /// kernel's partition back to this kernel's stream. The data arrives as
+    /// a [`ReceivedMedium`] and counts as one reply per emitted chunk.
+    pub fn am_medium_get(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        src_addr: u64,
+        len: usize,
+    ) -> Result<SendReceipt> {
+        if !self.profile().medium || !self.profile().gets {
+            return Err(Error::ProfileViolation("medium get"));
+        }
+        self.spec.kernel(dst)?;
+        let probe = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::GET),
+            src: self.id,
+            dst,
+            handler,
+            token: 0,
+            args: vec![0],
+            desc: Descriptor::MediumGet { src_addr, len: 0 },
+            payload: vec![],
+        };
+        let max = probe.max_payload_for();
+        let chunks = self.chunk_ranges(len, max)?;
+        let n = chunks.len() as u64;
+        for (off, clen) in chunks {
+            let token = self.next_token();
+            self.send_msg(&AmMessage {
+                am_type: AmType::Medium,
+                flags: AmFlags::new().with(AmFlags::GET),
+                src: self.id,
+                dst,
+                handler,
+                token,
+                // Final arg carries the chunk's byte offset so the receiver
+                // can reassemble multi-chunk gets.
+                args: vec![off],
+                desc: Descriptor::MediumGet { src_addr: src_addr + off, len: clen as u32 },
+                payload: vec![],
+            })?;
+        }
+        Ok(SendReceipt { messages: n })
+    }
+
+    // -- Long -----------------------------------------------------------------
+
+    /// Long FIFO put: payload from this kernel, written into the destination
+    /// kernel's partition at `dst_addr`.
+    pub fn am_long(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+        dst_addr: u64,
+    ) -> Result<SendReceipt> {
+        self.long_impl(dst, handler, args, payload, dst_addr, AmFlags::new().with(AmFlags::FIFO))
+    }
+
+    /// Asynchronous Long FIFO put.
+    pub fn am_long_async(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+        dst_addr: u64,
+    ) -> Result<SendReceipt> {
+        self.long_impl(
+            dst,
+            handler,
+            args,
+            payload,
+            dst_addr,
+            AmFlags::new().with(AmFlags::FIFO).with(AmFlags::ASYNC),
+        )
+    }
+
+    /// Long put whose payload the runtime reads from this kernel's partition.
+    pub fn am_long_from_mem(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        src_offset: u64,
+        len: usize,
+        dst_addr: u64,
+    ) -> Result<SendReceipt> {
+        let payload = self.segment.read(src_offset, len)?;
+        self.long_impl(dst, handler, args, &payload, dst_addr, AmFlags::new())
+    }
+
+    fn long_impl(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+        dst_addr: u64,
+        flags: AmFlags,
+    ) -> Result<SendReceipt> {
+        if !self.profile().long {
+            return Err(Error::ProfileViolation("long"));
+        }
+        self.spec.kernel(dst)?;
+        let probe = AmMessage {
+            am_type: AmType::Long,
+            flags,
+            src: self.id,
+            dst,
+            handler,
+            token: 0,
+            args: args.to_vec(),
+            desc: Descriptor::Long { dst_addr },
+            payload: vec![],
+        };
+        let max = probe.max_payload_for();
+        let chunks = self.chunk_ranges(payload.len(), max)?;
+        let n = chunks.len() as u64;
+        for (off, clen) in chunks {
+            let token = self.next_token();
+            self.send_msg(&AmMessage {
+                am_type: AmType::Long,
+                flags,
+                src: self.id,
+                dst,
+                handler,
+                token,
+                args: args.to_vec(),
+                desc: Descriptor::Long { dst_addr: dst_addr + off },
+                payload: payload[off as usize..off as usize + clen].to_vec(),
+            })?;
+        }
+        Ok(SendReceipt { messages: if flags.is_async() { 0 } else { n } })
+    }
+
+    /// Long get: read `len` bytes at `src_addr` in the destination kernel's
+    /// partition; the reply writes them at `reply_addr` in *this* kernel's
+    /// partition. Completion = `wait_replies(receipt.messages)`.
+    pub fn am_long_get(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        src_addr: u64,
+        len: usize,
+        reply_addr: u64,
+    ) -> Result<SendReceipt> {
+        if !self.profile().long || !self.profile().gets {
+            return Err(Error::ProfileViolation("long get"));
+        }
+        self.spec.kernel(dst)?;
+        let probe = AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new().with(AmFlags::REPLY),
+            src: dst,
+            dst: self.id,
+            handler,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Long { dst_addr: reply_addr },
+            payload: vec![],
+        };
+        let max = probe.max_payload_for();
+        let chunks = self.chunk_ranges(len, max)?;
+        let n = chunks.len() as u64;
+        for (off, clen) in chunks {
+            let token = self.next_token();
+            self.send_msg(&AmMessage {
+                am_type: AmType::Long,
+                flags: AmFlags::new().with(AmFlags::GET),
+                src: self.id,
+                dst,
+                handler,
+                token,
+                args: vec![],
+                desc: Descriptor::LongGet {
+                    src_addr: src_addr + off,
+                    len: clen as u32,
+                    reply_addr: reply_addr + off,
+                },
+                payload: vec![],
+            })?;
+        }
+        Ok(SendReceipt { messages: n })
+    }
+
+    /// Strided Long put: block `i` of `block_len` bytes lands at
+    /// `dst_addr + i*stride` in the destination's partition.
+    pub fn am_long_strided(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+        dst_addr: u64,
+        stride: u32,
+        block_len: u32,
+    ) -> Result<SendReceipt> {
+        if !self.profile().strided {
+            return Err(Error::ProfileViolation("strided"));
+        }
+        self.spec.kernel(dst)?;
+        if block_len == 0 || payload.len() % block_len as usize != 0 {
+            return Err(Error::BadDescriptor(format!(
+                "strided payload {} not a multiple of block_len {block_len}",
+                payload.len()
+            )));
+        }
+        let nblocks = (payload.len() / block_len as usize) as u32;
+        let token = self.next_token();
+        let msg = AmMessage {
+            am_type: AmType::LongStrided,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: self.id,
+            dst,
+            handler,
+            token,
+            args: args.to_vec(),
+            desc: Descriptor::Strided { dst_addr, stride, block_len, nblocks },
+            payload: payload.to_vec(),
+        };
+        if msg.payload.len() > msg.max_payload_for() {
+            return Err(Error::AmTooLarge {
+                payload: msg.payload.len(),
+                limit: msg.max_payload_for(),
+            });
+        }
+        self.send_msg(&msg)?;
+        Ok(SendReceipt { messages: 1 })
+    }
+
+    /// Vectored Long put: payload split over explicit (addr, len) extents.
+    pub fn am_long_vectored(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        payload: &[u8],
+        entries: &[(u64, u32)],
+    ) -> Result<SendReceipt> {
+        if !self.profile().vectored {
+            return Err(Error::ProfileViolation("vectored"));
+        }
+        self.spec.kernel(dst)?;
+        let token = self.next_token();
+        let msg = AmMessage {
+            am_type: AmType::LongVectored,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: self.id,
+            dst,
+            handler,
+            token,
+            args: args.to_vec(),
+            desc: Descriptor::Vectored { entries: entries.to_vec() },
+            payload: payload.to_vec(),
+        };
+        msg.validate()?;
+        if msg.payload.len() > msg.max_payload_for() {
+            return Err(Error::AmTooLarge {
+                payload: msg.payload.len(),
+                limit: msg.max_payload_for(),
+            });
+        }
+        self.send_msg(&msg)?;
+        Ok(SendReceipt { messages: 1 })
+    }
+
+    // -- completion ------------------------------------------------------------
+
+    /// Block until `n` more replies have arrived (cumulative bookkeeping is
+    /// internal; callers sum the `SendReceipt.messages` of the operations
+    /// they are waiting on).
+    pub fn wait_replies(&mut self, n: u64) -> Result<()> {
+        let target = self.consumed + n;
+        self.replies.wait_total(target, self.timeout)?;
+        self.consumed = target;
+        Ok(())
+    }
+
+    /// Replies received but not yet consumed by `wait_replies`.
+    pub fn pending_replies(&self) -> u64 {
+        self.replies.total() - self.consumed
+    }
+
+    /// Blocking receive of the next Medium payload.
+    pub fn recv_medium(&self) -> Result<ReceivedMedium> {
+        self.medium_rx
+            .recv_timeout(self.timeout)
+            .map_err(|e| match e {
+                std::sync::mpsc::RecvTimeoutError::Timeout => Error::Timeout("medium receive"),
+                _ => Error::Disconnected("medium stream"),
+            })
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv_medium(&self) -> Result<Option<ReceivedMedium>> {
+        match self.medium_rx.try_recv() {
+            Ok(m) => Ok(Some(m)),
+            Err(std::sync::mpsc::TryRecvError::Empty) => Ok(None),
+            Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                Err(Error::Disconnected("medium stream"))
+            }
+        }
+    }
+
+    /// Register a user handler (software kernels only, as in the paper).
+    pub fn register_handler(
+        &self,
+        id: u8,
+        f: impl Fn(crate::am::handlers::HandlerArgs<'_>) + Send + Sync + 'static,
+    ) -> Result<()> {
+        if !self.profile().user_handlers {
+            return Err(Error::ProfileViolation("user handlers"));
+        }
+        self.handlers.register(id, Box::new(f))
+    }
+
+    // -- barrier ----------------------------------------------------------------
+
+    /// Cluster-wide barrier over Short AMs. The lowest kernel id acts as the
+    /// master: it counts ENTER messages and broadcasts RELEASE.
+    pub fn barrier(&mut self) -> Result<()> {
+        if !self.profile().barrier {
+            return Err(Error::ProfileViolation("barrier"));
+        }
+        self.epoch += 1;
+        let epoch = self.epoch;
+        let mut ids: Vec<u16> = self.spec.kernels.iter().map(|k| k.id).collect();
+        ids.sort_unstable();
+        let master = ids[0];
+        let n = ids.len() as u64;
+        if n == 1 {
+            return Ok(());
+        }
+        if self.id == master {
+            self.barrier_state
+                .wait_enters(epoch, n - 1, self.timeout)?;
+            for &kid in ids.iter().skip(1) {
+                self.am_short_async(
+                    kid,
+                    handler_ids::BARRIER,
+                    &[barrier_op::RELEASE, epoch],
+                )?;
+            }
+            Ok(())
+        } else {
+            self.am_short_async(master, handler_ids::BARRIER, &[barrier_op::ENTER, epoch])?;
+            self.barrier_state.wait_release(epoch, self.timeout)
+        }
+    }
+
+    // -- helpers ----------------------------------------------------------------
+
+    /// Split `len` bytes into per-message ranges obeying the packet cap and
+    /// the cluster chunk policy. Returns (offset, len) pairs.
+    fn chunk_ranges(&self, len: usize, max: usize) -> Result<Vec<(u64, usize)>> {
+        if len <= max {
+            return Ok(vec![(0, len)]);
+        }
+        match self.spec.chunk_policy {
+            ChunkPolicy::Reject => Err(Error::AmTooLarge { payload: len, limit: max }),
+            ChunkPolicy::Chunked => {
+                let mut out = Vec::with_capacity(len.div_ceil(max));
+                let mut off = 0usize;
+                while off < len {
+                    let clen = max.min(len - off);
+                    out.push((off as u64, clen));
+                    off += clen;
+                }
+                Ok(out)
+            }
+        }
+    }
+}

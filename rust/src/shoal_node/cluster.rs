@@ -1,0 +1,345 @@
+//! `ShoalCluster` — launch a whole heterogeneous cluster in one process.
+//!
+//! Mirrors the Galapagos deployment flow: from a `ClusterSpec` it brings up
+//! every node (router + transport), attaches the Shoal runtime (handler
+//! threads on software nodes, a GAScore per hardware node), and then runs
+//! user *kernel functions* on threads — "Software Shoal kernels are defined
+//! through a function pointer to a kernel function that gets started as a
+//! separate thread by the software Shoal node" (§III-B). Hardware kernels
+//! run the same way here, standing in for the HLS control logic, but their
+//! runtime path goes through the GAScore simulator.
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::am::engine::{BarrierState, KernelRuntime, ReplyState};
+use crate::am::handlers::HandlerTable;
+use crate::config::{ClusterSpec, Platform};
+use crate::error::{Error, Result};
+use crate::galapagos::node::{BoundNode, GalapagosNode};
+use crate::galapagos::transport::local::LocalFabric;
+use crate::gascore::server::GAScoreServer;
+use crate::gascore::GAScoreStats;
+use crate::memory::Segment;
+use crate::shoal_node::api::ShoalKernel;
+use crate::shoal_node::handler_thread::HandlerThread;
+
+/// A running cluster.
+pub struct ShoalCluster {
+    spec: Arc<ClusterSpec>,
+    nodes: Vec<GalapagosNode>,
+    handler_threads: Vec<HandlerThread>,
+    gascores: Vec<GAScoreServer>,
+    /// Egress adapter threads for hardware nodes.
+    adapters: Vec<JoinHandle<()>>,
+    /// Unclaimed kernel API handles.
+    kernels: Mutex<HashMap<u16, ShoalKernel>>,
+    /// Handler tables, kept for pre-run registration.
+    tables: HashMap<u16, Arc<HandlerTable>>,
+    /// Threads started by `run_kernel`.
+    running: Mutex<Vec<(u16, JoinHandle<()>)>>,
+}
+
+impl ShoalCluster {
+    /// Bring up every node of `spec` in this process and prepare one
+    /// `ShoalKernel` handle per kernel.
+    pub fn launch(spec: &ClusterSpec) -> Result<ShoalCluster> {
+        Self::launch_inner(spec, None)
+    }
+
+    /// Bring up **one** node of a multi-process cluster: this process hosts
+    /// `node_id`'s router/transport/runtime and kernels; every other node is
+    /// reached at the address written in the spec (so the cluster file must
+    /// use explicit ports, not `:0`). The Galapagos deployment model — one
+    /// process per processor, one (simulated) bitstream per FPGA — run for
+    /// real: see `shoal serve` and `rust/tests/multiprocess.rs`.
+    pub fn launch_node(spec: &ClusterSpec, node_id: u16) -> Result<ShoalCluster> {
+        spec.node(node_id)?;
+        if spec.transport == crate::config::TransportKind::Local {
+            return Err(Error::Config(
+                "multi-process clusters need a network transport (tcp/udp)".into(),
+            ));
+        }
+        Self::launch_inner(spec, Some(node_id))
+    }
+
+    fn launch_inner(spec: &ClusterSpec, only_node: Option<u16>) -> Result<ShoalCluster> {
+        spec.validate()?;
+        let spec = Arc::new(spec.clone());
+        let fabric = LocalFabric::new();
+
+        // Nodes this process hosts.
+        let hosted: Vec<u16> = match only_node {
+            Some(id) => vec![id],
+            None => spec.nodes.iter().map(|n| n.id).collect(),
+        };
+
+        // Phase 1: bind hosted nodes, learn advertised addresses. Remote
+        // nodes (multi-process mode) are reached at their spec addresses.
+        let mut bound = Vec::new();
+        for &node_id in &hosted {
+            bound.push(BoundNode::bind(&spec, node_id)?);
+        }
+        let mut addrs: HashMap<u16, String> = spec
+            .nodes
+            .iter()
+            .filter(|n| !hosted.contains(&n.id))
+            .filter_map(|n| n.address.clone().map(|a| (n.id, a)))
+            .collect();
+        for b in &bound {
+            if let Some(a) = b.advertised_addr.clone() {
+                addrs.insert(b.node_id(), a);
+            }
+        }
+
+        // Per-kernel runtime state.
+        struct KState {
+            segment: Segment,
+            replies: Arc<ReplyState>,
+            barrier: Arc<BarrierState>,
+            handlers: Arc<HandlerTable>,
+            medium_tx: mpsc::Sender<crate::am::engine::ReceivedMedium>,
+            medium_rx: Option<mpsc::Receiver<crate::am::engine::ReceivedMedium>>,
+        }
+        let mut kstate: HashMap<u16, KState> = HashMap::new();
+        let mut tables = HashMap::new();
+        for k in spec.kernels.iter().filter(|k| hosted.contains(&k.node)) {
+            let platform = spec.node(k.node)?.platform;
+            let handlers = Arc::new(match platform {
+                Platform::Sw => HandlerTable::software(),
+                Platform::Hw => HandlerTable::hardware(),
+            });
+            tables.insert(k.id, Arc::clone(&handlers));
+            let (mtx, mrx) = mpsc::channel();
+            kstate.insert(
+                k.id,
+                KState {
+                    segment: Segment::new(k.segment_size),
+                    replies: ReplyState::new(),
+                    barrier: BarrierState::new(),
+                    handlers,
+                    medium_tx: mtx,
+                    medium_rx: Some(mrx),
+                },
+            );
+        }
+
+        // Phase 2: start nodes with platform-appropriate delivery, spawn the
+        // runtime components.
+        let mut nodes = Vec::new();
+        let mut handler_threads = Vec::new();
+        let mut gascores = Vec::new();
+        let mut adapters: Vec<JoinHandle<()>> = Vec::new();
+        let mut router_txs: HashMap<u16, mpsc::Sender<crate::galapagos::router::RouterMsg>> =
+            HashMap::new();
+
+        for b in bound {
+            let node_id = b.node_id();
+            let platform = spec.node(node_id)?.platform;
+            let local_kernels = spec.kernels_on(node_id);
+            let peer_addrs: HashMap<u16, String> = addrs
+                .iter()
+                .filter(|(id, _)| **id != node_id)
+                .map(|(id, a)| (*id, a.clone()))
+                .collect();
+
+            let make_rt = |kid: u16, ks: &KState| KernelRuntime {
+                kernel_id: kid,
+                segment: ks.segment.clone(),
+                replies: Arc::clone(&ks.replies),
+                barrier: Arc::clone(&ks.barrier),
+                handlers: Arc::clone(&ks.handlers),
+                medium_tx: ks.medium_tx.clone(),
+            };
+
+            match platform {
+                Platform::Sw => {
+                    // One delivery channel and handler thread per kernel.
+                    let mut delivery = HashMap::new();
+                    let mut pending = Vec::new();
+                    for &kid in &local_kernels {
+                        let (tx, rx) = mpsc::channel();
+                        delivery.insert(kid, tx);
+                        pending.push((kid, rx));
+                    }
+                    let node = b.start_with_delivery(peer_addrs, &fabric, delivery)?;
+                    let router_tx = node.router_tx();
+                    for (kid, rx) in pending {
+                        let ks = kstate.get(&kid).unwrap();
+                        handler_threads.push(HandlerThread::spawn(
+                            make_rt(kid, ks),
+                            rx,
+                            router_tx.clone(),
+                        ));
+                    }
+                    router_txs.insert(node_id, node.router_tx());
+                    nodes.push(node);
+                }
+                Platform::Hw => {
+                    // All kernels share the GAScore's single ingress channel.
+                    let (tx, rx) = mpsc::channel();
+                    let delivery: HashMap<u16, _> =
+                        local_kernels.iter().map(|&kid| (kid, tx.clone())).collect();
+                    let node = b.start_with_delivery(peer_addrs, &fabric, delivery)?;
+                    let runtimes: Vec<KernelRuntime> = local_kernels
+                        .iter()
+                        .map(|&kid| make_rt(kid, kstate.get(&kid).unwrap()))
+                        .collect();
+                    let gascore =
+                        GAScoreServer::spawn(node_id, runtimes, rx, node.router_tx());
+
+                    // Hardware kernels send through the GAScore's
+                    // "From Kernels" interface (§III-C egress step 1), not
+                    // straight to the router: adapt the kernel-facing
+                    // RouterMsg channel onto the GAScore stream.
+                    let kernel_tx = gascore.kernel_tx();
+                    let (adapter_tx, adapter_rx) = mpsc::channel();
+                    let adapter = std::thread::Builder::new()
+                        .name(format!("gascore-egress-n{node_id}"))
+                        .spawn(move || {
+                            while let Ok(msg) = adapter_rx.recv() {
+                                if let crate::galapagos::router::RouterMsg::FromKernel(pkt) = msg
+                                {
+                                    if kernel_tx
+                                        .send(crate::gascore::server::GAScoreMsg::FromKernels(
+                                            pkt,
+                                        ))
+                                        .is_err()
+                                    {
+                                        break;
+                                    }
+                                }
+                            }
+                        })
+                        .expect("spawn gascore egress adapter");
+                    adapters.push(adapter);
+
+                    gascores.push(gascore);
+                    router_txs.insert(node_id, adapter_tx);
+                    nodes.push(node);
+                }
+            }
+        }
+
+        // Build the API handles (hosted kernels only).
+        let mut kernels = HashMap::new();
+        for k in spec.kernels.iter().filter(|k| hosted.contains(&k.node)) {
+            let ks = kstate.get_mut(&k.id).unwrap();
+            let router_tx = router_txs
+                .get(&k.node)
+                .ok_or(Error::UnknownNode(k.node))?
+                .clone();
+            kernels.insert(
+                k.id,
+                ShoalKernel::new(
+                    k.id,
+                    Arc::clone(&spec),
+                    router_tx,
+                    ks.segment.clone(),
+                    Arc::clone(&ks.replies),
+                    Arc::clone(&ks.barrier),
+                    Arc::clone(&ks.handlers),
+                    ks.medium_rx.take().expect("medium receiver claimed once"),
+                ),
+            );
+        }
+
+        Ok(ShoalCluster {
+            spec,
+            nodes,
+            handler_threads,
+            gascores,
+            adapters,
+            kernels: Mutex::new(kernels),
+            tables,
+            running: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The cluster description.
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    /// Claim a kernel's API handle to drive it from the current thread.
+    pub fn take_kernel(&self, id: u16) -> Result<ShoalKernel> {
+        self.kernels
+            .lock()
+            .unwrap()
+            .remove(&id)
+            .ok_or(Error::UnknownKernel(id))
+    }
+
+    /// Start kernel `id`'s kernel function on its own thread (the
+    /// libGalapagos model). Panics in kernel functions are surfaced by
+    /// [`ShoalCluster::join`].
+    pub fn run_kernel(&self, id: u16, f: impl FnOnce(ShoalKernel) + Send + 'static) {
+        let k = self.take_kernel(id).expect("kernel already claimed or unknown");
+        let handle = std::thread::Builder::new()
+            .name(format!("kernel-{id}"))
+            .spawn(move || f(k))
+            .expect("spawn kernel thread");
+        self.running.lock().unwrap().push((id, handle));
+    }
+
+    /// Register a user handler on a (software) kernel before running it.
+    pub fn register_handler(
+        &self,
+        kernel: u16,
+        id: u8,
+        f: impl Fn(crate::am::handlers::HandlerArgs<'_>) + Send + Sync + 'static,
+    ) -> Result<()> {
+        let t = self.tables.get(&kernel).ok_or(Error::UnknownKernel(kernel))?;
+        t.register(id, Box::new(f))
+    }
+
+    /// GAScore statistics for a hardware node (cycle and message counts).
+    pub fn gascore_stats(&self, node_id: u16) -> Option<Arc<GAScoreStats>> {
+        self.gascores
+            .iter()
+            .find(|g| g.node_id() == node_id)
+            .map(|g| g.stats())
+    }
+
+    /// Router statistics for a node.
+    pub fn router_stats(&self, node_id: u16) -> Option<&crate::galapagos::router::RouterStats> {
+        self.nodes
+            .iter()
+            .find(|n| n.node_id == node_id)
+            .map(|n| n.stats())
+    }
+
+    /// Wait for all kernel threads started by `run_kernel`, then tear down
+    /// the runtime. Returns an error naming the first kernel that panicked.
+    pub fn join(mut self) -> Result<()> {
+        let mut failed: Option<u16> = None;
+        for (id, h) in self.running.lock().unwrap().drain(..) {
+            if h.join().is_err() && failed.is_none() {
+                failed = Some(id);
+            }
+        }
+        // Drop the unclaimed kernel handles (closes their router senders).
+        self.kernels.lock().unwrap().clear();
+        // Shut down routers; delivery senders drop, so handler threads and
+        // GAScores see disconnects and exit.
+        for n in &mut self.nodes {
+            n.shutdown();
+        }
+        for ht in &mut self.handler_threads {
+            ht.join();
+        }
+        // Egress adapters exit once every hardware kernel handle is gone.
+        for a in self.adapters.drain(..) {
+            let _ = a.join();
+        }
+        for g in &mut self.gascores {
+            g.join();
+        }
+        match failed {
+            Some(id) => Err(Error::Config(format!("kernel {id} panicked"))),
+            None => Ok(()),
+        }
+    }
+}

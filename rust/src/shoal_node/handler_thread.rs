@@ -1,0 +1,175 @@
+//! The software handler thread (paper §III-B).
+//!
+//! "We add a handler thread for each software kernel. The handler thread is
+//! responsible for tasks such as parsing headers, redirecting data to memory
+//! or to kernels, and calling handler functions. It serves as the gatekeeper
+//! between a particular kernel and the wider network."
+//!
+//! The thread drains the kernel's delivery channel, runs the shared AM
+//! engine, and sends any generated replies back through the node router.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::am::engine::KernelRuntime;
+use crate::galapagos::packet::Packet;
+use crate::galapagos::router::RouterMsg;
+use crate::am::header::AmMessage;
+
+/// Handle to a running handler thread.
+pub struct HandlerThread {
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HandlerThread {
+    /// Spawn the gatekeeper for one software kernel. Exits when the delivery
+    /// channel disconnects (node shutdown).
+    pub fn spawn(rt: KernelRuntime, inbox: Receiver<Packet>, router_tx: Sender<RouterMsg>) -> Self {
+        let kernel_id = rt.kernel_id;
+        let handle = std::thread::Builder::new()
+            .name(format!("handler-k{kernel_id}"))
+            .spawn(move || {
+                while let Ok(pkt) = inbox.recv() {
+                    // decode_owned reuses the packet buffer for the payload
+                    // (single-copy ingress, §Perf).
+                    let msg = match AmMessage::decode_owned(pkt.data) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            log::warn!("handler k{kernel_id}: dropping malformed AM: {e}");
+                            continue;
+                        }
+                    };
+                    let mut emit_err = None;
+                    let res = rt.process_ingress(msg, &mut |reply| {
+                        match reply
+                            .encode()
+                            .and_then(|bytes| Packet::new(reply.dst, reply.src, bytes))
+                        {
+                            Ok(p) => {
+                                if router_tx.send(RouterMsg::FromKernel(p)).is_err() {
+                                    emit_err = Some("router disconnected");
+                                }
+                            }
+                            Err(e) => {
+                                log::error!("handler k{kernel_id}: cannot encode reply: {e}")
+                            }
+                        }
+                    });
+                    if let Err(e) = res {
+                        log::warn!("handler k{kernel_id}: ingress error: {e}");
+                    }
+                    if emit_err.is_some() {
+                        break;
+                    }
+                }
+                log::debug!("handler k{kernel_id}: exiting");
+            })
+            .expect("spawn handler thread");
+        HandlerThread { handle: Some(handle) }
+    }
+
+    /// Wait for the thread to exit (after its channels disconnect).
+    pub fn join(&mut self) {
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::engine::{BarrierState, ReplyState};
+    use crate::am::handlers::HandlerTable;
+    use crate::am::types::{handler_ids, AmFlags, AmType};
+    use crate::am::Descriptor;
+    use crate::memory::Segment;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn processes_packets_and_replies() {
+        let (medium_tx, medium_rx) = mpsc::channel();
+        let rt = KernelRuntime {
+            kernel_id: 1,
+            segment: Segment::new(1024),
+            replies: ReplyState::new(),
+            barrier: BarrierState::new(),
+            handlers: Arc::new(HandlerTable::software()),
+            medium_tx,
+        };
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut ht = HandlerThread::spawn(rt, inbox_rx, router_tx);
+
+        let msg = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 5,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![1, 2],
+        };
+        let pkt = Packet::new(1, 0, msg.encode().unwrap()).unwrap();
+        inbox_tx.send(pkt).unwrap();
+
+        // Medium reaches the kernel stream.
+        let got = medium_rx.recv_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(got.payload, vec![1, 2]);
+
+        // Ack goes back through the router.
+        match router_rx.recv_timeout(Duration::from_secs(1)).unwrap() {
+            RouterMsg::FromKernel(p) => {
+                let reply = AmMessage::decode(&p.data).unwrap();
+                assert!(reply.flags.is_reply());
+                assert_eq!(reply.dst, 0);
+                assert_eq!(reply.token, 5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        drop(inbox_tx);
+        ht.join();
+    }
+
+    #[test]
+    fn malformed_packets_are_dropped_not_fatal() {
+        let (medium_tx, medium_rx) = mpsc::channel();
+        let rt = KernelRuntime {
+            kernel_id: 1,
+            segment: Segment::new(64),
+            replies: ReplyState::new(),
+            barrier: BarrierState::new(),
+            handlers: Arc::new(HandlerTable::software()),
+            medium_tx,
+        };
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, _router_rx) = mpsc::channel();
+        let mut ht = HandlerThread::spawn(rt, inbox_rx, router_tx);
+
+        inbox_tx.send(Packet::new(1, 0, vec![0xFF; 3]).unwrap()).unwrap();
+        // A valid message afterwards still gets through.
+        let msg = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![9],
+        };
+        inbox_tx.send(Packet::new(1, 0, msg.encode().unwrap()).unwrap()).unwrap();
+        assert_eq!(
+            medium_rx.recv_timeout(Duration::from_secs(1)).unwrap().payload,
+            vec![9]
+        );
+        drop(inbox_tx);
+        ht.join();
+    }
+}

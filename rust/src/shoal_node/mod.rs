@@ -1,0 +1,15 @@
+//! The Shoal runtime: nodes, kernels and the user API.
+//!
+//! - [`api`] — `ShoalKernel`: the heterogeneous communication API (paper
+//!   §III-A). The same calls drive software kernels (threads) and hardware
+//!   kernels (GAScore-backed simulated FPGA kernels).
+//! - [`handler_thread`] — the per-kernel gatekeeper on software nodes
+//!   (paper §III-B).
+//! - [`cluster`] — `ShoalCluster`: launches every node of a `ClusterSpec`
+//!   in-process (routers, transports, handler threads, GAScores) and runs
+//!   user kernel functions on threads, mirroring how libGalapagos starts a
+//!   kernel function per thread.
+
+pub mod api;
+pub mod cluster;
+pub mod handler_thread;

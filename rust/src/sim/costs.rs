@@ -1,0 +1,155 @@
+//! Calibration constants for the cost model.
+//!
+//! Every constant is anchored either to a paper observation, a vendor
+//! datasheet figure, or a measurement on this machine (the loopback
+//! microbenchmarks in `bench::micro` — see EXPERIMENTS.md §Calibration).
+//! Units are nanoseconds unless stated.
+
+use crate::gascore::cycles::CycleModel;
+
+/// Software-endpoint costs (Xeon-class server, Linux kernel stack).
+#[derive(Clone, Copy, Debug)]
+pub struct SwCosts {
+    /// Shoal API call: AM encode + channel into the router
+    /// (measured ~1–2 µs on the loopback build of this library).
+    pub api_ns: f64,
+    /// One libGalapagos router-thread hop: mutex/condvar wake + demux.
+    /// The paper's flat ~40 µs SW-SW(same) round trip implies ~10–12 µs per
+    /// hop with four hops per round trip (send/recv × request/reply).
+    pub router_hop_ns: f64,
+    /// Handler-thread processing: header parse, memory/stream redirect.
+    pub handler_ns: f64,
+    /// Kernel TCP stack, send side (syscall + segmentation).
+    pub tcp_tx_ns: f64,
+    /// Kernel TCP stack, receive side (interrupt + copy + wake).
+    pub tcp_rx_ns: f64,
+    /// Kernel UDP stack, send side — no connection state, cheaper than TCP.
+    pub udp_tx_ns: f64,
+    /// Kernel UDP stack, receive side.
+    pub udp_rx_ns: f64,
+    /// Per-byte copy cost through the software path (memcpy at ~20 GB/s).
+    pub per_byte_ns: f64,
+}
+
+impl Default for SwCosts {
+    fn default() -> Self {
+        SwCosts {
+            api_ns: 1_500.0,
+            router_hop_ns: 12_000.0,
+            handler_ns: 6_000.0,
+            tcp_tx_ns: 15_000.0,
+            tcp_rx_ns: 12_000.0,
+            udp_tx_ns: 8_000.0,
+            udp_rx_ns: 6_000.0,
+            per_byte_ns: 0.05,
+        }
+    }
+}
+
+/// Hardware-endpoint costs beyond the GAScore cycle model.
+#[derive(Clone, Copy, Debug)]
+pub struct HwCosts {
+    /// FPGA TCP offload core, send side (session lookup + header insert;
+    /// fully pipelined cores add ~100 cycles at 200 MHz).
+    pub tcp_core_tx_ns: f64,
+    /// FPGA TCP offload core, receive side.
+    pub tcp_core_rx_ns: f64,
+    /// FPGA UDP core — stateless, a few dozen cycles.
+    pub udp_core_tx_ns: f64,
+    pub udp_core_rx_ns: f64,
+    /// On-FPGA AXIS interconnect hop for same-node kernel traffic.
+    pub axis_hop_ns: f64,
+    /// Effective DRAM bandwidth for DataMover bursts (bytes/ns = GB/s).
+    /// One DDR4-2400 channel minus refresh/arbitration ≈ 12 GB/s.
+    pub dram_bytes_per_ns: f64,
+}
+
+impl Default for HwCosts {
+    fn default() -> Self {
+        HwCosts {
+            tcp_core_tx_ns: 500.0,
+            tcp_core_rx_ns: 500.0,
+            udp_core_tx_ns: 150.0,
+            udp_core_rx_ns: 150.0,
+            axis_hop_ns: 100.0,
+            dram_bytes_per_ns: 12.0,
+        }
+    }
+}
+
+/// Network fabric costs.
+#[derive(Clone, Copy, Debug)]
+pub struct NetCosts {
+    /// Serialization at 10 Gb/s = 0.8 ns/byte.
+    pub wire_ns_per_byte: f64,
+    /// Store-and-forward latency of the S4048-ON (cut-through ~600 ns).
+    pub switch_ns: f64,
+    /// Fixed per-frame overhead (preamble + Ethernet/IP/TCP headers) in
+    /// bytes, added to serialization.
+    pub frame_overhead_bytes: f64,
+    /// Ethernet MTU payload for the UDP fragmentation limit.
+    pub mtu_payload: usize,
+}
+
+impl Default for NetCosts {
+    fn default() -> Self {
+        NetCosts {
+            wire_ns_per_byte: 0.8,
+            switch_ns: 600.0,
+            frame_overhead_bytes: 78.0,
+            mtu_payload: crate::galapagos::transport::udp::UDP_MTU_PAYLOAD,
+        }
+    }
+}
+
+/// The complete calibrated model.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CostModel {
+    pub sw: SwCosts,
+    pub hw: HwCosts,
+    pub net: NetCosts,
+    pub gascore: CycleModel,
+}
+
+impl CostModel {
+    /// The paper's configuration.
+    pub fn paper() -> Self {
+        Self::default()
+    }
+
+    /// Variant with the tightly-integrated GAScore (§IV-B1 latency remark).
+    pub fn tightly_integrated() -> Self {
+        CostModel { gascore: CycleModel::tightly_integrated(), ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_rate_is_10g() {
+        let n = NetCosts::default();
+        // 0.8 ns/byte == 10 Gb/s
+        let gbps = 8.0 / n.wire_ns_per_byte;
+        assert!((gbps - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sw_round_trip_same_node_is_tens_of_us() {
+        // Sanity: 2×(api + router + handler) lands in the paper's flat
+        // SW-SW(same) band (~30–50 µs).
+        let s = SwCosts::default();
+        let rt = 2.0 * (s.api_ns + s.router_hop_ns + s.handler_ns);
+        assert!((25_000.0..60_000.0).contains(&rt), "{rt}");
+    }
+
+    #[test]
+    fn udp_cheaper_than_tcp() {
+        let s = SwCosts::default();
+        assert!(s.udp_tx_ns < s.tcp_tx_ns);
+        assert!(s.udp_rx_ns < s.tcp_rx_ns);
+        let h = HwCosts::default();
+        assert!(h.udp_core_tx_ns < h.tcp_core_tx_ns);
+    }
+}

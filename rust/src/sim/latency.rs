@@ -1,0 +1,482 @@
+//! End-to-end latency and throughput composition.
+//!
+//! A microbenchmark round trip is: Sender egress → network → Receiver
+//! ingress → (handler) → reply egress → network → Sender ingress. The
+//! composition below assigns each leg a cost from [`CostModel`], using the
+//! GAScore cycle model for hardware endpoints and the calibrated software
+//! constants otherwise. Unsupported points return `None` — exactly the
+//! paper's missing UDP ≥ 2048 B hardware measurements (§IV-B1).
+
+use super::costs::CostModel;
+use super::topology::Topology;
+use crate::am::header::{AmMessage, Descriptor};
+use crate::am::types::{handler_ids, AmFlags, AmType};
+use crate::config::Platform;
+
+/// Network protocol between nodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Protocol {
+    Tcp,
+    Udp,
+}
+
+/// The AM variants the microbenchmarks sweep (paper §IV-B: "the different
+/// types of AMs", averaged per topology in Figs. 4–6).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MsgKind {
+    Short,
+    MediumFifo,
+    Medium,
+    LongFifo,
+    Long,
+    LongStrided,
+    LongVectored,
+    MediumGet,
+    LongGet,
+}
+
+impl MsgKind {
+    /// The variants that carry a payload (payload-size sweeps apply).
+    pub const PAYLOAD_KINDS: [MsgKind; 8] = [
+        MsgKind::MediumFifo,
+        MsgKind::Medium,
+        MsgKind::LongFifo,
+        MsgKind::Long,
+        MsgKind::LongStrided,
+        MsgKind::LongVectored,
+        MsgKind::MediumGet,
+        MsgKind::LongGet,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MsgKind::Short => "short",
+            MsgKind::MediumFifo => "medium-fifo",
+            MsgKind::Medium => "medium",
+            MsgKind::LongFifo => "long-fifo",
+            MsgKind::Long => "long",
+            MsgKind::LongStrided => "long-strided",
+            MsgKind::LongVectored => "long-vectored",
+            MsgKind::MediumGet => "medium-get",
+            MsgKind::LongGet => "long-get",
+        }
+    }
+
+    /// Build the request message this kind sends (payload of `p` bytes for
+    /// put variants; gets request `p` bytes).
+    pub fn request(&self, p: usize) -> AmMessage {
+        let base = AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::NOP,
+            token: 1,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![],
+        };
+        match self {
+            MsgKind::Short => base,
+            MsgKind::MediumFifo => AmMessage {
+                am_type: AmType::Medium,
+                flags: AmFlags::new().with(AmFlags::FIFO),
+                payload: vec![0; p],
+                ..base
+            },
+            MsgKind::Medium => AmMessage {
+                am_type: AmType::Medium,
+                payload: vec![0; p],
+                ..base
+            },
+            MsgKind::LongFifo => AmMessage {
+                am_type: AmType::Long,
+                flags: AmFlags::new().with(AmFlags::FIFO),
+                desc: Descriptor::Long { dst_addr: 0 },
+                payload: vec![0; p],
+                ..base
+            },
+            MsgKind::Long => AmMessage {
+                am_type: AmType::Long,
+                desc: Descriptor::Long { dst_addr: 0 },
+                payload: vec![0; p],
+                ..base
+            },
+            MsgKind::LongStrided => {
+                let block = 64.min(p.max(1)) as u32;
+                AmMessage {
+                    am_type: AmType::LongStrided,
+                    flags: AmFlags::new().with(AmFlags::FIFO),
+                    desc: Descriptor::Strided {
+                        dst_addr: 0,
+                        stride: block * 2,
+                        block_len: block,
+                        nblocks: (p as u32).div_ceil(block).max(1),
+                    },
+                    payload: vec![0; p],
+                    ..base
+                }
+            }
+            MsgKind::LongVectored => {
+                let quarter = (p / 4).max(1) as u32;
+                AmMessage {
+                    am_type: AmType::LongVectored,
+                    flags: AmFlags::new().with(AmFlags::FIFO),
+                    desc: Descriptor::Vectored {
+                        entries: (0..4u64).map(|i| (i * 2048, quarter)).collect(),
+                    },
+                    payload: vec![0; (quarter * 4) as usize],
+                    ..base
+                }
+            }
+            MsgKind::MediumGet => AmMessage {
+                am_type: AmType::Medium,
+                flags: AmFlags::new().with(AmFlags::GET),
+                desc: Descriptor::MediumGet { src_addr: 0, len: p as u32 },
+                ..base
+            },
+            MsgKind::LongGet => AmMessage {
+                am_type: AmType::Long,
+                flags: AmFlags::new().with(AmFlags::GET),
+                desc: Descriptor::LongGet { src_addr: 0, len: p as u32, reply_addr: 0 },
+                ..base
+            },
+        }
+    }
+
+    /// The reply message the request elicits.
+    pub fn reply(&self, p: usize) -> AmMessage {
+        let short_reply = AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new().with(AmFlags::REPLY),
+            src: 1,
+            dst: 0,
+            handler: handler_ids::REPLY,
+            token: 1,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![],
+        };
+        match self {
+            MsgKind::MediumGet => AmMessage {
+                am_type: AmType::Medium,
+                payload: vec![0; p],
+                ..short_reply
+            },
+            MsgKind::LongGet => AmMessage {
+                am_type: AmType::Long,
+                desc: Descriptor::Long { dst_addr: 0 },
+                payload: vec![0; p],
+                ..short_reply
+            },
+            _ => short_reply,
+        }
+    }
+}
+
+impl CostModel {
+    /// Egress cost at the sending endpoint.
+    fn egress_ns(&self, platform: Platform, msg: &AmMessage, crosses_network: bool, proto: Protocol) -> f64 {
+        let wire_len = (msg.header_overhead() + msg.payload.len()) as f64;
+        match platform {
+            Platform::Sw => {
+                let mut t = self.sw.api_ns + self.sw.router_hop_ns + wire_len * self.sw.per_byte_ns;
+                if crosses_network {
+                    t += match proto {
+                        Protocol::Tcp => self.sw.tcp_tx_ns,
+                        Protocol::Udp => self.sw.udp_tx_ns,
+                    };
+                }
+                t
+            }
+            Platform::Hw => {
+                let mut t = self.gascore.to_ns(self.gascore.egress_cycles(msg));
+                t += if crosses_network {
+                    match proto {
+                        Protocol::Tcp => self.hw.tcp_core_tx_ns,
+                        Protocol::Udp => self.hw.udp_core_tx_ns,
+                    }
+                } else {
+                    self.hw.axis_hop_ns
+                };
+                t
+            }
+        }
+    }
+
+    /// Ingress cost at the receiving endpoint. `generates_reply` matters to
+    /// the GAScore model (reply creation in xpams_rx).
+    fn ingress_ns(
+        &self,
+        platform: Platform,
+        msg: &AmMessage,
+        crosses_network: bool,
+        proto: Protocol,
+        generates_reply: bool,
+    ) -> f64 {
+        let wire_len = (msg.header_overhead() + msg.payload.len()) as f64;
+        match platform {
+            Platform::Sw => {
+                let mut t = self.sw.handler_ns + wire_len * self.sw.per_byte_ns;
+                if crosses_network {
+                    t += self.sw.router_hop_ns; // router delivers transport ingress
+                    t += match proto {
+                        Protocol::Tcp => self.sw.tcp_rx_ns,
+                        Protocol::Udp => self.sw.udp_rx_ns,
+                    };
+                }
+                t
+            }
+            Platform::Hw => {
+                let mut t = self.gascore.to_ns(self.gascore.ingress_cycles(msg, generates_reply));
+                if crosses_network {
+                    t += match proto {
+                        Protocol::Tcp => self.hw.tcp_core_rx_ns,
+                        Protocol::Udp => self.hw.udp_core_rx_ns,
+                    };
+                }
+                // DRAM residence for Long payloads (DataMover burst).
+                if msg.am_type.is_long() && !msg.payload.is_empty() {
+                    t += msg.payload.len() as f64 / self.hw.dram_bytes_per_ns;
+                }
+                t
+            }
+        }
+    }
+
+    /// One wire crossing (switch + serialization), or `None` if the message
+    /// cannot be carried (hardware UDP core + IP fragmentation, §IV-B1).
+    fn network_ns(
+        &self,
+        msg: &AmMessage,
+        proto: Protocol,
+        endpoint_is_hw: [bool; 2],
+    ) -> Option<f64> {
+        let wire_len = msg.header_overhead() + msg.payload.len() + 8; // + middleware header
+        if proto == Protocol::Udp
+            && endpoint_is_hw.iter().any(|&h| h)
+            && wire_len > self.net.mtu_payload
+        {
+            return None; // fragmented datagrams unsupported by the FPGA UDP core
+        }
+        Some(
+            self.net.switch_ns
+                + (wire_len as f64 + self.net.frame_overhead_bytes) * self.net.wire_ns_per_byte,
+        )
+    }
+
+    /// Round-trip latency (request + reply) for one AM of `kind` with
+    /// `payload` bytes over `topology`/`proto`. `None` when the combination
+    /// is unsupported.
+    pub fn latency_ns(
+        &self,
+        topo: Topology,
+        proto: Protocol,
+        kind: MsgKind,
+        payload: usize,
+    ) -> Option<f64> {
+        let req = kind.request(payload);
+        let rep = kind.reply(payload);
+        let crosses = !topo.same_node();
+        let s = topo.sender();
+        let r = topo.receiver();
+        let hw_pair = [s.is_hw(), r.is_hw()];
+
+        let mut t = 0.0;
+        t += self.egress_ns(s, &req, crosses, proto);
+        if crosses {
+            t += self.network_ns(&req, proto, hw_pair)?;
+        }
+        t += self.ingress_ns(r, &req, crosses, proto, true);
+        // Reply leg.
+        t += self.egress_ns(r, &rep, crosses, proto);
+        if crosses {
+            t += self.network_ns(&rep, proto, hw_pair)?;
+        }
+        t += self.ingress_ns(s, &rep, crosses, proto, false);
+        Some(t)
+    }
+
+    /// Sustained throughput in bytes/second for pipelined non-blocking sends
+    /// of `kind` ("the Sender sends all the messages in a loop and then
+    /// waits for all the replies", §IV-B). Steady state is set by the
+    /// slowest pipeline stage.
+    pub fn throughput_bps(
+        &self,
+        topo: Topology,
+        proto: Protocol,
+        kind: MsgKind,
+        payload: usize,
+    ) -> Option<f64> {
+        if payload == 0 {
+            return Some(0.0);
+        }
+        let req = kind.request(payload);
+        // Data flows on the reply leg for gets.
+        let data_msg = if matches!(kind, MsgKind::MediumGet | MsgKind::LongGet) {
+            kind.reply(payload)
+        } else {
+            req.clone()
+        };
+        let crosses = !topo.same_node();
+        let (data_src, data_dst) = if matches!(kind, MsgKind::MediumGet | MsgKind::LongGet) {
+            (topo.receiver(), topo.sender())
+        } else {
+            (topo.sender(), topo.receiver())
+        };
+        let hw_pair = [topo.sender().is_hw(), topo.receiver().is_hw()];
+
+        // Per-message occupancy of each pipeline stage.
+        let mut stages: Vec<f64> = Vec::with_capacity(4);
+        stages.push(self.egress_ns(data_src, &data_msg, crosses, proto));
+        if crosses {
+            // The switch is cut-through: occupancy is serialization only.
+            let wire_len = data_msg.header_overhead() + data_msg.payload.len() + 8;
+            if proto == Protocol::Udp
+                && hw_pair.iter().any(|&h| h)
+                && wire_len > self.net.mtu_payload
+            {
+                return None;
+            }
+            stages.push(
+                (wire_len as f64 + self.net.frame_overhead_bytes) * self.net.wire_ns_per_byte,
+            );
+        }
+        stages.push(self.ingress_ns(data_dst, &data_msg, crosses, proto, true));
+        let bottleneck = stages.iter().cloned().fold(0.0f64, f64::max);
+        Some(payload as f64 / bottleneck * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const PAYLOADS: [usize; 10] = [8, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096];
+
+    fn m() -> CostModel {
+        CostModel::paper()
+    }
+
+    /// Average latency over payload-carrying AM kinds (what Fig. 4 plots).
+    fn avg_latency(topo: Topology, proto: Protocol, p: usize) -> Option<f64> {
+        let mut sum = 0.0;
+        for k in MsgKind::PAYLOAD_KINDS {
+            sum += m().latency_ns(topo, proto, k, p)?;
+        }
+        Some(sum / MsgKind::PAYLOAD_KINDS.len() as f64)
+    }
+
+    #[test]
+    fn fig4_topology_ordering_holds() {
+        // HW-HW(same) < HW-HW(diff) < SW-HW < SW-SW — the paper's core claim
+        // "communication between kernels in hardware occurs much faster".
+        for p in PAYLOADS {
+            let hh_same = avg_latency(Topology::HwHwSame, Protocol::Tcp, p).unwrap();
+            let hh_diff = avg_latency(Topology::HwHwDiff, Protocol::Tcp, p).unwrap();
+            let sh = avg_latency(Topology::SwHw, Protocol::Tcp, p).unwrap();
+            let ss_same = avg_latency(Topology::SwSwSame, Protocol::Tcp, p).unwrap();
+            let ss_diff = avg_latency(Topology::SwSwDiff, Protocol::Tcp, p).unwrap();
+            assert!(hh_same < hh_diff, "p={p}");
+            assert!(hh_diff < sh, "p={p}");
+            assert!(sh < ss_diff, "p={p}");
+            assert!(hh_diff < ss_same, "p={p}: HW-HW(diff) {hh_diff} vs SW-SW(same) {ss_same}");
+        }
+    }
+
+    #[test]
+    fn fig4_sw_sw_same_is_flat() {
+        // "SW-SW (same) shows a constant trend, indicating that there are
+        // other overheads beyond the payload size."
+        let small = avg_latency(Topology::SwSwSame, Protocol::Tcp, 8).unwrap();
+        let large = avg_latency(Topology::SwSwSame, Protocol::Tcp, 4096).unwrap();
+        assert!((large - small) / small < 0.10, "small={small} large={large}");
+    }
+
+    #[test]
+    fn fig4_latency_grows_with_payload_elsewhere() {
+        // Hardware topologies are dominated by streaming: strong growth.
+        for topo in [Topology::HwHwSame, Topology::HwHwDiff] {
+            let small = avg_latency(topo, Protocol::Tcp, 8).unwrap();
+            let large = avg_latency(topo, Protocol::Tcp, 4096).unwrap();
+            assert!(large > small * 1.2, "{topo}: {small} -> {large}");
+        }
+        // SW-HW grows too, but the software fixed costs damp the slope.
+        let small = avg_latency(Topology::SwHw, Protocol::Tcp, 8).unwrap();
+        let large = avg_latency(Topology::SwHw, Protocol::Tcp, 4096).unwrap();
+        assert!(large > small * 1.05, "SW-HW: {small} -> {large}");
+    }
+
+    #[test]
+    fn fig5_udp_speedup_over_tcp() {
+        // "In most cases, messages sent with UDP are faster."
+        for topo in [Topology::SwSwDiff, Topology::SwHw, Topology::HwHwDiff] {
+            for p in [8, 256, 1024] {
+                let t = avg_latency(topo, Protocol::Tcp, p).unwrap();
+                let u = avg_latency(topo, Protocol::Udp, p).unwrap();
+                assert!(u < t, "{topo} p={p}: udp {u} tcp {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig5_hw_udp_fragmentation_gap() {
+        // "No data was collected for topologies including hardware for UDP
+        // messages with 2048 and 4096 byte payload sizes."
+        for topo in [Topology::SwHw, Topology::HwSw, Topology::HwHwDiff] {
+            for p in [2048, 4096] {
+                assert!(
+                    avg_latency(topo, Protocol::Udp, p).is_none(),
+                    "{topo} p={p} should be unsupported"
+                );
+            }
+            assert!(avg_latency(topo, Protocol::Udp, 1024).is_some());
+        }
+        // Software-only topologies fragment fine in the kernel stack.
+        assert!(avg_latency(Topology::SwSwDiff, Protocol::Udp, 4096).is_some());
+    }
+
+    #[test]
+    fn fig6_throughput_shapes() {
+        let tput = |topo, p| {
+            let mut s = 0.0;
+            for k in MsgKind::PAYLOAD_KINDS {
+                s += m().throughput_bps(topo, Protocol::Tcp, k, p).unwrap();
+            }
+            s / MsgKind::PAYLOAD_KINDS.len() as f64
+        };
+        // Throughput rises with payload.
+        for topo in Topology::ALL {
+            assert!(tput(topo, 4096) > tput(topo, 8) * 10.0, "{topo}");
+        }
+        // HW ≫ SW.
+        assert!(tput(Topology::HwHwSame, 4096) > 4.0 * tput(Topology::SwSwSame, 4096));
+        // At 4096 B, HW-HW(diff) approaches HW-HW(same) (within ~40%).
+        let same = tput(Topology::HwHwSame, 4096);
+        let diff = tput(Topology::HwHwDiff, 4096);
+        assert!(diff > 0.6 * same, "same={same} diff={diff}");
+    }
+
+    #[test]
+    fn get_latency_includes_data_on_reply() {
+        // A LongGet's reply carries the payload: large gets cost more than
+        // small ones even though the request is tiny.
+        let small = m().latency_ns(Topology::HwHwDiff, Protocol::Tcp, MsgKind::LongGet, 8).unwrap();
+        let large =
+            m().latency_ns(Topology::HwHwDiff, Protocol::Tcp, MsgKind::LongGet, 4096).unwrap();
+        assert!(large > small * 1.5);
+    }
+
+    #[test]
+    fn tightly_integrated_reduces_hw_latency() {
+        let paper = CostModel::paper();
+        let tight = CostModel::tightly_integrated();
+        let p = paper
+            .latency_ns(Topology::HwHwSame, Protocol::Tcp, MsgKind::MediumFifo, 64)
+            .unwrap();
+        let t = tight
+            .latency_ns(Topology::HwHwSame, Protocol::Tcp, MsgKind::MediumFifo, 64)
+            .unwrap();
+        assert!(t < p);
+    }
+}

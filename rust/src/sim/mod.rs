@@ -1,0 +1,25 @@
+//! Discrete-event cost model for the evaluation figures.
+//!
+//! The paper's testbed (Xeon E5-2650 servers, Alpha Data 8K5 FPGAs, a Dell
+//! S4048-ON 10G switch) is not available, so the latency/throughput figures
+//! are regenerated from a first-order cost model composed of:
+//!
+//! - the GAScore cycle model ([`crate::gascore::cycles`]) for hardware
+//!   endpoints,
+//! - per-stage software costs (API, libGalapagos router hop, kernel TCP/UDP
+//!   stack) calibrated in [`costs`],
+//! - a network model (10 Gb/s serialization, switch hop, FPGA TCP/UDP
+//!   offload cores, the no-IP-fragmentation UDP restriction).
+//!
+//! Functional behaviour always runs through the real library; this module
+//! only assigns *time*. Every constant carries a doc comment citing the
+//! paper observation or measurement anchoring it; `EXPERIMENTS.md` compares
+//! the resulting curves with the paper's.
+
+pub mod costs;
+pub mod latency;
+pub mod topology;
+
+pub use costs::CostModel;
+pub use latency::{MsgKind, Protocol};
+pub use topology::Topology;

@@ -1,0 +1,94 @@
+//! The six placement topologies of the microbenchmarks (paper §IV-B):
+//! "software-to-software (same node), software-to-software (different
+//! nodes), software-to-hardware, hardware-to-hardware (same node) and
+//! hardware-to-hardware (different nodes)" — six combinations including the
+//! hardware-to-software direction.
+
+use crate::config::Platform;
+
+/// Where the Sender and Receiver kernels live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Topology {
+    SwSwSame,
+    SwSwDiff,
+    SwHw,
+    HwSw,
+    HwHwSame,
+    HwHwDiff,
+}
+
+impl Topology {
+    /// All six, in the order the paper's figures present them.
+    pub const ALL: [Topology; 6] = [
+        Topology::SwSwSame,
+        Topology::SwSwDiff,
+        Topology::SwHw,
+        Topology::HwSw,
+        Topology::HwHwSame,
+        Topology::HwHwDiff,
+    ];
+
+    pub fn sender(&self) -> Platform {
+        match self {
+            Topology::SwSwSame | Topology::SwSwDiff | Topology::SwHw => Platform::Sw,
+            _ => Platform::Hw,
+        }
+    }
+
+    pub fn receiver(&self) -> Platform {
+        match self {
+            Topology::SwSwSame | Topology::SwSwDiff | Topology::HwSw => Platform::Sw,
+            _ => Platform::Hw,
+        }
+    }
+
+    /// True when both kernels share a node (no network protocol involved —
+    /// these points are excluded from the UDP-speedup figure).
+    pub fn same_node(&self) -> bool {
+        matches!(self, Topology::SwSwSame | Topology::HwHwSame)
+    }
+
+    /// Label used in figures.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Topology::SwSwSame => "SW-SW (same)",
+            Topology::SwSwDiff => "SW-SW (diff)",
+            Topology::SwHw => "SW-HW",
+            Topology::HwSw => "HW-SW",
+            Topology::HwHwSame => "HW-HW (same)",
+            Topology::HwHwDiff => "HW-HW (diff)",
+        }
+    }
+}
+
+impl std::fmt::Display for Topology {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_topologies() {
+        assert_eq!(Topology::ALL.len(), 6);
+    }
+
+    #[test]
+    fn platforms() {
+        assert_eq!(Topology::SwHw.sender(), Platform::Sw);
+        assert_eq!(Topology::SwHw.receiver(), Platform::Hw);
+        assert_eq!(Topology::HwSw.sender(), Platform::Hw);
+        assert_eq!(Topology::HwHwDiff.receiver(), Platform::Hw);
+    }
+
+    #[test]
+    fn same_node_classification() {
+        assert!(Topology::SwSwSame.same_node());
+        assert!(Topology::HwHwSame.same_node());
+        assert!(!Topology::SwSwDiff.same_node());
+        assert!(!Topology::SwHw.same_node());
+    }
+}

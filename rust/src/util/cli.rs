@@ -1,0 +1,200 @@
+//! Tiny command-line argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and a
+//! generated usage string. Each binary declares its options up front so
+//! `--help` is accurate.
+
+use std::collections::BTreeMap;
+
+/// Declarative option specification for usage text.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<OptSpec>,
+    program: String,
+}
+
+impl Args {
+    /// Build a parser with declared options; parse `std::env::args`.
+    pub fn parse(specs: Vec<OptSpec>) -> Args {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse_from(specs, &argv)
+    }
+
+    /// Parse from an explicit argv (used by tests).
+    pub fn parse_from(specs: Vec<OptSpec>, argv: &[String]) -> Args {
+        let mut a = Args {
+            specs,
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    let is_flag = a
+                        .specs
+                        .iter()
+                        .find(|s| s.name == stripped)
+                        .map(|s| s.is_flag)
+                        .unwrap_or_else(|| {
+                            // Unknown option: treat as flag if next token
+                            // looks like another option or is absent.
+                            argv.get(i + 1).map(|n| n.starts_with("--")).unwrap_or(true)
+                        });
+                    if is_flag {
+                        a.flags.push(stripped.to_string());
+                    } else if let Some(v) = argv.get(i + 1) {
+                        a.opts.insert(stripped.to_string(), v.clone());
+                        i += 1;
+                    } else {
+                        a.flags.push(stripped.to_string());
+                    }
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list of usize, e.g. `--grids 256,512,1024`.
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v.split(',').filter_map(|t| t.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Render usage text from the declared specs.
+    pub fn usage(&self, about: &str) -> String {
+        let mut s = format!("{about}\n\nUSAGE: {} [OPTIONS]\n\nOPTIONS:\n", self.program);
+        for spec in &self.specs {
+            let arg = if spec.is_flag {
+                format!("--{}", spec.name)
+            } else {
+                format!("--{} <value>", spec.name)
+            };
+            let def = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<28} {}{def}\n", spec.help));
+        }
+        s
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.flag("help") || self.flag("h")
+    }
+}
+
+/// Shorthand for declaring an option that takes a value.
+pub fn opt(name: &'static str, help: &'static str, default: &'static str) -> OptSpec {
+    OptSpec { name, help, default: Some(default), is_flag: false }
+}
+
+/// Shorthand for declaring a boolean flag.
+pub fn flag(name: &'static str, help: &'static str) -> OptSpec {
+    OptSpec { name, help, default: None, is_flag: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog".to_string())
+            .chain(s.iter().map(|x| x.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse_from(
+            vec![opt("size", "", "1"), opt("n", "", "1")],
+            &argv(&["--size", "42", "--n=7"]),
+        );
+        assert_eq!(a.get_usize("size", 0), 42);
+        assert_eq!(a.get_usize("n", 0), 7);
+    }
+
+    #[test]
+    fn parses_flags_and_positional() {
+        let a = Args::parse_from(
+            vec![flag("verbose", ""), opt("k", "", "1")],
+            &argv(&["--verbose", "pos1", "--k", "3", "pos2"]),
+        );
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string(), "pos2".to_string()]);
+        assert_eq!(a.get_usize("k", 0), 3);
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse_from(
+            vec![opt("grids", "", "")],
+            &argv(&["--grids", "256, 512,1024"]),
+        );
+        assert_eq!(a.get_usize_list("grids", &[]), vec![256, 512, 1024]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse_from(vec![opt("x", "", "5")], &argv(&[]));
+        assert_eq!(a.get_usize("x", 5), 5);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let a = Args::parse_from(vec![opt("size", "payload bytes", "64"), flag("hw", "use hw")], &argv(&[]));
+        let u = a.usage("test tool");
+        assert!(u.contains("--size <value>"));
+        assert!(u.contains("--hw"));
+        assert!(u.contains("[default: 64]"));
+    }
+}

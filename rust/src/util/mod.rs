@@ -1,0 +1,60 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure vendored, so the pieces a crates.io project would pull
+//! in (`rand`, `serde_json`, `clap`, `criterion`, `proptest`) are implemented
+//! here as minimal, tested equivalents.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a nanosecond quantity with an adaptive unit, e.g. `12.3 µs`.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Format a bytes/second rate with an adaptive unit, e.g. `1.21 GB/s`.
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec < 1e3 {
+        format!("{bytes_per_sec:.1} B/s")
+    } else if bytes_per_sec < 1e6 {
+        format!("{:.2} KB/s", bytes_per_sec / 1e3)
+    } else if bytes_per_sec < 1e9 {
+        format!("{:.2} MB/s", bytes_per_sec / 1e6)
+    } else {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1_500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_000_000.0), "2.00 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000 s");
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert_eq!(fmt_rate(10.0), "10.0 B/s");
+        assert_eq!(fmt_rate(1_500.0), "1.50 KB/s");
+        assert_eq!(fmt_rate(2_000_000.0), "2.00 MB/s");
+        assert_eq!(fmt_rate(1_210_000_000.0), "1.21 GB/s");
+    }
+}

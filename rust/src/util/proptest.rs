@@ -1,0 +1,96 @@
+//! Mini property-testing framework (no `proptest` crate offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over many seeded RNG
+//! streams; on failure it reports the failing seed so the case can be
+//! replayed deterministically with `check_seed`. Shrinking is by seed replay
+//! rather than structural shrinking — adequate for the codec/allocator/router
+//! invariants we assert.
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of property `f`. Panics with the failing seed on
+/// the first violated case.
+pub fn check(name: &str, cases: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    let base = env_seed().unwrap_or(0x5480a1_u64);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}): {msg}\n\
+                 replay with: SHOAL_PROP_SEED={base} and case index {i}"
+            );
+        }
+    }
+}
+
+/// Replay one specific seed (for debugging a reported failure).
+pub fn check_seed(name: &str, seed: u64, f: impl Fn(&mut Rng) -> CaseResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = f(&mut rng) {
+        panic!("property '{name}' failed on seed {seed:#x}: {msg}");
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("SHOAL_PROP_SEED").ok()?.parse().ok()
+}
+
+/// Assert helper producing `CaseResult`.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Equality assert helper producing `CaseResult`.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |rng| {
+            let a = rng.next_u32() as u64;
+            let b = rng.next_u32() as u64;
+            prop_assert!(a + b == b + a, "addition must commute");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn check_seed_replays() {
+        check_seed("replay", 0xdead_beef, |rng| {
+            let _ = rng.next_u64();
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,273 @@
+//! Latency/throughput statistics: online summaries and percentile estimation.
+//!
+//! The microbenchmarks report *median* latency (paper Figs. 4–5) and mean
+//! throughput (Fig. 6); `Summary` keeps raw samples (bounded) so exact
+//! percentiles are available, and `Histogram` provides log-bucketed
+//! aggregation for long-running counters.
+
+/// Collects samples and produces exact order statistics.
+///
+/// Stores up to `cap` raw samples; pushes beyond that reservoir-sample so the
+/// percentile estimates remain unbiased for very long runs.
+#[derive(Clone, Debug)]
+pub struct Summary {
+    samples: Vec<f64>,
+    cap: usize,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    rng_state: u64,
+}
+
+impl Default for Summary {
+    fn default() -> Self {
+        Self::with_capacity(1 << 16)
+    }
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            samples: Vec::new(),
+            cap,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            rng_state: 0x853c_49e6_748f_ea9b,
+        }
+    }
+
+    fn next_rand(&mut self) -> u64 {
+        // xorshift64* — private stream for reservoir sampling.
+        let mut x = self.rng_state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.rng_state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    pub fn push(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+        if self.samples.len() < self.cap {
+            self.samples.push(v);
+        } else {
+            let j = self.next_rand() % self.count;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Exact percentile over retained samples (q in [0,1]), linear
+    /// interpolation between closest ranks.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            s[lo]
+        } else {
+            let frac = pos - lo as f64;
+            s[lo] * (1.0 - frac) + s[hi] * frac
+        }
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(0.5)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    /// Sample standard deviation of retained samples.
+    pub fn stddev(&self) -> f64 {
+        if self.samples.len() < 2 {
+            return 0.0;
+        }
+        let m = self.samples.iter().sum::<f64>() / self.samples.len() as f64;
+        let var = self.samples.iter().map(|v| (v - m) * (v - m)).sum::<f64>()
+            / (self.samples.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+/// Log2-bucketed histogram for cheap hot-path recording (e.g. per-packet
+/// sizes or cycle counts in the GAScore simulator).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    buckets: [u64; 64],
+    count: u64,
+    sum: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self { buckets: [0; 64], count: 0, sum: 0 }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let b = 64 - v.leading_zeros() as usize; // 0 -> bucket 0
+        self.buckets[b.min(63)] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket containing the q-quantile.
+    pub fn quantile_upper_bound(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        u64::MAX
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for i in 0..64 {
+            self.buckets[i] += other.buckets[i];
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic_stats() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.push(v);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert!((s.median() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_percentile_interpolates() {
+        let mut s = Summary::new();
+        for v in [0.0, 10.0] {
+            s.push(v);
+        }
+        assert!((s.percentile(0.5) - 5.0).abs() < 1e-12);
+        assert!((s.percentile(0.25) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let s = Summary::new();
+        assert!(s.mean().is_nan());
+        assert!(s.median().is_nan());
+    }
+
+    #[test]
+    fn reservoir_keeps_count_exact() {
+        let mut s = Summary::with_capacity(100);
+        for i in 0..10_000 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.count(), 10_000);
+        assert_eq!(s.samples.len(), 100);
+        // Median of 0..10000 is ~5000; the reservoir estimate should be in
+        // the right neighbourhood.
+        let m = s.median();
+        assert!((2_000.0..8_000.0).contains(&m), "median {m}");
+    }
+
+    #[test]
+    fn summary_stddev() {
+        let mut s = Summary::new();
+        for v in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(v);
+        }
+        assert!((s.stddev() - 2.138).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for v in 0..1024u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1024);
+        let q50 = h.quantile_upper_bound(0.5);
+        assert!(q50 >= 511 && q50 <= 1023, "q50={q50}");
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(1);
+        b.record(100);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean() - 50.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,269 @@
+//! End-to-end integration: the full Shoal API over in-process clusters.
+
+use shoal::config::{ChunkPolicy, ClusterBuilder, ClusterSpec, Platform, TransportKind};
+use shoal::prelude::*;
+
+/// The shipped example cluster files parse, validate, and (for the local
+/// one) actually launch.
+#[test]
+fn example_cluster_files_are_valid() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("examples/clusters");
+    let het = shoal::config::parse::load_cluster(&dir.join("heterogeneous.toml")).unwrap();
+    assert_eq!(het.nodes.len(), 3);
+    assert_eq!(het.kernel_count(), 9);
+    assert_eq!(het.transport, TransportKind::Tcp);
+    assert!(het.node(1).unwrap().platform.is_hw());
+
+    let p2p = shoal::config::parse::load_cluster(&dir.join("point_to_point.toml")).unwrap();
+    assert_eq!(p2p.profile, shoal::config::ApiProfile::point_to_point());
+    // The local file is launchable as-is.
+    let cluster = ShoalCluster::launch(&p2p).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        k.am_medium(1, handlers::NOP, &[], b"hi").unwrap();
+        k.wait_replies(1).unwrap();
+    });
+    cluster.run_kernel(1, |k| {
+        assert_eq!(k.recv_medium().unwrap().payload, b"hi");
+    });
+    cluster.run_kernel(2, |_| {});
+    cluster.run_kernel(3, |_| {});
+    cluster.join().unwrap();
+}
+
+/// Medium FIFO put between two kernels on one software node.
+#[test]
+fn medium_put_same_node() {
+    let spec = ClusterSpec::single_node("n0", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let r = k.am_medium(1, handlers::NOP, &[1, 2], b"hello pgas").unwrap();
+        assert_eq!(r.messages, 1);
+        k.wait_replies(1).unwrap();
+    });
+    cluster.run_kernel(1, |k| {
+        let m = k.recv_medium().unwrap();
+        assert_eq!(m.payload, b"hello pgas");
+        assert_eq!(m.src, 0);
+        assert_eq!(m.args, vec![1, 2]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Long put writes the destination partition; destination observes it after
+/// a barrier.
+#[test]
+fn long_put_and_barrier() {
+    let spec = ClusterSpec::single_node("n0", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        k.am_long(1, handlers::NOP, &[], &[42u8; 64], 128).unwrap();
+        k.wait_replies(1).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(128, 64).unwrap(), vec![42u8; 64]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Medium get and Long get across two software nodes over the local fabric.
+#[test]
+fn gets_across_nodes() {
+    let mut b = ClusterBuilder::new();
+    let n0 = b.node("a", Platform::Sw);
+    let n1 = b.node("b", Platform::Sw);
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+
+    cluster.run_kernel(k1, |mut k| {
+        k.mem().write(64, &[9, 8, 7, 6]).unwrap();
+        k.barrier().unwrap(); // data ready
+        k.barrier().unwrap(); // peer done
+    });
+    cluster.run_kernel(k0, move |mut k| {
+        k.barrier().unwrap();
+        // Medium get: payload arrives on the stream.
+        let r = k.am_medium_get(k1, handlers::NOP, 64, 4).unwrap();
+        assert_eq!(r.messages, 1);
+        let m = k.recv_medium().unwrap();
+        assert_eq!(m.payload, vec![9, 8, 7, 6]);
+        k.wait_replies(1).unwrap();
+
+        // Long get: payload lands in our partition.
+        let r = k.am_long_get(k1, handlers::NOP, 64, 4, 256).unwrap();
+        k.wait_replies(r.messages).unwrap();
+        assert_eq!(k.mem().read(256, 4).unwrap(), vec![9, 8, 7, 6]);
+        k.barrier().unwrap();
+    });
+    cluster.join().unwrap();
+}
+
+/// Hardware node: kernels behind a GAScore, TCP loopback between nodes.
+#[test]
+fn sw_to_hw_over_tcp() {
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Tcp);
+    let n0 = b.node_at("cpu", Platform::Sw, "127.0.0.1:0");
+    let n1 = b.node_at("fpga", Platform::Hw, "127.0.0.1:0");
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+
+    cluster.run_kernel(k0, move |mut k| {
+        k.am_long(k1, handlers::NOP, &[], &[5u8; 1024], 0).unwrap();
+        k.wait_replies(1).unwrap();
+        let r = k.am_long_get(k1, handlers::NOP, 0, 1024, 0).unwrap();
+        k.wait_replies(r.messages).unwrap();
+        assert_eq!(k.mem().read(0, 1024).unwrap(), vec![5u8; 1024]);
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(k1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 1024).unwrap(), vec![5u8; 1024]);
+    });
+
+    // GAScore processed traffic for the HW node.
+    cluster.join().unwrap();
+}
+
+/// Strided and vectored puts scatter correctly.
+#[test]
+fn strided_and_vectored() {
+    let spec = ClusterSpec::single_node("n0", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let payload: Vec<u8> = (0..32).collect();
+        k.am_long_strided(1, handlers::NOP, &[], &payload, 0, 16, 8).unwrap();
+        k.am_long_vectored(1, handlers::NOP, &[], &[1, 2, 3, 4], &[(100, 2), (200, 2)])
+            .unwrap();
+        k.wait_replies(2).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 8).unwrap(), (0..8).collect::<Vec<u8>>());
+        assert_eq!(k.mem().read(16, 8).unwrap(), (8..16).collect::<Vec<u8>>());
+        assert_eq!(k.mem().read(100, 2).unwrap(), vec![1, 2]);
+        assert_eq!(k.mem().read(200, 2).unwrap(), vec![3, 4]);
+    });
+    cluster.join().unwrap();
+}
+
+/// The chunking extension moves payloads beyond one packet.
+#[test]
+fn chunked_long_put() {
+    let mut b = ClusterBuilder::new();
+    let n0 = b.node("n0", Platform::Sw);
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n0);
+    b.chunk_policy(ChunkPolicy::Chunked);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+
+    let big: Vec<u8> = (0..40_000u32).map(|i| (i % 251) as u8).collect();
+    let expect = big.clone();
+    cluster.run_kernel(k0, move |mut k| {
+        let r = k.am_long(k1, handlers::NOP, &[], &big, 0).unwrap();
+        assert!(r.messages > 1, "40 KB must chunk: {}", r.messages);
+        k.wait_replies(r.messages).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(k1, move |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 40_000).unwrap(), expect);
+    });
+    cluster.join().unwrap();
+}
+
+/// Default (paper) policy rejects oversized AMs — the §IV-C1 failure mode.
+#[test]
+fn reject_policy_errors_on_oversize() {
+    let spec = ClusterSpec::single_node("n0", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let big = vec![0u8; 16 * 1024]; // 4096-wide f32 row
+        let err = k.am_long(1, handlers::NOP, &[], &big, 0).unwrap_err();
+        assert!(matches!(err, shoal::Error::AmTooLarge { .. }), "{err}");
+    });
+    cluster.run_kernel(1, |_k| {});
+    cluster.join().unwrap();
+}
+
+/// Barrier synchronizes many kernels repeatedly (stress the epoch logic).
+#[test]
+fn barrier_stress() {
+    let spec = ClusterSpec::single_node("n0", 8);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    let counter = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+    for kid in 0..8 {
+        let c = std::sync::Arc::clone(&counter);
+        cluster.run_kernel(kid, move |mut k| {
+            for round in 0..20u64 {
+                // Everyone observes the same count at each barrier.
+                k.barrier().unwrap();
+                let v = c.load(std::sync::atomic::Ordering::SeqCst);
+                assert_eq!(v, round, "kernel {kid} saw {v} at round {round}");
+                k.barrier().unwrap();
+                if kid == 0 {
+                    c.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                }
+                k.barrier().unwrap();
+            }
+        });
+    }
+    cluster.join().unwrap();
+}
+
+/// User handlers run on the receiving handler thread (software kernels).
+#[test]
+fn user_handler_fires() {
+    let spec = ClusterSpec::single_node("n0", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    // Handler 20 doubles the first payload byte into the segment at args[0].
+    cluster
+        .register_handler(1, 20, |a| {
+            a.segment.write(a.args[0], &[a.payload[0] * 2]).unwrap();
+        })
+        .unwrap();
+    cluster.run_kernel(0, |mut k| {
+        k.am_medium(1, 20, &[500], &[21]).unwrap();
+        k.wait_replies(1).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        let _ = k.recv_medium().unwrap();
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(500, 1).unwrap(), vec![42]);
+    });
+    cluster.join().unwrap();
+}
+
+/// API profile enforcement (paper §V-A modular future work).
+#[test]
+fn profile_blocks_disabled_classes() {
+    let mut b = ClusterBuilder::new();
+    let n0 = b.node("n0", Platform::Sw);
+    b.kernel(n0);
+    b.kernel(n0);
+    b.profile(shoal::config::ApiProfile::point_to_point());
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        // Medium works under the point-to-point profile…
+        k.am_medium(1, handlers::NOP, &[], b"ok").unwrap();
+        k.wait_replies(1).unwrap();
+        // …but Long is disabled.
+        let err = k.am_long(1, handlers::NOP, &[], &[0; 8], 0).unwrap_err();
+        assert!(matches!(err, shoal::Error::ProfileViolation(_)));
+        k.barrier().unwrap(); // barrier is enabled
+    });
+    cluster.run_kernel(1, |mut k| {
+        let _ = k.recv_medium().unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.join().unwrap();
+}

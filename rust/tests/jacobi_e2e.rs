@@ -1,0 +1,100 @@
+//! End-to-end distributed Jacobi vs. the serial oracle.
+
+use shoal::apps::jacobi::{compute, run_with_grid, JacobiConfig};
+
+fn rand_grid(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = shoal::util::rng::Rng::new(seed);
+    (0..n * n).map(|_| rng.f32_range(-1.0, 1.0)).collect()
+}
+
+fn check(cfg: JacobiConfig, grid: Vec<f32>) {
+    let report = run_with_grid(&cfg, grid.clone()).unwrap();
+    report.verify(&grid).unwrap();
+    assert_eq!(report.worker_reports.len(), cfg.workers);
+    assert!(report.wall.as_nanos() > 0);
+}
+
+#[test]
+fn sw_single_worker() {
+    let cfg = JacobiConfig { n: 18, iters: 10, workers: 1, nodes: 1, hw: false, chunked: false };
+    check(cfg, rand_grid(18, 1));
+}
+
+#[test]
+fn sw_four_workers_one_node() {
+    let cfg = JacobiConfig { n: 34, iters: 12, workers: 4, nodes: 1, hw: false, chunked: false };
+    check(cfg, rand_grid(34, 2));
+}
+
+#[test]
+fn sw_uneven_strips() {
+    // 30 interior rows over 7 workers: strips of 5 and 4 rows.
+    let cfg = JacobiConfig { n: 32, iters: 8, workers: 7, nodes: 1, hw: false, chunked: false };
+    check(cfg, rand_grid(32, 3));
+}
+
+#[test]
+fn sw_workers_across_two_nodes() {
+    let cfg = JacobiConfig { n: 34, iters: 10, workers: 4, nodes: 2, hw: false, chunked: false };
+    check(cfg, rand_grid(34, 4));
+}
+
+#[test]
+fn hw_workers_match_oracle() {
+    // Tile shapes must exist as artifacts: 32×64 tiles → grid 66, 2 workers.
+    let cfg = JacobiConfig { n: 66, iters: 6, workers: 2, nodes: 1, hw: true, chunked: false };
+    check(cfg, rand_grid(66, 5));
+}
+
+#[test]
+fn hw_two_fpgas() {
+    // 16×32 tiles → grid 34, 2 workers over 2 "FPGAs".
+    let cfg = JacobiConfig { n: 34, iters: 6, workers: 2, nodes: 2, hw: true, chunked: false };
+    check(cfg, rand_grid(34, 6));
+}
+
+#[test]
+fn hw_missing_artifact_is_a_clear_error() {
+    let cfg = JacobiConfig { n: 30, iters: 2, workers: 2, nodes: 1, hw: true, chunked: false };
+    let err = run_with_grid(&cfg, rand_grid(30, 7)).unwrap_err();
+    assert!(matches!(err, shoal::Error::Artifact(_)), "{err}");
+    assert!(err.to_string().contains("14x30"), "{err}");
+}
+
+#[test]
+fn heat_diffusion_physics() {
+    // Hot top plate diffuses downward; interior stays within bounds.
+    let n = 34;
+    let grid = compute::hot_plate(n, n);
+    let cfg = JacobiConfig { n, iters: 100, workers: 4, nodes: 1, hw: false, chunked: false };
+    let report = run_with_grid(&cfg, grid.clone()).unwrap();
+    report.verify(&grid).unwrap();
+    // Row 1 (just under the hot edge) is warmer than row n-2.
+    let row = |r: usize| -> f32 {
+        report.grid[r * n..(r + 1) * n].iter().sum::<f32>() / n as f32
+    };
+    assert!(row(1) > row(n - 2));
+    assert!(report.grid.iter().all(|&v| (0.0..=100.0).contains(&v)));
+}
+
+#[test]
+fn oversized_halo_fails_without_chunking() {
+    // Grid 4096 → rows of 16 KiB > the 9000 B Galapagos cap. The paper hits
+    // exactly this (§IV-C1: "too large to send in a single AM ... has not
+    // been implemented"); the run must fail fast, not hang.
+    let n = 4096;
+    let cfg = JacobiConfig { n, iters: 1, workers: 2, nodes: 1, hw: false, chunked: false };
+    let grid = vec![0f32; n * n];
+    let err = run_with_grid(&cfg, grid).unwrap_err();
+    assert!(matches!(err, shoal::Error::AmTooLarge { .. }), "{err}");
+}
+
+#[test]
+fn chunked_run_matches_oracle() {
+    // With the chunking extension enabled (the paper's proposed fix,
+    // implemented here), runs whose distribution AMs exceed one packet work
+    // and still match the oracle. 64×64 tiles are 16 KiB → 2 chunks each.
+    let n = 66;
+    let cfg = JacobiConfig { n, iters: 4, workers: 1, nodes: 1, hw: false, chunked: true };
+    check(cfg, rand_grid(n, 8));
+}

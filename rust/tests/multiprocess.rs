@@ -1,0 +1,129 @@
+//! Real multi-process deployment: this test process hosts node 0 of a
+//! two-node TCP cluster and spawns `shoal serve` as a *separate OS process*
+//! hosting node 1 — the Galapagos model of one runtime per machine.
+
+use std::io::Write;
+use std::process::{Child, Command, Stdio};
+
+use shoal::config::parse::parse_cluster;
+use shoal::prelude::*;
+use shoal::shoal_node::cluster::ShoalCluster;
+
+/// Guard serializing port allocation + binding across parallel tests —
+/// otherwise another test's bind-and-drop can recycle a port in the window
+/// between `free_ports` releasing it and the cluster re-binding it.
+static PORT_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Pick two free loopback ports by binding-and-dropping listeners.
+fn free_ports() -> (u16, u16) {
+    let a = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let b = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    (a.local_addr().unwrap().port(), b.local_addr().unwrap().port())
+}
+
+fn cluster_file(p0: u16, p1: u16) -> String {
+    format!(
+        r#"
+transport = "tcp"
+
+[[node]]
+name = "driver"
+platform = "sw"
+address = "127.0.0.1:{p0}"
+
+[[node]]
+name = "server"
+platform = "sw"
+address = "127.0.0.1:{p1}"
+
+[[kernel]]
+node = "driver"
+
+[[kernel]]
+node = "server"
+count = 2
+"#
+    )
+}
+
+fn spawn_server(path: &std::path::Path, node: u16, max_msgs: u64) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_shoal"))
+        .args([
+            "serve",
+            "--cluster",
+            path.to_str().unwrap(),
+            "--node",
+            &node.to_string(),
+            "--app",
+            "echo",
+            "--max-msgs",
+            &max_msgs.to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shoal serve")
+}
+
+#[test]
+fn two_process_echo_over_tcp() {
+    let _guard = PORT_LOCK.lock().unwrap();
+    let (p0, p1) = free_ports();
+    let text = cluster_file(p0, p1);
+    let spec = parse_cluster(&text).unwrap();
+
+    // Write the cluster file for the server process.
+    let dir = std::env::temp_dir().join(format!("shoal-mp-{p0}-{p1}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cluster.toml");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(text.as_bytes()).unwrap();
+    drop(f);
+
+    const MSGS: u64 = 25;
+    let mut server = spawn_server(&path, 1, MSGS);
+
+    // Host node 0 in this process and drive both remote kernels.
+    let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    cluster.run_kernel(0, move |mut k| {
+        for target in [1u16, 2] {
+            for i in 0..MSGS {
+                k.am_medium(target, handlers::NOP, &[i], format!("msg-{i}").as_bytes())
+                    .unwrap();
+                // Echo comes back asynchronously on our stream; the put
+                // itself is acked.
+                k.wait_replies(1).unwrap();
+                let echo = k.recv_medium().unwrap();
+                assert_eq!(echo.src, target);
+                assert_eq!(echo.args, vec![i]);
+                assert_eq!(echo.payload, format!("msg-{i}").into_bytes());
+            }
+        }
+        tx.send(()).unwrap();
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(60))
+        .expect("driver finished");
+    cluster.join().unwrap();
+
+    let status = server.wait().expect("server exits after max-msgs");
+    assert!(status.success(), "server exit: {status:?}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn launch_node_rejects_local_transport() {
+    let spec = shoal::config::ClusterSpec::single_node("n", 1);
+    assert!(ShoalCluster::launch_node(&spec, 0).is_err());
+}
+
+#[test]
+fn launch_node_rejects_unknown_node() {
+    let _guard = PORT_LOCK.lock().unwrap();
+    let (p0, p1) = free_ports();
+    let spec = parse_cluster(&cluster_file(p0, p1)).unwrap();
+    assert!(matches!(
+        ShoalCluster::launch_node(&spec, 9),
+        Err(shoal::Error::UnknownNode(9))
+    ));
+}

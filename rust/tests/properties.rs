@@ -1,0 +1,326 @@
+//! Property-based tests over the library's core invariants.
+//!
+//! Uses the in-crate mini framework (`shoal::util::proptest`): seeded random
+//! cases with failing-seed reporting (`SHOAL_PROP_SEED` to replay).
+
+use shoal::am::header::{AmMessage, Descriptor, MAX_VECTORED};
+use shoal::am::types::{AmFlags, AmType};
+use shoal::galapagos::packet::{Packet, MAX_PAYLOAD_BYTES};
+use shoal::galapagos::router::RoutingTable;
+use shoal::memory::Segment;
+use shoal::util::proptest::check;
+use shoal::util::rng::Rng;
+use shoal::{prop_assert, prop_assert_eq};
+
+/// Build a random-but-valid AM.
+fn random_am(rng: &mut Rng) -> AmMessage {
+    let am_type = *rng.pick(&[
+        AmType::Short,
+        AmType::Medium,
+        AmType::Long,
+        AmType::LongStrided,
+        AmType::LongVectored,
+    ]);
+    let mut flags = AmFlags::new();
+    if rng.chance(0.3) {
+        flags = flags.with(AmFlags::ASYNC);
+    }
+    if rng.chance(0.3) {
+        flags = flags.with(AmFlags::FIFO);
+    }
+    let nargs = rng.below(9) as usize;
+    let args: Vec<u64> = (0..nargs).map(|_| rng.next_u64()).collect();
+    let payload_len = rng.below(2048) as usize;
+
+    let (desc, payload, flags) = match am_type {
+        AmType::Short => (Descriptor::None, vec![], flags),
+        AmType::Medium => {
+            if rng.chance(0.3) {
+                (
+                    Descriptor::MediumGet {
+                        src_addr: rng.below(1 << 20),
+                        len: rng.below(4096) as u32,
+                    },
+                    vec![],
+                    flags.with(AmFlags::GET),
+                )
+            } else {
+                (Descriptor::None, rng.bytes(payload_len), flags)
+            }
+        }
+        AmType::Long => {
+            if rng.chance(0.3) {
+                (
+                    Descriptor::LongGet {
+                        src_addr: rng.below(1 << 20),
+                        len: rng.below(4096) as u32,
+                        reply_addr: rng.below(1 << 20),
+                    },
+                    vec![],
+                    flags.with(AmFlags::GET),
+                )
+            } else {
+                (
+                    Descriptor::Long { dst_addr: rng.below(1 << 30) },
+                    rng.bytes(payload_len),
+                    flags,
+                )
+            }
+        }
+        AmType::LongStrided => {
+            let block_len = rng.range(1, 64) as u32;
+            let nblocks = rng.range(1, 16) as u32;
+            let stride = block_len + rng.below(64) as u32;
+            (
+                Descriptor::Strided {
+                    dst_addr: rng.below(1 << 20),
+                    stride,
+                    block_len,
+                    nblocks,
+                },
+                rng.bytes((block_len * nblocks) as usize),
+                flags,
+            )
+        }
+        AmType::LongVectored => {
+            let count = rng.range(1, MAX_VECTORED as u64) as usize;
+            let entries: Vec<(u64, u32)> = (0..count)
+                .map(|_| (rng.below(1 << 20), rng.range(0, 64) as u32))
+                .collect();
+            let total: usize = entries.iter().map(|(_, l)| *l as usize).sum();
+            (Descriptor::Vectored { entries }, rng.bytes(total), flags)
+        }
+    };
+
+    AmMessage {
+        am_type,
+        flags,
+        src: rng.next_u32() as u16,
+        dst: rng.next_u32() as u16,
+        handler: rng.next_u32() as u8,
+        token: rng.next_u32(),
+        args,
+        desc,
+        payload,
+    }
+}
+
+#[test]
+fn prop_am_codec_roundtrip() {
+    check("am-codec-roundtrip", 2000, |rng| {
+        let msg = random_am(rng);
+        let wire = msg.encode().map_err(|e| format!("encode: {e}"))?;
+        let back = AmMessage::decode(&wire).map_err(|e| format!("decode: {e}"))?;
+        prop_assert_eq!(msg, back);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_am_decode_never_panics_on_garbage() {
+    check("am-decode-garbage", 5000, |rng| {
+        let len = rng.below(256) as usize;
+        let buf = rng.bytes(len);
+        let _ = AmMessage::decode(&buf); // must return, never panic
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_am_decode_survives_truncation_and_bitflips() {
+    check("am-decode-mutation", 1000, |rng| {
+        let msg = random_am(rng);
+        let mut wire = msg.encode().map_err(|e| format!("{e}"))?;
+        if rng.chance(0.5) && !wire.is_empty() {
+            let cut = rng.below(wire.len() as u64) as usize;
+            wire.truncate(cut);
+        } else if !wire.is_empty() {
+            let i = rng.below(wire.len() as u64) as usize;
+            wire[i] ^= 1 << rng.below(8);
+        }
+        let _ = AmMessage::decode(&wire); // any Result is fine; no panic/OOM
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packet_wire_roundtrip() {
+    check("packet-roundtrip", 2000, |rng| {
+        let len = rng.below(MAX_PAYLOAD_BYTES as u64 + 1) as usize;
+        let pkt = Packet::new(rng.next_u32() as u16, rng.next_u32() as u16, rng.bytes(len))
+            .map_err(|e| format!("{e}"))?;
+        let back = Packet::from_wire(&pkt.to_wire()).map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(pkt, back);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_allocator_never_overlaps() {
+    check("allocator-no-overlap", 300, |rng| {
+        let seg = Segment::new(1 << 16);
+        let mut live: Vec<(u64, usize)> = Vec::new();
+        for _ in 0..64 {
+            if !live.is_empty() && rng.chance(0.4) {
+                let i = rng.below(live.len() as u64) as usize;
+                let (off, _) = live.swap_remove(i);
+                seg.free(off).map_err(|e| format!("free: {e}"))?;
+            } else {
+                let len = rng.range(1, 2048) as usize;
+                if let Ok(off) = seg.alloc(len) {
+                    for &(o, l) in &live {
+                        let disjoint = off + len as u64 <= o || o + l as u64 <= off;
+                        prop_assert!(disjoint, "overlap: new ({off},{len}) vs live ({o},{l})");
+                    }
+                    live.push((off, len));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_alloc_free_alloc_converges() {
+    check("allocator-coalesce", 200, |rng| {
+        let size = 1 << 14;
+        let seg = Segment::new(size);
+        let mut offs = Vec::new();
+        for _ in 0..16 {
+            if let Ok(o) = seg.alloc(rng.range(8, 512) as usize) {
+                offs.push(o);
+            }
+        }
+        rng.shuffle(&mut offs);
+        for o in offs {
+            seg.free(o).map_err(|e| format!("{e}"))?;
+        }
+        // After freeing everything, the full segment must be allocatable.
+        let o = seg.alloc(size).map_err(|e| format!("full realloc: {e}"))?;
+        prop_assert_eq!(o, 0);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_strided_equals_naive_scatter() {
+    check("strided-vs-naive", 500, |rng| {
+        let seg_a = Segment::new(1 << 14);
+        let seg_b = Segment::new(1 << 14);
+        let block_len = rng.range(1, 64) as u32;
+        let nblocks = rng.range(1, 16) as u32;
+        let stride = block_len + rng.below(32) as u32;
+        let base = rng.below(256);
+        let span = (nblocks - 1) as u64 * stride as u64 + block_len as u64;
+        if base + span > (1 << 14) {
+            return Ok(()); // out of range; covered by bounds tests
+        }
+        let data = rng.bytes((block_len * nblocks) as usize);
+        seg_a
+            .write_strided(base, stride, block_len, &data)
+            .map_err(|e| format!("{e}"))?;
+        for i in 0..nblocks {
+            let chunk = &data[(i * block_len) as usize..((i + 1) * block_len) as usize];
+            seg_b
+                .write(base + (i * stride) as u64, chunk)
+                .map_err(|e| format!("{e}"))?;
+        }
+        let a = seg_a.read(base, span as usize).map_err(|e| format!("{e}"))?;
+        let b = seg_b.read(base, span as usize).map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(a, b);
+        // Gather inverts scatter.
+        let back = seg_a
+            .read_strided(base, stride, block_len, nblocks)
+            .map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(back, data);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_vectored_equals_naive() {
+    check("vectored-vs-naive", 500, |rng| {
+        let seg = Segment::new(1 << 14);
+        let count = rng.range(1, 8) as usize;
+        // Non-overlapping extents in disjoint 1 KiB lanes.
+        let entries: Vec<(u64, u32)> = (0..count)
+            .map(|i| ((i as u64) * 1024 + rng.below(256), rng.range(1, 256) as u32))
+            .collect();
+        let total: usize = entries.iter().map(|(_, l)| *l as usize).sum();
+        let data = rng.bytes(total);
+        seg.write_vectored(&entries, &data).map_err(|e| format!("{e}"))?;
+        let back = seg.read_vectored(&entries).map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(back, data);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_table_total() {
+    check("routing-total", 500, |rng| {
+        let kernels = rng.range(1, 64) as u16;
+        let nodes = rng.range(1, 8) as u16;
+        let entries: Vec<(u16, u16)> =
+            (0..kernels).map(|k| (k, rng.below(nodes as u64) as u16)).collect();
+        let table = RoutingTable::new(entries.clone());
+        for (k, n) in entries {
+            prop_assert_eq!(table.node_of(k).map_err(|e| format!("{e}"))?, n);
+        }
+        prop_assert!(table.node_of(kernels + 1).is_err(), "unknown kernel must error");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_header_overhead_matches_wire() {
+    check("header-overhead", 1000, |rng| {
+        let msg = random_am(rng);
+        let wire = msg.encode().map_err(|e| format!("{e}"))?;
+        prop_assert_eq!(wire.len(), msg.header_overhead() + msg.payload.len());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_put_sequences_reach_consistent_state() {
+    // Drive a 2-kernel cluster with a random sequence of puts; afterwards the
+    // destination partition must equal a serially-applied model.
+    check("put-sequence-consistency", 25, |rng| {
+        use shoal::config::ClusterSpec;
+        use shoal::prelude::*;
+
+        let spec = ClusterSpec::single_node("p", 2);
+        let cluster = ShoalCluster::launch(&spec).map_err(|e| format!("{e}"))?;
+        let mut model = vec![0u8; 1 << 16];
+        let ops: Vec<(u64, Vec<u8>)> = (0..rng.range(1, 24))
+            .map(|_| {
+                let len = rng.range(1, 512) as usize;
+                let off = rng.below((1 << 16) - len as u64);
+                (off, rng.bytes(len))
+            })
+            .collect();
+        for (off, data) in &ops {
+            model[*off as usize..*off as usize + data.len()].copy_from_slice(data);
+        }
+        let ops2 = ops.clone();
+        cluster.run_kernel(0, move |mut k| {
+            let mut outstanding = 0;
+            for (off, data) in &ops2 {
+                outstanding += k.am_long(1, handlers::NOP, &[], data, *off).unwrap().messages;
+            }
+            k.wait_replies(outstanding).unwrap();
+            k.barrier().unwrap();
+        });
+        let (tx, rx) = std::sync::mpsc::channel();
+        cluster.run_kernel(1, move |mut k| {
+            k.barrier().unwrap();
+            tx.send(k.mem().read(0, 1 << 16).unwrap()).unwrap();
+        });
+        let got = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .map_err(|_| "timeout".to_string())?;
+        cluster.join().map_err(|e| format!("{e}"))?;
+        prop_assert!(got == model, "partition state diverged from serial model");
+        Ok(())
+    });
+}

@@ -1,0 +1,113 @@
+//! PJRT runtime integration: AOT artifacts load, execute, and agree with the
+//! rust serial oracle (the same contract python/tests checks against ref.py).
+
+use shoal::apps::jacobi::compute::{JacobiCompute, RustSweep, XlaSweep};
+use shoal::runtime::Engine;
+use shoal::util::rng::Rng;
+
+fn engine() -> std::sync::Arc<Engine> {
+    Engine::load_default().expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let e = engine();
+    let shapes = e.jacobi_shapes();
+    assert!(shapes.contains(&(16, 34)), "{shapes:?}");
+    assert!(shapes.contains(&(512, 4098)), "{shapes:?}");
+    assert!(shapes.len() >= 9);
+}
+
+#[test]
+fn every_artifact_shape_matches_oracle() {
+    let e = engine();
+    let xla = XlaSweep::new(std::sync::Arc::clone(&e));
+    let mut rng = Rng::new(42);
+    for (rows, cols) in e.jacobi_shapes() {
+        if rows * cols > 200_000 {
+            continue; // keep the test fast; big shapes covered by benches
+        }
+        let padded: Vec<f32> =
+            (0..(rows + 2) * cols).map(|_| rng.f32_range(-10.0, 10.0)).collect();
+        let got = xla.step(rows, cols, &padded).unwrap();
+        let want = RustSweep.step(rows, cols, &padded).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < 1e-3, "{rows}×{cols} idx {i}: {g} vs {w}");
+        }
+    }
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let e = engine();
+    let padded: Vec<f32> = (0..18 * 34).map(|i| (i % 23) as f32 * 0.5).collect();
+    let a = e.jacobi_step(16, 34, &padded).unwrap();
+    let b = e.jacobi_step(16, 34, &padded).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn iteration_converges_like_oracle() {
+    // Run 50 iterations through the engine on a single padded tile with
+    // fixed halos, against the serial sweep.
+    let e = engine();
+    let (rows, cols) = (16, 34);
+    let mut rng = Rng::new(7);
+    let mut tile: Vec<f32> = (0..rows * cols).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    let halo_top = vec![1.0f32; cols];
+    let halo_bot = vec![0.0f32; cols];
+    let mut tile_oracle = tile.clone();
+
+    for _ in 0..50 {
+        let mut padded = Vec::with_capacity((rows + 2) * cols);
+        padded.extend_from_slice(&halo_top);
+        padded.extend_from_slice(&tile);
+        padded.extend_from_slice(&halo_bot);
+        tile = e.jacobi_step(rows, cols, &padded).unwrap();
+
+        let mut padded_o = Vec::with_capacity((rows + 2) * cols);
+        padded_o.extend_from_slice(&halo_top);
+        padded_o.extend_from_slice(&tile_oracle);
+        padded_o.extend_from_slice(&halo_bot);
+        tile_oracle = RustSweep.step(rows, cols, &padded_o).unwrap();
+    }
+    for (g, w) in tile.iter().zip(&tile_oracle) {
+        assert!((g - w).abs() < 1e-3, "{g} vs {w}");
+    }
+    // Physically sensible: interior between the halo temperatures.
+    assert!(tile.iter().skip(cols).take(cols).all(|&v| (0.0..=1.0).contains(&v)));
+}
+
+#[test]
+fn engine_shared_across_threads() {
+    let e = engine();
+    e.warm("jacobi_r16_c34").unwrap();
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let e = std::sync::Arc::clone(&e);
+        handles.push(std::thread::spawn(move || {
+            let padded: Vec<f32> = (0..18 * 34).map(|i| ((i + t) % 17) as f32).collect();
+            for _ in 0..10 {
+                let out = e.jacobi_step(16, 34, &padded).unwrap();
+                assert_eq!(out.len(), 16 * 34);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(
+        e.stats().compiles.load(std::sync::atomic::Ordering::Relaxed),
+        1,
+        "executable must compile exactly once"
+    );
+}
+
+#[test]
+fn missing_artifact_error_is_actionable() {
+    let e = engine();
+    let err = e.jacobi_step(5, 7, &vec![0.0; 49]).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("aot.py"), "{msg}");
+}

@@ -1,0 +1,109 @@
+//! Cross-checks between the DES cost model and the *real* library: the
+//! model's qualitative orderings must also hold for measured wall-clock
+//! numbers wherever both exist on this machine.
+
+use shoal::bench::micro::{measure_latency, measure_throughput, BenchPlacement};
+use shoal::config::TransportKind;
+use shoal::sim::{CostModel, MsgKind, Protocol, Topology};
+
+#[test]
+fn measured_tcp_slower_than_in_proc() {
+    // Model: SW-SW(diff) > SW-SW(same). Measured must agree.
+    let in_proc = measure_latency(BenchPlacement::sw_same(), MsgKind::MediumFifo, 64, 100, 20)
+        .unwrap();
+    let tcp = measure_latency(
+        BenchPlacement::sw_diff(TransportKind::Tcp),
+        MsgKind::MediumFifo,
+        64,
+        100,
+        20,
+    )
+    .unwrap();
+    assert!(
+        tcp.median() > in_proc.median(),
+        "tcp {} vs in-proc {}",
+        tcp.median(),
+        in_proc.median()
+    );
+    let cm = CostModel::paper();
+    let m_same = cm.latency_ns(Topology::SwSwSame, Protocol::Tcp, MsgKind::MediumFifo, 64).unwrap();
+    let m_diff = cm.latency_ns(Topology::SwSwDiff, Protocol::Tcp, MsgKind::MediumFifo, 64).unwrap();
+    assert!(m_diff > m_same);
+}
+
+#[test]
+fn measured_throughput_rises_with_payload() {
+    // Model: throughput increases with payload. Measured must agree.
+    let small = measure_throughput(BenchPlacement::sw_same(), MsgKind::LongFifo, 64, 400).unwrap();
+    let large = measure_throughput(BenchPlacement::sw_same(), MsgKind::LongFifo, 4096, 400).unwrap();
+    assert!(large > small * 2.0, "small {small} large {large}");
+}
+
+#[test]
+fn measured_latency_distribution_sane() {
+    let s = measure_latency(BenchPlacement::sw_same(), MsgKind::LongFifo, 1024, 300, 50).unwrap();
+    assert!(s.min() > 0.0);
+    assert!(s.median() >= s.percentile(0.25));
+    assert!(s.p99() >= s.median());
+    // Round trips through two thread hops can't be faster than ~1 µs.
+    assert!(s.median() > 1_000.0, "median {}", s.median());
+}
+
+#[test]
+fn model_udp_gap_matches_real_udp_core_behavior() {
+    // The cost model refuses UDP+HW beyond the MTU; the transport layer
+    // enforces the same rule (tested in failure_injection); here: the model
+    // boundary is exactly the MTU crossing.
+    let cm = CostModel::paper();
+    let at = |p| cm.latency_ns(Topology::HwHwDiff, Protocol::Udp, MsgKind::MediumFifo, p);
+    assert!(at(1024).is_some());
+    assert!(at(2048).is_none());
+    // The exact boundary: payload + headers vs 1472.
+    let mut lo = 1024usize;
+    let mut hi = 2048usize;
+    while hi - lo > 1 {
+        let mid = (lo + hi) / 2;
+        if at(mid).is_some() {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    // Boundary within a header's width of the MTU.
+    assert!((1380..=1472).contains(&lo), "boundary at {lo}");
+}
+
+#[test]
+fn gascore_cycle_stats_feed_model_scale() {
+    // A functional HW run produces cycle counts in the ballpark the latency
+    // model assumes (hundreds of ns to µs per message, not ms).
+    use shoal::config::{ClusterBuilder, Platform};
+    use shoal::prelude::*;
+
+    let mut b = ClusterBuilder::new();
+    let n0 = b.node("cpu", Platform::Sw);
+    let n1 = b.node("fpga", Platform::Hw);
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(k0, move |mut k| {
+        for _ in 0..100 {
+            k.am_long(k1, handlers::NOP, &[], &[7; 1024], 0).unwrap();
+        }
+        k.wait_replies(100).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(k1, move |mut k| {
+        k.barrier().unwrap();
+    });
+    let stats = cluster.gascore_stats(n1).unwrap();
+    cluster.join().unwrap();
+    let msgs = stats.messages_in.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(msgs >= 100, "gascore saw {msgs} messages");
+    let per_msg_ns = stats.modeled_ns() / msgs as f64;
+    assert!(
+        (100.0..20_000.0).contains(&per_msg_ns),
+        "modeled {per_msg_ns} ns/message out of expected band"
+    );
+}
