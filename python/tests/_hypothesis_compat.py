@@ -1,0 +1,83 @@
+"""Deterministic fallback for the `hypothesis` API surface these tests use.
+
+The CI image installs real hypothesis; fully-offline dev machines may not
+have it. Test modules import through this shim:
+
+    from _hypothesis_compat import given, settings, strategies as st
+
+which re-exports real hypothesis when importable and otherwise provides a
+small deterministic property runner: `@given(...)` draws `max_examples`
+pseudo-random examples from the declared strategies (seeded per test name,
+so failures replay) and calls the test once per example.
+
+Only the strategies these tests use are implemented: `integers` and
+`sampled_from`.
+"""
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+
+    HYPOTHESIS_BACKEND = "hypothesis"
+except ImportError:
+    import random
+
+    HYPOTHESIS_BACKEND = "fallback"
+    _DEFAULT_MAX_EXAMPLES = 25
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: rng.choice(items))
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kwargs):
+        """Decorator recording the example budget on the wrapped test."""
+
+        def apply(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return apply
+
+    def given(**strategy_kwargs):
+        def apply(fn):
+            import functools
+            import inspect
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                examples = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                rng = random.Random(fn.__qualname__)
+                for i in range(examples):
+                    drawn = {k: s.draw(rng) for k, s in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **drawn, **kwargs)
+                    except Exception as e:  # noqa: BLE001 - re-raise with context
+                        raise AssertionError(
+                            f"property failed on example {i}: {drawn!r}"
+                        ) from e
+
+            # The drawn parameters are supplied here, not by pytest — hide
+            # them so they aren't mistaken for fixtures.
+            runner.__signature__ = inspect.Signature(
+                [
+                    p
+                    for p in inspect.signature(fn).parameters.values()
+                    if p.name not in strategy_kwargs
+                ]
+            )
+            del runner.__wrapped__
+            return runner
+
+        return apply

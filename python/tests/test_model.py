@@ -1,7 +1,7 @@
 """L2 correctness: jacobi_step / residual_step semantics."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from compile.model import jacobi_step, residual_step
 from compile.kernels.ref import jacobi_step_ref, jacobi_global_ref

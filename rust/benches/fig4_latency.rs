@@ -43,8 +43,10 @@ fn main() {
         ),
     ];
     println!("shape checks vs paper:");
+    let mut all_ok = true;
     for (name, ok) in shape {
         println!("  [{}] {}", if ok { "✓" } else { "✗" }, name);
+        all_ok &= ok;
     }
     println!();
 
@@ -75,4 +77,8 @@ fn main() {
          expected to differ in absolute value from the paper's testbed; the model\n\
          columns are the constants used for the figure above."
     );
+    if !all_ok {
+        eprintln!("FAILED: paper-shape checks violated");
+        std::process::exit(1);
+    }
 }

@@ -40,8 +40,10 @@ fn main() {
         ),
     ];
     println!("shape checks vs paper:");
+    let mut all_ok = true;
     for (name, ok) in checks {
         println!("  [{}] {}", if ok { "✓" } else { "✗" }, name);
+        all_ok &= ok;
     }
     println!();
 
@@ -52,6 +54,11 @@ fn main() {
     for (label, placement) in [
         ("in-proc", BenchPlacement::sw_same()),
         ("loopback TCP", BenchPlacement::sw_diff(TransportKind::Tcp)),
+        // The batched egress datapath: same topology, coalescing on.
+        (
+            "loopback TCP batched",
+            BenchPlacement::sw_diff(TransportKind::Tcp).batched(16 << 10, 64),
+        ),
     ] {
         for payload in [64usize, 1024, 4096] {
             let mf = measure_throughput(placement, MsgKind::MediumFifo, payload, count).unwrap();
@@ -67,4 +74,8 @@ fn main() {
         }
     }
     println!("{}", m.render());
+    if !all_ok {
+        eprintln!("FAILED: paper-shape checks violated");
+        std::process::exit(1);
+    }
 }

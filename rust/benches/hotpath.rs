@@ -4,21 +4,34 @@
 //! has a stable baseline:
 //!
 //! - AM header encode/decode rate
+//! - packet wire encode: fresh allocation vs pooled (recycled) buffer
+//! - TCP egress datapath: unbatched vs coalesced small-message send rate
 //! - PGAS segment read/write bandwidth (incl. strided)
 //! - in-process Medium round trip (API → router → handler → reply)
 //! - in-process Long-put throughput
-//! - GAScore ingress pipeline rate
 //! - XLA engine jacobi-step execution time per tile shape
 //!
 //! Run: `cargo bench --bench hotpath`
+//! Quick mode: `SHOAL_BENCH_QUICK=1 cargo bench --bench hotpath`
+//!
+//! Exits nonzero if a datapath check fails (CI bench smoke gates on this):
+//! the batched ≤64 B send stage must sustain ≥2× the messages/sec of the
+//! unbatched stage.
 
+use std::collections::HashMap;
 use std::time::Instant;
 
 use shoal::am::header::{AmMessage, Descriptor};
 use shoal::am::types::{handler_ids, AmFlags, AmType};
 use shoal::bench::micro::{measure_latency, measure_throughput, BenchPlacement};
+use shoal::bench::report;
+use shoal::galapagos::packet::Packet;
+use shoal::galapagos::router::RouterMsg;
+use shoal::galapagos::transport::tcp::{TcpEgress, TcpIngress};
+use shoal::galapagos::transport::Egress;
 use shoal::memory::Segment;
 use shoal::sim::MsgKind;
+use shoal::util::table::Table;
 use shoal::util::{fmt_ns, fmt_rate};
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -35,9 +48,63 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     per
 }
 
+/// Time the send side of `msgs` 64-byte packets through a real loopback
+/// TCP egress/ingress pair; returns messages/second. `batch` = the
+/// (batch_bytes, batch_max_msgs) coalescing budgets, or `None` for the
+/// unbatched path.
+fn tcp_send_rate(batch: Option<(usize, usize)>, msgs: usize) -> f64 {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut ingress = TcpIngress::bind("127.0.0.1:0", tx).expect("bind loopback");
+    let addr = ingress.local_addr().to_string();
+
+    // Drain received packets so socket buffers never stall the sender;
+    // stops after the expected count (warmup + timed) or a stall.
+    let expected = msgs + 100;
+    let drain = std::thread::spawn(move || {
+        let mut n = 0usize;
+        while n < expected {
+            match rx.recv_timeout(std::time::Duration::from_secs(10)) {
+                Ok(RouterMsg::FromNetwork(_)) => n += 1,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        n
+    });
+
+    let peers = HashMap::from([(1u16, addr)]);
+    let mut egress = match batch {
+        None => TcpEgress::new(peers),
+        Some((bytes, max_msgs)) => TcpEgress::with_batching(peers, bytes, max_msgs),
+    };
+    let payload = vec![0xA5u8; 64];
+    // Warm the connection (lazy connect + first syscalls).
+    for _ in 0..100 {
+        egress.send(1, Packet::new(0, 0, payload.clone()).unwrap()).unwrap();
+    }
+    egress.flush().unwrap();
+
+    let t0 = Instant::now();
+    for _ in 0..msgs {
+        egress.send(1, Packet::new(0, 0, payload.clone()).unwrap()).unwrap();
+    }
+    egress.flush().unwrap();
+    let rate = msgs as f64 / t0.elapsed().as_secs_f64();
+
+    // Wait for full delivery before tearing the ingress down (its shutdown
+    // flag would otherwise stop readers with frames still buffered).
+    let received = drain.join().expect("drain thread");
+    assert_eq!(received, expected, "packets lost on loopback");
+    drop(egress);
+    ingress.shutdown();
+    rate
+}
+
 fn main() {
     let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
     let n = if quick { 2_000 } else { 20_000 };
+    let mut csv = Table::new("hotpath stages").header(["stage", "value", "unit"]);
+    let mut failed_checks: Vec<&'static str> = Vec::new();
 
     println!("== hotpath: codec ==");
     let msg = AmMessage {
@@ -58,6 +125,38 @@ fn main() {
     bench("decode long AM (1 KiB payload)", n, || {
         std::hint::black_box(AmMessage::decode(&encoded).unwrap());
     });
+
+    println!("== hotpath: packet wire encode ==");
+    let pkt = Packet::new(3, 7, vec![0x5A; 64]).unwrap();
+    let alloc_ns = bench("to_wire 64 B (fresh allocation)", n, || {
+        std::hint::black_box(pkt.to_wire());
+    });
+    let mut pooled = Vec::with_capacity(4096);
+    let pooled_ns = bench("write_wire 64 B (pooled buffer)", n, || {
+        pooled.clear();
+        pkt.write_wire(&mut pooled);
+        std::hint::black_box(pooled.len());
+    });
+    println!("      -> pooled encode speedup {:.2}×", alloc_ns / pooled_ns);
+    csv.row(["encode_alloc".into(), format!("{alloc_ns:.1}"), "ns/op".to_string()]);
+    csv.row(["encode_pooled".into(), format!("{pooled_ns:.1}"), "ns/op".to_string()]);
+
+    println!("== hotpath: TCP egress datapath (loopback, 64 B) ==");
+    let dp_msgs = if quick { 20_000 } else { 200_000 };
+    let unbatched = tcp_send_rate(None, dp_msgs);
+    println!("  unbatched send stage                   {:>12.0} msgs/s", unbatched);
+    let batched = tcp_send_rate(Some((16 << 10, 64)), dp_msgs);
+    println!("  batched send stage (16 KiB / 64 msgs)  {:>12.0} msgs/s", batched);
+    let ratio = batched / unbatched;
+    println!("      -> batching speedup {ratio:.2}×");
+    csv.row(["send_unbatched".into(), format!("{unbatched:.0}"), "msgs/s".to_string()]);
+    csv.row(["send_batched".into(), format!("{batched:.0}"), "msgs/s".to_string()]);
+    csv.row(["batching_speedup".into(), format!("{ratio:.2}"), "x".to_string()]);
+    let ok = ratio >= 2.0;
+    println!("  [{}] batched ≥2× unbatched (small messages)", if ok { "✓" } else { "✗" });
+    if !ok {
+        failed_checks.push("batched send stage < 2x unbatched");
+    }
 
     println!("== hotpath: PGAS segment ==");
     let seg = Segment::new(16 << 20);
@@ -83,6 +182,7 @@ fn main() {
         fmt_ns(lat.median()),
         fmt_ns(lat.p99())
     );
+    csv.row(["rt_medium64_median".into(), format!("{:.0}", lat.median()), "ns".to_string()]);
     let lat = measure_latency(BenchPlacement::sw_same(), MsgKind::LongFifo, 4096, samples, 50)
         .unwrap();
     println!(
@@ -119,5 +219,15 @@ fn main() {
             }
         }
         Err(e) => println!("  (engine unavailable: {e})"),
+    }
+
+    if let Ok(p) = report::save_csv(&csv, "hotpath") {
+        println!("\ncsv: {}", p.display());
+    }
+    if !failed_checks.is_empty() {
+        for f in &failed_checks {
+            eprintln!("FAILED CHECK: {f}");
+        }
+        std::process::exit(1);
     }
 }

@@ -16,13 +16,17 @@ use crate::prelude::ShoalCluster;
 use crate::sim::MsgKind;
 use crate::util::stats::Summary;
 
-/// Where the two benchmark kernels live.
+/// Where the two benchmark kernels live, plus the egress batching knobs
+/// for the cluster under test (`batch_bytes = 0` = historical unbatched
+/// datapath).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct BenchPlacement {
     pub sender: Platform,
     pub receiver: Platform,
     pub same_node: bool,
     pub transport: TransportKind,
+    pub batch_bytes: usize,
+    pub batch_max_msgs: usize,
 }
 
 impl BenchPlacement {
@@ -32,40 +36,41 @@ impl BenchPlacement {
             receiver: Platform::Sw,
             same_node: true,
             transport: TransportKind::Local,
+            batch_bytes: 0,
+            batch_max_msgs: crate::config::DEFAULT_BATCH_MAX_MSGS,
         }
     }
 
     pub fn sw_diff(transport: TransportKind) -> Self {
-        BenchPlacement {
-            sender: Platform::Sw,
-            receiver: Platform::Sw,
-            same_node: false,
-            transport,
-        }
+        BenchPlacement { same_node: false, transport, ..Self::sw_same() }
     }
 
     pub fn sw_to_hw(transport: TransportKind) -> Self {
         BenchPlacement {
-            sender: Platform::Sw,
             receiver: Platform::Hw,
             same_node: false,
             transport,
+            ..Self::sw_same()
         }
     }
 
     pub fn hw_same() -> Self {
-        BenchPlacement {
-            sender: Platform::Hw,
-            receiver: Platform::Hw,
-            same_node: true,
-            transport: TransportKind::Local,
-        }
+        BenchPlacement { sender: Platform::Hw, receiver: Platform::Hw, ..Self::sw_same() }
+    }
+
+    /// Same placement with egress coalescing enabled (the batched datapath
+    /// measured by `fig6_throughput` / `hotpath`).
+    pub fn batched(mut self, batch_bytes: usize, batch_max_msgs: usize) -> Self {
+        self.batch_bytes = batch_bytes;
+        self.batch_max_msgs = batch_max_msgs;
+        self
     }
 
     fn spec(&self) -> Result<ClusterSpec> {
         let mut b = ClusterBuilder::new();
         b.transport(self.transport);
         b.default_segment(1 << 20);
+        b.batch_bytes(self.batch_bytes).batch_max_msgs(self.batch_max_msgs);
         let addr = |_i: usize| "127.0.0.1:0".to_string();
         let mk = |b: &mut ClusterBuilder, name: &str, p: Platform, t: TransportKind, i: usize| {
             if t == TransportKind::Local {
@@ -285,5 +290,16 @@ mod tests {
         let s =
             measure_latency(BenchPlacement::hw_same(), MsgKind::LongFifo, 512, 20, 5).unwrap();
         assert!(s.median() > 0.0);
+    }
+
+    #[test]
+    fn batched_tcp_placement_works() {
+        // The batched datapath must still complete latency runs (idle
+        // flush keeps lone round trips moving) and throughput runs.
+        let p = BenchPlacement::sw_diff(TransportKind::Tcp).batched(16 << 10, 64);
+        let s = measure_latency(p, MsgKind::MediumFifo, 64, 20, 5).unwrap();
+        assert_eq!(s.count(), 20);
+        let bps = measure_throughput(p, MsgKind::MediumFifo, 64, 300).unwrap();
+        assert!(bps > 0.0);
     }
 }

@@ -101,11 +101,27 @@ pub struct ClusterSpec {
     pub profile: ApiProfile,
     /// Default segment size for kernels that don't override it.
     pub default_segment: usize,
+    /// Egress coalescing byte budget per peer: staged frames are written
+    /// with one syscall once this many bytes accumulate. `0` (default)
+    /// disables batching — wire behavior is bitwise identical to the
+    /// historical per-send path.
+    pub batch_bytes: usize,
+    /// Egress coalescing message-count budget per peer (only meaningful
+    /// when `batch_bytes > 0`).
+    pub batch_max_msgs: usize,
+    /// Flush staged egress batches whenever a node's router queue goes
+    /// idle, preserving single-message latency (default `true`).
+    pub flush_on_idle: bool,
 }
 
 /// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
 /// plus halos in the Jacobi workload).
 pub const DEFAULT_SEGMENT: usize = 64 << 20;
+
+/// Default message-count budget when batching is enabled without an
+/// explicit `batch_max_msgs`.
+pub const DEFAULT_BATCH_MAX_MSGS: usize =
+    crate::galapagos::transport::batch::DEFAULT_BATCH_MAX_MSGS;
 
 impl ClusterSpec {
     /// A single software node with `kernels` kernels — the simplest cluster.
@@ -193,6 +209,9 @@ impl ClusterSpec {
         if self.kernels.is_empty() {
             return Err(Error::Config("cluster has no kernels".into()));
         }
+        if self.batch_max_msgs == 0 {
+            return Err(Error::Config("batch_max_msgs must be at least 1".into()));
+        }
         Ok(())
     }
 }
@@ -206,11 +225,19 @@ pub struct ClusterBuilder {
     chunk_policy: ChunkPolicy,
     profile: ApiProfile,
     default_segment: usize,
+    batch_bytes: usize,
+    batch_max_msgs: usize,
+    flush_on_idle: bool,
 }
 
 impl ClusterBuilder {
     pub fn new() -> Self {
-        Self { default_segment: DEFAULT_SEGMENT, ..Default::default() }
+        Self {
+            default_segment: DEFAULT_SEGMENT,
+            batch_max_msgs: DEFAULT_BATCH_MAX_MSGS,
+            flush_on_idle: true,
+            ..Default::default()
+        }
     }
 
     /// Add a node; returns its id.
@@ -261,6 +288,24 @@ impl ClusterBuilder {
         self
     }
 
+    /// Egress coalescing byte budget (`0` disables batching).
+    pub fn batch_bytes(&mut self, bytes: usize) -> &mut Self {
+        self.batch_bytes = bytes;
+        self
+    }
+
+    /// Egress coalescing message-count budget.
+    pub fn batch_max_msgs(&mut self, msgs: usize) -> &mut Self {
+        self.batch_max_msgs = msgs;
+        self
+    }
+
+    /// Whether routers drain staged egress batches when their queue idles.
+    pub fn flush_on_idle(&mut self, on: bool) -> &mut Self {
+        self.flush_on_idle = on;
+        self
+    }
+
     pub fn build(self) -> Result<ClusterSpec> {
         let spec = ClusterSpec {
             nodes: self.nodes,
@@ -269,6 +314,9 @@ impl ClusterBuilder {
             chunk_policy: self.chunk_policy,
             profile: self.profile,
             default_segment: self.default_segment,
+            batch_bytes: self.batch_bytes,
+            batch_max_msgs: self.batch_max_msgs,
+            flush_on_idle: self.flush_on_idle,
         };
         spec.validate()?;
         Ok(spec)
@@ -323,5 +371,34 @@ mod tests {
         let s = ClusterSpec::single_node("n0", 1);
         assert!(matches!(s.kernel(9), Err(Error::UnknownKernel(9))));
         assert!(matches!(s.node(9), Err(Error::UnknownNode(9))));
+    }
+
+    #[test]
+    fn batching_defaults_off_with_idle_flush() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert_eq!(s.batch_bytes, 0);
+        assert_eq!(s.batch_max_msgs, DEFAULT_BATCH_MAX_MSGS);
+        assert!(s.flush_on_idle);
+    }
+
+    #[test]
+    fn batching_knobs_roundtrip_through_builder() {
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.batch_bytes(16384).batch_max_msgs(32).flush_on_idle(false);
+        let s = b.build().unwrap();
+        assert_eq!(s.batch_bytes, 16384);
+        assert_eq!(s.batch_max_msgs, 32);
+        assert!(!s.flush_on_idle);
+    }
+
+    #[test]
+    fn zero_batch_max_msgs_rejected() {
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.batch_max_msgs(0);
+        assert!(matches!(b.build(), Err(Error::Config(_))));
     }
 }

@@ -8,6 +8,9 @@
 //! chunking = "reject"          # or "chunked"
 //! profile = "full"             # full | point_to_point | remote_memory
 //! default_segment = 67108864
+//! batch_bytes = 16384          # egress coalescing budget; 0 = unbatched
+//! batch_max_msgs = 64          # flush after this many staged messages
+//! flush_on_idle = true         # drain staged batches when routers idle
 //!
 //! [[node]]
 //! name = "cpu0"
@@ -61,6 +64,9 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     let mut chunking = ChunkPolicy::Reject;
     let mut profile = ApiProfile::full();
     let mut default_segment: Option<usize> = None;
+    let mut batch_bytes: Option<usize> = None;
+    let mut batch_max_msgs: Option<usize> = None;
+    let mut flush_on_idle: Option<bool> = None;
     let mut nodes: Vec<NodeSec> = Vec::new();
     let mut kernels: Vec<KernelSec> = Vec::new();
 
@@ -130,6 +136,21 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
                     default_segment =
                         Some(value.parse().map_err(|_| err("default_segment must be an integer"))?)
                 }
+                "batch_bytes" => {
+                    batch_bytes =
+                        Some(value.parse().map_err(|_| err("batch_bytes must be an integer"))?)
+                }
+                "batch_max_msgs" => {
+                    batch_max_msgs =
+                        Some(value.parse().map_err(|_| err("batch_max_msgs must be an integer"))?)
+                }
+                "flush_on_idle" => {
+                    flush_on_idle = Some(match value.as_str() {
+                        "true" => true,
+                        "false" => false,
+                        _ => return Err(err("flush_on_idle must be true or false")),
+                    })
+                }
                 k => return Err(err(&format!("unknown top-level key '{k}'"))),
             },
             Section::Node(n) => match key {
@@ -156,6 +177,15 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     b.transport(transport).chunk_policy(chunking).profile(profile);
     if let Some(seg) = default_segment {
         b.default_segment(seg);
+    }
+    if let Some(bytes) = batch_bytes {
+        b.batch_bytes(bytes);
+    }
+    if let Some(msgs) = batch_max_msgs {
+        b.batch_max_msgs(msgs);
+    }
+    if let Some(on) = flush_on_idle {
+        b.flush_on_idle(on);
     }
 
     let mut node_ids: Vec<(String, u16)> = Vec::new();
@@ -294,5 +324,27 @@ segment = 4096
     fn comments_and_blank_lines_ignored() {
         let text = "\n# hi\n[[node]]\nname = \"a\" # inline\n[[kernel]]\nnode = \"a\"\n";
         assert!(parse_cluster(text).is_ok());
+    }
+
+    #[test]
+    fn parses_batching_knobs() {
+        let text = "batch_bytes = 16384\nbatch_max_msgs = 32\nflush_on_idle = false\n\
+                    [[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        let s = parse_cluster(text).unwrap();
+        assert_eq!(s.batch_bytes, 16384);
+        assert_eq!(s.batch_max_msgs, 32);
+        assert!(!s.flush_on_idle);
+        // Defaults when unspecified: batching off, idle flush on.
+        let d = parse_cluster("[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n").unwrap();
+        assert_eq!(d.batch_bytes, 0);
+        assert!(d.flush_on_idle);
+    }
+
+    #[test]
+    fn rejects_bad_batching_values() {
+        let base = "\n[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        assert!(parse_cluster(&format!("batch_bytes = \"lots\"{base}")).is_err());
+        assert!(parse_cluster(&format!("flush_on_idle = maybe{base}")).is_err());
+        assert!(parse_cluster(&format!("batch_max_msgs = 0{base}")).is_err());
     }
 }

@@ -1,94 +1,161 @@
 //! Error types for the Shoal library.
-
-use thiserror::Error;
+//!
+//! Hand-written `Display`/`Error` impls rather than a `thiserror` derive:
+//! the build is hermetic (no registry access), so proc-macro dependencies
+//! are out of reach.
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// All errors that Shoal operations can produce.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A Galapagos packet exceeded the middleware maximum (9000 bytes, the
     /// Ethernet jumbo-frame cap imposed by the hardware TCP/IP core — paper
     /// §IV-C1 footnote 2).
-    #[error("packet of {got} bytes exceeds the Galapagos maximum of {max} bytes")]
     PacketTooLarge { got: usize, max: usize },
 
     /// An AM payload does not fit in a single packet and chunked transfers
     /// are disabled (the paper's unimplemented resolution; we implement it
     /// behind `ChunkPolicy::Chunked`).
-    #[error("AM payload of {payload} bytes cannot be sent in a single packet (limit {limit}); enable chunking")]
     AmTooLarge { payload: usize, limit: usize },
 
     /// Destination kernel ID is not present in the cluster map.
-    #[error("unknown kernel id {0}")]
     UnknownKernel(u16),
 
     /// Node ID out of range for this cluster.
-    #[error("unknown node id {0}")]
     UnknownNode(u16),
 
     /// Handler ID has no registered handler function.
-    #[error("no handler registered for handler id {0}")]
     UnknownHandler(u8),
 
     /// A malformed Active Message header or truncated packet was received.
-    #[error("malformed active message: {0}")]
     MalformedAm(String),
 
     /// Access outside a kernel's memory segment.
-    #[error("segment access out of bounds: offset {offset} + len {len} > segment size {size}")]
     SegmentOutOfBounds { offset: u64, len: usize, size: usize },
 
     /// PGAS allocation failure.
-    #[error("out of segment memory allocating {0} bytes")]
     OutOfMemory(usize),
 
     /// Strided descriptor inconsistent with payload length.
-    #[error("invalid strided/vectored descriptor: {0}")]
     BadDescriptor(String),
 
     /// The channel to a kernel, router or handler thread is closed.
-    #[error("channel to {0} disconnected")]
     Disconnected(&'static str),
 
     /// Configuration file parse or validation error.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Transport-level I/O error.
-    #[error("transport error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// The hardware UDP core cannot handle IP-fragmented datagrams
     /// (paper §IV-B1): payload + headers exceeded the MTU.
-    #[error("hardware UDP core cannot send/receive fragmented datagram ({0} bytes > MTU)")]
     UdpFragmentation(usize),
 
     /// XLA / PJRT runtime error.
-    #[error("xla runtime error: {0}")]
     Xla(String),
 
     /// Artifact manifest missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// An operation is not permitted by the active API profile
     /// (paper §V-A modular-API future work, implemented here).
-    #[error("message type {0} is disabled by the active API profile")]
     ProfileViolation(&'static str),
 
     /// Timed out waiting for replies / barrier / recv.
-    #[error("timeout waiting for {0}")]
     Timeout(&'static str),
 
     /// Catch-all for JSON parse errors in manifests and reports.
-    #[error("json error: {0}")]
     Json(String),
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::PacketTooLarge { got, max } => {
+                write!(f, "packet of {got} bytes exceeds the Galapagos maximum of {max} bytes")
+            }
+            Error::AmTooLarge { payload, limit } => write!(
+                f,
+                "AM payload of {payload} bytes cannot be sent in a single packet \
+                 (limit {limit}); enable chunking"
+            ),
+            Error::UnknownKernel(id) => write!(f, "unknown kernel id {id}"),
+            Error::UnknownNode(id) => write!(f, "unknown node id {id}"),
+            Error::UnknownHandler(id) => write!(f, "no handler registered for handler id {id}"),
+            Error::MalformedAm(msg) => write!(f, "malformed active message: {msg}"),
+            Error::SegmentOutOfBounds { offset, len, size } => write!(
+                f,
+                "segment access out of bounds: offset {offset} + len {len} > segment size {size}"
+            ),
+            Error::OutOfMemory(n) => write!(f, "out of segment memory allocating {n} bytes"),
+            Error::BadDescriptor(msg) => {
+                write!(f, "invalid strided/vectored descriptor: {msg}")
+            }
+            Error::Disconnected(what) => write!(f, "channel to {what} disconnected"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+            Error::Io(e) => write!(f, "transport error: {e}"),
+            Error::UdpFragmentation(n) => write!(
+                f,
+                "hardware UDP core cannot send/receive fragmented datagram ({n} bytes > MTU)"
+            ),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::ProfileViolation(what) => {
+                write!(f, "message type {what} is disabled by the active API profile")
+            }
+            Error::Timeout(what) => write!(f, "timeout waiting for {what}"),
+            Error::Json(msg) => write!(f, "json error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_matches_thiserror_format() {
+        assert_eq!(
+            Error::PacketTooLarge { got: 9100, max: 9000 }.to_string(),
+            "packet of 9100 bytes exceeds the Galapagos maximum of 9000 bytes"
+        );
+        assert_eq!(Error::UnknownKernel(7).to_string(), "unknown kernel id 7");
+        assert_eq!(
+            Error::Timeout("packet receive").to_string(),
+            "timeout waiting for packet receive"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::BrokenPipe, "pipe");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -118,20 +118,32 @@ impl BoundNode {
     ) -> Result<GalapagosNode> {
         let table = RoutingTable::new(self.spec.kernels.iter().map(|k| (k.id, k.node)));
 
-        // Ingress registration + egress construction.
+        // Ingress registration + egress construction. The cluster's
+        // batching knobs configure the coalescing egress path; with
+        // `batch_bytes = 0` both transports behave exactly like the
+        // historical unbatched path.
+        let (batch_bytes, batch_max_msgs) = (self.spec.batch_bytes, self.spec.batch_max_msgs);
         let egress: Box<dyn Egress> = match self.spec.transport {
             TransportKind::Local => {
                 fabric.register(self.node_id, self.router_tx.clone());
                 Box::new(fabric.egress())
             }
-            TransportKind::Tcp => Box::new(TcpEgress::new(peer_addrs)),
+            TransportKind::Tcp => {
+                Box::new(TcpEgress::with_batching(peer_addrs, batch_bytes, batch_max_msgs))
+            }
             TransportKind::Udp => {
                 let sock = self
                     .udp_socket
                     .as_ref()
                     .expect("udp transport bound a socket")
                     .try_clone()?;
-                Box::new(UdpEgress::new(sock, peer_addrs, self.udp_hw_core))
+                Box::new(UdpEgress::with_batching(
+                    sock,
+                    peer_addrs,
+                    self.udp_hw_core,
+                    batch_bytes,
+                    batch_max_msgs,
+                ))
             }
         };
 
@@ -149,6 +161,7 @@ impl BoundNode {
             egress,
             self.router_rx,
             self.router_tx.clone(),
+            self.spec.flush_on_idle,
         );
 
         Ok(GalapagosNode {
@@ -264,6 +277,44 @@ mod tests {
         let got = gi1.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
         assert_eq!(got.data, vec![9; 1000]);
 
+        gi1.send(Packet::new(k0, k1, vec![4]).unwrap()).unwrap();
+        assert_eq!(gi0.recv_timeout(std::time::Duration::from_secs(5)).unwrap().data, vec![4]);
+    }
+
+    #[test]
+    fn two_nodes_over_tcp_with_batching() {
+        // Same exchange as the unbatched TCP test, but with coalescing on:
+        // the router's idle flush must keep single messages moving.
+        let mut b = ClusterBuilder::new();
+        b.transport(TransportKind::Tcp);
+        b.batch_bytes(16 << 10).batch_max_msgs(64);
+        let n0 = b.node_at("a", Platform::Sw, "127.0.0.1:0");
+        let n1 = b.node_at("b", Platform::Sw, "127.0.0.1:0");
+        let k0 = b.kernel(n0);
+        let k1 = b.kernel(n1);
+        let spec = b.build().unwrap();
+
+        let fabric = LocalFabric::new();
+        let b0 = BoundNode::bind(&spec, n0).unwrap();
+        let b1 = BoundNode::bind(&spec, n1).unwrap();
+        let a0 = b0.advertised_addr.clone().unwrap();
+        let a1 = b1.advertised_addr.clone().unwrap();
+
+        let (node0, mut rx0) = b0.start(HashMap::from([(n1, a1)]), &fabric).unwrap();
+        let (node1, mut rx1) = b1.start(HashMap::from([(n0, a0)]), &fabric).unwrap();
+
+        let gi0 = node0.interface(k0, rx0.remove(&k0).unwrap());
+        let gi1 = node1.interface(k1, rx1.remove(&k1).unwrap());
+
+        // A burst one way...
+        for i in 0..32u8 {
+            gi0.send(Packet::new(k1, k0, vec![i; 64]).unwrap()).unwrap();
+        }
+        for i in 0..32u8 {
+            let got = gi1.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+            assert_eq!(got.data, vec![i; 64]);
+        }
+        // ...and a lone reply the other way (idle-flush latency path).
         gi1.send(Packet::new(k0, k1, vec![4]).unwrap()).unwrap();
         assert_eq!(gi0.recv_timeout(std::time::Duration::from_secs(5)).unwrap().data, vec![4]);
     }

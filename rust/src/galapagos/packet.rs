@@ -60,13 +60,25 @@ impl Packet {
 
     /// Serialize to wire bytes (length-prefixed framing is added by the TCP
     /// transport; UDP sends this buffer as one datagram).
+    ///
+    /// Allocates a fresh buffer per call; the egress hot path uses
+    /// [`Packet::write_wire`] into a recycled buffer instead.
     pub fn to_wire(&self) -> Vec<u8> {
         let mut w = Vec::with_capacity(self.wire_len());
-        w.extend_from_slice(&self.dest.to_le_bytes());
-        w.extend_from_slice(&self.src.to_le_bytes());
-        w.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
-        w.extend_from_slice(&self.data);
+        self.write_wire(&mut w);
         w
+    }
+
+    /// Append this packet's wire encoding to `buf` without allocating.
+    ///
+    /// This is the batched-egress encoder: transports stage several packets
+    /// into one pooled buffer and emit them with a single syscall.
+    pub fn write_wire(&self, buf: &mut Vec<u8>) {
+        buf.reserve(self.wire_len());
+        buf.extend_from_slice(&self.dest.to_le_bytes());
+        buf.extend_from_slice(&self.src.to_le_bytes());
+        buf.extend_from_slice(&(self.data.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&self.data);
     }
 
     /// Parse from wire bytes.
@@ -90,6 +102,18 @@ impl Packet {
             )));
         }
         Ok(Packet { dest, src, data: buf[WIRE_HEADER_BYTES..].to_vec() })
+    }
+
+    /// Total frame size (header + payload) of the wire packet starting at
+    /// the front of `buf`, if a complete header is present. The wire format
+    /// is self-delimiting, which is what lets ingress sides decode several
+    /// coalesced packets out of one datagram or stream read.
+    pub fn peek_wire_len(buf: &[u8]) -> Option<usize> {
+        if buf.len() < WIRE_HEADER_BYTES {
+            return None;
+        }
+        let len = u32::from_le_bytes([buf[4], buf[5], buf[6], buf[7]]) as usize;
+        Some(WIRE_HEADER_BYTES + len)
     }
 }
 
@@ -128,6 +152,36 @@ mod tests {
         let mut w = Packet::new(1, 2, vec![9; 4]).unwrap().to_wire();
         w.truncate(w.len() - 1);
         assert!(Packet::from_wire(&w).is_err());
+    }
+
+    #[test]
+    fn write_wire_appends_identically() {
+        let a = Packet::new(1, 2, vec![1, 2, 3]).unwrap();
+        let b = Packet::new(9, 8, vec![4; 100]).unwrap();
+        let mut buf = Vec::new();
+        a.write_wire(&mut buf);
+        b.write_wire(&mut buf);
+        let mut expect = a.to_wire();
+        expect.extend_from_slice(&b.to_wire());
+        assert_eq!(buf, expect);
+        // Recycled buffer: clear + reuse keeps the encoding identical.
+        buf.clear();
+        a.write_wire(&mut buf);
+        assert_eq!(buf, a.to_wire());
+    }
+
+    #[test]
+    fn peek_wire_len_frames_coalesced_buffers() {
+        let a = Packet::new(1, 2, vec![7; 10]).unwrap();
+        let b = Packet::new(3, 4, vec![]).unwrap();
+        let mut buf = a.to_wire();
+        buf.extend_from_slice(&b.to_wire());
+        let first = Packet::peek_wire_len(&buf).unwrap();
+        assert_eq!(first, a.wire_len());
+        let second = Packet::peek_wire_len(&buf[first..]).unwrap();
+        assert_eq!(second, b.wire_len());
+        assert_eq!(first + second, buf.len());
+        assert_eq!(Packet::peek_wire_len(&[0; 7]), None);
     }
 
     #[test]

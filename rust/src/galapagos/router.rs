@@ -5,10 +5,16 @@
 //! to an external driver such as TCP" (paper §III-B). The router owns a map
 //! from *local* kernel id → delivery sender, a kernel→node table for the
 //! whole cluster, and an egress driver for remote traffic.
+//!
+//! The egress driver follows the staged-send/flush contract
+//! (see [`super::transport`]): `send` may coalesce packets into per-peer
+//! batches, and the router calls `flush` whenever its inbound queue goes
+//! idle — so bursts amortize syscalls while a lone message still leaves
+//! immediately after its send is processed.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -35,6 +41,8 @@ pub struct RouterStats {
     pub forwarded: AtomicU64,
     pub received_external: AtomicU64,
     pub dropped_unknown: AtomicU64,
+    /// Egress flushes issued because the inbound queue went idle.
+    pub idle_flushes: AtomicU64,
 }
 
 /// Routing table: kernel id → node id for every kernel in the cluster.
@@ -74,6 +82,8 @@ impl Router {
     /// `local` maps each local kernel id to the sender that delivers into
     /// that kernel's runtime (handler thread inbox on SW nodes, GAScore
     /// ingress on HW nodes). `egress` carries packets for other nodes.
+    /// With `flush_on_idle` set, staged egress batches are drained whenever
+    /// the inbound queue empties (and always on shutdown).
     pub fn spawn(
         node_id: u16,
         table: RoutingTable,
@@ -81,13 +91,14 @@ impl Router {
         mut egress: Box<dyn Egress>,
         rx: Receiver<RouterMsg>,
         tx: Sender<RouterMsg>,
+        flush_on_idle: bool,
     ) -> Router {
         let stats = Arc::new(RouterStats::default());
         let stats2 = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
             .name(format!("router-n{node_id}"))
             .spawn(move || {
-                Self::run(node_id, table, local, &mut *egress, rx, &stats2);
+                Self::run(node_id, table, local, &mut *egress, rx, &stats2, flush_on_idle);
             })
             .expect("spawn router thread");
         Router { tx, stats, handle: Some(handle) }
@@ -100,8 +111,28 @@ impl Router {
         egress: &mut dyn Egress,
         rx: Receiver<RouterMsg>,
         stats: &RouterStats,
+        flush_on_idle: bool,
     ) {
-        while let Ok(msg) = rx.recv() {
+        loop {
+            // Drain without blocking while messages are queued; only when
+            // the queue goes idle, flush staged egress batches and fall
+            // back to a blocking receive.
+            let msg = match rx.try_recv() {
+                Ok(m) => m,
+                Err(TryRecvError::Empty) => {
+                    if flush_on_idle && egress.has_staged() {
+                        stats.idle_flushes.fetch_add(1, Ordering::Relaxed);
+                        if let Err(e) = egress.flush() {
+                            log::warn!("router n{node_id}: idle flush failed: {e}");
+                        }
+                    }
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => break, // all senders gone
+                    }
+                }
+                Err(TryRecvError::Disconnected) => break,
+            };
             match msg {
                 RouterMsg::Shutdown => break,
                 RouterMsg::FromKernel(pkt) => {
@@ -132,6 +163,10 @@ impl Router {
                     Self::deliver_local(&local, pkt, stats);
                 }
             }
+        }
+        // Don't strand staged packets on shutdown.
+        if let Err(e) = egress.flush() {
+            log::warn!("router n{node_id}: final flush failed: {e}");
         }
     }
 
@@ -171,6 +206,7 @@ mod tests {
     use super::*;
     use crate::galapagos::transport::NullEgress;
     use std::sync::mpsc;
+    use std::sync::Mutex;
 
     fn table2() -> RoutingTable {
         RoutingTable::new([(0u16, 0u16), (1, 0), (2, 1)])
@@ -182,7 +218,8 @@ mod tests {
         let (k0_tx, k0_rx) = mpsc::channel();
         let mut local = HashMap::new();
         local.insert(0u16, k0_tx);
-        let mut r = Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone());
+        let mut r =
+            Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone(), true);
         tx.send(RouterMsg::FromKernel(Packet::new(0, 1, vec![9]).unwrap())).unwrap();
         let got = k0_rx.recv_timeout(std::time::Duration::from_secs(1)).unwrap();
         assert_eq!(got.data, vec![9]);
@@ -190,20 +227,37 @@ mod tests {
         assert_eq!(r.stats.local_delivered.load(Ordering::Relaxed), 1);
     }
 
+    /// Test egress capturing sends and flushes.
+    #[derive(Default)]
+    struct Cap {
+        sent: Arc<Mutex<Vec<(u16, Packet)>>>,
+        flushes: Arc<std::sync::atomic::AtomicU64>,
+    }
+
+    impl Egress for Cap {
+        fn send(&mut self, node: u16, pkt: Packet) -> Result<()> {
+            self.sent.lock().unwrap().push((node, pkt));
+            Ok(())
+        }
+
+        fn flush(&mut self) -> Result<()> {
+            self.flushes.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        }
+
+        // Pretend something is always staged so the idle path exercises.
+        fn has_staged(&self) -> bool {
+            true
+        }
+    }
+
     #[test]
     fn forwards_remote_to_egress() {
-        #[derive(Default)]
-        struct Cap(std::sync::Arc<std::sync::Mutex<Vec<(u16, Packet)>>>);
-        impl Egress for Cap {
-            fn send(&mut self, node: u16, pkt: Packet) -> Result<()> {
-                self.0.lock().unwrap().push((node, pkt));
-                Ok(())
-            }
-        }
         let cap = Cap::default();
-        let sink = std::sync::Arc::clone(&cap.0);
+        let sink = Arc::clone(&cap.sent);
         let (tx, rx) = mpsc::channel();
-        let mut r = Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone());
+        let mut r =
+            Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone(), true);
         tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![1]).unwrap())).unwrap();
         // Wait for processing.
         for _ in 0..100 {
@@ -218,11 +272,65 @@ mod tests {
         assert_eq!(got[0].0, 1); // node 1 hosts kernel 2
     }
 
+    /// The router flushes staged egress when its queue goes idle, and a
+    /// final flush always happens at shutdown.
+    #[test]
+    fn flush_on_idle_drains_staged_egress() {
+        let cap = Cap::default();
+        let flushes = Arc::clone(&cap.flushes);
+        let sent = Arc::clone(&cap.sent);
+        let (tx, rx) = mpsc::channel();
+        let mut r =
+            Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone(), true);
+        // A burst of remote packets, then silence.
+        for i in 0..5u8 {
+            tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![i]).unwrap())).unwrap();
+        }
+        // Queue drains, then goes idle → at least one idle flush.
+        for _ in 0..200 {
+            if flushes.load(Ordering::Relaxed) > 0 && sent.lock().unwrap().len() == 5 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(sent.lock().unwrap().len(), 5);
+        assert!(flushes.load(Ordering::Relaxed) >= 1, "no idle flush happened");
+        assert!(r.stats.idle_flushes.load(Ordering::Relaxed) >= 1, "stat not counted");
+        let before = flushes.load(Ordering::Relaxed);
+        r.shutdown();
+        // Shutdown adds a final flush.
+        assert!(flushes.load(Ordering::Relaxed) >= before + 1);
+    }
+
+    /// With `flush_on_idle` disabled the router never flushes on idle —
+    /// only the shutdown flush runs.
+    #[test]
+    fn flush_on_idle_can_be_disabled() {
+        let cap = Cap::default();
+        let flushes = Arc::clone(&cap.flushes);
+        let (tx, rx) = mpsc::channel();
+        let mut r =
+            Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone(), false);
+        tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![1]).unwrap())).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert_eq!(r.stats.idle_flushes.load(Ordering::Relaxed), 0);
+        assert_eq!(flushes.load(Ordering::Relaxed), 0);
+        r.shutdown();
+        assert_eq!(flushes.load(Ordering::Relaxed), 1); // the final flush
+    }
+
     #[test]
     fn drops_unknown_kernel() {
         let (tx, rx) = mpsc::channel();
-        let mut r =
-            Router::spawn(0, table2(), HashMap::new(), Box::new(NullEgress), rx, tx.clone());
+        let mut r = Router::spawn(
+            0,
+            table2(),
+            HashMap::new(),
+            Box::new(NullEgress),
+            rx,
+            tx.clone(),
+            true,
+        );
         tx.send(RouterMsg::FromKernel(Packet::new(99, 0, vec![]).unwrap())).unwrap();
         r.shutdown();
         assert_eq!(r.stats.dropped_unknown.load(Ordering::Relaxed), 1);
@@ -234,7 +342,8 @@ mod tests {
         let (k1_tx, k1_rx) = mpsc::channel();
         let mut local = HashMap::new();
         local.insert(1u16, k1_tx);
-        let mut r = Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone());
+        let mut r =
+            Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone(), true);
         tx.send(RouterMsg::FromNetwork(Packet::new(1, 2, vec![5]).unwrap())).unwrap();
         assert_eq!(k1_rx.recv_timeout(std::time::Duration::from_secs(1)).unwrap().data, vec![5]);
         r.shutdown();

@@ -1,0 +1,255 @@
+//! Message coalescing for the egress hot path.
+//!
+//! The throughput microbenchmarks (paper Figs. 4–6) are dominated by
+//! per-message costs on the software side: two heap allocations and one
+//! `write(2)` per AM packet. DART-MPI and the TMD-MPI lineage both put a
+//! thin message-coalescing layer under the PGAS API for exactly this
+//! reason. This module supplies the two building blocks the transports
+//! share:
+//!
+//! - [`BufPool`]   — recycled serialization buffers, so encoding a packet
+//!   appends into a warm buffer instead of allocating.
+//! - [`Coalescer`] — a staged batch of encoded frames plus the adaptive
+//!   flush policy (byte budget, message-count budget, optional hard cap for
+//!   datagram transports).
+//!
+//! Policy semantics (shared by TCP and UDP egress):
+//!
+//! - `batch_bytes == 0` disables coalescing entirely; each staged frame is
+//!   flushed by itself, which keeps the wire behavior bitwise identical to
+//!   the historical unbatched path.
+//! - A frame is flushed *before* staging would overflow the byte budget or
+//!   the hard cap, so a batch never exceeds `max(batch_bytes, one frame)`
+//!   bytes — and never exceeds the hard cap at all (a single oversized
+//!   frame is rejected by the caller before staging, e.g. the UDP MTU gate).
+//! - After staging, the batch reports "full" once the byte or message
+//!   budget is reached so the caller can flush eagerly instead of waiting
+//!   for the next send.
+
+/// Default cap on staged messages per batch when batching is enabled and
+/// the cluster spec doesn't override it.
+pub const DEFAULT_BATCH_MAX_MSGS: usize = 64;
+
+/// A small pool of recycled byte buffers.
+///
+/// `acquire` hands out a cleared buffer with its previous capacity intact;
+/// `release` returns it. The pool is bounded so a burst of large buffers
+/// can't pin memory forever.
+pub struct BufPool {
+    free: Vec<Vec<u8>>,
+    max_buffers: usize,
+}
+
+impl BufPool {
+    pub fn new(max_buffers: usize) -> Self {
+        Self { free: Vec::new(), max_buffers }
+    }
+
+    /// Take a cleared buffer from the pool (or allocate a fresh one).
+    pub fn acquire(&mut self) -> Vec<u8> {
+        self.free.pop().unwrap_or_default()
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn release(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() < self.max_buffers {
+            buf.clear();
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled (for tests).
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+impl Default for BufPool {
+    fn default() -> Self {
+        // Enough for one staging + one scratch buffer per active peer in
+        // the common topologies.
+        Self::new(16)
+    }
+}
+
+/// What the caller must do after asking to stage a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Staged {
+    /// Frame staged; batch still under budget.
+    Pending,
+    /// Frame staged and a budget was reached: flush now.
+    Full,
+    /// Frame NOT staged: flush the current batch first, then retry.
+    FlushFirst,
+}
+
+/// A staged batch of encoded frames plus its flush policy.
+///
+/// One `Coalescer` per destination (TCP peer connection / UDP datagram
+/// target). The staging buffer is recycled across flushes: `take()` swaps
+/// it against a pooled buffer rather than reallocating.
+pub struct Coalescer {
+    /// Flush once the staged bytes reach this budget; `0` = no batching
+    /// (every frame flushes by itself).
+    batch_bytes: usize,
+    /// Flush once this many frames are staged.
+    batch_max_msgs: usize,
+    /// Absolute size limit for one batch (UDP datagram cap); `usize::MAX`
+    /// for stream transports.
+    hard_cap: usize,
+    buf: Vec<u8>,
+    msgs: usize,
+}
+
+impl Coalescer {
+    pub fn new(batch_bytes: usize, batch_max_msgs: usize, hard_cap: usize) -> Self {
+        Self {
+            batch_bytes,
+            batch_max_msgs: batch_max_msgs.max(1),
+            hard_cap,
+            buf: Vec::new(),
+            msgs: 0,
+        }
+    }
+
+    /// True when coalescing is enabled (a nonzero byte budget).
+    pub fn batching(&self) -> bool {
+        self.batch_bytes > 0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.msgs == 0
+    }
+
+    pub fn pending_msgs(&self) -> usize {
+        self.msgs
+    }
+
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Stage one frame of exactly `frame_len` bytes, written by `encode`
+    /// appending to the staging buffer. Returns [`Staged::FlushFirst`]
+    /// (without calling `encode`) when the frame doesn't fit the current
+    /// batch — the caller flushes and retries, which then always succeeds
+    /// for any `frame_len <= hard_cap`.
+    pub fn stage(&mut self, frame_len: usize, encode: impl FnOnce(&mut Vec<u8>)) -> Staged {
+        let fits_cap = self.buf.len() + frame_len <= self.hard_cap;
+        let fits_budget = self.batching() && self.buf.len() + frame_len <= self.batch_bytes;
+        if !self.is_empty() && !(fits_cap && (fits_budget || !self.batching())) {
+            return Staged::FlushFirst;
+        }
+        let before = self.buf.len();
+        encode(&mut self.buf);
+        debug_assert_eq!(self.buf.len() - before, frame_len, "encoder wrote a different size");
+        self.msgs += 1;
+        if !self.batching()
+            || self.msgs >= self.batch_max_msgs
+            || self.buf.len() >= self.batch_bytes
+        {
+            Staged::Full
+        } else {
+            Staged::Pending
+        }
+    }
+
+    /// Take the staged bytes, swapping the staging buffer against a pooled
+    /// one. Returns the batch; the caller releases it back to `pool` after
+    /// the write so the capacity is recycled.
+    pub fn take(&mut self, pool: &mut BufPool) -> Vec<u8> {
+        self.msgs = 0;
+        std::mem::replace(&mut self.buf, pool.acquire())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn put(c: &mut Coalescer, n: usize) -> Staged {
+        c.stage(n, |buf| buf.extend(std::iter::repeat(0xAB).take(n)))
+    }
+
+    #[test]
+    fn unbatched_flushes_every_frame() {
+        let mut c = Coalescer::new(0, DEFAULT_BATCH_MAX_MSGS, usize::MAX);
+        assert!(!c.batching());
+        assert_eq!(put(&mut c, 10), Staged::Full);
+        let mut pool = BufPool::default();
+        let b = c.take(&mut pool);
+        assert_eq!(b.len(), 10);
+        assert!(c.is_empty());
+        // Next frame stages into the fresh (pooled) buffer.
+        assert_eq!(put(&mut c, 3), Staged::Full);
+        assert_eq!(c.take(&mut pool).len(), 3);
+    }
+
+    #[test]
+    fn flush_on_byte_budget() {
+        let mut c = Coalescer::new(100, 1000, usize::MAX);
+        assert_eq!(put(&mut c, 40), Staged::Pending);
+        assert_eq!(put(&mut c, 40), Staged::Pending);
+        // 80 + 40 > 100: must flush before staging.
+        assert_eq!(put(&mut c, 40), Staged::FlushFirst);
+        assert_eq!(c.pending_msgs(), 2);
+        assert_eq!(c.pending_bytes(), 80);
+        let mut pool = BufPool::default();
+        let batch = c.take(&mut pool);
+        assert_eq!(batch.len(), 80);
+        // Retry succeeds and exactly reaching the budget reports Full.
+        assert_eq!(put(&mut c, 40), Staged::Pending);
+        assert_eq!(put(&mut c, 60), Staged::Full);
+    }
+
+    #[test]
+    fn flush_on_msg_budget() {
+        let mut c = Coalescer::new(1 << 20, 3, usize::MAX);
+        assert_eq!(put(&mut c, 8), Staged::Pending);
+        assert_eq!(put(&mut c, 8), Staged::Pending);
+        assert_eq!(put(&mut c, 8), Staged::Full);
+    }
+
+    #[test]
+    fn hard_cap_bounds_batches_even_over_budget() {
+        // Datagram-style: budget larger than the cap; cap wins.
+        let mut c = Coalescer::new(1 << 20, 1000, 100);
+        assert_eq!(put(&mut c, 60), Staged::Pending);
+        assert_eq!(put(&mut c, 60), Staged::FlushFirst);
+        let mut pool = BufPool::default();
+        c.take(&mut pool);
+        // A single frame larger than the budget still stages when the
+        // batch is empty (stream transports; cap = MAX).
+        let mut c2 = Coalescer::new(16, 1000, usize::MAX);
+        assert_eq!(put(&mut c2, 64), Staged::Full);
+    }
+
+    #[test]
+    fn oversized_frame_alone_in_batch() {
+        // batch_bytes smaller than one frame: each frame still goes out,
+        // one per batch.
+        let mut c = Coalescer::new(10, 1000, usize::MAX);
+        assert_eq!(put(&mut c, 50), Staged::Full);
+        let mut pool = BufPool::default();
+        assert_eq!(c.take(&mut pool).len(), 50);
+        assert_eq!(put(&mut c, 50), Staged::Full);
+    }
+
+    #[test]
+    fn pool_recycles_capacity() {
+        let mut pool = BufPool::new(2);
+        let mut a = pool.acquire();
+        a.extend_from_slice(&[1; 4096]);
+        let cap = a.capacity();
+        pool.release(a);
+        assert_eq!(pool.pooled(), 1);
+        let b = pool.acquire();
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), cap);
+        // Bounded: releasing beyond the cap drops buffers.
+        pool.release(Vec::with_capacity(8));
+        pool.release(Vec::with_capacity(8));
+        pool.release(Vec::with_capacity(8));
+        assert_eq!(pool.pooled(), 2);
+    }
+}

@@ -6,13 +6,45 @@
 //! that choice point: routers send remote packets through it, while each
 //! transport's ingress side feeds received packets back into the router.
 //!
+//! ## The staged-send / flush contract
+//!
+//! Egress is a two-phase pipeline:
+//!
+//! 1. [`Egress::send`] **stages** a packet toward a destination node. A
+//!    transport is free to coalesce staged packets into a per-peer batch
+//!    (see [`batch`]) and only perform I/O once a byte budget
+//!    (`batch_bytes`) or message budget (`batch_max_msgs`) fills up. A
+//!    transport with nothing to gain from batching (e.g. the in-process
+//!    fabric) may deliver eagerly — staging is an optimization license,
+//!    not an obligation.
+//! 2. [`Egress::flush`] **drains** every staged batch to the wire. The
+//!    router calls it whenever its inbound queue goes idle (and on
+//!    shutdown), so a lone request is never parked waiting for a batch to
+//!    fill — single-message latency (the Fig. 4 path) is preserved while
+//!    back-to-back bursts (the Fig. 6 path) amortize one syscall over many
+//!    packets.
+//!
+//! `send` returning `Ok` therefore means *accepted for delivery*, not *on
+//! the wire*; only a successful `flush` (or a budget-triggered internal
+//! flush) implies the bytes left the process. A flush that fails (peer
+//! unreachable, stream died mid-write) drops the whole staged batch —
+//! the historical per-send loss semantics, extended to batches — logging
+//! the lost message count and surfacing the error. With `batch_bytes = 0`
+//! (the default) every `send` flushes internally and the wire behavior is
+//! bitwise identical to the historical unbatched path.
+//!
 //! Implementations:
 //! - [`local`]  — in-process fabric connecting routers directly (single
 //!   process, no sockets); also the backend for same-node communication.
+//!   Delivers eagerly; `flush` is a no-op.
 //! - [`tcp`]   — length-prefixed frames over `std::net::TcpStream`, one
-//!   lazily-established connection per peer node.
-//! - [`udp`]   — one datagram per packet over `std::net::UdpSocket`.
+//!   lazily-established connection per peer node; staged frames for one
+//!   peer coalesce into a single `write_all`.
+//! - [`udp`]   — datagrams over `std::net::UdpSocket`; staged packets for
+//!   one peer coalesce into multi-frame datagrams up to the MTU budget.
+//! - [`batch`] — the shared coalescing/pooling building blocks.
 
+pub mod batch;
 pub mod local;
 pub mod tcp;
 pub mod udp;
@@ -21,8 +53,25 @@ use super::packet::Packet;
 use crate::error::Result;
 
 /// Outbound half of a transport: deliver `pkt` to `dest_node`.
+///
+/// See the module docs for the staged-send / flush contract.
 pub trait Egress: Send {
+    /// Stage `pkt` for delivery to `dest_node`, flushing internally when a
+    /// batching budget fills (or immediately when batching is off).
     fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()>;
+
+    /// Drain every staged batch to the wire. Default: nothing staged,
+    /// nothing to do.
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    /// True when a staged batch is waiting for a flush. The router skips
+    /// its idle flush (and the stat counting it) when nothing is staged,
+    /// so unbatched clusters pay nothing on the idle path.
+    fn has_staged(&self) -> bool {
+        false
+    }
 }
 
 /// Egress that rejects everything — used by single-node clusters where no

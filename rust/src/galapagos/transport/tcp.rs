@@ -2,9 +2,17 @@
 //!
 //! Each node binds a listener at its configured address. Outbound
 //! connections are established lazily per peer and cached. Frames are
-//! `u32` little-endian wire length + `Packet::to_wire()` bytes. `TCP_NODELAY`
+//! `u32` little-endian wire length + `Packet` wire bytes. `TCP_NODELAY`
 //! is set — the microbenchmarks measure per-message latency and Nagle would
 //! dominate it.
+//!
+//! Egress follows the staged-send/flush contract (see
+//! [`super`]): frames for one peer are encoded straight into a recycled
+//! per-peer staging buffer and written with a single `write_all` when the
+//! batch budget fills or the router flushes on idle. Because a TCP stream
+//! is just a byte sequence, coalescing frames into one write is bitwise
+//! identical on the wire to writing them one by one — the ingress frame
+//! decoder is unchanged either way.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
@@ -12,21 +20,51 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::Sender;
 use std::thread::JoinHandle;
 
+use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS};
 use super::Egress;
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::RouterMsg;
 
-/// Outbound half: per-peer cached connections.
+/// Bytes of TCP frame header (`u32` length prefix).
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Outbound half: per-peer cached connections with staged, coalesced
+/// frames.
 pub struct TcpEgress {
     /// node id → address, for every peer node.
     peers: HashMap<u16, String>,
     conns: HashMap<u16, TcpStream>,
+    /// Per-peer staged batch.
+    stage: HashMap<u16, Coalescer>,
+    batch_bytes: usize,
+    batch_max_msgs: usize,
+    pool: BufPool,
 }
 
 impl TcpEgress {
+    /// Unbatched egress: every send goes straight to the wire (the
+    /// historical behavior; equivalent to `batch_bytes = 0`).
     pub fn new(peers: HashMap<u16, String>) -> Self {
-        Self { peers, conns: HashMap::new() }
+        Self::with_batching(peers, 0, DEFAULT_BATCH_MAX_MSGS)
+    }
+
+    /// Egress with adaptive coalescing: staged frames for a peer are
+    /// written together once `batch_bytes` or `batch_max_msgs` is reached,
+    /// or when the router flushes on idle.
+    pub fn with_batching(
+        peers: HashMap<u16, String>,
+        batch_bytes: usize,
+        batch_max_msgs: usize,
+    ) -> Self {
+        Self {
+            peers,
+            conns: HashMap::new(),
+            stage: HashMap::new(),
+            batch_bytes,
+            batch_max_msgs,
+            pool: BufPool::default(),
+        }
     }
 
     fn conn(&mut self, node: u16) -> Result<&mut TcpStream> {
@@ -55,21 +93,109 @@ impl TcpEgress {
         }
         Ok(self.conns.get_mut(&node).unwrap())
     }
+
+    /// Write `node`'s staged batch (if any) with a single `write_all`.
+    ///
+    /// Failure semantics match the historical per-send path: a batch that
+    /// cannot be written (connect retries exhausted, or the stream died
+    /// mid-write — where a partial write makes re-sending unsafe, it
+    /// could duplicate frames the peer already decoded) is dropped, the
+    /// loss is logged with its message count, and the error surfaces to
+    /// the caller.
+    fn flush_node(&mut self, node: u16) -> Result<()> {
+        let msgs = match self.stage.get(&node) {
+            Some(c) if !c.is_empty() => c.pending_msgs(),
+            _ => return Ok(()),
+        };
+        let batch = self
+            .stage
+            .get_mut(&node)
+            .expect("checked above")
+            .take(&mut self.pool);
+        let written = match self.conn(node) {
+            Ok(stream) => stream.write_all(&batch),
+            Err(e) => {
+                self.pool.release(batch);
+                log::warn!("tcp: dropped {msgs} staged message(s) to unreachable node {node}");
+                return Err(e);
+            }
+        };
+        self.pool.release(batch);
+        if let Err(e) = written {
+            // Connection died mid-write; drop it so the next send
+            // reconnects.
+            self.conns.remove(&node);
+            log::warn!("tcp: dropped a batch of {msgs} staged message(s) to node {node}: {e}");
+            return Err(Error::Io(e));
+        }
+        Ok(())
+    }
 }
 
 impl Egress for TcpEgress {
     fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()> {
-        let wire = pkt.to_wire();
-        let stream = self.conn(dest_node)?;
-        let mut frame = Vec::with_capacity(4 + wire.len());
-        frame.extend_from_slice(&(wire.len() as u32).to_le_bytes());
-        frame.extend_from_slice(&wire);
-        if let Err(e) = stream.write_all(&frame) {
-            // Connection died; drop it so the next send reconnects.
-            self.conns.remove(&dest_node);
-            return Err(Error::Io(e));
+        // Reject unknown peers before staging: frames staged for a node
+        // that can never connect would otherwise sit in the batch forever.
+        if !self.peers.contains_key(&dest_node) {
+            return Err(Error::UnknownNode(dest_node));
         }
-        Ok(())
+        let frame_len = FRAME_HEADER_BYTES + pkt.wire_len();
+        let (bb, bm) = (self.batch_bytes, self.batch_max_msgs);
+        let staged = self
+            .stage
+            .entry(dest_node)
+            .or_insert_with(|| Coalescer::new(bb, bm, usize::MAX))
+            .stage(frame_len, |buf| {
+                buf.extend_from_slice(&(pkt.wire_len() as u32).to_le_bytes());
+                pkt.write_wire(buf);
+            });
+        match staged {
+            Staged::Pending => Ok(()),
+            Staged::Full => self.flush_node(dest_node),
+            Staged::FlushFirst => {
+                self.flush_node(dest_node)?;
+                let again = self
+                    .stage
+                    .get_mut(&dest_node)
+                    .expect("coalescer exists after staging attempt")
+                    .stage(frame_len, |buf| {
+                        buf.extend_from_slice(&(pkt.wire_len() as u32).to_le_bytes());
+                        pkt.write_wire(buf);
+                    });
+                match again {
+                    Staged::Full => self.flush_node(dest_node),
+                    // An empty batch always accepts one frame (no hard cap
+                    // on streams), so FlushFirst cannot repeat.
+                    _ => Ok(()),
+                }
+            }
+        }
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        let pending: Vec<u16> = self
+            .stage
+            .iter()
+            .filter(|(_, c)| !c.is_empty())
+            .map(|(n, _)| *n)
+            .collect();
+        let mut first_err = None;
+        for node in pending {
+            if let Err(e) = self.flush_node(node) {
+                log::warn!("tcp flush to node {node} failed: {e}");
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn has_staged(&self) -> bool {
+        self.stage.values().any(|c| !c.is_empty())
     }
 }
 
@@ -143,6 +269,10 @@ impl Drop for TcpIngress {
     }
 }
 
+/// Frame-decode loop over the (possibly coalesced) byte stream: read a
+/// length prefix, read that many wire bytes, hand the packet to the
+/// router, repeat. A batch of N coalesced frames yields N router packets
+/// in send order — the stream carries no batch boundaries.
 fn read_frames(
     mut stream: TcpStream,
     tx: Sender<RouterMsg>,
@@ -152,14 +282,14 @@ fn read_frames(
     stream
         .set_read_timeout(Some(std::time::Duration::from_millis(100)))
         .ok();
-    let mut len_buf = [0u8; 4];
+    let mut len_buf = [0u8; FRAME_HEADER_BYTES];
     'outer: loop {
         if shutdown.load(std::sync::atomic::Ordering::Relaxed) {
             break;
         }
         // Read the 4-byte length prefix, tolerating timeouts.
         let mut got = 0usize;
-        while got < 4 {
+        while got < FRAME_HEADER_BYTES {
             match stream.read(&mut len_buf[got..]) {
                 Ok(0) => break 'outer, // peer closed
                 Ok(n) => got += n,
@@ -257,5 +387,107 @@ mod tests {
             egress.send(9, Packet::new(0, 0, vec![]).unwrap()),
             Err(Error::UnknownNode(9))
         ));
+    }
+
+    /// N sends under one batch budget coalesce into a single write, and the
+    /// ingress frame decoder still yields N packets in send order.
+    #[test]
+    fn coalesced_frames_yield_n_packets_in_order() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let addr = ingress.local_addr().to_string();
+        let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, addr)]), 1 << 16, 1024);
+        const N: u8 = 50;
+        for i in 0..N {
+            egress.send(1, Packet::new(2, 3, vec![i; 16]).unwrap()).unwrap();
+        }
+        // Everything staged — nothing on the wire yet.
+        assert!(rx.try_recv().is_err());
+        assert_eq!(egress.stage.get(&1).unwrap().pending_msgs(), N as usize);
+        egress.flush().unwrap();
+        for i in 0..N {
+            match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![i; 16]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Staging buffer was recycled, not dropped.
+        assert!(egress.stage.get(&1).unwrap().is_empty());
+    }
+
+    /// Hitting the byte budget flushes without an explicit flush() call.
+    #[test]
+    fn byte_budget_triggers_flush() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let addr = ingress.local_addr().to_string();
+        // Budget fits 3 of the 28-byte frames (4 prefix + 8 header + 16
+        // payload); the 4th would overflow, so it flushes the first 3 and
+        // stays staged.
+        let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, addr)]), 100, 1024);
+        for i in 0..4u8 {
+            egress.send(1, Packet::new(0, 0, vec![i; 16]).unwrap()).unwrap();
+        }
+        for i in 0..3u8 {
+            match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![i; 16]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(egress.stage.get(&1).unwrap().pending_msgs(), 1);
+        egress.flush().unwrap();
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![3; 16]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// Message-count budget flushes eagerly too.
+    #[test]
+    fn msg_budget_triggers_flush() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let addr = ingress.local_addr().to_string();
+        let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, addr)]), 1 << 20, 8);
+        for i in 0..8u8 {
+            egress.send(1, Packet::new(0, 0, vec![i]).unwrap()).unwrap();
+        }
+        for i in 0..8u8 {
+            match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![i]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    /// `batch_bytes = 0` produces a byte stream identical to the historical
+    /// per-send framing: every send is written immediately and the raw
+    /// bytes are exactly `[len | wire]*`.
+    #[test]
+    fn unbatched_wire_bytes_are_identical() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let mut egress = TcpEgress::new(HashMap::from([(1u16, addr)]));
+
+        let pkts: Vec<Packet> = (0..5u8)
+            .map(|i| Packet::new(i as u16, 7, vec![i; 3 + i as usize]).unwrap())
+            .collect();
+        let mut expect = Vec::new();
+        for p in &pkts {
+            expect.extend_from_slice(&(p.wire_len() as u32).to_le_bytes());
+            expect.extend_from_slice(&p.to_wire());
+        }
+
+        for p in &pkts {
+            egress.send(1, p.clone()).unwrap();
+        }
+        // flush() must be a no-op on the wire: nothing is ever staged.
+        egress.flush().unwrap();
+
+        let (mut conn, _) = listener.accept().unwrap();
+        conn.set_read_timeout(Some(std::time::Duration::from_secs(5))).unwrap();
+        let mut got = vec![0u8; expect.len()];
+        conn.read_exact(&mut got).unwrap();
+        assert_eq!(got, expect);
     }
 }

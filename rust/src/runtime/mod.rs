@@ -8,6 +8,17 @@
 //! it through the PJRT CPU client (`xla` crate). Python never runs at
 //! request time; the rust binary is self-contained once `artifacts/` exists.
 //!
+//! Two backends, selected at compile time:
+//!
+//! - **`--features xla`** — the PJRT CPU client executes the lowered HLO
+//!   modules (requires the `xla` crate's vendored dependency closure).
+//! - **default (native)** — a built-in interpreter executes the same graph
+//!   semantics (the Jacobi 4-neighbour sweep) directly in rust. When no
+//!   `artifacts/` directory exists, a built-in manifest mirroring
+//!   `aot.py --shapes`' default set is used, so clusters, tests and benches
+//!   run on a machine with no Python toolchain at all. The compile-once /
+//!   execute-many accounting is identical across backends.
+//!
 //! - [`artifact`] — the `manifest.json` schema.
 //! - [`Engine`]   — compile-once / execute-many wrapper with typed helpers.
 
@@ -21,6 +32,21 @@ use std::sync::{Arc, Mutex};
 use crate::error::{Error, Result};
 use artifact::{ArtifactEntry, Manifest};
 
+/// Tile shapes lowered by `aot.py` when no explicit `--shapes` is given;
+/// the native backend's built-in manifest mirrors this set so the two
+/// backends agree on which shapes exist (see python/compile/aot.py).
+const DEFAULT_SHAPES: [(usize, usize); 9] = [
+    (16, 34),
+    (32, 66),
+    (16, 66),
+    (64, 130),
+    (64, 258),
+    (128, 258),
+    (256, 1026),
+    (256, 4098),
+    (512, 4098),
+];
+
 /// Execution statistics for the perf harness.
 #[derive(Debug, Default)]
 pub struct EngineStats {
@@ -29,38 +55,76 @@ pub struct EngineStats {
     pub compiles: AtomicU64,
 }
 
-/// Compile-once, execute-many PJRT engine.
+/// One prepared executable. On the PJRT backend this wraps the loaded
+/// module; on the native backend preparation just pins the tile shape.
+struct Compiled {
+    #[cfg(feature = "xla")]
+    exe: xla::PjRtLoadedExecutable,
+    rows: usize,
+    cols: usize,
+}
+
+/// Compile-once, execute-many engine.
 ///
 /// Thread-safe: executables are compiled under a lock on first use and
 /// shared afterwards. One `Engine` per process is the intended pattern
 /// (hardware kernels clone the `Arc<Engine>`).
 pub struct Engine {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
+    #[cfg(feature = "xla")]
     dir: PathBuf,
     manifest: Manifest,
-    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    executables: Mutex<HashMap<String, Arc<Compiled>>>,
     stats: EngineStats,
 }
 
-// The PJRT CPU client and loaded executables are internally synchronized;
-// the xla crate just doesn't mark them. All mutation on our side is behind
-// the Mutex above.
+// With the PJRT backend: the CPU client and loaded executables are
+// internally synchronized; the xla crate just doesn't mark them. All
+// mutation on our side is behind the Mutex above. The native backend is
+// trivially Send + Sync, but the impls must cover both cfgs.
 unsafe impl Send for Engine {}
 unsafe impl Sync for Engine {}
 
 impl Engine {
-    /// Load the artifact manifest from `dir` and create the PJRT CPU client.
+    /// Load the artifact manifest from `dir` and prepare the backend.
     pub fn load(dir: impl AsRef<Path>) -> Result<Arc<Engine>> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu()?;
+        Self::from_manifest(dir, manifest)
+    }
+
+    fn from_manifest(dir: PathBuf, manifest: Manifest) -> Result<Arc<Engine>> {
+        #[cfg(not(feature = "xla"))]
+        let _ = dir;
         Ok(Arc::new(Engine {
-            client,
+            #[cfg(feature = "xla")]
+            client: xla::PjRtClient::cpu()?,
+            #[cfg(feature = "xla")]
             dir,
             manifest,
             executables: Mutex::new(HashMap::new()),
             stats: EngineStats::default(),
         }))
+    }
+
+    /// The manifest the native backend synthesizes when `artifacts/` is
+    /// absent: one `jacobi_step` entry per default AOT shape.
+    fn builtin_manifest() -> Manifest {
+        let artifacts = DEFAULT_SHAPES
+            .iter()
+            .map(|&(rows, cols)| ArtifactEntry {
+                name: format!("jacobi_r{rows}_c{cols}"),
+                file: format!("jacobi_r{rows}_c{cols}.hlo.txt"),
+                kind: "jacobi_step".to_string(),
+                rows,
+                cols,
+                input: vec![rows + 2, cols],
+                output: vec![rows, cols],
+                dtype: "f32".to_string(),
+            })
+            .collect();
+        Manifest { version: 1, artifacts }
     }
 
     /// Locate the repository's `artifacts/` directory (walks up from CWD),
@@ -83,9 +147,18 @@ impl Engine {
         }
     }
 
-    /// Engine over the default artifact directory.
+    /// Engine over the default artifact directory. On the native backend a
+    /// missing `artifacts/` directory falls back to the built-in manifest
+    /// (the default `aot.py` shape set); the PJRT backend needs real HLO
+    /// files and keeps the hard error.
     pub fn load_default() -> Result<Arc<Engine>> {
-        Self::load(Self::default_dir()?)
+        match Self::default_dir() {
+            Ok(dir) => Self::load(dir),
+            #[cfg(not(feature = "xla"))]
+            Err(_) => Self::from_manifest(PathBuf::from("artifacts"), Self::builtin_manifest()),
+            #[cfg(feature = "xla")]
+            Err(e) => Err(e),
+        }
     }
 
     /// Process-wide shared engine over the default artifact directory.
@@ -95,8 +168,18 @@ impl Engine {
     /// the heat-diffusion example recompiled per epoch before this — 130 ms
     /// of the 150 ms epoch wall time was XLA setup).
     pub fn shared() -> Result<Arc<Engine>> {
-        static SHARED: once_cell::sync::OnceCell<Arc<Engine>> = once_cell::sync::OnceCell::new();
-        SHARED.get_or_try_init(Self::load_default).map(Arc::clone)
+        // A mutex rather than OnceLock: initialization is fallible and
+        // expensive (PJRT client + compiles on the xla backend), so
+        // concurrent first callers must block on one load, not each run
+        // their own and discard the losers.
+        static SHARED: Mutex<Option<Arc<Engine>>> = Mutex::new(None);
+        let mut guard = SHARED.lock().unwrap();
+        if let Some(e) = guard.as_ref() {
+            return Ok(Arc::clone(e));
+        }
+        let engine = Self::load_default()?;
+        *guard = Some(Arc::clone(&engine));
+        Ok(engine)
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -125,7 +208,7 @@ impl Engine {
             .collect()
     }
 
-    fn executable(&self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    fn executable(&self, name: &str) -> Result<Arc<Compiled>> {
         if let Some(e) = self.executables.lock().unwrap().get(name) {
             return Ok(Arc::clone(e));
         }
@@ -135,16 +218,30 @@ impl Engine {
             .iter()
             .find(|a| a.name == name)
             .ok_or_else(|| Error::Artifact(format!("no artifact named '{name}'")))?;
+        let compiled = Arc::new(self.compile_entry(entry)?);
+        let mut guard = self.executables.lock().unwrap();
+        // Racing compile of the same name: keep the first, count once.
+        if let Some(e) = guard.get(name) {
+            return Ok(Arc::clone(e));
+        }
+        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
+        guard.insert(name.to_string(), Arc::clone(&compiled));
+        Ok(compiled)
+    }
+
+    #[cfg(feature = "xla")]
+    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<Compiled> {
         let path = self.dir.join(&entry.file);
         let proto = xla::HloModuleProto::from_text_file(
             path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
         )?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(self.client.compile(&comp)?);
-        self.stats.compiles.fetch_add(1, Ordering::Relaxed);
-        let mut guard = self.executables.lock().unwrap();
-        let e = guard.entry(name.to_string()).or_insert(exe);
-        Ok(Arc::clone(e))
+        Ok(Compiled { exe: self.client.compile(&comp)?, rows: entry.rows, cols: entry.cols })
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<Compiled> {
+        Ok(Compiled { rows: entry.rows, cols: entry.cols })
     }
 
     /// Pre-compile an artifact (cold-start control for benchmarks).
@@ -175,10 +272,7 @@ impl Engine {
         let exe = self.executable(&entry)?;
 
         let t0 = std::time::Instant::now();
-        let input = xla::Literal::vec1(padded).reshape(&[(rows + 2) as i64, cols as i64])?;
-        let result = exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
-        let tuple = result.to_tuple1()?;
-        let out = tuple.to_vec::<f32>()?;
+        let out = Self::execute_jacobi(&exe, padded)?;
         self.stats.executions.fetch_add(1, Ordering::Relaxed);
         self.stats
             .exec_ns
@@ -188,6 +282,36 @@ impl Engine {
                 "jacobi_step output length {} ≠ {rows}×{cols}",
                 out.len()
             )));
+        }
+        Ok(out)
+    }
+
+    #[cfg(feature = "xla")]
+    fn execute_jacobi(exe: &Compiled, padded: &[f32]) -> Result<Vec<f32>> {
+        let (rows, cols) = (exe.rows, exe.cols);
+        let input = xla::Literal::vec1(padded).reshape(&[(rows + 2) as i64, cols as i64])?;
+        let result = exe.exe.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple1()?;
+        Ok(tuple.to_vec::<f32>()?)
+    }
+
+    /// Native interpreter for the lowered graph: the interior 4-neighbour
+    /// average with boundary columns copied through — exactly the semantics
+    /// `aot.py` lowers (and `ref.py` / `RustSweep` assert against).
+    #[cfg(not(feature = "xla"))]
+    fn execute_jacobi(exe: &Compiled, padded: &[f32]) -> Result<Vec<f32>> {
+        let (rows, cols) = (exe.rows, exe.cols);
+        let mut out = vec![0f32; rows * cols];
+        for r in 0..rows {
+            let up = &padded[r * cols..(r + 1) * cols];
+            let mid = &padded[(r + 1) * cols..(r + 2) * cols];
+            let down = &padded[(r + 2) * cols..(r + 3) * cols];
+            let dst = &mut out[r * cols..(r + 1) * cols];
+            dst[0] = mid[0];
+            dst[cols - 1] = mid[cols - 1];
+            for c in 1..cols - 1 {
+                dst[c] = 0.25 * (up[c] + down[c] + mid[c - 1] + mid[c + 1]);
+            }
         }
         Ok(out)
     }

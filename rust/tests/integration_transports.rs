@@ -7,8 +7,20 @@ use shoal::prelude::*;
 
 /// Run a ping-pong + long-put exchange over the given transport/platforms.
 fn exchange(transport: TransportKind, platforms: [Platform; 2]) {
+    exchange_with_batching(transport, platforms, 0, 64);
+}
+
+/// Same exchange with explicit egress coalescing knobs (`batch_bytes = 0`
+/// = the unbatched datapath).
+fn exchange_with_batching(
+    transport: TransportKind,
+    platforms: [Platform; 2],
+    batch_bytes: usize,
+    batch_max_msgs: usize,
+) {
     let mut b = ClusterBuilder::new();
     b.transport(transport);
+    b.batch_bytes(batch_bytes).batch_max_msgs(batch_max_msgs);
     let networked = transport != TransportKind::Local;
     let mk = |b: &mut ClusterBuilder, name: &str, p: Platform| {
         if networked {
@@ -69,6 +81,19 @@ fn udp_sw_sw() {
 #[test]
 fn tcp_sw_hw() {
     exchange(TransportKind::Tcp, [Platform::Sw, Platform::Hw]);
+}
+
+/// The batched egress datapath must be transparent to the application:
+/// the same ping-pong/long-put exchange, with coalescing budgets set and
+/// the router's idle flush keeping request/reply traffic moving.
+#[test]
+fn tcp_sw_sw_batched() {
+    exchange_with_batching(TransportKind::Tcp, [Platform::Sw, Platform::Sw], 16 << 10, 64);
+}
+
+#[test]
+fn udp_sw_sw_batched() {
+    exchange_with_batching(TransportKind::Udp, [Platform::Sw, Platform::Sw], 1024, 16);
 }
 
 #[test]

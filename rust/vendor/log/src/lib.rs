@@ -1,0 +1,113 @@
+//! Minimal logging facade, API-compatible with the subset of the crates.io
+//! `log` crate this workspace uses (`error!` … `trace!` with format args).
+//!
+//! The build environment is fully offline, so instead of the real facade the
+//! workspace vendors this stand-in: records go straight to stderr, filtered
+//! by the `RUST_LOG` environment variable (`error`, `warn`, `info`, `debug`,
+//! `trace`, or `off`; default `warn`). There is no logger registry — the
+//! hot-path cost of a disabled level is one atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Numeric severity, ascending verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+/// 0 = not yet initialized from the environment.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(0);
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("RUST_LOG").ok().as_deref() {
+        Some("off") | Some("none") => 0xFF, // sentinel: everything disabled
+        Some("error") => Level::Error as u8,
+        Some("info") => Level::Info as u8,
+        Some("debug") => Level::Debug as u8,
+        Some("trace") => Level::Trace as u8,
+        // `warn`, unset, or unrecognized: warnings and errors only.
+        _ => Level::Warn as u8,
+    };
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// True when records at `level` should be emitted.
+pub fn enabled(level: Level) -> bool {
+    let mut max = MAX_LEVEL.load(Ordering::Relaxed);
+    if max == 0 {
+        max = init_from_env();
+    }
+    max != 0xFF && (level as u8) <= max
+}
+
+/// Emit one record (used by the macros; not called directly).
+pub fn __emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        eprintln!("[{}] {}", level.as_str(), args);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Error, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Warn, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Info, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Debug, format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__emit($crate::Level::Trace, format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Warn);
+        assert!(Level::Warn < Level::Trace);
+        assert_eq!(Level::Warn.as_str(), "WARN");
+    }
+
+    #[test]
+    fn macros_expand() {
+        // Smoke: all five levels format without panicking.
+        error!("e {}", 1);
+        warn!("w {}", 2);
+        info!("i {}", 3);
+        debug!("d {}", 4);
+        trace!("t {}", 5);
+    }
+}
