@@ -91,6 +91,17 @@ fn main() -> Result<()> {
         k.am_long_strided(k_peer, handlers::NOP, &[], &data, 512, 16, 8).unwrap();
         k.wait_replies(1).unwrap();
         println!("[main] strided put done");
+
+        // 8. Handle-based completion: overlap two independent gets and fence
+        //    them with one wait_all (no shared counter involved).
+        let g1 = k.am_long_get(k_hw, handlers::NOP, 0, 8, 64).unwrap();
+        let g2 = k.am_long_get(k_peer, handlers::NOP, 256, 4, 128).unwrap();
+        k.wait_all(&[g1, g2]).unwrap();
+        println!(
+            "[main] overlapped gets -> {:?} / {:?}",
+            k.mem().read_f32(64, 2).unwrap(),
+            k.mem().read(128, 4).unwrap()
+        );
         k.barrier().unwrap();
     });
 

@@ -9,6 +9,8 @@
 //! - PGAS segment read/write bandwidth (incl. strided)
 //! - in-process Medium round trip (API → router → handler → reply)
 //! - in-process Long-put throughput
+//! - completion datapath: overlapped handle-based gets vs sequential
+//!   `send + wait_replies(1)` round trips
 //! - XLA engine jacobi-step execution time per tile shape
 //!
 //! Run: `cargo bench --bench hotpath`
@@ -16,14 +18,17 @@
 //!
 //! Exits nonzero if a datapath check fails (CI bench smoke gates on this):
 //! the batched ≤64 B send stage must sustain ≥2× the messages/sec of the
-//! unbatched stage.
+//! unbatched stage, and handle-overlapped Long gets must complete at least
+//! as fast as the same number of sequential `wait_replies` round trips.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use shoal::am::header::{AmMessage, Descriptor};
 use shoal::am::types::{handler_ids, AmFlags, AmType};
-use shoal::bench::micro::{measure_latency, measure_throughput, BenchPlacement};
+use shoal::bench::micro::{
+    measure_latency, measure_overlap_gets, measure_throughput, BenchPlacement,
+};
 use shoal::bench::report;
 use shoal::galapagos::packet::Packet;
 use shoal::galapagos::router::RouterMsg;
@@ -194,6 +199,25 @@ fn main() {
     let bps = measure_throughput(BenchPlacement::sw_same(), MsgKind::LongFifo, 8192, count)
         .unwrap();
     println!("  long-FIFO 8 KiB pipelined throughput   {}", fmt_rate(bps));
+
+    println!("== hotpath: completion datapath (4 KiB long gets, in-proc) ==");
+    let ops = if quick { 200 } else { 2000 };
+    let (seq_rate, ovl_rate) = measure_overlap_gets(BenchPlacement::sw_same(), 4096, ops).unwrap();
+    println!("  sequential send + wait_replies(1)      {:>12.0} ops/s", seq_rate);
+    println!("  overlapped handles + wait_all          {:>12.0} ops/s", ovl_rate);
+    let overlap_ratio = ovl_rate / seq_rate;
+    println!("      -> overlap speedup {overlap_ratio:.2}×");
+    csv.row(["get_sequential".into(), format!("{seq_rate:.0}"), "ops/s".to_string()]);
+    csv.row(["get_overlapped".into(), format!("{ovl_rate:.0}"), "ops/s".to_string()]);
+    csv.row(["overlap_speedup".into(), format!("{overlap_ratio:.2}"), "x".to_string()]);
+    let ok = ovl_rate >= seq_rate;
+    println!(
+        "  [{}] overlapped ≥ sequential completion rate",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("handle-overlapped gets slower than sequential wait_replies rounds");
+    }
 
     println!("== hotpath: XLA engine ==");
     match shoal::runtime::Engine::load_default() {

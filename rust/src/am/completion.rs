@@ -1,0 +1,570 @@
+//! Per-operation completion tracking — `AmHandle`s over a slab table.
+//!
+//! The paper's API completes remote operations with a single outstanding
+//! counter: "send several messages and then collectively wait for the same
+//! number of replies" (§III-A). That model cannot attribute a reply to an
+//! operation, so kernels cannot overlap independent transfers or tell which
+//! one failed. This module replaces the global counter with the DART-style
+//! handle model: every send registers an entry in a per-kernel
+//! [`CompletionTable`]; each emitted chunk carries a wire token bound to the
+//! entry; replies resolve tokens, and the entry walks the state machine
+//!
+//! ```text
+//!   in-flight(remaining = chunks) ── reply per chunk ──► complete
+//!              │
+//!              └─ send failure ──────────────────────────► failed(reason)
+//! ```
+//!
+//! `wait`/`test`/`wait_all`/`wait_any` consume terminal entries; the legacy
+//! `wait_replies(n)` is a shim over the table's cumulative resolved counter,
+//! so counter-style code keeps working unchanged alongside handle waits.
+//!
+//! Concurrency: the issuing kernel thread creates entries and waits; the
+//! runtime ingress thread (handler thread or GAScore) resolves tokens. One
+//! mutex + condvar per kernel — the same discipline `ReplyState` used, and
+//! the same §Perf reasoning applies: plain condvar blocking beats spinning
+//! because the resolver threads need the cores.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+
+/// Completed-but-unwaited entries kept before the table starts reclaiming
+/// the oldest ones. Bounds memory for `wait_replies`-only callers that never
+/// wait on the handles their sends return.
+const COMPLETED_KEEP: usize = 4096;
+
+/// Handle to one in-flight (possibly multi-chunk) AM operation.
+///
+/// Returned by every `am_*` send. `messages` is the number of AMs the
+/// operation emitted — the number of replies it will generate, which is also
+/// what the `wait_replies(n)` compatibility shim counts (0 for asynchronous
+/// sends, > 1 when chunking split an oversized payload).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AmHandle {
+    slot: u32,
+    gen: u32,
+    /// AMs emitted for this operation = replies it will generate.
+    pub messages: u64,
+}
+
+/// Sentinel slot for operations that complete at issue time (async sends).
+const SLOT_NONE: u32 = u32::MAX;
+
+impl AmHandle {
+    /// A handle that is already complete (asynchronous sends: no reply will
+    /// ever arrive, so there is nothing to wait for).
+    pub fn completed() -> AmHandle {
+        AmHandle { slot: SLOT_NONE, gen: 0, messages: 0 }
+    }
+}
+
+#[derive(Debug)]
+enum SlotState {
+    Free,
+    InFlight { remaining: u64 },
+    Complete,
+    Failed(String),
+}
+
+#[derive(Debug)]
+struct Slot {
+    gen: u32,
+    state: SlotState,
+    /// Tokens bound to this occupancy, for map cleanup at free time.
+    tokens: Vec<u32>,
+}
+
+struct TableInner {
+    slots: Vec<Slot>,
+    free: Vec<u32>,
+    /// Wire token → (slot, gen) of the operation expecting that reply.
+    tokens: HashMap<u32, (u32, u32)>,
+    next_token: u32,
+    /// Cumulative replies ever resolved — the `wait_replies` shim counter
+    /// (the "variable" of the paper's reply handler, kept for compatibility).
+    resolved_total: u64,
+    /// Replies that will never arrive because their operation's send failed.
+    /// Lets `wait_total` fail fast with the cause instead of timing out.
+    lost_replies: u64,
+    /// Replies still expected from live (in-flight) operations. Together
+    /// with `resolved_total` this bounds what a shim wait can ever see.
+    inflight_replies: u64,
+    /// FIFO of (slot, gen) that reached Complete without being waited on.
+    /// Failed entries are deliberately NOT auto-reclaimed: they are rare
+    /// (dead-router sends), reachable through the returned handle, and
+    /// reaping them would silently convert the failure into success.
+    completed_fifo: VecDeque<(u32, u32)>,
+}
+
+/// Per-kernel completion table: slab of operation entries plus the token
+/// index replies resolve against.
+pub struct CompletionTable {
+    inner: Mutex<TableInner>,
+    cv: Condvar,
+}
+
+impl Default for CompletionTable {
+    fn default() -> Self {
+        CompletionTable {
+            inner: Mutex::new(TableInner {
+                slots: Vec::new(),
+                free: Vec::new(),
+                tokens: HashMap::new(),
+                next_token: 0,
+                resolved_total: 0,
+                lost_replies: 0,
+                inflight_replies: 0,
+                completed_fifo: VecDeque::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+}
+
+impl CompletionTable {
+    pub fn new() -> Arc<CompletionTable> {
+        Arc::new(CompletionTable::default())
+    }
+
+    /// Register a new operation expecting `chunks` replies. `chunks == 0`
+    /// (async sends) returns an already-complete handle without a slot.
+    pub fn create(&self, chunks: u64) -> AmHandle {
+        if chunks == 0 {
+            return AmHandle::completed();
+        }
+        let mut g = self.inner.lock().unwrap();
+        // Bound completed-but-unwaited entries (wait_replies-only callers).
+        while g.completed_fifo.len() > COMPLETED_KEEP {
+            let (slot, gen) = g.completed_fifo.pop_front().unwrap();
+            let reap = matches!(
+                g.slots.get(slot as usize),
+                Some(s) if s.gen == gen && matches!(s.state, SlotState::Complete)
+            );
+            if reap {
+                Self::free_slot(&mut g, slot);
+            }
+        }
+        let slot = match g.free.pop() {
+            Some(i) => i,
+            None => {
+                g.slots.push(Slot { gen: 0, state: SlotState::Free, tokens: Vec::new() });
+                (g.slots.len() - 1) as u32
+            }
+        };
+        g.inflight_replies += chunks;
+        let s = &mut g.slots[slot as usize];
+        s.state = SlotState::InFlight { remaining: chunks };
+        s.tokens.clear();
+        AmHandle { slot, gen: s.gen, messages: chunks }
+    }
+
+    /// Issue a fresh nonzero wire token bound to `h`. Each chunk of an
+    /// operation carries its own token; the reply's token resolves it.
+    pub fn bind_token(&self, h: AmHandle) -> u32 {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(h.slot != SLOT_NONE, "bind_token on a completed handle");
+        loop {
+            g.next_token = g.next_token.wrapping_add(1);
+            let t = g.next_token;
+            // Token 0 is the wire value for "no handle attached"; skip live
+            // tokens (wrap-around with very long-lived operations).
+            if t != 0 && !g.tokens.contains_key(&t) {
+                g.tokens.insert(t, (h.slot, h.gen));
+                if let Some(s) = g.slots.get_mut(h.slot as usize) {
+                    if s.gen == h.gen {
+                        s.tokens.push(t);
+                    }
+                }
+                return t;
+            }
+        }
+    }
+
+    /// Resolve one handle-carrying reply: credit the operation that issued
+    /// `token` and bump the shim counter. Unknown or stale tokens (operation
+    /// already failed/reaped) still count toward `wait_replies`.
+    pub fn resolve(&self, token: u32) {
+        let mut g = self.inner.lock().unwrap();
+        g.resolved_total += 1;
+        if let Some((slot, gen)) = g.tokens.remove(&token) {
+            // Split the guard into disjoint field borrows (slots vs rest).
+            let inner: &mut TableInner = &mut g;
+            if let Some(s) = inner.slots.get_mut(slot as usize) {
+                if s.gen == gen {
+                    if let SlotState::InFlight { remaining } = &mut s.state {
+                        *remaining -= 1;
+                        inner.inflight_replies = inner.inflight_replies.saturating_sub(1);
+                        if *remaining == 0 {
+                            s.state = SlotState::Complete;
+                            inner.completed_fifo.push_back((slot, gen));
+                        }
+                    }
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Count a reply that carries no handle token (legacy THeGASNet-style
+    /// Short replies): shim counter only.
+    pub fn resolve_legacy(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.resolved_total += 1;
+        self.cv.notify_all();
+    }
+
+    /// Transition `h` to failed (send error after the operation was
+    /// registered). Waiters observe the reason via `wait`/`test`; the
+    /// operation's unresolved replies are counted as lost so the
+    /// `wait_replies` shim fails fast instead of timing out.
+    pub fn fail(&self, h: AmHandle, reason: &str) {
+        if h.slot == SLOT_NONE {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        let inner: &mut TableInner = &mut g;
+        if let Some(s) = inner.slots.get_mut(h.slot as usize) {
+            if s.gen == h.gen {
+                if let SlotState::InFlight { remaining } = &s.state {
+                    let remaining = *remaining;
+                    s.state = SlotState::Failed(reason.to_string());
+                    inner.lost_replies += remaining;
+                    inner.inflight_replies = inner.inflight_replies.saturating_sub(remaining);
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    /// Non-blocking completion probe. `Ok(None)` = still in flight;
+    /// `Ok(Some(first))` = complete, where `first` is true only for the
+    /// call that actually consumed the entry (re-probing an already-consumed
+    /// handle yields `Some(false)`, so callers never double-credit their
+    /// reply bookkeeping). A failed operation surfaces its reason as an
+    /// error (also consuming).
+    pub fn test(&self, h: AmHandle) -> Result<Option<bool>> {
+        let mut g = self.inner.lock().unwrap();
+        match Self::terminal_state(&g, h) {
+            Some(Ok(())) => {
+                let first = Self::reap(&mut g, h);
+                Ok(Some(first))
+            }
+            Some(Err(e)) => {
+                Self::reap(&mut g, h);
+                Err(e)
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Block until `h` completes or `timeout` elapses. Returns whether this
+    /// call was the first to consume the entry (false when the handle was
+    /// already consumed — waits are idempotent but only credited once). A
+    /// failed operation returns its send error instead.
+    pub fn wait(&self, h: AmHandle, timeout: Duration) -> Result<bool> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match Self::terminal_state(&g, h) {
+                Some(res) => {
+                    let first = Self::reap(&mut g, h);
+                    return res.map(|()| first);
+                }
+                None => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return Err(Error::Timeout("handle completion"));
+                    }
+                    let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                    g = guard;
+                }
+            }
+        }
+    }
+
+    /// Block until any handle in `hs` reaches a terminal state; returns the
+    /// index of the first one found plus the first-consumption flag (see
+    /// [`wait`](CompletionTable::wait)). A failed operation surfaces its
+    /// error.
+    pub fn wait_any(&self, hs: &[AmHandle], timeout: Duration) -> Result<(usize, bool)> {
+        if hs.is_empty() {
+            return Err(Error::Config("wait_any over an empty handle set".into()));
+        }
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            for (i, h) in hs.iter().enumerate() {
+                if let Some(res) = Self::terminal_state(&g, *h) {
+                    let first = Self::reap(&mut g, *h);
+                    return res.map(|()| (i, first));
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(Error::Timeout("handle completion (any)"));
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+    }
+
+    /// Terminal state of `h` under the lock: `None` = still in flight,
+    /// `Some(Ok)` = complete, `Some(Err)` = failed. Stale handles (entry
+    /// already consumed or reclaimed) read as complete — reclamation only
+    /// ever touches terminal entries.
+    fn terminal_state(g: &TableInner, h: AmHandle) -> Option<Result<()>> {
+        if h.slot == SLOT_NONE {
+            return Some(Ok(()));
+        }
+        match g.slots.get(h.slot as usize) {
+            Some(s) if s.gen == h.gen => match &s.state {
+                SlotState::InFlight { .. } => None,
+                SlotState::Complete => Some(Ok(())),
+                SlotState::Failed(reason) => {
+                    Some(Err(Error::OperationFailed(reason.clone())))
+                }
+                SlotState::Free => Some(Ok(())),
+            },
+            _ => Some(Ok(())),
+        }
+    }
+
+    /// Free `h`'s entry if it is still live; returns true exactly when this
+    /// call did the freeing (= the first consumption of the handle).
+    fn reap(g: &mut TableInner, h: AmHandle) -> bool {
+        if h.slot == SLOT_NONE {
+            return false;
+        }
+        let live = matches!(g.slots.get(h.slot as usize), Some(s) if s.gen == h.gen);
+        if live {
+            Self::free_slot(g, h.slot);
+        }
+        live
+    }
+
+    fn free_slot(g: &mut TableInner, slot: u32) {
+        let gen = g.slots[slot as usize].gen;
+        let stale: Vec<u32> = std::mem::take(&mut g.slots[slot as usize].tokens);
+        for t in stale {
+            // Only unbind tokens still pointing at this occupancy.
+            if g.tokens.get(&t) == Some(&(slot, gen)) {
+                g.tokens.remove(&t);
+            }
+        }
+        let s = &mut g.slots[slot as usize];
+        s.gen = s.gen.wrapping_add(1);
+        s.state = SlotState::Free;
+        g.free.push(slot);
+    }
+
+    // -- wait_replies shim ---------------------------------------------------
+
+    /// Total replies ever resolved (handle-bound and legacy).
+    pub fn resolved_total(&self) -> u64 {
+        self.inner.lock().unwrap().resolved_total
+    }
+
+    /// Block until the cumulative resolved count reaches `target` — the
+    /// engine behind the `wait_replies(n)` compatibility shim. If replies
+    /// were lost to failed sends and `target` may therefore be unreachable,
+    /// this fails fast with the cause instead of burning the full timeout.
+    pub fn wait_total(&self, target: u64, timeout: Duration) -> Result<()> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        while g.resolved_total < target {
+            // Unreachable target: even if every live operation's reply lands,
+            // the count falls short because some replies were lost to failed
+            // sends. (Legacy untracked replies could in principle still fill
+            // the gap, but something *did* fail — erroring beats hanging.)
+            if g.lost_replies > 0 && g.resolved_total + g.inflight_replies < target {
+                return Err(Error::OperationFailed(format!(
+                    "{} expected replies lost to failed sends",
+                    g.lost_replies
+                )));
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(Error::Timeout("replies"));
+            }
+            let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        Ok(())
+    }
+
+    /// Live (in-flight or terminal-unconsumed) entries — table occupancy.
+    pub fn live_entries(&self) -> usize {
+        let g = self.inner.lock().unwrap();
+        g.slots.len() - g.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: Duration = Duration::from_millis(200);
+
+    #[test]
+    fn single_chunk_lifecycle() {
+        let tab = CompletionTable::new();
+        let h = tab.create(1);
+        assert_eq!(h.messages, 1);
+        assert!(tab.test(h).unwrap().is_none());
+        let tok = tab.bind_token(h);
+        assert_ne!(tok, 0);
+        tab.resolve(tok);
+        assert_eq!(tab.test(h).unwrap(), Some(true), "first consumption");
+        assert_eq!(tab.test(h).unwrap(), Some(false), "re-probe is not credited");
+        assert_eq!(tab.resolved_total(), 1);
+        assert_eq!(tab.live_entries(), 0);
+    }
+
+    #[test]
+    fn multi_chunk_completes_after_all_tokens() {
+        let tab = CompletionTable::new();
+        let h = tab.create(3);
+        let toks: Vec<u32> = (0..3).map(|_| tab.bind_token(h)).collect();
+        tab.resolve(toks[0]);
+        tab.resolve(toks[1]);
+        assert!(tab.test(h).unwrap().is_none());
+        tab.resolve(toks[2]);
+        assert!(tab.wait(h, T).unwrap(), "first wait consumes");
+        assert!(!tab.wait(h, T).unwrap(), "second wait is idempotent, uncredited");
+    }
+
+    #[test]
+    fn async_handle_is_already_complete() {
+        let tab = CompletionTable::new();
+        let h = tab.create(0);
+        assert_eq!(h.messages, 0);
+        assert!(tab.test(h).unwrap().is_some());
+        tab.wait(h, T).unwrap();
+    }
+
+    #[test]
+    fn wait_times_out_while_in_flight() {
+        let tab = CompletionTable::new();
+        let h = tab.create(1);
+        let _tok = tab.bind_token(h);
+        assert!(matches!(tab.wait(h, Duration::from_millis(20)), Err(Error::Timeout(_))));
+    }
+
+    #[test]
+    fn failure_propagates_to_waiters() {
+        let tab = CompletionTable::new();
+        let h = tab.create(2);
+        let _t0 = tab.bind_token(h);
+        tab.fail(h, "router disconnected");
+        let err = tab.wait(h, T).unwrap_err();
+        assert!(matches!(err, Error::OperationFailed(_)), "{err}");
+        // Consumed: a second wait observes the reclaimed slot as settled.
+        tab.wait(h, T).unwrap();
+        assert_eq!(tab.live_entries(), 0);
+    }
+
+    #[test]
+    fn stale_replies_for_failed_op_only_bump_shim_counter() {
+        let tab = CompletionTable::new();
+        let h = tab.create(1);
+        let tok = tab.bind_token(h);
+        tab.fail(h, "boom");
+        let _ = tab.wait(h, T); // consume the failure
+        let h2 = tab.create(1); // reuses the slot with a new generation
+        tab.resolve(tok); // late reply for the failed op
+        assert!(tab.test(h2).unwrap().is_none(), "stale token must not credit the new op");
+        assert_eq!(tab.resolved_total(), 1);
+    }
+
+    #[test]
+    fn wait_any_returns_first_terminal_index() {
+        let tab = CompletionTable::new();
+        let a = tab.create(1);
+        let b = tab.create(1);
+        let _ta = tab.bind_token(a);
+        let tb = tab.bind_token(b);
+        tab.resolve(tb);
+        assert_eq!(tab.wait_any(&[a, b], T).unwrap(), (1, true));
+        assert!(tab.wait_any(&[], T).is_err());
+    }
+
+    #[test]
+    fn cross_thread_resolution_wakes_waiter() {
+        let tab = CompletionTable::new();
+        let h = tab.create(1);
+        let tok = tab.bind_token(h);
+        let tab2 = Arc::clone(&tab);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            tab2.resolve(tok);
+        });
+        tab.wait(h, Duration::from_secs(5)).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn slots_are_recycled() {
+        let tab = CompletionTable::new();
+        for _ in 0..100 {
+            let h = tab.create(1);
+            let tok = tab.bind_token(h);
+            tab.resolve(tok);
+            tab.wait(h, T).unwrap();
+        }
+        // Every wait reaps, so the slab never grows past one slot.
+        assert_eq!(tab.live_entries(), 0);
+        let g = tab.inner.lock().unwrap();
+        assert!(g.slots.len() <= 2, "slab grew to {}", g.slots.len());
+        assert!(g.tokens.is_empty());
+    }
+
+    #[test]
+    fn unwaited_completions_are_bounded() {
+        let tab = CompletionTable::new();
+        // wait_replies-style usage: nobody waits on the handles.
+        for _ in 0..(COMPLETED_KEEP + 500) {
+            let h = tab.create(1);
+            let tok = tab.bind_token(h);
+            tab.resolve(tok);
+        }
+        assert!(
+            tab.live_entries() <= COMPLETED_KEEP + 2,
+            "unwaited completions unbounded: {}",
+            tab.live_entries()
+        );
+        tab.wait_total((COMPLETED_KEEP + 500) as u64, T).unwrap();
+    }
+
+    #[test]
+    fn shim_wait_fails_fast_when_replies_lost() {
+        let tab = CompletionTable::new();
+        let h = tab.create(2);
+        let _t = tab.bind_token(h);
+        tab.fail(h, "router gone");
+        // Both expected replies are lost: the shim wait must error with the
+        // cause immediately rather than burning its full timeout.
+        let t0 = std::time::Instant::now();
+        let err = tab.wait_total(2, Duration::from_secs(30)).unwrap_err();
+        assert!(matches!(err, Error::OperationFailed(_)), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "did not fail fast");
+
+        // A live operation keeps the shim waiting instead of misfiring.
+        let live = tab.create(1);
+        let tok = tab.bind_token(live);
+        tab.resolve(tok);
+        tab.wait_total(1, T).unwrap(); // reachable: one reply arrived
+    }
+
+    #[test]
+    fn legacy_replies_count_toward_shim() {
+        let tab = CompletionTable::new();
+        tab.resolve_legacy();
+        tab.resolve_legacy();
+        assert_eq!(tab.resolved_total(), 2);
+        tab.wait_total(2, T).unwrap();
+        assert!(matches!(tab.wait_total(3, Duration::from_millis(20)), Err(Error::Timeout(_))));
+    }
+}

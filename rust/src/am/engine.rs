@@ -7,14 +7,25 @@
 //! (unless the message was asynchronous). Replies are handed to an `emit`
 //! callback because the two runtimes send differently (router channel vs.
 //! GAScore egress pipeline with cycle accounting).
+//!
+//! Replies echo the request's token and HANDLE flag, so on the way back in
+//! they resolve the specific operation entry in the sender's
+//! [`CompletionTable`] — the same table on software and simulated-hardware
+//! paths, which is what lets kernels migrate between platforms without API
+//! change. Tokenless (legacy) replies only bump the table's cumulative
+//! `wait_replies` counter.
+//!
+//! [`process_ingress`]: KernelRuntime::process_ingress
 
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
+use super::completion::CompletionTable;
 use super::handlers::HandlerTable;
 use super::header::{AmMessage, Descriptor};
 use super::types::{handler_ids, AmFlags, AmType};
+use crate::coordinator::EpochLedger;
 use crate::error::{Error, Result};
 use crate::memory::Segment;
 
@@ -28,56 +39,11 @@ pub struct ReceivedMedium {
     pub payload: Vec<u8>,
 }
 
-/// Cumulative reply counter with blocking wait — the "variable" the built-in
-/// reply handler increments (paper §III-A).
-#[derive(Default)]
-pub struct ReplyState {
-    count: Mutex<u64>,
-    cv: Condvar,
-}
-
-impl ReplyState {
-    pub fn new() -> Arc<ReplyState> {
-        Arc::new(ReplyState::default())
-    }
-
-    /// Called by the runtime when a reply arrives.
-    pub fn increment(&self) {
-        let mut c = self.count.lock().unwrap();
-        *c += 1;
-        self.cv.notify_all();
-    }
-
-    /// Total replies ever received.
-    pub fn total(&self) -> u64 {
-        *self.count.lock().unwrap()
-    }
-
-    /// Block until the cumulative count reaches `target`.
-    ///
-    /// §Perf note: a spin-then-park variant was tried and *regressed* the
-    /// medium round trip 2.3× (9.2 µs → 21 µs) — the spinning waiter steals
-    /// cores from the router/handler threads that must run to produce the
-    /// reply. Plain condvar blocking wins on this path; see EXPERIMENTS.md.
-    pub fn wait_total(&self, target: u64, timeout: Duration) -> Result<()> {
-        let mut c = self.count.lock().unwrap();
-        let deadline = std::time::Instant::now() + timeout;
-        while *c < target {
-            let now = std::time::Instant::now();
-            if now >= deadline {
-                return Err(Error::Timeout("replies"));
-            }
-            let (guard, _) = self.cv.wait_timeout(c, deadline - now).unwrap();
-            c = guard;
-        }
-        Ok(())
-    }
-}
-
 /// Barrier protocol state (one per kernel).
 ///
-/// The master kernel (lowest id) counts ENTER messages per epoch and
-/// broadcasts RELEASE; everyone else waits for the RELEASE of their epoch.
+/// The master kernel (lowest id) tracks ENTER messages per kernel in an
+/// [`EpochLedger`] and broadcasts RELEASE; everyone else waits for the
+/// RELEASE of their epoch.
 #[derive(Default)]
 pub struct BarrierState {
     inner: Mutex<BarrierInner>,
@@ -86,8 +52,8 @@ pub struct BarrierState {
 
 #[derive(Default)]
 struct BarrierInner {
-    /// Number of ENTER messages received for each epoch (master only).
-    enters: std::collections::HashMap<u64, u64>,
+    /// Which kernel has entered which epoch (master only).
+    ledger: EpochLedger,
     /// Highest epoch released (non-master kernels).
     released: u64,
 }
@@ -103,11 +69,21 @@ impl BarrierState {
         Arc::new(BarrierState::default())
     }
 
-    /// Record an ENTER for `epoch` (master side).
-    pub fn record_enter(&self, epoch: u64) {
+    /// Record that `kernel` entered `epoch` (master side).
+    pub fn record_enter(&self, kernel: u16, epoch: u64) {
         let mut g = self.inner.lock().unwrap();
-        *g.enters.entry(epoch).or_insert(0) += 1;
+        g.ledger.record_enter(kernel, epoch);
         self.cv.notify_all();
+    }
+
+    /// Seed cluster membership (master side): kernels become known to the
+    /// ledger at epoch 0, so a barrier timeout names peers that never
+    /// entered any barrier at all.
+    pub fn note_members(&self, kernels: &[u16]) {
+        let mut g = self.inner.lock().unwrap();
+        for &k in kernels {
+            g.ledger.note_member(k);
+        }
     }
 
     /// Record a RELEASE for `epoch` (worker side).
@@ -117,19 +93,24 @@ impl BarrierState {
         self.cv.notify_all();
     }
 
-    /// Master: wait until `n` kernels have entered `epoch`.
+    /// Master: wait until `n` kernels have entered `epoch`. A timeout names
+    /// the straggling kernels the ledger knows about.
     pub fn wait_enters(&self, epoch: u64, n: u64, timeout: Duration) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
         let deadline = std::time::Instant::now() + timeout;
-        while g.enters.get(&epoch).copied().unwrap_or(0) < n {
+        while g.ledger.entered_count(epoch) < n {
             let now = std::time::Instant::now();
             if now >= deadline {
+                log::warn!(
+                    "barrier epoch {epoch}: {}/{n} entered, stragglers {:?}",
+                    g.ledger.entered_count(epoch),
+                    g.ledger.stragglers(epoch)
+                );
                 return Err(Error::Timeout("barrier enters"));
             }
             let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
         }
-        g.enters.remove(&epoch); // epoch complete; reclaim
         Ok(())
     }
 
@@ -147,13 +128,19 @@ impl BarrierState {
         }
         Ok(())
     }
+
+    /// Highest epoch all of `expected` peers have entered (master-side
+    /// cluster progress view).
+    pub fn cluster_epoch(&self, expected: u64) -> u64 {
+        self.inner.lock().unwrap().ledger.cluster_epoch(expected)
+    }
 }
 
 /// Everything the engine needs to process messages for one kernel.
 pub struct KernelRuntime {
     pub kernel_id: u16,
     pub segment: Segment,
-    pub replies: Arc<ReplyState>,
+    pub completion: Arc<CompletionTable>,
     pub barrier: Arc<BarrierState>,
     pub handlers: Arc<HandlerTable>,
     /// Stream of Medium payloads into the user kernel.
@@ -206,7 +193,7 @@ impl KernelRuntime {
                 let data = self.segment.read(src_addr, len as usize)?;
                 data_reply = Some(AmMessage {
                     am_type: AmType::Medium,
-                    flags: AmFlags::new().with(AmFlags::REPLY),
+                    flags: reply_flags(&msg),
                     src: self.kernel_id,
                     dst: msg.src,
                     handler: msg.handler,
@@ -230,7 +217,7 @@ impl KernelRuntime {
                 let data = self.segment.read(src_addr, len as usize)?;
                 data_reply = Some(AmMessage {
                     am_type: AmType::Long,
-                    flags: AmFlags::new().with(AmFlags::REPLY),
+                    flags: reply_flags(&msg),
                     src: self.kernel_id,
                     dst: msg.src,
                     handler: msg.handler,
@@ -261,7 +248,9 @@ impl KernelRuntime {
 
     /// Emit the reply for a processed request: the data reply for gets, a
     /// Short ack otherwise — "Each received packet triggers a reply unless
-    /// the initial message is marked as asynchronous" (§III-A).
+    /// the initial message is marked as asynchronous" (§III-A). The reply
+    /// echoes the request's token and HANDLE flag so the sender's completion
+    /// table can resolve the exact operation.
     fn finish_request(
         &self,
         msg: &AmMessage,
@@ -273,7 +262,7 @@ impl KernelRuntime {
         } else if !msg.flags.is_async() {
             emit(AmMessage {
                 am_type: AmType::Short,
-                flags: AmFlags::new().with(AmFlags::REPLY),
+                flags: reply_flags(msg),
                 src: self.kernel_id,
                 dst: msg.src,
                 handler: handler_ids::REPLY,
@@ -286,26 +275,37 @@ impl KernelRuntime {
         Ok(())
     }
 
+    /// Resolve one reply against this kernel's completion table: a
+    /// handle-carrying token completes (part of) a specific operation; a
+    /// tokenless legacy reply only feeds the `wait_replies` shim counter.
+    fn resolve_reply(&self, msg: &AmMessage) {
+        if msg.flags.is_handle() {
+            self.completion.resolve(msg.token);
+        } else {
+            self.completion.resolve_legacy();
+        }
+    }
+
     fn process_reply(&self, msg: AmMessage) -> Result<()> {
         match msg.am_type {
             AmType::Short => {
-                // The built-in reply handler increments the counter.
-                self.replies.increment();
+                self.resolve_reply(&msg);
             }
             AmType::Medium => {
                 // Data reply for a Medium get: payload to the kernel stream
-                // (moved, not copied), and it counts as the request's reply.
-                let mut msg = msg;
+                // (moved, not copied), then it resolves the request's handle
+                // — resolution last, so a woken waiter finds the data queued.
+                let mut m = msg;
                 self.medium_tx
                     .send(ReceivedMedium {
-                        src: msg.src,
-                        handler: msg.handler,
-                        token: msg.token,
-                        args: std::mem::take(&mut msg.args),
-                        payload: std::mem::take(&mut msg.payload),
+                        src: m.src,
+                        handler: m.handler,
+                        token: m.token,
+                        args: std::mem::take(&mut m.args),
+                        payload: std::mem::take(&mut m.payload),
                     })
                     .map_err(|_| Error::Disconnected("kernel medium stream"))?;
-                self.replies.increment();
+                self.resolve_reply(&m);
             }
             AmType::Long => {
                 // Data reply for a Long get: payload into our partition.
@@ -313,7 +313,7 @@ impl KernelRuntime {
                     return Err(Error::MalformedAm("long data reply without address".into()));
                 };
                 self.segment.write(dst_addr, &msg.payload)?;
-                self.replies.increment();
+                self.resolve_reply(&msg);
             }
             other => {
                 return Err(Error::MalformedAm(format!("reply with AM type {other}")));
@@ -327,7 +327,7 @@ impl KernelRuntime {
             handler_ids::REPLY => {
                 // A Short REPLY-handler message without the REPLY flag is
                 // still a reply (THeGASNet compatibility).
-                self.replies.increment();
+                self.resolve_reply(msg);
             }
             handler_ids::BARRIER => {
                 let op = *msg.args.first().ok_or_else(|| {
@@ -337,7 +337,7 @@ impl KernelRuntime {
                     Error::MalformedAm("barrier message without epoch".into())
                 })?;
                 match op {
-                    barrier_op::ENTER => self.barrier.record_enter(epoch),
+                    barrier_op::ENTER => self.barrier.record_enter(msg.src, epoch),
                     barrier_op::RELEASE => self.barrier.record_release(epoch),
                     other => {
                         return Err(Error::MalformedAm(format!("barrier op {other}")))
@@ -353,6 +353,17 @@ impl KernelRuntime {
     }
 }
 
+/// Flags for the reply to `msg`: REPLY, plus HANDLE iff the request's token
+/// is bound to a completion-table entry on the sender's side.
+fn reply_flags(msg: &AmMessage) -> AmFlags {
+    let f = AmFlags::new().with(AmFlags::REPLY);
+    if msg.flags.is_handle() {
+        f.with(AmFlags::HANDLE)
+    } else {
+        f
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -364,7 +375,7 @@ mod tests {
             KernelRuntime {
                 kernel_id,
                 segment: Segment::new(4096),
-                replies: ReplyState::new(),
+                completion: CompletionTable::new(),
                 barrier: BarrierState::new(),
                 handlers: Arc::new(HandlerTable::software()),
                 medium_tx: tx,
@@ -393,7 +404,7 @@ mod tests {
         let mut emitted = Vec::new();
         let msg = AmMessage {
             am_type: AmType::Medium,
-            flags: AmFlags::new().with(AmFlags::FIFO),
+            flags: AmFlags::new().with(AmFlags::FIFO).with(AmFlags::HANDLE),
             src: 9,
             dst: 2,
             handler: handler_ids::NOP,
@@ -409,6 +420,7 @@ mod tests {
         assert_eq!(emitted.len(), 1);
         assert_eq!(emitted[0].am_type, AmType::Short);
         assert!(emitted[0].flags.is_reply());
+        assert!(emitted[0].flags.is_handle(), "ack must echo the HANDLE flag");
         assert_eq!(emitted[0].dst, 9);
         assert_eq!(emitted[0].token, 42);
     }
@@ -450,6 +462,10 @@ mod tests {
         rt.process_ingress(msg, &mut |m| emitted.push(m)).unwrap();
         assert_eq!(rt.segment.read(100, 16).unwrap(), vec![5; 16]);
         assert_eq!(emitted.len(), 1);
+        assert!(
+            !emitted[0].flags.is_handle(),
+            "legacy request must not gain a HANDLE flag"
+        );
     }
 
     #[test]
@@ -459,7 +475,7 @@ mod tests {
         let mut emitted = Vec::new();
         let msg = AmMessage {
             am_type: AmType::Medium,
-            flags: AmFlags::new().with(AmFlags::GET),
+            flags: AmFlags::new().with(AmFlags::GET).with(AmFlags::HANDLE),
             src: 9,
             dst: 2,
             handler: handler_ids::NOP,
@@ -473,24 +489,31 @@ mod tests {
         let r = &emitted[0];
         assert_eq!(r.am_type, AmType::Medium);
         assert!(r.flags.is_reply());
+        assert!(r.flags.is_handle());
         assert_eq!(r.payload, vec![1, 2, 3, 4]);
         assert_eq!(r.dst, 9);
         assert_eq!(r.token, 7);
     }
 
     #[test]
-    fn long_get_reply_writes_requester_memory() {
+    fn long_get_reply_writes_requester_memory_and_resolves_handle() {
         // Destination side: emits a Long data reply.
         let (rt_dst, _rx) = runtime(2);
         rt_dst.segment.write(0, &[9, 9, 9, 9]).unwrap();
+
+        // Requester side: a registered operation whose token rides the get.
+        let (rt_src, _rx2) = runtime(1);
+        let h = rt_src.completion.create(1);
+        let token = rt_src.completion.bind_token(h);
+
         let mut emitted = Vec::new();
         let get = AmMessage {
             am_type: AmType::Long,
-            flags: AmFlags::new().with(AmFlags::GET),
+            flags: AmFlags::new().with(AmFlags::GET).with(AmFlags::HANDLE),
             src: 1,
             dst: 2,
             handler: handler_ids::NOP,
-            token: 3,
+            token,
             args: vec![],
             desc: Descriptor::LongGet { src_addr: 0, len: 4, reply_addr: 200 },
             payload: vec![],
@@ -498,23 +521,39 @@ mod tests {
         rt_dst.process_ingress(get, &mut |m| emitted.push(m)).unwrap();
         assert_eq!(emitted.len(), 1);
 
-        // Requester side: processes the reply.
-        let (rt_src, _rx2) = runtime(1);
         let mut none = Vec::new();
         rt_src.process_ingress(emitted.pop().unwrap(), &mut |m| none.push(m)).unwrap();
         assert!(none.is_empty(), "replies must not trigger replies");
         assert_eq!(rt_src.segment.read(200, 4).unwrap(), vec![9, 9, 9, 9]);
-        assert_eq!(rt_src.replies.total(), 1);
+        assert_eq!(rt_src.completion.resolved_total(), 1);
+        assert!(rt_src.completion.test(h).unwrap().is_some(), "handle must be complete");
     }
 
     #[test]
-    fn short_reply_increments_counter() {
+    fn short_reply_increments_shim_counter() {
         let (rt, _rx) = runtime(2);
         let mut emitted = Vec::new();
         let reply = short(2, handler_ids::REPLY, vec![], AmFlags::new().with(AmFlags::REPLY));
         rt.process_ingress(reply, &mut |m| emitted.push(m)).unwrap();
-        assert_eq!(rt.replies.total(), 1);
+        assert_eq!(rt.completion.resolved_total(), 1);
         assert!(emitted.is_empty());
+    }
+
+    #[test]
+    fn handle_reply_resolves_specific_operation() {
+        let (rt, _rx) = runtime(2);
+        let a = rt.completion.create(1);
+        let b = rt.completion.create(1);
+        let _ta = rt.completion.bind_token(a);
+        let tb = rt.completion.bind_token(b);
+        let mut emitted = Vec::new();
+        let mut reply =
+            short(2, handler_ids::REPLY, vec![], AmFlags::new().with(AmFlags::REPLY).with(AmFlags::HANDLE));
+        reply.token = tb;
+        rt.process_ingress(reply, &mut |m| emitted.push(m)).unwrap();
+        assert!(rt.completion.test(b).unwrap().is_some(), "b's token arrived");
+        assert!(rt.completion.test(a).unwrap().is_none(), "a still in flight");
+        assert_eq!(rt.completion.resolved_total(), 1);
     }
 
     #[test]
@@ -542,6 +581,25 @@ mod tests {
     }
 
     #[test]
+    fn barrier_ledger_tracks_enters_per_kernel() {
+        let (rt, _rx) = runtime(0);
+        let mut emitted = Vec::new();
+        for src in [3u16, 4, 5] {
+            let mut enter = short(
+                0,
+                handler_ids::BARRIER,
+                vec![barrier_op::ENTER, 2],
+                AmFlags::new().with(AmFlags::ASYNC),
+            );
+            enter.src = src;
+            rt.process_ingress(enter, &mut |m| emitted.push(m)).unwrap();
+        }
+        rt.barrier.wait_enters(2, 3, Duration::from_millis(100)).unwrap();
+        assert_eq!(rt.barrier.cluster_epoch(3), 2);
+        assert_eq!(rt.barrier.cluster_epoch(4), 0, "fourth peer never entered");
+    }
+
+    #[test]
     fn strided_ingress_scatters() {
         let (rt, _rx) = runtime(2);
         let mut emitted = Vec::new();
@@ -563,9 +621,9 @@ mod tests {
 
     #[test]
     fn reply_wait_total_times_out() {
-        let rs = ReplyState::new();
-        assert!(rs.wait_total(1, Duration::from_millis(20)).is_err());
-        rs.increment();
-        rs.wait_total(1, Duration::from_millis(20)).unwrap();
+        let tab = CompletionTable::new();
+        assert!(tab.wait_total(1, Duration::from_millis(20)).is_err());
+        tab.resolve_legacy();
+        tab.wait_total(1, Duration::from_millis(20)).unwrap();
     }
 }

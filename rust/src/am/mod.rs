@@ -13,12 +13,18 @@
 //! - [`engine`]  — the shared ingress state machine used by both the
 //!   software handler threads (§III-B) and the GAScore simulator (§III-C):
 //!   parse, write payload to the PGAS segment or forward to the kernel,
-//!   invoke handlers, emit replies.
+//!   invoke handlers, emit replies;
+//! - [`completion`] — per-operation `AmHandle`s over a slab completion
+//!   table: replies carry the request's token back and resolve the specific
+//!   operation that issued it (DART-style nonblocking completion), with the
+//!   paper's cumulative-counter `wait_replies` retained as a shim.
 
+pub mod completion;
 pub mod engine;
 pub mod handlers;
 pub mod header;
 pub mod types;
 
+pub use completion::{AmHandle, CompletionTable};
 pub use header::{AmMessage, Descriptor};
 pub use types::{AmFlags, AmType};

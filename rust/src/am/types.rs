@@ -65,6 +65,12 @@ impl AmFlags {
     pub const FIFO: u8 = 1 << 2;
     /// This message is a reply to an earlier request.
     pub const REPLY: u8 = 1 << 3;
+    /// The message's token is bound to a completion handle: requests carry it
+    /// so the destination echoes it on the reply, and a reply carrying it
+    /// resolves a specific [`AmHandle`](crate::am::completion::AmHandle) in
+    /// the sender's completion table rather than only bumping the legacy
+    /// cumulative counter.
+    pub const HANDLE: u8 = 1 << 4;
 
     pub fn new() -> AmFlags {
         AmFlags(0)
@@ -89,6 +95,10 @@ impl AmFlags {
 
     pub fn is_reply(self) -> bool {
         self.0 & Self::REPLY != 0
+    }
+
+    pub fn is_handle(self) -> bool {
+        self.0 & Self::HANDLE != 0
     }
 }
 
@@ -137,6 +147,13 @@ mod tests {
     fn flags_compose() {
         let f = AmFlags::new().with(AmFlags::ASYNC).with(AmFlags::GET);
         assert!(f.is_async() && f.is_get());
-        assert!(!f.is_fifo() && !f.is_reply());
+        assert!(!f.is_fifo() && !f.is_reply() && !f.is_handle());
+    }
+
+    #[test]
+    fn handle_flag_roundtrips_with_reply() {
+        let f = AmFlags::new().with(AmFlags::REPLY).with(AmFlags::HANDLE);
+        assert!(f.is_reply() && f.is_handle());
+        assert!(!f.is_async() && !f.is_get());
     }
 }

@@ -24,6 +24,15 @@ use crate::runtime::Engine;
 pub trait JacobiCompute: Send + Sync {
     fn step(&self, rows: usize, cols: usize, padded: &[f32]) -> Result<Vec<f32>>;
 
+    /// Whether this backend can sweep a `rows × cols` tile. Software compute
+    /// handles any shape; AOT-compiled backends only the shapes they shipped
+    /// executables for. The pipelined halo exchange needs the interior
+    /// (`rows-2 × cols`) and boundary (`1 × cols`) sub-sweeps, so it falls
+    /// back to the barrier-then-sweep schedule when those are unsupported.
+    fn supports(&self, _rows: usize, _cols: usize) -> bool {
+        true
+    }
+
     /// Short label for reports.
     fn label(&self) -> &'static str;
 }
@@ -69,6 +78,10 @@ impl XlaSweep {
 impl JacobiCompute for XlaSweep {
     fn step(&self, rows: usize, cols: usize, padded: &[f32]) -> Result<Vec<f32>> {
         self.engine.jacobi_step(rows, cols, padded)
+    }
+
+    fn supports(&self, rows: usize, cols: usize) -> bool {
+        self.engine.find_jacobi(rows, cols).is_some()
     }
 
     fn label(&self) -> &'static str {

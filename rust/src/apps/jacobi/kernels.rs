@@ -10,13 +10,22 @@
 //! barriers):
 //!
 //! 1. each worker `am_long_from_mem`s its top row to its upper neighbour's
-//!    `halo_bot` and its bottom row to its lower neighbour's `halo_top`;
-//! 2. `wait_replies` for its own puts, then **barrier** — every halo is now
-//!    written (a put's reply is emitted only after the payload is in the
-//!    destination partition);
-//! 3. sweep the padded tile, write the result back into the partition, then
-//!    **barrier** — nobody starts the next exchange until every tile is
-//!    updated.
+//!    `halo_bot` and its bottom row to its lower neighbour's `halo_top`,
+//!    keeping the returned [`AmHandle`]s — the puts are nonblocking;
+//! 2. **overlap**: while those puts are in flight, the worker sweeps the
+//!    *interior* of its tile (rows 1..rows-1), which depends only on its own
+//!    data — the communication/compute overlap the old collective
+//!    `wait_replies` counter forbade;
+//! 3. `wait_all(&handles)`, then **barrier** — every halo is now written (a
+//!    put's reply is emitted only after the payload is in the destination
+//!    partition);
+//! 4. sweep the two halo-dependent boundary rows from the fresh halos, write
+//!    the tile back, then **barrier** — nobody starts the next exchange
+//!    until every tile is updated.
+//!
+//! Backends that only support fixed tile shapes (AOT-compiled XLA sweeps)
+//! fall back to the paper's original wait-then-sweep schedule; the protocol
+//! and results are identical either way.
 
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -24,6 +33,7 @@ use std::time::{Duration, Instant};
 
 use super::compute::JacobiCompute;
 use super::partition::{SegmentLayout, Strip};
+use crate::am::completion::AmHandle;
 use crate::am::handlers;
 use crate::error::Result;
 use crate::shoal_node::api::ShoalKernel;
@@ -33,14 +43,49 @@ use crate::shoal_node::api::ShoalKernel;
 pub struct WorkerReport {
     pub worker: usize,
     pub compute: Duration,
-    /// Halo sends + reply waits + barriers.
+    /// Halo sends + handle waits + barriers.
     pub sync: Duration,
     pub iters_done: usize,
+    /// Iterations that overlapped the interior sweep with the halo puts.
+    pub overlapped_iters: usize,
 }
 
 /// Kernel id of worker `w` (kernel 0 is the control kernel).
 pub fn worker_kid(w: usize) -> u16 {
     (w + 1) as u16
+}
+
+/// Issue this iteration's nonblocking halo puts; returns their handles.
+fn send_halos(
+    k: &mut ShoalKernel,
+    w: usize,
+    workers: usize,
+    layout: &SegmentLayout,
+) -> Result<Vec<AmHandle>> {
+    let rows = layout.rows;
+    let row_bytes = layout.row_bytes();
+    let mut handles = Vec::with_capacity(2);
+    if w > 0 {
+        handles.push(k.am_long_from_mem(
+            worker_kid(w - 1),
+            handlers::NOP,
+            &[],
+            layout.tile_row(0),
+            row_bytes,
+            layout.halo_bot(),
+        )?);
+    }
+    if w < workers - 1 {
+        handles.push(k.am_long_from_mem(
+            worker_kid(w + 1),
+            handlers::NOP,
+            &[],
+            layout.tile_row(rows - 1),
+            row_bytes,
+            SegmentLayout::HALO_TOP,
+        )?);
+    }
+    Ok(handles)
 }
 
 /// The worker kernel function.
@@ -56,58 +101,80 @@ pub fn worker_kernel(
 ) -> Result<()> {
     let rows = layout.rows;
     let cols = layout.cols;
-    let row_bytes = layout.row_bytes();
 
     // Wait for the control kernel to finish distribution.
     k.barrier()?;
 
+    // The pipelined schedule needs the interior (rows-2) and boundary (1)
+    // sub-sweeps; fixed-shape backends use the wait-then-sweep fallback.
+    let pipelined = rows >= 3 && compute.supports(rows - 2, cols) && compute.supports(1, cols);
+
     let mut compute_t = Duration::ZERO;
     let mut sync_t = Duration::ZERO;
+    let mut overlapped_iters = 0usize;
     let mut padded = vec![0f32; (rows + 2) * cols];
 
     for _ in 0..iters {
-        // -- halo exchange ---------------------------------------------------
-        let t0 = Instant::now();
-        let mut outstanding = 0u64;
-        if w > 0 {
-            let r = k.am_long_from_mem(
-                worker_kid(w - 1),
-                handlers::NOP,
-                &[],
-                layout.tile_row(0),
-                row_bytes,
-                layout.halo_bot(),
-            )?;
-            outstanding += r.messages;
-        }
-        if w < workers - 1 {
-            let r = k.am_long_from_mem(
-                worker_kid(w + 1),
-                handlers::NOP,
-                &[],
-                layout.tile_row(rows - 1),
-                row_bytes,
-                SegmentLayout::HALO_TOP,
-            )?;
-            outstanding += r.messages;
-        }
-        k.wait_replies(outstanding)?;
-        k.barrier()?; // all halos written cluster-wide
-        sync_t += t0.elapsed();
+        if pipelined {
+            // -- nonblocking halo exchange ------------------------------------
+            let t0 = Instant::now();
+            let handles = send_halos(&mut k, w, workers, &layout)?;
+            sync_t += t0.elapsed();
 
-        // -- sweep -----------------------------------------------------------
-        let t1 = Instant::now();
-        let seg = k.mem();
-        // Assemble halo_top | tile | halo_bot directly into the reused
-        // padded buffer (no per-iteration allocation, §Perf).
-        let (top, rest) = padded.split_at_mut(cols);
-        let (mid, bot) = rest.split_at_mut(rows * cols);
-        seg.read_f32_into(SegmentLayout::HALO_TOP, top)?;
-        seg.read_f32_into(layout.tile(), mid)?;
-        seg.read_f32_into(layout.halo_bot(), bot)?;
-        let new_tile = compute.step(rows, cols, &padded)?;
-        seg.write_f32(layout.tile(), &new_tile)?;
-        compute_t += t1.elapsed();
+            // -- interior sweep, overlapped with the puts in flight -----------
+            // New tile rows 1..rows-1 depend only on old tile rows 0..rows,
+            // never on the halos: the tile itself is the padded input of the
+            // (rows-2)-row sub-sweep.
+            let t1 = Instant::now();
+            let seg = k.mem();
+            let tile_old = &mut padded[cols..(rows + 1) * cols];
+            seg.read_f32_into(layout.tile(), tile_old)?;
+            let interior = compute.step(rows - 2, cols, tile_old)?;
+            compute_t += t1.elapsed();
+
+            // -- completion fence: our puts landed, then cluster barrier ------
+            let t2 = Instant::now();
+            k.wait_all(&handles)?;
+            k.barrier()?; // all halos written cluster-wide
+            sync_t += t2.elapsed();
+
+            // -- boundary rows from the fresh halos ---------------------------
+            let t3 = Instant::now();
+            let seg = k.mem();
+            seg.read_f32_into(SegmentLayout::HALO_TOP, &mut padded[..cols])?;
+            seg.read_f32_into(layout.halo_bot(), &mut padded[(rows + 1) * cols..])?;
+            // Top row: halo_top | tile row 0 | tile row 1 (old values) —
+            // already contiguous in the padded buffer.
+            let top = compute.step(1, cols, &padded[..3 * cols])?;
+            // Bottom row: tile row rows-2 | tile row rows-1 | halo_bot.
+            let bot = compute.step(1, cols, &padded[(rows - 1) * cols..(rows + 2) * cols])?;
+
+            seg.write_f32(layout.tile_row(0), &top)?;
+            seg.write_f32(layout.tile_row(1), &interior)?;
+            seg.write_f32(layout.tile_row(rows - 1), &bot)?;
+            compute_t += t3.elapsed();
+            overlapped_iters += 1;
+        } else {
+            // -- fallback: the paper's blocking schedule ----------------------
+            let t0 = Instant::now();
+            let handles = send_halos(&mut k, w, workers, &layout)?;
+            k.wait_all(&handles)?;
+            k.barrier()?; // all halos written cluster-wide
+            sync_t += t0.elapsed();
+
+            let t1 = Instant::now();
+            let seg = k.mem();
+            // Assemble halo_top | tile | halo_bot directly into the reused
+            // padded buffer (no per-iteration allocation, §Perf).
+            let (top, rest) = padded.split_at_mut(cols);
+            let (mid, bot) = rest.split_at_mut(rows * cols);
+            seg.read_f32_into(SegmentLayout::HALO_TOP, top)?;
+            seg.read_f32_into(layout.tile(), mid)?;
+            seg.read_f32_into(layout.halo_bot(), bot)?;
+            let new_tile = compute.step(rows, cols, &padded)?;
+            seg.write_f32(layout.tile(), &new_tile)?;
+            compute_t += t1.elapsed();
+        }
 
         let t2 = Instant::now();
         k.barrier()?; // everyone's tile updated before next exchange
@@ -123,6 +190,7 @@ pub fn worker_kernel(
         compute: compute_t,
         sync: sync_t,
         iters_done: iters,
+        overlapped_iters,
     });
     Ok(())
 }
@@ -159,7 +227,8 @@ pub fn control_kernel(
     // Tiles are sent one grid row per Long AM: a row is the natural exchange
     // unit of the solver, and it is exactly the quantity the 9000 B
     // Galapagos cap constrains (§IV-C1 — 4096-wide rows cannot be sent in a
-    // single AM, 2048-wide rows can).
+    // single AM, 2048-wide rows can). Completion via the wait_replies shim —
+    // the paper's collective model, kept working on purpose.
     let t_dist = Instant::now();
     let mut outstanding = 0u64;
     for (w, s) in strips.iter().enumerate() {
@@ -199,22 +268,23 @@ pub fn control_kernel(
     }
 
     // -- gather ----------------------------------------------------------------
+    // Every strip's rows are long-get in flight simultaneously; one wait_all
+    // fences the whole gather (per-operation completion, no shared counter).
     let t_gather = Instant::now();
-    let mut outstanding = 0u64;
+    let mut gets: Vec<AmHandle> = Vec::new();
     for (w, s) in strips.iter().enumerate() {
         let layout = SegmentLayout::new(s.rows, cols);
         for r in 0..s.rows {
-            let receipt = k.am_long_get(
+            gets.push(k.am_long_get(
                 worker_kid(w),
                 handlers::NOP,
                 layout.tile_row(r),
                 cols * 4,
                 ((s.start_row + r) * cols * 4) as u64,
-            )?;
-            outstanding += receipt.messages;
+            )?);
         }
     }
-    k.wait_replies(outstanding)?;
+    k.wait_all(&gets)?;
     let gather = t_gather.elapsed();
     k.barrier()?; // workers may exit
 

@@ -244,6 +244,64 @@ pub fn measure_throughput(
     Ok(bps)
 }
 
+/// Measure the completion rate (operations/second) of `count` Long gets of
+/// `payload_len` bytes issued two ways against the same cluster:
+///
+/// - **sequential**: one `am_long_get` + `wait_replies(1)` per round trip —
+///   the paper's collective-counter completion model, which serializes the
+///   round trips;
+/// - **overlapped**: all `count` gets in flight at once, one
+///   `wait_all(&handles)` fence — the handle-based model.
+///
+/// Returns `(sequential_rate, overlapped_rate)`; the hotpath bench gates on
+/// overlapped ≥ sequential.
+pub fn measure_overlap_gets(
+    placement: BenchPlacement,
+    payload_len: usize,
+    count: usize,
+) -> Result<(f64, f64)> {
+    let spec = placement.spec()?;
+    let cluster = ShoalCluster::launch(&spec)?;
+    let (tx, rx) = std::sync::mpsc::channel::<(f64, f64)>();
+
+    cluster.run_kernel(1, receiver_loop);
+
+    cluster.run_kernel(0, move |mut k| {
+        k.barrier().unwrap();
+        // Warm the path.
+        for _ in 0..8 {
+            let h = k.am_long_get(1, handlers::NOP, 0, payload_len, 0).unwrap();
+            k.wait(h).unwrap();
+        }
+
+        // Sequential baseline: full round trip per operation.
+        let t0 = Instant::now();
+        for _ in 0..count {
+            let _h = k.am_long_get(1, handlers::NOP, 0, payload_len, 0).unwrap();
+            k.wait_replies(1).unwrap();
+        }
+        let sequential = count as f64 / t0.elapsed().as_secs_f64();
+
+        // Overlapped: every get in flight, one completion fence.
+        let t1 = Instant::now();
+        let handles: Vec<crate::am::completion::AmHandle> = (0..count)
+            .map(|_| k.am_long_get(1, handlers::NOP, 0, payload_len, 0).unwrap())
+            .collect();
+        k.wait_all(&handles).unwrap();
+        let overlapped = count as f64 / t1.elapsed().as_secs_f64();
+
+        let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
+        k.wait_replies(r.messages).unwrap();
+        tx.send((sequential, overlapped)).unwrap();
+    });
+
+    let rates = rx
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .map_err(|_| crate::error::Error::Timeout("overlap bench"))?;
+    cluster.join()?;
+    Ok(rates)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +348,12 @@ mod tests {
         let s =
             measure_latency(BenchPlacement::hw_same(), MsgKind::LongFifo, 512, 20, 5).unwrap();
         assert!(s.median() > 0.0);
+    }
+
+    #[test]
+    fn overlap_gets_measures_both_modes() {
+        let (seq, ovl) = measure_overlap_gets(BenchPlacement::sw_same(), 1024, 50).unwrap();
+        assert!(seq > 0.0 && ovl > 0.0, "rates must be positive: {seq} {ovl}");
     }
 
     #[test]

@@ -1,1 +1,148 @@
-// paper's L3 coordination contribution
+//! Cluster-wide epoch bookkeeping — the paper's L3 coordination layer.
+//!
+//! The barrier protocol already implies a per-kernel epoch sequence: every
+//! kernel's `barrier()` call enters epoch `e`, the master releases `e`, and
+//! epochs are strictly monotone per kernel. [`EpochLedger`] makes that
+//! bookkeeping explicit: the barrier master records which kernel has entered
+//! which epoch, and derived queries — how many kernels have reached an
+//! epoch, which kernels are straggling, the highest epoch the whole cluster
+//! has passed — drive both the release decision and diagnostics (a barrier
+//! timeout can name the kernels that never arrived).
+//!
+//! The ledger is plain data guarded by its caller
+//! ([`BarrierState`](crate::am::engine::BarrierState) holds it under the
+//! barrier mutex); it owns no synchronization of its own.
+
+use std::collections::HashMap;
+
+/// Per-kernel record of the highest barrier epoch each kernel has entered.
+///
+/// Epochs are monotone per kernel (a kernel cannot enter epoch `e + 1`
+/// before `e` is released), so the highest-entered value fully determines
+/// membership of every earlier epoch.
+#[derive(Debug, Default, Clone)]
+pub struct EpochLedger {
+    entered: HashMap<u16, u64>,
+}
+
+impl EpochLedger {
+    pub fn new() -> EpochLedger {
+        EpochLedger::default()
+    }
+
+    /// Record that `kernel` entered `epoch`. Stale (out-of-order) records
+    /// are ignored — the ledger keeps the per-kernel maximum.
+    pub fn record_enter(&mut self, kernel: u16, epoch: u64) {
+        let e = self.entered.entry(kernel).or_insert(0);
+        *e = (*e).max(epoch);
+    }
+
+    /// Make `kernel` known to the ledger (at epoch 0) without recording an
+    /// enter. The barrier master seeds cluster membership this way so that
+    /// `stragglers` can name kernels that never entered *any* barrier — the
+    /// most common hang — not just ones that fell behind.
+    pub fn note_member(&mut self, kernel: u16) {
+        self.entered.entry(kernel).or_insert(0);
+    }
+
+    /// Highest epoch `kernel` has entered, if it ever reported.
+    pub fn last_entered(&self, kernel: u16) -> Option<u64> {
+        self.entered.get(&kernel).copied()
+    }
+
+    /// Number of kernels that have entered `epoch` (or a later one).
+    pub fn entered_count(&self, epoch: u64) -> u64 {
+        self.entered.values().filter(|&&e| e >= epoch).count() as u64
+    }
+
+    /// Kernels known to the ledger that have *not* reached `epoch` — the
+    /// stragglers a barrier-timeout diagnostic names.
+    pub fn stragglers(&self, epoch: u64) -> Vec<u16> {
+        let mut v: Vec<u16> = self
+            .entered
+            .iter()
+            .filter(|(_, &e)| e < epoch)
+            .map(|(&k, _)| k)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Highest epoch every one of `expected` peers has entered — the epoch
+    /// the whole cluster has collectively passed. Returns 0 until all
+    /// `expected` peers have reported at least once.
+    pub fn cluster_epoch(&self, expected: u64) -> u64 {
+        if expected == 0 || (self.entered.len() as u64) < expected {
+            return 0;
+        }
+        self.entered.values().copied().min().unwrap_or(0)
+    }
+
+    /// Kernels the ledger has ever heard from.
+    pub fn known_kernels(&self) -> u64 {
+        self.entered.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_kernels_per_epoch() {
+        let mut l = EpochLedger::new();
+        l.record_enter(1, 1);
+        l.record_enter(2, 1);
+        l.record_enter(3, 2);
+        assert_eq!(l.entered_count(1), 3);
+        assert_eq!(l.entered_count(2), 1);
+        assert_eq!(l.entered_count(3), 0);
+    }
+
+    #[test]
+    fn enters_are_monotone_per_kernel() {
+        let mut l = EpochLedger::new();
+        l.record_enter(7, 5);
+        l.record_enter(7, 3); // stale duplicate must not regress
+        assert_eq!(l.last_entered(7), Some(5));
+        assert_eq!(l.entered_count(4), 1);
+    }
+
+    #[test]
+    fn cluster_epoch_requires_all_peers() {
+        let mut l = EpochLedger::new();
+        l.record_enter(1, 4);
+        assert_eq!(l.cluster_epoch(2), 0, "one of two peers missing");
+        l.record_enter(2, 2);
+        assert_eq!(l.cluster_epoch(2), 2);
+        l.record_enter(2, 5);
+        assert_eq!(l.cluster_epoch(2), 4);
+        assert_eq!(l.cluster_epoch(0), 0);
+    }
+
+    #[test]
+    fn stragglers_are_named_and_sorted() {
+        let mut l = EpochLedger::new();
+        l.record_enter(9, 1);
+        l.record_enter(2, 3);
+        l.record_enter(5, 1);
+        assert_eq!(l.stragglers(3), vec![5, 9]);
+        assert_eq!(l.stragglers(1), Vec::<u16>::new());
+        assert_eq!(l.known_kernels(), 3);
+    }
+
+    #[test]
+    fn never_entered_members_are_stragglers() {
+        let mut l = EpochLedger::new();
+        l.note_member(1);
+        l.note_member(2);
+        l.record_enter(1, 1);
+        // Kernel 2 never entered any barrier: it must still be named.
+        assert_eq!(l.stragglers(1), vec![2]);
+        assert_eq!(l.entered_count(1), 1);
+        // note_member never regresses a recorded enter.
+        l.note_member(1);
+        assert_eq!(l.last_entered(1), Some(1));
+        assert_eq!(l.cluster_epoch(2), 0);
+    }
+}

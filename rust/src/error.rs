@@ -64,6 +64,10 @@ pub enum Error {
     /// (paper §V-A modular-API future work, implemented here).
     ProfileViolation(&'static str),
 
+    /// A nonblocking operation's send failed after its completion handle was
+    /// issued; `wait`/`test` on the handle surface the reason.
+    OperationFailed(String),
+
     /// Timed out waiting for replies / barrier / recv.
     Timeout(&'static str),
 
@@ -106,6 +110,7 @@ impl std::fmt::Display for Error {
             Error::ProfileViolation(what) => {
                 write!(f, "message type {what} is disabled by the active API profile")
             }
+            Error::OperationFailed(msg) => write!(f, "operation failed: {msg}"),
             Error::Timeout(what) => write!(f, "timeout waiting for {what}"),
             Error::Json(msg) => write!(f, "json error: {msg}"),
         }

@@ -13,6 +13,12 @@
 //! Semantics come from the shared AM engine; this thread adds the Fig. 3
 //! structure (hold-buffer ordering) and the cycle accounting that feeds the
 //! hardware latency model of the figures.
+//!
+//! Completion plumbing: ingress replies resolve each local kernel's
+//! [`CompletionTable`](crate::am::completion::CompletionTable) inside the
+//! shared engine — the *same* table the software handler thread resolves —
+//! so a kernel's `wait(handle)` works identically whether its runtime is a
+//! handler thread or this simulated GAScore (the paper's portability claim).
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -47,6 +53,9 @@ pub struct GAScoreStats {
     /// Modeled cycles spent emitting replies (egress pipeline).
     pub egress_cycles: AtomicU64,
     pub malformed: AtomicU64,
+    /// Egress replies whose token is bound to a completion handle on the
+    /// requesting side (HANDLE-flagged replies).
+    pub handle_replies_out: AtomicU64,
     /// Deepest hold-buffer occupancy observed.
     pub hold_buffer_peak: AtomicU64,
     /// Egress messages xpams_tx looped back internally (local Short /
@@ -279,6 +288,9 @@ impl Pipeline {
                         stats.bytes_out.fetch_add(p.wire_len() as u64, Ordering::Relaxed);
                         if msg.flags.is_reply() {
                             stats.replies_out.fetch_add(1, Ordering::Relaxed);
+                            if msg.flags.is_handle() {
+                                stats.handle_replies_out.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
                         if self.router_tx.send(RouterMsg::FromKernel(p)).is_err() {
                             self.dead = true;
@@ -296,7 +308,8 @@ impl Pipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::am::engine::{BarrierState, ReplyState};
+    use crate::am::completion::CompletionTable;
+    use crate::am::engine::BarrierState;
     use crate::am::handlers::HandlerTable;
     use crate::am::header::{AmMessage, Descriptor};
     use crate::am::types::{handler_ids, AmFlags, AmType};
@@ -311,7 +324,7 @@ mod tests {
             KernelRuntime {
                 kernel_id,
                 segment: seg.clone(),
-                replies: ReplyState::new(),
+                completion: CompletionTable::new(),
                 barrier: BarrierState::new(),
                 handlers: Arc::new(HandlerTable::hardware()),
                 medium_tx: tx,
@@ -364,6 +377,71 @@ mod tests {
         assert!(stats.ingress_cycles.load(Ordering::Relaxed) > 0);
         assert!(stats.modeled_ns() > 0.0);
 
+        drop(inbox_tx);
+        g.join();
+    }
+
+    #[test]
+    fn hardware_path_replies_resolve_completion_table() {
+        // The requester kernel (2) lives behind this GAScore; its get's data
+        // reply arrives on the "From Network" interface and must resolve the
+        // same completion table the software path uses.
+        let (rt, seg, _mrx) = runtime(2);
+        let completion = Arc::clone(&rt.completion);
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, _router_rx) = mpsc::channel();
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+
+        let h = completion.create(1);
+        let token = completion.bind_token(h);
+        let reply = AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new().with(AmFlags::REPLY).with(AmFlags::HANDLE),
+            src: 5,
+            dst: 2,
+            handler: handler_ids::NOP,
+            token,
+            args: vec![],
+            desc: Descriptor::Long { dst_addr: 128 },
+            payload: vec![3; 16],
+        };
+        inbox_tx.send(Packet::new(2, 5, reply.encode().unwrap()).unwrap()).unwrap();
+
+        completion.wait(h, Duration::from_secs(2)).unwrap();
+        assert_eq!(seg.read(128, 16).unwrap(), vec![3; 16]);
+        drop(inbox_tx);
+        g.join();
+    }
+
+    #[test]
+    fn handle_flagged_requests_produce_handle_flagged_replies() {
+        let (rt, _seg, _mrx) = runtime(2);
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+
+        let m = AmMessage {
+            am_type: AmType::Long,
+            flags: AmFlags::new().with(AmFlags::FIFO).with(AmFlags::HANDLE),
+            src: 0,
+            dst: 2,
+            handler: handler_ids::NOP,
+            token: 99,
+            args: vec![],
+            desc: Descriptor::Long { dst_addr: 0 },
+            payload: vec![1; 8],
+        };
+        inbox_tx.send(Packet::new(2, 0, m.encode().unwrap()).unwrap()).unwrap();
+
+        match router_rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+            RouterMsg::FromKernel(p) => {
+                let r = AmMessage::decode(&p.data).unwrap();
+                assert!(r.flags.is_reply() && r.flags.is_handle());
+                assert_eq!(r.token, 99);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(g.stats().handle_replies_out.load(Ordering::Relaxed), 1);
         drop(inbox_tx);
         g.join();
     }

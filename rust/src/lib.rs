@@ -30,6 +30,7 @@ pub mod am;
 pub mod apps;
 pub mod bench;
 pub mod config;
+pub mod coordinator;
 pub mod error;
 pub mod galapagos;
 pub mod gascore;
@@ -43,12 +44,13 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for application authors.
 pub mod prelude {
+    pub use crate::am::completion::AmHandle;
     pub use crate::am::handlers;
     pub use crate::am::types::{AmFlags, AmType};
     pub use crate::config::ClusterSpec;
     pub use crate::error::{Error, Result};
     pub use crate::am::engine::ReceivedMedium;
     pub use crate::memory::GlobalAddress;
-    pub use crate::shoal_node::api::{SendReceipt, ShoalKernel};
+    pub use crate::shoal_node::api::ShoalKernel;
     pub use crate::shoal_node::cluster::ShoalCluster;
 }

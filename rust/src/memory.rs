@@ -36,9 +36,23 @@ impl GlobalAddress {
         Self { kernel, offset }
     }
 
-    /// Displace within the same partition.
-    pub fn plus(self, bytes: u64) -> Self {
-        Self { kernel: self.kernel, offset: self.offset + bytes }
+    /// Displace within the same partition. Overflow is an error, not a
+    /// silent `u64` wrap — a wrapped offset would alias the bottom of the
+    /// partition and corrupt unrelated data on the next put.
+    pub fn plus(self, bytes: u64) -> Result<Self> {
+        let offset = self.offset.checked_add(bytes).ok_or_else(|| {
+            Error::BadDescriptor(format!(
+                "global address overflow: kernel {} offset {:#x} + {:#x} exceeds u64",
+                self.kernel, self.offset, bytes
+            ))
+        })?;
+        Ok(Self { kernel: self.kernel, offset })
+    }
+
+    /// Displace with wraparound — only for address-arithmetic call sites
+    /// that bound the result themselves.
+    pub fn wrapping_plus(self, bytes: u64) -> Self {
+        Self { kernel: self.kernel, offset: self.offset.wrapping_add(bytes) }
     }
 }
 
@@ -310,6 +324,18 @@ impl Allocator {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn global_address_plus_is_checked() {
+        let a = GlobalAddress::new(3, 100);
+        let b = a.plus(28).unwrap();
+        assert_eq!(b, GlobalAddress::new(3, 128));
+        // Regression: `plus` used to wrap silently on u64 overflow.
+        let near_top = GlobalAddress::new(3, u64::MAX - 4);
+        assert!(matches!(near_top.plus(5), Err(Error::BadDescriptor(_))));
+        assert_eq!(near_top.plus(4).unwrap().offset, u64::MAX);
+        assert_eq!(near_top.wrapping_plus(5).offset, 0);
+    }
 
     #[test]
     fn read_write_roundtrip() {

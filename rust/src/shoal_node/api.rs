@@ -16,16 +16,24 @@
 //! | `am_medium_get`       | Medium get   | remote memory  | kernel stream  |
 //! | `am_long_get`         | Long get     | remote memory  | local memory   |
 //!
-//! Every non-async request elicits exactly one reply at the destination;
-//! `wait_replies(n)` blocks until `n` outstanding replies have arrived
-//! ("Kernels can therefore send several messages and then collectively wait
-//! for the same number of replies").
+//! Completion is per operation: every `am_*` send returns an [`AmHandle`]
+//! registered in the kernel's completion table (a multi-chunk send returns
+//! one handle covering all its chunks). [`wait`](ShoalKernel::wait),
+//! [`test`](ShoalKernel::test), [`wait_all`](ShoalKernel::wait_all) and
+//! [`wait_any`](ShoalKernel::wait_any) consume handles, which is what lets a
+//! kernel overlap independent transfers with compute and attribute failures
+//! to the exact operation. The paper's collective counter model ("send
+//! several messages and then collectively wait for the same number of
+//! replies") survives as the [`wait_replies`](ShoalKernel::wait_replies)
+//! shim over the same table — each operation's completion must be consumed
+//! exactly once, by a handle wait *or* by `wait_replies`, never both.
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::time::Duration;
 
-use crate::am::engine::{barrier_op, BarrierState, ReceivedMedium, ReplyState};
+use crate::am::completion::{AmHandle, CompletionTable};
+use crate::am::engine::{barrier_op, BarrierState, ReceivedMedium};
 use crate::am::handlers::HandlerTable;
 use crate::am::header::{AmMessage, Descriptor};
 use crate::am::types::{handler_ids, AmFlags, AmType};
@@ -41,14 +49,6 @@ pub use crate::am::engine::ReceivedMedium as Medium;
 /// thousands of AMs in flight over loopback TCP.
 pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(120);
 
-/// Receipt returned by send operations: the number of AMs actually emitted
-/// (> 1 when the chunking extension split an oversized payload), which is
-/// also the number of replies the operation will generate.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct SendReceipt {
-    pub messages: u64,
-}
-
 /// The per-kernel API handle. Obtained from
 /// [`ShoalCluster`](crate::shoal_node::cluster::ShoalCluster); moved into the
 /// kernel function's thread.
@@ -57,15 +57,14 @@ pub struct ShoalKernel {
     pub(crate) spec: Arc<ClusterSpec>,
     pub(crate) router_tx: std::sync::mpsc::Sender<RouterMsg>,
     pub(crate) segment: Segment,
-    pub(crate) replies: Arc<ReplyState>,
+    pub(crate) completion: Arc<CompletionTable>,
     pub(crate) barrier_state: Arc<BarrierState>,
     pub(crate) handlers: Arc<HandlerTable>,
     pub(crate) medium_rx: Receiver<ReceivedMedium>,
-    /// Replies consumed by previous `wait_replies` calls.
+    /// Replies consumed by previous waits (`wait_replies` shim bookkeeping).
     consumed: u64,
     /// Barrier epoch counter (local).
     epoch: u64,
-    token: u32,
     pub timeout: Duration,
 }
 
@@ -76,7 +75,7 @@ impl ShoalKernel {
         spec: Arc<ClusterSpec>,
         router_tx: std::sync::mpsc::Sender<RouterMsg>,
         segment: Segment,
-        replies: Arc<ReplyState>,
+        completion: Arc<CompletionTable>,
         barrier_state: Arc<BarrierState>,
         handlers: Arc<HandlerTable>,
         medium_rx: Receiver<ReceivedMedium>,
@@ -86,13 +85,12 @@ impl ShoalKernel {
             spec,
             router_tx,
             segment,
-            replies,
+            completion,
             barrier_state,
             handlers,
             medium_rx,
             consumed: 0,
             epoch: 0,
-            token: 0,
             timeout: DEFAULT_TIMEOUT,
         }
     }
@@ -122,11 +120,6 @@ impl ShoalKernel {
         &self.spec.profile
     }
 
-    fn next_token(&mut self) -> u32 {
-        self.token = self.token.wrapping_add(1);
-        self.token
-    }
-
     fn send_msg(&self, msg: &AmMessage) -> Result<()> {
         let bytes = msg.encode()?;
         let pkt = Packet::new(msg.dst, msg.src, bytes)?;
@@ -135,15 +128,35 @@ impl ShoalKernel {
             .map_err(|_| Error::Disconnected("router"))
     }
 
+    /// Stamp one chunk's token + HANDLE flag onto `msg` and send it. A send
+    /// failure propagates *into the handle*: the operation transitions to
+    /// failed (the reason surfaces as [`Error::OperationFailed`] at
+    /// `wait`/`test`) and `false` tells chunk loops to stop early — the
+    /// `am_*` call still returns the handle, so the failure is attributed to
+    /// the exact operation rather than lost in a batch.
+    fn send_tracked(&self, h: AmHandle, msg: &mut AmMessage) -> bool {
+        msg.token = self.completion.bind_token(h);
+        msg.flags = msg.flags.with(AmFlags::HANDLE);
+        match self.send_msg(msg) {
+            Ok(()) => true,
+            Err(e) => {
+                log::warn!("kernel {}: send failed; failing its handle: {e}", self.id);
+                self.completion.fail(h, &format!("send failed: {e}"));
+                false
+            }
+        }
+    }
+
     // -- Short ---------------------------------------------------------------
 
     /// Send a Short AM (signaling; no payload). Returns after local emit.
-    pub fn am_short(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<SendReceipt> {
+    pub fn am_short(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<AmHandle> {
         self.am_short_flags(dst, handler, args, AmFlags::new())
     }
 
-    /// Asynchronous Short AM — no reply will be generated.
-    pub fn am_short_async(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<SendReceipt> {
+    /// Asynchronous Short AM — no reply will be generated; the returned
+    /// handle is already complete.
+    pub fn am_short_async(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<AmHandle> {
         self.am_short_flags(dst, handler, args, AmFlags::new().with(AmFlags::ASYNC))
     }
 
@@ -153,24 +166,29 @@ impl ShoalKernel {
         handler: u8,
         args: &[u64],
         flags: AmFlags,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().short {
             return Err(Error::ProfileViolation("short"));
         }
         self.spec.kernel(dst)?;
-        let token = self.next_token();
-        self.send_msg(&AmMessage {
+        let mut msg = AmMessage {
             am_type: AmType::Short,
             flags,
             src: self.id,
             dst,
             handler,
-            token,
+            token: 0,
             args: args.to_vec(),
             desc: Descriptor::None,
             payload: vec![],
-        })?;
-        Ok(SendReceipt { messages: if flags.is_async() { 0 } else { 1 } })
+        };
+        if flags.is_async() {
+            self.send_msg(&msg)?;
+            return Ok(AmHandle::completed());
+        }
+        let h = self.completion.create(1);
+        self.send_tracked(h, &mut msg);
+        Ok(h)
     }
 
     // -- Medium ---------------------------------------------------------------
@@ -184,7 +202,7 @@ impl ShoalKernel {
         handler: u8,
         args: &[u64],
         payload: &[u8],
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         self.medium_impl(dst, handler, args, payload.to_vec(), AmFlags::new().with(AmFlags::FIFO))
     }
 
@@ -195,7 +213,7 @@ impl ShoalKernel {
         handler: u8,
         args: &[u64],
         payload: &[u8],
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         self.medium_impl(
             dst,
             handler,
@@ -214,7 +232,7 @@ impl ShoalKernel {
         args: &[u64],
         src_offset: u64,
         len: usize,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         let payload = self.segment.read(src_offset, len)?;
         self.medium_impl(dst, handler, args, payload, AmFlags::new())
     }
@@ -226,19 +244,18 @@ impl ShoalKernel {
         args: &[u64],
         payload: Vec<u8>,
         flags: AmFlags,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().medium {
             return Err(Error::ProfileViolation("medium"));
         }
         self.spec.kernel(dst)?;
-        let token = self.next_token();
-        let msg = AmMessage {
+        let mut msg = AmMessage {
             am_type: AmType::Medium,
             flags,
             src: self.id,
             dst,
             handler,
-            token,
+            token: 0,
             args: args.to_vec(),
             desc: Descriptor::None,
             payload,
@@ -252,20 +269,26 @@ impl ShoalKernel {
                 limit: msg.max_payload_for(),
             });
         }
-        self.send_msg(&msg)?;
-        Ok(SendReceipt { messages: if flags.is_async() { 0 } else { 1 } })
+        if flags.is_async() {
+            self.send_msg(&msg)?;
+            return Ok(AmHandle::completed());
+        }
+        let h = self.completion.create(1);
+        self.send_tracked(h, &mut msg);
+        Ok(h)
     }
 
     /// Medium get: bring `len` bytes at `src_addr` in the destination
     /// kernel's partition back to this kernel's stream. The data arrives as
-    /// a [`ReceivedMedium`] and counts as one reply per emitted chunk.
+    /// a [`ReceivedMedium`] per emitted chunk; the handle completes when
+    /// every chunk's data reply has arrived.
     pub fn am_medium_get(
         &mut self,
         dst: u16,
         handler: u8,
         src_addr: u64,
         len: usize,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().medium || !self.profile().gets {
             return Err(Error::ProfileViolation("medium get"));
         }
@@ -283,24 +306,37 @@ impl ShoalKernel {
         };
         let max = probe.max_payload_for();
         let chunks = self.chunk_ranges(len, max)?;
-        let n = chunks.len() as u64;
-        for (off, clen) in chunks {
-            let token = self.next_token();
-            self.send_msg(&AmMessage {
+        // Validate every chunk's address arithmetic *before* registering the
+        // operation, so an overflow cannot abandon a half-issued handle.
+        let descs = chunks
+            .iter()
+            .map(|&(off, clen)| {
+                Ok((off, Descriptor::MediumGet {
+                    src_addr: checked_offset(src_addr, off)?,
+                    len: clen as u32,
+                }))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let h = self.completion.create(descs.len() as u64);
+        for (off, desc) in descs {
+            let mut msg = AmMessage {
                 am_type: AmType::Medium,
                 flags: AmFlags::new().with(AmFlags::GET),
                 src: self.id,
                 dst,
                 handler,
-                token,
+                token: 0,
                 // Final arg carries the chunk's byte offset so the receiver
                 // can reassemble multi-chunk gets.
                 args: vec![off],
-                desc: Descriptor::MediumGet { src_addr: src_addr + off, len: clen as u32 },
+                desc,
                 payload: vec![],
-            })?;
+            };
+            if !self.send_tracked(h, &mut msg) {
+                break;
+            }
         }
-        Ok(SendReceipt { messages: n })
+        Ok(h)
     }
 
     // -- Long -----------------------------------------------------------------
@@ -314,7 +350,7 @@ impl ShoalKernel {
         args: &[u64],
         payload: &[u8],
         dst_addr: u64,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         self.long_impl(dst, handler, args, payload, dst_addr, AmFlags::new().with(AmFlags::FIFO))
     }
 
@@ -326,7 +362,7 @@ impl ShoalKernel {
         args: &[u64],
         payload: &[u8],
         dst_addr: u64,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         self.long_impl(
             dst,
             handler,
@@ -346,7 +382,7 @@ impl ShoalKernel {
         src_offset: u64,
         len: usize,
         dst_addr: u64,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         let payload = self.segment.read(src_offset, len)?;
         self.long_impl(dst, handler, args, &payload, dst_addr, AmFlags::new())
     }
@@ -359,7 +395,7 @@ impl ShoalKernel {
         payload: &[u8],
         dst_addr: u64,
         flags: AmFlags,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().long {
             return Err(Error::ProfileViolation("long"));
         }
@@ -377,27 +413,42 @@ impl ShoalKernel {
         };
         let max = probe.max_payload_for();
         let chunks = self.chunk_ranges(payload.len(), max)?;
-        let n = chunks.len() as u64;
-        for (off, clen) in chunks {
-            let token = self.next_token();
-            self.send_msg(&AmMessage {
+        // Address arithmetic validated before the operation is registered.
+        let descs = chunks
+            .iter()
+            .map(|&(off, clen)| {
+                Ok((off, clen, Descriptor::Long { dst_addr: checked_offset(dst_addr, off)? }))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let h = if flags.is_async() {
+            AmHandle::completed()
+        } else {
+            self.completion.create(descs.len() as u64)
+        };
+        for (off, clen, desc) in descs {
+            let mut msg = AmMessage {
                 am_type: AmType::Long,
                 flags,
                 src: self.id,
                 dst,
                 handler,
-                token,
+                token: 0,
                 args: args.to_vec(),
-                desc: Descriptor::Long { dst_addr: dst_addr + off },
+                desc,
                 payload: payload[off as usize..off as usize + clen].to_vec(),
-            })?;
+            };
+            if flags.is_async() {
+                self.send_msg(&msg)?;
+            } else if !self.send_tracked(h, &mut msg) {
+                break;
+            }
         }
-        Ok(SendReceipt { messages: if flags.is_async() { 0 } else { n } })
+        Ok(h)
     }
 
     /// Long get: read `len` bytes at `src_addr` in the destination kernel's
     /// partition; the reply writes them at `reply_addr` in *this* kernel's
-    /// partition. Completion = `wait_replies(receipt.messages)`.
+    /// partition. Completion = `wait(handle)` (or the `wait_replies` shim).
     pub fn am_long_get(
         &mut self,
         dst: u16,
@@ -405,7 +456,7 @@ impl ShoalKernel {
         src_addr: u64,
         len: usize,
         reply_addr: u64,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().long || !self.profile().gets {
             return Err(Error::ProfileViolation("long get"));
         }
@@ -423,26 +474,35 @@ impl ShoalKernel {
         };
         let max = probe.max_payload_for();
         let chunks = self.chunk_ranges(len, max)?;
-        let n = chunks.len() as u64;
-        for (off, clen) in chunks {
-            let token = self.next_token();
-            self.send_msg(&AmMessage {
+        // Address arithmetic validated before the operation is registered.
+        let descs = chunks
+            .iter()
+            .map(|&(off, clen)| {
+                Ok(Descriptor::LongGet {
+                    src_addr: checked_offset(src_addr, off)?,
+                    len: clen as u32,
+                    reply_addr: checked_offset(reply_addr, off)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let h = self.completion.create(descs.len() as u64);
+        for desc in descs {
+            let mut msg = AmMessage {
                 am_type: AmType::Long,
                 flags: AmFlags::new().with(AmFlags::GET),
                 src: self.id,
                 dst,
                 handler,
-                token,
+                token: 0,
                 args: vec![],
-                desc: Descriptor::LongGet {
-                    src_addr: src_addr + off,
-                    len: clen as u32,
-                    reply_addr: reply_addr + off,
-                },
+                desc,
                 payload: vec![],
-            })?;
+            };
+            if !self.send_tracked(h, &mut msg) {
+                break;
+            }
         }
-        Ok(SendReceipt { messages: n })
+        Ok(h)
     }
 
     /// Strided Long put: block `i` of `block_len` bytes lands at
@@ -456,7 +516,7 @@ impl ShoalKernel {
         dst_addr: u64,
         stride: u32,
         block_len: u32,
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().strided {
             return Err(Error::ProfileViolation("strided"));
         }
@@ -468,14 +528,13 @@ impl ShoalKernel {
             )));
         }
         let nblocks = (payload.len() / block_len as usize) as u32;
-        let token = self.next_token();
-        let msg = AmMessage {
+        let mut msg = AmMessage {
             am_type: AmType::LongStrided,
             flags: AmFlags::new().with(AmFlags::FIFO),
             src: self.id,
             dst,
             handler,
-            token,
+            token: 0,
             args: args.to_vec(),
             desc: Descriptor::Strided { dst_addr, stride, block_len, nblocks },
             payload: payload.to_vec(),
@@ -486,8 +545,9 @@ impl ShoalKernel {
                 limit: msg.max_payload_for(),
             });
         }
-        self.send_msg(&msg)?;
-        Ok(SendReceipt { messages: 1 })
+        let h = self.completion.create(1);
+        self.send_tracked(h, &mut msg);
+        Ok(h)
     }
 
     /// Vectored Long put: payload split over explicit (addr, len) extents.
@@ -498,19 +558,18 @@ impl ShoalKernel {
         args: &[u64],
         payload: &[u8],
         entries: &[(u64, u32)],
-    ) -> Result<SendReceipt> {
+    ) -> Result<AmHandle> {
         if !self.profile().vectored {
             return Err(Error::ProfileViolation("vectored"));
         }
         self.spec.kernel(dst)?;
-        let token = self.next_token();
-        let msg = AmMessage {
+        let mut msg = AmMessage {
             am_type: AmType::LongVectored,
             flags: AmFlags::new().with(AmFlags::FIFO),
             src: self.id,
             dst,
             handler,
-            token,
+            token: 0,
             args: args.to_vec(),
             desc: Descriptor::Vectored { entries: entries.to_vec() },
             payload: payload.to_vec(),
@@ -522,25 +581,79 @@ impl ShoalKernel {
                 limit: msg.max_payload_for(),
             });
         }
-        self.send_msg(&msg)?;
-        Ok(SendReceipt { messages: 1 })
+        let h = self.completion.create(1);
+        self.send_tracked(h, &mut msg);
+        Ok(h)
     }
 
     // -- completion ------------------------------------------------------------
 
-    /// Block until `n` more replies have arrived (cumulative bookkeeping is
-    /// internal; callers sum the `SendReceipt.messages` of the operations
-    /// they are waiting on).
+    /// Block until `h` completes, consuming it. A failed send surfaces its
+    /// reason as [`Error::OperationFailed`]; a timeout leaves the operation
+    /// outstanding. Waiting an already-consumed handle succeeds without
+    /// double-crediting the `wait_replies` bookkeeping.
+    pub fn wait(&mut self, h: AmHandle) -> Result<()> {
+        if self.completion.wait(h, self.timeout)? {
+            self.consumed += h.messages;
+        }
+        Ok(())
+    }
+
+    /// Nonblocking completion probe: `Ok(true)` consumes the handle,
+    /// `Ok(false)` means still in flight, `Err` surfaces a failed send.
+    pub fn test(&mut self, h: AmHandle) -> Result<bool> {
+        match self.completion.test(h)? {
+            None => Ok(false),
+            Some(first) => {
+                if first {
+                    self.consumed += h.messages;
+                }
+                Ok(true)
+            }
+        }
+    }
+
+    /// Block until every handle in `hs` completes (consuming all of them) —
+    /// the fence after a batch of overlapped transfers. Handles already
+    /// consumed (e.g. by an earlier `wait_any`) are skipped harmlessly.
+    pub fn wait_all(&mut self, hs: &[AmHandle]) -> Result<()> {
+        let deadline = std::time::Instant::now() + self.timeout;
+        for h in hs {
+            let now = std::time::Instant::now();
+            let left = if now >= deadline { Duration::ZERO } else { deadline - now };
+            if self.completion.wait(*h, left)? {
+                self.consumed += h.messages;
+            }
+        }
+        Ok(())
+    }
+
+    /// Block until *any* handle in `hs` completes; returns the index of the
+    /// completed handle (consuming only that one).
+    pub fn wait_any(&mut self, hs: &[AmHandle]) -> Result<usize> {
+        let (i, first) = self.completion.wait_any(hs, self.timeout)?;
+        if first {
+            self.consumed += hs[i].messages;
+        }
+        Ok(i)
+    }
+
+    /// Block until `n` more replies have arrived — the paper's collective
+    /// completion model, retained as a shim over the completion table
+    /// (callers sum the `AmHandle::messages` of the operations they wait
+    /// on). Do not mix with handle waits *for the same operations*.
     pub fn wait_replies(&mut self, n: u64) -> Result<()> {
         let target = self.consumed + n;
-        self.replies.wait_total(target, self.timeout)?;
+        self.completion.wait_total(target, self.timeout)?;
         self.consumed = target;
         Ok(())
     }
 
-    /// Replies received but not yet consumed by `wait_replies`.
+    /// Replies received but not yet consumed by any wait. Saturates at zero:
+    /// double-consuming a handle (wait/test after it already settled) can
+    /// push the consumed count past the resolved count.
     pub fn pending_replies(&self) -> u64 {
-        self.replies.total() - self.consumed
+        self.completion.resolved_total().saturating_sub(self.consumed)
     }
 
     /// Blocking receive of the next Medium payload.
@@ -594,6 +707,8 @@ impl ShoalKernel {
             return Ok(());
         }
         if self.id == master {
+            // Seed membership so a timeout names never-arrived kernels too.
+            self.barrier_state.note_members(&ids[1..]);
             self.barrier_state
                 .wait_enters(epoch, n - 1, self.timeout)?;
             for &kid in ids.iter().skip(1) {
@@ -632,4 +747,12 @@ impl ShoalKernel {
             }
         }
     }
+}
+
+/// Chunk address arithmetic with overflow detection — a silent `u64` wrap
+/// here would scatter a chunk to the bottom of the destination partition.
+fn checked_offset(base: u64, off: u64) -> Result<u64> {
+    base.checked_add(off).ok_or_else(|| {
+        Error::BadDescriptor(format!("address overflow: {base:#x} + {off:#x} exceeds u64"))
+    })
 }

@@ -14,7 +14,8 @@ use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::am::engine::{BarrierState, KernelRuntime, ReplyState};
+use crate::am::completion::CompletionTable;
+use crate::am::engine::{BarrierState, KernelRuntime};
 use crate::am::handlers::HandlerTable;
 use crate::config::{ClusterSpec, Platform};
 use crate::error::{Error, Result};
@@ -97,7 +98,7 @@ impl ShoalCluster {
         // Per-kernel runtime state.
         struct KState {
             segment: Segment,
-            replies: Arc<ReplyState>,
+            completion: Arc<CompletionTable>,
             barrier: Arc<BarrierState>,
             handlers: Arc<HandlerTable>,
             medium_tx: mpsc::Sender<crate::am::engine::ReceivedMedium>,
@@ -117,7 +118,7 @@ impl ShoalCluster {
                 k.id,
                 KState {
                     segment: Segment::new(k.segment_size),
-                    replies: ReplyState::new(),
+                    completion: CompletionTable::new(),
                     barrier: BarrierState::new(),
                     handlers,
                     medium_tx: mtx,
@@ -148,7 +149,7 @@ impl ShoalCluster {
             let make_rt = |kid: u16, ks: &KState| KernelRuntime {
                 kernel_id: kid,
                 segment: ks.segment.clone(),
-                replies: Arc::clone(&ks.replies),
+                completion: Arc::clone(&ks.completion),
                 barrier: Arc::clone(&ks.barrier),
                 handlers: Arc::clone(&ks.handlers),
                 medium_tx: ks.medium_tx.clone(),
@@ -238,7 +239,7 @@ impl ShoalCluster {
                     Arc::clone(&spec),
                     router_tx,
                     ks.segment.clone(),
-                    Arc::clone(&ks.replies),
+                    Arc::clone(&ks.completion),
                     Arc::clone(&ks.barrier),
                     Arc::clone(&ks.handlers),
                     ks.medium_rx.take().expect("medium receiver claimed once"),

@@ -7,6 +7,9 @@
 //!
 //! The thread drains the kernel's delivery channel, runs the shared AM
 //! engine, and sends any generated replies back through the node router.
+//! Ingress replies resolve the kernel's completion table inside the engine,
+//! so a blocked `wait(handle)` on the kernel thread wakes the moment this
+//! thread processes the matching reply packet.
 
 use std::sync::mpsc::{Receiver, Sender};
 use std::thread::JoinHandle;
@@ -79,7 +82,8 @@ impl HandlerThread {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::am::engine::{BarrierState, ReplyState};
+    use crate::am::completion::CompletionTable;
+    use crate::am::engine::BarrierState;
     use crate::am::handlers::HandlerTable;
     use crate::am::types::{handler_ids, AmFlags, AmType};
     use crate::am::Descriptor;
@@ -94,7 +98,7 @@ mod tests {
         let rt = KernelRuntime {
             kernel_id: 1,
             segment: Segment::new(1024),
-            replies: ReplyState::new(),
+            completion: CompletionTable::new(),
             barrier: BarrierState::new(),
             handlers: Arc::new(HandlerTable::software()),
             medium_tx,
@@ -137,12 +141,51 @@ mod tests {
     }
 
     #[test]
+    fn handle_reply_resolves_table_through_thread() {
+        let (medium_tx, _medium_rx) = mpsc::channel();
+        let completion = CompletionTable::new();
+        let rt = KernelRuntime {
+            kernel_id: 1,
+            segment: Segment::new(64),
+            completion: Arc::clone(&completion),
+            barrier: BarrierState::new(),
+            handlers: Arc::new(HandlerTable::software()),
+            medium_tx,
+        };
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, _router_rx) = mpsc::channel();
+        let mut ht = HandlerThread::spawn(rt, inbox_rx, router_tx);
+
+        // Register an operation the way the API does, then feed its reply in
+        // through the network-delivery channel.
+        let h = completion.create(1);
+        let token = completion.bind_token(h);
+        let reply = AmMessage {
+            am_type: AmType::Short,
+            flags: AmFlags::new().with(AmFlags::REPLY).with(AmFlags::HANDLE),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::REPLY,
+            token,
+            args: vec![],
+            desc: Descriptor::None,
+            payload: vec![],
+        };
+        inbox_tx.send(Packet::new(1, 0, reply.encode().unwrap()).unwrap()).unwrap();
+
+        completion.wait(h, Duration::from_secs(2)).unwrap();
+        assert_eq!(completion.resolved_total(), 1);
+        drop(inbox_tx);
+        ht.join();
+    }
+
+    #[test]
     fn malformed_packets_are_dropped_not_fatal() {
         let (medium_tx, medium_rx) = mpsc::channel();
         let rt = KernelRuntime {
             kernel_id: 1,
             segment: Segment::new(64),
-            replies: ReplyState::new(),
+            completion: CompletionTable::new(),
             barrier: BarrierState::new(),
             handlers: Arc::new(HandlerTable::software()),
             medium_tx,

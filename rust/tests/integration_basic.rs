@@ -267,3 +267,91 @@ fn profile_blocks_disabled_classes() {
     });
     cluster.join().unwrap();
 }
+
+/// Handle-based completion end-to-end: overlapped Long gets resolved by
+/// `wait_all`, out-of-order completion attribution via `test`, and
+/// `wait_any` picking the first finished operation.
+#[test]
+fn handle_waits_complete_overlapped_gets() {
+    let spec = ClusterSpec::single_node("h", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(1, |mut k| {
+        for i in 0..4u8 {
+            k.mem().write(i as u64 * 256, &[i + 1; 256]).unwrap();
+        }
+        k.barrier().unwrap();
+        k.barrier().unwrap(); // stay alive while kernel 0 gets
+    });
+    cluster.run_kernel(0, |mut k| {
+        k.barrier().unwrap();
+        // Four independent gets in flight at once, one fence.
+        let handles: Vec<AmHandle> = (0..4u64)
+            .map(|i| {
+                k.am_long_get(1, handlers::NOP, i * 256, 256, i * 256).unwrap()
+            })
+            .collect();
+        assert!(handles.iter().all(|h| h.messages == 1));
+        k.wait_all(&handles).unwrap();
+        for i in 0..4u8 {
+            assert_eq!(k.mem().read(i as u64 * 256, 256).unwrap(), vec![i + 1; 256]);
+        }
+        // wait_any returns an index of a completed operation.
+        let a = k.am_long_get(1, handlers::NOP, 0, 16, 0).unwrap();
+        let b = k.am_long_get(1, handlers::NOP, 256, 16, 16).unwrap();
+        let i = k.wait_any(&[a, b]).unwrap();
+        assert!(i < 2);
+        // Consume the other one too before the final barrier.
+        let other = if i == 0 { b } else { a };
+        k.wait(other).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.join().unwrap();
+}
+
+/// A chunked put returns ONE handle covering all chunks; waiting it is
+/// equivalent to the old "sum the receipts" collective bookkeeping.
+#[test]
+fn chunked_put_completes_under_one_handle() {
+    let mut b = ClusterBuilder::new();
+    let n0 = b.node("n0", Platform::Sw);
+    b.kernel(n0);
+    b.kernel(n0);
+    b.default_segment(256 << 10);
+    b.chunk_policy(ChunkPolicy::Chunked);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let payload = vec![0xB7u8; 40 << 10];
+        let h = k.am_long(1, handlers::NOP, &[], &payload, 0).unwrap();
+        assert!(h.messages > 1, "40 KB must chunk: {}", h.messages);
+        k.wait(h).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 40 << 10).unwrap(), vec![0xB7; 40 << 10]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Handle waits and the wait_replies shim coexist on one kernel as long as
+/// each operation is consumed exactly once.
+#[test]
+fn handle_and_shim_waits_interleave() {
+    let spec = ClusterSpec::single_node("m", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let a = k.am_long(1, handlers::NOP, &[], &[1; 64], 0).unwrap(); // handle-waited
+        let _b = k.am_long(1, handlers::NOP, &[], &[2; 64], 64).unwrap(); // shim-waited
+        k.wait(a).unwrap();
+        k.wait_replies(1).unwrap();
+        assert_eq!(k.pending_replies(), 0);
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 64).unwrap(), vec![1; 64]);
+        assert_eq!(k.mem().read(64, 64).unwrap(), vec![2; 64]);
+    });
+    cluster.join().unwrap();
+}

@@ -28,6 +28,9 @@ fn random_am(rng: &mut Rng) -> AmMessage {
     if rng.chance(0.3) {
         flags = flags.with(AmFlags::FIFO);
     }
+    if rng.chance(0.3) {
+        flags = flags.with(AmFlags::HANDLE);
+    }
     let nargs = rng.below(9) as usize;
     let args: Vec<u64> = (0..nargs).map(|_| rng.next_u64()).collect();
     let payload_len = rng.below(2048) as usize;
@@ -112,6 +115,71 @@ fn prop_am_codec_roundtrip() {
         let wire = msg.encode().map_err(|e| format!("encode: {e}"))?;
         let back = AmMessage::decode(&wire).map_err(|e| format!("decode: {e}"))?;
         prop_assert_eq!(msg, back);
+        Ok(())
+    });
+}
+
+/// The completion subsystem rides on the codec preserving the reply token,
+/// the HANDLE/REPLY flag bits and the message class bit-exactly for *every*
+/// AM class — a dropped token orphans an `AmHandle` forever.
+#[test]
+fn prop_reply_token_flags_class_roundtrip() {
+    check("reply-token-roundtrip", 2000, |rng| {
+        for &am_type in &[
+            AmType::Short,
+            AmType::Medium,
+            AmType::Long,
+            AmType::LongStrided,
+            AmType::LongVectored,
+        ] {
+            let mut flags = AmFlags::new();
+            if rng.chance(0.5) {
+                flags = flags.with(AmFlags::REPLY);
+            }
+            if rng.chance(0.5) {
+                flags = flags.with(AmFlags::HANDLE);
+            }
+            let token = rng.next_u32();
+            let nargs = rng.below(9) as usize;
+            let args: Vec<u64> = (0..nargs).map(|_| rng.next_u64()).collect();
+            let (desc, payload) = match am_type {
+                AmType::Short => (Descriptor::None, Vec::new()),
+                AmType::Medium => (Descriptor::None, rng.bytes(16)),
+                AmType::Long => {
+                    (Descriptor::Long { dst_addr: rng.next_u64() }, rng.bytes(32))
+                }
+                AmType::LongStrided => (
+                    Descriptor::Strided {
+                        dst_addr: rng.below(1 << 20),
+                        stride: 16,
+                        block_len: 8,
+                        nblocks: 4,
+                    },
+                    rng.bytes(32),
+                ),
+                AmType::LongVectored => (
+                    Descriptor::Vectored { entries: vec![(rng.below(1 << 20), 32)] },
+                    rng.bytes(32),
+                ),
+            };
+            let msg = AmMessage {
+                am_type,
+                flags,
+                src: rng.next_u32() as u16,
+                dst: rng.next_u32() as u16,
+                handler: rng.next_u32() as u8,
+                token,
+                args,
+                desc,
+                payload,
+            };
+            let wire = msg.encode().map_err(|e| format!("encode {am_type}: {e}"))?;
+            let back = AmMessage::decode(&wire).map_err(|e| format!("decode {am_type}: {e}"))?;
+            prop_assert_eq!(back.token, token);
+            prop_assert_eq!(back.flags, msg.flags);
+            prop_assert_eq!(back.am_type, am_type);
+            prop_assert_eq!(back.args, msg.args);
+        }
         Ok(())
     });
 }
