@@ -57,6 +57,7 @@ fn main() -> shoal::Result<()> {
         nodes: args.get_usize("nodes", 2),
         hw,
         chunked: true,
+        ..Default::default()
     };
     println!(
         "heat diffusion: {n}×{n} plate, {} {} workers on {} node(s), epochs of {epoch} iters",

@@ -18,7 +18,8 @@ fn main() -> shoal::Result<()> {
         opt("grid", "grid edge length n (n×n cells)", "130"),
         opt("workers", "worker kernels", "2"),
         opt("nodes", "nodes hosting the workers", "1"),
-        opt("iters", "Jacobi iterations", "200"),
+        opt("iters", "Jacobi iteration budget", "200"),
+        opt("tolerance", "stop at this all-reduced residual (0 = fixed iters)", "0"),
         flag("hw", "hardware workers (GAScore + XLA compute)"),
         flag("chunked", "enable the chunked-transfer extension"),
         flag("no-verify", "skip the serial-oracle check (large grids)"),
@@ -28,6 +29,7 @@ fn main() -> shoal::Result<()> {
         return Ok(());
     }
 
+    let tolerance = args.get_f64("tolerance", 0.0);
     let cfg = JacobiConfig {
         n: args.get_usize("grid", 130),
         iters: args.get_usize("iters", 200),
@@ -35,6 +37,8 @@ fn main() -> shoal::Result<()> {
         nodes: args.get_usize("nodes", 1),
         hw: args.flag("hw"),
         chunked: args.flag("chunked"),
+        tolerance: if tolerance > 0.0 { Some(tolerance as f32) } else { None },
+        ..Default::default()
     };
     println!(
         "jacobi: grid {0}×{0}, {1} iters, {2} {3} worker(s) on {4} node(s)",

@@ -51,7 +51,7 @@ fn main() {
     ))
     .header(["policy", "outcome"]);
     for (label, chunked) in [("reject (paper)", false), ("chunked (extension)", true)] {
-        let cfg = JacobiConfig { n, iters, workers: 2, nodes: 1, hw: false, chunked };
+        let cfg = JacobiConfig { n, iters, workers: 2, chunked, ..Default::default() };
         let outcome = match run_with_grid(&cfg, compute::hot_plate(n, n)) {
             Ok(rep) => format!("ran in {:.3} s", rep.wall.as_secs_f64()),
             Err(e) => format!("unsupported: {e}"),

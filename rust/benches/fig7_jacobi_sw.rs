@@ -46,7 +46,7 @@ fn main() {
         let mut row = vec![n.to_string()];
         let mut srow = vec![n.to_string()];
         for &w in kernel_counts {
-            let cfg = JacobiConfig { n, iters, workers: w, nodes: 1, hw: false, chunked: false };
+            let cfg = JacobiConfig { n, iters, workers: w, ..Default::default() };
             let initial = compute::hot_plate(n, n);
             match run_with_grid(&cfg, initial.clone()) {
                 Ok(rep) => {

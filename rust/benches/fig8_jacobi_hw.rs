@@ -23,7 +23,7 @@ fn main() {
 
     // -- functional validation ---------------------------------------------------
     let n = 258;
-    let cfg = JacobiConfig { n, iters, workers: 2, nodes: 2, hw: true, chunked: false };
+    let cfg = JacobiConfig { n, iters, workers: 2, nodes: 2, hw: true, ..Default::default() };
     let initial = compute::hot_plate(n, n);
     let rep = run_with_grid(&cfg, initial.clone()).expect("hw run");
     rep.verify(&initial).expect("hw verification");
@@ -46,7 +46,7 @@ fn main() {
         ("HW, 1 FPGA, 4 workers", 4, 1, true),
         ("HW, 2 FPGAs, 4 workers", 4, 2, true),
     ] {
-        let cfg = JacobiConfig { n, iters, workers, nodes, hw, chunked: false };
+        let cfg = JacobiConfig { n, iters, workers, nodes, hw, ..Default::default() };
         match run_with_grid(&cfg, compute::hot_plate(n, n)) {
             Ok(rep) => t.row([
                 label.to_string(),

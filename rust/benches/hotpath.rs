@@ -11,6 +11,8 @@
 //! - in-process Long-put throughput
 //! - completion datapath: overlapped handle-based gets vs sequential
 //!   `send + wait_replies(1)` round trips
+//! - collectives: tree all-reduce / tree barrier vs the sequential
+//!   gather-then-broadcast emulation and the counter barrier
 //! - XLA engine jacobi-step execution time per tile shape
 //!
 //! Run: `cargo bench --bench hotpath`
@@ -18,8 +20,10 @@
 //!
 //! Exits nonzero if a datapath check fails (CI bench smoke gates on this):
 //! the batched ≤64 B send stage must sustain ≥2× the messages/sec of the
-//! unbatched stage, and handle-overlapped Long gets must complete at least
-//! as fast as the same number of sequential `wait_replies` round trips.
+//! unbatched stage, handle-overlapped Long gets must complete at least
+//! as fast as the same number of sequential `wait_replies` round trips, and
+//! the tree all-reduce must finish no slower than the sequential
+//! gather-then-broadcast emulation it replaces.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -27,7 +31,8 @@ use std::time::Instant;
 use shoal::am::header::{AmMessage, Descriptor};
 use shoal::am::types::{handler_ids, AmFlags, AmType};
 use shoal::bench::micro::{
-    measure_latency, measure_overlap_gets, measure_throughput, BenchPlacement,
+    measure_collectives, measure_latency, measure_overlap_gets, measure_throughput,
+    BenchPlacement,
 };
 use shoal::bench::report;
 use shoal::galapagos::packet::Packet;
@@ -217,6 +222,50 @@ fn main() {
     );
     if !ok {
         failed_checks.push("handle-overlapped gets slower than sequential wait_replies rounds");
+    }
+
+    println!("== hotpath: collectives (8 kernels, tree vs sequential p2p) ==");
+    let rounds = if quick { 30 } else { 200 };
+    let coll = measure_collectives(8, rounds).unwrap();
+    println!(
+        "  tree all-reduce                        median {:>10}",
+        fmt_ns(coll.allreduce.median())
+    );
+    println!(
+        "  sequential gather+bcast (14 RTTs)      median {:>10}",
+        fmt_ns(coll.seq_gather_bcast.median())
+    );
+    println!(
+        "  tree barrier                           median {:>10}",
+        fmt_ns(coll.tree_barrier.median())
+    );
+    println!(
+        "  counter barrier (master counts)        median {:>10}",
+        fmt_ns(coll.counter_barrier.median())
+    );
+    let coll_ratio = coll.seq_gather_bcast.median() / coll.allreduce.median();
+    println!("      -> tree all-reduce speedup {coll_ratio:.2}× over sequential emulation");
+    let mut ccsv = Table::new("hotpath collectives stage").header(["stage", "value", "unit"]);
+    for (name, v) in [
+        ("allreduce_median", coll.allreduce.median()),
+        ("seq_gather_bcast_median", coll.seq_gather_bcast.median()),
+        ("tree_barrier_median", coll.tree_barrier.median()),
+        ("counter_barrier_median", coll.counter_barrier.median()),
+    ] {
+        ccsv.row([name.into(), format!("{v:.0}"), "ns".to_string()]);
+        csv.row([name.into(), format!("{v:.0}"), "ns".to_string()]);
+    }
+    ccsv.row(["allreduce_speedup".into(), format!("{coll_ratio:.2}"), "x".to_string()]);
+    if let Ok(p) = report::save_csv(&ccsv, "hotpath_collectives") {
+        println!("  csv: {}", p.display());
+    }
+    let ok = coll.allreduce.median() <= coll.seq_gather_bcast.median();
+    println!(
+        "  [{}] tree all-reduce ≤ sequential gather-then-broadcast",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("tree all-reduce slower than sequential gather-then-broadcast");
     }
 
     println!("== hotpath: XLA engine ==");

@@ -288,10 +288,12 @@ impl CompletionTable {
     /// Block until any handle in `hs` reaches a terminal state; returns the
     /// index of the first one found plus the first-consumption flag (see
     /// [`wait`](CompletionTable::wait)). A failed operation surfaces its
-    /// error.
+    /// error. An empty slice is a contract violation — there is nothing
+    /// that could ever complete — and returns [`Error::EmptyWaitSet`]
+    /// immediately instead of blocking out the timeout.
     pub fn wait_any(&self, hs: &[AmHandle], timeout: Duration) -> Result<(usize, bool)> {
         if hs.is_empty() {
-            return Err(Error::Config("wait_any over an empty handle set".into()));
+            return Err(Error::EmptyWaitSet("wait_any"));
         }
         let deadline = std::time::Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
@@ -488,7 +490,16 @@ mod tests {
         let tb = tab.bind_token(b);
         tab.resolve(tb);
         assert_eq!(tab.wait_any(&[a, b], T).unwrap(), (1, true));
-        assert!(tab.wait_any(&[], T).is_err());
+    }
+
+    #[test]
+    fn wait_any_on_empty_set_is_typed_immediate_error() {
+        let tab = CompletionTable::new();
+        // Must fail fast with the dedicated variant, not burn the timeout.
+        let t0 = std::time::Instant::now();
+        let err = tab.wait_any(&[], Duration::from_secs(30)).unwrap_err();
+        assert!(matches!(err, Error::EmptyWaitSet("wait_any")), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "did not fail fast");
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::completion::CompletionTable;
 use super::handlers::HandlerTable;
 use super::header::{AmMessage, Descriptor};
 use super::types::{handler_ids, AmFlags, AmType};
+use crate::collectives::CollectiveState;
 use crate::coordinator::EpochLedger;
 use crate::error::{Error, Result};
 use crate::memory::Segment;
@@ -143,6 +144,10 @@ pub struct KernelRuntime {
     pub completion: Arc<CompletionTable>,
     pub barrier: Arc<BarrierState>,
     pub handlers: Arc<HandlerTable>,
+    /// Tree-collective state machine; COLLECTIVE-handler AMs are consumed
+    /// here (identically on software and hardware ingress paths) instead of
+    /// reaching the kernel stream.
+    pub collective: Arc<CollectiveState>,
     /// Stream of Medium payloads into the user kernel.
     pub medium_tx: Sender<ReceivedMedium>,
 }
@@ -159,6 +164,23 @@ impl KernelRuntime {
 
         if msg.flags.is_reply() {
             return self.process_reply(msg);
+        }
+
+        if msg.handler == handler_ids::COLLECTIVE {
+            // Collective protocol messages are consumed by the state
+            // machine, which may fan the next tree hops through `emit`.
+            // They are asynchronous by construction: no ack is generated,
+            // completion is the collective entry reaching `done` — resolved
+            // only after the fan is handed to egress, so a woken waiter can
+            // never observe completion with hops still unsent.
+            let ingress = self.collective.on_message(&msg)?;
+            for m in ingress.out {
+                emit(m);
+            }
+            if let Some(token) = ingress.resolve {
+                self.completion.resolve(token);
+            }
+            return Ok(());
         }
 
         // A get's reply carries the data; otherwise a plain Short ack.
@@ -370,12 +392,21 @@ mod tests {
     use std::sync::mpsc;
 
     fn runtime(kernel_id: u16) -> (KernelRuntime, std::sync::mpsc::Receiver<ReceivedMedium>) {
+        runtime_in_cluster(kernel_id, vec![kernel_id])
+    }
+
+    fn runtime_in_cluster(
+        kernel_id: u16,
+        ids: Vec<u16>,
+    ) -> (KernelRuntime, std::sync::mpsc::Receiver<ReceivedMedium>) {
         let (tx, rx) = mpsc::channel();
+        let completion = CompletionTable::new();
         (
             KernelRuntime {
                 kernel_id,
                 segment: Segment::new(4096),
-                completion: CompletionTable::new(),
+                collective: CollectiveState::new(kernel_id, ids, Arc::clone(&completion)),
+                completion,
                 barrier: BarrierState::new(),
                 handlers: Arc::new(HandlerTable::software()),
                 medium_tx: tx,
@@ -597,6 +628,52 @@ mod tests {
         rt.barrier.wait_enters(2, 3, Duration::from_millis(100)).unwrap();
         assert_eq!(rt.barrier.cluster_epoch(3), 2);
         assert_eq!(rt.barrier.cluster_epoch(4), 0, "fourth peer never entered");
+    }
+
+    #[test]
+    fn collective_ingress_bypasses_stream_and_fans_down() {
+        use crate::collectives::{
+            coll_dir, encode_u64s, CollDesc, CollectiveKind, Lane, ReduceOp, TreeKind,
+        };
+        // Kernel 0 is the root of {0, 1}: its local contribution is in, so
+        // the child's UP completes the gather and the engine must emit the
+        // DOWN fan — without forwarding anything to the medium stream.
+        let (rt, rx) = runtime_in_cluster(0, vec![0, 1]);
+        let d = CollDesc {
+            kind: CollectiveKind::AllReduce,
+            op: ReduceOp::Sum,
+            lane: Lane::U64,
+            tree: TreeKind::Binomial,
+            root: 0,
+        };
+        let h = rt.completion.create(1);
+        let tok = rt.completion.bind_token(h);
+        let begun = rt.collective.begin(1, d, &encode_u64s(&[10]), tok).unwrap();
+        assert!(begun.out.is_empty() && begun.resolve.is_none());
+
+        let up = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: 1,
+            dst: 0,
+            handler: handler_ids::COLLECTIVE,
+            token: 0,
+            args: vec![coll_dir::UP, 1, d.pack()],
+            desc: Descriptor::None,
+            payload: encode_u64s(&[32]),
+        };
+        let mut emitted = Vec::new();
+        rt.process_ingress(up, &mut |m| emitted.push(m)).unwrap();
+        assert_eq!(emitted.len(), 1, "DOWN fan to the child");
+        assert_eq!(emitted[0].dst, 1);
+        assert_eq!(emitted[0].handler, handler_ids::COLLECTIVE);
+        assert_eq!(emitted[0].args[0], coll_dir::DOWN);
+        assert!(rx.try_recv().is_err(), "collective AMs must not reach the stream");
+        assert!(rt.completion.test(h).unwrap().is_some(), "root's handle resolved");
+        assert_eq!(
+            crate::collectives::decode_u64s(&rt.collective.take_result(1).unwrap()).unwrap(),
+            vec![42]
+        );
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::header::AmMessage;
 use crate::error::{Error, Result};
 use crate::memory::Segment;
 
-pub use super::types::handler_ids::{BARRIER, NOP, REPLY, USER_BASE};
+pub use super::types::handler_ids::{BARRIER, COLLECTIVE, NOP, REPLY, USER_BASE};
 
 /// What a user handler sees when invoked.
 pub struct HandlerArgs<'a> {

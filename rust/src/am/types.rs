@@ -112,6 +112,11 @@ pub mod handler_ids {
     pub const BARRIER: u8 = 1;
     /// No-op handler for data-only messages.
     pub const NOP: u8 = 2;
+    /// Collective-tree protocol messages (broadcast / reduce / all-reduce
+    /// fan up/down) — consumed by the runtime engine on both the software
+    /// handler-thread and GAScore ingress paths, never by user handlers or
+    /// the kernel stream.
+    pub const COLLECTIVE: u8 = 3;
     /// First id available for user-registered handlers.
     pub const USER_BASE: u8 = 16;
 }

@@ -35,6 +35,7 @@ use super::compute::JacobiCompute;
 use super::partition::{SegmentLayout, Strip};
 use crate::am::completion::AmHandle;
 use crate::am::handlers;
+use crate::collectives::ReduceOp;
 use crate::error::Result;
 use crate::shoal_node::api::ShoalKernel;
 
@@ -43,11 +44,27 @@ use crate::shoal_node::api::ShoalKernel;
 pub struct WorkerReport {
     pub worker: usize,
     pub compute: Duration,
-    /// Halo sends + handle waits + barriers.
+    /// Halo sends + handle waits + barriers + convergence all-reduces.
     pub sync: Duration,
     pub iters_done: usize,
     /// Iterations that overlapped the interior sweep with the halo puts.
     pub overlapped_iters: usize,
+}
+
+/// Max |new − old| over paired cells — the per-sweep residual a tolerance
+/// run all-reduces.
+fn max_abs_diff(old: &[f32], new: &[f32]) -> f32 {
+    old.iter().zip(new).fold(0f32, |m, (a, b)| m.max((a - b).abs()))
+}
+
+/// Every K-th sweep of a tolerance run: all-reduce the max residual across
+/// the cluster (control contributes 0.0) and decide — identically on every
+/// kernel, because all-reduce hands everyone the same fold — whether to
+/// stop. Returns `true` when converged.
+fn converged_globally(k: &mut ShoalKernel, local_residual: f32, tol: f32) -> Result<bool> {
+    let ch = k.all_reduce_f64(ReduceOp::Max, &[local_residual as f64])?;
+    let global = k.collective_wait_f64(ch)?;
+    Ok(global.first().copied().unwrap_or(f64::MAX) <= tol as f64)
 }
 
 /// Kernel id of worker `w` (kernel 0 is the control kernel).
@@ -97,6 +114,7 @@ pub fn worker_kernel(
     layout: SegmentLayout,
     compute: Arc<dyn JacobiCompute>,
     iters: usize,
+    conv: Option<(f32, usize)>,
     report_tx: Sender<WorkerReport>,
 ) -> Result<()> {
     let rows = layout.rows;
@@ -112,9 +130,14 @@ pub fn worker_kernel(
     let mut compute_t = Duration::ZERO;
     let mut sync_t = Duration::ZERO;
     let mut overlapped_iters = 0usize;
+    let mut iters_done = 0usize;
+    // Residual tracking costs an extra pass over the tile; only pay for it
+    // when a tolerance is set.
+    let track = conv.is_some();
+    let mut residual = 0f32;
     let mut padded = vec![0f32; (rows + 2) * cols];
 
-    for _ in 0..iters {
+    while iters_done < iters {
         if pipelined {
             // -- nonblocking halo exchange ------------------------------------
             let t0 = Instant::now();
@@ -152,6 +175,14 @@ pub fn worker_kernel(
             seg.write_f32(layout.tile_row(0), &top)?;
             seg.write_f32(layout.tile_row(1), &interior)?;
             seg.write_f32(layout.tile_row(rows - 1), &bot)?;
+            if track {
+                // Old tile rows are still in the padded buffer (offset by
+                // one halo row): rows 0, 1..rows-1, rows-1 pair with the
+                // fresh top / interior / bottom sub-sweeps.
+                residual = max_abs_diff(&padded[cols..2 * cols], &top)
+                    .max(max_abs_diff(&padded[2 * cols..rows * cols], &interior))
+                    .max(max_abs_diff(&padded[rows * cols..(rows + 1) * cols], &bot));
+            }
             compute_t += t3.elapsed();
             overlapped_iters += 1;
         } else {
@@ -172,6 +203,9 @@ pub fn worker_kernel(
             seg.read_f32_into(layout.tile(), mid)?;
             seg.read_f32_into(layout.halo_bot(), bot)?;
             let new_tile = compute.step(rows, cols, &padded)?;
+            if track {
+                residual = max_abs_diff(&padded[cols..(rows + 1) * cols], &new_tile);
+            }
             seg.write_f32(layout.tile(), &new_tile)?;
             compute_t += t1.elapsed();
         }
@@ -179,6 +213,18 @@ pub fn worker_kernel(
         let t2 = Instant::now();
         k.barrier()?; // everyone's tile updated before next exchange
         sync_t += t2.elapsed();
+        iters_done += 1;
+
+        if let Some((tol, every)) = conv {
+            if iters_done % every == 0 {
+                let t3 = Instant::now();
+                let stop = converged_globally(&mut k, residual, tol)?;
+                sync_t += t3.elapsed();
+                if stop {
+                    break; // every kernel sees the same fold and breaks together
+                }
+            }
+        }
     }
 
     // Gather phase: control long-gets our tile; stay alive until it signals
@@ -189,7 +235,7 @@ pub fn worker_kernel(
         worker: w,
         compute: compute_t,
         sync: sync_t,
-        iters_done: iters,
+        iters_done,
         overlapped_iters,
     });
     Ok(())
@@ -198,13 +244,17 @@ pub fn worker_kernel(
 /// What the control kernel returns.
 #[derive(Clone, Debug)]
 pub struct ControlReport {
-    /// The final grid (n × n, row-major) after `iters` iterations.
+    /// The final grid (n × n, row-major) after the executed iterations.
     pub grid: Vec<f32>,
     pub wall: Duration,
     /// Time spent in the initial distribution.
     pub distribute: Duration,
     /// Time spent gathering the result.
     pub gather: Duration,
+    /// Sweeps actually executed.
+    pub iters_done: usize,
+    /// True when a tolerance run stopped at convergence.
+    pub converged: bool,
 }
 
 /// The control kernel function: distribute → iterate barriers → gather.
@@ -214,6 +264,7 @@ pub fn control_kernel(
     n: usize,
     strips: Vec<Strip>,
     iters: usize,
+    conv: Option<(f32, usize)>,
 ) -> Result<ControlReport> {
     let cols = n;
     let workers = strips.len();
@@ -262,9 +313,22 @@ pub fn control_kernel(
     k.barrier()?; // workers may start
 
     // -- iteration barriers (control participates as barrier master) ----------
-    for _ in 0..iters {
+    // A tolerance run also joins every K-th all-reduce: the control kernel
+    // holds no tile, so it contributes a zero residual and simply learns the
+    // same global max the workers do — which keeps every kernel's collective
+    // sequence aligned and lets control stop in the same sweep.
+    let mut iters_done = 0usize;
+    let mut converged = false;
+    while iters_done < iters {
         k.barrier()?; // halos written
         k.barrier()?; // tiles updated
+        iters_done += 1;
+        if let Some((tol, every)) = conv {
+            if iters_done % every == 0 && converged_globally(&mut k, 0.0, tol)? {
+                converged = true;
+                break;
+            }
+        }
     }
 
     // -- gather ----------------------------------------------------------------
@@ -294,5 +358,7 @@ pub fn control_kernel(
         wall: t_start.elapsed(),
         distribute,
         gather,
+        iters_done,
+        converged,
     })
 }

@@ -7,9 +7,7 @@
 //!     n: 256,
 //!     iters: 64,
 //!     workers: 4,
-//!     nodes: 1,
-//!     hw: false,
-//!     chunked: false,
+//!     ..JacobiConfig::default()
 //! }).unwrap();
 //! println!("{} s", report.wall.as_secs_f64());
 //! ```
@@ -48,6 +46,30 @@ pub struct JacobiConfig {
     /// the fix for AMs beyond the packet cap but leaves it unimplemented;
     /// `false` reproduces the paper's failures).
     pub chunked: bool,
+    /// Stop early once the global residual (max |cell change| of one sweep,
+    /// all-reduced across every worker) drops to this value. `None`
+    /// reproduces the paper's fixed-iteration schedule; `iters` stays the
+    /// hard budget either way.
+    pub tolerance: Option<f32>,
+    /// Sweeps between convergence checks — the `all_reduce(max residual)`
+    /// runs every K-th iteration (`0` = the default of 8). Only meaningful
+    /// with `tolerance`.
+    pub check_every: usize,
+}
+
+impl Default for JacobiConfig {
+    fn default() -> Self {
+        JacobiConfig {
+            n: 130,
+            iters: 100,
+            workers: 2,
+            nodes: 1,
+            hw: false,
+            chunked: false,
+            tolerance: None,
+            check_every: 0,
+        }
+    }
 }
 
 impl JacobiConfig {
@@ -62,6 +84,12 @@ impl JacobiConfig {
             _ => crate::config::TransportKind::Local,
         }
     }
+
+    /// Convergence plumbing handed to every kernel: `(tolerance, period)`.
+    fn convergence(&self) -> Option<(f32, usize)> {
+        self.tolerance
+            .map(|t| (t, if self.check_every == 0 { 8 } else { self.check_every }))
+    }
 }
 
 /// The result of a run.
@@ -75,15 +103,22 @@ pub struct JacobiReport {
     pub gather: Duration,
     /// Max worker compute time (the critical path).
     pub compute: Duration,
-    /// Max worker sync (halo waits + barriers) time.
+    /// Max worker sync (halo waits + barriers + convergence all-reduces)
+    /// time.
     pub sync: Duration,
+    /// Sweeps actually executed (== `config.iters` unless a `tolerance`
+    /// run converged early).
+    pub iters_done: usize,
+    /// True when a `tolerance` run stopped because the all-reduced global
+    /// residual reached the tolerance.
+    pub converged: bool,
     pub worker_reports: Vec<WorkerReport>,
 }
 
 impl JacobiReport {
     /// Compare against the serial oracle (small grids; tests).
     pub fn verify(&self, initial: &[f32]) -> Result<()> {
-        let want = compute::jacobi_serial(initial, self.config.n, self.config.n, self.config.iters);
+        let want = compute::jacobi_serial(initial, self.config.n, self.config.n, self.iters_done);
         if want.len() != self.grid.len() {
             return Err(Error::Config("verify: size mismatch".into()));
         }
@@ -205,8 +240,9 @@ pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport>
         };
         let wtx = wtx.clone();
         let (workers, iters, wi) = (cfg.workers, cfg.iters, w);
+        let conv = cfg.convergence();
         cluster.run_kernel(kernels::worker_kid(w), move |k| {
-            if let Err(e) = worker_kernel(k, wi, workers, layout, compute, iters, wtx) {
+            if let Err(e) = worker_kernel(k, wi, workers, layout, compute, iters, conv, wtx) {
                 // The error surfaces through the missing report + join.
                 log::error!("worker {wi}: {e}");
                 panic!("worker {wi} failed: {e}");
@@ -216,8 +252,9 @@ pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport>
     {
         let strips_v = strips_v.clone();
         let (n, iters) = (cfg.n, cfg.iters);
+        let conv = cfg.convergence();
         cluster.run_kernel(0, move |k| {
-            let _ = ctx.send(control_kernel(k, grid, n, strips_v, iters));
+            let _ = ctx.send(control_kernel(k, grid, n, strips_v, iters, conv));
         });
     }
 
@@ -240,6 +277,8 @@ pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport>
         gather: control.gather,
         compute: compute_max,
         sync: sync_max,
+        iters_done: control.iters_done,
+        converged: control.converged,
         worker_reports,
     })
 }

@@ -10,6 +10,7 @@
 use std::time::Instant;
 
 use crate::am::handlers;
+use crate::collectives::ReduceOp;
 use crate::config::{ClusterBuilder, ClusterSpec, Platform, TransportKind};
 use crate::error::Result;
 use crate::prelude::ShoalCluster;
@@ -302,6 +303,107 @@ pub fn measure_overlap_gets(
     Ok(rates)
 }
 
+/// Latency summaries (ns/op) of the tree collectives against their
+/// point-to-point emulation over the same cluster.
+#[derive(Clone, Debug)]
+pub struct CollectiveLatency {
+    /// One `all_reduce_u64(Sum, [1])` across every kernel.
+    pub allreduce: Summary,
+    /// The paper-primitive emulation of an all-reduce: kernel 0 long-gets 8
+    /// bytes from every peer, then long-puts 8 bytes back to every peer, one
+    /// blocking round trip at a time — `2(n−1)` sequential round trips.
+    pub seq_gather_bcast: Summary,
+    /// One `barrier_tree()` across every kernel.
+    pub tree_barrier: Summary,
+    /// The paper's counter barrier (master counts ENTERs, fans RELEASE).
+    pub counter_barrier: Summary,
+}
+
+/// Measure collective latency on an in-process single-node cluster of
+/// `kernels` software kernels, `rounds` timed rounds per stage. Kernel 0
+/// does the timing; every kernel participates in the collective stages,
+/// while the sequential-emulation stage needs only kernel 0 (gets and puts
+/// are served by the peers' handler threads — exactly why the emulation
+/// burns `2(n−1)` round trips on one kernel's critical path).
+pub fn measure_collectives(kernels: u16, rounds: usize) -> Result<CollectiveLatency> {
+    let mut b = ClusterBuilder::new();
+    b.default_segment(64 << 10);
+    let n0 = b.node("coll", Platform::Sw);
+    for _ in 0..kernels {
+        b.kernel(n0);
+    }
+    let spec = b.build()?;
+    let cluster = ShoalCluster::launch(&spec)?;
+    let n = kernels as u64;
+    let (tx, rx) = std::sync::mpsc::channel::<CollectiveLatency>();
+
+    for kid in 1..kernels {
+        cluster.run_kernel(kid, move |mut k| {
+            for _ in 0..rounds {
+                let ch = k.all_reduce_u64(ReduceOp::Sum, &[1]).unwrap();
+                let v = k.collective_wait_u64(ch).unwrap();
+                assert_eq!(v, vec![n]);
+            }
+            for _ in 0..rounds {
+                k.barrier_tree().unwrap();
+            }
+            for _ in 0..rounds {
+                k.barrier().unwrap();
+            }
+            // Released once kernel 0 finishes the sequential stage.
+            k.barrier().unwrap();
+        });
+    }
+
+    cluster.run_kernel(0, move |mut k| {
+        let mut r = CollectiveLatency {
+            allreduce: Summary::new(),
+            seq_gather_bcast: Summary::new(),
+            tree_barrier: Summary::new(),
+            counter_barrier: Summary::new(),
+        };
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            let ch = k.all_reduce_u64(ReduceOp::Sum, &[1]).unwrap();
+            let v = k.collective_wait_u64(ch).unwrap();
+            r.allreduce.push(t0.elapsed().as_nanos() as f64);
+            assert_eq!(v, vec![n]);
+        }
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            k.barrier_tree().unwrap();
+            r.tree_barrier.push(t0.elapsed().as_nanos() as f64);
+        }
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            k.barrier().unwrap();
+            r.counter_barrier.push(t0.elapsed().as_nanos() as f64);
+        }
+        // Sequential gather-then-broadcast emulation.
+        k.mem().write(0, &[0u8; 16]).unwrap();
+        for _ in 0..rounds {
+            let t0 = Instant::now();
+            for peer in 1..kernels {
+                let h = k.am_long_get(peer, handlers::NOP, 0, 8, 8).unwrap();
+                k.wait(h).unwrap();
+            }
+            for peer in 1..kernels {
+                let h = k.am_long(peer, handlers::NOP, &[], &[7u8; 8], 8).unwrap();
+                k.wait(h).unwrap();
+            }
+            r.seq_gather_bcast.push(t0.elapsed().as_nanos() as f64);
+        }
+        k.barrier().unwrap(); // release the peers
+        tx.send(r).unwrap();
+    });
+
+    let r = rx
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .map_err(|_| crate::error::Error::Timeout("collectives bench"))?;
+    cluster.join()?;
+    Ok(r)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -354,6 +456,17 @@ mod tests {
     fn overlap_gets_measures_both_modes() {
         let (seq, ovl) = measure_overlap_gets(BenchPlacement::sw_same(), 1024, 50).unwrap();
         assert!(seq > 0.0 && ovl > 0.0, "rates must be positive: {seq} {ovl}");
+    }
+
+    #[test]
+    fn collectives_bench_measures_all_stages() {
+        let r = measure_collectives(4, 10).unwrap();
+        assert_eq!(r.allreduce.count(), 10);
+        assert_eq!(r.seq_gather_bcast.count(), 10);
+        assert_eq!(r.tree_barrier.count(), 10);
+        assert_eq!(r.counter_barrier.count(), 10);
+        assert!(r.allreduce.median() > 0.0);
+        assert!(r.seq_gather_bcast.median() > 0.0);
     }
 
     #[test]

@@ -1,0 +1,365 @@
+//! Tree-based collectives: broadcast, reduce, all-reduce, tree barrier.
+//!
+//! The paper's only cluster-wide primitive is the counter-based barrier
+//! (§III-A): the master counts ENTER messages and broadcasts RELEASE, which
+//! is O(n) at the master and carries no data. This subsystem generalizes it
+//! the way DART-MPI and the THeGASNet line do: collectives fan payloads
+//! up/down a [`CollectiveTree`] over kernel ids, as Active-Message handler
+//! state machines ([`CollectiveState`]) that run identically on the software
+//! handler-thread and simulated-hardware GAScore ingress paths.
+//!
+//! ```text
+//!            gather (UP)                scatter (DOWN)
+//!         7  6  5     3                 ┌── 1 ── 3
+//!          \ |   \    |                 0 ── 2
+//!        4──┴──── 2   1                 └── 4 ── 5, 6
+//!         \______ | __/                        └─ 7
+//!                 0          root 0 combines, then fans the result down
+//! ```
+//!
+//! Each collective call returns a [`CollectiveHandle`] wrapping an ordinary
+//! [`AmHandle`] in the kernel's completion table — the first primitive that
+//! composes *many* AM operations into one logical handle. It therefore
+//! composes with `wait`/`test`/`wait_all`/`wait_any` like any single
+//! operation; `collective_wait` additionally returns the result bytes and
+//! converts a timeout into [`Error::OperationFailed`] naming the straggler
+//! kernels.
+//!
+//! Mapping to the paper's primitives:
+//!
+//! | collective     | generalizes                 | result lands on        |
+//! |----------------|-----------------------------|------------------------|
+//! | `bcast`        | master's RELEASE fan-out    | every kernel           |
+//! | `reduce`       | master counting ENTERs      | the root               |
+//! | `all_reduce`   | barrier = reduce + bcast    | every kernel           |
+//! | `barrier_tree` | the barrier itself          | (no payload)           |
+
+pub mod state;
+pub mod tree;
+
+pub use state::CollectiveState;
+pub use tree::{CollectiveTree, TreeKind};
+
+use crate::am::completion::AmHandle;
+use crate::error::{Error, Result};
+
+/// Which collective an entry/message belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Root's payload delivered verbatim to every kernel.
+    Bcast,
+    /// Element-wise fold of every kernel's contribution, result at the root.
+    Reduce,
+    /// Reduce followed by a broadcast of the result — every kernel gets it.
+    AllReduce,
+    /// An all-reduce with an empty payload: pure synchronization.
+    Barrier,
+}
+
+impl CollectiveKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            CollectiveKind::Bcast => 0,
+            CollectiveKind::Reduce => 1,
+            CollectiveKind::AllReduce => 2,
+            CollectiveKind::Barrier => 3,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<CollectiveKind> {
+        Ok(match v {
+            0 => CollectiveKind::Bcast,
+            1 => CollectiveKind::Reduce,
+            2 => CollectiveKind::AllReduce,
+            3 => CollectiveKind::Barrier,
+            other => return Err(Error::MalformedAm(format!("bad collective kind {other}"))),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CollectiveKind::Bcast => "bcast",
+            CollectiveKind::Reduce => "reduce",
+            CollectiveKind::AllReduce => "all-reduce",
+            CollectiveKind::Barrier => "tree-barrier",
+        }
+    }
+}
+
+/// Element-wise combining operator of a reduction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// Wrapping sum for `u64` lanes, IEEE addition for `f64` lanes.
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    fn to_u8(self) -> u8 {
+        match self {
+            ReduceOp::Sum => 0,
+            ReduceOp::Min => 1,
+            ReduceOp::Max => 2,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<ReduceOp> {
+        Ok(match v {
+            0 => ReduceOp::Sum,
+            1 => ReduceOp::Min,
+            2 => ReduceOp::Max,
+            other => return Err(Error::MalformedAm(format!("bad reduce op {other}"))),
+        })
+    }
+}
+
+/// Element type of a reduction payload (8-byte little-endian lanes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    U64,
+    F64,
+}
+
+impl Lane {
+    fn to_u8(self) -> u8 {
+        match self {
+            Lane::U64 => 0,
+            Lane::F64 => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Lane> {
+        Ok(match v {
+            0 => Lane::U64,
+            1 => Lane::F64,
+            other => return Err(Error::MalformedAm(format!("bad lane type {other}"))),
+        })
+    }
+}
+
+/// Wire descriptor of a collective, packed into one handler argument so
+/// every message of the collective is self-describing (entries can be
+/// created by whichever side — API call or ingress — sees the collective
+/// first).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CollDesc {
+    pub kind: CollectiveKind,
+    pub op: ReduceOp,
+    pub lane: Lane,
+    pub tree: TreeKind,
+    pub root: u16,
+}
+
+impl CollDesc {
+    pub fn pack(&self) -> u64 {
+        (self.kind.to_u8() as u64)
+            | (self.op.to_u8() as u64) << 8
+            | (self.lane.to_u8() as u64) << 16
+            | (self.tree.to_u8() as u64) << 24
+            | (self.root as u64) << 32
+    }
+
+    pub fn unpack(w: u64) -> Result<CollDesc> {
+        Ok(CollDesc {
+            kind: CollectiveKind::from_u8(w as u8)?,
+            op: ReduceOp::from_u8((w >> 8) as u8)?,
+            lane: Lane::from_u8((w >> 16) as u8)?,
+            tree: TreeKind::from_u8((w >> 24) as u8)?,
+            root: (w >> 32) as u16,
+        })
+    }
+}
+
+/// Message direction (handler argument 0 of a COLLECTIVE AM).
+pub mod coll_dir {
+    /// Child → parent combined contribution (gather phase).
+    pub const UP: u64 = 0;
+    /// Parent → child payload/result (scatter phase).
+    pub const DOWN: u64 = 1;
+}
+
+/// Handle to one in-flight collective operation.
+///
+/// `am` is a live entry in the issuing kernel's completion table, so the
+/// handle composes with `wait`/`test`/`wait_all`/`wait_any` exactly like a
+/// point-to-point operation; use
+/// [`collective_wait`](crate::shoal_node::api::ShoalKernel::collective_wait)
+/// to also retrieve the result bytes (and to get straggler-naming timeout
+/// errors).
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveHandle {
+    pub am: AmHandle,
+    /// Cluster-wide collective sequence number (kernels must issue
+    /// collectives in the same order, the standard MPI contract).
+    pub seq: u64,
+    pub kind: CollectiveKind,
+}
+
+impl From<CollectiveHandle> for AmHandle {
+    fn from(ch: CollectiveHandle) -> AmHandle {
+        ch.am
+    }
+}
+
+/// Encode `u64` lanes little-endian (the GAScore word order).
+pub fn encode_u64s(vals: &[u64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian `u64` lanes.
+pub fn decode_u64s(bytes: &[u8]) -> Result<Vec<u64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(Error::BadDescriptor(format!(
+            "{} bytes is not a whole number of 8-byte lanes",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+        .collect())
+}
+
+/// Encode `f64` lanes little-endian.
+pub fn encode_f64s(vals: &[f64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 8);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Decode little-endian `f64` lanes.
+pub fn decode_f64s(bytes: &[u8]) -> Result<Vec<f64>> {
+    if bytes.len() % 8 != 0 {
+        return Err(Error::BadDescriptor(format!(
+            "{} bytes is not a whole number of 8-byte lanes",
+            bytes.len()
+        )));
+    }
+    Ok(bytes
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().expect("chunks_exact(8)")))
+        .collect())
+}
+
+/// Element-wise fold of `other` into `acc` (equal lengths, 8-byte lanes).
+pub fn combine(op: ReduceOp, lane: Lane, acc: &mut [u8], other: &[u8]) -> Result<()> {
+    if acc.len() != other.len() {
+        return Err(Error::BadDescriptor(format!(
+            "collective contribution of {} bytes ≠ accumulator of {} bytes",
+            other.len(),
+            acc.len()
+        )));
+    }
+    if acc.len() % 8 != 0 {
+        return Err(Error::BadDescriptor(format!(
+            "reduction payload of {} bytes is not a whole number of 8-byte lanes",
+            acc.len()
+        )));
+    }
+    for i in (0..acc.len()).step_by(8) {
+        let a8: [u8; 8] = acc[i..i + 8].try_into().expect("8-byte lane");
+        let b8: [u8; 8] = other[i..i + 8].try_into().expect("8-byte lane");
+        let out = match lane {
+            Lane::U64 => {
+                let (a, b) = (u64::from_le_bytes(a8), u64::from_le_bytes(b8));
+                let r = match op {
+                    ReduceOp::Sum => a.wrapping_add(b),
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                };
+                r.to_le_bytes()
+            }
+            Lane::F64 => {
+                let (a, b) = (f64::from_le_bytes(a8), f64::from_le_bytes(b8));
+                let r = match op {
+                    ReduceOp::Sum => a + b,
+                    ReduceOp::Min => a.min(b),
+                    ReduceOp::Max => a.max(b),
+                };
+                r.to_le_bytes()
+            }
+        };
+        acc[i..i + 8].copy_from_slice(&out);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn desc_packs_and_unpacks() {
+        for kind in [
+            CollectiveKind::Bcast,
+            CollectiveKind::Reduce,
+            CollectiveKind::AllReduce,
+            CollectiveKind::Barrier,
+        ] {
+            for op in [ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max] {
+                for lane in [Lane::U64, Lane::F64] {
+                    for tree in [TreeKind::Binomial, TreeKind::Binary] {
+                        let d = CollDesc { kind, op, lane, tree, root: 4711 };
+                        assert_eq!(CollDesc::unpack(d.pack()).unwrap(), d);
+                    }
+                }
+            }
+        }
+        assert!(CollDesc::unpack(0xFF).is_err());
+    }
+
+    #[test]
+    fn lane_codecs_roundtrip() {
+        let u = vec![0u64, 1, u64::MAX, 42];
+        assert_eq!(decode_u64s(&encode_u64s(&u)).unwrap(), u);
+        let f = vec![0.0f64, -1.5, f64::MAX, 1e-300];
+        assert_eq!(decode_f64s(&encode_f64s(&f)).unwrap(), f);
+        assert!(decode_u64s(&[1, 2, 3]).is_err());
+        assert!(decode_f64s(&[0; 9]).is_err());
+    }
+
+    #[test]
+    fn combine_folds_elementwise() {
+        let mut acc = encode_u64s(&[1, 10, 100]);
+        combine(ReduceOp::Sum, Lane::U64, &mut acc, &encode_u64s(&[2, 20, 200])).unwrap();
+        assert_eq!(decode_u64s(&acc).unwrap(), vec![3, 30, 300]);
+
+        let mut acc = encode_u64s(&[5, 5]);
+        combine(ReduceOp::Max, Lane::U64, &mut acc, &encode_u64s(&[3, 9])).unwrap();
+        assert_eq!(decode_u64s(&acc).unwrap(), vec![5, 9]);
+
+        let mut acc = encode_f64s(&[1.5, -2.0]);
+        combine(ReduceOp::Min, Lane::F64, &mut acc, &encode_f64s(&[0.5, 7.0])).unwrap();
+        assert_eq!(decode_f64s(&acc).unwrap(), vec![0.5, -2.0]);
+    }
+
+    #[test]
+    fn combine_sum_wraps_u64() {
+        let mut acc = encode_u64s(&[u64::MAX]);
+        combine(ReduceOp::Sum, Lane::U64, &mut acc, &encode_u64s(&[2])).unwrap();
+        assert_eq!(decode_u64s(&acc).unwrap(), vec![1]);
+    }
+
+    #[test]
+    fn combine_rejects_mismatched_shapes() {
+        let mut acc = encode_u64s(&[1]);
+        assert!(combine(ReduceOp::Sum, Lane::U64, &mut acc, &encode_u64s(&[1, 2])).is_err());
+        let mut odd = vec![0u8; 12];
+        let other = vec![0u8; 12];
+        assert!(combine(ReduceOp::Sum, Lane::U64, &mut odd, &other).is_err());
+    }
+
+    #[test]
+    fn empty_payload_combines_trivially() {
+        let mut acc: Vec<u8> = vec![];
+        combine(ReduceOp::Sum, Lane::U64, &mut acc, &[]).unwrap();
+        assert!(acc.is_empty());
+    }
+}

@@ -1,0 +1,735 @@
+//! The per-kernel collective state machine.
+//!
+//! One [`CollectiveState`] lives next to each kernel's
+//! [`CompletionTable`](crate::am::completion::CompletionTable) and is driven
+//! from two sides:
+//!
+//! - the **API thread** calls [`begin`](CollectiveState::begin) when the
+//!   kernel issues a collective — it folds the local contribution in and
+//!   returns any tree messages the kernel must send;
+//! - the **ingress thread** (software handler thread or GAScore pipeline)
+//!   calls [`on_message`](CollectiveState::on_message) for every received
+//!   COLLECTIVE AM — it folds child contributions, fans results down, and
+//!   returns the next hop's messages for the runtime to emit.
+//!
+//! Entries walk the same state machine on every kernel:
+//!
+//! ```text
+//!   gather:  local value + every child subtree folded into `acc`
+//!      │          non-root: send UP(acc) to parent ──► (reduce: done)
+//!      └── root: result = acc ──► bcast/all-reduce: fan DOWN(result)
+//!   scatter: DOWN(result) received ──► forward to children ──► done
+//! ```
+//!
+//! Completion is delegated to the completion table: `begin` binds a wire
+//! token, and the entry resolves it exactly once when it reaches `done`, so
+//! the returned handle behaves like any other `AmHandle`. Out-of-order
+//! arrival is legal — a child's UP (or the root's DOWN of a broadcast) may
+//! land before the local kernel has called the collective; whichever side
+//! sees the sequence number first creates the entry from the message's
+//! self-describing [`CollDesc`].
+
+use std::collections::hash_map::Entry as MapEntry;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::tree::CollectiveTree;
+use super::{coll_dir, combine, CollDesc, CollectiveKind};
+use crate::am::completion::CompletionTable;
+use crate::am::header::{AmMessage, Descriptor};
+use crate::am::types::{handler_ids, AmFlags, AmType};
+use crate::coordinator::EpochLedger;
+use crate::error::{Error, Result};
+
+/// Done-and-resolved entries older than this many collectives are reclaimed
+/// when the map grows past it. They exist only when a collective was
+/// completed through the generic `wait`/`test`/`wait_all`/`wait_any`
+/// primitives and its result was never fetched with
+/// `collective_wait`/`collective_test` — fetch results within this many
+/// subsequent collectives or lose them (the completion itself is unaffected).
+const RESOLVED_KEEP: u64 = 1024;
+
+/// One collective's per-kernel progress.
+struct Entry {
+    desc: CollDesc,
+    /// Direct children whose subtree contribution has not arrived yet.
+    awaiting: Vec<u16>,
+    children: Vec<u16>,
+    parent: Option<u16>,
+    /// Combined contributions so far (gather kinds only).
+    acc: Option<Vec<u8>>,
+    local_done: bool,
+    up_sent: bool,
+    /// Final bytes: root's payload (bcast), the fold (all-reduce everywhere,
+    /// reduce at the root), or empty.
+    result: Option<Vec<u8>>,
+    done: bool,
+    /// Completion-table token bound by the local `begin`.
+    token: Option<u32>,
+    resolved: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    /// Coordinator view: highest collective sequence each kernel has
+    /// contributed to (names stragglers per-collective on timeouts).
+    ledger: EpochLedger,
+}
+
+/// Outcome of one ingress collective message: the next tree hops to emit,
+/// then the completion token to resolve.
+pub struct CollectiveIngress {
+    /// Fan messages (UP to the parent or DOWN to the children).
+    pub out: Vec<AmMessage>,
+    /// Completion-table token to resolve *after* `out` is handed to egress.
+    pub resolve: Option<u32>,
+}
+
+/// Per-kernel collective state (see module docs).
+pub struct CollectiveState {
+    kernel_id: u16,
+    /// Sorted cluster kernel ids (collectives span the whole cluster).
+    ids: Vec<u16>,
+    completion: Arc<CompletionTable>,
+    inner: Mutex<Inner>,
+    /// Trees are pure functions of (root, kind) over the fixed id set;
+    /// cache them so per-collective entry creation on the sync critical
+    /// path doesn't re-sort the whole id list every time. Always locked
+    /// *after* `inner` (the only nesting is inside `make_entry`).
+    trees: Mutex<HashMap<(u16, super::TreeKind), Arc<CollectiveTree>>>,
+}
+
+impl CollectiveState {
+    pub fn new(
+        kernel_id: u16,
+        mut ids: Vec<u16>,
+        completion: Arc<CompletionTable>,
+    ) -> Arc<CollectiveState> {
+        ids.sort_unstable();
+        ids.dedup();
+        Arc::new(CollectiveState {
+            kernel_id,
+            ids,
+            completion,
+            inner: Mutex::new(Inner::default()),
+            trees: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Sorted ids of every kernel participating in collectives.
+    pub fn kernel_ids(&self) -> &[u16] {
+        &self.ids
+    }
+
+    /// Build one tree-protocol AM (Medium, asynchronous — internal fan
+    /// messages never generate acks; completion is the state machine's job).
+    fn coll_msg(
+        &self,
+        dst: u16,
+        dir: u64,
+        seq: u64,
+        desc: CollDesc,
+        payload: Vec<u8>,
+    ) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: self.kernel_id,
+            dst,
+            handler: handler_ids::COLLECTIVE,
+            token: 0,
+            args: vec![dir, seq, desc.pack()],
+            desc: Descriptor::None,
+            payload,
+        }
+    }
+
+    /// The (cached) spanning tree for a root/kind pair.
+    fn tree_for(&self, root: u16, kind: super::TreeKind) -> Result<Arc<CollectiveTree>> {
+        let mut g = self.trees.lock().unwrap();
+        match g.entry((root, kind)) {
+            MapEntry::Occupied(o) => Ok(Arc::clone(o.get())),
+            MapEntry::Vacant(slot) => {
+                let t = Arc::new(CollectiveTree::new(self.ids.clone(), root, kind)?);
+                Ok(Arc::clone(slot.insert(t)))
+            }
+        }
+    }
+
+    fn make_entry(&self, desc: CollDesc) -> Result<Entry> {
+        let tree = self.tree_for(desc.root, desc.tree)?;
+        let children = tree.children(self.kernel_id)?;
+        let parent = tree.parent(self.kernel_id)?;
+        Ok(Entry {
+            desc,
+            awaiting: children.clone(),
+            children,
+            parent,
+            acc: None,
+            local_done: false,
+            up_sent: false,
+            result: None,
+            done: false,
+            token: None,
+            resolved: false,
+        })
+    }
+
+    /// Advance the gather phase: once the local value and every child
+    /// subtree are folded in, send UP to the parent — or, at the root,
+    /// finish and (for all-reduce/barrier) fan the result DOWN.
+    fn advance_gather(&self, seq: u64, e: &mut Entry, out: &mut Vec<AmMessage>) {
+        if e.desc.kind == CollectiveKind::Bcast || e.up_sent || e.done {
+            return;
+        }
+        if !e.local_done || !e.awaiting.is_empty() {
+            return;
+        }
+        let acc = e.acc.clone().unwrap_or_default();
+        match e.parent {
+            None => {
+                // Root: the fold is complete.
+                if matches!(e.desc.kind, CollectiveKind::AllReduce | CollectiveKind::Barrier) {
+                    for &c in &e.children {
+                        out.push(self.coll_msg(c, coll_dir::DOWN, seq, e.desc, acc.clone()));
+                    }
+                }
+                e.result = Some(acc);
+                e.done = true;
+            }
+            Some(p) => {
+                out.push(self.coll_msg(p, coll_dir::UP, seq, e.desc, acc));
+                e.up_sent = true;
+                if e.desc.kind == CollectiveKind::Reduce {
+                    // Non-root reduce: our subtree's work is delivered; the
+                    // result only materializes at the root.
+                    e.result = Some(Vec::new());
+                    e.done = true;
+                }
+            }
+        }
+    }
+
+    /// Resolve the completion token the first time an entry reaches `done`.
+    fn resolution(e: &mut Entry) -> Option<u32> {
+        if e.done && !e.resolved {
+            if let Some(t) = e.token {
+                e.resolved = true;
+                return Some(t);
+            }
+        }
+        None
+    }
+
+    /// Register the local kernel's participation in collective `seq` with
+    /// wire token `token` already bound to its completion handle. Returns
+    /// the tree messages the caller must send plus the token to resolve
+    /// *after* those sends succeed — deferring resolution keeps a send
+    /// failure attributable: the handle is still in flight, so
+    /// `CompletionTable::fail` can transition it instead of the caller
+    /// observing a success that never left the node.
+    pub fn begin(
+        &self,
+        seq: u64,
+        desc: CollDesc,
+        local: &[u8],
+        token: u32,
+    ) -> Result<CollectiveIngress> {
+        let mut out = Vec::new();
+        let resolve = {
+            let mut g = self.inner.lock().unwrap();
+            // Split the guard into disjoint field borrows (entries vs ledger).
+            let inner: &mut Inner = &mut g;
+            // Reclaim ancient done-and-resolved entries nobody fetched (see
+            // RESOLVED_KEEP) before the map grows without bound.
+            if inner.entries.len() > RESOLVED_KEEP as usize {
+                inner.entries.retain(|&s, e2| {
+                    !(e2.done && e2.resolved && s.saturating_add(RESOLVED_KEEP) < seq)
+                });
+            }
+            let e = match inner.entries.entry(seq) {
+                MapEntry::Occupied(o) => o.into_mut(),
+                MapEntry::Vacant(slot) => {
+                    let ne = self.make_entry(desc)?;
+                    for &c in &ne.children {
+                        inner.ledger.note_collective_member(c);
+                    }
+                    slot.insert(ne)
+                }
+            };
+            if e.desc != desc {
+                return Err(Error::Config(format!(
+                    "collective #{seq}: descriptor mismatch across kernels \
+                     ({:?} here vs {:?} on the wire) — kernels must issue \
+                     collectives in the same order",
+                    desc, e.desc
+                )));
+            }
+            if e.local_done {
+                return Err(Error::Config(format!(
+                    "collective #{seq} already begun on kernel {}",
+                    self.kernel_id
+                )));
+            }
+            // Validate before mutating so an error leaves the entry clean.
+            if desc.kind != CollectiveKind::Bcast {
+                if let Some(acc) = &e.acc {
+                    if acc.len() != local.len() {
+                        return Err(Error::BadDescriptor(format!(
+                            "collective #{seq}: local contribution of {} bytes \
+                             ≠ {} bytes contributed by peers",
+                            local.len(),
+                            acc.len()
+                        )));
+                    }
+                }
+            }
+            e.token = Some(token);
+            e.local_done = true;
+            match desc.kind {
+                CollectiveKind::Bcast => {
+                    if self.kernel_id == desc.root {
+                        for &c in &e.children {
+                            out.push(self.coll_msg(c, coll_dir::DOWN, seq, desc, local.to_vec()));
+                        }
+                        e.result = Some(local.to_vec());
+                        e.done = true;
+                    }
+                    // Non-root: completes when the DOWN arrives (it may
+                    // already have — `done` is then set and resolves below).
+                }
+                _ => {
+                    match &mut e.acc {
+                        None => e.acc = Some(local.to_vec()),
+                        Some(acc) => combine(desc.op, desc.lane, acc, local)?,
+                    }
+                    self.advance_gather(seq, e, &mut out);
+                }
+            }
+            Self::resolution(e)
+        };
+        Ok(CollectiveIngress { out, resolve })
+    }
+
+    /// Process one received COLLECTIVE AM; returns the fan messages the
+    /// runtime must emit plus the completion token to resolve once they are
+    /// handed to egress. Runs on the ingress thread (handler thread or
+    /// GAScore pipeline) — identical on both paths. Resolution is the
+    /// caller's last step so a woken waiter can never observe its
+    /// collective complete while the fan messages are still unsent (a
+    /// completing kernel may tear its node down immediately).
+    pub fn on_message(&self, msg: &AmMessage) -> Result<CollectiveIngress> {
+        let dir = *msg
+            .args
+            .first()
+            .ok_or_else(|| Error::MalformedAm("collective message without direction".into()))?;
+        let seq = *msg
+            .args
+            .get(1)
+            .ok_or_else(|| Error::MalformedAm("collective message without sequence".into()))?;
+        let desc = CollDesc::unpack(
+            *msg.args
+                .get(2)
+                .ok_or_else(|| Error::MalformedAm("collective message without descriptor".into()))?,
+        )?;
+        let mut out = Vec::new();
+        let mut resolve = None;
+        {
+            let mut g = self.inner.lock().unwrap();
+            // (resolution is returned, not applied — see doc comment)
+            let inner: &mut Inner = &mut g;
+            if dir == coll_dir::UP {
+                inner.ledger.record_collective(msg.src, seq);
+            }
+            let e = match inner.entries.entry(seq) {
+                MapEntry::Occupied(o) => o.into_mut(),
+                MapEntry::Vacant(slot) => {
+                    let ne = self.make_entry(desc)?;
+                    for &c in &ne.children {
+                        inner.ledger.note_collective_member(c);
+                    }
+                    slot.insert(ne)
+                }
+            };
+            if e.desc != desc {
+                return Err(Error::MalformedAm(format!(
+                    "collective #{seq}: wire descriptor {:?} conflicts with local {:?}",
+                    desc, e.desc
+                )));
+            }
+            match dir {
+                coll_dir::UP => {
+                    if !e.awaiting.contains(&msg.src) {
+                        // Duplicate or non-child contribution: drop, never
+                        // double-fold.
+                        log::warn!(
+                            "kernel {}: dropping unexpected collective #{seq} \
+                             contribution from kernel {}",
+                            self.kernel_id,
+                            msg.src
+                        );
+                        return Ok(CollectiveIngress { out, resolve });
+                    }
+                    // Validate *before* removing the child from `awaiting`:
+                    // a malformed contribution must leave its sender named
+                    // as a straggler on timeout, not let the gather finish
+                    // with that subtree silently missing from the fold.
+                    if msg.payload.len() % 8 != 0 {
+                        return Err(Error::BadDescriptor(format!(
+                            "collective #{seq}: contribution of {} bytes from \
+                             kernel {} is not a whole number of 8-byte lanes",
+                            msg.payload.len(),
+                            msg.src
+                        )));
+                    }
+                    if let Some(acc) = &e.acc {
+                        if acc.len() != msg.payload.len() {
+                            return Err(Error::BadDescriptor(format!(
+                                "collective #{seq}: contribution of {} bytes from \
+                                 kernel {} ≠ accumulated {} bytes",
+                                msg.payload.len(),
+                                msg.src,
+                                acc.len()
+                            )));
+                        }
+                    }
+                    e.awaiting.retain(|&c| c != msg.src);
+                    match &mut e.acc {
+                        None => e.acc = Some(msg.payload.clone()),
+                        Some(acc) => combine(desc.op, desc.lane, acc, &msg.payload)?,
+                    }
+                    self.advance_gather(seq, e, &mut out);
+                }
+                coll_dir::DOWN => {
+                    if e.done {
+                        // Duplicate DOWN: already finished.
+                        return Ok(CollectiveIngress { out, resolve });
+                    }
+                    for &c in &e.children {
+                        out.push(self.coll_msg(c, coll_dir::DOWN, seq, desc, msg.payload.clone()));
+                    }
+                    e.result = Some(msg.payload.clone());
+                    e.done = true;
+                }
+                other => {
+                    return Err(Error::MalformedAm(format!("collective direction {other}")));
+                }
+            }
+            resolve = Self::resolution(e);
+        }
+        Ok(CollectiveIngress { out, resolve })
+    }
+
+    /// Consume a finished collective's result bytes (removes the entry).
+    pub fn take_result(&self, seq: u64) -> Result<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        let done = match g.entries.get(&seq) {
+            Some(e) => e.done,
+            None => {
+                return Err(Error::Config(format!(
+                    "collective #{seq} unknown or its result was already taken"
+                )));
+            }
+        };
+        if !done {
+            return Err(Error::Config(format!("collective #{seq} is not complete")));
+        }
+        let e = g.entries.remove(&seq).expect("checked present");
+        Ok(e.result.unwrap_or_default())
+    }
+
+    /// What an unfinished collective is blocked on: the direct children
+    /// whose subtree never delivered, and/or the parent we sent UP to but
+    /// never heard DOWN from. Used to name stragglers on timeout.
+    pub fn pending(&self, seq: u64) -> (Vec<u16>, Option<u16>) {
+        let g = self.inner.lock().unwrap();
+        match g.entries.get(&seq) {
+            Some(e) if !e.done => {
+                let down_from = if e.up_sent { e.parent } else { None };
+                (e.awaiting.clone(), down_from)
+            }
+            _ => (Vec::new(), None),
+        }
+    }
+
+    /// Coordinator view: kernels (ever seen contributing, or expected as
+    /// children) whose highest contributed collective sequence is below
+    /// `seq`.
+    pub fn ledger_stragglers(&self, seq: u64) -> Vec<u16> {
+        self.inner.lock().unwrap().ledger.collective_stragglers(seq)
+    }
+
+    /// Highest collective sequence `kernel` was ever seen contributing to
+    /// (coordinator ledger) — distinguishes a *lagging* kernel from one
+    /// that never joined any collective at all in timeout diagnostics.
+    pub fn last_contribution(&self, kernel: u16) -> Option<u64> {
+        self.inner.lock().unwrap().ledger.last_collective(kernel)
+    }
+
+    /// Entries currently alive (in flight, or finished but unconsumed).
+    pub fn live_entries(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{decode_u64s, encode_u64s, Lane, ReduceOp, TreeKind};
+    use std::time::Duration;
+
+    const T: Duration = Duration::from_millis(200);
+
+    fn desc(kind: CollectiveKind, root: u16) -> CollDesc {
+        CollDesc { kind, op: ReduceOp::Sum, lane: Lane::U64, tree: TreeKind::Binomial, root }
+    }
+
+    fn state(kernel: u16, ids: &[u16]) -> (Arc<CollectiveState>, Arc<CompletionTable>) {
+        let completion = CompletionTable::new();
+        let st = CollectiveState::new(kernel, ids.to_vec(), Arc::clone(&completion));
+        (st, completion)
+    }
+
+    /// Register a handle+token pair the way the API does.
+    fn issue(completion: &CompletionTable) -> (crate::am::completion::AmHandle, u32) {
+        let h = completion.create(1);
+        let t = completion.bind_token(h);
+        (h, t)
+    }
+
+    /// Feed one ingress message the way the engine does: emit (collect) the
+    /// fan, then resolve.
+    fn apply(
+        st: &CollectiveState,
+        completion: &CompletionTable,
+        msg: &AmMessage,
+    ) -> Vec<AmMessage> {
+        let r = st.on_message(msg).unwrap();
+        if let Some(t) = r.resolve {
+            completion.resolve(t);
+        }
+        r.out
+    }
+
+    /// Begin a collective the way the API does: "send" the fan, then
+    /// resolve.
+    fn start(
+        st: &CollectiveState,
+        completion: &CompletionTable,
+        seq: u64,
+        d: CollDesc,
+        local: &[u8],
+        token: u32,
+    ) -> Vec<AmMessage> {
+        let r = st.begin(seq, d, local, token).unwrap();
+        if let Some(t) = r.resolve {
+            completion.resolve(t);
+        }
+        r.out
+    }
+
+    #[test]
+    fn singleton_all_reduce_completes_immediately() {
+        let (st, completion) = state(0, &[0]);
+        let (h, tok) = issue(&completion);
+        let msgs =
+            start(&st, &completion, 1, desc(CollectiveKind::AllReduce, 0), &encode_u64s(&[7]), tok);
+        assert!(msgs.is_empty());
+        completion.wait(h, T).unwrap();
+        assert_eq!(decode_u64s(&st.take_result(1).unwrap()).unwrap(), vec![7]);
+        assert_eq!(st.live_entries(), 0);
+    }
+
+    #[test]
+    fn root_gathers_children_then_fans_down() {
+        // Kernel 0 is root of {0,1,2}; binomial children of the root: 1, 2.
+        let (st, completion) = state(0, &[0, 1, 2]);
+        let (h, tok) = issue(&completion);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let msgs = start(&st, &completion, 1, d, &encode_u64s(&[10]), tok);
+        assert!(msgs.is_empty(), "root sends nothing until children arrive");
+        assert!(completion.test(h).unwrap().is_none());
+
+        // Child 1's contribution arrives.
+        let mut up1 = st.coll_msg(0, coll_dir::UP, 1, d, encode_u64s(&[1]));
+        up1.src = 1;
+        assert!(apply(&st, &completion, &up1).is_empty());
+        assert_eq!(st.pending(1).0, vec![2]);
+
+        // Child 2 completes the gather: DOWN fans to both children.
+        let mut up2 = st.coll_msg(0, coll_dir::UP, 1, d, encode_u64s(&[2]));
+        up2.src = 2;
+        let downs = apply(&st, &completion, &up2);
+        assert_eq!(downs.len(), 2);
+        assert!(downs.iter().all(|m| m.args[0] == coll_dir::DOWN));
+        let dsts: Vec<u16> = downs.iter().map(|m| m.dst).collect();
+        assert_eq!(dsts, vec![1, 2]);
+        assert_eq!(decode_u64s(&downs[0].payload).unwrap(), vec![13]);
+
+        completion.wait(h, T).unwrap();
+        assert_eq!(decode_u64s(&st.take_result(1).unwrap()).unwrap(), vec![13]);
+    }
+
+    #[test]
+    fn leaf_sends_up_then_completes_on_down() {
+        // Kernel 2 is a leaf of the {0,1,2} tree rooted at 0.
+        let (st, completion) = state(2, &[0, 1, 2]);
+        let (h, tok) = issue(&completion);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let msgs = start(&st, &completion, 5, d, &encode_u64s(&[2]), tok);
+        assert_eq!(msgs.len(), 1);
+        assert_eq!(msgs[0].dst, 0);
+        assert_eq!(msgs[0].args[0], coll_dir::UP);
+        assert!(completion.test(h).unwrap().is_none(), "all-reduce waits for DOWN");
+        let (awaiting, down_from) = st.pending(5);
+        assert!(awaiting.is_empty());
+        assert_eq!(down_from, Some(0));
+
+        let mut down = st.coll_msg(2, coll_dir::DOWN, 5, d, encode_u64s(&[99]));
+        down.src = 0;
+        assert!(apply(&st, &completion, &down).is_empty(), "leaf forwards to nobody");
+        completion.wait(h, T).unwrap();
+        assert_eq!(decode_u64s(&st.take_result(5).unwrap()).unwrap(), vec![99]);
+    }
+
+    #[test]
+    fn reduce_completes_nonroot_at_up() {
+        let (st, completion) = state(1, &[0, 1]);
+        let (h, tok) = issue(&completion);
+        let d = desc(CollectiveKind::Reduce, 0);
+        let msgs = start(&st, &completion, 1, d, &encode_u64s(&[4]), tok);
+        assert_eq!(msgs.len(), 1);
+        completion.wait(h, T).unwrap();
+        assert!(st.take_result(1).unwrap().is_empty(), "result lives at the root only");
+    }
+
+    #[test]
+    fn bcast_root_fans_and_interior_forwards() {
+        let (st, completion) = state(0, &[0, 1, 2, 3]);
+        let (_h, tok) = issue(&completion);
+        let d = desc(CollectiveKind::Bcast, 0);
+        let msgs = start(&st, &completion, 1, d, b"payload", tok);
+        assert_eq!(msgs.len(), 2, "binomial root of 4 has children ranks 1 and 2");
+        assert_eq!(st.take_result(1).unwrap(), b"payload".to_vec());
+
+        // Interior node 2 (rank 2, child rank 3) forwards a DOWN before its
+        // own begin, then completes instantly when the local call arrives.
+        let (st1, completion1) = state(2, &[0, 1, 2, 3]);
+        let mut down = st1.coll_msg(2, coll_dir::DOWN, 1, d, b"payload".to_vec());
+        down.src = 0;
+        let fwd = apply(&st1, &completion1, &down);
+        assert_eq!(fwd.len(), 1);
+        assert_eq!(fwd[0].dst, 3);
+        let (h1, tok1) = issue(&completion1);
+        assert!(start(&st1, &completion1, 1, d, &[], tok1).is_empty());
+        completion1.wait(h1, T).unwrap();
+        assert_eq!(st1.take_result(1).unwrap(), b"payload".to_vec());
+    }
+
+    #[test]
+    fn early_contribution_before_local_begin() {
+        // Child's UP lands before the root calls the collective.
+        let (st, completion) = state(0, &[0, 1]);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let mut up = st.coll_msg(0, coll_dir::UP, 3, d, encode_u64s(&[5]));
+        up.src = 1;
+        assert!(apply(&st, &completion, &up).is_empty());
+        let (h, tok) = issue(&completion);
+        let downs = start(&st, &completion, 3, d, &encode_u64s(&[1]), tok);
+        assert_eq!(downs.len(), 1, "gather already complete: fan down at once");
+        completion.wait(h, T).unwrap();
+        assert_eq!(decode_u64s(&st.take_result(3).unwrap()).unwrap(), vec![6]);
+    }
+
+    #[test]
+    fn duplicate_contribution_is_dropped() {
+        let (st, completion) = state(0, &[0, 1, 2]);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let mut up = st.coll_msg(0, coll_dir::UP, 1, d, encode_u64s(&[5]));
+        up.src = 1;
+        apply(&st, &completion, &up);
+        apply(&st, &completion, &up); // duplicate must not double-fold
+        let g = st.inner.lock().unwrap();
+        let e = g.entries.get(&1).unwrap();
+        assert_eq!(decode_u64s(e.acc.as_ref().unwrap()).unwrap(), vec![5]);
+        assert_eq!(e.awaiting, vec![2]);
+    }
+
+    #[test]
+    fn ledger_names_collective_stragglers() {
+        let (st, completion) = state(0, &[0, 1, 2]);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let mut up = st.coll_msg(0, coll_dir::UP, 2, d, encode_u64s(&[5]));
+        up.src = 1;
+        apply(&st, &completion, &up);
+        // Kernel 1 reached collective 2; kernel 2 (a noted child) never
+        // contributed at all.
+        assert_eq!(st.ledger_stragglers(2), vec![2]);
+        assert_eq!(st.ledger_stragglers(3), vec![1, 2]);
+    }
+
+    #[test]
+    fn mismatched_descriptor_rejected() {
+        let (st, completion) = state(0, &[0, 1]);
+        let (_h, tok) = issue(&completion);
+        start(&st, &completion, 1, desc(CollectiveKind::AllReduce, 0), &encode_u64s(&[1]), tok);
+        let mut up = st.coll_msg(0, coll_dir::UP, 1, desc(CollectiveKind::Bcast, 0), vec![]);
+        up.src = 1;
+        assert!(st.on_message(&up).is_err());
+    }
+
+    #[test]
+    fn mismatched_contribution_keeps_sender_awaited() {
+        // A wrong-shaped UP must not be marked as arrived: the gather stalls
+        // and the timeout names the sender, rather than completing with the
+        // subtree silently missing from the fold.
+        let (st, completion) = state(0, &[0, 1]);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let (_h, tok) = issue(&completion);
+        start(&st, &completion, 7, d, &encode_u64s(&[1]), tok);
+        let mut bad = st.coll_msg(0, coll_dir::UP, 7, d, vec![0u8; 12]); // not 8-byte lanes
+        bad.src = 1;
+        assert!(st.on_message(&bad).is_err());
+        assert_eq!(st.pending(7).0, vec![1], "kernel 1 must still be awaited");
+        let mut wrong_len = st.coll_msg(0, coll_dir::UP, 7, d, encode_u64s(&[1, 2]));
+        wrong_len.src = 1;
+        assert!(st.on_message(&wrong_len).is_err());
+        assert_eq!(st.pending(7).0, vec![1]);
+    }
+
+    #[test]
+    fn unconsumed_done_entries_are_bounded() {
+        // Collectives completed through the generic wait primitives (never
+        // collective_wait) must not grow the entry map without bound.
+        let (st, completion) = state(0, &[0]);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let total = RESOLVED_KEEP + 200;
+        for seq in 1..=total {
+            let (h, tok) = issue(&completion);
+            start(&st, &completion, seq, d, &encode_u64s(&[seq]), tok);
+            completion.wait(h, T).unwrap(); // generic wait; result never taken
+        }
+        assert!(
+            st.live_entries() <= RESOLVED_KEEP as usize + 2,
+            "unconsumed entries unbounded: {}",
+            st.live_entries()
+        );
+        // Recent results are still fetchable.
+        assert_eq!(
+            decode_u64s(&st.take_result(total).unwrap()).unwrap(),
+            vec![total]
+        );
+    }
+
+    #[test]
+    fn malformed_collective_args_rejected() {
+        let (st, _completion) = state(0, &[0]);
+        let mut m = st.coll_msg(0, coll_dir::UP, 1, desc(CollectiveKind::Barrier, 0), vec![]);
+        m.args.truncate(1);
+        assert!(st.on_message(&m).is_err());
+        let mut bad_dir = st.coll_msg(0, 9, 1, desc(CollectiveKind::Barrier, 0), vec![]);
+        bad_dir.src = 0;
+        assert!(st.on_message(&bad_dir).is_err());
+    }
+}

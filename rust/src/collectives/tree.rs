@@ -1,0 +1,233 @@
+//! Spanning trees over cluster kernel ids.
+//!
+//! Collectives fan payloads along a tree whose vertices are the cluster's
+//! kernel ids (software and hardware kernels alike — the tree only speaks in
+//! ids, the runtime behind each id is invisible to it). Ranks are positions
+//! in the sorted id list, rotated so the collective's root is rank 0; any
+//! kernel can therefore be the root without rebuilding membership.
+//!
+//! Two shapes are supported: the MPI-style *binomial* tree (rank `r`'s
+//! parent clears `r`'s lowest set bit, giving `⌈log₂ n⌉` fan-in/out depth)
+//! and a complete *binary* tree (children `2r+1`, `2r+2`) whose bounded
+//! fan-out suits hardware kernels with narrow ingress queues.
+
+use crate::error::{Error, Result};
+
+/// Tree shape a collective fans over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum TreeKind {
+    /// MPI-style binomial tree: minimal depth, fan-out up to `log₂ n` at
+    /// the root.
+    #[default]
+    Binomial,
+    /// Complete binary tree: fan-out capped at 2 per node.
+    Binary,
+}
+
+impl TreeKind {
+    pub(crate) fn to_u8(self) -> u8 {
+        match self {
+            TreeKind::Binomial => 0,
+            TreeKind::Binary => 1,
+        }
+    }
+
+    pub(crate) fn from_u8(v: u8) -> Result<TreeKind> {
+        Ok(match v {
+            0 => TreeKind::Binomial,
+            1 => TreeKind::Binary,
+            other => return Err(Error::MalformedAm(format!("bad tree kind {other}"))),
+        })
+    }
+}
+
+/// A spanning tree over kernel ids, rooted at an arbitrary member.
+#[derive(Clone, Debug)]
+pub struct CollectiveTree {
+    /// Sorted, deduplicated kernel ids.
+    ids: Vec<u16>,
+    /// Position of the root in `ids` (rank 0 after rotation).
+    root_pos: usize,
+    kind: TreeKind,
+}
+
+impl CollectiveTree {
+    /// Build the tree for `ids` rooted at `root` (which must be a member).
+    pub fn new(mut ids: Vec<u16>, root: u16, kind: TreeKind) -> Result<CollectiveTree> {
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.is_empty() {
+            return Err(Error::Config("collective tree over zero kernels".into()));
+        }
+        let root_pos = ids.binary_search(&root).map_err(|_| Error::UnknownKernel(root))?;
+        Ok(CollectiveTree { ids, root_pos, kind })
+    }
+
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+
+    pub fn root(&self) -> u16 {
+        self.ids[self.root_pos]
+    }
+
+    /// Rank of `id`: its position in the sorted list, rotated so the root
+    /// is rank 0.
+    fn rank_of(&self, id: u16) -> Result<usize> {
+        let pos = self.ids.binary_search(&id).map_err(|_| Error::UnknownKernel(id))?;
+        let n = self.ids.len();
+        Ok((pos + n - self.root_pos) % n)
+    }
+
+    fn id_of(&self, rank: usize) -> u16 {
+        let n = self.ids.len();
+        self.ids[(rank + self.root_pos) % n]
+    }
+
+    /// Parent of `id`, or `None` for the root.
+    pub fn parent(&self, id: u16) -> Result<Option<u16>> {
+        let r = self.rank_of(id)?;
+        if r == 0 {
+            return Ok(None);
+        }
+        let p = match self.kind {
+            TreeKind::Binomial => r & (r - 1),
+            TreeKind::Binary => (r - 1) / 2,
+        };
+        Ok(Some(self.id_of(p)))
+    }
+
+    /// Direct children of `id`, in rank order.
+    pub fn children(&self, id: u16) -> Result<Vec<u16>> {
+        let r = self.rank_of(id)?;
+        let n = self.ids.len();
+        let mut out = Vec::new();
+        match self.kind {
+            TreeKind::Binomial => {
+                // Children are r + 2^k for every power below r's lowest set
+                // bit (all powers for the root).
+                let mut b = 1usize;
+                while r + b < n && (r == 0 || b < (r & r.wrapping_neg())) {
+                    out.push(self.id_of(r + b));
+                    b <<= 1;
+                }
+            }
+            TreeKind::Binary => {
+                for c in [2 * r + 1, 2 * r + 2] {
+                    if c < n {
+                        out.push(self.id_of(c));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Longest root-to-leaf path in edges — the number of sequential message
+    /// hops one fan phase needs.
+    pub fn depth(&self) -> usize {
+        let mut max = 0;
+        for &id in &self.ids {
+            let mut hops = 0;
+            let mut cur = id;
+            while let Ok(Some(p)) = self.parent(cur) {
+                hops += 1;
+                cur = p;
+            }
+            max = max.max(hops);
+        }
+        max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(n: u16) -> Vec<u16> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn binomial_parent_clears_lowest_bit() {
+        let t = CollectiveTree::new(ids(8), 0, TreeKind::Binomial).unwrap();
+        assert_eq!(t.parent(0).unwrap(), None);
+        assert_eq!(t.parent(1).unwrap(), Some(0));
+        assert_eq!(t.parent(5).unwrap(), Some(4));
+        assert_eq!(t.parent(6).unwrap(), Some(4));
+        assert_eq!(t.parent(7).unwrap(), Some(6));
+        assert_eq!(t.children(0).unwrap(), vec![1, 2, 4]);
+        assert_eq!(t.children(4).unwrap(), vec![5, 6]);
+        assert_eq!(t.children(7).unwrap(), Vec::<u16>::new());
+        assert_eq!(t.depth(), 3);
+    }
+
+    #[test]
+    fn binary_tree_shape() {
+        let t = CollectiveTree::new(ids(7), 0, TreeKind::Binary).unwrap();
+        assert_eq!(t.children(0).unwrap(), vec![1, 2]);
+        assert_eq!(t.children(1).unwrap(), vec![3, 4]);
+        assert_eq!(t.children(2).unwrap(), vec![5, 6]);
+        assert_eq!(t.parent(6).unwrap(), Some(2));
+        assert_eq!(t.depth(), 2);
+    }
+
+    #[test]
+    fn rotation_moves_root_to_rank_zero() {
+        let t = CollectiveTree::new(ids(4), 2, TreeKind::Binomial).unwrap();
+        assert_eq!(t.root(), 2);
+        assert_eq!(t.parent(2).unwrap(), None);
+        // Ranks: 2→0, 3→1, 0→2, 1→3.
+        assert_eq!(t.parent(3).unwrap(), Some(2));
+        assert_eq!(t.parent(0).unwrap(), Some(2));
+        assert_eq!(t.parent(1).unwrap(), Some(0));
+        assert_eq!(t.children(2).unwrap(), vec![3, 0]);
+    }
+
+    #[test]
+    fn sparse_non_contiguous_ids() {
+        let t = CollectiveTree::new(vec![3, 9, 40, 41, 100], 9, TreeKind::Binomial).unwrap();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.root(), 9);
+        // Every non-root reaches the root.
+        for id in [3u16, 40, 41, 100] {
+            let mut cur = id;
+            let mut hops = 0;
+            while let Some(p) = t.parent(cur).unwrap() {
+                cur = p;
+                hops += 1;
+                assert!(hops <= 5, "cycle from {id}");
+            }
+            assert_eq!(cur, 9);
+        }
+    }
+
+    #[test]
+    fn singleton_tree() {
+        let t = CollectiveTree::new(vec![7], 7, TreeKind::Binomial).unwrap();
+        assert_eq!(t.parent(7).unwrap(), None);
+        assert!(t.children(7).unwrap().is_empty());
+        assert_eq!(t.depth(), 0);
+        assert!(!t.is_empty());
+    }
+
+    #[test]
+    fn unknown_root_and_member_rejected() {
+        assert!(CollectiveTree::new(vec![1, 2], 5, TreeKind::Binomial).is_err());
+        let t = CollectiveTree::new(vec![1, 2], 1, TreeKind::Binomial).unwrap();
+        assert!(t.parent(9).is_err());
+        assert!(CollectiveTree::new(vec![], 0, TreeKind::Binary).is_err());
+    }
+
+    #[test]
+    fn tree_kind_roundtrip() {
+        for k in [TreeKind::Binomial, TreeKind::Binary] {
+            assert_eq!(TreeKind::from_u8(k.to_u8()).unwrap(), k);
+        }
+        assert!(TreeKind::from_u8(9).is_err());
+    }
+}

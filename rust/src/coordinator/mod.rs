@@ -23,6 +23,11 @@ use std::collections::HashMap;
 #[derive(Debug, Default, Clone)]
 pub struct EpochLedger {
     entered: HashMap<u16, u64>,
+    /// Highest *collective* sequence each kernel has contributed to. A
+    /// separate dimension from barrier epochs: collectives are issued by the
+    /// tree subsystem with their own cluster-wide ordering, and a timeout
+    /// there must name stragglers per-collective, not per-barrier.
+    collective: HashMap<u16, u64>,
 }
 
 impl EpochLedger {
@@ -82,6 +87,42 @@ impl EpochLedger {
     pub fn known_kernels(&self) -> u64 {
         self.entered.len() as u64
     }
+
+    // -- collective epochs -------------------------------------------------
+
+    /// Record that `kernel` contributed to collective `seq`. Like barrier
+    /// epochs, collective sequences are monotone per kernel (kernels issue
+    /// collectives in the same cluster-wide order), so the ledger keeps the
+    /// per-kernel maximum.
+    pub fn record_collective(&mut self, kernel: u16, seq: u64) {
+        let e = self.collective.entry(kernel).or_insert(0);
+        *e = (*e).max(seq);
+    }
+
+    /// Make `kernel` known to the collective dimension (at sequence 0)
+    /// without recording a contribution — expected tree children are seeded
+    /// this way so a timeout names kernels that never contributed at all.
+    pub fn note_collective_member(&mut self, kernel: u16) {
+        self.collective.entry(kernel).or_insert(0);
+    }
+
+    /// Highest collective sequence `kernel` has contributed to.
+    pub fn last_collective(&self, kernel: u16) -> Option<u64> {
+        self.collective.get(&kernel).copied()
+    }
+
+    /// Kernels known to the collective dimension that have *not* reached
+    /// collective `seq` — named by a collective-timeout diagnostic.
+    pub fn collective_stragglers(&self, seq: u64) -> Vec<u16> {
+        let mut v: Vec<u16> = self
+            .collective
+            .iter()
+            .filter(|(_, &s)| s < seq)
+            .map(|(&k, _)| k)
+            .collect();
+        v.sort_unstable();
+        v
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +170,22 @@ mod tests {
         assert_eq!(l.stragglers(3), vec![5, 9]);
         assert_eq!(l.stragglers(1), Vec::<u16>::new());
         assert_eq!(l.known_kernels(), 3);
+    }
+
+    #[test]
+    fn collective_epochs_are_a_separate_dimension() {
+        let mut l = EpochLedger::new();
+        l.record_enter(1, 9); // barrier epoch must not leak into collectives
+        l.note_collective_member(1);
+        l.note_collective_member(2);
+        l.record_collective(1, 3);
+        l.record_collective(1, 2); // stale duplicate must not regress
+        assert_eq!(l.last_collective(1), Some(3));
+        assert_eq!(l.last_collective(2), Some(0));
+        assert_eq!(l.last_collective(7), None);
+        assert_eq!(l.collective_stragglers(3), vec![2]);
+        assert_eq!(l.collective_stragglers(4), vec![1, 2]);
+        assert_eq!(l.collective_stragglers(0), Vec::<u16>::new());
     }
 
     #[test]

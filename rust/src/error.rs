@@ -68,6 +68,13 @@ pub enum Error {
     /// issued; `wait`/`test` on the handle surface the reason.
     OperationFailed(String),
 
+    /// `wait_any` was called on an empty handle slice. "Any of nothing" has
+    /// no completable element, so the call can neither return an index nor
+    /// block meaningfully — a typed error instead of a loop or panic.
+    /// (`wait_all` of an empty slice is by contrast a well-defined no-op:
+    /// a vacuous fence.)
+    EmptyWaitSet(&'static str),
+
     /// Timed out waiting for replies / barrier / recv.
     Timeout(&'static str),
 
@@ -111,6 +118,9 @@ impl std::fmt::Display for Error {
                 write!(f, "message type {what} is disabled by the active API profile")
             }
             Error::OperationFailed(msg) => write!(f, "operation failed: {msg}"),
+            Error::EmptyWaitSet(what) => {
+                write!(f, "{what} called on an empty handle set")
+            }
             Error::Timeout(what) => write!(f, "timeout waiting for {what}"),
             Error::Json(msg) => write!(f, "json error: {msg}"),
         }

@@ -29,6 +29,7 @@ use std::thread::JoinHandle;
 use super::cycles::CycleModel;
 use super::stages::{am_rx_parse, xpams_tx_route, EgressRoute, HoldBuffer};
 use crate::am::engine::KernelRuntime;
+use crate::am::types::handler_ids;
 use crate::galapagos::packet::Packet;
 use crate::galapagos::router::RouterMsg;
 
@@ -56,6 +57,13 @@ pub struct GAScoreStats {
     /// Egress replies whose token is bound to a completion handle on the
     /// requesting side (HANDLE-flagged replies).
     pub handle_replies_out: AtomicU64,
+    /// Collective-tree protocol messages dispatched by the ingress pipeline
+    /// (hardware kernels participate in bcast/reduce/all-reduce through the
+    /// same reserved handler as software kernels).
+    pub collectives_in: AtomicU64,
+    /// Collective-tree fan messages emitted by the egress pipeline (UP
+    /// contributions and DOWN results leaving this node's kernels).
+    pub collectives_out: AtomicU64,
     /// Deepest hold-buffer occupancy observed.
     pub hold_buffer_peak: AtomicU64,
     /// Egress messages xpams_tx looped back internally (local Short /
@@ -238,6 +246,9 @@ impl Pipeline {
             log::warn!("gascore n{}: AM for non-local kernel {}", self.node_id, m.dst);
             return;
         };
+        if m.handler == handler_ids::COLLECTIVE && !m.flags.is_reply() {
+            stats.collectives_in.fetch_add(1, Ordering::Relaxed);
+        }
         // Cycle accounting for the ingress pipeline.
         let will_reply = !m.flags.is_async() && !m.flags.is_reply();
         stats
@@ -273,6 +284,9 @@ impl Pipeline {
         stats
             .egress_cycles
             .fetch_add(self.model.egress_cycles(&msg), Ordering::Relaxed);
+        if msg.handler == handler_ids::COLLECTIVE && !msg.flags.is_reply() {
+            stats.collectives_out.fetch_add(1, Ordering::Relaxed);
+        }
         // xpams_tx: "For the special cases of Short messages and Medium FIFO
         // messages intended for local kernels, this module will route data to
         // the handler internally" (§III-C egress step 2).
@@ -318,13 +332,26 @@ mod tests {
     use std::time::Duration;
 
     fn runtime(kernel_id: u16) -> (KernelRuntime, Segment, mpsc::Receiver<crate::am::engine::ReceivedMedium>) {
+        runtime_in_cluster(kernel_id, vec![kernel_id])
+    }
+
+    fn runtime_in_cluster(
+        kernel_id: u16,
+        ids: Vec<u16>,
+    ) -> (KernelRuntime, Segment, mpsc::Receiver<crate::am::engine::ReceivedMedium>) {
         let seg = Segment::new(4096);
         let (tx, rx) = mpsc::channel();
+        let completion = CompletionTable::new();
         (
             KernelRuntime {
                 kernel_id,
                 segment: seg.clone(),
-                completion: CompletionTable::new(),
+                collective: crate::collectives::CollectiveState::new(
+                    kernel_id,
+                    ids,
+                    Arc::clone(&completion),
+                ),
+                completion,
                 barrier: BarrierState::new(),
                 handlers: Arc::new(HandlerTable::hardware()),
                 medium_tx: tx,
@@ -442,6 +469,68 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
         assert_eq!(g.stats().handle_replies_out.load(Ordering::Relaxed), 1);
+        drop(inbox_tx);
+        g.join();
+    }
+
+    #[test]
+    fn hardware_kernels_participate_in_collectives() {
+        use crate::collectives::{
+            coll_dir, decode_u64s, encode_u64s, CollDesc, CollectiveKind, Lane, ReduceOp,
+            TreeKind,
+        };
+        // Hardware kernel 2 is the root of the {2, 5} tree; its GAScore must
+        // consume the remote child's UP on ingress and emit the DOWN fan
+        // through the egress pipeline, bumping the collective counters.
+        let (rt, _seg, _mrx) = runtime_in_cluster(2, vec![2, 5]);
+        let collective = Arc::clone(&rt.collective);
+        let completion = Arc::clone(&rt.completion);
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+
+        let d = CollDesc {
+            kind: CollectiveKind::AllReduce,
+            op: ReduceOp::Sum,
+            lane: Lane::U64,
+            tree: TreeKind::Binomial,
+            root: 2,
+        };
+        let h = completion.create(1);
+        let tok = completion.bind_token(h);
+        let begun = collective.begin(1, d, &encode_u64s(&[40]), tok).unwrap();
+        assert!(begun.out.is_empty() && begun.resolve.is_none());
+
+        let up = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: 5,
+            dst: 2,
+            handler: handler_ids::COLLECTIVE,
+            token: 0,
+            args: vec![coll_dir::UP, 1, d.pack()],
+            desc: Descriptor::None,
+            payload: encode_u64s(&[2]),
+        };
+        inbox_tx.send(Packet::new(2, 5, up.encode().unwrap()).unwrap()).unwrap();
+
+        // The DOWN fan to the remote child leaves through the router.
+        match router_rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+            RouterMsg::FromKernel(p) => {
+                let m = AmMessage::decode(&p.data).unwrap();
+                assert_eq!(m.handler, handler_ids::COLLECTIVE);
+                assert_eq!(m.dst, 5);
+                assert_eq!(m.args[0], coll_dir::DOWN);
+                assert_eq!(decode_u64s(&m.payload).unwrap(), vec![42]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        completion.wait(h, Duration::from_secs(2)).unwrap();
+        assert_eq!(decode_u64s(&collective.take_result(1).unwrap()).unwrap(), vec![42]);
+
+        let stats = g.stats();
+        assert_eq!(stats.collectives_in.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.collectives_out.load(Ordering::Relaxed), 1);
         drop(inbox_tx);
         g.join();
     }

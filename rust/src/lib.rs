@@ -29,6 +29,7 @@
 pub mod am;
 pub mod apps;
 pub mod bench;
+pub mod collectives;
 pub mod config;
 pub mod coordinator;
 pub mod error;
@@ -47,6 +48,7 @@ pub mod prelude {
     pub use crate::am::completion::AmHandle;
     pub use crate::am::handlers;
     pub use crate::am::types::{AmFlags, AmType};
+    pub use crate::collectives::{CollectiveHandle, Lane, ReduceOp};
     pub use crate::config::ClusterSpec;
     pub use crate::error::{Error, Result};
     pub use crate::am::engine::ReceivedMedium;

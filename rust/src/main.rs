@@ -102,7 +102,7 @@ fn serve(argv: &[String]) -> shoal::Result<()> {
         vec![
             opt("cluster", "cluster description file (explicit ports)", ""),
             opt("node", "node id this process hosts", "0"),
-            opt("app", "application: echo | sink", "echo"),
+            opt("app", "application: echo | sink | allreduce", "echo"),
             opt("max-msgs", "exit after this many messages per kernel (0 = run forever)", "0"),
         ],
         argv,
@@ -123,9 +123,48 @@ fn serve(argv: &[String]) -> shoal::Result<()> {
     let kernels = spec.kernels_on(node_id);
     println!("serve: node {node_id} up, kernels {kernels:?}, app '{app}'");
 
+    // The allreduce app asserts against the whole-cluster fold.
+    let id_sum: u64 = spec.kernels.iter().map(|k| k.id as u64).sum();
+    let all_ids: Vec<u16> = spec.kernels.iter().map(|k| k.id).collect();
     for &kid in &kernels {
         let app = app.clone();
+        let all_ids = all_ids.clone();
         cluster.run_kernel(kid, move |mut k| {
+            if app == "allreduce" {
+                // Hello/GO handshake before the collective, so no tree
+                // message ever targets a node that has not bound its
+                // transport yet (UDP has no retransmit). Kernel 0 is the
+                // coordinator — whoever hosts it, this process or an
+                // external driver; everyone else repeats hello until
+                // released (a hello sent while kernel 0's node is still
+                // binding is simply re-sent).
+                if k.id() == 0 {
+                    let mut ready = std::collections::HashSet::new();
+                    while ready.len() + 1 < all_ids.len() {
+                        ready.insert(k.recv_medium().unwrap().src);
+                    }
+                    for &peer in all_ids.iter().filter(|&&p| p != 0) {
+                        k.am_medium_async(peer, shoal::am::handlers::NOP, &[], b"go")
+                            .unwrap();
+                    }
+                } else {
+                    loop {
+                        k.am_medium_async(0, shoal::am::handlers::NOP, &[], b"hello")
+                            .unwrap();
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        if k.try_recv_medium().unwrap().is_some() {
+                            break; // kernel 0's GO
+                        }
+                    }
+                }
+                let ch = k
+                    .all_reduce_u64(shoal::collectives::ReduceOp::Sum, &[k.id() as u64])
+                    .unwrap();
+                let v = k.collective_wait_u64(ch).unwrap();
+                assert_eq!(v, vec![id_sum], "kernel {kid}: all_reduce mismatch");
+                println!("serve: kernel {kid} all_reduce -> {}", v[0]);
+                return;
+            }
             let mut seen = 0u64;
             loop {
                 match k.recv_medium() {
@@ -247,7 +286,9 @@ fn jacobi(argv: &[String]) -> shoal::Result<()> {
             opt("grid", "grid edge length", "130"),
             opt("workers", "worker kernels", "2"),
             opt("nodes", "worker nodes", "1"),
-            opt("iters", "iterations", "100"),
+            opt("iters", "iteration budget", "100"),
+            opt("tolerance", "stop at this all-reduced residual (0 = fixed iters)", "0"),
+            opt("check-every", "sweeps between convergence all-reduces", "8"),
             flag("hw", "hardware workers"),
             flag("chunked", "chunked transfers"),
         ],
@@ -257,6 +298,7 @@ fn jacobi(argv: &[String]) -> shoal::Result<()> {
         print!("{}", args.usage("One distributed Jacobi run"));
         return Ok(());
     }
+    let tolerance = args.get_f64("tolerance", 0.0);
     let cfg = shoal::apps::jacobi::JacobiConfig {
         n: args.get_usize("grid", 130),
         iters: args.get_usize("iters", 100),
@@ -264,13 +306,17 @@ fn jacobi(argv: &[String]) -> shoal::Result<()> {
         nodes: args.get_usize("nodes", 1),
         hw: args.flag("hw"),
         chunked: args.flag("chunked"),
+        tolerance: if tolerance > 0.0 { Some(tolerance as f32) } else { None },
+        check_every: args.get_usize("check-every", 8),
     };
     let report = shoal::apps::jacobi::run(&cfg)?;
     println!(
-        "grid {}×{} · {} iters · {} workers · wall {:.3} s (compute {:.3} s, sync {:.3} s)",
+        "grid {}×{} · {}/{} sweeps{} · {} workers · wall {:.3} s (compute {:.3} s, sync {:.3} s)",
         cfg.n,
         cfg.n,
+        report.iters_done,
         cfg.iters,
+        if report.converged { " (converged)" } else { "" },
         cfg.workers,
         report.wall.as_secs_f64(),
         report.compute.as_secs_f64(),

@@ -27,6 +27,15 @@
 //! replies") survives as the [`wait_replies`](ShoalKernel::wait_replies)
 //! shim over the same table — each operation's completion must be consumed
 //! exactly once, by a handle wait *or* by `wait_replies`, never both.
+//!
+//! Collectives ([`bcast`](ShoalKernel::bcast), [`reduce`](ShoalKernel::reduce),
+//! [`all_reduce`](ShoalKernel::all_reduce),
+//! [`barrier_tree`](ShoalKernel::barrier_tree)) compose many AM hops over a
+//! spanning tree into one logical operation; each returns a
+//! [`CollectiveHandle`] whose `am` field is an ordinary completion-table
+//! handle, so collectives overlap with point-to-point traffic under the same
+//! wait primitives. A collective completion counts as one reply in the
+//! `wait_replies` shim.
 
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -37,6 +46,10 @@ use crate::am::engine::{barrier_op, BarrierState, ReceivedMedium};
 use crate::am::handlers::HandlerTable;
 use crate::am::header::{AmMessage, Descriptor};
 use crate::am::types::{handler_ids, AmFlags, AmType};
+use crate::collectives::{
+    decode_f64s, decode_u64s, encode_f64s, encode_u64s, CollDesc, CollectiveHandle,
+    CollectiveKind, CollectiveState, Lane, ReduceOp, TreeKind,
+};
 use crate::config::{ApiProfile, ChunkPolicy, ClusterSpec};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::Packet;
@@ -60,11 +73,15 @@ pub struct ShoalKernel {
     pub(crate) completion: Arc<CompletionTable>,
     pub(crate) barrier_state: Arc<BarrierState>,
     pub(crate) handlers: Arc<HandlerTable>,
+    pub(crate) collective: Arc<CollectiveState>,
     pub(crate) medium_rx: Receiver<ReceivedMedium>,
     /// Replies consumed by previous waits (`wait_replies` shim bookkeeping).
     consumed: u64,
     /// Barrier epoch counter (local).
     epoch: u64,
+    /// Collective sequence counter (local; every kernel issues collectives
+    /// in the same cluster-wide order, so counters agree).
+    coll_seq: u64,
     pub timeout: Duration,
 }
 
@@ -78,6 +95,7 @@ impl ShoalKernel {
         completion: Arc<CompletionTable>,
         barrier_state: Arc<BarrierState>,
         handlers: Arc<HandlerTable>,
+        collective: Arc<CollectiveState>,
         medium_rx: Receiver<ReceivedMedium>,
     ) -> ShoalKernel {
         ShoalKernel {
@@ -88,9 +106,11 @@ impl ShoalKernel {
             completion,
             barrier_state,
             handlers,
+            collective,
             medium_rx,
             consumed: 0,
             epoch: 0,
+            coll_seq: 0,
             timeout: DEFAULT_TIMEOUT,
         }
     }
@@ -615,7 +635,10 @@ impl ShoalKernel {
 
     /// Block until every handle in `hs` completes (consuming all of them) —
     /// the fence after a batch of overlapped transfers. Handles already
-    /// consumed (e.g. by an earlier `wait_any`) are skipped harmlessly.
+    /// consumed (e.g. by an earlier `wait_any`) are skipped harmlessly. An
+    /// empty slice is a vacuous fence: it returns `Ok(())` immediately
+    /// (every one of zero handles is complete), unlike
+    /// [`wait_any`](ShoalKernel::wait_any) for which emptiness is an error.
     pub fn wait_all(&mut self, hs: &[AmHandle]) -> Result<()> {
         let deadline = std::time::Instant::now() + self.timeout;
         for h in hs {
@@ -629,7 +652,8 @@ impl ShoalKernel {
     }
 
     /// Block until *any* handle in `hs` completes; returns the index of the
-    /// completed handle (consuming only that one).
+    /// completed handle (consuming only that one). An empty slice returns
+    /// [`Error::EmptyWaitSet`] immediately — nothing could ever complete.
     pub fn wait_any(&mut self, hs: &[AmHandle]) -> Result<usize> {
         let (i, first) = self.completion.wait_any(hs, self.timeout)?;
         if first {
@@ -723,6 +747,210 @@ impl ShoalKernel {
             self.am_short_async(master, handler_ids::BARRIER, &[barrier_op::ENTER, epoch])?;
             self.barrier_state.wait_release(epoch, self.timeout)
         }
+    }
+
+    // -- collectives ------------------------------------------------------------
+
+    /// Lowest kernel id in the cluster — the implicit root of rootless
+    /// collectives (`all_reduce`, `barrier_tree`), mirroring the counter
+    /// barrier's master-selection rule.
+    fn lowest_kernel(&self) -> u16 {
+        self.spec.kernels.iter().map(|k| k.id).min().unwrap_or(self.id)
+    }
+
+    fn collective_impl(
+        &mut self,
+        kind: CollectiveKind,
+        op: ReduceOp,
+        lane: Lane,
+        root: u16,
+        data: &[u8],
+    ) -> Result<CollectiveHandle> {
+        // Collectives ride Medium AMs and generalize the barrier; both
+        // capabilities must be in the active profile.
+        if !self.profile().medium || !self.profile().barrier {
+            return Err(Error::ProfileViolation("collectives"));
+        }
+        self.spec.kernel(root)?;
+        if kind != CollectiveKind::Bcast && data.len() % 8 != 0 {
+            return Err(Error::BadDescriptor(format!(
+                "reduction payload of {} bytes is not a whole number of 8-byte lanes",
+                data.len()
+            )));
+        }
+        // Every tree hop carries the payload in one Medium AM; no chunking.
+        let probe = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: self.id,
+            dst: self.id,
+            handler: handler_ids::COLLECTIVE,
+            token: 0,
+            args: vec![0, 0, 0],
+            desc: Descriptor::None,
+            payload: vec![],
+        };
+        if data.len() > probe.max_payload_for() {
+            return Err(Error::AmTooLarge {
+                payload: data.len(),
+                limit: probe.max_payload_for(),
+            });
+        }
+        self.coll_seq += 1;
+        let seq = self.coll_seq;
+        let desc = CollDesc { kind, op, lane, tree: TreeKind::Binomial, root };
+        let h = self.completion.create(1);
+        let token = self.completion.bind_token(h);
+        let ingress = self.collective.begin(seq, desc, data, token)?;
+        let mut send_failed = false;
+        for m in &ingress.out {
+            if let Err(e) = self.send_msg(m) {
+                log::warn!("kernel {}: collective send failed: {e}", self.id);
+                self.completion.fail(h, &format!("collective send failed: {e}"));
+                send_failed = true;
+                break;
+            }
+        }
+        // Resolution strictly after the fan went out: a send failure leaves
+        // the handle in flight so `fail` above transitions it to failed and
+        // the caller's wait surfaces the error instead of a phantom success.
+        if !send_failed {
+            if let Some(t) = ingress.resolve {
+                self.completion.resolve(t);
+            }
+        }
+        Ok(CollectiveHandle { am: h, seq, kind })
+    }
+
+    /// Broadcast `data` from `root` down the collective tree. Non-root
+    /// callers' `data` is ignored; every kernel's
+    /// [`collective_wait`](ShoalKernel::collective_wait) returns the root's
+    /// bytes. Nonblocking: the returned handle's `am` composes with
+    /// `wait`/`test`/`wait_all`/`wait_any`.
+    pub fn bcast(&mut self, root: u16, data: &[u8]) -> Result<CollectiveHandle> {
+        self.collective_impl(CollectiveKind::Bcast, ReduceOp::Sum, Lane::U64, root, data)
+    }
+
+    /// Element-wise reduction of every kernel's `contribution` up the tree;
+    /// the fold materializes at `root` (everyone else's result is empty).
+    pub fn reduce(
+        &mut self,
+        root: u16,
+        op: ReduceOp,
+        lane: Lane,
+        contribution: &[u8],
+    ) -> Result<CollectiveHandle> {
+        self.collective_impl(CollectiveKind::Reduce, op, lane, root, contribution)
+    }
+
+    /// Reduce-then-broadcast: every kernel contributes and every kernel's
+    /// `collective_wait` returns the full fold — the primitive that lets
+    /// workloads agree on global state (e.g. a convergence residual) in
+    /// `O(log n)` hops instead of `n` point-to-point round trips.
+    pub fn all_reduce(
+        &mut self,
+        op: ReduceOp,
+        lane: Lane,
+        contribution: &[u8],
+    ) -> Result<CollectiveHandle> {
+        let root = self.lowest_kernel();
+        self.collective_impl(CollectiveKind::AllReduce, op, lane, root, contribution)
+    }
+
+    /// `all_reduce` over `u64` lanes.
+    pub fn all_reduce_u64(&mut self, op: ReduceOp, vals: &[u64]) -> Result<CollectiveHandle> {
+        self.all_reduce(op, Lane::U64, &encode_u64s(vals))
+    }
+
+    /// `all_reduce` over `f64` lanes.
+    pub fn all_reduce_f64(&mut self, op: ReduceOp, vals: &[f64]) -> Result<CollectiveHandle> {
+        self.all_reduce(op, Lane::F64, &encode_f64s(vals))
+    }
+
+    /// Block until the collective completes and return its result bytes
+    /// (root's payload for `bcast`, the fold for `all_reduce` everywhere and
+    /// `reduce` at the root, empty otherwise). A timeout is converted into
+    /// [`Error::OperationFailed`] naming the straggler kernels — the
+    /// collective analogue of the barrier's straggler diagnostic — and fails
+    /// the handle so later waits agree. Safe to call after the handle was
+    /// already consumed by `wait`/`wait_all` (it just fetches the result).
+    pub fn collective_wait(&mut self, ch: CollectiveHandle) -> Result<Vec<u8>> {
+        match self.wait(ch.am) {
+            Ok(()) => self.collective.take_result(ch.seq),
+            Err(Error::Timeout(_)) => {
+                let (awaiting, down_from) = self.collective.pending(ch.seq);
+                let reason = if !awaiting.is_empty() {
+                    // Per-collective straggler naming: the coordinator
+                    // ledger says how far each missing subtree ever got,
+                    // separating a dead kernel from a merely lagging one.
+                    let lag: Vec<String> = awaiting
+                        .iter()
+                        .map(|&kid| match self.collective.last_contribution(kid) {
+                            Some(s) if s > 0 => format!("kernel {kid} (last at #{s})"),
+                            _ => format!("kernel {kid} (never contributed)"),
+                        })
+                        .collect();
+                    format!(
+                        "collective #{} ({}) timed out: missing contributions from {}",
+                        ch.seq,
+                        ch.kind.label(),
+                        lag.join(", ")
+                    )
+                } else if let Some(p) = down_from {
+                    format!(
+                        "collective #{} ({}) timed out: no result from parent kernel {p}",
+                        ch.seq,
+                        ch.kind.label()
+                    )
+                } else {
+                    format!(
+                        "collective #{} ({}) timed out before this kernel's part completed \
+                         (cluster view: kernels {:?} had not reached it)",
+                        ch.seq,
+                        ch.kind.label(),
+                        self.collective.ledger_stragglers(ch.seq)
+                    )
+                };
+                self.completion.fail(ch.am, &reason);
+                Err(Error::OperationFailed(reason))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// `collective_wait` decoding the result as `u64` lanes.
+    pub fn collective_wait_u64(&mut self, ch: CollectiveHandle) -> Result<Vec<u64>> {
+        decode_u64s(&self.collective_wait(ch)?)
+    }
+
+    /// `collective_wait` decoding the result as `f64` lanes.
+    pub fn collective_wait_f64(&mut self, ch: CollectiveHandle) -> Result<Vec<f64>> {
+        decode_f64s(&self.collective_wait(ch)?)
+    }
+
+    /// Nonblocking collective probe: `Ok(Some(result))` the first time the
+    /// collective is observed complete (consuming it), `Ok(None)` while in
+    /// flight.
+    pub fn collective_test(&mut self, ch: CollectiveHandle) -> Result<Option<Vec<u8>>> {
+        if self.test(ch.am)? {
+            Ok(Some(self.collective.take_result(ch.seq)?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Cluster-wide barrier over the collective tree: an all-reduce with an
+    /// empty payload. `O(log n)` critical-path hops versus the counter
+    /// barrier's `O(n)` fan at the master — the `barrier()` alternative for
+    /// larger clusters.
+    pub fn barrier_tree(&mut self) -> Result<()> {
+        if !self.profile().barrier {
+            return Err(Error::ProfileViolation("barrier"));
+        }
+        let root = self.lowest_kernel();
+        let ch =
+            self.collective_impl(CollectiveKind::Barrier, ReduceOp::Sum, Lane::U64, root, &[])?;
+        self.collective_wait(ch).map(|_| ())
     }
 
     // -- helpers ----------------------------------------------------------------

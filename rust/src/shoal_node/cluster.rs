@@ -17,6 +17,7 @@ use std::thread::JoinHandle;
 use crate::am::completion::CompletionTable;
 use crate::am::engine::{BarrierState, KernelRuntime};
 use crate::am::handlers::HandlerTable;
+use crate::collectives::CollectiveState;
 use crate::config::{ClusterSpec, Platform};
 use crate::error::{Error, Result};
 use crate::galapagos::node::{BoundNode, GalapagosNode};
@@ -101,9 +102,13 @@ impl ShoalCluster {
             completion: Arc<CompletionTable>,
             barrier: Arc<BarrierState>,
             handlers: Arc<HandlerTable>,
+            collective: Arc<CollectiveState>,
             medium_tx: mpsc::Sender<crate::am::engine::ReceivedMedium>,
             medium_rx: Option<mpsc::Receiver<crate::am::engine::ReceivedMedium>>,
         }
+        // Collectives span the whole cluster (hosted or not): the tree is
+        // computed over every kernel id.
+        let all_kernel_ids: Vec<u16> = spec.kernels.iter().map(|k| k.id).collect();
         let mut kstate: HashMap<u16, KState> = HashMap::new();
         let mut tables = HashMap::new();
         for k in spec.kernels.iter().filter(|k| hosted.contains(&k.node)) {
@@ -114,11 +119,17 @@ impl ShoalCluster {
             });
             tables.insert(k.id, Arc::clone(&handlers));
             let (mtx, mrx) = mpsc::channel();
+            let completion = CompletionTable::new();
             kstate.insert(
                 k.id,
                 KState {
                     segment: Segment::new(k.segment_size),
-                    completion: CompletionTable::new(),
+                    collective: CollectiveState::new(
+                        k.id,
+                        all_kernel_ids.clone(),
+                        Arc::clone(&completion),
+                    ),
+                    completion,
                     barrier: BarrierState::new(),
                     handlers,
                     medium_tx: mtx,
@@ -152,6 +163,7 @@ impl ShoalCluster {
                 completion: Arc::clone(&ks.completion),
                 barrier: Arc::clone(&ks.barrier),
                 handlers: Arc::clone(&ks.handlers),
+                collective: Arc::clone(&ks.collective),
                 medium_tx: ks.medium_tx.clone(),
             };
 
@@ -242,6 +254,7 @@ impl ShoalCluster {
                     Arc::clone(&ks.completion),
                     Arc::clone(&ks.barrier),
                     Arc::clone(&ks.handlers),
+                    Arc::clone(&ks.collective),
                     ks.medium_rx.take().expect("medium receiver claimed once"),
                 ),
             );

@@ -85,6 +85,7 @@ mod tests {
     use crate::am::completion::CompletionTable;
     use crate::am::engine::BarrierState;
     use crate::am::handlers::HandlerTable;
+    use crate::collectives::CollectiveState;
     use crate::am::types::{handler_ids, AmFlags, AmType};
     use crate::am::Descriptor;
     use crate::memory::Segment;
@@ -95,10 +96,12 @@ mod tests {
     #[test]
     fn processes_packets_and_replies() {
         let (medium_tx, medium_rx) = mpsc::channel();
+        let completion = CompletionTable::new();
         let rt = KernelRuntime {
             kernel_id: 1,
             segment: Segment::new(1024),
-            completion: CompletionTable::new(),
+            collective: CollectiveState::new(1, vec![1], Arc::clone(&completion)),
+            completion,
             barrier: BarrierState::new(),
             handlers: Arc::new(HandlerTable::software()),
             medium_tx,
@@ -147,6 +150,7 @@ mod tests {
         let rt = KernelRuntime {
             kernel_id: 1,
             segment: Segment::new(64),
+            collective: CollectiveState::new(1, vec![1], Arc::clone(&completion)),
             completion: Arc::clone(&completion),
             barrier: BarrierState::new(),
             handlers: Arc::new(HandlerTable::software()),
@@ -182,10 +186,12 @@ mod tests {
     #[test]
     fn malformed_packets_are_dropped_not_fatal() {
         let (medium_tx, medium_rx) = mpsc::channel();
+        let completion = CompletionTable::new();
         let rt = KernelRuntime {
             kernel_id: 1,
             segment: Segment::new(64),
-            completion: CompletionTable::new(),
+            collective: CollectiveState::new(1, vec![1], Arc::clone(&completion)),
+            completion,
             barrier: BarrierState::new(),
             handlers: Arc::new(HandlerTable::software()),
             medium_tx,

@@ -139,6 +139,57 @@ fn hw_udp_fragmentation_refused() {
     cluster.join().unwrap();
 }
 
+/// A collective with a dropped contribution fails with
+/// `Error::OperationFailed` naming the straggler kernel — never a hang.
+#[test]
+fn dropped_collective_contribution_names_straggler() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    // Kernel 1 never joins the all-reduce: kernel 0 (the tree root) must
+    // time out quickly and attribute the failure to kernel 1.
+    cluster.run_kernel(0, |mut k| {
+        k.timeout = std::time::Duration::from_millis(300);
+        let ch = k.all_reduce_u64(ReduceOp::Sum, &[1]).unwrap();
+        let err = k.collective_wait_u64(ch).unwrap_err();
+        assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("kernel 1"), "straggler kernel 1 not named: {msg}");
+        assert!(msg.contains("never contributed"), "ledger view missing: {msg}");
+        assert!(msg.contains("all-reduce"), "collective kind not named: {msg}");
+        // The handle is failed, not leaked: a later wait agrees instead of
+        // timing out again.
+        let err2 = k.wait(ch.am).unwrap_err();
+        assert!(matches!(err2, shoal::Error::OperationFailed(_)), "{err2}");
+    });
+    cluster.run_kernel(1, |_k| {
+        // Deliberately absent from the collective.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+    cluster.join().unwrap();
+}
+
+/// A non-root kernel whose parent never fans the result down also fails
+/// with a diagnosis (no result from the parent) instead of hanging.
+#[test]
+fn missing_parent_result_is_diagnosed() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    // Kernel 1 contributes; root kernel 0 never participates, so the DOWN
+    // never comes.
+    cluster.run_kernel(1, |mut k| {
+        k.timeout = std::time::Duration::from_millis(300);
+        let ch = k.all_reduce_u64(ReduceOp::Sum, &[7]).unwrap();
+        let err = k.collective_wait_u64(ch).unwrap_err();
+        assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("parent kernel 0"), "parent not named: {msg}");
+    });
+    cluster.run_kernel(0, |_k| {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    });
+    cluster.join().unwrap();
+}
+
 /// Decoding hostile wire bytes through the packet layer never panics.
 #[test]
 fn hostile_wire_bytes() {

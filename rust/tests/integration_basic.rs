@@ -355,3 +355,119 @@ fn handle_and_shim_waits_interleave() {
     });
     cluster.join().unwrap();
 }
+
+/// Collectives over a heterogeneous cluster: software and (simulated)
+/// hardware kernels join the same all-reduce through their respective
+/// runtimes, and the GAScore's collective counters observe the traffic.
+#[test]
+fn all_reduce_across_sw_and_hw_nodes() {
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Tcp);
+    b.default_segment(1 << 12);
+    let n0 = b.node_at("cpu", Platform::Sw, "127.0.0.1:0");
+    let n1 = b.node_at("fpga", Platform::Hw, "127.0.0.1:0");
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n1);
+    let k2 = b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    for kid in [k0, k1, k2] {
+        let tx = tx.clone();
+        cluster.run_kernel(kid, move |mut k| {
+            let ch = k.all_reduce_u64(ReduceOp::Max, &[kid as u64, 7]).unwrap();
+            let got = k.collective_wait_u64(ch).unwrap();
+            tx.send((kid, got)).unwrap();
+        });
+    }
+    drop(tx);
+    for _ in 0..3 {
+        let (kid, got) = rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("all-reduce result");
+        assert_eq!(got, vec![2, 7], "kernel {kid}");
+    }
+    let stats = cluster.gascore_stats(n1).expect("hw node has a GAScore");
+    assert!(
+        stats.collectives_in.load(std::sync::atomic::Ordering::Relaxed) > 0,
+        "GAScore never saw a collective message"
+    );
+    cluster.join().unwrap();
+}
+
+/// Broadcast and reduce round out the collective set; the tree barrier
+/// synchronizes like the counter barrier.
+#[test]
+fn bcast_reduce_and_tree_barrier() {
+    use shoal::collectives::Lane;
+    let spec = ClusterSpec::single_node("c", 4);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    for kid in 0..4u16 {
+        let tx = tx.clone();
+        cluster.run_kernel(kid, move |mut k| {
+            // bcast from a non-zero root.
+            let data = if kid == 2 { b"from-two".to_vec() } else { Vec::new() };
+            let ch = k.bcast(2, &data).unwrap();
+            assert_eq!(k.collective_wait(ch).unwrap(), b"from-two".to_vec());
+
+            // reduce(min) to root 1 — only the root sees the fold.
+            let mine = [kid as f64 + 0.5];
+            let ch = k
+                .reduce(1, ReduceOp::Min, Lane::F64, &shoal::collectives::encode_f64s(&mine))
+                .unwrap();
+            let got = k.collective_wait(ch).unwrap();
+            if kid == 1 {
+                assert_eq!(shoal::collectives::decode_f64s(&got).unwrap(), vec![0.5]);
+            } else {
+                assert!(got.is_empty(), "non-root reduce result must be empty");
+            }
+
+            // Tree barrier (twice, to exercise consecutive sequences).
+            k.barrier_tree().unwrap();
+            k.barrier_tree().unwrap();
+            tx.send(kid).unwrap();
+        });
+    }
+    drop(tx);
+    let mut done: Vec<u16> = (0..4)
+        .map(|_| rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap())
+        .collect();
+    done.sort_unstable();
+    assert_eq!(done, vec![0, 1, 2, 3]);
+    cluster.join().unwrap();
+}
+
+/// Collective handles compose with the generic wait primitives: `wait_all`
+/// fences a collective alongside point-to-point operations, and the empty
+/// wait contracts hold at the API level.
+#[test]
+fn collective_handles_compose_with_generic_waits() {
+    let spec = ClusterSpec::single_node("c", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    cluster.run_kernel(1, move |mut k| {
+        let ch = k.all_reduce_u64(ReduceOp::Sum, &[5]).unwrap();
+        let v = k.collective_wait_u64(ch).unwrap();
+        tx.send(v).unwrap();
+    });
+    cluster.run_kernel(0, move |mut k| {
+        // wait_all of nothing is a vacuous fence; wait_any of nothing is a
+        // typed error (the audited contract).
+        k.wait_all(&[]).unwrap();
+        let err = k.wait_any(&[]).unwrap_err();
+        assert!(matches!(err, shoal::Error::EmptyWaitSet("wait_any")), "{err}");
+
+        // One collective and one put fenced by a single wait_all.
+        let put = k.am_long(1, handlers::NOP, &[], &[3u8; 32], 0).unwrap();
+        let ch = k.all_reduce_u64(ReduceOp::Sum, &[4]).unwrap();
+        k.wait_all(&[put, ch.am]).unwrap();
+        // The result is still retrievable after the generic wait consumed
+        // the handle.
+        assert_eq!(k.collective_wait_u64(ch).unwrap(), vec![9]);
+    });
+    let v = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(v, vec![9]);
+    cluster.join().unwrap();
+}

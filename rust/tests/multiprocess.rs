@@ -21,10 +21,10 @@ fn free_ports() -> (u16, u16) {
     (a.local_addr().unwrap().port(), b.local_addr().unwrap().port())
 }
 
-fn cluster_file(p0: u16, p1: u16) -> String {
+fn cluster_file(transport: &str, p0: u16, p1: u16) -> String {
     format!(
         r#"
-transport = "tcp"
+transport = "{transport}"
 
 [[node]]
 name = "driver"
@@ -46,7 +46,7 @@ count = 2
     )
 }
 
-fn spawn_server(path: &std::path::Path, node: u16, max_msgs: u64) -> Child {
+fn spawn_server(path: &std::path::Path, node: u16, app: &str, max_msgs: u64) -> Child {
     Command::new(env!("CARGO_BIN_EXE_shoal"))
         .args([
             "serve",
@@ -55,7 +55,7 @@ fn spawn_server(path: &std::path::Path, node: u16, max_msgs: u64) -> Child {
             "--node",
             &node.to_string(),
             "--app",
-            "echo",
+            app,
             "--max-msgs",
             &max_msgs.to_string(),
         ])
@@ -69,7 +69,7 @@ fn spawn_server(path: &std::path::Path, node: u16, max_msgs: u64) -> Child {
 fn two_process_echo_over_tcp() {
     let _guard = PORT_LOCK.lock().unwrap();
     let (p0, p1) = free_ports();
-    let text = cluster_file(p0, p1);
+    let text = cluster_file("tcp", p0, p1);
     let spec = parse_cluster(&text).unwrap();
 
     // Write the cluster file for the server process.
@@ -81,7 +81,7 @@ fn two_process_echo_over_tcp() {
     drop(f);
 
     const MSGS: u64 = 25;
-    let mut server = spawn_server(&path, 1, MSGS);
+    let mut server = spawn_server(&path, 1, "echo", MSGS);
 
     // Host node 0 in this process and drive both remote kernels.
     let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
@@ -111,6 +111,57 @@ fn two_process_echo_over_tcp() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// Cross-transport tree collectives over real processes: this process hosts
+/// node 0 (one kernel, the tree root) while a spawned `shoal serve --app
+/// allreduce` hosts node 1 (two kernels); all three kernels join one
+/// all-reduce of their kernel ids — over TCP and again over UDP.
+#[test]
+fn cross_transport_all_reduce() {
+    for transport in ["tcp", "udp"] {
+        let _guard = PORT_LOCK.lock().unwrap();
+        let (p0, p1) = free_ports();
+        let text = cluster_file(transport, p0, p1);
+        let spec = parse_cluster(&text).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("shoal-mp-ar-{transport}-{p0}-{p1}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cluster.toml");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        drop(f);
+
+        let mut server = spawn_server(&path, 1, "allreduce", 0);
+        let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        cluster.run_kernel(0, move |mut k| {
+            // Readiness handshake (UDP has no retransmit): each remote
+            // kernel repeats hello until released, so once we have heard
+            // from both, every socket is bound and no collective message
+            // can be dropped on an unbound port.
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < 2 {
+                seen.insert(k.recv_medium().unwrap().src);
+            }
+            for kid in [1u16, 2] {
+                k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+            }
+            let ch = k.all_reduce_u64(ReduceOp::Sum, &[k.id() as u64]).unwrap();
+            let v = k.collective_wait_u64(ch).unwrap();
+            tx.send(v).unwrap();
+        });
+        let v = rx
+            .recv_timeout(std::time::Duration::from_secs(60))
+            .unwrap_or_else(|_| panic!("all-reduce over {transport} timed out"));
+        // Kernel ids 0, 1, 2 → sum 3.
+        assert_eq!(v, vec![3], "fold of kernel ids over {transport}");
+        cluster.join().unwrap();
+
+        let status = server.wait().expect("server exits after the collective");
+        assert!(status.success(), "server exit over {transport}: {status:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
 #[test]
 fn launch_node_rejects_local_transport() {
     let spec = shoal::config::ClusterSpec::single_node("n", 1);
@@ -121,7 +172,7 @@ fn launch_node_rejects_local_transport() {
 fn launch_node_rejects_unknown_node() {
     let _guard = PORT_LOCK.lock().unwrap();
     let (p0, p1) = free_ports();
-    let spec = parse_cluster(&cluster_file(p0, p1)).unwrap();
+    let spec = parse_cluster(&cluster_file("tcp", p0, p1)).unwrap();
     assert!(matches!(
         ShoalCluster::launch_node(&spec, 9),
         Err(shoal::Error::UnknownNode(9))

@@ -5,9 +5,11 @@
 
 use shoal::am::header::{AmMessage, Descriptor, MAX_VECTORED};
 use shoal::am::types::{AmFlags, AmType};
+use shoal::collectives::{CollectiveTree, ReduceOp, TreeKind};
 use shoal::galapagos::packet::{Packet, MAX_PAYLOAD_BYTES};
 use shoal::galapagos::router::RoutingTable;
 use shoal::memory::Segment;
+use shoal::prelude::ShoalCluster;
 use shoal::util::proptest::check;
 use shoal::util::rng::Rng;
 use shoal::{prop_assert, prop_assert_eq};
@@ -345,6 +347,150 @@ fn prop_header_overhead_matches_wire() {
         let msg = random_am(rng);
         let wire = msg.encode().map_err(|e| format!("{e}"))?;
         prop_assert_eq!(wire.len(), msg.header_overhead() + msg.payload.len());
+        Ok(())
+    });
+}
+
+/// Spawn a small single-node software cluster with `n` kernels and tight
+/// segments — the harness of the collective properties.
+fn small_cluster(n: u16) -> Result<shoal::config::ClusterSpec, String> {
+    let mut b = shoal::config::ClusterBuilder::new();
+    b.default_segment(1 << 12);
+    let node = b.node("prop", shoal::config::Platform::Sw);
+    for _ in 0..n {
+        b.kernel(node);
+    }
+    b.build().map_err(|e| format!("{e}"))
+}
+
+#[test]
+fn prop_collective_tree_is_well_formed_spanning_tree() {
+    check("collective-tree-spanning", 500, |rng| {
+        // Random, possibly sparse and non-contiguous kernel ids.
+        let count = rng.range(1, 64) as usize;
+        let mut ids: Vec<u16> = (0..count).map(|_| rng.below(1 << 12) as u16).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let root = *rng.pick(&ids);
+        for kind in [TreeKind::Binomial, TreeKind::Binary] {
+            let tree =
+                CollectiveTree::new(ids.clone(), root, kind).map_err(|e| format!("{e}"))?;
+            prop_assert_eq!(tree.root(), root);
+            prop_assert_eq!(tree.len(), ids.len());
+            // Every non-root has exactly one parent; parent links agree with
+            // children lists; walking parents reaches the root acyclically.
+            for &id in &ids {
+                let p = tree.parent(id).map_err(|e| format!("{e}"))?;
+                if id == root {
+                    prop_assert!(p.is_none(), "root {root} must have no parent");
+                    continue;
+                }
+                let parent = p.ok_or_else(|| format!("non-root {id} has no parent"))?;
+                let siblings = tree.children(parent).map_err(|e| format!("{e}"))?;
+                prop_assert!(
+                    siblings.contains(&id),
+                    "parent {parent} does not list child {id}"
+                );
+                let mut cur = id;
+                let mut hops = 0usize;
+                while cur != root {
+                    cur = tree
+                        .parent(cur)
+                        .map_err(|e| format!("{e}"))?
+                        .ok_or_else(|| format!("dangling non-root {cur}"))?;
+                    hops += 1;
+                    prop_assert!(hops <= ids.len(), "cycle walking from {id} to the root");
+                }
+            }
+            // Children lists partition the non-root ids: no kernel has two
+            // parents, nobody claims the root, everyone is claimed once.
+            let mut seen = std::collections::HashSet::new();
+            for &id in &ids {
+                for c in tree.children(id).map_err(|e| format!("{e}"))? {
+                    prop_assert!(c != root, "root listed as a child of {id}");
+                    prop_assert!(seen.insert(c), "kernel {c} has two parents");
+                }
+            }
+            prop_assert_eq!(seen.len(), ids.len() - 1);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_reduce_equals_scalar_fold_on_every_kernel() {
+    // Random cluster sizes 1..=16, random ops, random lane counts: the
+    // all-reduce every kernel observes must equal the serial fold.
+    check("all-reduce-fold", 8, |rng| {
+        let n = rng.range(1, 16) as u16;
+        let lanes = rng.range(1, 4) as usize;
+        let op = *rng.pick(&[ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max]);
+        let vals: Vec<Vec<u64>> = (0..n)
+            .map(|_| (0..lanes).map(|_| rng.below(1 << 40)).collect())
+            .collect();
+        let mut want = vals[0].clone();
+        for v in &vals[1..] {
+            for (w, x) in want.iter_mut().zip(v) {
+                *w = match op {
+                    ReduceOp::Sum => w.wrapping_add(*x),
+                    ReduceOp::Min => (*w).min(*x),
+                    ReduceOp::Max => (*w).max(*x),
+                };
+            }
+        }
+
+        let spec = small_cluster(n)?;
+        let cluster = ShoalCluster::launch(&spec).map_err(|e| format!("{e}"))?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        for kid in 0..n {
+            let mine = vals[kid as usize].clone();
+            let tx = tx.clone();
+            cluster.run_kernel(kid, move |mut k| {
+                let ch = k.all_reduce_u64(op, &mine).unwrap();
+                let got = k.collective_wait_u64(ch).unwrap();
+                tx.send(got).unwrap();
+            });
+        }
+        drop(tx);
+        for _ in 0..n {
+            let got = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .map_err(|_| "all-reduce result timeout".to_string())?;
+            prop_assert_eq!(got, want);
+        }
+        cluster.join().map_err(|e| format!("{e}"))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bcast_delivers_roots_bytes_everywhere() {
+    check("bcast-root-bytes", 8, |rng| {
+        let n = rng.range(1, 16) as u16;
+        let root = rng.below(n as u64) as u16;
+        let len = rng.range(1, 512) as usize;
+        let payload = rng.bytes(len);
+
+        let spec = small_cluster(n)?;
+        let cluster = ShoalCluster::launch(&spec).map_err(|e| format!("{e}"))?;
+        let (tx, rx) = std::sync::mpsc::channel();
+        for kid in 0..n {
+            let data = if kid == root { payload.clone() } else { Vec::new() };
+            let tx = tx.clone();
+            cluster.run_kernel(kid, move |mut k| {
+                let ch = k.bcast(root, &data).unwrap();
+                let got = k.collective_wait(ch).unwrap();
+                tx.send(got).unwrap();
+            });
+        }
+        drop(tx);
+        for _ in 0..n {
+            let got = rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .map_err(|_| "bcast result timeout".to_string())?;
+            prop_assert_eq!(got, payload);
+        }
+        cluster.join().map_err(|e| format!("{e}"))?;
         Ok(())
     });
 }
