@@ -2,8 +2,14 @@
 //!
 //! Modeled series for the four cross-node topologies, with the paper's
 //! missing hardware points (2048/4096 B — IP fragmentation unsupported by
-//! the FPGA UDP core) reproduced as `n/a`. A measured software UDP-vs-TCP
-//! comparison over loopback follows as calibration evidence.
+//! the FPGA UDP core) reproduced as `n/a`. A measured software comparison
+//! over loopback follows as calibration evidence — now in three columns:
+//! TCP, raw UDP (the paper's lossy datapath, `udp_window = 0`) and
+//! **reliable UDP** (the sliding-window ARQ layer), the configuration the
+//! paper never reached because its hardware core accepts loss.
+//!
+//! Exits nonzero when a paper-shape check fails (CI gates on this, like
+//! fig4/fig6) or when a measured stage cannot complete.
 //!
 //! Run: `cargo bench --bench fig5_udp_speedup`
 
@@ -16,6 +22,7 @@ use shoal::util::table::Table;
 fn main() {
     let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
     let cm = CostModel::paper();
+    let mut failed_checks: Vec<&'static str> = Vec::new();
 
     let t = report::fig5_udp_speedup(&cm);
     println!("{}", t.render());
@@ -24,7 +31,6 @@ fn main() {
     }
 
     // -- paper shape assertions ---------------------------------------------------
-    let mut checks = Vec::new();
     let mut all_faster = true;
     for topo in [Topology::SwSwDiff, Topology::SwHw, Topology::HwHwDiff] {
         for p in [8usize, 64, 512, 1024] {
@@ -33,44 +39,57 @@ fn main() {
             all_faster &= udp < tcp;
         }
     }
-    checks.push(("UDP faster than TCP at every supported point", all_faster));
+    if !all_faster {
+        failed_checks.push("UDP not faster than TCP at every supported point");
+    }
     let gap = report::avg_latency_ns(&cm, Topology::HwHwDiff, Protocol::Udp, 2048).is_none()
         && report::avg_latency_ns(&cm, Topology::SwHw, Protocol::Udp, 4096).is_none()
         && report::avg_latency_ns(&cm, Topology::SwSwDiff, Protocol::Udp, 4096).is_some();
-    checks.push(("HW 2048/4096 B points missing (fragmentation), SW present", gap));
-    println!("shape checks vs paper:");
-    for (name, ok) in checks {
-        println!("  [{}] {}", if ok { "✓" } else { "✗" }, name);
+    if !gap {
+        failed_checks.push("HW 2048/4096 B fragmentation gap shape lost");
     }
+    println!("shape checks vs paper:");
+    println!("  [{}] UDP faster than TCP at every supported point", if all_faster { "✓" } else { "✗" });
+    println!("  [{}] HW 2048/4096 B points missing (fragmentation), SW present", if gap { "✓" } else { "✗" });
     println!();
 
-    // -- measured loopback UDP vs TCP ------------------------------------------------
+    // -- measured loopback: TCP vs raw UDP vs reliable UDP ---------------------------
     let samples = if quick { 50 } else { 300 };
-    let mut m = Table::new("measured SW-SW(diff) over loopback: UDP vs TCP")
-        .header(["payload", "tcp median (µs)", "udp median (µs)", "speedup"]);
+    let mut m = Table::new("measured SW-SW(diff) over loopback: TCP vs raw vs reliable UDP")
+        .header([
+            "payload",
+            "tcp median (µs)",
+            "raw udp (µs)",
+            "reliable udp (µs)",
+            "udp speedup",
+            "arq overhead",
+        ]);
+    let bench = |placement: BenchPlacement, payload: usize, what: &str| {
+        measure_latency(placement, MsgKind::MediumFifo, payload, samples, samples / 10)
+            .unwrap_or_else(|e| panic!("{what} bench failed: {e}"))
+    };
     for payload in [8usize, 512, 1024] {
-        let tcp = measure_latency(
-            BenchPlacement::sw_diff(TransportKind::Tcp),
-            MsgKind::MediumFifo,
-            payload,
-            samples,
-            samples / 10,
-        )
-        .expect("tcp bench");
-        let udp = measure_latency(
-            BenchPlacement::sw_diff(TransportKind::Udp),
-            MsgKind::MediumFifo,
-            payload,
-            samples,
-            samples / 10,
-        )
-        .expect("udp bench");
+        let tcp = bench(BenchPlacement::sw_diff(TransportKind::Tcp), payload, "tcp");
+        let raw = bench(BenchPlacement::sw_diff(TransportKind::Udp).raw_udp(), payload, "raw udp");
+        let arq = bench(BenchPlacement::sw_diff(TransportKind::Udp), payload, "reliable udp");
         m.row([
             payload.to_string(),
             format!("{:.1}", tcp.median() / 1000.0),
-            format!("{:.1}", udp.median() / 1000.0),
-            format!("{:.2}x", tcp.median() / udp.median()),
+            format!("{:.1}", raw.median() / 1000.0),
+            format!("{:.1}", arq.median() / 1000.0),
+            format!("{:.2}x", tcp.median() / arq.median()),
+            format!("{:.2}x", arq.median() / raw.median()),
         ]);
     }
     println!("{}", m.render());
+    if let Ok(p) = report::save_csv(&m, "fig5_measured_reliable_udp") {
+        println!("csv: {}", p.display());
+    }
+
+    if !failed_checks.is_empty() {
+        for f in &failed_checks {
+            eprintln!("FAILED CHECK: {f}");
+        }
+        std::process::exit(1);
+    }
 }

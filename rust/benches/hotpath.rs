@@ -37,7 +37,9 @@ use shoal::bench::micro::{
 use shoal::bench::report;
 use shoal::galapagos::packet::Packet;
 use shoal::galapagos::router::RouterMsg;
+use shoal::galapagos::transport::arq::{ArqConfig, ArqEndpoint};
 use shoal::galapagos::transport::tcp::{TcpEgress, TcpIngress};
+use shoal::galapagos::transport::udp::{UdpEgress, UdpIngress};
 use shoal::galapagos::transport::Egress;
 use shoal::memory::Segment;
 use shoal::sim::MsgKind;
@@ -110,6 +112,112 @@ fn tcp_send_rate(batch: Option<(usize, usize)>, msgs: usize) -> f64 {
     rate
 }
 
+/// Time the send side of `msgs` 64-byte packets through a loopback UDP
+/// egress/ingress pair (batched 16 KiB / 64 msgs, like the TCP stage);
+/// returns messages/second.
+///
+/// - `reliable = false`: the paper's raw datapath — rate is the staging +
+///   `send_to` cost; delivery is NOT asserted (loopback bursts overflow the
+///   receive buffer by design, which is exactly the silent loss the ARQ
+///   layer exists to fix).
+/// - `reliable = true`: the full ARQ datapath — every datagram enters the
+///   sliding window, the receiver ACKs and the measured interval includes
+///   draining the window, after which delivery of **all** messages is
+///   asserted.
+fn udp_send_rate(reliable: bool, msgs: usize) -> f64 {
+    let rx_sock = std::net::UdpSocket::bind("127.0.0.1:0").expect("bind rx");
+    let tx_sock = std::net::UdpSocket::bind("127.0.0.1:0").expect("bind tx");
+    let rx_addr = rx_sock.local_addr().unwrap().to_string();
+    let tx_addr = tx_sock.local_addr().unwrap().to_string();
+    let (tx, rx) = std::sync::mpsc::channel();
+
+    let cfg = |node_id| ArqConfig {
+        node_id,
+        window: 32,
+        max_retries: 6,
+        ack_interval: std::time::Duration::from_millis(2),
+    };
+    let mut _keep_ack_rx = None;
+    let (sender_ep, _ingresses) = if reliable {
+        let sender_ep = std::sync::Arc::new(ArqEndpoint::new(
+            cfg(0),
+            tx_sock.try_clone().unwrap(),
+            HashMap::from([(1u16, rx_addr.clone())]),
+            None,
+        ));
+        let recv_ep = std::sync::Arc::new(ArqEndpoint::new(
+            cfg(1),
+            rx_sock.try_clone().unwrap(),
+            HashMap::from([(0u16, tx_addr)]),
+            None,
+        ));
+        // The sender-side reader consumes returning ACKs (no payloads ever
+        // arrive on it, but the shared endpoint frees the window).
+        let (ack_tx, ack_rx) = std::sync::mpsc::channel();
+        _keep_ack_rx = Some(ack_rx); // keep the channel open for the bench's life
+        let a = UdpIngress::start_with_reliability(
+            tx_sock.try_clone().unwrap(),
+            ack_tx,
+            false,
+            Some(std::sync::Arc::clone(&sender_ep)),
+        )
+        .expect("ack ingress");
+        let b = UdpIngress::start_with_reliability(rx_sock, tx, false, Some(recv_ep))
+            .expect("rx ingress");
+        (Some(sender_ep), vec![a, b])
+    } else {
+        let b = UdpIngress::start(rx_sock, tx, false).expect("rx ingress");
+        (None, vec![b])
+    };
+
+    // Drain delivered packets so the receive path never stalls; counts
+    // deliveries for the reliable-mode assertion. Raw mode is ALLOWED to
+    // lose messages, so its drain gives up after a short silence.
+    let expected = msgs;
+    let idle = std::time::Duration::from_secs(if reliable { 10 } else { 2 });
+    let drain = std::thread::spawn(move || {
+        let mut n = 0usize;
+        while n < expected {
+            match rx.recv_timeout(idle) {
+                Ok(RouterMsg::FromNetwork(_)) => n += 1,
+                Ok(_) => {}
+                Err(_) => break,
+            }
+        }
+        n
+    });
+
+    let mut egress = UdpEgress::with_batching(
+        tx_sock,
+        HashMap::from([(1u16, rx_addr)]),
+        false,
+        16 << 10,
+        64,
+    );
+    if let Some(ep) = &sender_ep {
+        egress = egress.with_reliability(std::sync::Arc::clone(ep));
+    }
+    let payload = vec![0xA5u8; 64];
+
+    let t0 = Instant::now();
+    for _ in 0..msgs {
+        egress.send(1, Packet::new(0, 0, payload.clone()).unwrap()).unwrap();
+    }
+    egress.flush().unwrap();
+    if let Some(ep) = &sender_ep {
+        // The reliable stage pays for its guarantee inside the measured
+        // interval: the window must fully drain (everything ACKed).
+        ep.drain(std::time::Duration::from_secs(30));
+    }
+    let rate = msgs as f64 / t0.elapsed().as_secs_f64();
+
+    let received = drain.join().expect("drain thread");
+    if sender_ep.is_some() {
+        assert_eq!(received, expected, "reliable UDP lost messages");
+    }
+    rate
+}
+
 fn main() {
     let quick = std::env::var("SHOAL_BENCH_QUICK").is_ok();
     let n = if quick { 2_000 } else { 20_000 };
@@ -166,6 +274,35 @@ fn main() {
     println!("  [{}] batched ≥2× unbatched (small messages)", if ok { "✓" } else { "✗" });
     if !ok {
         failed_checks.push("batched send stage < 2x unbatched");
+    }
+
+    println!("== hotpath: UDP ARQ datapath (loopback, 64 B, batched) ==");
+    let arq_msgs = if quick { 10_000 } else { 100_000 };
+    let raw_udp = udp_send_rate(false, arq_msgs);
+    println!("  raw UDP send stage (lossy)             {:>12.0} msgs/s", raw_udp);
+    let reliable_udp = udp_send_rate(true, arq_msgs);
+    println!("  reliable UDP send stage (ARQ, acked)   {:>12.0} msgs/s", reliable_udp);
+    let arq_ratio = reliable_udp / raw_udp;
+    println!("      -> reliability overhead {arq_ratio:.2}× of raw");
+    let mut acsv = Table::new("hotpath ARQ stage").header(["stage", "value", "unit"]);
+    for (name, v, unit) in [
+        ("udp_raw", raw_udp, "msgs/s"),
+        ("udp_reliable", reliable_udp, "msgs/s"),
+        ("arq_ratio", arq_ratio, "x"),
+    ] {
+        acsv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+        csv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+    }
+    if let Ok(p) = report::save_csv(&acsv, "hotpath_arq") {
+        println!("  csv: {}", p.display());
+    }
+    let ok = arq_ratio >= 0.8;
+    println!(
+        "  [{}] reliable UDP ≥0.8× raw UDP msgs/s on a loss-free link",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("reliable UDP below 0.8x raw UDP send rate");
     }
 
     println!("== hotpath: PGAS segment ==");

@@ -216,6 +216,24 @@ impl CompletionTable {
         self.cv.notify_all();
     }
 
+    /// Transition slot `(slot, gen)` to failed if it is still the same
+    /// occupancy and still in flight; counts its unresolved replies as lost
+    /// so the `wait_replies` shim fails fast instead of timing out. Shared
+    /// by the handle-side [`fail`](CompletionTable::fail) and the
+    /// transport-side [`fail_token`](CompletionTable::fail_token).
+    fn fail_slot(inner: &mut TableInner, slot: u32, gen: u32, reason: &str) {
+        if let Some(s) = inner.slots.get_mut(slot as usize) {
+            if s.gen == gen {
+                if let SlotState::InFlight { remaining } = &s.state {
+                    let remaining = *remaining;
+                    s.state = SlotState::Failed(reason.to_string());
+                    inner.lost_replies += remaining;
+                    inner.inflight_replies = inner.inflight_replies.saturating_sub(remaining);
+                }
+            }
+        }
+    }
+
     /// Transition `h` to failed (send error after the operation was
     /// registered). Waiters observe the reason via `wait`/`test`; the
     /// operation's unresolved replies are counted as lost so the
@@ -225,16 +243,21 @@ impl CompletionTable {
             return;
         }
         let mut g = self.inner.lock().unwrap();
-        let inner: &mut TableInner = &mut g;
-        if let Some(s) = inner.slots.get_mut(h.slot as usize) {
-            if s.gen == h.gen {
-                if let SlotState::InFlight { remaining } = &s.state {
-                    let remaining = *remaining;
-                    s.state = SlotState::Failed(reason.to_string());
-                    inner.lost_replies += remaining;
-                    inner.inflight_replies = inner.inflight_replies.saturating_sub(remaining);
-                }
-            }
+        Self::fail_slot(&mut g, h.slot, h.gen, reason);
+        self.cv.notify_all();
+    }
+
+    /// Transition the operation that issued `token` to failed — the
+    /// transport-side twin of [`fail`](CompletionTable::fail), used when a
+    /// send failure is discovered *after* the issuing call returned (a
+    /// failed batch flush, or reliable-UDP retries exhausting). The lost
+    /// wire message names its operation through the token it carried, so
+    /// the exact handle fails instead of stranding until timeout. Unknown
+    /// or stale tokens (operation already completed or reaped) are ignored.
+    pub fn fail_token(&self, token: u32, reason: &str) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(&(slot, gen)) = g.tokens.get(&token) {
+            Self::fail_slot(&mut g, slot, gen, reason);
         }
         self.cv.notify_all();
     }
@@ -465,6 +488,27 @@ mod tests {
         assert!(matches!(err, Error::OperationFailed(_)), "{err}");
         // Consumed: a second wait observes the reclaimed slot as settled.
         tab.wait(h, T).unwrap();
+        assert_eq!(tab.live_entries(), 0);
+    }
+
+    #[test]
+    fn fail_token_fails_the_owning_operation() {
+        let tab = CompletionTable::new();
+        let h = tab.create(1);
+        let tok = tab.bind_token(h);
+        tab.fail_token(tok, "udp ARQ retries exhausted toward node 3");
+        let err = tab.wait(h, T).unwrap_err();
+        assert!(
+            matches!(&err, Error::OperationFailed(m) if m.contains("retries exhausted")),
+            "{err}"
+        );
+        // Unknown and stale tokens are no-ops.
+        tab.fail_token(0xDEAD_BEEF, "nope");
+        let h2 = tab.create(1);
+        let tok2 = tab.bind_token(h2);
+        tab.resolve(tok2);
+        tab.wait(h2, T).unwrap();
+        tab.fail_token(tok2, "late"); // already resolved + reaped
         assert_eq!(tab.live_entries(), 0);
     }
 

@@ -231,6 +231,17 @@ pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport>
     let cluster = ShoalCluster::launch(&spec)?;
     let (wtx, wrx) = mpsc::channel::<WorkerReport>();
     let (ctx, crx) = mpsc::channel::<Result<ControlReport>>();
+    // Worker failures are *data*, not process death: each worker reports
+    // its error here and `run` converts the first one into a typed
+    // `Error::OperationFailed` naming the worker (the historical `panic!`
+    // took the whole process down with it).
+    let (etx, erx) = mpsc::channel::<(usize, Error)>();
+    // Failure-injection hook for the error-propagation tests: the named
+    // worker fails instead of running (mirrors `SHOAL_UDP_DROP`'s role for
+    // the transport battery).
+    let fault_worker: Option<usize> = std::env::var("SHOAL_JACOBI_FAULT_WORKER")
+        .ok()
+        .and_then(|v| v.parse().ok());
 
     for (w, s) in strips_v.iter().enumerate() {
         let layout = SegmentLayout::new(s.rows, cfg.n);
@@ -239,13 +250,18 @@ pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport>
             None => Arc::new(RustSweep),
         };
         let wtx = wtx.clone();
+        let etx = etx.clone();
         let (workers, iters, wi) = (cfg.workers, cfg.iters, w);
         let conv = cfg.convergence();
         cluster.run_kernel(kernels::worker_kid(w), move |k| {
-            if let Err(e) = worker_kernel(k, wi, workers, layout, compute, iters, conv, wtx) {
-                // The error surfaces through the missing report + join.
+            let res = if fault_worker == Some(wi) {
+                Err(Error::OperationFailed("injected worker fault".into()))
+            } else {
+                worker_kernel(k, wi, workers, layout, compute, iters, conv, wtx)
+            };
+            if let Err(e) = res {
                 log::error!("worker {wi}: {e}");
-                panic!("worker {wi} failed: {e}");
+                let _ = etx.send((wi, e));
             }
         });
     }
@@ -257,11 +273,34 @@ pub fn run_with_grid(cfg: &JacobiConfig, grid: Vec<f32>) -> Result<JacobiReport>
             let _ = ctx.send(control_kernel(k, grid, n, strips_v, iters, conv));
         });
     }
+    drop(etx);
 
-    let control = crx
-        .recv_timeout(Duration::from_secs(600))
-        .map_err(|_| Error::Timeout("control kernel"))??;
+    // Wait for the control result while watching for worker failures: a
+    // dead worker leaves its neighbours and the control kernel stuck in
+    // barrier waits, so the first reported error short-circuits the run
+    // (dropping the cluster shuts the routers down behind it).
+    let deadline = std::time::Instant::now() + Duration::from_secs(600);
+    let control = loop {
+        if let Ok((wi, e)) = erx.try_recv() {
+            return Err(Error::OperationFailed(format!("worker {wi} failed: {e}")));
+        }
+        match crx.recv_timeout(Duration::from_millis(100)) {
+            Ok(r) => break r?,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                if std::time::Instant::now() >= deadline {
+                    return Err(Error::Timeout("control kernel"));
+                }
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return Err(Error::Disconnected("jacobi control kernel"));
+            }
+        }
+    };
     cluster.join()?;
+    // A worker that failed *after* the control result still taints the run.
+    if let Ok((wi, e)) = erx.try_recv() {
+        return Err(Error::OperationFailed(format!("worker {wi} failed: {e}")));
+    }
     drop(wtx);
     let mut worker_reports: Vec<WorkerReport> = wrx.try_iter().collect();
     worker_reports.sort_by_key(|r| r.worker);

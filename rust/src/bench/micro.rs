@@ -28,6 +28,9 @@ pub struct BenchPlacement {
     pub transport: TransportKind,
     pub batch_bytes: usize,
     pub batch_max_msgs: usize,
+    /// UDP ARQ window for the cluster under test (`0` = the paper's raw
+    /// lossy datapath; ignored by other transports).
+    pub udp_window: usize,
 }
 
 impl BenchPlacement {
@@ -39,6 +42,7 @@ impl BenchPlacement {
             transport: TransportKind::Local,
             batch_bytes: 0,
             batch_max_msgs: crate::config::DEFAULT_BATCH_MAX_MSGS,
+            udp_window: crate::config::DEFAULT_UDP_WINDOW,
         }
     }
 
@@ -67,11 +71,19 @@ impl BenchPlacement {
         self
     }
 
+    /// Same placement with the UDP ARQ layer disabled (the paper's raw
+    /// lossy datapath; the fig5 calibration rows compare both).
+    pub fn raw_udp(mut self) -> Self {
+        self.udp_window = 0;
+        self
+    }
+
     fn spec(&self) -> Result<ClusterSpec> {
         let mut b = ClusterBuilder::new();
         b.transport(self.transport);
         b.default_segment(1 << 20);
         b.batch_bytes(self.batch_bytes).batch_max_msgs(self.batch_max_msgs);
+        b.udp_window(self.udp_window);
         let addr = |_i: usize| "127.0.0.1:0".to_string();
         let mk = |b: &mut ClusterBuilder, name: &str, p: Platform, t: TransportKind, i: usize| {
             if t == TransportKind::Local {

@@ -112,6 +112,16 @@ pub struct ClusterSpec {
     /// Flush staged egress batches whenever a node's router queue goes
     /// idle, preserving single-message latency (default `true`).
     pub flush_on_idle: bool,
+    /// Sliding-window size (unacknowledged datagrams per peer) of the UDP
+    /// ARQ reliability layer; a full window blocks `send` (backpressure).
+    /// `0` disables the layer — the historical lossy-UDP wire behavior.
+    pub udp_window: usize,
+    /// Retransmissions before a reliable-UDP datagram is declared lost and
+    /// the completion handles of the messages it carried are failed.
+    pub udp_retries: u32,
+    /// Standalone-ACK delay in milliseconds for one-way reliable-UDP flows
+    /// (ACKs piggyback on reverse traffic when there is any).
+    pub udp_ack_interval_ms: u64,
 }
 
 /// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
@@ -122,6 +132,18 @@ pub const DEFAULT_SEGMENT: usize = 64 << 20;
 /// explicit `batch_max_msgs`.
 pub const DEFAULT_BATCH_MAX_MSGS: usize =
     crate::galapagos::transport::batch::DEFAULT_BATCH_MAX_MSGS;
+
+/// Default UDP ARQ window: reliability is ON by default — a dropped
+/// datagram under the AM layer used to hang collectives until straggler
+/// timeouts, which is the bug this layer fixes. Set `udp_window = 0` for
+/// the paper's raw lossy datapath.
+pub const DEFAULT_UDP_WINDOW: usize = 32;
+
+/// Default retransmission budget per reliable-UDP datagram.
+pub const DEFAULT_UDP_RETRIES: u32 = 6;
+
+/// Default standalone-ACK delay (milliseconds).
+pub const DEFAULT_UDP_ACK_INTERVAL_MS: u64 = 2;
 
 impl ClusterSpec {
     /// A single software node with `kernels` kernels — the simplest cluster.
@@ -212,6 +234,15 @@ impl ClusterSpec {
         if self.batch_max_msgs == 0 {
             return Err(Error::Config("batch_max_msgs must be at least 1".into()));
         }
+        // The SACK bitmap names at most 32 out-of-order datagrams; larger
+        // windows still work (timeouts cover the rest) but a silly value is
+        // almost certainly a typo for the byte-sized batch knobs.
+        if self.udp_window > 4096 {
+            return Err(Error::Config(format!(
+                "udp_window of {} is out of range (max 4096 datagrams)",
+                self.udp_window
+            )));
+        }
         Ok(())
     }
 }
@@ -228,6 +259,9 @@ pub struct ClusterBuilder {
     batch_bytes: usize,
     batch_max_msgs: usize,
     flush_on_idle: bool,
+    udp_window: usize,
+    udp_retries: u32,
+    udp_ack_interval_ms: u64,
 }
 
 impl ClusterBuilder {
@@ -236,6 +270,9 @@ impl ClusterBuilder {
             default_segment: DEFAULT_SEGMENT,
             batch_max_msgs: DEFAULT_BATCH_MAX_MSGS,
             flush_on_idle: true,
+            udp_window: DEFAULT_UDP_WINDOW,
+            udp_retries: DEFAULT_UDP_RETRIES,
+            udp_ack_interval_ms: DEFAULT_UDP_ACK_INTERVAL_MS,
             ..Default::default()
         }
     }
@@ -306,6 +343,24 @@ impl ClusterBuilder {
         self
     }
 
+    /// UDP ARQ sliding-window size (`0` = raw lossy UDP).
+    pub fn udp_window(&mut self, datagrams: usize) -> &mut Self {
+        self.udp_window = datagrams;
+        self
+    }
+
+    /// UDP ARQ retransmission budget per datagram.
+    pub fn udp_retries(&mut self, retries: u32) -> &mut Self {
+        self.udp_retries = retries;
+        self
+    }
+
+    /// UDP ARQ standalone-ACK delay in milliseconds.
+    pub fn udp_ack_interval_ms(&mut self, ms: u64) -> &mut Self {
+        self.udp_ack_interval_ms = ms;
+        self
+    }
+
     pub fn build(self) -> Result<ClusterSpec> {
         let spec = ClusterSpec {
             nodes: self.nodes,
@@ -317,6 +372,9 @@ impl ClusterBuilder {
             batch_bytes: self.batch_bytes,
             batch_max_msgs: self.batch_max_msgs,
             flush_on_idle: self.flush_on_idle,
+            udp_window: self.udp_window,
+            udp_retries: self.udp_retries,
+            udp_ack_interval_ms: self.udp_ack_interval_ms,
         };
         spec.validate()?;
         Ok(spec)
@@ -391,6 +449,32 @@ mod tests {
         assert_eq!(s.batch_bytes, 16384);
         assert_eq!(s.batch_max_msgs, 32);
         assert!(!s.flush_on_idle);
+    }
+
+    #[test]
+    fn udp_reliability_defaults_on() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert_eq!(s.udp_window, DEFAULT_UDP_WINDOW);
+        assert_eq!(s.udp_retries, DEFAULT_UDP_RETRIES);
+        assert_eq!(s.udp_ack_interval_ms, DEFAULT_UDP_ACK_INTERVAL_MS);
+    }
+
+    #[test]
+    fn udp_knobs_roundtrip_and_validate() {
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.udp_window(128).udp_retries(3).udp_ack_interval_ms(5);
+        let s = b.build().unwrap();
+        assert_eq!(s.udp_window, 128);
+        assert_eq!(s.udp_retries, 3);
+        assert_eq!(s.udp_ack_interval_ms, 5);
+
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.udp_window(1 << 20);
+        assert!(matches!(b.build(), Err(Error::Config(_))));
     }
 
     #[test]

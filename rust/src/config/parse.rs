@@ -67,6 +67,9 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     let mut batch_bytes: Option<usize> = None;
     let mut batch_max_msgs: Option<usize> = None;
     let mut flush_on_idle: Option<bool> = None;
+    let mut udp_window: Option<usize> = None;
+    let mut udp_retries: Option<u32> = None;
+    let mut udp_ack_interval: Option<u64> = None;
     let mut nodes: Vec<NodeSec> = Vec::new();
     let mut kernels: Vec<KernelSec> = Vec::new();
 
@@ -151,6 +154,21 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
                         _ => return Err(err("flush_on_idle must be true or false")),
                     })
                 }
+                "udp_window" => {
+                    udp_window =
+                        Some(value.parse().map_err(|_| err("udp_window must be an integer"))?)
+                }
+                "udp_retries" => {
+                    udp_retries =
+                        Some(value.parse().map_err(|_| err("udp_retries must be an integer"))?)
+                }
+                "udp_ack_interval" => {
+                    udp_ack_interval = Some(
+                        value
+                            .parse()
+                            .map_err(|_| err("udp_ack_interval must be an integer (ms)"))?,
+                    )
+                }
                 k => return Err(err(&format!("unknown top-level key '{k}'"))),
             },
             Section::Node(n) => match key {
@@ -186,6 +204,15 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     }
     if let Some(on) = flush_on_idle {
         b.flush_on_idle(on);
+    }
+    if let Some(w) = udp_window {
+        b.udp_window(w);
+    }
+    if let Some(r) = udp_retries {
+        b.udp_retries(r);
+    }
+    if let Some(ms) = udp_ack_interval {
+        b.udp_ack_interval_ms(ms);
     }
 
     let mut node_ids: Vec<(String, u16)> = Vec::new();
@@ -346,5 +373,24 @@ segment = 4096
         assert!(parse_cluster(&format!("batch_bytes = \"lots\"{base}")).is_err());
         assert!(parse_cluster(&format!("flush_on_idle = maybe{base}")).is_err());
         assert!(parse_cluster(&format!("batch_max_msgs = 0{base}")).is_err());
+    }
+
+    #[test]
+    fn parses_udp_reliability_knobs() {
+        let text = "udp_window = 16\nudp_retries = 4\nudp_ack_interval = 3\n\
+                    [[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        let s = parse_cluster(text).unwrap();
+        assert_eq!(s.udp_window, 16);
+        assert_eq!(s.udp_retries, 4);
+        assert_eq!(s.udp_ack_interval_ms, 3);
+        // Defaults when unspecified: reliability on.
+        let d = parse_cluster("[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n").unwrap();
+        assert_eq!(d.udp_window, crate::config::DEFAULT_UDP_WINDOW);
+        // ARQ can be switched off for the paper's raw datapath.
+        let raw =
+            parse_cluster("udp_window = 0\n[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n")
+                .unwrap();
+        assert_eq!(raw.udp_window, 0);
+        assert!(parse_cluster("udp_retries = \"many\"\n[[node]]\nname = \"a\"").is_err());
     }
 }

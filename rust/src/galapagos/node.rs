@@ -15,10 +15,11 @@ use std::sync::mpsc::{self, Receiver, Sender};
 use super::interface::GalapagosInterface;
 use super::packet::Packet;
 use super::router::{Router, RouterMsg, RouterStats, RoutingTable};
+use super::transport::arq::{ArqConfig, ArqEndpoint};
 use super::transport::local::LocalFabric;
 use super::transport::tcp::{TcpEgress, TcpIngress};
 use super::transport::udp::{UdpEgress, UdpIngress};
-use super::transport::Egress;
+use super::transport::{Egress, SendFailureSink};
 use crate::config::{ClusterSpec, TransportKind};
 use crate::error::{Error, Result};
 
@@ -31,6 +32,9 @@ pub struct BoundNode {
     tcp_ingress: Option<TcpIngress>,
     udp_socket: Option<std::net::UdpSocket>,
     udp_hw_core: bool,
+    /// Installed by the runtime before `start`: fails the completion handle
+    /// of every message the transport had to give up on.
+    failure_sink: Option<SendFailureSink>,
     /// The address peers should use to reach this node.
     pub advertised_addr: Option<String>,
 }
@@ -80,8 +84,15 @@ impl BoundNode {
             tcp_ingress,
             udp_socket,
             udp_hw_core,
+            failure_sink: None,
             advertised_addr: advertised,
         })
+    }
+
+    /// Install the send-failure sink (called by the Shoal runtime with a
+    /// closure that fails the owning completion handles) before `start`.
+    pub fn set_failure_sink(&mut self, sink: SendFailureSink) {
+        self.failure_sink = Some(sink);
     }
 
     /// Launch the router with a default delivery map: a fresh channel per
@@ -123,13 +134,42 @@ impl BoundNode {
         // `batch_bytes = 0` both transports behave exactly like the
         // historical unbatched path.
         let (batch_bytes, batch_max_msgs) = (self.spec.batch_bytes, self.spec.batch_max_msgs);
+        // A nonzero `udp_window` puts the sliding-window ARQ layer under the
+        // UDP datapath: the endpoint is shared between egress (send window,
+        // retransmit timers) and ingress (ACK processing, dedup/reorder).
+        // Hardware nodes speak the same ARQ header — the simulated UDP core
+        // is what the paper's FPGA core lacks, and the MTU accounting in the
+        // egress keeps reliable datagrams unfragmented.
+        let arq_endpoint = match (&self.spec.transport, &self.udp_socket) {
+            (TransportKind::Udp, Some(sock)) if self.spec.udp_window > 0 => {
+                Some(std::sync::Arc::new(ArqEndpoint::new(
+                    ArqConfig {
+                        node_id: self.node_id,
+                        window: self.spec.udp_window,
+                        max_retries: self.spec.udp_retries,
+                        ack_interval: std::time::Duration::from_millis(
+                            self.spec.udp_ack_interval_ms,
+                        ),
+                    },
+                    sock.try_clone()?,
+                    peer_addrs.clone(),
+                    self.failure_sink.clone(),
+                )))
+            }
+            _ => None,
+        };
+
         let egress: Box<dyn Egress> = match self.spec.transport {
             TransportKind::Local => {
                 fabric.register(self.node_id, self.router_tx.clone());
                 Box::new(fabric.egress())
             }
             TransportKind::Tcp => {
-                Box::new(TcpEgress::with_batching(peer_addrs, batch_bytes, batch_max_msgs))
+                let mut e = TcpEgress::with_batching(peer_addrs, batch_bytes, batch_max_msgs);
+                if let Some(sink) = &self.failure_sink {
+                    e = e.with_failure_sink(sink.clone());
+                }
+                Box::new(e)
             }
             TransportKind::Udp => {
                 let sock = self
@@ -137,20 +177,41 @@ impl BoundNode {
                     .as_ref()
                     .expect("udp transport bound a socket")
                     .try_clone()?;
-                Box::new(UdpEgress::with_batching(
+                let mut e = UdpEgress::with_batching(
                     sock,
                     peer_addrs,
                     self.udp_hw_core,
                     batch_bytes,
                     batch_max_msgs,
-                ))
+                );
+                if let Some(arq) = &arq_endpoint {
+                    // Reliable datagrams toward hardware peers must respect
+                    // the receiving core's MTU (it drops anything larger,
+                    // so retransmission could never succeed).
+                    e = e
+                        .with_reliability(std::sync::Arc::clone(arq))
+                        .with_hw_peers(
+                            self.spec
+                                .nodes
+                                .iter()
+                                .filter(|n| n.platform.is_hw())
+                                .map(|n| n.id),
+                        );
+                }
+                if let Some(sink) = &self.failure_sink {
+                    e = e.with_failure_sink(sink.clone());
+                }
+                Box::new(e)
             }
         };
 
         let udp_ingress = match (&self.spec.transport, self.udp_socket) {
-            (TransportKind::Udp, Some(sock)) => {
-                Some(UdpIngress::start(sock, self.router_tx.clone(), self.udp_hw_core)?)
-            }
+            (TransportKind::Udp, Some(sock)) => Some(UdpIngress::start_with_reliability(
+                sock,
+                self.router_tx.clone(),
+                self.udp_hw_core,
+                arq_endpoint,
+            )?),
             _ => None,
         };
 

@@ -14,7 +14,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -113,22 +113,48 @@ impl Router {
         stats: &RouterStats,
         flush_on_idle: bool,
     ) {
+        // Messages processed since the last egress timer service: a
+        // saturated queue must not starve ARQ retransmissions (one lost
+        // datagram would otherwise stall its peer's in-order flow until
+        // the router next idles), so the busy path services periodically.
+        // 64 messages at hot-path rates is far under any RTO; the call is
+        // a no-op for transports without timers.
+        const SERVICE_EVERY: u32 = 64;
+        let mut since_service = 0u32;
         loop {
             // Drain without blocking while messages are queued; only when
-            // the queue goes idle, flush staged egress batches and fall
-            // back to a blocking receive.
+            // the queue goes idle, flush staged egress batches, service the
+            // transport's timers (ARQ retransmissions / delayed ACKs) and
+            // fall back to a blocking receive — bounded by the transport's
+            // next timer deadline so reliability work never starves.
             let msg = match rx.try_recv() {
-                Ok(m) => m,
+                Ok(m) => {
+                    since_service += 1;
+                    if since_service >= SERVICE_EVERY {
+                        since_service = 0;
+                        egress.service();
+                    }
+                    m
+                }
                 Err(TryRecvError::Empty) => {
+                    since_service = 0; // the idle path services below
                     if flush_on_idle && egress.has_staged() {
                         stats.idle_flushes.fetch_add(1, Ordering::Relaxed);
                         if let Err(e) = egress.flush() {
                             log::warn!("router n{node_id}: idle flush failed: {e}");
                         }
                     }
-                    match rx.recv() {
-                        Ok(m) => m,
-                        Err(_) => break, // all senders gone
+                    match egress.service() {
+                        None => match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => break, // all senders gone
+                        },
+                        Some(deadline) => match rx.recv_timeout(deadline) {
+                            Ok(m) => m,
+                            // Timer due: loop back around to service again.
+                            Err(RecvTimeoutError::Timeout) => continue,
+                            Err(RecvTimeoutError::Disconnected) => break,
+                        },
                     }
                 }
                 Err(TryRecvError::Disconnected) => break,
@@ -164,10 +190,14 @@ impl Router {
                 }
             }
         }
-        // Don't strand staged packets on shutdown.
+        // Don't strand staged packets on shutdown — flush them, then let a
+        // reliable transport settle its in-flight window (a dropped final
+        // datagram has no other retransmitter once this process exits;
+        // retry exhaustion bounds the wait well under the cap).
         if let Err(e) = egress.flush() {
             log::warn!("router n{node_id}: final flush failed: {e}");
         }
+        egress.drain(std::time::Duration::from_secs(10));
     }
 
     fn deliver_local(local: &HashMap<u16, Sender<Packet>>, pkt: Packet, stats: &RouterStats) {

@@ -1,0 +1,1201 @@
+//! Sliding-window ARQ: the reliability layer under the UDP transport.
+//!
+//! The paper pins FPGA nodes to a hardware UDP core that simply accepts
+//! loss (§IV-B1) — which is why its UDP evaluation stops at
+//! microbenchmarks. A PGAS runtime is only portable when the transport
+//! guarantees delivery underneath the AM layer (THeGASNets runs its AMs
+//! over reliable transports for exactly this reason), so this module adds
+//! per-peer reliability to the datagram path:
+//!
+//! - every datagram carries a 20-byte ARQ header: sequence number,
+//!   cumulative ACK and selective-ACK bitmap piggybacked for the reverse
+//!   direction, plus the sender's `base` (lowest sequence it will still
+//!   retransmit, so an abandoned datagram can never wedge the flow);
+//! - the sender keeps a **sliding window** of unacknowledged datagrams in a
+//!   bounded in-flight buffer (recycled through a [`BufPool`]) and
+//!   retransmits on timeout with exponential backoff — or immediately when
+//!   the peer's SACK bitmap reports a gap (fast retransmit);
+//! - the receiver delivers **exactly once, in order**: duplicates are
+//!   re-ACKed and dropped, out-of-order arrivals are parked until the gap
+//!   fills, and cumulative ACKs ride on reverse traffic with a standalone
+//!   delayed-ACK timer covering one-way flows;
+//! - a full window **blocks** the sender (backpressure) instead of dropping,
+//!   and a datagram whose retries are exhausted fails with the frames it
+//!   carried, so the owning [`AmHandle`](crate::am::completion::AmHandle)s
+//!   fail rather than strand.
+//!
+//! The protocol core ([`ArqCore`]) is pure — it performs no I/O and is
+//! handed explicit timestamps — so the property tests can drive it through
+//! random drop/duplicate/reorder schedules deterministically.
+//! [`ArqEndpoint`] wraps the core in a mutex + condvar, owns a clone of the
+//! node's bound socket for ACKs and retransmissions, and implements the
+//! optional loss injection (`SHOAL_UDP_DROP`) the CI battery uses.
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::net::UdpSocket;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::batch::BufPool;
+use super::SendFailureSink;
+use crate::error::{Error, Result};
+use crate::galapagos::packet::Packet;
+
+/// First byte of every ARQ datagram (raw wire packets start with a kernel
+/// id's low byte, so a dedicated magic keeps mixed traffic diagnosable).
+pub const ARQ_MAGIC: u8 = 0xA7;
+
+/// Bytes the ARQ header prepends to each datagram. On hardware UDP cores
+/// this overhead counts against the MTU payload: a reliable datagram must
+/// still never fragment.
+///
+/// Layout (LE): `magic u8 · kind u8 · src_node u16 · seq u32 · ack u32 ·
+/// sack u32 · base u32`. `ack`/`sack` acknowledge the *reverse* direction
+/// (cumulative next-expected + selective bitmap); `base` is the lowest
+/// sequence the sender will still retransmit — everything below it is
+/// either already acknowledged or permanently abandoned (retries
+/// exhausted), so the receiver may advance past a dead gap instead of
+/// parking behind it forever.
+pub const ARQ_HEADER_BYTES: usize = 20;
+
+const KIND_DATA: u8 = 1;
+const KIND_ACK: u8 = 2;
+
+/// Reliability knobs (surfaced on `ClusterSpec` as `udp_window`,
+/// `udp_retries`, `udp_ack_interval`).
+#[derive(Clone, Copy, Debug)]
+pub struct ArqConfig {
+    /// This node's id, stamped into every header so the receiver can
+    /// attribute the datagram to a peer flow.
+    pub node_id: u16,
+    /// Max unacknowledged datagrams per peer; a full window blocks `send`.
+    pub window: usize,
+    /// Retransmissions before a datagram is declared lost and its frames'
+    /// handles are failed.
+    pub max_retries: u32,
+    /// Standalone-ACK delay for one-way flows (piggybacked ACKs on reverse
+    /// traffic make this timer moot for request/reply patterns).
+    pub ack_interval: Duration,
+}
+
+impl ArqConfig {
+    /// Base retransmission timeout; doubles per retry up to [`rto_cap`].
+    pub fn rto(&self) -> Duration {
+        (self.ack_interval * 5).max(Duration::from_millis(10))
+    }
+
+    /// Ceiling on the backed-off RTO.
+    pub fn rto_cap(&self) -> Duration {
+        Duration::from_millis(500)
+    }
+
+    /// Receiver sends an immediate ACK after this many unacknowledged DATA
+    /// datagrams, so bursts don't serialize on the delayed-ACK timer.
+    fn ack_every(&self) -> u32 {
+        (self.window as u32 / 4).max(1)
+    }
+}
+
+/// Wrap-safe strict "a < b" over u32 sequence space.
+fn seq_lt(a: u32, b: u32) -> bool {
+    (b.wrapping_sub(a) as i32) > 0
+}
+
+/// One unacknowledged datagram awaiting its ACK (or retransmission).
+struct InFlight {
+    seq: u32,
+    /// Full wire datagram (header + frames); the ACK fields are patched in
+    /// place before every retransmission.
+    dgram: Vec<u8>,
+    sent_at: Instant,
+    retries: u32,
+}
+
+/// Pending "base advanced past an abandoned gap" notification: re-sent on
+/// a timer until the peer's cumulative ACK proves it skipped the gap (or
+/// the notify's own retry budget runs out — the peer is then presumed
+/// gone). A single best-effort datagram would not survive the very loss
+/// that caused the abandonment.
+struct Notify {
+    base: u32,
+    due: Instant,
+    tries: u32,
+}
+
+#[derive(Default)]
+struct PeerTx {
+    next_seq: u32,
+    inflight: VecDeque<InFlight>,
+    notify: Option<Notify>,
+}
+
+struct PeerRx {
+    /// Next in-order sequence expected from the peer.
+    rcv_next: u32,
+    /// Out-of-order datagram payloads parked until the gap fills.
+    ooo: BTreeMap<u32, Vec<u8>>,
+    /// Deadline of the pending delayed ACK, if one is owed.
+    ack_due: Option<Instant>,
+    /// DATA datagrams received since the last ACK we sent.
+    unacked: u32,
+}
+
+impl Default for PeerRx {
+    fn default() -> Self {
+        PeerRx { rcv_next: 0, ooo: BTreeMap::new(), ack_due: None, unacked: 0 }
+    }
+}
+
+#[derive(Default)]
+struct PeerArq {
+    tx: PeerTx,
+    rx: PeerRx,
+}
+
+/// A datagram the caller must put on the wire.
+#[derive(Debug)]
+pub struct Emission {
+    pub peer: u16,
+    pub dgram: Vec<u8>,
+}
+
+/// Outcome of feeding one received datagram to the core.
+#[derive(Debug, Default)]
+pub struct Delivered {
+    /// In-order datagram payloads (each still a coalesced frame batch) to
+    /// hand to the frame decoder, exactly once each.
+    pub payloads: Vec<Vec<u8>>,
+    /// Control datagrams to emit right away (immediate ACKs, fast
+    /// retransmissions).
+    pub emit: Vec<Emission>,
+}
+
+/// Outcome of a timer poll.
+#[derive(Debug, Default)]
+pub struct Polled {
+    /// Retransmissions and due standalone ACKs.
+    pub emit: Vec<Emission>,
+    /// Datagram payloads whose retries are exhausted: `(peer, payload)` —
+    /// the caller fails every frame the payload carries.
+    pub failures: Vec<(u16, Vec<u8>)>,
+    /// Earliest pending deadline (retransmit or delayed ACK), if any.
+    pub next: Option<Instant>,
+}
+
+/// The pure ARQ protocol state machine (all peers of one node).
+pub struct ArqCore {
+    cfg: ArqConfig,
+    peers: HashMap<u16, PeerArq>,
+    pool: BufPool,
+}
+
+impl ArqCore {
+    pub fn new(cfg: ArqConfig) -> ArqCore {
+        // Enough pooled buffers to turn the whole window over without
+        // allocating, plus scratch for control datagrams.
+        let pool = BufPool::new(cfg.window * 2 + 4);
+        ArqCore { cfg, peers: HashMap::new(), pool }
+    }
+
+    pub fn config(&self) -> &ArqConfig {
+        &self.cfg
+    }
+
+    /// Unacknowledged datagrams currently in flight toward `peer`.
+    pub fn inflight(&self, peer: u16) -> usize {
+        self.peers.get(&peer).map_or(0, |p| p.tx.inflight.len())
+    }
+
+    /// True when any peer flow still has unacknowledged datagrams.
+    pub fn has_inflight(&self) -> bool {
+        self.peers.values().any(|p| !p.tx.inflight.is_empty())
+    }
+
+    /// True while timer-driven work remains that only this side can
+    /// perform: unacknowledged datagrams, or an unconfirmed abandon
+    /// notification (the shutdown drain waits on this, not just the
+    /// window).
+    pub fn has_pending(&self) -> bool {
+        self.peers
+            .values()
+            .any(|p| !p.tx.inflight.is_empty() || p.tx.notify.is_some())
+    }
+
+    /// Whether the window toward `peer` has room for another datagram.
+    pub fn can_send(&self, peer: u16) -> bool {
+        self.inflight(peer) < self.cfg.window
+    }
+
+    /// Stage `payload` (a coalesced frame batch) toward `peer` and hand the
+    /// encoded wire datagram to `emit` (borrowed from the in-flight buffer,
+    /// so the hot path copies nothing extra). Returns `false` without
+    /// calling `emit` when the window is full — the caller applies
+    /// backpressure and retries after ACKs arrive.
+    pub fn try_send_with(
+        &mut self,
+        peer: u16,
+        payload: &[u8],
+        now: Instant,
+        emit: impl FnOnce(&[u8]),
+    ) -> bool {
+        let node_id = self.cfg.node_id;
+        let p = self.peers.entry(peer).or_default();
+        if p.tx.inflight.len() >= self.cfg.window {
+            return false;
+        }
+        let seq = p.tx.next_seq;
+        p.tx.next_seq = p.tx.next_seq.wrapping_add(1);
+        let base = p.tx.inflight.front().map_or(seq, |f| f.seq);
+        let mut dgram = self.pool.acquire();
+        dgram.extend_from_slice(&make_header(node_id, KIND_DATA, seq, base, &p.rx));
+        dgram.extend_from_slice(payload);
+        // Sending DATA carries our current cumulative ACK: the delayed-ACK
+        // debt toward this peer is settled by the piggyback.
+        p.rx.ack_due = None;
+        p.rx.unacked = 0;
+        emit(&dgram);
+        p.tx.inflight.push_back(InFlight { seq, dgram, sent_at: now, retries: 0 });
+        true
+    }
+
+    /// [`try_send_with`](ArqCore::try_send_with) returning an owned
+    /// [`Emission`] — the convenient form for tests and simulations.
+    pub fn try_send(&mut self, peer: u16, payload: &[u8], now: Instant) -> Option<Emission> {
+        let mut out = None;
+        if self.try_send_with(peer, payload, now, |bytes| {
+            out = Some(Emission { peer, dgram: bytes.to_vec() });
+        }) {
+            out
+        } else {
+            None
+        }
+    }
+
+    /// Feed one received datagram (must start with [`ARQ_MAGIC`]).
+    pub fn on_datagram(&mut self, dgram: &[u8], now: Instant) -> Delivered {
+        let mut out = Delivered::default();
+        if dgram.len() < ARQ_HEADER_BYTES || dgram[0] != ARQ_MAGIC {
+            log::warn!("arq: dropping non-ARQ datagram of {} bytes", dgram.len());
+            return out;
+        }
+        let kind = dgram[1];
+        let peer = u16::from_le_bytes([dgram[2], dgram[3]]);
+        let seq = u32::from_le_bytes(dgram[4..8].try_into().unwrap());
+        let ack = u32::from_le_bytes(dgram[8..12].try_into().unwrap());
+        let sack = u32::from_le_bytes(dgram[12..16].try_into().unwrap());
+        let base = u32::from_le_bytes(dgram[16..20].try_into().unwrap());
+
+        self.process_ack(peer, ack, sack, now, &mut out.emit);
+        // The peer's `base` proves everything below it is either already
+        // delivered here or permanently abandoned over there: advance past
+        // dead gaps (delivering any parked survivors in order) so a
+        // retry-exhausted datagram can never wedge the flow.
+        self.advance_rx(peer, base, &mut out.payloads);
+        if kind != KIND_DATA {
+            return out;
+        }
+
+        let ack_every = self.cfg.ack_every();
+        let ack_interval = self.cfg.ack_interval;
+        let ooo_bound = self.cfg.window.max(64);
+        let p = self.peers.entry(peer).or_default();
+        p.rx.unacked += 1;
+        if seq == p.rx.rcv_next {
+            out.payloads.push(dgram[ARQ_HEADER_BYTES..].to_vec());
+            p.rx.rcv_next = p.rx.rcv_next.wrapping_add(1);
+            // Drain any parked datagrams the arrival made contiguous.
+            while let Some(parked) = p.rx.ooo.remove(&p.rx.rcv_next) {
+                out.payloads.push(parked);
+                p.rx.rcv_next = p.rx.rcv_next.wrapping_add(1);
+            }
+        } else if seq_lt(seq, p.rx.rcv_next) {
+            // Duplicate of something already delivered: drop the payload and
+            // re-ACK immediately so the peer stops retransmitting it.
+            p.rx.unacked = ack_every;
+        } else {
+            // Out of order: park it (bounded — beyond the bound the peer
+            // just retransmits later) and NACK the gap immediately.
+            if p.rx.ooo.len() < ooo_bound {
+                p.rx.ooo.entry(seq).or_insert_with(|| dgram[ARQ_HEADER_BYTES..].to_vec());
+            }
+            p.rx.unacked = ack_every;
+        }
+        let ack_now = {
+            let p = self.peers.get_mut(&peer).expect("entry exists");
+            if p.rx.unacked >= ack_every {
+                true
+            } else {
+                if p.rx.ack_due.is_none() {
+                    p.rx.ack_due = Some(now + ack_interval);
+                }
+                false
+            }
+        };
+        if ack_now {
+            out.emit.push(self.make_ack(peer));
+        }
+        out
+    }
+
+    /// Apply a cumulative ACK + SACK bitmap to `peer`'s send window; queue
+    /// fast retransmissions for reported gaps.
+    fn process_ack(&mut self, peer: u16, ack: u32, sack: u32, now: Instant, emit: &mut Vec<Emission>) {
+        let min_gap = self.cfg.rto() / 4;
+        let Some(p) = self.peers.get_mut(&peer) else { return };
+        // The peer's cumulative ACK reaching an advanced base proves it
+        // skipped the abandoned gap: stop re-notifying.
+        if let Some(n) = &p.tx.notify {
+            if !seq_lt(ack, n.base) {
+                p.tx.notify = None;
+            }
+        }
+        // Free everything cumulatively acknowledged...
+        while let Some(f) = p.tx.inflight.front() {
+            if seq_lt(f.seq, ack) {
+                let f = p.tx.inflight.pop_front().unwrap();
+                self.pool.release(f.dgram);
+            } else {
+                break;
+            }
+        }
+        // ...and everything the SACK bitmap covers; fast-retransmit the
+        // holes the bitmap proves (something after them arrived).
+        if sack == 0 {
+            return;
+        }
+        let highest = 32 - sack.leading_zeros(); // bits are 1-indexed gaps
+        let mut retransmit = Vec::new();
+        let mut sacked = Vec::new();
+        p.tx.inflight.retain_mut(|f| {
+            let dist = f.seq.wrapping_sub(ack);
+            if (1..=32).contains(&dist) && sack & (1 << (dist - 1)) != 0 {
+                sacked.push(std::mem::take(&mut f.dgram));
+                return false; // SACKed: delivered out of order
+            }
+            let holed = dist < highest; // a later seq was SACKed past this one
+            if holed && now.duration_since(f.sent_at) >= min_gap {
+                f.sent_at = now;
+                f.retries += 1;
+                retransmit.push((f.seq, f.dgram.clone()));
+            }
+            true
+        });
+        for dgram in sacked {
+            self.pool.release(dgram);
+        }
+        for (_, mut dgram) in retransmit {
+            self.patch_ack_fields(peer, &mut dgram);
+            emit.push(Emission { peer, dgram });
+        }
+    }
+
+    /// Skip the receive cursor forward to the peer's `base`, delivering any
+    /// parked datagrams passed on the way (in sequence order) and dropping
+    /// the genuinely abandoned gaps. A corrupt/hostile `base` far ahead is
+    /// treated as a flow reset rather than iterated.
+    fn advance_rx(&mut self, peer: u16, base: u32, payloads: &mut Vec<Vec<u8>>) {
+        let p = self.peers.entry(peer).or_default();
+        let dist = base.wrapping_sub(p.rx.rcv_next);
+        if dist == 0 || (dist as i32) <= 0 {
+            return; // base at or behind the cursor: nothing abandoned
+        }
+        if dist as usize > (1 << 16) {
+            log::warn!("arq: peer {peer} base jumped {dist} seqs ahead; resetting flow");
+            p.rx.ooo.retain(|&s, _| !seq_lt(s, base));
+            p.rx.rcv_next = base;
+        } else {
+            log::warn!(
+                "arq: peer {peer} abandoned seqs [{}..{base}); skipping the gap",
+                p.rx.rcv_next
+            );
+            while seq_lt(p.rx.rcv_next, base) {
+                if let Some(parked) = p.rx.ooo.remove(&p.rx.rcv_next) {
+                    payloads.push(parked);
+                }
+                p.rx.rcv_next = p.rx.rcv_next.wrapping_add(1);
+            }
+        }
+        // The cursor moved: drain whatever is now contiguous.
+        while let Some(parked) = p.rx.ooo.remove(&p.rx.rcv_next) {
+            payloads.push(parked);
+            p.rx.rcv_next = p.rx.rcv_next.wrapping_add(1);
+        }
+    }
+
+    /// Refresh the piggybacked ACK/base fields of a stored datagram before
+    /// retransmission.
+    fn patch_ack_fields(&self, peer: u16, dgram: &mut [u8]) {
+        if let Some(p) = self.peers.get(&peer) {
+            dgram[8..12].copy_from_slice(&p.rx.rcv_next.to_le_bytes());
+            dgram[12..16].copy_from_slice(&sack_bits(&p.rx).to_le_bytes());
+            dgram[16..20].copy_from_slice(&tx_base(&p.tx).to_le_bytes());
+        }
+    }
+
+    /// Settle ALL receive-side ACK debt immediately — the shutdown path.
+    /// A delayed ACK scheduled for a few milliseconds from now would be
+    /// dropped by process exit, leaving the peer to retransmit into the
+    /// void and spuriously fail an operation that actually delivered.
+    pub fn flush_acks(&mut self) -> Vec<Emission> {
+        let owed: Vec<u16> = self
+            .peers
+            .iter()
+            .filter(|(_, p)| p.rx.ack_due.is_some() || p.rx.unacked > 0)
+            .map(|(id, _)| *id)
+            .collect();
+        owed.into_iter().map(|peer| self.make_ack(peer)).collect()
+    }
+
+    /// Build a standalone ACK toward `peer`, settling any delayed-ACK debt.
+    pub fn make_ack(&mut self, peer: u16) -> Emission {
+        let node_id = self.cfg.node_id;
+        let p = self.peers.entry(peer).or_default();
+        p.rx.ack_due = None;
+        p.rx.unacked = 0;
+        let base = tx_base(&p.tx);
+        Emission { peer, dgram: make_header(node_id, KIND_ACK, 0, base, &p.rx).to_vec() }
+    }
+
+    /// Timer service: expire retransmission timeouts (exponential backoff),
+    /// declare datagrams past `max_retries` lost, and flush due delayed
+    /// ACKs. Returns the earliest remaining deadline.
+    pub fn poll(&mut self, now: Instant) -> Polled {
+        let mut out = Polled::default();
+        let rto = self.cfg.rto();
+        let cap = self.cfg.rto_cap();
+        let max_retries = self.cfg.max_retries;
+        let peer_ids: Vec<u16> = self.peers.keys().copied().collect();
+        let mut next: Option<Instant> = None;
+        let mut consider = |next: &mut Option<Instant>, t: Instant| {
+            *next = Some(next.map_or(t, |n| n.min(t)));
+        };
+
+        for peer in peer_ids {
+            // Delayed ACK due?
+            let ack_now = {
+                let p = self.peers.get_mut(&peer).unwrap();
+                match p.rx.ack_due {
+                    Some(due) if due <= now => true,
+                    Some(due) => {
+                        consider(&mut next, due);
+                        false
+                    }
+                    None => false,
+                }
+            };
+            if ack_now {
+                out.emit.push(self.make_ack(peer));
+            }
+
+            // Unconfirmed abandon notification due for a re-send? Its
+            // budget has a floor: even with a zero-retry data policy the
+            // notify must survive a little loss to do its job.
+            let notify_budget = max_retries.max(3);
+            let notify_now = {
+                let p = self.peers.get_mut(&peer).unwrap();
+                match &mut p.tx.notify {
+                    Some(n) if n.due <= now => {
+                        if n.tries >= notify_budget {
+                            // Peer presumed gone; its parked survivors are
+                            // its problem now.
+                            p.tx.notify = None;
+                            false
+                        } else {
+                            n.tries += 1;
+                            n.due = now + rto;
+                            consider(&mut next, n.due);
+                            true
+                        }
+                    }
+                    Some(n) => {
+                        consider(&mut next, n.due);
+                        false
+                    }
+                    None => false,
+                }
+            };
+            if notify_now {
+                out.emit.push(self.make_ack(peer));
+            }
+
+            // Retransmission timeouts.
+            let mut expired: Vec<(u32, Vec<u8>)> = Vec::new();
+            let mut failed: Vec<Vec<u8>> = Vec::new();
+            {
+                let p = self.peers.get_mut(&peer).unwrap();
+                p.tx.inflight.retain_mut(|f| {
+                    let backoff = rto.checked_mul(1u32 << f.retries.min(5)).unwrap_or(cap).min(cap);
+                    let due = f.sent_at + backoff;
+                    if due > now {
+                        consider(&mut next, due);
+                        return true;
+                    }
+                    if f.retries >= max_retries {
+                        failed.push(std::mem::take(&mut f.dgram));
+                        return false;
+                    }
+                    f.retries += 1;
+                    f.sent_at = now;
+                    expired.push((f.seq, f.dgram.clone()));
+                    let next_backoff =
+                        rto.checked_mul(1u32 << f.retries.min(5)).unwrap_or(cap).min(cap);
+                    consider(&mut next, now + next_backoff);
+                    true
+                });
+            }
+            for (_, mut dgram) in expired {
+                self.patch_ack_fields(peer, &mut dgram);
+                out.emit.push(Emission { peer, dgram });
+            }
+            let abandoned = !failed.is_empty();
+            for dgram in failed {
+                log::warn!(
+                    "arq: datagram to node {peer} lost after {max_retries} retries \
+                     ({} payload bytes) — failing its frames",
+                    dgram.len().saturating_sub(ARQ_HEADER_BYTES)
+                );
+                out.failures.push((peer, dgram[ARQ_HEADER_BYTES..].to_vec()));
+                self.pool.release(dgram);
+            }
+            if abandoned {
+                // Notify the peer that `base` advanced past the abandoned
+                // gap, so datagrams parked behind it deliver even if no
+                // further DATA ever flows. Kept on a timer until the peer's
+                // cumulative ACK confirms it — a single best-effort ACK
+                // would not survive the very loss that caused the
+                // abandonment.
+                {
+                    let p = self.peers.get_mut(&peer).unwrap();
+                    let base = tx_base(&p.tx);
+                    p.tx.notify = Some(Notify { base, due: now + rto, tries: 0 });
+                    consider(&mut next, now + rto);
+                }
+                out.emit.push(self.make_ack(peer));
+            }
+        }
+        out.next = next;
+        out
+    }
+}
+
+/// Lowest sequence the transmit side will still retransmit: the front of
+/// the in-flight queue (its minimum — removals from the middle are SACK
+/// deliveries), or the next fresh sequence when nothing is in flight.
+/// Everything below is acknowledged or abandoned.
+fn tx_base(tx: &PeerTx) -> u32 {
+    tx.inflight.front().map_or(tx.next_seq, |f| f.seq)
+}
+
+/// Encode one ARQ header (the reverse-direction ACK state rides on `rx`;
+/// `base` is the sender's lowest still-retransmitted sequence).
+fn make_header(node_id: u16, kind: u8, seq: u32, base: u32, rx: &PeerRx) -> [u8; ARQ_HEADER_BYTES] {
+    let mut h = [0u8; ARQ_HEADER_BYTES];
+    h[0] = ARQ_MAGIC;
+    h[1] = kind;
+    h[2..4].copy_from_slice(&node_id.to_le_bytes());
+    h[4..8].copy_from_slice(&seq.to_le_bytes());
+    h[8..12].copy_from_slice(&rx.rcv_next.to_le_bytes());
+    h[12..16].copy_from_slice(&sack_bits(rx).to_le_bytes());
+    h[16..20].copy_from_slice(&base.to_le_bytes());
+    h
+}
+
+/// SACK bitmap over the receiver's parked datagrams: bit i set means seq
+/// `rcv_next + 1 + i` is held out of order (so `rcv_next` itself, and any
+/// clear bit below the highest set one, is a gap the sender should fill).
+fn sack_bits(rx: &PeerRx) -> u32 {
+    let mut bits = 0u32;
+    for &seq in rx.ooo.keys() {
+        let dist = seq.wrapping_sub(rx.rcv_next);
+        if (1..=32).contains(&dist) {
+            bits |= 1 << (dist - 1);
+        }
+    }
+    bits
+}
+
+/// Deterministic loss injection for the CI battery: `SHOAL_UDP_DROP` sets
+/// the per-datagram drop probability (0.0–1.0), `SHOAL_UDP_DROP_SEED` the
+/// RNG seed (default: the node id, so the two ends of a flow drop
+/// differently).
+struct LossInjector {
+    rate: f64,
+    rng: crate::util::rng::Rng,
+}
+
+impl LossInjector {
+    fn from_env(node_id: u16) -> Option<LossInjector> {
+        let rate: f64 = std::env::var("SHOAL_UDP_DROP").ok()?.parse().ok()?;
+        if rate.is_nan() || rate <= 0.0 {
+            return None;
+        }
+        let seed = std::env::var("SHOAL_UDP_DROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5EED_0000 + node_id as u64);
+        Some(LossInjector { rate: rate.min(1.0), rng: crate::util::rng::Rng::new(seed) })
+    }
+
+    fn drop_this(&mut self) -> bool {
+        self.rng.chance(self.rate)
+    }
+}
+
+/// The socket-owning shared half: one per UDP node, shared by the egress
+/// (send path, timer service) and the ingress reader thread (receive path).
+pub struct ArqEndpoint {
+    state: Mutex<EndpointState>,
+    cv: Condvar,
+    socket: UdpSocket,
+    /// Peer addresses, resolved once at construction — the emit path runs
+    /// under the state lock and must not re-parse strings per datagram.
+    peers: HashMap<u16, std::net::SocketAddr>,
+}
+
+struct EndpointState {
+    core: ArqCore,
+    loss: Option<LossInjector>,
+    sink: Option<SendFailureSink>,
+}
+
+/// How long a backpressured `send` waits for window space before giving up.
+/// Retry exhaustion frees (fails) slots long before this fires; it is a
+/// last-resort bound, not a tuning knob.
+const SEND_BLOCK_TIMEOUT: Duration = Duration::from_secs(30);
+
+impl ArqEndpoint {
+    /// Build the endpoint over a clone of the node's bound socket. `peers`
+    /// maps every other node id to its advertised address (where ACKs and
+    /// retransmissions are sent).
+    pub fn new(
+        cfg: ArqConfig,
+        socket: UdpSocket,
+        peers: HashMap<u16, String>,
+        sink: Option<SendFailureSink>,
+    ) -> ArqEndpoint {
+        let loss = LossInjector::from_env(cfg.node_id);
+        if let Some(l) = &loss {
+            log::info!("arq: node {} injecting {:.1}% datagram loss", cfg.node_id, l.rate * 100.0);
+        }
+        use std::net::ToSocketAddrs;
+        let peers = peers
+            .into_iter()
+            .filter_map(|(id, a)| match a.to_socket_addrs().ok().and_then(|mut i| i.next()) {
+                Some(sa) => Some((id, sa)),
+                None => {
+                    log::warn!("arq: cannot resolve address '{a}' for node {id}");
+                    None
+                }
+            })
+            .collect();
+        ArqEndpoint {
+            state: Mutex::new(EndpointState { core: ArqCore::new(cfg), loss, sink }),
+            cv: Condvar::new(),
+            socket,
+            peers,
+        }
+    }
+
+    /// Bytes of per-datagram overhead this endpoint imposes.
+    pub fn header_bytes(&self) -> usize {
+        ARQ_HEADER_BYTES
+    }
+
+    fn emit_bytes(&self, loss: &mut Option<LossInjector>, peer: u16, dgram: &[u8]) {
+        if let Some(l) = loss {
+            if l.drop_this() {
+                log::debug!("arq: injected drop of a datagram to node {peer}");
+                return;
+            }
+        }
+        match self.peers.get(&peer) {
+            Some(addr) => {
+                // Reliability covers transient send errors: the datagram
+                // stays in flight and the RTO path re-sends it.
+                if let Err(err) = self.socket.send_to(dgram, *addr) {
+                    log::warn!("arq: send_to node {peer} failed: {err}");
+                }
+            }
+            None => log::warn!("arq: no address for node {peer}"),
+        }
+    }
+
+    fn emit(&self, st: &mut EndpointState, e: Emission) {
+        self.emit_bytes(&mut st.loss, e.peer, &e.dgram);
+    }
+
+    /// Fail every frame of a lost datagram payload through the sink.
+    fn report_failures(&self, st: &mut EndpointState, failures: Vec<(u16, Vec<u8>)>) {
+        if failures.is_empty() {
+            return;
+        }
+        let Some(sink) = st.sink.clone() else { return };
+        for (peer, payload) in failures {
+            let reason = format!("udp ARQ retries exhausted toward node {peer}");
+            for_each_frame(&payload, |pkt| sink(&pkt, &reason));
+        }
+    }
+
+    /// Run one timer pass under the lock held in `st`.
+    fn service_locked(&self, st: &mut EndpointState, now: Instant) -> Option<Instant> {
+        let polled = st.core.poll(now);
+        let had_failures = !polled.failures.is_empty();
+        for e in polled.emit {
+            self.emit(st, e);
+        }
+        self.report_failures(st, polled.failures);
+        if had_failures {
+            self.cv.notify_all(); // failures freed window slots
+        }
+        polled.next
+    }
+
+    /// Reliable send of one coalesced frame batch: blocks while the window
+    /// toward `peer` is full, self-servicing retransmission timers while it
+    /// waits (the sender thread may be the only one awake).
+    pub fn send(&self, peer: u16, payload: &[u8]) -> Result<()> {
+        let deadline = Instant::now() + SEND_BLOCK_TIMEOUT;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            // Disjoint borrows: the core stages while the emit closure uses
+            // the loss injector + socket — no datagram copy on the hot path.
+            let EndpointState { core, loss, .. } = &mut *st;
+            if core.try_send_with(peer, payload, now, |bytes| {
+                self.emit_bytes(loss, peer, bytes)
+            }) {
+                return Ok(());
+            }
+            if now >= deadline {
+                return Err(Error::OperationFailed(format!(
+                    "udp ARQ window toward node {peer} stayed full for {SEND_BLOCK_TIMEOUT:?} \
+                     (backpressure timeout)"
+                )));
+            }
+            let next = self.service_locked(&mut st, now).unwrap_or(deadline);
+            let wait = next.min(deadline).saturating_duration_since(now).max(Duration::from_millis(1));
+            let (guard, _) = self.cv.wait_timeout(st, wait).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Ingress path: feed one received datagram; returns the in-order
+    /// payloads (coalesced frame batches) to frame-decode and deliver.
+    pub fn on_datagram(&self, dgram: &[u8]) -> Vec<Vec<u8>> {
+        let mut st = self.state.lock().unwrap();
+        let d = st.core.on_datagram(dgram, Instant::now());
+        for e in d.emit {
+            self.emit(&mut st, e);
+        }
+        // ACK processing may have freed window slots.
+        self.cv.notify_all();
+        d.payloads
+    }
+
+    /// Timer service for the router's idle loop: perform due retransmits /
+    /// delayed ACKs, and say how long until the next deadline.
+    pub fn service(&self) -> Option<Duration> {
+        let mut st = self.state.lock().unwrap();
+        let now = Instant::now();
+        self.service_locked(&mut st, now)
+            .map(|t| t.saturating_duration_since(now).max(Duration::from_millis(1)))
+    }
+
+    /// True while any window still holds unacknowledged datagrams.
+    pub fn has_inflight(&self) -> bool {
+        self.state.lock().unwrap().core.has_inflight()
+    }
+
+    /// Shutdown path: keep servicing timers until every in-flight datagram
+    /// is acknowledged or declared lost (retry exhaustion bounds this), or
+    /// `max_wait` elapses. Without this, a process exiting right after its
+    /// last send would strand a dropped datagram with no retransmitter.
+    pub fn drain(&self, max_wait: Duration) {
+        let deadline = Instant::now() + max_wait;
+        loop {
+            {
+                let mut st = self.state.lock().unwrap();
+                if !st.core.has_pending() {
+                    // Settle ALL receive-side ACK debt before going away —
+                    // including delayed ACKs not yet due, which process
+                    // exit would otherwise drop (the peer would retransmit
+                    // into the void and spuriously fail a delivered
+                    // operation).
+                    let now = Instant::now();
+                    self.service_locked(&mut st, now);
+                    let acks = st.core.flush_acks();
+                    for e in acks {
+                        self.emit(&mut st, e);
+                    }
+                    return;
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                log::warn!("arq: drain timed out with datagrams still in flight");
+                let mut st = self.state.lock().unwrap();
+                let acks = st.core.flush_acks();
+                for e in acks {
+                    self.emit(&mut st, e);
+                }
+                return;
+            }
+            let next = {
+                let mut st = self.state.lock().unwrap();
+                self.service_locked(&mut st, now)
+            };
+            let wait = next
+                .unwrap_or(now + Duration::from_millis(5))
+                .min(deadline)
+                .saturating_duration_since(now)
+                .max(Duration::from_millis(1));
+            std::thread::sleep(wait);
+        }
+    }
+}
+
+/// Frame-decode a coalesced payload, invoking `f` per wire packet (used to
+/// fail every message a lost datagram carried, not just the first).
+pub fn for_each_frame(mut payload: &[u8], mut f: impl FnMut(Packet)) {
+    while !payload.is_empty() {
+        let frame_len = match Packet::peek_wire_len(payload) {
+            Some(l) if l <= payload.len() => l,
+            _ => return,
+        };
+        if let Ok(pkt) = Packet::from_wire(&payload[..frame_len]) {
+            f(pkt);
+        }
+        payload = &payload[frame_len..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(node: u16, window: usize) -> ArqConfig {
+        ArqConfig {
+            node_id: node,
+            window,
+            max_retries: 3,
+            ack_interval: Duration::from_millis(2),
+        }
+    }
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn in_order_delivery_and_cumulative_ack() {
+        let mut a = ArqCore::new(cfg(0, 8));
+        let mut b = ArqCore::new(cfg(1, 8));
+        let now = t0();
+        let mut delivered = Vec::new();
+        for i in 0..5u8 {
+            let e = a.try_send(1, &[i; 4], now).expect("window open");
+            let d = b.on_datagram(&e.dgram, now);
+            delivered.extend(d.payloads);
+            for back in d.emit {
+                a.on_datagram(&back.dgram, now);
+            }
+        }
+        assert_eq!(delivered, (0..5u8).map(|i| vec![i; 4]).collect::<Vec<_>>());
+        // ack_every = 2 for window 8, so cumulative ACKs drained the window.
+        assert!(a.inflight(1) <= 2);
+    }
+
+    #[test]
+    fn duplicates_are_dropped_and_reacked() {
+        let mut a = ArqCore::new(cfg(0, 4));
+        let mut b = ArqCore::new(cfg(1, 4));
+        let now = t0();
+        let e = a.try_send(1, b"hello", now).unwrap();
+        let first = b.on_datagram(&e.dgram, now);
+        assert_eq!(first.payloads.len(), 1);
+        let dup = b.on_datagram(&e.dgram, now);
+        assert!(dup.payloads.is_empty(), "duplicate must not be delivered");
+        assert!(!dup.emit.is_empty(), "duplicate must trigger an immediate re-ACK");
+    }
+
+    #[test]
+    fn out_of_order_parks_then_drains_in_order() {
+        let mut a = ArqCore::new(cfg(0, 8));
+        let mut b = ArqCore::new(cfg(1, 8));
+        let now = t0();
+        let e0 = a.try_send(1, b"first", now).unwrap();
+        let e1 = a.try_send(1, b"second", now).unwrap();
+        let d1 = b.on_datagram(&e1.dgram, now);
+        assert!(d1.payloads.is_empty(), "gap: nothing deliverable yet");
+        assert!(!d1.emit.is_empty(), "gap must NACK immediately");
+        let d0 = b.on_datagram(&e0.dgram, now);
+        assert_eq!(d0.payloads, vec![b"first".to_vec(), b"second".to_vec()]);
+    }
+
+    #[test]
+    fn window_full_blocks_then_opens_on_ack() {
+        let mut a = ArqCore::new(cfg(0, 2));
+        let mut b = ArqCore::new(cfg(1, 2));
+        let now = t0();
+        let e0 = a.try_send(1, b"x", now).unwrap();
+        let _e1 = a.try_send(1, b"y", now).unwrap();
+        assert!(a.try_send(1, b"z", now).is_none(), "window of 2 must block the 3rd");
+        assert!(!a.can_send(1));
+        let d = b.on_datagram(&e0.dgram, now);
+        let ack = b.make_ack(0);
+        assert!(d.payloads.len() == 1);
+        a.on_datagram(&ack.dgram, now);
+        assert!(a.can_send(1), "ACK must reopen the window");
+    }
+
+    #[test]
+    fn rto_retransmits_then_fails_after_max_retries() {
+        let mut a = ArqCore::new(cfg(0, 4));
+        let now = t0();
+        a.try_send(1, b"doomed", now).unwrap();
+        let rto = a.config().rto();
+        let mut t = now;
+        let mut retransmits = 0;
+        let mut failures = Vec::new();
+        for _ in 0..32 {
+            t += rto * 40; // far past any backoff
+            let p = a.poll(t);
+            if !p.failures.is_empty() {
+                failures.extend(p.failures);
+                break; // the final poll's emission is the base-notify ACK
+            }
+            retransmits += p.emit.len();
+        }
+        assert_eq!(retransmits, 3, "max_retries=3 retransmissions before giving up");
+        assert_eq!(failures.len(), 1);
+        assert_eq!(failures[0].0, 1);
+        assert_eq!(failures[0].1, b"doomed".to_vec());
+        assert!(!a.has_inflight());
+    }
+
+    #[test]
+    fn delayed_ack_fires_on_poll() {
+        let mut a = ArqCore::new(cfg(0, 64));
+        let mut b = ArqCore::new(cfg(1, 64));
+        let now = t0();
+        let e = a.try_send(1, b"one-way", now).unwrap();
+        let d = b.on_datagram(&e.dgram, now);
+        assert!(d.emit.is_empty(), "single datagram under ack_every: ACK is delayed");
+        let p = b.poll(now + b.config().ack_interval * 2);
+        assert_eq!(p.emit.len(), 1, "delayed ACK must fire");
+        a.on_datagram(&p.emit[0].dgram, now);
+        assert!(!a.has_inflight());
+    }
+
+    /// The shutdown path settles delayed-ACK debt immediately: an ACK
+    /// scheduled for later would be dropped by process exit and the peer
+    /// would spuriously fail a delivered operation.
+    #[test]
+    fn flush_acks_settles_pending_delayed_ack() {
+        let mut a = ArqCore::new(cfg(0, 64));
+        let mut b = ArqCore::new(cfg(1, 64));
+        let now = t0();
+        let e = a.try_send(1, b"final", now).unwrap();
+        let d = b.on_datagram(&e.dgram, now);
+        assert!(d.emit.is_empty(), "ack is delayed under ack_every");
+        let acks = b.flush_acks();
+        assert_eq!(acks.len(), 1, "shutdown must settle the debt now");
+        a.on_datagram(&acks[0].dgram, now);
+        assert!(!a.has_inflight());
+        assert!(b.flush_acks().is_empty(), "debt settled exactly once");
+    }
+
+    #[test]
+    fn sack_gap_triggers_fast_retransmit() {
+        let mut a = ArqCore::new(cfg(0, 8));
+        let mut b = ArqCore::new(cfg(1, 8));
+        let now = t0();
+        let _lost = a.try_send(1, b"lost", now).unwrap(); // never arrives
+        let e1 = a.try_send(1, b"late", now).unwrap();
+        let d = b.on_datagram(&e1.dgram, now);
+        // The NACK names the gap; well past min_gap it must fast-retransmit.
+        let later = now + a.config().rto();
+        let mut redelivered = Vec::new();
+        for back in d.emit {
+            let r = a.on_datagram(&back.dgram, later);
+            redelivered.extend(r.emit);
+        }
+        assert_eq!(redelivered.len(), 1, "gap must be fast-retransmitted");
+        let d2 = b.on_datagram(&redelivered[0].dgram, later);
+        assert_eq!(d2.payloads, vec![b"lost".to_vec(), b"late".to_vec()]);
+    }
+
+    /// A permanently abandoned datagram (retries exhausted) must not wedge
+    /// the flow: the sender's advanced `base` lets the receiver skip the
+    /// dead gap, delivering parked survivors, and later traffic proceeds.
+    #[test]
+    fn abandoned_gap_does_not_wedge_the_flow() {
+        let mut cfg0 = cfg(0, 4);
+        cfg0.max_retries = 0; // first RTO abandons
+        let mut a = ArqCore::new(cfg0);
+        let mut b = ArqCore::new(cfg(1, 4));
+        let now = t0();
+        let _lost = a.try_send(1, b"dead", now).unwrap(); // never arrives
+        let e1 = a.try_send(1, b"survivor", now).unwrap();
+        let d1 = b.on_datagram(&e1.dgram, now);
+        assert!(d1.payloads.is_empty(), "parked behind the gap");
+        // Feed the NACK back: its SACK removes the survivor from a's
+        // window, leaving only the doomed seq 0 in flight.
+        for back in d1.emit {
+            a.on_datagram(&back.dgram, now);
+        }
+        assert_eq!(a.inflight(1), 1);
+
+        // RTO expires: seq 0 is abandoned and a base-notify ACK emitted.
+        let p = a.poll(now + Duration::from_secs(2));
+        assert_eq!(p.failures.len(), 1);
+        assert_eq!(p.failures[0].1, b"dead".to_vec());
+        assert!(!p.emit.is_empty(), "failure must emit a base-carrying notify");
+        let mut unstuck = Vec::new();
+        for e in p.emit {
+            unstuck.extend(b.on_datagram(&e.dgram, now).payloads);
+        }
+        assert_eq!(
+            unstuck,
+            vec![b"survivor".to_vec()],
+            "survivor must deliver once the gap is abandoned"
+        );
+
+        // The flow continues normally afterwards.
+        let e2 = a.try_send(1, b"after", now).unwrap();
+        let d2 = b.on_datagram(&e2.dgram, now);
+        assert_eq!(d2.payloads, vec![b"after".to_vec()]);
+    }
+
+    /// The abandon notification is re-sent on a timer until the peer's
+    /// cumulative ACK confirms it skipped the gap — one best-effort ACK
+    /// would not survive the loss that caused the abandonment.
+    #[test]
+    fn abandon_notify_retries_until_peer_confirms() {
+        let mut cfg0 = cfg(0, 4);
+        cfg0.max_retries = 0;
+        let mut a = ArqCore::new(cfg0);
+        let mut b = ArqCore::new(cfg(1, 4));
+        let now = t0();
+        a.try_send(1, b"doomed", now).unwrap();
+        let rto = a.config().rto();
+
+        // First RTO: abandoned + first notify (assume it is lost).
+        let p1 = a.poll(now + rto * 2);
+        assert_eq!(p1.failures.len(), 1);
+        assert_eq!(p1.emit.len(), 1, "first notify");
+        assert!(a.has_pending(), "unconfirmed notify keeps the flow pending");
+
+        // Next RTO: the notify re-sends.
+        let p2 = a.poll(now + rto * 4);
+        assert!(p2.failures.is_empty());
+        assert_eq!(p2.emit.len(), 1, "notify must retry while unconfirmed");
+
+        // Deliver it: b advances past the gap and its ACK confirms.
+        let d = b.on_datagram(&p2.emit[0].dgram, now + rto * 4);
+        assert!(d.payloads.is_empty());
+        let confirm = b.make_ack(0);
+        a.on_datagram(&confirm.dgram, now + rto * 4);
+        assert!(!a.has_pending(), "confirmed notify clears");
+        let p3 = a.poll(now + rto * 8);
+        assert!(p3.emit.is_empty(), "nothing left to send");
+    }
+
+    #[test]
+    fn non_arq_datagrams_are_rejected() {
+        let mut b = ArqCore::new(cfg(1, 8));
+        let d = b.on_datagram(&[0u8; 32], t0());
+        assert!(d.payloads.is_empty() && d.emit.is_empty());
+        let d = b.on_datagram(&[ARQ_MAGIC], t0()); // truncated header
+        assert!(d.payloads.is_empty());
+    }
+
+    #[test]
+    fn for_each_frame_walks_coalesced_payloads() {
+        let a = Packet::new(1, 2, vec![7; 8]).unwrap();
+        let b = Packet::new(3, 4, vec![9; 3]).unwrap();
+        let mut buf = a.to_wire();
+        buf.extend_from_slice(&b.to_wire());
+        let mut got = Vec::new();
+        for_each_frame(&buf, |p| got.push(p));
+        assert_eq!(got, vec![a, b]);
+    }
+
+    /// A peer that never ACKs exhausts the retry budget; every frame the
+    /// lost datagrams carried must reach the failure sink.
+    #[test]
+    fn exhausted_retries_report_every_frame_to_the_sink() {
+        let sa = UdpSocket::bind("127.0.0.1:0").unwrap();
+        // Bound-then-dropped socket: datagrams sent there vanish.
+        let dead_addr = {
+            let s = UdpSocket::bind("127.0.0.1:0").unwrap();
+            s.local_addr().unwrap().to_string()
+        };
+        let failed = std::sync::Arc::new(Mutex::new(Vec::<Packet>::new()));
+        let failed2 = std::sync::Arc::clone(&failed);
+        let sink: SendFailureSink = std::sync::Arc::new(move |pkt: &Packet, reason: &str| {
+            assert!(reason.contains("retries exhausted"), "{reason}");
+            failed2.lock().unwrap().push(pkt.clone());
+        });
+        let mut cfg = cfg(0, 8);
+        cfg.max_retries = 1;
+        let ep = ArqEndpoint::new(cfg, sa, HashMap::from([(1u16, dead_addr)]), Some(sink));
+
+        // One datagram carrying two coalesced frames.
+        let a = Packet::new(1, 2, vec![1; 8]).unwrap();
+        let b = Packet::new(3, 4, vec![2; 4]).unwrap();
+        let mut batch = a.to_wire();
+        batch.extend_from_slice(&b.to_wire());
+        ep.send(1, &batch).unwrap();
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while ep.has_inflight() && Instant::now() < deadline {
+            match ep.service() {
+                Some(d) => std::thread::sleep(d.min(Duration::from_millis(20))),
+                None => break,
+            }
+        }
+        assert!(!ep.has_inflight(), "retry exhaustion must clear the window");
+        assert_eq!(*failed.lock().unwrap(), vec![a, b], "both frames must fail");
+    }
+
+    #[test]
+    fn endpoint_roundtrip_over_loopback() {
+        // Two endpoints on real sockets: A sends, B's ingress path delivers
+        // and ACKs, A's window drains.
+        let sa = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let sb = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let addr_a = sa.local_addr().unwrap().to_string();
+        let addr_b = sb.local_addr().unwrap().to_string();
+        sa.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        sb.set_read_timeout(Some(Duration::from_millis(200))).unwrap();
+        let a = ArqEndpoint::new(
+            cfg(0, 4),
+            sa.try_clone().unwrap(),
+            HashMap::from([(1u16, addr_b)]),
+            None,
+        );
+        let b = ArqEndpoint::new(
+            cfg(1, 4),
+            sb.try_clone().unwrap(),
+            HashMap::from([(0u16, addr_a)]),
+            None,
+        );
+        let pkt = Packet::new(9, 8, vec![0xAB; 32]).unwrap();
+        a.send(1, &pkt.to_wire()).unwrap();
+
+        let mut buf = [0u8; 2048];
+        let (n, _) = sb.recv_from(&mut buf).unwrap();
+        let payloads = b.on_datagram(&buf[..n]);
+        assert_eq!(payloads.len(), 1);
+        assert_eq!(Packet::from_wire(&payloads[0]).unwrap(), pkt);
+
+        // B owes a delayed ACK; service it, then A's receive path drains
+        // the in-flight entry.
+        std::thread::sleep(Duration::from_millis(5));
+        b.service();
+        let (n, _) = sa.recv_from(&mut buf).unwrap();
+        a.on_datagram(&buf[..n]);
+        assert!(!a.has_inflight());
+    }
+}

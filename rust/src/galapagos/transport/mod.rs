@@ -26,12 +26,30 @@
 //!
 //! `send` returning `Ok` therefore means *accepted for delivery*, not *on
 //! the wire*; only a successful `flush` (or a budget-triggered internal
-//! flush) implies the bytes left the process. A flush that fails (peer
-//! unreachable, stream died mid-write) drops the whole staged batch —
-//! the historical per-send loss semantics, extended to batches — logging
-//! the lost message count and surfacing the error. With `batch_bytes = 0`
+//! flush) implies the bytes left the process. With `batch_bytes = 0`
 //! (the default) every `send` flushes internally and the wire behavior is
 //! bitwise identical to the historical unbatched path.
+//!
+//! ## The failure contract
+//!
+//! A flush that fails (peer unreachable, stream died mid-write) drops the
+//! whole staged batch — but it must not *strand* it: every frame the batch
+//! carried is reported through the transport's [`SendFailureSink`], which
+//! fails the owning completion handle with
+//! [`Error::OperationFailed`](crate::error::Error::OperationFailed). The
+//! error also surfaces to the flushing caller, but the sink is what keeps
+//! *other* operations' `wait`s from hanging until timeout when their frames
+//! shared the doomed batch. The reliable-UDP path extends this: a datagram
+//! whose ARQ retries are exhausted fails its frames the same way (see
+//! [`arq`]).
+//!
+//! Transports with a reliability layer additionally implement
+//! [`Egress::service`] (timer-driven retransmissions and delayed ACKs —
+//! the router calls it whenever its queue idles and sleeps until the
+//! returned deadline) and [`Egress::drain`] (block until every
+//! acknowledged-delivery flow settles, called on router shutdown so a
+//! process never exits with unacknowledged datagrams it alone could
+//! retransmit).
 //!
 //! Implementations:
 //! - [`local`]  — in-process fabric connecting routers directly (single
@@ -42,15 +60,30 @@
 //!   peer coalesce into a single `write_all`.
 //! - [`udp`]   — datagrams over `std::net::UdpSocket`; staged packets for
 //!   one peer coalesce into multi-frame datagrams up to the MTU budget.
+//!   With a nonzero `udp_window` the datapath runs over the [`arq`]
+//!   reliability layer.
+//! - [`arq`]   — sliding-window ARQ (sequence numbers, cumulative ACK +
+//!   SACK, retransmission, backpressure) under the UDP transport.
 //! - [`batch`] — the shared coalescing/pooling building blocks.
 
+pub mod arq;
 pub mod batch;
 pub mod local;
 pub mod tcp;
 pub mod udp;
 
+use std::sync::Arc;
+use std::time::Duration;
+
 use super::packet::Packet;
 use crate::error::Result;
+
+/// Callback a transport invokes once per wire packet it had to give up on
+/// (failed flush, exhausted ARQ retries). The runtime installs a sink that
+/// fails the packet's owning completion handle, so `wait` reports the loss
+/// instead of timing out. Arguments: the lost packet and a human-readable
+/// reason.
+pub type SendFailureSink = Arc<dyn Fn(&Packet, &str) + Send + Sync>;
 
 /// Outbound half of a transport: deliver `pkt` to `dest_node`.
 ///
@@ -71,6 +104,23 @@ pub trait Egress: Send {
     /// so unbatched clusters pay nothing on the idle path.
     fn has_staged(&self) -> bool {
         false
+    }
+
+    /// Perform due timer-driven work (ARQ retransmissions, delayed ACKs)
+    /// and return how long until the next deadline, or `None` when no
+    /// timers are pending. The router calls this when its queue idles and
+    /// bounds its blocking receive by the returned duration. Default: no
+    /// timers.
+    fn service(&mut self) -> Option<Duration> {
+        None
+    }
+
+    /// Block until every reliability flow settles (all in-flight datagrams
+    /// acknowledged or declared lost), or `max_wait` elapses. Called on
+    /// router shutdown; retry exhaustion bounds it well under `max_wait`
+    /// in practice. Default: nothing to settle.
+    fn drain(&mut self, max_wait: Duration) {
+        let _ = max_wait;
     }
 }
 

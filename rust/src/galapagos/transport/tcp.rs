@@ -21,7 +21,7 @@ use std::sync::mpsc::Sender;
 use std::thread::JoinHandle;
 
 use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS};
-use super::Egress;
+use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::RouterMsg;
@@ -40,6 +40,9 @@ pub struct TcpEgress {
     batch_bytes: usize,
     batch_max_msgs: usize,
     pool: BufPool,
+    /// Where frames a failed flush had staged are reported, so their
+    /// owning completion handles fail instead of hanging.
+    failure_sink: Option<SendFailureSink>,
 }
 
 impl TcpEgress {
@@ -64,6 +67,33 @@ impl TcpEgress {
             batch_bytes,
             batch_max_msgs,
             pool: BufPool::default(),
+            failure_sink: None,
+        }
+    }
+
+    /// Install the failure sink invoked for every frame of a batch the
+    /// egress had to give up on.
+    pub fn with_failure_sink(mut self, sink: SendFailureSink) -> Self {
+        self.failure_sink = Some(sink);
+        self
+    }
+
+    /// Report every frame of a doomed batch to the failure sink. The
+    /// historical bug surfaced a failed flush only to the caller that
+    /// triggered it: every *other* operation whose frames shared the batch
+    /// kept waiting on handles that could never resolve.
+    fn fail_batch(&self, batch: &[u8], reason: &str) {
+        let Some(sink) = &self.failure_sink else { return };
+        let mut rest = batch;
+        while rest.len() >= FRAME_HEADER_BYTES {
+            let len = u32::from_le_bytes(rest[..FRAME_HEADER_BYTES].try_into().unwrap()) as usize;
+            let Some(frame) = rest.get(FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len) else {
+                return;
+            };
+            if let Ok(pkt) = Packet::from_wire(frame) {
+                sink(&pkt, reason);
+            }
+            rest = &rest[FRAME_HEADER_BYTES + len..];
         }
     }
 
@@ -115,19 +145,22 @@ impl TcpEgress {
         let written = match self.conn(node) {
             Ok(stream) => stream.write_all(&batch),
             Err(e) => {
-                self.pool.release(batch);
                 log::warn!("tcp: dropped {msgs} staged message(s) to unreachable node {node}");
+                self.fail_batch(&batch, &format!("tcp connect to node {node} failed: {e}"));
+                self.pool.release(batch);
                 return Err(e);
             }
         };
-        self.pool.release(batch);
         if let Err(e) = written {
             // Connection died mid-write; drop it so the next send
             // reconnects.
             self.conns.remove(&node);
             log::warn!("tcp: dropped a batch of {msgs} staged message(s) to node {node}: {e}");
+            self.fail_batch(&batch, &format!("tcp write to node {node} failed: {e}"));
+            self.pool.release(batch);
             return Err(Error::Io(e));
         }
+        self.pool.release(batch);
         Ok(())
     }
 }
@@ -458,6 +491,38 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    /// A failed flush must fail EVERY staged frame through the sink — the
+    /// historical bug surfaced the error only to the flushing caller and
+    /// left every other staged operation's handle hanging until timeout.
+    #[test]
+    fn failed_flush_reports_every_staged_frame() {
+        // Bound-then-dropped listener: connects are refused.
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let failed = std::sync::Arc::new(std::sync::Mutex::new(Vec::<Packet>::new()));
+        let failed2 = std::sync::Arc::clone(&failed);
+        let sink: SendFailureSink = std::sync::Arc::new(move |pkt: &Packet, reason: &str| {
+            assert!(reason.contains("tcp"), "{reason}");
+            failed2.lock().unwrap().push(pkt.clone());
+        });
+        let mut egress = TcpEgress::with_batching(
+            HashMap::from([(1u16, dead_addr)]),
+            1 << 16,
+            64,
+        )
+        .with_failure_sink(sink);
+        // Three different operations' frames share the staged batch.
+        let pkts: Vec<Packet> =
+            (0..3u8).map(|i| Packet::new(i as u16, 9, vec![i; 8]).unwrap()).collect();
+        for p in &pkts {
+            egress.send(1, p.clone()).unwrap();
+        }
+        assert!(egress.flush().is_err(), "flush to a dead peer must error");
+        assert_eq!(*failed.lock().unwrap(), pkts, "every staged frame must fail");
     }
 
     /// `batch_bytes = 0` produces a byte stream identical to the historical

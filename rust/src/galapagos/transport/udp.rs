@@ -21,10 +21,12 @@
 use std::collections::HashMap;
 use std::net::UdpSocket;
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::arq::{for_each_frame, ArqEndpoint};
 use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS};
-use super::Egress;
+use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::RouterMsg;
@@ -44,6 +46,17 @@ pub struct UdpEgress {
     batch_bytes: usize,
     batch_max_msgs: usize,
     pool: BufPool,
+    /// Reliability layer: present = every datagram goes through the ARQ
+    /// window (`udp_window > 0`); absent = the historical lossy datapath.
+    arq: Option<Arc<ArqEndpoint>>,
+    /// Peers whose UDP core is the hardware one (drops > MTU datagrams on
+    /// receive). In reliable mode the egress must respect *their* MTU too:
+    /// retransmitting a datagram the receiver deterministically drops
+    /// would burn the whole retry budget for nothing.
+    hw_peers: std::collections::HashSet<u16>,
+    /// Where frames a failed flush had staged are reported, so their
+    /// owning completion handles fail instead of hanging.
+    failure_sink: Option<SendFailureSink>,
 }
 
 impl UdpEgress {
@@ -72,24 +85,71 @@ impl UdpEgress {
             batch_bytes,
             batch_max_msgs,
             pool: BufPool::default(),
+            arq: None,
+            hw_peers: std::collections::HashSet::new(),
+            failure_sink: None,
         }
     }
 
-    /// The absolute cap one datagram may reach when frames are coalesced.
-    fn datagram_cap(&self) -> usize {
-        if self.hw_core {
-            UDP_MTU_PAYLOAD
+    /// Route every datagram through the ARQ reliability layer (shared with
+    /// this node's ingress, which processes the returning ACKs).
+    pub fn with_reliability(mut self, arq: Arc<ArqEndpoint>) -> Self {
+        self.arq = Some(arq);
+        self
+    }
+
+    /// Declare which peers sit behind a hardware UDP core: reliable mode
+    /// bounds datagrams toward them by the MTU, since their core drops
+    /// anything larger on receive and retransmission could never succeed.
+    pub fn with_hw_peers(mut self, peers: impl IntoIterator<Item = u16>) -> Self {
+        self.hw_peers = peers.into_iter().collect();
+        self
+    }
+
+    /// Install the failure sink invoked for every frame of a batch the
+    /// egress had to give up on.
+    pub fn with_failure_sink(mut self, sink: SendFailureSink) -> Self {
+        self.failure_sink = Some(sink);
+        self
+    }
+
+    /// The absolute cap one datagram *payload* (coalesced frames, before
+    /// the ARQ header) may reach toward `node`. The MTU bounds it when this
+    /// node's core is the hardware one (it cannot emit fragmented
+    /// datagrams) and — in reliable mode only — when the *peer*'s is (its
+    /// core drops > MTU datagrams on receive, so retransmission could never
+    /// succeed; the raw path keeps the historical silent-loss semantics
+    /// there). The ARQ header counts against the MTU: a reliable datagram
+    /// must still never fragment.
+    fn datagram_cap(&self, node: u16) -> usize {
+        let overhead = self.arq.as_ref().map_or(0, |a| a.header_bytes());
+        let mtu_bound =
+            self.hw_core || (self.arq.is_some() && self.hw_peers.contains(&node));
+        if mtu_bound {
+            UDP_MTU_PAYLOAD - overhead
         } else {
             MAX_PACKET_BYTES
         }
     }
 
+    /// Report every frame of a doomed batch to the failure sink (the
+    /// historical bug failed only the caller that triggered the flush,
+    /// stranding every other staged operation's handle until timeout).
+    fn fail_batch(&self, batch: &[u8], reason: &str) {
+        if let Some(sink) = &self.failure_sink {
+            for_each_frame(batch, |pkt| sink(&pkt, reason));
+        }
+    }
+
     /// Send `node`'s staged datagram (if any).
     ///
-    /// Failure semantics match the historical one-datagram-per-packet
-    /// path (UDP is lossy by contract): a datagram that cannot be sent is
-    /// dropped, the loss is logged with its message count, and the error
-    /// surfaces to the caller.
+    /// With the ARQ layer, the send enters the sliding window (blocking
+    /// while the window is full — backpressure instead of loss) and is
+    /// retransmitted until acknowledged or its retries exhaust. Without it,
+    /// failure semantics match the historical one-datagram-per-packet path
+    /// (UDP is lossy by contract): a datagram that cannot be sent is
+    /// dropped and the loss logged — but every staged frame it carried is
+    /// reported to the failure sink, and the error surfaces to the caller.
     fn flush_node(&mut self, node: u16) -> Result<()> {
         let msgs = match self.stage.get(&node) {
             Some(c) if !c.is_empty() => c.pending_msgs(),
@@ -100,16 +160,19 @@ impl UdpEgress {
             .get_mut(&node)
             .expect("checked above")
             .take(&mut self.pool);
-        let result = match self.peers.get(&node) {
-            Some(addr) => self.socket.send_to(&batch, addr).map(|_| ()).map_err(Error::Io),
-            None => Err(Error::UnknownNode(node)),
+        let result = match (&self.arq, self.peers.get(&node)) {
+            (Some(arq), Some(_)) => arq.send(node, &batch),
+            (None, Some(addr)) => {
+                self.socket.send_to(&batch, addr).map(|_| ()).map_err(Error::Io)
+            }
+            (_, None) => Err(Error::UnknownNode(node)),
         };
-        self.pool.release(batch);
-        if let Err(e) = result {
+        if let Err(e) = &result {
             log::warn!("udp: dropped a datagram of {msgs} staged message(s) to node {node}: {e}");
-            return Err(e);
+            self.fail_batch(&batch, &format!("udp send to node {node} failed: {e}"));
         }
-        Ok(())
+        self.pool.release(batch);
+        result
     }
 }
 
@@ -119,11 +182,18 @@ impl Egress for UdpEgress {
             return Err(Error::UnknownNode(dest_node));
         }
         let frame_len = pkt.wire_len();
-        if self.hw_core && frame_len > UDP_MTU_PAYLOAD {
-            // Hardware UDP core drops or refuses fragmented datagrams.
+        let cap = self.datagram_cap(dest_node);
+        if frame_len > cap {
+            // A hardware UDP core refuses to emit — or, on the receiving
+            // side of a reliable flow, to accept — fragmented datagrams
+            // (the ARQ header, when present, eats into the MTU payload).
+            // Reject up front instead of burning the retry budget on a
+            // datagram the peer deterministically drops. (Software-to-
+            // software caps equal the packet maximum, so this never fires
+            // there.)
             return Err(Error::UdpFragmentation(frame_len));
         }
-        let (bb, bm, cap) = (self.batch_bytes, self.batch_max_msgs, self.datagram_cap());
+        let (bb, bm) = (self.batch_bytes, self.batch_max_msgs);
         let staged = self
             .stage
             .entry(dest_node)
@@ -174,6 +244,16 @@ impl Egress for UdpEgress {
     fn has_staged(&self) -> bool {
         self.stage.values().any(|c| !c.is_empty())
     }
+
+    fn service(&mut self) -> Option<std::time::Duration> {
+        self.arq.as_ref().and_then(|a| a.service())
+    }
+
+    fn drain(&mut self, max_wait: std::time::Duration) {
+        if let Some(arq) = &self.arq {
+            arq.drain(max_wait);
+        }
+    }
 }
 
 /// Inbound half: a reader thread on the bound socket.
@@ -190,6 +270,21 @@ impl UdpIngress {
     /// datagram is frame-decoded: it may carry several coalesced wire
     /// packets (see [`UdpEgress::with_batching`]).
     pub fn start(socket: UdpSocket, router_tx: Sender<RouterMsg>, hw_core: bool) -> Result<UdpIngress> {
+        Self::start_with_reliability(socket, router_tx, hw_core, None)
+    }
+
+    /// Start receiving with an optional ARQ endpoint (shared with the
+    /// node's egress). In reliable mode every datagram carries an ARQ
+    /// header: the endpoint strips it, acknowledges, deduplicates and
+    /// reorders, and hands back only the in-order payloads; ACK processing
+    /// for the reverse direction (freeing the egress window, fast
+    /// retransmissions) happens inside the same call.
+    pub fn start_with_reliability(
+        socket: UdpSocket,
+        router_tx: Sender<RouterMsg>,
+        hw_core: bool,
+        arq: Option<Arc<ArqEndpoint>>,
+    ) -> Result<UdpIngress> {
         let local_addr = socket.local_addr()?;
         let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
         let sd = std::sync::Arc::clone(&shutdown);
@@ -208,8 +303,19 @@ impl UdpIngress {
                                 log::warn!("hw udp core dropped fragmented datagram of {n} bytes");
                                 continue;
                             }
-                            if !decode_datagram(&buf[..n], &router_tx) {
-                                break; // router gone
+                            match &arq {
+                                Some(endpoint) => {
+                                    for payload in endpoint.on_datagram(&buf[..n]) {
+                                        if !decode_datagram(&payload, &router_tx) {
+                                            return; // router gone
+                                        }
+                                    }
+                                }
+                                None => {
+                                    if !decode_datagram(&buf[..n], &router_tx) {
+                                        break; // router gone
+                                    }
+                                }
                             }
                         }
                         Err(ref e)
@@ -276,7 +382,133 @@ fn decode_datagram(mut dgram: &[u8], tx: &Sender<RouterMsg>) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::arq::ArqConfig;
     use std::sync::mpsc;
+    use std::time::Duration;
+
+    /// Build a connected pair of ARQ endpoints over two loopback sockets,
+    /// with the sender side's ACK-consuming reader started. Returns
+    /// `(sender_endpoint, sender_socket, receiver_socket, receiver_addr,
+    /// ack_reader, keepalive_rx)`.
+    #[allow(clippy::type_complexity)]
+    fn arq_pair(
+        window: usize,
+    ) -> (Arc<ArqEndpoint>, UdpSocket, UdpSocket, String, UdpIngress, mpsc::Receiver<RouterMsg>)
+    {
+        let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let rx_addr = rx_sock.local_addr().unwrap().to_string();
+        let cfg = |node_id| ArqConfig {
+            node_id,
+            window,
+            max_retries: 4,
+            ack_interval: Duration::from_millis(2),
+        };
+        let sender = Arc::new(ArqEndpoint::new(
+            cfg(0),
+            tx_sock.try_clone().unwrap(),
+            HashMap::from([(1u16, rx_addr.clone())]),
+            None,
+        ));
+        let (ack_tx, ack_rx) = mpsc::channel();
+        let ack_reader = UdpIngress::start_with_reliability(
+            tx_sock.try_clone().unwrap(),
+            ack_tx,
+            false,
+            Some(Arc::clone(&sender)),
+        )
+        .unwrap();
+        (sender, tx_sock, rx_sock, rx_addr, ack_reader, ack_rx)
+    }
+
+    /// The reliable datapath end to end: batched sends enter the ARQ
+    /// window, the receiving endpoint strips the header, delivers every
+    /// frame exactly once in order, and its ACKs drain the sender window.
+    #[test]
+    fn reliable_roundtrip_with_batching() {
+        let (sender_ep, tx_sock, rx_sock, rx_addr, _ack_reader, _keep) = arq_pair(8);
+        let tx_addr = tx_sock.local_addr().unwrap().to_string();
+        let recv_ep = Arc::new(ArqEndpoint::new(
+            ArqConfig {
+                node_id: 1,
+                window: 8,
+                max_retries: 4,
+                ack_interval: Duration::from_millis(2),
+            },
+            rx_sock.try_clone().unwrap(),
+            HashMap::from([(0u16, tx_addr)]),
+            None,
+        ));
+        let (tx, rx) = mpsc::channel();
+        let _ingress =
+            UdpIngress::start_with_reliability(rx_sock, tx, false, Some(recv_ep)).unwrap();
+
+        let mut egress =
+            UdpEgress::with_batching(tx_sock, HashMap::from([(1u16, rx_addr)]), false, 256, 4)
+                .with_reliability(Arc::clone(&sender_ep));
+        for i in 0..40u8 {
+            egress.send(1, Packet::new(1, 2, vec![i; 16]).unwrap()).unwrap();
+        }
+        egress.flush().unwrap();
+        for i in 0..40u8 {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![i; 16]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // Every datagram must end up acknowledged.
+        sender_ep.drain(Duration::from_secs(5));
+        assert!(!sender_ep.has_inflight(), "window did not drain");
+    }
+
+    /// The hardware-core fragmentation gate accounts for the ARQ header:
+    /// the largest single frame shrinks by `ARQ_HEADER_BYTES`.
+    #[test]
+    fn hw_core_arq_cap_counts_header_overhead() {
+        use super::super::arq::ARQ_HEADER_BYTES;
+        let (sender_ep, tx_sock, _rx_sock, rx_addr, _ack_reader, _keep) = arq_pair(4);
+        let mut egress = UdpEgress::new(tx_sock, HashMap::from([(1u16, rx_addr)]), true)
+            .with_reliability(sender_ep);
+        // A frame that fits the raw MTU but not MTU − ARQ header must now
+        // be rejected (it would fragment once the header is prepended).
+        let payload = UDP_MTU_PAYLOAD - crate::galapagos::packet::WIRE_HEADER_BYTES
+            - ARQ_HEADER_BYTES / 2;
+        let big = Packet::new(1, 2, vec![0; payload]).unwrap();
+        assert!(matches!(egress.send(1, big), Err(Error::UdpFragmentation(_))));
+        // Under the adjusted cap it passes.
+        let small = Packet::new(1, 2, vec![0; payload - ARQ_HEADER_BYTES]).unwrap();
+        assert!(egress.send(1, small).is_ok());
+    }
+
+    /// A *software* sender in reliable mode must respect a hardware PEER's
+    /// MTU: the receiving core drops over-MTU datagrams, so retransmission
+    /// could never succeed — the send fails up front instead of burning
+    /// the whole retry budget. The raw path keeps the historical semantics
+    /// (silent loss at the receiver) for the same frame.
+    #[test]
+    fn reliable_sw_sender_respects_hw_peer_mtu() {
+        use super::super::arq::ARQ_HEADER_BYTES;
+        // Wire frame in the band (MTU − ARQ header, MTU]: deliverable raw,
+        // impossible reliable.
+        let payload = UDP_MTU_PAYLOAD - crate::galapagos::packet::WIRE_HEADER_BYTES
+            - ARQ_HEADER_BYTES / 2;
+
+        let (sender_ep, tx_sock, _rx_sock, rx_addr, _ack_reader, _keep) = arq_pair(4);
+        let mut reliable = UdpEgress::new(
+            tx_sock.try_clone().unwrap(),
+            HashMap::from([(1u16, rx_addr.clone())]),
+            false, // software sender
+        )
+        .with_reliability(sender_ep)
+        .with_hw_peers([1u16]);
+        let pkt = Packet::new(1, 2, vec![0; payload]).unwrap();
+        assert!(matches!(reliable.send(1, pkt.clone()), Err(Error::UdpFragmentation(_))));
+
+        // Raw mode: unchanged — the egress accepts it (the hw receiver is
+        // the one that silently drops, per the paper).
+        let mut raw = UdpEgress::new(tx_sock, HashMap::from([(1u16, rx_addr)]), false);
+        assert!(raw.send(1, pkt).is_ok());
+    }
 
     #[test]
     fn roundtrip_over_loopback() {

@@ -19,6 +19,18 @@
 //! shared engine — the *same* table the software handler thread resolves —
 //! so a kernel's `wait(handle)` works identically whether its runtime is a
 //! handler thread or this simulated GAScore (the paper's portability claim).
+//!
+//! Transport reliability: the paper's FPGA UDP core "simply accepts loss"
+//! (§IV-B1), so the hardware evaluation retreats to TCP for anything that
+//! must complete. The simulated hardware core here speaks the same
+//! sliding-window ARQ header as software nodes — its node's UDP transport
+//! runs over [`arq`](crate::galapagos::transport::arq) whenever
+//! `udp_window > 0`, with the ARQ header counted against the MTU so a
+//! reliable datagram still never fragments. The pipeline below therefore
+//! sees every AM **exactly once, in order** even on a lossy UDP link: the
+//! dedup/reorder happens underneath, before the router delivers into the
+//! "From Network" channel, and the hold-buffer ordering contract is
+//! preserved unchanged.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -138,6 +138,36 @@ impl ShoalCluster {
             );
         }
 
+        // Send-failure sink: when a transport gives up on a wire message (a
+        // failed batch flush, or reliable-UDP retries exhausting), the exact
+        // operation that sent it must fail — its token names the completion
+        // entry in the issuing kernel's table. Installed on every hosted
+        // node's transport before start.
+        let completions: HashMap<u16, Arc<CompletionTable>> =
+            kstate.iter().map(|(kid, ks)| (*kid, Arc::clone(&ks.completion))).collect();
+        let sink: crate::galapagos::transport::SendFailureSink =
+            Arc::new(move |pkt: &crate::galapagos::packet::Packet, reason: &str| {
+                match crate::am::header::AmMessage::decode(&pkt.data) {
+                    Ok(m) if m.flags.is_handle() && m.token != 0 => {
+                        // A lost request fails the sender's operation; a
+                        // lost REPLY fails the requester's — the reply
+                        // echoes the request's token, and the requester
+                        // (pkt.dest) may well be hosted in this process
+                        // (single-process multi-node clusters). A remote
+                        // owner simply isn't in the map and falls back to
+                        // its own timeout.
+                        let owner = if m.flags.is_reply() { pkt.dest } else { pkt.src };
+                        if let Some(table) = completions.get(&owner) {
+                            table.fail_token(m.token, reason);
+                        }
+                    }
+                    // Async sends and collective fan messages carry no
+                    // handle token; their loss is covered by the
+                    // collective/barrier straggler timeouts.
+                    _ => {}
+                }
+            });
+
         // Phase 2: start nodes with platform-appropriate delivery, spawn the
         // runtime components.
         let mut nodes = Vec::new();
@@ -147,7 +177,8 @@ impl ShoalCluster {
         let mut router_txs: HashMap<u16, mpsc::Sender<crate::galapagos::router::RouterMsg>> =
             HashMap::new();
 
-        for b in bound {
+        for mut b in bound {
+            b.set_failure_sink(Arc::clone(&sink));
             let node_id = b.node_id();
             let platform = spec.node(node_id)?.platform;
             let local_kernels = spec.kernels_on(node_id);

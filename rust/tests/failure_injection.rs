@@ -107,6 +107,9 @@ fn barrier_timeout_not_deadlock() {
 /// core cannot fragment) while small ones flow.
 #[test]
 fn hw_udp_fragmentation_refused() {
+    // UDP clusters create ARQ endpoints, which read loss-injection env
+    // vars: serialize against the env-writing tests below.
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let mut b = ClusterBuilder::new();
     b.transport(TransportKind::Udp);
     let n0 = b.node_at("fpga", Platform::Hw, "127.0.0.1:0");
@@ -202,4 +205,77 @@ fn hostile_wire_bytes() {
     // RouterMsg variants carrying short garbage are constructible and
     // droppable without issue.
     let _ = RouterMsg::FromNetwork(Packet::new(0, 0, vec![0xFF; 3]).unwrap());
+}
+
+/// Serializes the tests that read or write process environment variables
+/// (the jacobi fault hook writes; ARQ endpoint creation reads
+/// `SHOAL_UDP_DROP`) — concurrent `setenv`/`getenv` is UB on glibc.
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Reliable-UDP retry exhaustion must fail the EXACT operation that sent
+/// the lost datagram with a typed error — not strand its handle until the
+/// API timeout. Node 1's address is a black hole (bound socket nobody
+/// reads, so nothing is ever acknowledged).
+#[test]
+fn exhausted_udp_retries_fail_the_owning_handle() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let black_hole = std::net::UdpSocket::bind("127.0.0.1:0").unwrap();
+    let hole_addr = black_hole.local_addr().unwrap().to_string();
+
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Udp);
+    b.default_segment(1 << 16);
+    // Fail fast: one retransmission, ~10 ms RTO.
+    b.udp_window(4).udp_retries(1).udp_ack_interval_ms(1);
+    let n0 = b.node_at("driver", Platform::Sw, "127.0.0.1:0");
+    let n1 = b.node_at("ghost", Platform::Sw, &hole_addr);
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n1);
+    let spec = b.build().unwrap();
+
+    // Host only node 0; node 1 "exists" at the black hole.
+    let cluster = ShoalCluster::launch_node(&spec, n0).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    cluster.run_kernel(k0, move |mut k| {
+        let h = k.am_long(k1, handlers::NOP, &[], &[9u8; 64], 0).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = k.wait(h).unwrap_err();
+        tx.send((err, t0.elapsed())).unwrap();
+    });
+    let (err, took) = rx
+        .recv_timeout(std::time::Duration::from_secs(30))
+        .expect("handle must fail, not hang");
+    cluster.join().unwrap();
+    assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("retries exhausted"), "cause not named: {msg}");
+    assert!(
+        took < std::time::Duration::from_secs(10),
+        "failed via retry exhaustion, not a wait timeout ({took:?})"
+    );
+}
+
+/// A worker kernel failure must surface from `jacobi::run` as a typed
+/// error naming the worker — the historical `panic!` took down the whole
+/// process. Uses the `SHOAL_JACOBI_FAULT_WORKER` injection hook.
+#[test]
+fn jacobi_worker_failure_propagates_as_typed_error() {
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    std::env::set_var("SHOAL_JACOBI_FAULT_WORKER", "1");
+    let cfg = shoal::apps::jacobi::JacobiConfig {
+        n: 18,
+        iters: 4,
+        workers: 2,
+        ..shoal::apps::jacobi::JacobiConfig::default()
+    };
+    let err = shoal::apps::jacobi::run(&cfg).unwrap_err();
+    std::env::remove_var("SHOAL_JACOBI_FAULT_WORKER");
+    assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("worker 1"), "worker not named: {msg}");
+    assert!(msg.contains("injected worker fault"), "cause not chained: {msg}");
+
+    // With the hook cleared the same configuration runs clean.
+    let report = shoal::apps::jacobi::run(&cfg).unwrap();
+    assert_eq!(report.iters_done, 4);
 }
