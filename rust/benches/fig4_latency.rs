@@ -55,8 +55,11 @@ fn main() {
     let warmup = samples / 10;
     let mut m = Table::new("measured (this machine, real library) vs model SW constants")
         .header(["point", "payload", "measured median", "model"]);
+    // The in-proc row calibrates the model's *router-path* SW constants, so
+    // the intra-node one-sided fast path is disabled for it (the fast path
+    // has no model analogue — the hotpath bench gates it separately).
     for (label, placement, topo) in [
-        ("SW-SW same (in-proc)", BenchPlacement::sw_same(), Topology::SwSwSame),
+        ("SW-SW same (in-proc)", BenchPlacement::sw_same().no_fastpath(), Topology::SwSwSame),
         ("SW-SW diff (loopback TCP)", BenchPlacement::sw_diff(TransportKind::Tcp), Topology::SwSwDiff),
     ] {
         for payload in [8usize, 512, 4096] {

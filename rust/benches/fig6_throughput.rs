@@ -51,8 +51,10 @@ fn main() {
     let count = if quick { 200 } else { 2000 };
     let mut m = Table::new("measured SW throughput (real library)")
         .header(["placement", "payload", "medium-fifo", "long-fifo", "long (mem)"]);
+    // The in-proc row is a router-path measurement (the model has no
+    // analogue of the intra-node one-sided fast path, which hotpath gates).
     for (label, placement) in [
-        ("in-proc", BenchPlacement::sw_same()),
+        ("in-proc", BenchPlacement::sw_same().no_fastpath()),
         ("loopback TCP", BenchPlacement::sw_diff(TransportKind::Tcp)),
         // The batched egress datapath: same topology, coalescing on.
         (

@@ -5,6 +5,10 @@
 //!
 //! - AM header encode/decode rate
 //! - packet wire encode: fresh allocation vs pooled (recycled) buffer
+//! - zero-copy send datapath: WireBuilder borrowed-slice encode vs the
+//!   owned-AmMessage baseline (`sendpath` stage)
+//! - intra-node one-sided put vs the loopback-router path (`local_put`
+//!   stage)
 //! - TCP egress datapath: unbatched vs coalesced small-message send rate
 //! - PGAS segment read/write bandwidth (incl. strided)
 //! - in-process Medium round trip (API → router → handler → reply)
@@ -19,17 +23,21 @@
 //! Quick mode: `SHOAL_BENCH_QUICK=1 cargo bench --bench hotpath`
 //!
 //! Exits nonzero if a datapath check fails (CI bench smoke gates on this):
-//! the batched ≤64 B send stage must sustain ≥2× the messages/sec of the
-//! unbatched stage, handle-overlapped Long gets must complete at least
-//! as fast as the same number of sequential `wait_replies` round trips, and
-//! the tree all-reduce must finish no slower than the sequential
-//! gather-then-broadcast emulation it replaces.
+//! the zero-copy medium-AM send must sustain ≥1.5× the owned-encode
+//! baseline msgs/s, the intra-node one-sided put must complete in ≤0.25×
+//! the loopback-router path's latency, the batched ≤64 B send stage must
+//! sustain ≥2× the messages/sec of the unbatched stage, handle-overlapped
+//! Long gets must complete at least as fast as the same number of
+//! sequential `wait_replies` round trips, and the tree all-reduce must
+//! finish no slower than the sequential gather-then-broadcast emulation it
+//! replaces.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use shoal::am::header::{AmMessage, Descriptor};
 use shoal::am::types::{handler_ids, AmFlags, AmType};
+use shoal::am::wire::{WireBuilder, WireDesc};
 use shoal::bench::micro::{
     measure_collectives, measure_latency, measure_overlap_gets, measure_throughput,
     BenchPlacement,
@@ -38,6 +46,7 @@ use shoal::bench::report;
 use shoal::galapagos::packet::Packet;
 use shoal::galapagos::router::RouterMsg;
 use shoal::galapagos::transport::arq::{ArqConfig, ArqEndpoint};
+use shoal::galapagos::transport::batch::BufPool;
 use shoal::galapagos::transport::tcp::{TcpEgress, TcpIngress};
 use shoal::galapagos::transport::udp::{UdpEgress, UdpIngress};
 use shoal::galapagos::transport::Egress;
@@ -259,6 +268,127 @@ fn main() {
     csv.row(["encode_alloc".into(), format!("{alloc_ns:.1}"), "ns/op".to_string()]);
     csv.row(["encode_pooled".into(), format!("{pooled_ns:.1}"), "ns/op".to_string()]);
 
+    println!("== hotpath: zero-copy send datapath (Medium 1 KiB) ==");
+    // The owned-encode baseline is what every am_* builder did before the
+    // WireBuilder: to_vec() the args and payload into an AmMessage, then
+    // encode into a fresh wire buffer (two payload copies, three
+    // allocations). The zero-copy path encodes the same borrowed slices
+    // straight into the wire buffer (one copy, one exact-size allocation —
+    // the buffer leaves with the packet, exactly as in the API send path).
+    let sp_args = [1u64, 2];
+    let sp_payload = vec![0xCDu8; 1024];
+    let sp_msgs = if quick { 50_000 } else { 500_000 };
+    let t0 = Instant::now();
+    for _ in 0..sp_msgs {
+        let msg = AmMessage {
+            am_type: AmType::Medium,
+            flags: AmFlags::new().with(AmFlags::FIFO),
+            src: 1,
+            dst: 2,
+            handler: handler_ids::NOP,
+            token: 7,
+            args: sp_args.to_vec(),
+            desc: Descriptor::None,
+            payload: sp_payload.clone(),
+        };
+        let pkt = Packet::new(msg.dst, msg.src, msg.encode().unwrap()).unwrap();
+        std::hint::black_box(&pkt);
+    }
+    let owned_rate = sp_msgs as f64 / t0.elapsed().as_secs_f64();
+    println!("  owned-encode baseline                  {:>12.0} msgs/s", owned_rate);
+    let wb = WireBuilder {
+        am_type: AmType::Medium,
+        flags: AmFlags::new().with(AmFlags::FIFO),
+        src: 1,
+        dst: 2,
+        handler: handler_ids::NOP,
+        token: 7,
+        args: &sp_args,
+        desc: WireDesc::None,
+    };
+    let mut sp_pool = BufPool::default();
+    let t0 = Instant::now();
+    for _ in 0..sp_msgs {
+        // Mirrors ShoalKernel::send_wire: acquire → encode → packet. The
+        // buffer is NOT released back (in the real path it leaves with the
+        // packet and becomes the ingress payload).
+        let mut buf = sp_pool.acquire();
+        wb.encode_slice(&sp_payload, &mut buf).unwrap();
+        let pkt = Packet::new(wb.dst, wb.src, buf).unwrap();
+        std::hint::black_box(&pkt);
+    }
+    let zc_rate = sp_msgs as f64 / t0.elapsed().as_secs_f64();
+    println!("  zero-copy WireBuilder send             {:>12.0} msgs/s", zc_rate);
+    let sp_ratio = zc_rate / owned_rate;
+    println!("      -> zero-copy speedup {sp_ratio:.2}×");
+    let mut spcsv = Table::new("hotpath sendpath stage").header(["stage", "value", "unit"]);
+    for (name, v, unit) in [
+        ("send_owned", owned_rate, "msgs/s"),
+        ("send_zerocopy", zc_rate, "msgs/s"),
+        ("sendpath_speedup", sp_ratio, "x"),
+    ] {
+        spcsv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+        csv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+    }
+    let ok = sp_ratio >= 1.5;
+    println!(
+        "  [{}] zero-copy medium-AM send ≥1.5× owned-encode baseline",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("zero-copy send below 1.5x the owned-encode baseline");
+    }
+
+    println!("== hotpath: intra-node one-sided put (Long 4 KiB, send+wait) ==");
+    let lp_samples = if quick { 100 } else { 400 };
+    let routed = measure_latency(
+        BenchPlacement::sw_same().no_fastpath(),
+        MsgKind::LongFifo,
+        4096,
+        lp_samples,
+        lp_samples / 10,
+    )
+    .unwrap();
+    println!(
+        "  loopback-router path                   median {:>10}  p99 {:>10}",
+        fmt_ns(routed.median()),
+        fmt_ns(routed.p99())
+    );
+    let fast = measure_latency(
+        BenchPlacement::sw_same(),
+        MsgKind::LongFifo,
+        4096,
+        lp_samples,
+        lp_samples / 10,
+    )
+    .unwrap();
+    println!(
+        "  one-sided fast path                    median {:>10}  p99 {:>10}",
+        fmt_ns(fast.median()),
+        fmt_ns(fast.p99())
+    );
+    let lp_ratio = fast.median() / routed.median();
+    println!("      -> local put latency {lp_ratio:.3}× of the routed path");
+    for (name, v, unit) in [
+        ("local_put_fast", fast.median(), "ns"),
+        ("local_put_routed", routed.median(), "ns"),
+        ("local_put_ratio", lp_ratio, "x"),
+    ] {
+        spcsv.row([name.to_string(), format!("{v:.3}"), unit.to_string()]);
+        csv.row([name.to_string(), format!("{v:.3}"), unit.to_string()]);
+    }
+    if let Ok(p) = report::save_csv(&spcsv, "hotpath_sendpath") {
+        println!("  csv: {}", p.display());
+    }
+    let ok = lp_ratio <= 0.25;
+    println!(
+        "  [{}] intra-node put latency ≤0.25× the loopback-router path",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("intra-node put latency above 0.25x the loopback-router path");
+    }
+
     println!("== hotpath: TCP egress datapath (loopback, 64 B) ==");
     let dp_msgs = if quick { 20_000 } else { 200_000 };
     let unbatched = tcp_send_rate(None, dp_msgs);
@@ -344,7 +474,11 @@ fn main() {
 
     println!("== hotpath: completion datapath (4 KiB long gets, in-proc) ==");
     let ops = if quick { 200 } else { 2000 };
-    let (seq_rate, ovl_rate) = measure_overlap_gets(BenchPlacement::sw_same(), 4096, ops).unwrap();
+    // Fast path off: this stage measures overlap over the *router*
+    // datapath (with the one-sided fast path both variants complete at
+    // issue time and the comparison would be noise).
+    let (seq_rate, ovl_rate) =
+        measure_overlap_gets(BenchPlacement::sw_same().no_fastpath(), 4096, ops).unwrap();
     println!("  sequential send + wait_replies(1)      {:>12.0} ops/s", seq_rate);
     println!("  overlapped handles + wait_all          {:>12.0} ops/s", ovl_rate);
     let overlap_ratio = ovl_rate / seq_rate;

@@ -157,7 +157,7 @@ impl KernelRuntime {
     /// replies for gets, Short acks otherwise) are passed to `emit`.
     pub fn process_ingress(
         &self,
-        msg: AmMessage,
+        mut msg: AmMessage,
         emit: &mut dyn FnMut(AmMessage),
     ) -> Result<()> {
         debug_assert_eq!(msg.dst, self.kernel_id, "router misdelivered");
@@ -194,7 +194,6 @@ impl KernelRuntime {
                 // Point-to-point payload into the kernel stream. The payload
                 // is moved, not copied — the single-copy hot path (§Perf).
                 self.handlers.dispatch(&msg, &self.segment)?;
-                let mut msg = msg;
                 self.medium_tx
                     .send(ReceivedMedium {
                         src: msg.src,
@@ -213,6 +212,8 @@ impl KernelRuntime {
                     return Err(Error::MalformedAm("medium get without descriptor".into()));
                 };
                 let data = self.segment.read(src_addr, len as usize)?;
+                // The request is consumed here: the reply takes ownership of
+                // the already-decoded args instead of cloning them.
                 data_reply = Some(AmMessage {
                     am_type: AmType::Medium,
                     flags: reply_flags(&msg),
@@ -220,7 +221,7 @@ impl KernelRuntime {
                     dst: msg.src,
                     handler: msg.handler,
                     token: msg.token,
-                    args: msg.args.clone(),
+                    args: std::mem::take(&mut msg.args),
                     desc: Descriptor::None,
                     payload: data,
                 });
@@ -237,6 +238,7 @@ impl KernelRuntime {
                     return Err(Error::MalformedAm("long get without descriptor".into()));
                 };
                 let data = self.segment.read(src_addr, len as usize)?;
+                // As for Medium gets: move the args into the reply.
                 data_reply = Some(AmMessage {
                     am_type: AmType::Long,
                     flags: reply_flags(&msg),
@@ -244,7 +246,7 @@ impl KernelRuntime {
                     dst: msg.src,
                     handler: msg.handler,
                     token: msg.token,
-                    args: msg.args.clone(),
+                    args: std::mem::take(&mut msg.args),
                     desc: Descriptor::Long { dst_addr: reply_addr },
                     payload: data,
                 });

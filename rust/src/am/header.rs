@@ -16,6 +16,7 @@
 //! 2); `am_tx`/`am_rx` use the descriptor words to issue DataMover commands.
 
 use super::types::{AmFlags, AmType};
+use super::wire::{WireBuilder, WireDesc};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::MAX_PAYLOAD_BYTES;
 
@@ -47,6 +48,31 @@ pub enum Descriptor {
     Strided { dst_addr: u64, stride: u32, block_len: u32, nblocks: u32 },
     /// Vectored scatter over explicit (addr, len) extents.
     Vectored { entries: Vec<(u64, u32)> },
+}
+
+impl Descriptor {
+    /// Borrow as the zero-copy codec's descriptor form.
+    pub fn as_wire(&self) -> WireDesc<'_> {
+        match self {
+            Descriptor::None => WireDesc::None,
+            Descriptor::MediumGet { src_addr, len } => {
+                WireDesc::MediumGet { src_addr: *src_addr, len: *len }
+            }
+            Descriptor::Long { dst_addr } => WireDesc::Long { dst_addr: *dst_addr },
+            Descriptor::LongGet { src_addr, len, reply_addr } => WireDesc::LongGet {
+                src_addr: *src_addr,
+                len: *len,
+                reply_addr: *reply_addr,
+            },
+            Descriptor::Strided { dst_addr, stride, block_len, nblocks } => WireDesc::Strided {
+                dst_addr: *dst_addr,
+                stride: *stride,
+                block_len: *block_len,
+                nblocks: *nblocks,
+            },
+            Descriptor::Vectored { entries } => WireDesc::Vectored { entries },
+        }
+    }
 }
 
 /// A decoded Active Message.
@@ -311,6 +337,25 @@ impl AmMessage {
     /// Galapagos packet.
     pub fn max_payload_for(&self) -> usize {
         MAX_PAYLOAD_BYTES - self.header_overhead()
+    }
+
+    /// Borrow this message as the zero-copy codec's builder plus its payload
+    /// slice. `wb.encode_slice(payload, buf)` produces byte-for-byte what
+    /// [`encode`](AmMessage::encode) would (proven by property test).
+    pub fn as_wire(&self) -> (WireBuilder<'_>, &[u8]) {
+        (
+            WireBuilder {
+                am_type: self.am_type,
+                flags: self.flags,
+                src: self.src,
+                dst: self.dst,
+                handler: self.handler,
+                token: self.token,
+                args: &self.args,
+                desc: self.desc.as_wire(),
+            },
+            &self.payload,
+        )
     }
 }
 

@@ -17,14 +17,20 @@
 //! - [`completion`] — per-operation `AmHandle`s over a slab completion
 //!   table: replies carry the request's token back and resolve the specific
 //!   operation that issued it (DART-style nonblocking completion), with the
-//!   paper's cumulative-counter `wait_replies` retained as a shim.
+//!   paper's cumulative-counter `wait_replies` retained as a shim;
+//! - [`wire`]    — the borrowed-slice egress codec: `WireBuilder` serializes
+//!   header + args + payload straight from caller slices into a pooled wire
+//!   buffer (one copy, caller → wire), bitwise identical to the owned
+//!   `AmMessage::encode`.
 
 pub mod completion;
 pub mod engine;
 pub mod handlers;
 pub mod header;
 pub mod types;
+pub mod wire;
 
 pub use completion::{AmHandle, CompletionTable};
 pub use header::{AmMessage, Descriptor};
 pub use types::{AmFlags, AmType};
+pub use wire::{WireBuilder, WireDesc};

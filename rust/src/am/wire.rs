@@ -1,0 +1,422 @@
+//! Borrowed-slice wire encoding — the zero-copy egress codec.
+//!
+//! [`AmMessage::encode`](super::header::AmMessage::encode) is the *owned*
+//! codec: building one costs a `to_vec()` of the args and the payload before
+//! the encode itself copies everything again into a fresh wire buffer — two
+//! full copies and three allocations per send. `WireBuilder` is the same
+//! wire format driven from borrowed data: the `am_*` builders in
+//! `shoal_node::api` point it at the caller's arg and payload slices and it
+//! serializes header + args + descriptor + payload straight into a
+//! [`BufPool`](crate::galapagos::transport::batch::BufPool)-managed wire
+//! buffer (one exact-size allocation that then travels with the packet —
+//! on local topologies it is reused as the ingress payload, keeping the
+//! datapath single-copy). One copy, caller → wire.
+//!
+//! The encoding is proven bitwise identical to the owned codec by a property
+//! test over all five AM classes (`tests/properties.rs`), so remote peers
+//! cannot tell which path produced a packet.
+
+use super::header::{MAX_ARGS, MAX_VECTORED};
+use super::types::{AmFlags, AmType};
+use crate::error::{Error, Result};
+use crate::galapagos::packet::MAX_PAYLOAD_BYTES;
+
+/// Borrowed twin of [`Descriptor`](super::header::Descriptor): the
+/// type-specific addressing words, with Vectored extents borrowed instead of
+/// owned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireDesc<'a> {
+    /// Short; Medium put; Medium data reply.
+    None,
+    /// Medium *get*.
+    MediumGet { src_addr: u64, len: u32 },
+    /// Long put (and Long data reply).
+    Long { dst_addr: u64 },
+    /// Long *get*.
+    LongGet { src_addr: u64, len: u32, reply_addr: u64 },
+    /// Strided scatter.
+    Strided { dst_addr: u64, stride: u32, block_len: u32, nblocks: u32 },
+    /// Vectored scatter over explicit (addr, len) extents.
+    Vectored { entries: &'a [(u64, u32)] },
+}
+
+/// A wire encoder over borrowed header fields, args and payload.
+///
+/// The contract mirrors the owned codec exactly:
+///
+/// - [`validate`](WireBuilder::validate) enforces the same invariants as
+///   `AmMessage::validate` (arg count, descriptor/type compatibility,
+///   payload-length laws, packet cap) given only the payload *length*;
+/// - [`encode_slice`](WireBuilder::encode_slice) /
+///   [`encode_with`](WireBuilder::encode_with) append the wire bytes to a
+///   caller buffer (typically pool-recycled) — byte-for-byte what
+///   `AmMessage::encode` would have produced;
+/// - [`max_payload`](WireBuilder::max_payload) is the chunking bound
+///   (`AmMessage::max_payload_for` without constructing a probe message).
+#[derive(Clone, Copy, Debug)]
+pub struct WireBuilder<'a> {
+    pub am_type: AmType,
+    pub flags: AmFlags,
+    pub src: u16,
+    pub dst: u16,
+    pub handler: u8,
+    pub token: u32,
+    pub args: &'a [u64],
+    pub desc: WireDesc<'a>,
+}
+
+impl<'a> WireBuilder<'a> {
+    /// Validate the header/descriptor against a payload of `payload_len`
+    /// bytes — the borrowed twin of `AmMessage::validate`.
+    pub fn validate(&self, payload_len: usize) -> Result<()> {
+        if self.args.len() > MAX_ARGS {
+            return Err(Error::MalformedAm(format!(
+                "{} args > max {}",
+                self.args.len(),
+                MAX_ARGS
+            )));
+        }
+        match (self.am_type, &self.desc) {
+            (AmType::Short, WireDesc::None) => {
+                if payload_len != 0 {
+                    return Err(Error::MalformedAm("short message with payload".into()));
+                }
+            }
+            (AmType::Medium, WireDesc::None) => {}
+            (AmType::Medium, WireDesc::MediumGet { .. }) => {
+                if !self.flags.is_get() {
+                    return Err(Error::MalformedAm("MediumGet descriptor without GET flag".into()));
+                }
+            }
+            (AmType::Long, WireDesc::Long { .. }) => {}
+            (AmType::Long, WireDesc::LongGet { .. }) => {
+                if !self.flags.is_get() {
+                    return Err(Error::MalformedAm("LongGet descriptor without GET flag".into()));
+                }
+            }
+            (AmType::LongStrided, WireDesc::Strided { block_len, nblocks, stride, .. }) => {
+                let total = *block_len as u64 * *nblocks as u64;
+                if total != payload_len as u64 {
+                    return Err(Error::BadDescriptor(format!(
+                        "strided: {nblocks} blocks × {block_len} B = {total} ≠ payload {payload_len}"
+                    )));
+                }
+                if *stride < *block_len && *nblocks > 1 {
+                    return Err(Error::BadDescriptor(
+                        "strided: stride smaller than block (overlapping scatter)".into(),
+                    ));
+                }
+            }
+            (AmType::LongVectored, WireDesc::Vectored { entries }) => {
+                if entries.len() > MAX_VECTORED {
+                    return Err(Error::BadDescriptor(format!(
+                        "vectored: {} entries > max {MAX_VECTORED}",
+                        entries.len()
+                    )));
+                }
+                let total: u64 = entries.iter().map(|(_, l)| *l as u64).sum();
+                if total != payload_len as u64 {
+                    return Err(Error::BadDescriptor(format!(
+                        "vectored: extents sum {total} ≠ payload {payload_len}"
+                    )));
+                }
+            }
+            (t, d) => {
+                return Err(Error::MalformedAm(format!("descriptor {d:?} invalid for type {t}")))
+            }
+        }
+        if payload_len > MAX_PAYLOAD_BYTES {
+            return Err(Error::AmTooLarge { payload: payload_len, limit: MAX_PAYLOAD_BYTES });
+        }
+        Ok(())
+    }
+
+    /// Size of the encoded message without the payload (header + descriptor
+    /// words) — identical to `AmMessage::header_overhead`.
+    pub fn header_overhead(&self) -> usize {
+        16 + 8 * self.args.len()
+            + match &self.desc {
+                WireDesc::None => 0,
+                WireDesc::MediumGet { .. } => 16,
+                WireDesc::Long { .. } => 8,
+                WireDesc::LongGet { .. } => 24,
+                WireDesc::Strided { .. } => 24,
+                WireDesc::Vectored { entries } => 8 + 16 * entries.len(),
+            }
+    }
+
+    /// Largest payload a message with this header shape can carry in one
+    /// Galapagos packet — the chunking bound.
+    pub fn max_payload(&self) -> usize {
+        MAX_PAYLOAD_BYTES - self.header_overhead()
+    }
+
+    /// Append the full wire encoding (header + args + descriptor + payload)
+    /// to `buf`. One copy: the payload slice goes straight into the wire
+    /// buffer.
+    pub fn encode_slice(&self, payload: &[u8], buf: &mut Vec<u8>) -> Result<()> {
+        self.validate(payload.len())?;
+        buf.reserve(self.header_overhead() + payload.len());
+        self.write_header(payload.len(), buf);
+        buf.extend_from_slice(payload);
+        Ok(())
+    }
+
+    /// Append the wire encoding with the payload produced by `fill` writing
+    /// directly into the wire buffer's tail — the shared-memory send path
+    /// (`am_*_from_mem`) uses this to copy segment bytes onto the wire
+    /// without an intermediate `Vec`.
+    pub fn encode_with(
+        &self,
+        payload_len: usize,
+        buf: &mut Vec<u8>,
+        fill: impl FnOnce(&mut [u8]) -> Result<()>,
+    ) -> Result<()> {
+        self.validate(payload_len)?;
+        buf.reserve(self.header_overhead() + payload_len);
+        self.write_header(payload_len, buf);
+        let start = buf.len();
+        buf.resize(start + payload_len, 0);
+        fill(&mut buf[start..])
+    }
+
+    fn write_header(&self, payload_len: usize, w: &mut Vec<u8>) {
+        // word 0
+        w.push(self.am_type as u8);
+        w.push(self.flags.0);
+        w.extend_from_slice(&self.src.to_le_bytes());
+        w.extend_from_slice(&self.dst.to_le_bytes());
+        w.push(self.handler);
+        w.push(self.args.len() as u8);
+        // word 1
+        w.extend_from_slice(&(payload_len as u32).to_le_bytes());
+        w.extend_from_slice(&self.token.to_le_bytes());
+        // args
+        for a in self.args {
+            w.extend_from_slice(&a.to_le_bytes());
+        }
+        // descriptor
+        match &self.desc {
+            WireDesc::None => {}
+            WireDesc::MediumGet { src_addr, len } => {
+                w.extend_from_slice(&src_addr.to_le_bytes());
+                w.extend_from_slice(&len.to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes());
+            }
+            WireDesc::Long { dst_addr } => {
+                w.extend_from_slice(&dst_addr.to_le_bytes());
+            }
+            WireDesc::LongGet { src_addr, len, reply_addr } => {
+                w.extend_from_slice(&src_addr.to_le_bytes());
+                w.extend_from_slice(&len.to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes());
+                w.extend_from_slice(&reply_addr.to_le_bytes());
+            }
+            WireDesc::Strided { dst_addr, stride, block_len, nblocks } => {
+                w.extend_from_slice(&dst_addr.to_le_bytes());
+                w.extend_from_slice(&stride.to_le_bytes());
+                w.extend_from_slice(&block_len.to_le_bytes());
+                w.extend_from_slice(&nblocks.to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes()); // pad to word
+            }
+            WireDesc::Vectored { entries } => {
+                w.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+                w.extend_from_slice(&0u32.to_le_bytes()); // pad
+                for (addr, len) in *entries {
+                    w.extend_from_slice(&addr.to_le_bytes());
+                    w.extend_from_slice(&len.to_le_bytes());
+                    w.extend_from_slice(&0u32.to_le_bytes()); // pad
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::am::header::{AmMessage, Descriptor};
+    use crate::am::types::handler_ids;
+
+    fn owned(msg: &AmMessage) -> Vec<u8> {
+        msg.encode().unwrap()
+    }
+
+    fn borrowed(msg: &AmMessage) -> Vec<u8> {
+        let (wb, payload) = msg.as_wire();
+        let mut buf = Vec::new();
+        wb.encode_slice(payload, &mut buf).unwrap();
+        buf
+    }
+
+    #[test]
+    fn matches_owned_encode_for_every_class() {
+        let msgs = [
+            AmMessage {
+                am_type: AmType::Short,
+                flags: AmFlags::new().with(AmFlags::REPLY).with(AmFlags::HANDLE),
+                src: 1,
+                dst: 2,
+                handler: handler_ids::REPLY,
+                token: 99,
+                args: vec![1, 2, 3],
+                desc: Descriptor::None,
+                payload: vec![],
+            },
+            AmMessage {
+                am_type: AmType::Medium,
+                flags: AmFlags::new().with(AmFlags::FIFO),
+                src: 3,
+                dst: 4,
+                handler: handler_ids::NOP,
+                token: 7,
+                args: vec![],
+                desc: Descriptor::None,
+                payload: vec![9; 100],
+            },
+            AmMessage {
+                am_type: AmType::Medium,
+                flags: AmFlags::new().with(AmFlags::GET),
+                src: 3,
+                dst: 4,
+                handler: handler_ids::NOP,
+                token: 5,
+                args: vec![42],
+                desc: Descriptor::MediumGet { src_addr: 0x1000, len: 256 },
+                payload: vec![],
+            },
+            AmMessage {
+                am_type: AmType::Long,
+                flags: AmFlags::new(),
+                src: 0,
+                dst: 1,
+                handler: handler_ids::NOP,
+                token: 9,
+                args: vec![7, 8],
+                desc: Descriptor::Long { dst_addr: 0xdead_beef },
+                payload: vec![1, 2, 3, 4],
+            },
+            AmMessage {
+                am_type: AmType::Long,
+                flags: AmFlags::new().with(AmFlags::GET),
+                src: 0,
+                dst: 1,
+                handler: handler_ids::NOP,
+                token: 2,
+                args: vec![],
+                desc: Descriptor::LongGet { src_addr: 64, len: 512, reply_addr: 128 },
+                payload: vec![],
+            },
+            AmMessage {
+                am_type: AmType::LongStrided,
+                flags: AmFlags::new(),
+                src: 5,
+                dst: 6,
+                handler: handler_ids::NOP,
+                token: 3,
+                args: vec![],
+                desc: Descriptor::Strided { dst_addr: 1024, stride: 64, block_len: 16, nblocks: 4 },
+                payload: vec![0xAB; 64],
+            },
+            AmMessage {
+                am_type: AmType::LongVectored,
+                flags: AmFlags::new().with(AmFlags::ASYNC),
+                src: 7,
+                dst: 8,
+                handler: handler_ids::NOP,
+                token: 4,
+                args: vec![11],
+                desc: Descriptor::Vectored { entries: vec![(0, 8), (100, 24)] },
+                payload: vec![0xCD; 32],
+            },
+        ];
+        for msg in &msgs {
+            assert_eq!(owned(msg), borrowed(msg), "class {}", msg.am_type);
+            // Decode proves the wire is self-consistent, not just identical.
+            assert_eq!(&AmMessage::decode(&borrowed(msg)).unwrap(), msg);
+        }
+    }
+
+    #[test]
+    fn encode_with_fills_payload_in_place() {
+        let payload = [0x5Au8; 96];
+        let wb = WireBuilder {
+            am_type: AmType::Long,
+            flags: AmFlags::new(),
+            src: 1,
+            dst: 2,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: &[3],
+            desc: WireDesc::Long { dst_addr: 512 },
+        };
+        let mut via_slice = Vec::new();
+        wb.encode_slice(&payload, &mut via_slice).unwrap();
+        let mut via_fill = Vec::new();
+        wb.encode_with(payload.len(), &mut via_fill, |out| {
+            out.copy_from_slice(&payload);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(via_slice, via_fill);
+    }
+
+    #[test]
+    fn rejects_the_same_invalid_shapes_as_the_owned_codec() {
+        // Short with payload.
+        let wb = WireBuilder {
+            am_type: AmType::Short,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 0,
+            handler: 0,
+            token: 0,
+            args: &[],
+            desc: WireDesc::None,
+        };
+        assert!(wb.validate(1).is_err());
+        // Strided length mismatch.
+        let wb = WireBuilder {
+            am_type: AmType::LongStrided,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 0,
+            handler: 0,
+            token: 0,
+            args: &[],
+            desc: WireDesc::Strided { dst_addr: 0, stride: 16, block_len: 8, nblocks: 3 },
+        };
+        assert!(matches!(wb.validate(20), Err(Error::BadDescriptor(_))));
+        // Get descriptors without the GET flag.
+        let wb = WireBuilder {
+            am_type: AmType::Long,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 0,
+            handler: 0,
+            token: 0,
+            args: &[],
+            desc: WireDesc::LongGet { src_addr: 0, len: 8, reply_addr: 0 },
+        };
+        assert!(wb.validate(0).is_err());
+    }
+
+    #[test]
+    fn overheads_match_owned_codec() {
+        let msg = AmMessage {
+            am_type: AmType::LongVectored,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: 2,
+            token: 3,
+            args: vec![4, 5, 6],
+            desc: Descriptor::Vectored { entries: vec![(0, 4), (64, 4), (128, 8)] },
+            payload: vec![9; 16],
+        };
+        let (wb, payload) = msg.as_wire();
+        assert_eq!(wb.header_overhead(), msg.header_overhead());
+        assert_eq!(wb.max_payload(), msg.max_payload_for());
+        assert_eq!(wb.header_overhead() + payload.len(), msg.encode().unwrap().len());
+    }
+}

@@ -31,6 +31,10 @@ pub struct BenchPlacement {
     /// UDP ARQ window for the cluster under test (`0` = the paper's raw
     /// lossy datapath; ignored by other transports).
     pub udp_window: usize,
+    /// Intra-node one-sided fast path for the cluster under test (`false`
+    /// forces every AM through the codec + router datapath — the baseline
+    /// the `hotpath` local-put gate compares against).
+    pub local_fastpath: bool,
 }
 
 impl BenchPlacement {
@@ -43,6 +47,7 @@ impl BenchPlacement {
             batch_bytes: 0,
             batch_max_msgs: crate::config::DEFAULT_BATCH_MAX_MSGS,
             udp_window: crate::config::DEFAULT_UDP_WINDOW,
+            local_fastpath: true,
         }
     }
 
@@ -78,12 +83,22 @@ impl BenchPlacement {
         self
     }
 
+    /// Same placement with the intra-node fast path disabled — every AM
+    /// takes the full codec + router + handler-thread datapath (the
+    /// loopback-router baseline for the `hotpath` local-put gate, and the
+    /// honest datapath for completion-overlap measurements).
+    pub fn no_fastpath(mut self) -> Self {
+        self.local_fastpath = false;
+        self
+    }
+
     fn spec(&self) -> Result<ClusterSpec> {
         let mut b = ClusterBuilder::new();
         b.transport(self.transport);
         b.default_segment(1 << 20);
         b.batch_bytes(self.batch_bytes).batch_max_msgs(self.batch_max_msgs);
         b.udp_window(self.udp_window);
+        b.local_fastpath(self.local_fastpath);
         let addr = |_i: usize| "127.0.0.1:0".to_string();
         let mk = |b: &mut ClusterBuilder, name: &str, p: Platform, t: TransportKind, i: usize| {
             if t == TransportKind::Local {

@@ -122,6 +122,14 @@ pub struct ClusterSpec {
     /// Standalone-ACK delay in milliseconds for one-way reliable-UDP flows
     /// (ACKs piggyback on reverse traffic when there is any).
     pub udp_ack_interval_ms: u64,
+    /// Intra-node one-sided fast path: puts/gets between software kernels on
+    /// the same node write/read the target PGAS segment directly and resolve
+    /// their handle immediately, bypassing codec + router (default `true`).
+    /// Wire traffic between nodes is unaffected either way. Disable to force
+    /// every AM through the full loopback-router datapath (the `hotpath`
+    /// bench's baseline, and for programs that rely on queued-AM ordering
+    /// between local puts and other in-flight AMs).
+    pub local_fastpath: bool,
 }
 
 /// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
@@ -262,6 +270,7 @@ pub struct ClusterBuilder {
     udp_window: usize,
     udp_retries: u32,
     udp_ack_interval_ms: u64,
+    local_fastpath: bool,
 }
 
 impl ClusterBuilder {
@@ -273,6 +282,7 @@ impl ClusterBuilder {
             udp_window: DEFAULT_UDP_WINDOW,
             udp_retries: DEFAULT_UDP_RETRIES,
             udp_ack_interval_ms: DEFAULT_UDP_ACK_INTERVAL_MS,
+            local_fastpath: true,
             ..Default::default()
         }
     }
@@ -361,6 +371,13 @@ impl ClusterBuilder {
         self
     }
 
+    /// Intra-node one-sided fast path (`false` forces every AM through the
+    /// codec + router datapath).
+    pub fn local_fastpath(&mut self, on: bool) -> &mut Self {
+        self.local_fastpath = on;
+        self
+    }
+
     pub fn build(self) -> Result<ClusterSpec> {
         let spec = ClusterSpec {
             nodes: self.nodes,
@@ -375,6 +392,7 @@ impl ClusterBuilder {
             udp_window: self.udp_window,
             udp_retries: self.udp_retries,
             udp_ack_interval_ms: self.udp_ack_interval_ms,
+            local_fastpath: self.local_fastpath,
         };
         spec.validate()?;
         Ok(spec)
@@ -449,6 +467,17 @@ mod tests {
         assert_eq!(s.batch_bytes, 16384);
         assert_eq!(s.batch_max_msgs, 32);
         assert!(!s.flush_on_idle);
+    }
+
+    #[test]
+    fn local_fastpath_defaults_on_and_roundtrips() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert!(s.local_fastpath);
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.local_fastpath(false);
+        assert!(!b.build().unwrap().local_fastpath);
     }
 
     #[test]

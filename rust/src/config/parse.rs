@@ -11,6 +11,7 @@
 //! batch_bytes = 16384          # egress coalescing budget; 0 = unbatched
 //! batch_max_msgs = 64          # flush after this many staged messages
 //! flush_on_idle = true         # drain staged batches when routers idle
+//! local_fastpath = true        # intra-node one-sided puts/gets bypass the router
 //!
 //! [[node]]
 //! name = "cpu0"
@@ -70,6 +71,7 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     let mut udp_window: Option<usize> = None;
     let mut udp_retries: Option<u32> = None;
     let mut udp_ack_interval: Option<u64> = None;
+    let mut local_fastpath: Option<bool> = None;
     let mut nodes: Vec<NodeSec> = Vec::new();
     let mut kernels: Vec<KernelSec> = Vec::new();
 
@@ -169,6 +171,13 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
                             .map_err(|_| err("udp_ack_interval must be an integer (ms)"))?,
                     )
                 }
+                "local_fastpath" => {
+                    local_fastpath = Some(match value.as_str() {
+                        "true" => true,
+                        "false" => false,
+                        _ => return Err(err("local_fastpath must be true or false")),
+                    })
+                }
                 k => return Err(err(&format!("unknown top-level key '{k}'"))),
             },
             Section::Node(n) => match key {
@@ -213,6 +222,9 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     }
     if let Some(ms) = udp_ack_interval {
         b.udp_ack_interval_ms(ms);
+    }
+    if let Some(on) = local_fastpath {
+        b.local_fastpath(on);
     }
 
     let mut node_ids: Vec<(String, u16)> = Vec::new();
@@ -373,6 +385,17 @@ segment = 4096
         assert!(parse_cluster(&format!("batch_bytes = \"lots\"{base}")).is_err());
         assert!(parse_cluster(&format!("flush_on_idle = maybe{base}")).is_err());
         assert!(parse_cluster(&format!("batch_max_msgs = 0{base}")).is_err());
+    }
+
+    #[test]
+    fn parses_local_fastpath_knob() {
+        let base = "\n[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        let s = parse_cluster(&format!("local_fastpath = false{base}")).unwrap();
+        assert!(!s.local_fastpath);
+        // Default when unspecified: fast path on.
+        let d = parse_cluster("[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n").unwrap();
+        assert!(d.local_fastpath);
+        assert!(parse_cluster(&format!("local_fastpath = maybe{base}")).is_err());
     }
 
     #[test]

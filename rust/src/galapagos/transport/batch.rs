@@ -26,9 +26,16 @@
 //!   budget is reached so the caller can flush eagerly instead of waiting
 //!   for the next send.
 
+use crate::galapagos::packet::Packet;
+
 /// Default cap on staged messages per batch when batching is enabled and
 /// the cluster spec doesn't override it.
 pub const DEFAULT_BATCH_MAX_MSGS: usize = 64;
+
+/// Bytes of the `u32` little-endian length prefix stream transports put in
+/// front of each frame (datagram transports stage the bare wire packet —
+/// its header is self-delimiting).
+pub const LEN_PREFIX_BYTES: usize = 4;
 
 /// A small pool of recycled byte buffers.
 ///
@@ -154,6 +161,20 @@ impl Coalescer {
         }
     }
 
+    /// Stage one packet's wire frame, encoding it directly into the staging
+    /// buffer (header + payload appended in place — no per-frame scratch
+    /// buffer). `len_prefix` selects the stream framing (`u32` length
+    /// before the wire bytes); datagram transports stage the bare packet.
+    pub fn stage_packet(&mut self, pkt: &Packet, len_prefix: bool) -> Staged {
+        let frame_len = pkt.wire_len() + if len_prefix { LEN_PREFIX_BYTES } else { 0 };
+        self.stage(frame_len, |buf| {
+            if len_prefix {
+                buf.extend_from_slice(&(pkt.wire_len() as u32).to_le_bytes());
+            }
+            pkt.write_wire(buf);
+        })
+    }
+
     /// Take the staged bytes, swapping the staging buffer against a pooled
     /// one. Returns the batch; the caller releases it back to `pool` after
     /// the write so the capacity is recycled.
@@ -233,6 +254,22 @@ mod tests {
         let mut pool = BufPool::default();
         assert_eq!(c.take(&mut pool).len(), 50);
         assert_eq!(put(&mut c, 50), Staged::Full);
+    }
+
+    #[test]
+    fn stage_packet_encodes_in_place_with_and_without_prefix() {
+        let pkt = Packet::new(3, 7, vec![9; 16]).unwrap();
+        let mut pool = BufPool::default();
+        // Stream framing: length prefix + wire bytes.
+        let mut c = Coalescer::new(0, DEFAULT_BATCH_MAX_MSGS, usize::MAX);
+        assert_eq!(c.stage_packet(&pkt, true), Staged::Full);
+        let framed = c.take(&mut pool);
+        let mut expect = (pkt.wire_len() as u32).to_le_bytes().to_vec();
+        expect.extend_from_slice(&pkt.to_wire());
+        assert_eq!(framed, expect);
+        // Datagram framing: bare wire bytes.
+        assert_eq!(c.stage_packet(&pkt, false), Staged::Full);
+        assert_eq!(c.take(&mut pool), pkt.to_wire());
     }
 
     #[test]

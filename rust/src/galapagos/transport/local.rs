@@ -31,21 +31,50 @@ impl LocalFabric {
 
     /// Create the egress half for one node.
     pub fn egress(&self) -> LocalEgress {
-        LocalEgress { fabric: self.clone() }
+        LocalEgress { fabric: self.clone(), cache: HashMap::new() }
     }
 }
 
 /// Egress that hands packets straight to the destination router's queue.
+///
+/// Steady-state sends are lock-free: the shared registry `Mutex` is only
+/// taken on the *first* send toward a destination (and after a stale cached
+/// sender), after which the cloned `Sender` is used directly — an mpsc
+/// `Sender` is its own handle, so no further coordination is needed.
 pub struct LocalEgress {
     fabric: LocalFabric,
+    /// Per-destination sender clones cached after the first registry lookup.
+    cache: HashMap<u16, Sender<RouterMsg>>,
 }
 
 impl Egress for LocalEgress {
     fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()> {
-        let guard = self.fabric.inner.lock().unwrap();
-        let tx = guard.get(&dest_node).ok_or(Error::UnknownNode(dest_node))?;
+        // Fast path: cached sender, no registry lock.
+        let pkt = match self.cache.get(&dest_node) {
+            Some(tx) => match tx.send(RouterMsg::FromNetwork(pkt)) {
+                Ok(()) => return Ok(()),
+                Err(std::sync::mpsc::SendError(RouterMsg::FromNetwork(p))) => {
+                    // Stale cache entry (peer re-registered or shut down):
+                    // recover the packet and retry through the registry.
+                    self.cache.remove(&dest_node);
+                    p
+                }
+                Err(_) => unreachable!("send returns the message it was given"),
+            },
+            None => pkt,
+        };
+        let tx = self
+            .fabric
+            .inner
+            .lock()
+            .unwrap()
+            .get(&dest_node)
+            .cloned()
+            .ok_or(Error::UnknownNode(dest_node))?;
         tx.send(RouterMsg::FromNetwork(pkt))
-            .map_err(|_| Error::Disconnected("remote router"))
+            .map_err(|_| Error::Disconnected("remote router"))?;
+        self.cache.insert(dest_node, tx);
+        Ok(())
     }
 }
 
@@ -75,5 +104,45 @@ mod tests {
             egress.send(7, Packet::new(0, 0, vec![]).unwrap()),
             Err(Error::UnknownNode(7))
         ));
+    }
+
+    /// After the first send the registry lock is never taken again: the
+    /// cached sender delivers even when the registry entry is gone.
+    #[test]
+    fn steady_state_uses_cached_sender() {
+        let fabric = LocalFabric::new();
+        let (tx1, rx1) = mpsc::channel();
+        fabric.register(1, tx1);
+        let mut egress = fabric.egress();
+        egress.send(1, Packet::new(2, 0, vec![1]).unwrap()).unwrap();
+        assert!(egress.cache.contains_key(&1));
+        // Drop the registry entry; the cache still routes.
+        fabric.inner.lock().unwrap().remove(&1);
+        egress.send(1, Packet::new(2, 0, vec![2]).unwrap()).unwrap();
+        for want in [vec![1], vec![2]] {
+            match rx1.recv().unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, want),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    /// A stale cached sender (receiver gone) falls back to the registry and
+    /// re-caches the fresh sender — the re-registration path.
+    #[test]
+    fn stale_cache_recovers_through_registry() {
+        let fabric = LocalFabric::new();
+        let (tx_old, rx_old) = mpsc::channel();
+        fabric.register(1, tx_old);
+        let mut egress = fabric.egress();
+        egress.send(1, Packet::new(2, 0, vec![1]).unwrap()).unwrap();
+        drop(rx_old); // cached sender goes stale
+        let (tx_new, rx_new) = mpsc::channel();
+        fabric.register(1, tx_new);
+        egress.send(1, Packet::new(2, 0, vec![9]).unwrap()).unwrap();
+        match rx_new.recv().unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![9]),
+            other => panic!("unexpected {other:?}"),
+        }
     }
 }

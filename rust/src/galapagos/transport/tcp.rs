@@ -20,14 +20,14 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::Sender;
 use std::thread::JoinHandle;
 
-use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS};
+use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS, LEN_PREFIX_BYTES};
 use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::RouterMsg;
 
 /// Bytes of TCP frame header (`u32` length prefix).
-pub const FRAME_HEADER_BYTES: usize = 4;
+pub const FRAME_HEADER_BYTES: usize = LEN_PREFIX_BYTES;
 
 /// Outbound half: per-peer cached connections with staged, coalesced
 /// frames.
@@ -172,16 +172,12 @@ impl Egress for TcpEgress {
         if !self.peers.contains_key(&dest_node) {
             return Err(Error::UnknownNode(dest_node));
         }
-        let frame_len = FRAME_HEADER_BYTES + pkt.wire_len();
         let (bb, bm) = (self.batch_bytes, self.batch_max_msgs);
         let staged = self
             .stage
             .entry(dest_node)
             .or_insert_with(|| Coalescer::new(bb, bm, usize::MAX))
-            .stage(frame_len, |buf| {
-                buf.extend_from_slice(&(pkt.wire_len() as u32).to_le_bytes());
-                pkt.write_wire(buf);
-            });
+            .stage_packet(&pkt, true);
         match staged {
             Staged::Pending => Ok(()),
             Staged::Full => self.flush_node(dest_node),
@@ -191,10 +187,7 @@ impl Egress for TcpEgress {
                     .stage
                     .get_mut(&dest_node)
                     .expect("coalescer exists after staging attempt")
-                    .stage(frame_len, |buf| {
-                        buf.extend_from_slice(&(pkt.wire_len() as u32).to_le_bytes());
-                        pkt.write_wire(buf);
-                    });
+                    .stage_packet(&pkt, true);
                 match again {
                     Staged::Full => self.flush_node(dest_node),
                     // An empty batch always accepts one frame (no hard cap

@@ -198,7 +198,7 @@ impl Egress for UdpEgress {
             .stage
             .entry(dest_node)
             .or_insert_with(|| Coalescer::new(bb, bm, cap))
-            .stage(frame_len, |buf| pkt.write_wire(buf));
+            .stage_packet(&pkt, false);
         match staged {
             Staged::Pending => Ok(()),
             Staged::Full => self.flush_node(dest_node),
@@ -208,7 +208,7 @@ impl Egress for UdpEgress {
                     .stage
                     .get_mut(&dest_node)
                     .expect("coalescer exists after staging attempt")
-                    .stage(frame_len, |buf| pkt.write_wire(buf));
+                    .stage_packet(&pkt, false);
                 match again {
                     Staged::Full => self.flush_node(dest_node),
                     // An empty datagram accepts any frame that passed the

@@ -28,6 +28,14 @@
 //! shim over the same table — each operation's completion must be consumed
 //! exactly once, by a handle wait *or* by `wait_replies`, never both.
 //!
+//! Sends are zero-copy: every builder encodes its caller's arg and payload
+//! slices straight into a pooled wire buffer via
+//! [`WireBuilder`](crate::am::wire::WireBuilder) (one copy, caller → wire),
+//! and a put/get whose destination is a software kernel on the *same node*
+//! skips the wire entirely — the one-sided fast path
+//! ([`fastpath`](crate::shoal_node::fastpath)) accesses the target segment
+//! directly and resolves the handle at issue time.
+//!
 //! Collectives ([`bcast`](ShoalKernel::bcast), [`reduce`](ShoalKernel::reduce),
 //! [`all_reduce`](ShoalKernel::all_reduce),
 //! [`barrier_tree`](ShoalKernel::barrier_tree)) compose many AM hops over a
@@ -44,8 +52,9 @@ use std::time::Duration;
 use crate::am::completion::{AmHandle, CompletionTable};
 use crate::am::engine::{barrier_op, BarrierState, ReceivedMedium};
 use crate::am::handlers::HandlerTable;
-use crate::am::header::{AmMessage, Descriptor};
+use crate::am::header::AmMessage;
 use crate::am::types::{handler_ids, AmFlags, AmType};
+use crate::am::wire::{WireBuilder, WireDesc};
 use crate::collectives::{
     decode_f64s, decode_u64s, encode_f64s, encode_u64s, CollDesc, CollectiveHandle,
     CollectiveKind, CollectiveState, Lane, ReduceOp, TreeKind,
@@ -54,7 +63,9 @@ use crate::config::{ApiProfile, ChunkPolicy, ClusterSpec};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::Packet;
 use crate::galapagos::router::RouterMsg;
+use crate::galapagos::transport::batch::BufPool;
 use crate::memory::Segment;
+use crate::shoal_node::fastpath::{LocalFastPath, PutDisposition};
 
 pub use crate::am::engine::ReceivedMedium as Medium;
 
@@ -67,6 +78,8 @@ pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(120);
 /// kernel function's thread.
 pub struct ShoalKernel {
     pub(crate) id: u16,
+    /// Node hosting this kernel (intra-node fast-path eligibility check).
+    pub(crate) node: u16,
     pub(crate) spec: Arc<ClusterSpec>,
     pub(crate) router_tx: std::sync::mpsc::Sender<RouterMsg>,
     pub(crate) segment: Segment,
@@ -75,6 +88,15 @@ pub struct ShoalKernel {
     pub(crate) handlers: Arc<HandlerTable>,
     pub(crate) collective: Arc<CollectiveState>,
     pub(crate) medium_rx: Receiver<ReceivedMedium>,
+    /// Same-process one-sided fast path registry (`None` on hardware
+    /// kernels and when the cluster disables `local_fastpath`).
+    pub(crate) fastpath: Option<Arc<LocalFastPath>>,
+    /// Wire-encode buffer pool. A successfully sent buffer travels with its
+    /// packet (and on local topologies becomes the ingress payload via
+    /// `decode_owned` — the datapath's single copy), so the pool only
+    /// reclaims encode-failure buffers; the steady-state send cost is one
+    /// exact-size allocation.
+    wire_pool: BufPool,
     /// Replies consumed by previous waits (`wait_replies` shim bookkeeping).
     consumed: u64,
     /// Barrier epoch counter (local).
@@ -89,6 +111,7 @@ impl ShoalKernel {
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         id: u16,
+        node: u16,
         spec: Arc<ClusterSpec>,
         router_tx: std::sync::mpsc::Sender<RouterMsg>,
         segment: Segment,
@@ -97,9 +120,11 @@ impl ShoalKernel {
         handlers: Arc<HandlerTable>,
         collective: Arc<CollectiveState>,
         medium_rx: Receiver<ReceivedMedium>,
+        fastpath: Option<Arc<LocalFastPath>>,
     ) -> ShoalKernel {
         ShoalKernel {
             id,
+            node,
             spec,
             router_tx,
             segment,
@@ -108,6 +133,8 @@ impl ShoalKernel {
             handlers,
             collective,
             medium_rx,
+            fastpath,
+            wire_pool: BufPool::default(),
             consumed: 0,
             epoch: 0,
             coll_seq: 0,
@@ -140,6 +167,9 @@ impl ShoalKernel {
         &self.spec.profile
     }
 
+    /// Send an already-materialized message (collective fan hops, which the
+    /// collective state machine owns). The `am_*` builders never take this
+    /// path — they encode borrowed caller slices via [`Self::send_wire`].
     fn send_msg(&self, msg: &AmMessage) -> Result<()> {
         let bytes = msg.encode()?;
         let pkt = Packet::new(msg.dst, msg.src, bytes)?;
@@ -148,16 +178,60 @@ impl ShoalKernel {
             .map_err(|_| Error::Disconnected("router"))
     }
 
-    /// Stamp one chunk's token + HANDLE flag onto `msg` and send it. A send
-    /// failure propagates *into the handle*: the operation transitions to
-    /// failed (the reason surfaces as [`Error::OperationFailed`] at
-    /// `wait`/`test`) and `false` tells chunk loops to stop early — the
-    /// `am_*` call still returns the handle, so the failure is attributed to
-    /// the exact operation rather than lost in a batch.
-    fn send_tracked(&self, h: AmHandle, msg: &mut AmMessage) -> bool {
-        msg.token = self.completion.bind_token(h);
-        msg.flags = msg.flags.with(AmFlags::HANDLE);
-        match self.send_msg(msg) {
+    /// The zero-copy egress: encode header + args + payload straight from
+    /// the caller's slices into a pool-recycled wire buffer and hand it to
+    /// the router. One copy, caller → wire; on local topologies the same
+    /// allocation is reused as the ingress payload (`decode_owned`), so the
+    /// whole datapath stays single-copy.
+    fn send_wire(&mut self, wb: &WireBuilder<'_>, payload: &[u8]) -> Result<()> {
+        let mut buf = self.wire_pool.acquire();
+        if let Err(e) = wb.encode_slice(payload, &mut buf) {
+            self.wire_pool.release(buf);
+            return Err(e);
+        }
+        self.dispatch_wire(wb, buf)
+    }
+
+    /// `send_wire` with the payload produced by `fill` writing directly into
+    /// the wire buffer (the `am_*_from_mem` path: segment → wire, no
+    /// intermediate buffer).
+    fn send_wire_with(
+        &mut self,
+        wb: &WireBuilder<'_>,
+        payload_len: usize,
+        fill: impl FnOnce(&mut [u8]) -> Result<()>,
+    ) -> Result<()> {
+        let mut buf = self.wire_pool.acquire();
+        if let Err(e) = wb.encode_with(payload_len, &mut buf, fill) {
+            self.wire_pool.release(buf);
+            return Err(e);
+        }
+        self.dispatch_wire(wb, buf)
+    }
+
+    /// Wrap an encoded wire buffer in a middleware packet and hand it to the
+    /// router.
+    fn dispatch_wire(&self, wb: &WireBuilder<'_>, buf: Vec<u8>) -> Result<()> {
+        let pkt = Packet::new(wb.dst, wb.src, buf)?;
+        self.router_tx
+            .send(RouterMsg::FromKernel(pkt))
+            .map_err(|_| Error::Disconnected("router"))
+    }
+
+    /// Stamp one chunk's token + HANDLE flag onto `wb`.
+    fn track(&self, h: AmHandle, wb: &mut WireBuilder<'_>) {
+        wb.token = self.completion.bind_token(h);
+        wb.flags = wb.flags.with(AmFlags::HANDLE);
+    }
+
+    /// Convert a tracked send's outcome: a failure propagates *into the
+    /// handle* (the operation transitions to failed; the reason surfaces as
+    /// [`Error::OperationFailed`] at `wait`/`test`) and `false` tells chunk
+    /// loops to stop early — the `am_*` call still returns the handle, so
+    /// the failure is attributed to the exact operation rather than lost in
+    /// a batch.
+    fn tracked_outcome(&self, h: AmHandle, sent: Result<()>) -> bool {
+        match sent {
             Ok(()) => true,
             Err(e) => {
                 log::warn!("kernel {}: send failed; failing its handle: {e}", self.id);
@@ -165,6 +239,118 @@ impl ShoalKernel {
                 false
             }
         }
+    }
+
+    /// Tracked send of one chunk from a borrowed payload slice.
+    fn send_tracked(&mut self, h: AmHandle, wb: &mut WireBuilder<'_>, payload: &[u8]) -> bool {
+        self.track(h, wb);
+        let sent = self.send_wire(wb, payload);
+        self.tracked_outcome(h, sent)
+    }
+
+    /// Tracked send of one chunk with a `fill`-produced payload (see
+    /// [`Self::send_wire_with`]).
+    fn send_tracked_with(
+        &mut self,
+        h: AmHandle,
+        wb: &mut WireBuilder<'_>,
+        payload_len: usize,
+        fill: impl FnOnce(&mut [u8]) -> Result<()>,
+    ) -> bool {
+        self.track(h, wb);
+        let sent = self.send_wire_with(wb, payload_len, fill);
+        self.tracked_outcome(h, sent)
+    }
+
+    /// The fast-path registry, cloned out so a borrowed `LocalPeer` does not
+    /// pin `self` (the operations need `&mut self` for the router/pool).
+    fn local(&self) -> Option<Arc<LocalFastPath>> {
+        self.fastpath.clone()
+    }
+
+    /// Resolve a locally-completed operation through the completion table so
+    /// *both* completion models agree: the returned handle is already
+    /// complete for `wait`/`test`, and each chunk bumps the cumulative
+    /// counter the `wait_replies` shim reads (exactly what the wire acks
+    /// would have done).
+    fn complete_local(&self, flags: AmFlags, chunks: u64) -> AmHandle {
+        if flags.is_async() {
+            return AmHandle::completed();
+        }
+        let h = self.completion.create(chunks);
+        for _ in 0..chunks {
+            let t = self.completion.bind_token(h);
+            self.completion.resolve(t);
+        }
+        h
+    }
+
+    /// A fast-path put whose destination write failed keeps the wire path's
+    /// failure shape: the send call itself still succeeds (the ingress
+    /// engine drops bad writes at the destination), asynchronous ops
+    /// complete vacuously, and tracked ops fail their handle so the loss is
+    /// attributed to the exact operation (surfacing as
+    /// [`Error::OperationFailed`] at `wait`, and failing fast through the
+    /// `wait_replies` shim) instead of hanging until timeout.
+    fn local_put_failed(&self, flags: AmFlags, chunks: u64, e: &Error) -> AmHandle {
+        log::warn!("kernel {}: local one-sided put dropped: {e}", self.id);
+        if flags.is_async() {
+            return AmHandle::completed();
+        }
+        let h = self.completion.create(chunks);
+        self.completion.fail(h, &format!("local put failed: {e}"));
+        h
+    }
+
+    /// Enqueue one payload-free notification AM of a fast-path put whose
+    /// handler is user-registered: an asynchronous Short with the same
+    /// handler id and args, routed normally so the handler runs on the
+    /// destination's handler thread — strictly after the one-sided write is
+    /// visible.
+    fn notify_put(&mut self, dst: u16, handler: u8, args: &[u64]) -> Result<()> {
+        let wb = WireBuilder {
+            am_type: AmType::Short,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: self.id,
+            dst,
+            handler,
+            token: 0,
+            args,
+            desc: WireDesc::None,
+        };
+        self.send_wire(&wb, &[])
+    }
+
+    /// Complete a fast-path put whose data is already written: fire the
+    /// payload-free notifications when the handler is user-registered — one
+    /// **per chunk**, mirroring the wire path's per-chunk handler dispatch,
+    /// so invocation counts do not depend on kernel placement — then resolve
+    /// the handle. A notification that cannot be enqueued (router gone)
+    /// fails the handle like any other lost send; the put call itself still
+    /// succeeds.
+    fn finish_local_put(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        flags: AmFlags,
+        chunks: u64,
+        notify: bool,
+    ) -> AmHandle {
+        if notify {
+            for _ in 0..chunks {
+                if let Err(e) = self.notify_put(dst, handler, args) {
+                    log::warn!("kernel {}: fast-path notification lost: {e}", self.id);
+                    if flags.is_async() {
+                        return AmHandle::completed();
+                    }
+                    let h = self.completion.create(chunks);
+                    self.completion.fail(h, &format!("handler notification failed: {e}"));
+                    return h;
+                }
+            }
+        }
+        self.complete_local(flags, chunks)
     }
 
     // -- Short ---------------------------------------------------------------
@@ -191,23 +377,22 @@ impl ShoalKernel {
             return Err(Error::ProfileViolation("short"));
         }
         self.spec.kernel(dst)?;
-        let mut msg = AmMessage {
+        let mut wb = WireBuilder {
             am_type: AmType::Short,
             flags,
             src: self.id,
             dst,
             handler,
             token: 0,
-            args: args.to_vec(),
-            desc: Descriptor::None,
-            payload: vec![],
+            args,
+            desc: WireDesc::None,
         };
         if flags.is_async() {
-            self.send_msg(&msg)?;
+            self.send_wire(&wb, &[])?;
             return Ok(AmHandle::completed());
         }
         let h = self.completion.create(1);
-        self.send_tracked(h, &mut msg);
+        self.send_tracked(h, &mut wb, &[]);
         Ok(h)
     }
 
@@ -223,7 +408,7 @@ impl ShoalKernel {
         args: &[u64],
         payload: &[u8],
     ) -> Result<AmHandle> {
-        self.medium_impl(dst, handler, args, payload.to_vec(), AmFlags::new().with(AmFlags::FIFO))
+        self.medium_impl(dst, handler, args, payload, AmFlags::new().with(AmFlags::FIFO))
     }
 
     /// Asynchronous Medium FIFO put.
@@ -238,13 +423,15 @@ impl ShoalKernel {
             dst,
             handler,
             args,
-            payload.to_vec(),
+            payload,
             AmFlags::new().with(AmFlags::FIFO).with(AmFlags::ASYNC),
         )
     }
 
     /// Medium put whose payload the runtime reads from this kernel's memory
-    /// partition (`src_offset`, `len`) — the non-FIFO variant of §III-A.
+    /// partition (`src_offset`, `len`) — the non-FIFO variant of §III-A. The
+    /// segment bytes are copied straight into the wire buffer (or straight
+    /// onto a local destination's stream): no intermediate payload buffer.
     pub fn am_medium_from_mem(
         &mut self,
         dst: u16,
@@ -253,8 +440,60 @@ impl ShoalKernel {
         src_offset: u64,
         len: usize,
     ) -> Result<AmHandle> {
-        let payload = self.segment.read(src_offset, len)?;
-        self.medium_impl(dst, handler, args, payload, AmFlags::new())
+        let flags = AmFlags::new();
+        if !self.profile().medium {
+            return Err(Error::ProfileViolation("medium"));
+        }
+        self.spec.kernel(dst)?;
+        let mut wb = self.medium_builder(dst, handler, args, flags, len)?;
+        // Validate the read range up front (errors before any send).
+        self.segment.check_range(src_offset, len)?;
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                if peer.medium_put_direct(handler) {
+                    let data = self.segment.read(src_offset, len)?;
+                    let h = self.completion.create(1);
+                    let t = self.completion.bind_token(h);
+                    match peer.deliver_medium_owned(self.id, handler, t, args, data) {
+                        Ok(()) => self.completion.resolve(t),
+                        Err(e) => self.completion.fail(h, &format!("local delivery failed: {e}")),
+                    }
+                    return Ok(h);
+                }
+            }
+        }
+        let seg = self.segment.clone();
+        let h = self.completion.create(1);
+        self.send_tracked_with(h, &mut wb, len, |out| seg.read_into(src_offset, out));
+        Ok(h)
+    }
+
+    /// Shared Medium header shape + the no-chunking size gate.
+    fn medium_builder<'a>(
+        &self,
+        dst: u16,
+        handler: u8,
+        args: &'a [u64],
+        flags: AmFlags,
+        payload_len: usize,
+    ) -> Result<WireBuilder<'a>> {
+        let wb = WireBuilder {
+            am_type: AmType::Medium,
+            flags,
+            src: self.id,
+            dst,
+            handler,
+            token: 0,
+            args,
+            desc: WireDesc::None,
+        };
+        if payload_len > wb.max_payload() {
+            // Medium payloads are a kernel-stream datum; chunking would change
+            // message boundaries, so it is always an error (the Jacobi halo
+            // exchange failure mode of §IV-C1).
+            return Err(Error::AmTooLarge { payload: payload_len, limit: wb.max_payload() });
+        }
+        Ok(wb)
     }
 
     fn medium_impl(
@@ -262,39 +501,42 @@ impl ShoalKernel {
         dst: u16,
         handler: u8,
         args: &[u64],
-        payload: Vec<u8>,
+        payload: &[u8],
         flags: AmFlags,
     ) -> Result<AmHandle> {
         if !self.profile().medium {
             return Err(Error::ProfileViolation("medium"));
         }
         self.spec.kernel(dst)?;
-        let mut msg = AmMessage {
-            am_type: AmType::Medium,
-            flags,
-            src: self.id,
-            dst,
-            handler,
-            token: 0,
-            args: args.to_vec(),
-            desc: Descriptor::None,
-            payload,
-        };
-        if msg.payload.len() > msg.max_payload_for() {
-            // Medium payloads are a kernel-stream datum; chunking would change
-            // message boundaries, so it is always an error (the Jacobi halo
-            // exchange failure mode of §IV-C1).
-            return Err(Error::AmTooLarge {
-                payload: msg.payload.len(),
-                limit: msg.max_payload_for(),
-            });
+        let mut wb = self.medium_builder(dst, handler, args, flags, payload.len())?;
+        // Intra-node fast path: the payload goes straight onto the local
+        // destination's kernel stream (built-in handler ids only — a
+        // registered user handler's contract includes the payload, so it
+        // keeps the handler-thread path). Delivery before resolution, like
+        // the ingress engine, so a woken waiter finds the data queued.
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                if peer.medium_put_direct(handler) {
+                    if flags.is_async() {
+                        peer.deliver_medium(self.id, handler, 0, args, payload)?;
+                        return Ok(AmHandle::completed());
+                    }
+                    let h = self.completion.create(1);
+                    let t = self.completion.bind_token(h);
+                    match peer.deliver_medium(self.id, handler, t, args, payload) {
+                        Ok(()) => self.completion.resolve(t),
+                        Err(e) => self.completion.fail(h, &format!("local delivery failed: {e}")),
+                    }
+                    return Ok(h);
+                }
+            }
         }
         if flags.is_async() {
-            self.send_msg(&msg)?;
+            self.send_wire(&wb, payload)?;
             return Ok(AmHandle::completed());
         }
         let h = self.completion.create(1);
-        self.send_tracked(h, &mut msg);
+        self.send_tracked(h, &mut wb, payload);
         Ok(h)
     }
 
@@ -313,33 +555,56 @@ impl ShoalKernel {
             return Err(Error::ProfileViolation("medium get"));
         }
         self.spec.kernel(dst)?;
-        let probe = AmMessage {
+        let max = WireBuilder {
             am_type: AmType::Medium,
             flags: AmFlags::new().with(AmFlags::GET),
             src: self.id,
             dst,
             handler,
             token: 0,
-            args: vec![0],
-            desc: Descriptor::MediumGet { src_addr, len: 0 },
-            payload: vec![],
-        };
-        let max = probe.max_payload_for();
+            args: &[0],
+            desc: WireDesc::MediumGet { src_addr, len: 0 },
+        }
+        .max_payload();
         let chunks = self.chunk_ranges(len, max)?;
         // Validate every chunk's address arithmetic *before* registering the
         // operation, so an overflow cannot abandon a half-issued handle.
         let descs = chunks
             .iter()
             .map(|&(off, clen)| {
-                Ok((off, Descriptor::MediumGet {
+                Ok((off, WireDesc::MediumGet {
                     src_addr: checked_offset(src_addr, off)?,
                     len: clen as u32,
                 }))
             })
             .collect::<Result<Vec<_>>>()?;
+        // Intra-node fast path: read the target segment and deliver onto our
+        // own stream directly — the data reply without codec or router. Gets
+        // never dispatch handlers (matching the ingress engine).
+        if let Some(fp) = self.local() {
+            if let (Some(peer), Some(me)) = (fp.peer(self.node, dst), fp.peer(self.node, self.id))
+            {
+                let h = self.completion.create(descs.len() as u64);
+                for &(off, desc) in &descs {
+                    let WireDesc::MediumGet { src_addr, len } = desc else { unreachable!() };
+                    let t = self.completion.bind_token(h);
+                    let served =
+                        peer.serve_medium_get(me, dst, handler, t, src_addr, len as usize, off);
+                    match served {
+                        Ok(()) => self.completion.resolve(t),
+                        Err(e) => {
+                            self.completion.fail(h, &format!("local medium get failed: {e}"));
+                            break;
+                        }
+                    }
+                }
+                return Ok(h);
+            }
+        }
         let h = self.completion.create(descs.len() as u64);
         for (off, desc) in descs {
-            let mut msg = AmMessage {
+            let chunk_args = [off];
+            let mut wb = WireBuilder {
                 am_type: AmType::Medium,
                 flags: AmFlags::new().with(AmFlags::GET),
                 src: self.id,
@@ -348,11 +613,10 @@ impl ShoalKernel {
                 token: 0,
                 // Final arg carries the chunk's byte offset so the receiver
                 // can reassemble multi-chunk gets.
-                args: vec![off],
+                args: &chunk_args,
                 desc,
-                payload: vec![],
             };
-            if !self.send_tracked(h, &mut msg) {
+            if !self.send_tracked(h, &mut wb, &[]) {
                 break;
             }
         }
@@ -393,7 +657,10 @@ impl ShoalKernel {
         )
     }
 
-    /// Long put whose payload the runtime reads from this kernel's partition.
+    /// Long put whose payload the runtime reads from this kernel's
+    /// partition. Locally this is a direct segment-to-segment copy; remotely
+    /// the segment bytes are copied straight into the wire buffer — no
+    /// intermediate payload buffer either way.
     pub fn am_long_from_mem(
         &mut self,
         dst: u16,
@@ -403,8 +670,81 @@ impl ShoalKernel {
         len: usize,
         dst_addr: u64,
     ) -> Result<AmHandle> {
-        let payload = self.segment.read(src_offset, len)?;
-        self.long_impl(dst, handler, args, &payload, dst_addr, AmFlags::new())
+        let flags = AmFlags::new();
+        let plan = self.long_plan(dst, handler, args, len, dst_addr, flags)?;
+        self.segment.check_range(src_offset, len)?;
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                match peer.put_disposition(handler) {
+                    PutDisposition::SlowPath => {}
+                    disposition => {
+                        if let Err(e) =
+                            peer.segment.copy_from(dst_addr, &self.segment, src_offset, len)
+                        {
+                            return Ok(self.local_put_failed(flags, plan.len() as u64, &e));
+                        }
+                        let notify = disposition == PutDisposition::Notify;
+                        let chunks = plan.len() as u64;
+                        return Ok(self.finish_local_put(dst, handler, args, flags, chunks, notify));
+                    }
+                }
+            }
+        }
+        let seg = self.segment.clone();
+        let h = self.completion.create(plan.len() as u64);
+        for (off, clen, desc) in plan {
+            let mut wb = WireBuilder {
+                am_type: AmType::Long,
+                flags,
+                src: self.id,
+                dst,
+                handler,
+                token: 0,
+                args,
+                desc,
+            };
+            let chunk_base = src_offset + off; // bounds pre-checked above
+            if !self.send_tracked_with(h, &mut wb, clen, |out| seg.read_into(chunk_base, out)) {
+                break;
+            }
+        }
+        Ok(h)
+    }
+
+    /// Chunk a Long put of `len` bytes: the packet-cap bound, the cluster
+    /// chunk policy, and every chunk's destination-address arithmetic are
+    /// validated *before* anything is registered or sent.
+    fn long_plan(
+        &self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        len: usize,
+        dst_addr: u64,
+        flags: AmFlags,
+    ) -> Result<Vec<(u64, usize, WireDesc<'static>)>> {
+        if !self.profile().long {
+            return Err(Error::ProfileViolation("long"));
+        }
+        self.spec.kernel(dst)?;
+        let max = WireBuilder {
+            am_type: AmType::Long,
+            flags,
+            src: self.id,
+            dst,
+            handler,
+            token: 0,
+            args,
+            desc: WireDesc::Long { dst_addr },
+        }
+        .max_payload();
+        let chunks = self.chunk_ranges(len, max)?;
+        chunks
+            .iter()
+            .map(|&(off, clen)| {
+                Ok((off, clen, WireDesc::Long { dst_addr: checked_offset(dst_addr, off)? }))
+            })
+            .collect::<Result<Vec<_>>>()
     }
 
     fn long_impl(
@@ -416,50 +756,48 @@ impl ShoalKernel {
         dst_addr: u64,
         flags: AmFlags,
     ) -> Result<AmHandle> {
-        if !self.profile().long {
-            return Err(Error::ProfileViolation("long"));
+        let plan = self.long_plan(dst, handler, args, payload.len(), dst_addr, flags)?;
+        // Intra-node one-sided fast path: write the destination partition
+        // directly from the caller's slice — zero copies, no codec, no
+        // router — and resolve the handle immediately. A registered user
+        // handler still fires via the payload-free notification AM, strictly
+        // after the data is visible.
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                match peer.put_disposition(handler) {
+                    PutDisposition::SlowPath => {}
+                    disposition => {
+                        if let Err(e) = peer.segment.write(dst_addr, payload) {
+                            return Ok(self.local_put_failed(flags, plan.len() as u64, &e));
+                        }
+                        let notify = disposition == PutDisposition::Notify;
+                        let chunks = plan.len() as u64;
+                        return Ok(self.finish_local_put(dst, handler, args, flags, chunks, notify));
+                    }
+                }
+            }
         }
-        self.spec.kernel(dst)?;
-        let probe = AmMessage {
-            am_type: AmType::Long,
-            flags,
-            src: self.id,
-            dst,
-            handler,
-            token: 0,
-            args: args.to_vec(),
-            desc: Descriptor::Long { dst_addr },
-            payload: vec![],
-        };
-        let max = probe.max_payload_for();
-        let chunks = self.chunk_ranges(payload.len(), max)?;
-        // Address arithmetic validated before the operation is registered.
-        let descs = chunks
-            .iter()
-            .map(|&(off, clen)| {
-                Ok((off, clen, Descriptor::Long { dst_addr: checked_offset(dst_addr, off)? }))
-            })
-            .collect::<Result<Vec<_>>>()?;
         let h = if flags.is_async() {
             AmHandle::completed()
         } else {
-            self.completion.create(descs.len() as u64)
+            self.completion.create(plan.len() as u64)
         };
-        for (off, clen, desc) in descs {
-            let mut msg = AmMessage {
+        for (off, clen, desc) in plan {
+            let mut wb = WireBuilder {
                 am_type: AmType::Long,
                 flags,
                 src: self.id,
                 dst,
                 handler,
                 token: 0,
-                args: args.to_vec(),
+                args,
                 desc,
-                payload: payload[off as usize..off as usize + clen].to_vec(),
             };
+            // Chunking slices the caller's payload — no per-chunk buffer.
+            let chunk = &payload[off as usize..off as usize + clen];
             if flags.is_async() {
-                self.send_msg(&msg)?;
-            } else if !self.send_tracked(h, &mut msg) {
+                self.send_wire(&wb, chunk)?;
+            } else if !self.send_tracked(h, &mut wb, chunk) {
                 break;
             }
         }
@@ -481,44 +819,68 @@ impl ShoalKernel {
             return Err(Error::ProfileViolation("long get"));
         }
         self.spec.kernel(dst)?;
-        let probe = AmMessage {
+        // The chunk bound comes from the *reply* (a Long data reply carries
+        // the payload back).
+        let max = WireBuilder {
             am_type: AmType::Long,
             flags: AmFlags::new().with(AmFlags::REPLY),
             src: dst,
             dst: self.id,
             handler,
             token: 0,
-            args: vec![],
-            desc: Descriptor::Long { dst_addr: reply_addr },
-            payload: vec![],
-        };
-        let max = probe.max_payload_for();
+            args: &[],
+            desc: WireDesc::Long { dst_addr: reply_addr },
+        }
+        .max_payload();
         let chunks = self.chunk_ranges(len, max)?;
         // Address arithmetic validated before the operation is registered.
         let descs = chunks
             .iter()
             .map(|&(off, clen)| {
-                Ok(Descriptor::LongGet {
+                Ok(WireDesc::LongGet {
                     src_addr: checked_offset(src_addr, off)?,
                     len: clen as u32,
                     reply_addr: checked_offset(reply_addr, off)?,
                 })
             })
             .collect::<Result<Vec<_>>>()?;
+        // Intra-node fast path: one-sided read — a direct segment-to-segment
+        // copy from the target partition into ours (gets never dispatch
+        // handlers, matching the ingress engine).
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                let h = self.completion.create(descs.len() as u64);
+                for &desc in &descs {
+                    let WireDesc::LongGet { src_addr, len, reply_addr } = desc else {
+                        unreachable!()
+                    };
+                    let t = self.completion.bind_token(h);
+                    let copied =
+                        self.segment.copy_from(reply_addr, &peer.segment, src_addr, len as usize);
+                    match copied {
+                        Ok(()) => self.completion.resolve(t),
+                        Err(e) => {
+                            self.completion.fail(h, &format!("local long get failed: {e}"));
+                            break;
+                        }
+                    }
+                }
+                return Ok(h);
+            }
+        }
         let h = self.completion.create(descs.len() as u64);
         for desc in descs {
-            let mut msg = AmMessage {
+            let mut wb = WireBuilder {
                 am_type: AmType::Long,
                 flags: AmFlags::new().with(AmFlags::GET),
                 src: self.id,
                 dst,
                 handler,
                 token: 0,
-                args: vec![],
+                args: &[],
                 desc,
-                payload: vec![],
             };
-            if !self.send_tracked(h, &mut msg) {
+            if !self.send_tracked(h, &mut wb, &[]) {
                 break;
             }
         }
@@ -548,25 +910,40 @@ impl ShoalKernel {
             )));
         }
         let nblocks = (payload.len() / block_len as usize) as u32;
-        let mut msg = AmMessage {
+        let flags = AmFlags::new().with(AmFlags::FIFO);
+        let mut wb = WireBuilder {
             am_type: AmType::LongStrided,
-            flags: AmFlags::new().with(AmFlags::FIFO),
+            flags,
             src: self.id,
             dst,
             handler,
             token: 0,
-            args: args.to_vec(),
-            desc: Descriptor::Strided { dst_addr, stride, block_len, nblocks },
-            payload: payload.to_vec(),
+            args,
+            desc: WireDesc::Strided { dst_addr, stride, block_len, nblocks },
         };
-        if msg.payload.len() > msg.max_payload_for() {
-            return Err(Error::AmTooLarge {
-                payload: msg.payload.len(),
-                limit: msg.max_payload_for(),
-            });
+        wb.validate(payload.len())?;
+        if payload.len() > wb.max_payload() {
+            return Err(Error::AmTooLarge { payload: payload.len(), limit: wb.max_payload() });
+        }
+        // Intra-node fast path: scatter straight into the local partition.
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                match peer.put_disposition(handler) {
+                    PutDisposition::SlowPath => {}
+                    disposition => {
+                        if let Err(e) =
+                            peer.segment.write_strided(dst_addr, stride, block_len, payload)
+                        {
+                            return Ok(self.local_put_failed(flags, 1, &e));
+                        }
+                        let notify = disposition == PutDisposition::Notify;
+                        return Ok(self.finish_local_put(dst, handler, args, flags, 1, notify));
+                    }
+                }
+            }
         }
         let h = self.completion.create(1);
-        self.send_tracked(h, &mut msg);
+        self.send_tracked(h, &mut wb, payload);
         Ok(h)
     }
 
@@ -583,26 +960,39 @@ impl ShoalKernel {
             return Err(Error::ProfileViolation("vectored"));
         }
         self.spec.kernel(dst)?;
-        let mut msg = AmMessage {
+        let flags = AmFlags::new().with(AmFlags::FIFO);
+        let mut wb = WireBuilder {
             am_type: AmType::LongVectored,
-            flags: AmFlags::new().with(AmFlags::FIFO),
+            flags,
             src: self.id,
             dst,
             handler,
             token: 0,
-            args: args.to_vec(),
-            desc: Descriptor::Vectored { entries: entries.to_vec() },
-            payload: payload.to_vec(),
+            args,
+            desc: WireDesc::Vectored { entries },
         };
-        msg.validate()?;
-        if msg.payload.len() > msg.max_payload_for() {
-            return Err(Error::AmTooLarge {
-                payload: msg.payload.len(),
-                limit: msg.max_payload_for(),
-            });
+        wb.validate(payload.len())?;
+        if payload.len() > wb.max_payload() {
+            return Err(Error::AmTooLarge { payload: payload.len(), limit: wb.max_payload() });
+        }
+        // Intra-node fast path: scatter the extents straight into the local
+        // partition.
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                match peer.put_disposition(handler) {
+                    PutDisposition::SlowPath => {}
+                    disposition => {
+                        if let Err(e) = peer.segment.write_vectored(entries, payload) {
+                            return Ok(self.local_put_failed(flags, 1, &e));
+                        }
+                        let notify = disposition == PutDisposition::Notify;
+                        return Ok(self.finish_local_put(dst, handler, args, flags, 1, notify));
+                    }
+                }
+            }
         }
         let h = self.completion.create(1);
-        self.send_tracked(h, &mut msg);
+        self.send_tracked(h, &mut wb, payload);
         Ok(h)
     }
 
@@ -779,22 +1169,19 @@ impl ShoalKernel {
             )));
         }
         // Every tree hop carries the payload in one Medium AM; no chunking.
-        let probe = AmMessage {
+        let max = WireBuilder {
             am_type: AmType::Medium,
             flags: AmFlags::new().with(AmFlags::ASYNC),
             src: self.id,
             dst: self.id,
             handler: handler_ids::COLLECTIVE,
             token: 0,
-            args: vec![0, 0, 0],
-            desc: Descriptor::None,
-            payload: vec![],
-        };
-        if data.len() > probe.max_payload_for() {
-            return Err(Error::AmTooLarge {
-                payload: data.len(),
-                limit: probe.max_payload_for(),
-            });
+            args: &[0, 0, 0],
+            desc: WireDesc::None,
+        }
+        .max_payload();
+        if data.len() > max {
+            return Err(Error::AmTooLarge { payload: data.len(), limit: max });
         }
         self.coll_seq += 1;
         let seq = self.coll_seq;

@@ -26,6 +26,7 @@ use crate::gascore::server::GAScoreServer;
 use crate::gascore::GAScoreStats;
 use crate::memory::Segment;
 use crate::shoal_node::api::ShoalKernel;
+use crate::shoal_node::fastpath::{LocalFastPath, LocalPeer};
 use crate::shoal_node::handler_thread::HandlerThread;
 
 /// A running cluster.
@@ -137,6 +138,36 @@ impl ShoalCluster {
                 },
             );
         }
+
+        // Intra-node one-sided fast path registry: one peer entry per hosted
+        // *software* kernel (hardware kernels keep the GAScore ingress for
+        // cycle accounting, and the registry's same-node check keeps
+        // transports honest). `local_fastpath = false` turns it off — every
+        // AM then takes the full codec + router datapath.
+        let fastpath: Option<Arc<LocalFastPath>> = if spec.local_fastpath {
+            let mut peers = HashMap::new();
+            for k in spec.kernels.iter().filter(|k| hosted.contains(&k.node)) {
+                if spec.node(k.node)?.platform == Platform::Sw {
+                    let ks = kstate.get(&k.id).expect("hosted kernel state exists");
+                    peers.insert(
+                        k.id,
+                        LocalPeer {
+                            node: k.node,
+                            segment: ks.segment.clone(),
+                            handlers: Arc::clone(&ks.handlers),
+                            medium_tx: ks.medium_tx.clone(),
+                        },
+                    );
+                }
+            }
+            if peers.is_empty() {
+                None
+            } else {
+                Some(LocalFastPath::new(peers))
+            }
+        } else {
+            None
+        };
 
         // Send-failure sink: when a transport gives up on a wire message (a
         // failed batch flush, or reliable-UDP retries exhausting), the exact
@@ -267,7 +298,9 @@ impl ShoalCluster {
             }
         }
 
-        // Build the API handles (hosted kernels only).
+        // Build the API handles (hosted kernels only). Hardware kernels do
+        // not get the fast path: their sends must flow through the GAScore
+        // egress pipeline so cycle accounting and stats stay faithful.
         let mut kernels = HashMap::new();
         for k in spec.kernels.iter().filter(|k| hosted.contains(&k.node)) {
             let ks = kstate.get_mut(&k.id).unwrap();
@@ -275,10 +308,15 @@ impl ShoalCluster {
                 .get(&k.node)
                 .ok_or(Error::UnknownNode(k.node))?
                 .clone();
+            let fp = match spec.node(k.node)?.platform {
+                Platform::Sw => fastpath.clone(),
+                Platform::Hw => None,
+            };
             kernels.insert(
                 k.id,
                 ShoalKernel::new(
                     k.id,
+                    k.node,
                     Arc::clone(&spec),
                     router_tx,
                     ks.segment.clone(),
@@ -287,6 +325,7 @@ impl ShoalCluster {
                     Arc::clone(&ks.handlers),
                     Arc::clone(&ks.collective),
                     ks.medium_rx.take().expect("medium receiver claimed once"),
+                    fp,
                 ),
             );
         }

@@ -1,0 +1,161 @@
+//! Intra-node one-sided fast path.
+//!
+//! The PGAS pitch is that the local/remote distinction is cheap (paper §III,
+//! Figs. 4/6) — yet historically a put between two kernels of the *same*
+//! node paid the full codec + router + handler-thread round trip. GAScore's
+//! one-sided hardware puts and DART-MPI's shared-memory window both show
+//! where a PGAS runtime earns its latency: a local put is just a memcpy into
+//! the target segment.
+//!
+//! `LocalFastPath` is the registry that makes that possible: one
+//! [`LocalPeer`] per software kernel hosted in this `ShoalCluster` process,
+//! carrying the three things a one-sided operation needs — the target
+//! [`Segment`], the handler table (to decide whether a notification AM must
+//! still fire), and the kernel-stream sender (for Medium deliveries).
+//!
+//! Semantics (documented in README "Zero-copy datapath"):
+//!
+//! - Only **same-node software** kernels are eligible: hardware kernels keep
+//!   the GAScore ingress path (cycle accounting, stats), and cross-node
+//!   kernels keep the transport, so the wire format and remote-visible
+//!   behavior are bitwise unchanged.
+//! - One-sided puts with a **registered user handler** still fire it: the
+//!   data is written directly, then a payload-free notification AM (a Short
+//!   with the same handler id and args; one per chunk, matching the wire
+//!   path's per-chunk dispatch count) is enqueued through the router so the
+//!   handler runs on the destination's handler thread, after the data is
+//!   visible. An *unregistered* user-range handler id forces the slow path,
+//!   preserving the engine's `UnknownHandler` behavior.
+//! - Medium puts with a registered user handler take the slow path entirely
+//!   (the handler's contract includes the payload).
+//! - Gets never dispatch handlers (matching the ingress engine), so they are
+//!   always eligible.
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use crate::am::engine::ReceivedMedium;
+use crate::am::handlers::HandlerTable;
+use crate::am::types::handler_ids;
+use crate::error::{Error, Result};
+use crate::memory::Segment;
+
+/// Everything a one-sided local operation needs from its target kernel.
+pub(crate) struct LocalPeer {
+    /// Node hosting the kernel (fast path is intra-node only).
+    pub node: u16,
+    /// The kernel's partition of the global address space.
+    pub segment: Segment,
+    /// The kernel's handler table (notification decision).
+    pub handlers: Arc<HandlerTable>,
+    /// The kernel's Medium stream (direct deliveries).
+    pub medium_tx: Sender<ReceivedMedium>,
+}
+
+/// How a one-sided put to a peer must honor handler semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum PutDisposition {
+    /// Built-in handler id: puts never dispatch it — write directly.
+    Direct,
+    /// Registered user handler: write directly, then enqueue the
+    /// payload-free notification AM.
+    Notify,
+    /// Unregistered user-range handler id: take the slow path so the
+    /// engine's `UnknownHandler` semantics are preserved.
+    SlowPath,
+}
+
+impl LocalPeer {
+    /// Handler semantics for a one-sided put toward this peer.
+    pub(crate) fn put_disposition(&self, handler: u8) -> PutDisposition {
+        if handler < handler_ids::USER_BASE {
+            PutDisposition::Direct
+        } else if self.handlers.has(handler) {
+            PutDisposition::Notify
+        } else {
+            PutDisposition::SlowPath
+        }
+    }
+
+    /// True when a Medium put may bypass the router: built-in handler ids
+    /// only (a registered user handler needs the payload on the handler
+    /// thread; an unregistered user id must keep the engine's error path).
+    pub(crate) fn medium_put_direct(&self, handler: u8) -> bool {
+        handler < handler_ids::USER_BASE
+    }
+
+    /// Deliver a Medium payload straight onto this peer's kernel stream —
+    /// the single copy of the local Medium path (caller slice → stream).
+    pub(crate) fn deliver_medium(
+        &self,
+        src: u16,
+        handler: u8,
+        token: u32,
+        args: &[u64],
+        payload: &[u8],
+    ) -> Result<()> {
+        self.deliver_medium_owned(src, handler, token, args, payload.to_vec())
+    }
+
+    /// `deliver_medium` moving an already-owned payload (the `from_mem`
+    /// path's segment read goes straight into the stream without re-copying).
+    pub(crate) fn deliver_medium_owned(
+        &self,
+        src: u16,
+        handler: u8,
+        token: u32,
+        args: &[u64],
+        payload: Vec<u8>,
+    ) -> Result<()> {
+        self.medium_tx
+            .send(ReceivedMedium { src, handler, token, args: args.to_vec(), payload })
+            .map_err(|_| Error::Disconnected("kernel medium stream"))
+    }
+
+    /// Serve a local Medium get: read this peer's segment and deliver onto
+    /// the *requesting* kernel's stream, mirroring the wire data reply
+    /// (src = responder, args = [chunk offset]).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn serve_medium_get(
+        &self,
+        requester: &LocalPeer,
+        responder_id: u16,
+        handler: u8,
+        token: u32,
+        src_addr: u64,
+        len: usize,
+        chunk_off: u64,
+    ) -> Result<()> {
+        let payload = self.segment.read(src_addr, len)?;
+        requester
+            .medium_tx
+            .send(ReceivedMedium {
+                src: responder_id,
+                handler,
+                token,
+                args: vec![chunk_off],
+                payload,
+            })
+            .map_err(|_| Error::Disconnected("kernel medium stream"))
+    }
+}
+
+/// Per-process registry of fast-path-eligible (software) kernels, shared by
+/// every `ShoalKernel` the cluster hands out.
+pub struct LocalFastPath {
+    peers: HashMap<u16, LocalPeer>,
+}
+
+impl LocalFastPath {
+    pub(crate) fn new(peers: HashMap<u16, LocalPeer>) -> Arc<LocalFastPath> {
+        Arc::new(LocalFastPath { peers })
+    }
+
+    /// The peer entry for `dst` iff it shares `node` with the sender —
+    /// intra-node only, so transports (and their benchmarks) never lose
+    /// traffic to the fast path.
+    pub(crate) fn peer(&self, node: u16, dst: u16) -> Option<&LocalPeer> {
+        self.peers.get(&dst).filter(|p| p.node == node)
+    }
+}

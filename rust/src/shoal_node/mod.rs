@@ -9,7 +9,11 @@
 //!   in-process (routers, transports, handler threads, GAScores) and runs
 //!   user kernel functions on threads, mirroring how libGalapagos starts a
 //!   kernel function per thread.
+//! - [`fastpath`] — the intra-node one-sided fast path: puts/gets between
+//!   same-node software kernels write/read the target segment directly and
+//!   bypass codec + router.
 
 pub mod api;
 pub mod cluster;
+pub mod fastpath;
 pub mod handler_thread;

@@ -1,0 +1,163 @@
+//! Steady-state allocation accounting for the zero-copy send datapath.
+//!
+//! The PR's claim is concrete: once pools and tables are warm, a medium AM
+//! send performs **at most 2 heap allocations** on the issuing thread — the
+//! wire buffer the borrowed-slice encoder fills (on the router path) or the
+//! stream delivery buffer (on the intra-node fast path), plus the channel's
+//! amortized block allocation. The owned-`AmMessage` baseline paid five
+//! (args vec + payload vec + encode buffer + per-chunk copies).
+//!
+//! Counting is thread-local: the global allocator increments a counter only
+//! while the *measuring* thread has switched it on, so the router/handler
+//! threads (and the test harness's other tests) never pollute the count.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+
+use shoal::config::{ClusterBuilder, Platform};
+use shoal::prelude::*;
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+// SAFETY: delegates every operation to `System`; the bookkeeping only
+// touches const-initialized (allocation-free) thread-locals.
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        // `try_with` tolerates TLS teardown; a dead TLS slot just skips the
+        // count.
+        let _ = COUNTING.try_with(|on| {
+            if on.get() {
+                let _ = ALLOCS.try_with(|n| n.set(n.get() + 1));
+            }
+        });
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Run `f` with allocation counting on; returns how many allocations the
+/// current thread performed inside it.
+fn count_allocs(f: impl FnOnce()) -> u64 {
+    ALLOCS.with(|n| n.set(0));
+    COUNTING.with(|on| on.set(true));
+    f();
+    COUNTING.with(|on| on.set(false));
+    ALLOCS.with(|n| n.get())
+}
+
+const WARMUP: usize = 64;
+const MEASURED: u64 = 128;
+
+/// Drive `MEASURED` medium sends (after `WARMUP` unmeasured ones) through a
+/// two-kernel cluster and return the total allocations attributed to the
+/// `am_medium` calls themselves (each send is waited before the next, so
+/// slab slots and token-map capacity are recycled — steady state).
+fn measured_medium_allocs(fastpath: bool) -> u64 {
+    let mut b = ClusterBuilder::new();
+    let n = b.node("n0", Platform::Sw);
+    b.kernel(n);
+    b.kernel(n);
+    b.default_segment(1 << 16);
+    b.local_fastpath(fastpath);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<u64>();
+
+    cluster.run_kernel(1, |k| {
+        // Drain everything the sender emits (WARMUP + MEASURED + sentinel).
+        for _ in 0..WARMUP as u64 + MEASURED + 1 {
+            let m = k.recv_medium().unwrap();
+            if m.args.first() == Some(&u64::MAX) {
+                break;
+            }
+        }
+    });
+    cluster.run_kernel(0, move |mut k| {
+        let payload = [0xA5u8; 256];
+        for _ in 0..WARMUP {
+            let h = k.am_medium(1, handlers::NOP, &[], &payload).unwrap();
+            k.wait(h).unwrap();
+        }
+        let mut total = 0u64;
+        for _ in 0..MEASURED {
+            let mut handle = None;
+            total += count_allocs(|| {
+                handle = Some(k.am_medium(1, handlers::NOP, &[], &payload).unwrap());
+            });
+            k.wait(handle.unwrap()).unwrap();
+        }
+        let h = k.am_medium(1, handlers::NOP, &[u64::MAX], &[]).unwrap();
+        k.wait(h).unwrap();
+        tx.send(total).unwrap();
+    });
+
+    let total = rx
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .expect("sender finished");
+    cluster.join().unwrap();
+    total
+}
+
+/// The wire (router) datapath: WireBuilder encode into a pooled buffer plus
+/// the channel hand-off must average ≤2 allocations per send.
+#[test]
+fn medium_send_wire_path_steady_state_allocs() {
+    let total = measured_medium_allocs(false);
+    assert!(total >= MEASURED, "counting is broken: {total} allocs for {MEASURED} sends");
+    assert!(
+        total <= 2 * MEASURED,
+        "wire-path medium send not zero-copy: {total} allocs over {MEASURED} sends (> 2/send)"
+    );
+}
+
+/// The intra-node fast path: the payload's stream-delivery buffer plus the
+/// channel hand-off must also average ≤2 allocations per send.
+#[test]
+fn medium_send_fast_path_steady_state_allocs() {
+    let total = measured_medium_allocs(true);
+    assert!(total >= MEASURED, "counting is broken: {total} allocs for {MEASURED} sends");
+    assert!(
+        total <= 2 * MEASURED,
+        "fast-path medium send not zero-copy: {total} allocs over {MEASURED} sends (> 2/send)"
+    );
+}
+
+/// The borrowed-slice encoder itself is allocation-free into a warm buffer
+/// (the buffer's capacity is the only allocation, paid once).
+#[test]
+fn wire_builder_encode_reuses_capacity() {
+    use shoal::am::wire::{WireBuilder, WireDesc};
+    use shoal::am::{AmFlags, AmType};
+    let args = [1u64, 2, 3];
+    let payload = [0x5Au8; 512];
+    let wb = WireBuilder {
+        am_type: AmType::Long,
+        flags: AmFlags::new().with(AmFlags::FIFO),
+        src: 1,
+        dst: 2,
+        handler: handlers::NOP,
+        token: 9,
+        args: &args,
+        desc: WireDesc::Long { dst_addr: 1024 },
+    };
+    let mut buf = Vec::new();
+    wb.encode_slice(&payload, &mut buf).unwrap(); // warms the capacity
+    let n = count_allocs(|| {
+        for _ in 0..64 {
+            buf.clear();
+            wb.encode_slice(&payload, &mut buf).unwrap();
+        }
+    });
+    assert_eq!(n, 0, "encode into a warm buffer must not allocate");
+}

@@ -1,0 +1,299 @@
+//! Intra-node one-sided fast-path semantics.
+//!
+//! Local puts/gets between same-node software kernels bypass codec + router
+//! and resolve their handle at issue time. These tests pin down the
+//! observable contract: immediate completion, data placement, handler
+//! notification (payload-free), slow-path fallbacks, and the compatibility
+//! of both completion models (`wait`/`test` and the `wait_replies` shim).
+
+use shoal::config::{ChunkPolicy, ClusterBuilder, ClusterSpec, Platform};
+use shoal::prelude::*;
+
+/// A local Long put lands in the destination partition and its handle is
+/// complete at issue time — `test` succeeds without any waiting, which is
+/// only possible if the operation never entered the router round trip.
+#[test]
+fn long_put_completes_at_issue_time() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let h = k.am_long(1, handlers::NOP, &[], &[7; 128], 64).unwrap();
+        assert_eq!(h.messages, 1);
+        assert!(k.test(h).unwrap(), "local put must be complete at issue time");
+        // The shim model works too (separate op, consumed via wait_replies).
+        k.am_long(1, handlers::NOP, &[], &[8; 16], 512).unwrap();
+        k.wait_replies(1).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(64, 128).unwrap(), vec![7; 128]);
+        assert_eq!(k.mem().read(512, 16).unwrap(), vec![8; 16]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Local Long and Medium gets complete at issue time: the data is copied
+/// segment-to-segment (or segment-to-stream) with no round trip.
+#[test]
+fn gets_complete_at_issue_time() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(1, |mut k| {
+        k.mem().write(0, &[9; 64]).unwrap();
+        k.mem().write(64, b"stream-me").unwrap();
+        k.barrier().unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(0, |mut k| {
+        k.barrier().unwrap(); // peer's partition seeded
+        let h = k.am_long_get(1, handlers::NOP, 0, 64, 128).unwrap();
+        assert!(k.test(h).unwrap(), "local long get must be complete at issue time");
+        assert_eq!(k.mem().read(128, 64).unwrap(), vec![9; 64]);
+
+        let h = k.am_medium_get(1, handlers::NOP, 64, 9).unwrap();
+        assert!(k.test(h).unwrap(), "local medium get must be complete at issue time");
+        let m = k.recv_medium().unwrap();
+        assert_eq!(m.payload, b"stream-me");
+        assert_eq!(m.src, 1, "data reply is attributed to the responder");
+        k.barrier().unwrap();
+    });
+    cluster.join().unwrap();
+}
+
+/// A get from this kernel's own partition (self-get) is a same-segment copy
+/// — the aliasing case the segment-to-segment copy must handle.
+#[test]
+fn self_get_copies_within_one_segment() {
+    let spec = ClusterSpec::single_node("n", 1);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        k.mem().write(0, &[3; 32]).unwrap();
+        let h = k.am_long_get(0, handlers::NOP, 0, 32, 256).unwrap();
+        assert!(k.test(h).unwrap());
+        assert_eq!(k.mem().read(256, 32).unwrap(), vec![3; 32]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Strided and vectored local puts scatter directly into the destination
+/// partition.
+#[test]
+fn strided_and_vectored_local_puts() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let data: Vec<u8> = (0..32).collect();
+        let h = k.am_long_strided(1, handlers::NOP, &[], &data, 0, 16, 8).unwrap();
+        assert!(k.test(h).unwrap());
+        let h = k
+            .am_long_vectored(1, handlers::NOP, &[], &[1, 2, 3, 4], &[(100, 2), (200, 2)])
+            .unwrap();
+        assert!(k.test(h).unwrap());
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 8).unwrap(), (0..8).collect::<Vec<u8>>());
+        assert_eq!(k.mem().read(16, 8).unwrap(), (8..16).collect::<Vec<u8>>());
+        assert_eq!(k.mem().read(100, 2).unwrap(), vec![1, 2]);
+        assert_eq!(k.mem().read(200, 2).unwrap(), vec![3, 4]);
+    });
+    cluster.join().unwrap();
+}
+
+/// A registered user handler still fires for a fast-path Long put — as a
+/// payload-free notification on the destination's handler thread, strictly
+/// after the data is visible in the partition.
+#[test]
+fn long_put_with_user_handler_notifies_payload_free() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster
+        .register_handler(1, 20, |a| {
+            // Notification contract: args intact, no payload, data already
+            // in the partition at the address named by args[0].
+            assert!(a.payload.is_empty(), "notification AM carries no payload");
+            let data = a.segment.read(a.args[0], 4).unwrap();
+            assert_eq!(data, vec![5; 4], "data must be visible before the handler runs");
+            a.segment.write(a.args[1], &[1]).unwrap(); // handler-ran flag
+        })
+        .unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let h = k.am_long(1, 20, &[64, 900], &[5; 4], 64).unwrap();
+        assert!(k.test(h).unwrap(), "put itself completes at issue time");
+        k.barrier().unwrap(); // notification precedes the barrier fan (FIFO per source)
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(900, 1).unwrap(), vec![1], "user handler never fired");
+    });
+    cluster.join().unwrap();
+}
+
+/// A Medium put to a registered user handler takes the slow path: the
+/// handler's contract includes the payload, so it must run on the handler
+/// thread with the bytes in hand (the pre-fast-path behavior, unchanged).
+#[test]
+fn medium_put_with_user_handler_keeps_payload() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster
+        .register_handler(1, 21, |a| {
+            a.segment.write(a.args[0], a.payload).unwrap();
+        })
+        .unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let h = k.am_medium(1, 21, &[300], &[4, 5, 6]).unwrap();
+        k.wait(h).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        let m = k.recv_medium().unwrap();
+        assert_eq!(m.payload, vec![4, 5, 6]);
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(300, 3).unwrap(), vec![4, 5, 6]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Size policy is unchanged by the fast path: an oversized Long put under
+/// the default Reject policy errors locally too, and a chunked local put
+/// still reports per-chunk `messages` for the shim bookkeeping.
+#[test]
+fn size_policies_apply_locally() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let big = vec![0u8; 64 << 10];
+        let err = k.am_long(1, handlers::NOP, &[], &big, 0).unwrap_err();
+        assert!(matches!(err, shoal::Error::AmTooLarge { .. }), "{err}");
+    });
+    cluster.run_kernel(1, |_k| {});
+    cluster.join().unwrap();
+
+    let mut b = ClusterBuilder::new();
+    let n = b.node("c", Platform::Sw);
+    b.kernel(n);
+    b.kernel(n);
+    b.chunk_policy(ChunkPolicy::Chunked);
+    b.default_segment(256 << 10);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let big = vec![0xEEu8; 40 << 10];
+        let h = k.am_long(1, handlers::NOP, &[], &big, 0).unwrap();
+        assert!(h.messages > 1, "40 KB must still chunk-account: {}", h.messages);
+        assert!(k.test(h).unwrap(), "local chunked put still completes at issue time");
+        k.wait_replies(0).unwrap(); // shim counter already credited
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 40 << 10).unwrap(), vec![0xEE; 40 << 10]);
+    });
+    cluster.join().unwrap();
+}
+
+/// `local_fastpath = false` forces the full router datapath: a local put is
+/// NOT complete at issue time (the ack still has to round-trip), but lands
+/// all the same.
+#[test]
+fn knob_disables_fast_path() {
+    let mut b = ClusterBuilder::new();
+    let n = b.node("n", Platform::Sw);
+    b.kernel(n);
+    b.kernel(n);
+    b.default_segment(1 << 16);
+    b.local_fastpath(false);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let h = k.am_long(1, handlers::NOP, &[], &[6; 32], 0).unwrap();
+        k.wait(h).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 32).unwrap(), vec![6; 32]);
+    });
+    cluster.join().unwrap();
+}
+
+/// An out-of-bounds local put keeps the wire path's failure shape: the send
+/// call succeeds and the failure is attributed to the operation's handle
+/// (`Error::OperationFailed`), never silently corrupting anything.
+#[test]
+fn out_of_bounds_local_put_fails_the_handle() {
+    let mut b = ClusterBuilder::new();
+    let n = b.node("n", Platform::Sw);
+    b.kernel(n);
+    b.kernel_with_segment(n, 1024);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let h = k.am_long(1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
+        let err = k.wait(h).unwrap_err();
+        assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
+        // Async variant: dropped silently, like the engine.
+        k.am_long_async(1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
+        // A valid put afterwards still works.
+        let h = k.am_long(1, handlers::NOP, &[], &[2; 64], 0).unwrap();
+        k.wait(h).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 64).unwrap(), vec![2; 64]);
+    });
+    cluster.join().unwrap();
+}
+
+/// Cross-node kernels never take the fast path: over a real transport the
+/// put must still round-trip (completion is not immediate) and the wire
+/// behavior is untouched.
+#[test]
+fn cross_node_keeps_the_wire_path() {
+    let mut b = ClusterBuilder::new();
+    b.transport(shoal::config::TransportKind::Tcp);
+    b.default_segment(1 << 16);
+    let n0 = b.node_at("a", Platform::Sw, "127.0.0.1:0");
+    let n1 = b.node_at("b", Platform::Sw, "127.0.0.1:0");
+    let k0 = b.kernel(n0);
+    let k1 = b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(k0, move |mut k| {
+        let h = k.am_long(k1, handlers::NOP, &[], &[4; 64], 0).unwrap();
+        k.wait(h).unwrap(); // really waits on the remote ack
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(k1, move |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(0, 64).unwrap(), vec![4; 64]);
+    });
+    cluster.join().unwrap();
+}
+
+/// `from_mem` variants go segment-to-segment locally.
+#[test]
+fn from_mem_put_copies_segment_to_segment() {
+    let spec = ClusterSpec::single_node("n", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        k.mem().write(32, &[0xAB; 48]).unwrap();
+        let h = k.am_long_from_mem(1, handlers::NOP, &[], 32, 48, 4096).unwrap();
+        assert!(k.test(h).unwrap());
+        k.mem().write(128, b"mem-medium").unwrap();
+        let h = k.am_medium_from_mem(1, handlers::NOP, &[], 128, 10).unwrap();
+        assert!(k.test(h).unwrap());
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        let m = k.recv_medium().unwrap();
+        assert_eq!(m.payload, b"mem-medium");
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(4096, 48).unwrap(), vec![0xAB; 48]);
+    });
+    cluster.join().unwrap();
+}

@@ -121,6 +121,34 @@ fn prop_am_codec_roundtrip() {
     });
 }
 
+/// The zero-copy send path's contract: `WireBuilder` borrowed-slice
+/// encoding is bitwise identical to the owned `AmMessage::encode` across
+/// all five AM classes (both the slice and the fill-into-tail variants) —
+/// a remote peer cannot tell which path produced a packet.
+#[test]
+fn prop_borrowed_encode_bitwise_identical_to_owned() {
+    check("borrowed-encode-identical", 2000, |rng| {
+        let msg = random_am(rng);
+        let owned = msg.encode().map_err(|e| format!("owned encode: {e}"))?;
+        let (wb, payload) = msg.as_wire();
+        let mut via_slice = Vec::new();
+        wb.encode_slice(payload, &mut via_slice)
+            .map_err(|e| format!("borrowed encode: {e}"))?;
+        prop_assert_eq!(owned, via_slice);
+        let mut via_fill = Vec::new();
+        wb.encode_with(payload.len(), &mut via_fill, |out| {
+            out.copy_from_slice(payload);
+            Ok(())
+        })
+        .map_err(|e| format!("fill encode: {e}"))?;
+        prop_assert_eq!(via_slice, via_fill);
+        // Overheads agree too (the chunking bound must not drift).
+        prop_assert_eq!(wb.header_overhead(), msg.header_overhead());
+        prop_assert_eq!(wb.max_payload(), msg.max_payload_for());
+        Ok(())
+    });
+}
+
 /// The completion subsystem rides on the codec preserving the reply token,
 /// the HANDLE/REPLY flag bits and the message class bit-exactly for *every*
 /// AM class — a dropped token orphans an `AmHandle` forever.
