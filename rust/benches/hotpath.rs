@@ -15,6 +15,8 @@
 //! - in-process Long-put throughput
 //! - completion datapath: overlapped handle-based gets vs sequential
 //!   `send + wait_replies(1)` round trips
+//! - remote atomics: fetch-and-add round trip on the intra-node fast path
+//!   vs the loopback-router path (`atomics` stage)
 //! - collectives: tree all-reduce / tree barrier vs the sequential
 //!   gather-then-broadcast emulation and the counter barrier
 //! - XLA engine jacobi-step execution time per tile shape
@@ -28,8 +30,9 @@
 //! the loopback-router path's latency, the batched ≤64 B send stage must
 //! sustain ≥2× the messages/sec of the unbatched stage, handle-overlapped
 //! Long gets must complete at least as fast as the same number of
-//! sequential `wait_replies` round trips, and the tree all-reduce must
-//! finish no slower than the sequential gather-then-broadcast emulation it
+//! sequential `wait_replies` round trips, the fast-path FAA must complete
+//! in ≤0.25× the routed FAA's latency, and the tree all-reduce must finish
+//! no slower than the sequential gather-then-broadcast emulation it
 //! replaces.
 
 use std::collections::HashMap;
@@ -39,8 +42,8 @@ use shoal::am::header::{AmMessage, Descriptor};
 use shoal::am::types::{handler_ids, AmFlags, AmType};
 use shoal::am::wire::{WireBuilder, WireDesc};
 use shoal::bench::micro::{
-    measure_collectives, measure_latency, measure_overlap_gets, measure_throughput,
-    BenchPlacement,
+    measure_collectives, measure_faa_latency, measure_latency, measure_overlap_gets,
+    measure_throughput, BenchPlacement,
 };
 use shoal::bench::report;
 use shoal::galapagos::packet::Packet;
@@ -493,6 +496,54 @@ fn main() {
     );
     if !ok {
         failed_checks.push("handle-overlapped gets slower than sequential wait_replies rounds");
+    }
+
+    println!("== hotpath: remote atomics (FAA round trip, in-proc) ==");
+    // Every sample is a fetch-and-add whose returned old value is asserted
+    // exact inside the bench (0, 1, 2, …) — this stage measures AND
+    // verifies linearizable single-site FAA on both datapaths.
+    let at_samples = if quick { 100 } else { 400 };
+    let at_routed = measure_faa_latency(
+        BenchPlacement::sw_same().no_fastpath(),
+        at_samples,
+        at_samples / 10,
+    )
+    .unwrap();
+    println!(
+        "  loopback-router FAA                    median {:>10}  p99 {:>10}",
+        fmt_ns(at_routed.median()),
+        fmt_ns(at_routed.p99())
+    );
+    let at_fast = measure_faa_latency(BenchPlacement::sw_same(), at_samples, at_samples / 10)
+        .unwrap();
+    println!(
+        "  fast-path FAA (lock-free on segment)   median {:>10}  p99 {:>10}",
+        fmt_ns(at_fast.median()),
+        fmt_ns(at_fast.p99())
+    );
+    let at_ratio = at_fast.median() / at_routed.median();
+    println!("      -> fast-path FAA latency {at_ratio:.3}× of the routed path");
+    let mut atcsv = Table::new("hotpath atomics stage").header(["stage", "value", "unit"]);
+    for (name, v, unit) in [
+        ("faa_fast_median", at_fast.median(), "ns"),
+        ("faa_fast_p99", at_fast.p99(), "ns"),
+        ("faa_routed_median", at_routed.median(), "ns"),
+        ("faa_routed_p99", at_routed.p99(), "ns"),
+        ("faa_ratio", at_ratio, "x"),
+    ] {
+        atcsv.row([name.to_string(), format!("{v:.3}"), unit.to_string()]);
+        csv.row([name.to_string(), format!("{v:.3}"), unit.to_string()]);
+    }
+    if let Ok(p) = report::save_csv(&atcsv, "hotpath_atomics") {
+        println!("  csv: {}", p.display());
+    }
+    let ok = at_ratio <= 0.25;
+    println!(
+        "  [{}] fast-path FAA latency ≤0.25× the loopback-router path",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("fast-path FAA latency above 0.25x the loopback-router path");
     }
 
     println!("== hotpath: collectives (8 kernels, tree vs sequential p2p) ==");

@@ -75,6 +75,10 @@ struct Slot {
     state: SlotState,
     /// Tokens bound to this occupancy, for map cleanup at free time.
     tokens: Vec<u32>,
+    /// Fetched value delivered by a value-carrying reply (remote atomics):
+    /// set by [`CompletionTable::resolve_with`], extracted exactly once by
+    /// [`CompletionTable::wait_value`].
+    result: Option<u64>,
 }
 
 struct TableInner {
@@ -97,6 +101,9 @@ struct TableInner {
     /// (dead-router sends), reachable through the returned handle, and
     /// reaping them would silently convert the failure into success.
     completed_fifo: VecDeque<(u32, u32)>,
+    /// Rotating start offset for `wait_any`'s scan, so repeated partial
+    /// waits over the same handle set cannot starve late entries.
+    wait_any_rr: usize,
 }
 
 /// Per-kernel completion table: slab of operation entries plus the token
@@ -118,6 +125,7 @@ impl Default for CompletionTable {
                 lost_replies: 0,
                 inflight_replies: 0,
                 completed_fifo: VecDeque::new(),
+                wait_any_rr: 0,
             }),
             cv: Condvar::new(),
         }
@@ -150,7 +158,12 @@ impl CompletionTable {
         let slot = match g.free.pop() {
             Some(i) => i,
             None => {
-                g.slots.push(Slot { gen: 0, state: SlotState::Free, tokens: Vec::new() });
+                g.slots.push(Slot {
+                    gen: 0,
+                    state: SlotState::Free,
+                    tokens: Vec::new(),
+                    result: None,
+                });
                 (g.slots.len() - 1) as u32
             }
         };
@@ -158,6 +171,7 @@ impl CompletionTable {
         let s = &mut g.slots[slot as usize];
         s.state = SlotState::InFlight { remaining: chunks };
         s.tokens.clear();
+        s.result = None;
         AmHandle { slot, gen: s.gen, messages: chunks }
     }
 
@@ -188,14 +202,31 @@ impl CompletionTable {
     /// already failed/reaped) still count toward `wait_replies`.
     pub fn resolve(&self, token: u32) {
         let mut g = self.inner.lock().unwrap();
+        Self::resolve_token(&mut g, token, None);
+        self.cv.notify_all();
+    }
+
+    /// [`resolve`](CompletionTable::resolve) carrying a fetched value (the
+    /// old word a remote atomic returned). The value is stored on the slot
+    /// for [`wait_value`](CompletionTable::wait_value) to extract.
+    pub fn resolve_with(&self, token: u32, value: u64) {
+        let mut g = self.inner.lock().unwrap();
+        Self::resolve_token(&mut g, token, Some(value));
+        self.cv.notify_all();
+    }
+
+    fn resolve_token(g: &mut TableInner, token: u32, value: Option<u64>) {
         g.resolved_total += 1;
         if let Some((slot, gen)) = g.tokens.remove(&token) {
             // Split the guard into disjoint field borrows (slots vs rest).
-            let inner: &mut TableInner = &mut g;
+            let inner: &mut TableInner = g;
             if let Some(s) = inner.slots.get_mut(slot as usize) {
                 if s.gen == gen {
                     if let SlotState::InFlight { remaining } = &mut s.state {
                         *remaining -= 1;
+                        if value.is_some() {
+                            s.result = value;
+                        }
                         inner.inflight_replies = inner.inflight_replies.saturating_sub(1);
                         if *remaining == 0 {
                             s.state = SlotState::Complete;
@@ -205,7 +236,6 @@ impl CompletionTable {
                 }
             }
         }
-        self.cv.notify_all();
     }
 
     /// Count a reply that carries no handle token (legacy THeGASNet-style
@@ -308,12 +338,58 @@ impl CompletionTable {
         }
     }
 
+    /// Block until `h` completes, returning the fetched value its reply
+    /// carried (remote atomics) plus the first-consumption flag. The value
+    /// is extracted exactly once: a handle that was already consumed — or
+    /// that never had a value-carrying reply — errors instead of silently
+    /// reading as zero. A failed operation returns its send error.
+    pub fn wait_value(&self, h: AmHandle, timeout: Duration) -> Result<(u64, bool)> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            match Self::terminal_state(&g, h) {
+                Some(Ok(())) => {
+                    // Take the value *before* reaping frees the slot.
+                    let value = match g.slots.get_mut(h.slot as usize) {
+                        Some(s) if h.slot != SLOT_NONE && s.gen == h.gen => s.result.take(),
+                        _ => None,
+                    };
+                    let first = Self::reap(&mut g, h);
+                    return match value {
+                        Some(v) => Ok((v, first)),
+                        None => Err(Error::OperationFailed(
+                            "fetch result unavailable (handle already consumed or not a fetch)"
+                                .into(),
+                        )),
+                    };
+                }
+                Some(Err(e)) => {
+                    Self::reap(&mut g, h);
+                    return Err(e);
+                }
+                None => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        return Err(Error::Timeout("fetch completion"));
+                    }
+                    let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
+                    g = guard;
+                }
+            }
+        }
+    }
+
     /// Block until any handle in `hs` reaches a terminal state; returns the
-    /// index of the first one found plus the first-consumption flag (see
+    /// index of the one consumed plus the first-consumption flag (see
     /// [`wait`](CompletionTable::wait)). A failed operation surfaces its
-    /// error. An empty slice is a contract violation — there is nothing
-    /// that could ever complete — and returns [`Error::EmptyWaitSet`]
-    /// immediately instead of blocking out the timeout.
+    /// error. The scan start rotates across calls (one step per returned
+    /// handle), so repeated partial waits over the same set consume every
+    /// entry instead of re-reporting the earliest index forever — the
+    /// rotation is deterministic: the n-th successful `wait_any` on a fresh
+    /// table starts its scan at offset n. An empty slice is a contract
+    /// violation — there is nothing that could ever complete — and returns
+    /// [`Error::EmptyWaitSet`] immediately instead of blocking out the
+    /// timeout.
     pub fn wait_any(&self, hs: &[AmHandle], timeout: Duration) -> Result<(usize, bool)> {
         if hs.is_empty() {
             return Err(Error::EmptyWaitSet("wait_any"));
@@ -321,9 +397,13 @@ impl CompletionTable {
         let deadline = std::time::Instant::now() + timeout;
         let mut g = self.inner.lock().unwrap();
         loop {
-            for (i, h) in hs.iter().enumerate() {
-                if let Some(res) = Self::terminal_state(&g, *h) {
-                    let first = Self::reap(&mut g, *h);
+            let start = g.wait_any_rr % hs.len();
+            for k in 0..hs.len() {
+                let i = (start + k) % hs.len();
+                let h = hs[i];
+                if let Some(res) = Self::terminal_state(&g, h) {
+                    g.wait_any_rr = g.wait_any_rr.wrapping_add(1);
+                    let first = Self::reap(&mut g, h);
                     return res.map(|()| (i, first));
                 }
             }
@@ -382,6 +462,7 @@ impl CompletionTable {
         let s = &mut g.slots[slot as usize];
         s.gen = s.gen.wrapping_add(1);
         s.state = SlotState::Free;
+        s.result = None;
         g.free.push(slot);
     }
 
@@ -534,6 +615,65 @@ mod tests {
         let tb = tab.bind_token(b);
         tab.resolve(tb);
         assert_eq!(tab.wait_any(&[a, b], T).unwrap(), (1, true));
+    }
+
+    #[test]
+    fn wait_any_rotates_fairly_across_repeated_partial_waits() {
+        let tab = CompletionTable::new();
+        let hs: Vec<AmHandle> = (0..3).map(|_| tab.create(1)).collect();
+        for &h in &hs {
+            let t = tab.bind_token(h);
+            tab.resolve(t);
+        }
+        // The old slab-order scan would consume index 0, then keep
+        // re-reporting it (stale handles read complete, uncredited) and
+        // starve the later entries. The rotating scan consumes all three.
+        let mut seen = Vec::new();
+        for _ in 0..3 {
+            let (i, first) = tab.wait_any(&hs, T).unwrap();
+            assert!(first, "every round must consume a fresh entry: {seen:?} then {i}");
+            seen.push(i);
+        }
+        assert_eq!(seen, vec![0, 1, 2], "deterministic rotation order");
+        assert_eq!(tab.live_entries(), 0);
+    }
+
+    #[test]
+    fn resolve_with_delivers_value_through_wait_value() {
+        let tab = CompletionTable::new();
+        let h = tab.create(1);
+        let tok = tab.bind_token(h);
+        tab.resolve_with(tok, 0xfeed_beef);
+        let (v, first) = tab.wait_value(h, T).unwrap();
+        assert_eq!(v, 0xfeed_beef);
+        assert!(first);
+        // The value is extracted exactly once: re-waiting errors rather
+        // than reading as zero.
+        assert!(tab.wait_value(h, T).is_err());
+        assert_eq!(tab.live_entries(), 0);
+        // resolve_with still counts toward the wait_replies shim.
+        assert_eq!(tab.resolved_total(), 1);
+    }
+
+    #[test]
+    fn wait_value_surfaces_failure_and_plain_completion_gap() {
+        let tab = CompletionTable::new();
+        // Failed fetch: the owning handle fails like any send.
+        let h = tab.create(1);
+        let tok = tab.bind_token(h);
+        tab.fail_token(tok, "arq retries exhausted");
+        let err = tab.wait_value(h, T).unwrap_err();
+        assert!(matches!(err, Error::OperationFailed(_)), "{err}");
+        // A plain (value-less) resolution cannot satisfy a value wait.
+        let h2 = tab.create(1);
+        let tok2 = tab.bind_token(h2);
+        tab.resolve(tok2);
+        assert!(tab.wait_value(h2, T).is_err());
+        // Plain wait on a value-carrying completion still works.
+        let h3 = tab.create(1);
+        let tok3 = tab.bind_token(h3);
+        tab.resolve_with(tok3, 7);
+        assert!(tab.wait(h3, T).unwrap());
     }
 
     #[test]

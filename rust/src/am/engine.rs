@@ -24,8 +24,8 @@ use std::time::Duration;
 use super::completion::CompletionTable;
 use super::handlers::HandlerTable;
 use super::header::{AmMessage, Descriptor};
-use super::types::{handler_ids, AmFlags, AmType};
-use crate::collectives::CollectiveState;
+use super::types::{handler_ids, AmFlags, AmType, AtomicOp};
+use crate::collectives::{CollectiveState, Lane};
 use crate::coordinator::EpochLedger;
 use crate::error::{Error, Result};
 use crate::memory::Segment;
@@ -265,6 +265,36 @@ impl KernelRuntime {
                 self.segment.write_vectored(entries, &msg.payload)?;
                 self.handlers.dispatch(&msg, &self.segment)?;
             }
+            (AmType::Atomic, _) => {
+                let Descriptor::Atomic { addr, op, lane, operand, operand2 } = msg.desc else {
+                    return Err(Error::MalformedAm("atomic without descriptor".into()));
+                };
+                let old =
+                    execute_atomic(&self.segment, addr, op, lane, operand, operand2, &msg.payload)?;
+                // Atomics are one-sided like gets: no handler dispatch.
+                // Fetch ops return the old value in an Atomic-typed reply
+                // (descriptor `operand` carries it back); accumulates fall
+                // through to the ordinary Short ack.
+                if op.is_fetch() && !msg.flags.is_async() {
+                    data_reply = Some(AmMessage {
+                        am_type: AmType::Atomic,
+                        flags: reply_flags(&msg),
+                        src: self.kernel_id,
+                        dst: msg.src,
+                        handler: handler_ids::REPLY,
+                        token: msg.token,
+                        args: std::mem::take(&mut msg.args),
+                        desc: Descriptor::Atomic {
+                            addr,
+                            op,
+                            lane,
+                            operand: old,
+                            operand2: 0,
+                        },
+                        payload: vec![],
+                    });
+                }
+            }
         }
 
         self.finish_request(&msg, data_reply, emit)
@@ -339,6 +369,18 @@ impl KernelRuntime {
                 self.segment.write(dst_addr, &msg.payload)?;
                 self.resolve_reply(&msg);
             }
+            AmType::Atomic => {
+                // Fetch reply: the old value rides in the descriptor's
+                // `operand` word and lands in the owning handle's slot.
+                let Descriptor::Atomic { operand, .. } = msg.desc else {
+                    return Err(Error::MalformedAm("atomic reply without descriptor".into()));
+                };
+                if msg.flags.is_handle() {
+                    self.completion.resolve_with(msg.token, operand);
+                } else {
+                    self.completion.resolve_legacy();
+                }
+            }
             other => {
                 return Err(Error::MalformedAm(format!("reply with AM type {other}")));
             }
@@ -374,6 +416,32 @@ impl KernelRuntime {
             }
         }
         Ok(())
+    }
+}
+
+/// Execute one remote atomic against `segment`, returning the pre-op value.
+///
+/// This is the single execution point for every datapath: the handler thread,
+/// the GAScore ingress path, and the intra-node fast path all funnel through
+/// it, so semantics cannot drift between them. Scalar ops go through the
+/// segment's lock-free word RMW; accumulates apply the element-wise reduction
+/// (lock-free per-lane for aligned U64, under the segment write lock
+/// otherwise) and return 0 — they fetch nothing.
+pub(crate) fn execute_atomic(
+    segment: &Segment,
+    addr: u64,
+    op: AtomicOp,
+    lane: Lane,
+    operand: u64,
+    operand2: u64,
+    payload: &[u8],
+) -> Result<u64> {
+    if op.is_accumulate() {
+        let rop = op.reduce_op().expect("accumulate op maps to a reduction");
+        segment.accumulate(addr, rop, lane, payload)?;
+        Ok(0)
+    } else {
+        segment.atomic_rmw(addr, op, operand, operand2)
     }
 }
 
@@ -704,5 +772,155 @@ mod tests {
         assert!(tab.wait_total(1, Duration::from_millis(20)).is_err());
         tab.resolve_legacy();
         tab.wait_total(1, Duration::from_millis(20)).unwrap();
+    }
+
+    fn atomic_msg(
+        dst: u16,
+        addr: u64,
+        op: AtomicOp,
+        lane: Lane,
+        operand: u64,
+        operand2: u64,
+        payload: Vec<u8>,
+        flags: AmFlags,
+    ) -> AmMessage {
+        AmMessage {
+            am_type: AmType::Atomic,
+            flags,
+            src: 9,
+            dst,
+            handler: handler_ids::REPLY,
+            token: 1,
+            args: vec![],
+            desc: Descriptor::Atomic { addr, op, lane, operand, operand2 },
+            payload,
+        }
+    }
+
+    #[test]
+    fn atomic_faa_ingress_replies_with_old_value() {
+        let (rt, _rx) = runtime(2);
+        rt.segment.write(0, &5u64.to_le_bytes()).unwrap();
+        let mut emitted = Vec::new();
+        let mut msg = atomic_msg(
+            2,
+            0,
+            AtomicOp::FaaAdd,
+            Lane::U64,
+            3,
+            0,
+            vec![],
+            AmFlags::new().with(AmFlags::HANDLE),
+        );
+        msg.token = 77;
+        rt.process_ingress(msg, &mut |m| emitted.push(m)).unwrap();
+        assert_eq!(rt.segment.read(0, 8).unwrap(), 8u64.to_le_bytes());
+        assert_eq!(emitted.len(), 1, "fetch atomic emits exactly one reply");
+        let r = &emitted[0];
+        assert_eq!(r.am_type, AmType::Atomic, "old value rides an Atomic reply");
+        assert!(r.flags.is_reply());
+        assert!(r.flags.is_handle(), "reply must echo HANDLE");
+        assert_eq!(r.dst, 9);
+        assert_eq!(r.token, 77);
+        let Descriptor::Atomic { operand, .. } = r.desc else {
+            panic!("atomic reply must carry an atomic descriptor");
+        };
+        assert_eq!(operand, 5, "descriptor operand carries the pre-op value");
+    }
+
+    #[test]
+    fn atomic_reply_delivers_value_to_owning_handle() {
+        // Target side executes the CAS; requester side resolves the handle.
+        let (rt_dst, _rx) = runtime(2);
+        rt_dst.segment.write(32, &11u64.to_le_bytes()).unwrap();
+
+        let (rt_src, _rx2) = runtime(1);
+        let h = rt_src.completion.create(1);
+        let token = rt_src.completion.bind_token(h);
+
+        let mut cas = atomic_msg(
+            2,
+            32,
+            AtomicOp::Cas,
+            Lane::U64,
+            11,
+            99,
+            vec![],
+            AmFlags::new().with(AmFlags::HANDLE),
+        );
+        cas.src = 1;
+        cas.token = token;
+        let mut emitted = Vec::new();
+        rt_dst.process_ingress(cas, &mut |m| emitted.push(m)).unwrap();
+        assert_eq!(rt_dst.segment.read(32, 8).unwrap(), 99u64.to_le_bytes());
+        assert_eq!(emitted.len(), 1);
+
+        let mut none = Vec::new();
+        rt_src.process_ingress(emitted.pop().unwrap(), &mut |m| none.push(m)).unwrap();
+        assert!(none.is_empty(), "replies must not trigger replies");
+        let (old, first) =
+            rt_src.completion.wait_value(h, Duration::from_millis(100)).unwrap();
+        assert_eq!(old, 11, "CAS returns the pre-swap value");
+        assert!(first);
+    }
+
+    #[test]
+    fn atomic_accumulate_acks_with_short() {
+        let (rt, _rx) = runtime(2);
+        let mut seed = Vec::new();
+        for v in [10u64, 20] {
+            seed.extend_from_slice(&v.to_le_bytes());
+        }
+        rt.segment.write(16, &seed).unwrap();
+
+        let mut payload = Vec::new();
+        for v in [2u64, 2] {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut emitted = Vec::new();
+        let msg = atomic_msg(
+            2,
+            16,
+            AtomicOp::AccSum,
+            Lane::U64,
+            0,
+            0,
+            payload,
+            AmFlags::new().with(AmFlags::HANDLE),
+        );
+        rt.process_ingress(msg, &mut |m| emitted.push(m)).unwrap();
+        let mut expect = Vec::new();
+        for v in [12u64, 22] {
+            expect.extend_from_slice(&v.to_le_bytes());
+        }
+        assert_eq!(rt.segment.read(16, 16).unwrap(), expect);
+        assert_eq!(emitted.len(), 1);
+        assert_eq!(
+            emitted[0].am_type,
+            AmType::Short,
+            "accumulate fetches nothing: ordinary Short ack"
+        );
+        assert!(emitted[0].flags.is_reply());
+        assert!(emitted[0].flags.is_handle());
+    }
+
+    #[test]
+    fn async_atomic_suppresses_reply_but_still_applies() {
+        let (rt, _rx) = runtime(2);
+        rt.segment.write(0, &1u64.to_le_bytes()).unwrap();
+        let mut emitted = Vec::new();
+        let msg = atomic_msg(
+            2,
+            0,
+            AtomicOp::FaaAdd,
+            Lane::U64,
+            41,
+            0,
+            vec![],
+            AmFlags::new().with(AmFlags::ASYNC),
+        );
+        rt.process_ingress(msg, &mut |m| emitted.push(m)).unwrap();
+        assert!(emitted.is_empty(), "async atomics never reply");
+        assert_eq!(rt.segment.read(0, 8).unwrap(), 42u64.to_le_bytes());
     }
 }

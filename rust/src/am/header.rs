@@ -15,7 +15,8 @@
 //! `xpams_tx` in hardware decodes word 0 to route the message (§III-C step
 //! 2); `am_tx`/`am_rx` use the descriptor words to issue DataMover commands.
 
-use super::types::{AmFlags, AmType};
+use super::types::{AmFlags, AmType, AtomicOp};
+use crate::collectives::Lane;
 use super::wire::{WireBuilder, WireDesc};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::MAX_PAYLOAD_BYTES;
@@ -48,6 +49,12 @@ pub enum Descriptor {
     Strided { dst_addr: u64, stride: u32, block_len: u32, nblocks: u32 },
     /// Vectored scatter over explicit (addr, len) extents.
     Vectored { entries: Vec<(u64, u32)> },
+    /// Remote atomic at `addr` in the destination kernel's partition. Scalar
+    /// ops use `operand` (and `operand2` for CAS's desired value) and carry
+    /// no payload; accumulate ops reduce the payload's 8-byte lanes into
+    /// memory starting at `addr`. On a reply, `operand` carries the fetched
+    /// old value back to the sender.
+    Atomic { addr: u64, op: AtomicOp, lane: Lane, operand: u64, operand2: u64 },
 }
 
 impl Descriptor {
@@ -71,6 +78,13 @@ impl Descriptor {
                 nblocks: *nblocks,
             },
             Descriptor::Vectored { entries } => WireDesc::Vectored { entries },
+            Descriptor::Atomic { addr, op, lane, operand, operand2 } => WireDesc::Atomic {
+                addr: *addr,
+                op: *op,
+                lane: *lane,
+                operand: *operand,
+                operand2: *operand2,
+            },
         }
     }
 }
@@ -142,6 +156,25 @@ impl AmMessage {
                     )));
                 }
             }
+            (AmType::Atomic, Descriptor::Atomic { op, lane, .. }) => {
+                if op.is_accumulate() {
+                    if self.payload.is_empty() || self.payload.len() % 8 != 0 {
+                        return Err(Error::BadDescriptor(format!(
+                            "accumulate payload must be a non-empty multiple of 8 B, got {}",
+                            self.payload.len()
+                        )));
+                    }
+                } else {
+                    if !self.payload.is_empty() {
+                        return Err(Error::MalformedAm("scalar atomic with payload".into()));
+                    }
+                    if *lane != Lane::U64 {
+                        return Err(Error::BadDescriptor(
+                            "scalar atomics operate on u64 words only".into(),
+                        ));
+                    }
+                }
+            }
             (t, d) => {
                 return Err(Error::MalformedAm(format!(
                     "descriptor {d:?} invalid for type {t}"
@@ -207,6 +240,14 @@ impl AmMessage {
                     w.extend_from_slice(&len.to_le_bytes());
                     w.extend_from_slice(&0u32.to_le_bytes()); // pad
                 }
+            }
+            Descriptor::Atomic { addr, op, lane, operand, operand2 } => {
+                w.extend_from_slice(&addr.to_le_bytes());
+                w.push(op.to_u8());
+                w.push(lane.to_u8());
+                w.extend_from_slice(&[0u8; 6]); // pad to word
+                w.extend_from_slice(&operand.to_le_bytes());
+                w.extend_from_slice(&operand2.to_le_bytes());
             }
         }
         w.extend_from_slice(&self.payload);
@@ -301,6 +342,15 @@ impl AmMessage {
                 }
                 Descriptor::Vectored { entries }
             }
+            (AmType::Atomic, _) => {
+                let addr = r.u64()?;
+                let op = AtomicOp::from_u8(r.u8()?)?;
+                let lane = Lane::from_u8(r.u8()?)?;
+                let _pad = r.take(6)?;
+                let operand = r.u64()?;
+                let operand2 = r.u64()?;
+                Descriptor::Atomic { addr, op, lane, operand, operand2 }
+            }
         };
         // Validate the payload's extent without copying it.
         let payload_start = r.i;
@@ -330,6 +380,7 @@ impl AmMessage {
                 Descriptor::LongGet { .. } => 24,
                 Descriptor::Strided { .. } => 24,
                 Descriptor::Vectored { entries } => 8 + 16 * entries.len(),
+                Descriptor::Atomic { .. } => 32,
             }
     }
 
@@ -512,6 +563,160 @@ mod tests {
             desc: Descriptor::Vectored { entries: vec![(0, 8), (100, 24)] },
             payload: vec![0xCD; 32],
         });
+    }
+
+    #[test]
+    fn atomic_scalar_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new().with(AmFlags::HANDLE),
+            src: 2,
+            dst: 9,
+            handler: handler_ids::NOP,
+            token: 31,
+            args: vec![],
+            desc: Descriptor::Atomic {
+                addr: 0x100,
+                op: AtomicOp::Cas,
+                lane: Lane::U64,
+                operand: 7,
+                operand2: 8,
+            },
+            payload: vec![],
+        });
+    }
+
+    #[test]
+    fn atomic_accumulate_roundtrip() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new().with(AmFlags::ASYNC),
+            src: 2,
+            dst: 9,
+            handler: handler_ids::NOP,
+            token: 0,
+            args: vec![1],
+            desc: Descriptor::Atomic {
+                addr: 64,
+                op: AtomicOp::AccSum,
+                lane: Lane::F64,
+                operand: 0,
+                operand2: 0,
+            },
+            payload: 1.5f64.to_le_bytes().repeat(4),
+        });
+    }
+
+    #[test]
+    fn atomic_reply_roundtrip_carries_old_value() {
+        roundtrip(&AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new().with(AmFlags::REPLY).with(AmFlags::HANDLE),
+            src: 9,
+            dst: 2,
+            handler: handler_ids::REPLY,
+            token: 31,
+            args: vec![],
+            desc: Descriptor::Atomic {
+                addr: 0x100,
+                op: AtomicOp::FaaAdd,
+                lane: Lane::U64,
+                operand: 0xdead_beef, // the fetched old value
+                operand2: 0,
+            },
+            payload: vec![],
+        });
+    }
+
+    #[test]
+    fn rejects_scalar_atomic_with_payload() {
+        let m = AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: 0,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Atomic {
+                addr: 0,
+                op: AtomicOp::Swap,
+                lane: Lane::U64,
+                operand: 1,
+                operand2: 0,
+            },
+            payload: vec![0; 8],
+        };
+        assert!(m.encode().is_err());
+    }
+
+    #[test]
+    fn rejects_scalar_atomic_f64_lane() {
+        let m = AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: 0,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Atomic {
+                addr: 0,
+                op: AtomicOp::FaaAdd,
+                lane: Lane::F64,
+                operand: 1,
+                operand2: 0,
+            },
+            payload: vec![],
+        };
+        assert!(matches!(m.encode(), Err(Error::BadDescriptor(_))));
+    }
+
+    #[test]
+    fn rejects_ragged_accumulate_payload() {
+        for bad in [vec![], vec![0u8; 12]] {
+            let m = AmMessage {
+                am_type: AmType::Atomic,
+                flags: AmFlags::new(),
+                src: 0,
+                dst: 1,
+                handler: 0,
+                token: 0,
+                args: vec![],
+                desc: Descriptor::Atomic {
+                    addr: 0,
+                    op: AtomicOp::AccMax,
+                    lane: Lane::U64,
+                    operand: 0,
+                    operand2: 0,
+                },
+                payload: bad,
+            };
+            assert!(matches!(m.encode(), Err(Error::BadDescriptor(_))));
+        }
+    }
+
+    #[test]
+    fn atomic_header_overhead_matches_encoding() {
+        let m = AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: 2,
+            token: 3,
+            args: vec![4],
+            desc: Descriptor::Atomic {
+                addr: 16,
+                op: AtomicOp::AccSum,
+                lane: Lane::U64,
+                operand: 0,
+                operand2: 0,
+            },
+            payload: vec![0; 16],
+        };
+        let wire = m.encode().unwrap();
+        assert_eq!(wire.len(), m.header_overhead() + m.payload.len());
     }
 
     #[test]

@@ -18,6 +18,11 @@ pub enum AmType {
     LongStrided = 3,
     /// Long whose destination placement is a scatter over (addr, len) pairs.
     LongVectored = 4,
+    /// Remote atomic executed at the target's AM engine: fetch-and-op /
+    /// CAS / swap on one 64-bit word, or element-wise accumulate over a
+    /// payload of 8-byte lanes. Fetch results ride back on the HANDLE
+    /// reply path.
+    Atomic = 5,
 }
 
 impl AmType {
@@ -28,6 +33,7 @@ impl AmType {
             2 => AmType::Long,
             3 => AmType::LongStrided,
             4 => AmType::LongVectored,
+            5 => AmType::Atomic,
             other => return Err(Error::MalformedAm(format!("bad AM type {other}"))),
         })
     }
@@ -46,6 +52,112 @@ impl std::fmt::Display for AmType {
             AmType::Long => "long",
             AmType::LongStrided => "long-strided",
             AmType::LongVectored => "long-vectored",
+            AmType::Atomic => "atomic",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// The operation an [`AmType::Atomic`] message performs at the target.
+///
+/// Scalar ops (`Faa*`, `Cas`, `Swap`) act on one 64-bit word at the
+/// descriptor address and *fetch*: the old value rides back on the HANDLE
+/// reply path. Accumulate ops (`Acc*`) are element-wise reductions of the
+/// message payload (8-byte lanes) into segment memory and complete with the
+/// ordinary Short acknowledgement — they fetch nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum AtomicOp {
+    /// Fetch-and-add (wrapping).
+    FaaAdd = 0,
+    /// Fetch-and-min (unsigned).
+    FaaMin = 1,
+    /// Fetch-and-max (unsigned).
+    FaaMax = 2,
+    /// Fetch-and-AND.
+    FaaAnd = 3,
+    /// Fetch-and-OR.
+    FaaOr = 4,
+    /// Fetch-and-XOR.
+    FaaXor = 5,
+    /// Compare-and-swap: `operand` = expected, `operand2` = desired.
+    Cas = 6,
+    /// Unconditional exchange.
+    Swap = 7,
+    /// Element-wise sum of the payload lanes into memory.
+    AccSum = 8,
+    /// Element-wise min of the payload lanes into memory.
+    AccMin = 9,
+    /// Element-wise max of the payload lanes into memory.
+    AccMax = 10,
+}
+
+impl AtomicOp {
+    pub fn from_u8(v: u8) -> Result<AtomicOp> {
+        Ok(match v {
+            0 => AtomicOp::FaaAdd,
+            1 => AtomicOp::FaaMin,
+            2 => AtomicOp::FaaMax,
+            3 => AtomicOp::FaaAnd,
+            4 => AtomicOp::FaaOr,
+            5 => AtomicOp::FaaXor,
+            6 => AtomicOp::Cas,
+            7 => AtomicOp::Swap,
+            8 => AtomicOp::AccSum,
+            9 => AtomicOp::AccMin,
+            10 => AtomicOp::AccMax,
+            other => return Err(Error::MalformedAm(format!("bad atomic op {other}"))),
+        })
+    }
+
+    pub fn to_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// True for ops that return the old value (everything but accumulate).
+    pub fn is_fetch(self) -> bool {
+        !self.is_accumulate()
+    }
+
+    /// True for the element-wise accumulate family.
+    pub fn is_accumulate(self) -> bool {
+        matches!(self, AtomicOp::AccSum | AtomicOp::AccMin | AtomicOp::AccMax)
+    }
+
+    /// The accumulate op corresponding to a collective reduction.
+    pub fn accumulate(op: crate::collectives::ReduceOp) -> AtomicOp {
+        match op {
+            crate::collectives::ReduceOp::Sum => AtomicOp::AccSum,
+            crate::collectives::ReduceOp::Min => AtomicOp::AccMin,
+            crate::collectives::ReduceOp::Max => AtomicOp::AccMax,
+        }
+    }
+
+    /// The reduction this accumulate op performs (None for scalar ops).
+    pub fn reduce_op(self) -> Option<crate::collectives::ReduceOp> {
+        Some(match self {
+            AtomicOp::AccSum => crate::collectives::ReduceOp::Sum,
+            AtomicOp::AccMin => crate::collectives::ReduceOp::Min,
+            AtomicOp::AccMax => crate::collectives::ReduceOp::Max,
+            _ => return None,
+        })
+    }
+}
+
+impl std::fmt::Display for AtomicOp {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            AtomicOp::FaaAdd => "faa-add",
+            AtomicOp::FaaMin => "faa-min",
+            AtomicOp::FaaMax => "faa-max",
+            AtomicOp::FaaAnd => "faa-and",
+            AtomicOp::FaaOr => "faa-or",
+            AtomicOp::FaaXor => "faa-xor",
+            AtomicOp::Cas => "cas",
+            AtomicOp::Swap => "swap",
+            AtomicOp::AccSum => "acc-sum",
+            AtomicOp::AccMin => "acc-min",
+            AtomicOp::AccMax => "acc-max",
         };
         write!(f, "{s}")
     }
@@ -133,10 +245,40 @@ mod tests {
             AmType::Long,
             AmType::LongStrided,
             AmType::LongVectored,
+            AmType::Atomic,
         ] {
             assert_eq!(AmType::from_u8(t as u8).unwrap(), t);
         }
         assert!(AmType::from_u8(200).is_err());
+    }
+
+    #[test]
+    fn atomic_op_roundtrip() {
+        for v in 0..=10u8 {
+            let op = AtomicOp::from_u8(v).unwrap();
+            assert_eq!(op.to_u8(), v);
+            assert_eq!(op.is_fetch(), !op.is_accumulate());
+        }
+        assert!(AtomicOp::from_u8(11).is_err());
+        assert!(AtomicOp::FaaAdd.is_fetch());
+        assert!(AtomicOp::Cas.is_fetch());
+        assert!(AtomicOp::AccSum.is_accumulate());
+    }
+
+    #[test]
+    fn atomic_op_reduce_mapping() {
+        use crate::collectives::ReduceOp;
+        for op in [ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max] {
+            let a = AtomicOp::accumulate(op);
+            assert!(a.is_accumulate());
+            assert_eq!(a.reduce_op(), Some(op));
+        }
+        assert_eq!(AtomicOp::FaaAdd.reduce_op(), None);
+    }
+
+    #[test]
+    fn atomic_is_not_long() {
+        assert!(!AmType::Atomic.is_long());
     }
 
     #[test]

@@ -13,11 +13,12 @@
 //! datapath single-copy). One copy, caller → wire.
 //!
 //! The encoding is proven bitwise identical to the owned codec by a property
-//! test over all five AM classes (`tests/properties.rs`), so remote peers
+//! test over all AM classes (`tests/properties.rs`), so remote peers
 //! cannot tell which path produced a packet.
 
 use super::header::{MAX_ARGS, MAX_VECTORED};
-use super::types::{AmFlags, AmType};
+use super::types::{AmFlags, AmType, AtomicOp};
+use crate::collectives::Lane;
 use crate::error::{Error, Result};
 use crate::galapagos::packet::MAX_PAYLOAD_BYTES;
 
@@ -38,6 +39,8 @@ pub enum WireDesc<'a> {
     Strided { dst_addr: u64, stride: u32, block_len: u32, nblocks: u32 },
     /// Vectored scatter over explicit (addr, len) extents.
     Vectored { entries: &'a [(u64, u32)] },
+    /// Remote atomic (scalar fetch-op / CAS / swap, or payload accumulate).
+    Atomic { addr: u64, op: AtomicOp, lane: Lane, operand: u64, operand2: u64 },
 }
 
 /// A wire encoder over borrowed header fields, args and payload.
@@ -121,6 +124,24 @@ impl<'a> WireBuilder<'a> {
                     )));
                 }
             }
+            (AmType::Atomic, WireDesc::Atomic { op, lane, .. }) => {
+                if op.is_accumulate() {
+                    if payload_len == 0 || payload_len % 8 != 0 {
+                        return Err(Error::BadDescriptor(format!(
+                            "accumulate payload must be a non-empty multiple of 8 B, got {payload_len}"
+                        )));
+                    }
+                } else {
+                    if payload_len != 0 {
+                        return Err(Error::MalformedAm("scalar atomic with payload".into()));
+                    }
+                    if *lane != Lane::U64 {
+                        return Err(Error::BadDescriptor(
+                            "scalar atomics operate on u64 words only".into(),
+                        ));
+                    }
+                }
+            }
             (t, d) => {
                 return Err(Error::MalformedAm(format!("descriptor {d:?} invalid for type {t}")))
             }
@@ -142,6 +163,7 @@ impl<'a> WireBuilder<'a> {
                 WireDesc::LongGet { .. } => 24,
                 WireDesc::Strided { .. } => 24,
                 WireDesc::Vectored { entries } => 8 + 16 * entries.len(),
+                WireDesc::Atomic { .. } => 32,
             }
     }
 
@@ -227,6 +249,14 @@ impl<'a> WireBuilder<'a> {
                     w.extend_from_slice(&len.to_le_bytes());
                     w.extend_from_slice(&0u32.to_le_bytes()); // pad
                 }
+            }
+            WireDesc::Atomic { addr, op, lane, operand, operand2 } => {
+                w.extend_from_slice(&addr.to_le_bytes());
+                w.push(op.to_u8());
+                w.push(lane.to_u8());
+                w.extend_from_slice(&[0u8; 6]); // pad to word
+                w.extend_from_slice(&operand.to_le_bytes());
+                w.extend_from_slice(&operand2.to_le_bytes());
             }
         }
     }
@@ -328,6 +358,40 @@ mod tests {
                 args: vec![11],
                 desc: Descriptor::Vectored { entries: vec![(0, 8), (100, 24)] },
                 payload: vec![0xCD; 32],
+            },
+            AmMessage {
+                am_type: AmType::Atomic,
+                flags: AmFlags::new().with(AmFlags::HANDLE),
+                src: 2,
+                dst: 9,
+                handler: handler_ids::NOP,
+                token: 13,
+                args: vec![],
+                desc: Descriptor::Atomic {
+                    addr: 0x200,
+                    op: AtomicOp::Cas,
+                    lane: Lane::U64,
+                    operand: 41,
+                    operand2: 42,
+                },
+                payload: vec![],
+            },
+            AmMessage {
+                am_type: AmType::Atomic,
+                flags: AmFlags::new().with(AmFlags::ASYNC),
+                src: 2,
+                dst: 9,
+                handler: handler_ids::NOP,
+                token: 0,
+                args: vec![5],
+                desc: Descriptor::Atomic {
+                    addr: 8,
+                    op: AtomicOp::AccMin,
+                    lane: Lane::F64,
+                    operand: 0,
+                    operand2: 0,
+                },
+                payload: 2.25f64.to_le_bytes().repeat(3),
             },
         ];
         for msg in &msgs {

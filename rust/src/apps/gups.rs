@@ -1,0 +1,153 @@
+//! GUPS — Giga-Updates Per Second, the classic PGAS atomics stress.
+//!
+//! Every kernel owns a table slice of `table_words` 8-byte words at the
+//! bottom of its partition and fires `updates` fetch-and-adds at uniformly
+//! random `(kernel, word)` targets through the one-sided [`Rma`] tier
+//! (paper §III-A's remote-memory class, exercised as atomics rather than
+//! puts). Updates are windowed: up to [`WINDOW`] handles in flight, fenced
+//! with `wait_all`, so a lost update fails its own handle instead of
+//! vanishing.
+//!
+//! The run is self-checking: each FAA adds exactly 1, so after a tree
+//! barrier the all-reduced sum of every table slice must equal the total
+//! update count — on the fast path, the wire path, and lossy reliable-UDP
+//! alike. A mismatch is an [`Error::OperationFailed`], not a statistic.
+//!
+//! [`Rma`]: crate::shoal_node::rma::Rma
+
+use std::time::Instant;
+
+use crate::collectives::ReduceOp;
+use crate::config::ClusterSpec;
+use crate::error::{Error, Result};
+use crate::memory::GlobalAddress;
+use crate::shoal_node::api::ShoalKernel;
+use crate::shoal_node::cluster::ShoalCluster;
+use crate::util::rng::Rng;
+
+/// Maximum fetch-and-adds in flight per kernel before a `wait_all` fence.
+pub const WINDOW: usize = 32;
+
+/// One GUPS run over an in-process cluster.
+#[derive(Clone, Debug)]
+pub struct GupsConfig {
+    /// Kernels on the single software node.
+    pub kernels: u16,
+    /// Updates issued by each kernel.
+    pub updates: usize,
+    /// Table words owned by each kernel.
+    pub table_words: u64,
+}
+
+impl Default for GupsConfig {
+    fn default() -> Self {
+        GupsConfig { kernels: 4, updates: 2000, table_words: 512 }
+    }
+}
+
+/// Aggregate result of a GUPS run.
+#[derive(Clone, Copy, Debug)]
+pub struct GupsReport {
+    /// Total updates applied across all kernels (verified against the
+    /// all-reduced table sum).
+    pub total_updates: u64,
+    /// Aggregate update rate (sum of per-kernel rates), updates/second.
+    pub updates_per_sec: f64,
+}
+
+/// The per-kernel GUPS body, shared by [`run`] and `shoal serve --app gups`.
+///
+/// `participants` is every kernel id in the run (each owns a table slice and
+/// issues `updates` FAAs). Returns this kernel's update rate in
+/// updates/second. Synchronization is collective-based (`barrier_tree`), so
+/// the body works across real processes exactly like in-process.
+pub fn kernel_body(
+    k: &mut ShoalKernel,
+    participants: &[u16],
+    updates: usize,
+    table_words: u64,
+) -> Result<f64> {
+    // Zero my table slice, then wait for everyone before the storm.
+    k.mem().write(0, &vec![0u8; (table_words * 8) as usize])?;
+    k.barrier_tree()?;
+
+    let mut rng = Rng::new(0x9_0125 ^ k.id() as u64);
+    let mut inflight = Vec::with_capacity(WINDOW);
+    let t0 = Instant::now();
+    for _ in 0..updates {
+        let target = participants[rng.below(participants.len() as u64) as usize];
+        let word = rng.below(table_words);
+        let h = k.rma().faa(
+            GlobalAddress::new(target, word * 8),
+            crate::am::types::AtomicOp::FaaAdd,
+            1,
+            crate::shoal_node::rma::OpOptions::default(),
+        )?;
+        inflight.push(h.am);
+        if inflight.len() == WINDOW {
+            k.wait_all(&inflight)?;
+            inflight.clear();
+        }
+    }
+    k.wait_all(&inflight)?;
+    let rate = updates as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // Everyone's handles resolved => every update is applied. Check the
+    // global sum against the exact expectation.
+    k.barrier_tree()?;
+    let mut mine = 0u64;
+    let slice = k.mem().read(0, (table_words * 8) as usize)?;
+    for w in slice.chunks_exact(8) {
+        mine += u64::from_le_bytes(w.try_into().expect("8-byte chunk"));
+    }
+    let ch = k.all_reduce_u64(ReduceOp::Sum, &[mine])?;
+    let total = k.collective_wait_u64(ch)?[0];
+    let expect = participants.len() as u64 * updates as u64;
+    if total != expect {
+        return Err(Error::OperationFailed(format!(
+            "gups: table sum {total} != {expect} issued updates (kernel {})",
+            k.id()
+        )));
+    }
+    Ok(rate)
+}
+
+/// Run GUPS over an in-process single-node cluster and verify exactness.
+pub fn run(cfg: &GupsConfig) -> Result<GupsReport> {
+    let spec = ClusterSpec::single_node("gups", cfg.kernels);
+    let cluster = ShoalCluster::launch(&spec)?;
+    let participants: Vec<u16> = (0..cfg.kernels).collect();
+    let (tx, rx) = std::sync::mpsc::channel::<Result<f64>>();
+    for kid in 0..cfg.kernels {
+        let tx = tx.clone();
+        let participants = participants.clone();
+        let (updates, words) = (cfg.updates, cfg.table_words);
+        cluster.run_kernel(kid, move |mut k| {
+            tx.send(kernel_body(&mut k, &participants, updates, words)).unwrap();
+        });
+    }
+    drop(tx);
+    let mut rate = 0.0;
+    for _ in 0..cfg.kernels {
+        rate += rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .map_err(|_| Error::Timeout("gups kernel"))??;
+    }
+    cluster.join()?;
+    Ok(GupsReport {
+        total_updates: cfg.kernels as u64 * cfg.updates as u64,
+        updates_per_sec: rate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_run_is_exact() {
+        let r = run(&GupsConfig { kernels: 3, updates: 200, table_words: 64 }).unwrap();
+        assert_eq!(r.total_updates, 600);
+        assert!(r.updates_per_sec > 0.0);
+    }
+}

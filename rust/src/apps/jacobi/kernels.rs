@@ -278,10 +278,10 @@ pub fn control_kernel(
     // Tiles are sent one grid row per Long AM: a row is the natural exchange
     // unit of the solver, and it is exactly the quantity the 9000 B
     // Galapagos cap constrains (§IV-C1 — 4096-wide rows cannot be sent in a
-    // single AM, 2048-wide rows can). Completion via the wait_replies shim —
-    // the paper's collective model, kept working on purpose.
+    // single AM, 2048-wide rows can). Per-operation handles, fenced with
+    // `wait_all`: a lost row fails its own handle and names the exact send.
     let t_dist = Instant::now();
-    let mut outstanding = 0u64;
+    let mut receipts = Vec::new();
     for (w, s) in strips.iter().enumerate() {
         let layout = SegmentLayout::new(s.rows, cols);
         for r in 0..s.rows {
@@ -289,26 +289,23 @@ pub fn control_kernel(
                 .iter()
                 .flat_map(|v| v.to_le_bytes())
                 .collect();
-            let receipt =
-                k.am_long(worker_kid(w), handlers::NOP, &[], &row, layout.tile_row(r))?;
-            outstanding += receipt.messages;
+            receipts.push(k.am_long(worker_kid(w), handlers::NOP, &[], &row, layout.tile_row(r))?);
         }
         // Edge workers' fixed global boundary rows live in their halo slots.
         if w == 0 {
             let top: Vec<u8> = grid[..cols].iter().flat_map(|v| v.to_le_bytes()).collect();
-            let r = k.am_long(worker_kid(0), handlers::NOP, &[], &top, SegmentLayout::HALO_TOP)?;
-            outstanding += r.messages;
+            receipts
+                .push(k.am_long(worker_kid(0), handlers::NOP, &[], &top, SegmentLayout::HALO_TOP)?);
         }
         if w == workers - 1 {
             let bot: Vec<u8> = grid[(n - 1) * cols..n * cols]
                 .iter()
                 .flat_map(|v| v.to_le_bytes())
                 .collect();
-            let r = k.am_long(worker_kid(w), handlers::NOP, &[], &bot, layout.halo_bot())?;
-            outstanding += r.messages;
+            receipts.push(k.am_long(worker_kid(w), handlers::NOP, &[], &bot, layout.halo_bot())?);
         }
     }
-    k.wait_replies(outstanding)?;
+    k.wait_all(&receipts)?;
     let distribute = t_dist.elapsed();
     k.barrier()?; // workers may start
 

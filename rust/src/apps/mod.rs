@@ -4,5 +4,10 @@
 //! iterative method over a 2-D grid with a von Neumann stencil, distributed
 //! across software and/or hardware kernels with halo exchange over Long AMs
 //! and barrier synchronization.
+//!
+//! [`gups`] stresses the remote-atomics class: random fetch-and-adds over
+//! every kernel's table slice through the one-sided `Rma` tier, with an
+//! exactness check (the all-reduced table sum must equal the update count).
 
+pub mod gups;
 pub mod jacobi;

@@ -145,14 +145,14 @@ pub struct MicroResult {
     pub throughput_bps: f64,
 }
 
-/// Send one AM of `kind` and wait for its completion; returns outstanding
-/// replies consumed. Runs inside the sender kernel.
+/// Send one AM of `kind`; returns its completion handle. Runs inside the
+/// sender kernel.
 fn send_one(
     k: &mut crate::shoal_node::api::ShoalKernel,
     kind: MsgKind,
     payload: &[u8],
     receiver: u16,
-) -> Result<u64> {
+) -> Result<crate::am::completion::AmHandle> {
     let r = match kind {
         MsgKind::Short => k.am_short(receiver, handlers::NOP, &[])?,
         MsgKind::MediumFifo => k.am_medium(receiver, handlers::NOP, &[], payload)?,
@@ -190,7 +190,7 @@ fn send_one(
         }
         MsgKind::LongGet => k.am_long_get(receiver, handlers::NOP, 0, payload.len(), 0)?,
     };
-    Ok(r.messages)
+    Ok(r)
 }
 
 /// Measure round-trip latency: `samples` timed round trips after `warmup`.
@@ -214,16 +214,14 @@ pub fn measure_latency(
         let mut summary = Summary::new();
         for i in 0..warmup + samples {
             let t0 = Instant::now();
-            let msgs = send_one(&mut k, kind, &payload, 1).unwrap();
-            if msgs > 0 {
-                k.wait_replies(msgs).unwrap();
-            }
+            let h = send_one(&mut k, kind, &payload, 1).unwrap();
+            k.wait(h).unwrap();
             if i >= warmup {
                 summary.push(t0.elapsed().as_nanos() as f64);
             }
         }
         let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
-        k.wait_replies(r.messages).unwrap();
+        k.wait(r).unwrap();
         tx.send(summary).unwrap();
     });
 
@@ -252,16 +250,13 @@ pub fn measure_throughput(
         k.barrier().unwrap();
         let payload = vec![0x5Au8; payload_len];
         let t0 = Instant::now();
-        let mut outstanding = 0u64;
-        for _ in 0..count {
-            outstanding += send_one(&mut k, kind, &payload, 1).unwrap();
-        }
-        if outstanding > 0 {
-            k.wait_replies(outstanding).unwrap();
-        }
+        let handles: Vec<crate::am::completion::AmHandle> = (0..count)
+            .map(|_| send_one(&mut k, kind, &payload, 1).unwrap())
+            .collect();
+        k.wait_all(&handles).unwrap();
         let dt = t0.elapsed().as_secs_f64();
         let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
-        k.wait_replies(r.messages).unwrap();
+        k.wait(r).unwrap();
         tx.send(count as f64 * payload_len as f64 / dt).unwrap();
     });
 
@@ -302,10 +297,13 @@ pub fn measure_overlap_gets(
             k.wait(h).unwrap();
         }
 
-        // Sequential baseline: full round trip per operation.
+        // Sequential baseline: full round trip per operation. Intentionally
+        // the deprecated counter-completion model — this stage *measures*
+        // what the shim costs against overlapped handles.
         let t0 = Instant::now();
         for _ in 0..count {
             let _h = k.am_long_get(1, handlers::NOP, 0, payload_len, 0).unwrap();
+            #[allow(deprecated)]
             k.wait_replies(1).unwrap();
         }
         let sequential = count as f64 / t0.elapsed().as_secs_f64();
@@ -319,7 +317,7 @@ pub fn measure_overlap_gets(
         let overlapped = count as f64 / t1.elapsed().as_secs_f64();
 
         let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
-        k.wait_replies(r.messages).unwrap();
+        k.wait(r).unwrap();
         tx.send((sequential, overlapped)).unwrap();
     });
 
@@ -328,6 +326,53 @@ pub fn measure_overlap_gets(
         .map_err(|_| crate::error::Error::Timeout("overlap bench"))?;
     cluster.join()?;
     Ok(rates)
+}
+
+/// Measure fetch-and-add round-trip latency: one `am_atomic(FaaAdd, +1)` +
+/// `wait_fetch` per sample against kernel 1's partition. The returned old
+/// values are checked for exactness (0, 1, 2, …) — a latency number from a
+/// datapath that loses or double-applies atomics would be meaningless. With
+/// `placement.no_fastpath()` every op takes the codec + router + engine
+/// path, which is the routed baseline the hotpath `atomics` gate compares
+/// the fast path against.
+pub fn measure_faa_latency(
+    placement: BenchPlacement,
+    samples: usize,
+    warmup: usize,
+) -> Result<Summary> {
+    let spec = placement.spec()?;
+    let cluster = ShoalCluster::launch(&spec)?;
+    let (tx, rx) = std::sync::mpsc::channel::<Summary>();
+
+    cluster.run_kernel(1, receiver_loop);
+
+    cluster.run_kernel(0, move |mut k| {
+        k.barrier().unwrap();
+        // Zero the counter word (receiver seeds its partition with 7s).
+        let h = k.am_long(1, handlers::NOP, &[], &0u64.to_le_bytes(), 4096).unwrap();
+        k.wait(h).unwrap();
+        let mut summary = Summary::new();
+        for i in 0..warmup + samples {
+            let t0 = Instant::now();
+            let h = k
+                .am_atomic(1, 4096, crate::am::types::AtomicOp::FaaAdd, 1, 0)
+                .unwrap();
+            let old = k.wait_fetch(h).unwrap();
+            if i >= warmup {
+                summary.push(t0.elapsed().as_nanos() as f64);
+            }
+            assert_eq!(old, i as u64, "FAA must be exact: lost or double-applied op");
+        }
+        let r = k.am_medium(1, handlers::NOP, &[DONE], &[]).unwrap();
+        k.wait(r).unwrap();
+        tx.send(summary).unwrap();
+    });
+
+    let summary = rx
+        .recv_timeout(std::time::Duration::from_secs(300))
+        .map_err(|_| crate::error::Error::Timeout("faa bench"))?;
+    cluster.join()?;
+    Ok(summary)
 }
 
 /// Latency summaries (ns/op) of the tree collectives against their
@@ -477,6 +522,15 @@ mod tests {
         let s =
             measure_latency(BenchPlacement::hw_same(), MsgKind::LongFifo, 512, 20, 5).unwrap();
         assert!(s.median() > 0.0);
+    }
+
+    #[test]
+    fn faa_latency_fast_and_routed() {
+        let s = measure_faa_latency(BenchPlacement::sw_same(), 30, 5).unwrap();
+        assert_eq!(s.count(), 30);
+        let r = measure_faa_latency(BenchPlacement::sw_same().no_fastpath(), 30, 5).unwrap();
+        assert_eq!(r.count(), 30);
+        assert!(s.median() > 0.0 && r.median() > 0.0);
     }
 
     #[test]

@@ -122,14 +122,14 @@ pub enum Lane {
 }
 
 impl Lane {
-    fn to_u8(self) -> u8 {
+    pub(crate) fn to_u8(self) -> u8 {
         match self {
             Lane::U64 => 0,
             Lane::F64 => 1,
         }
     }
 
-    fn from_u8(v: u8) -> Result<Lane> {
+    pub(crate) fn from_u8(v: u8) -> Result<Lane> {
         Ok(match v {
             0 => Lane::U64,
             1 => Lane::F64,

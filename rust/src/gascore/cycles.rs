@@ -141,6 +141,14 @@ impl CycleModel {
                     c += self.stream_words(msg.payload.len());
                 }
             }
+            AmType::Atomic => {
+                // Atomic unit: a locked read-modify-write against memory —
+                // one DataMover command, read access plus write-back.
+                // Accumulate payloads stream in like a Medium before the
+                // element-wise update.
+                c += self.datamover_cmd + 2 * self.dram_access;
+                c += self.stream_words(msg.payload.len());
+            }
             AmType::Short => {}
         }
         // step 3: xpams_rx hands handler data to the handlers...
@@ -254,6 +262,45 @@ mod tests {
         // A short ingress is a couple dozen cycles — ~100ns at 200 MHz.
         let c = m.ingress_cycles(&s, false);
         assert!(c < 40, "short ingress {c} cycles");
+    }
+
+    #[test]
+    fn atomic_ingress_pays_read_modify_write() {
+        use crate::am::types::AtomicOp;
+        use crate::collectives::Lane;
+        let m = CycleModel::default();
+        let faa = AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new(),
+            src: 0,
+            dst: 1,
+            handler: handler_ids::REPLY,
+            token: 0,
+            args: vec![],
+            desc: Descriptor::Atomic {
+                addr: 0,
+                op: AtomicOp::FaaAdd,
+                lane: Lane::U64,
+                operand: 1,
+                operand2: 0,
+            },
+            payload: vec![],
+        };
+        let s = AmMessage { am_type: AmType::Short, desc: Descriptor::None, ..faa.clone() };
+        assert!(
+            m.ingress_cycles(&faa, true) > m.ingress_cycles(&s, true),
+            "an atomic is a memory RMW, not a register-only Short"
+        );
+        let mut acc = faa.clone();
+        acc.desc = Descriptor::Atomic {
+            addr: 0,
+            op: AtomicOp::AccSum,
+            lane: Lane::U64,
+            operand: 0,
+            operand2: 0,
+        };
+        acc.payload = vec![0; 256];
+        assert!(m.ingress_cycles(&acc, true) > m.ingress_cycles(&faa, true));
     }
 
     #[test]

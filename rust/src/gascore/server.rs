@@ -41,7 +41,7 @@ use std::thread::JoinHandle;
 use super::cycles::CycleModel;
 use super::stages::{am_rx_parse, xpams_tx_route, EgressRoute, HoldBuffer};
 use crate::am::engine::KernelRuntime;
-use crate::am::types::handler_ids;
+use crate::am::types::{handler_ids, AmType};
 use crate::galapagos::packet::Packet;
 use crate::galapagos::router::RouterMsg;
 
@@ -76,6 +76,12 @@ pub struct GAScoreStats {
     /// Collective-tree fan messages emitted by the egress pipeline (UP
     /// contributions and DOWN results leaving this node's kernels).
     pub collectives_out: AtomicU64,
+    /// Remote atomics (FAA/CAS/swap/accumulate) executed by the ingress
+    /// pipeline against this node's partitions.
+    pub atomics_in: AtomicU64,
+    /// Atomic fetch replies (old value riding an Atomic-typed reply) emitted
+    /// by the egress pipeline.
+    pub atomic_replies_out: AtomicU64,
     /// Deepest hold-buffer occupancy observed.
     pub hold_buffer_peak: AtomicU64,
     /// Egress messages xpams_tx looped back internally (local Short /
@@ -261,6 +267,9 @@ impl Pipeline {
         if m.handler == handler_ids::COLLECTIVE && !m.flags.is_reply() {
             stats.collectives_in.fetch_add(1, Ordering::Relaxed);
         }
+        if m.am_type == AmType::Atomic && !m.flags.is_reply() {
+            stats.atomics_in.fetch_add(1, Ordering::Relaxed);
+        }
         // Cycle accounting for the ingress pipeline.
         let will_reply = !m.flags.is_async() && !m.flags.is_reply();
         stats
@@ -298,6 +307,9 @@ impl Pipeline {
             .fetch_add(self.model.egress_cycles(&msg), Ordering::Relaxed);
         if msg.handler == handler_ids::COLLECTIVE && !msg.flags.is_reply() {
             stats.collectives_out.fetch_add(1, Ordering::Relaxed);
+        }
+        if msg.am_type == AmType::Atomic && msg.flags.is_reply() {
+            stats.atomic_replies_out.fetch_add(1, Ordering::Relaxed);
         }
         // xpams_tx: "For the special cases of Short messages and Medium FIFO
         // messages intended for local kernels, this module will route data to
@@ -543,6 +555,57 @@ mod tests {
         let stats = g.stats();
         assert_eq!(stats.collectives_in.load(Ordering::Relaxed), 1);
         assert_eq!(stats.collectives_out.load(Ordering::Relaxed), 1);
+        drop(inbox_tx);
+        g.join();
+    }
+
+    #[test]
+    fn atomic_ingress_executes_and_replies_with_old_value() {
+        use crate::am::types::AtomicOp;
+        use crate::collectives::Lane;
+        let (rt, seg, _mrx) = runtime(2);
+        let (inbox_tx, inbox_rx) = mpsc::channel();
+        let (router_tx, router_rx) = mpsc::channel();
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+
+        seg.write(64, &100u64.to_le_bytes()).unwrap();
+        let faa = AmMessage {
+            am_type: AmType::Atomic,
+            flags: AmFlags::new().with(AmFlags::HANDLE),
+            src: 5,
+            dst: 2,
+            handler: handler_ids::REPLY,
+            token: 31,
+            args: vec![],
+            desc: Descriptor::Atomic {
+                addr: 64,
+                op: AtomicOp::FaaAdd,
+                lane: Lane::U64,
+                operand: 7,
+                operand2: 0,
+            },
+            payload: vec![],
+        };
+        inbox_tx.send(Packet::new(2, 5, faa.encode().unwrap()).unwrap()).unwrap();
+
+        match router_rx.recv_timeout(Duration::from_secs(2)).unwrap() {
+            RouterMsg::FromKernel(p) => {
+                let r = AmMessage::decode(&p.data).unwrap();
+                assert_eq!(r.am_type, AmType::Atomic);
+                assert!(r.flags.is_reply() && r.flags.is_handle());
+                assert_eq!(r.token, 31);
+                let Descriptor::Atomic { operand, .. } = r.desc else {
+                    panic!("atomic reply must carry an atomic descriptor");
+                };
+                assert_eq!(operand, 100, "old value rides the reply descriptor");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(seg.read(64, 8).unwrap(), 107u64.to_le_bytes());
+
+        let stats = g.stats();
+        assert_eq!(stats.atomics_in.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.atomic_replies_out.load(Ordering::Relaxed), 1);
         drop(inbox_tx);
         g.join();
     }

@@ -47,7 +47,7 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::am::completion::AmHandle;
     pub use crate::am::handlers;
-    pub use crate::am::types::{AmFlags, AmType};
+    pub use crate::am::types::{AmFlags, AmType, AtomicOp};
     pub use crate::collectives::{CollectiveHandle, Lane, ReduceOp};
     pub use crate::config::ClusterSpec;
     pub use crate::error::{Error, Result};
@@ -55,4 +55,7 @@ pub mod prelude {
     pub use crate::memory::GlobalAddress;
     pub use crate::shoal_node::api::ShoalKernel;
     pub use crate::shoal_node::cluster::ShoalCluster;
+    pub use crate::shoal_node::rma::{
+        Chunk, Completion, FetchHandle, FetchValue, Locality, OpOptions, Rma,
+    };
 }

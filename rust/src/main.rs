@@ -102,8 +102,10 @@ fn serve(argv: &[String]) -> shoal::Result<()> {
         vec![
             opt("cluster", "cluster description file (explicit ports)", ""),
             opt("node", "node id this process hosts", "0"),
-            opt("app", "application: echo | sink | allreduce", "echo"),
+            opt("app", "application: echo | sink | allreduce | gups", "echo"),
             opt("max-msgs", "exit after this many messages per kernel (0 = run forever)", "0"),
+            opt("updates", "gups: fetch-and-adds issued per kernel", "2000"),
+            opt("table-words", "gups: 8-byte table words owned per kernel", "512"),
         ],
         argv,
     );
@@ -118,6 +120,8 @@ fn serve(argv: &[String]) -> shoal::Result<()> {
     let node_id = args.get_usize("node", 0) as u16;
     let app = args.get_or("app", "echo").to_string();
     let max_msgs = args.get_u64("max-msgs", 0);
+    let updates = args.get_usize("updates", 2000);
+    let table_words = args.get_u64("table-words", 512);
 
     let cluster = shoal::shoal_node::cluster::ShoalCluster::launch_node(&spec, node_id)?;
     let kernels = spec.kernels_on(node_id);
@@ -130,7 +134,7 @@ fn serve(argv: &[String]) -> shoal::Result<()> {
         let app = app.clone();
         let all_ids = all_ids.clone();
         cluster.run_kernel(kid, move |mut k| {
-            if app == "allreduce" {
+            if app == "allreduce" || app == "gups" {
                 // Hello/GO handshake before the collective, so no tree
                 // message ever targets a node that has not bound its
                 // transport yet (UDP has no retransmit). Kernel 0 is the
@@ -156,6 +160,20 @@ fn serve(argv: &[String]) -> shoal::Result<()> {
                             break; // kernel 0's GO
                         }
                     }
+                }
+                if app == "gups" {
+                    // Self-checking random-atomics storm over the Rma tier;
+                    // kernel_body errors if the all-reduced table sum ever
+                    // disagrees with the issued update count.
+                    let rate = shoal::apps::gups::kernel_body(
+                        &mut k,
+                        &all_ids,
+                        updates,
+                        table_words,
+                    )
+                    .unwrap();
+                    println!("serve: kernel {kid} gups {rate:.0} updates/s");
+                    return;
                 }
                 let ch = k
                     .all_reduce_u64(shoal::collectives::ReduceOp::Sum, &[k.id() as u64])

@@ -19,8 +19,11 @@
 //! (application setup time), not hot-path.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 
+use crate::am::types::AtomicOp;
+use crate::collectives::{self, Lane, ReduceOp};
 use crate::error::{Error, Result};
 
 /// A location in the global address space: byte `offset` within kernel
@@ -64,17 +67,32 @@ pub struct Segment {
 
 struct SegmentInner {
     buf: RwLock<Box<[u8]>>,
+    /// Raw pointer to the buffer's heap allocation, captured at construction
+    /// (a `Box<[u8]>`'s allocation never moves). Lets the atomic ops build
+    /// `AtomicU64` views onto segment words while holding only the *read*
+    /// lock — non-atomic writers always take the write lock, so the two
+    /// access modes never overlap on the same bytes.
+    base: *mut u8,
     /// Free-list allocator state: offset → length of free block.
     alloc: RwLock<Allocator>,
     size: usize,
 }
 
+// SAFETY: `base` is only dereferenced through the atomic-view discipline
+// documented on `atomic_view` (under the buf lock), which serializes it
+// against the RwLock-guarded accessors. The pointer itself is immutable.
+unsafe impl Send for SegmentInner {}
+unsafe impl Sync for SegmentInner {}
+
 impl Segment {
     /// Create a zero-initialized segment of `size` bytes.
     pub fn new(size: usize) -> Segment {
+        let mut buf = vec![0u8; size].into_boxed_slice();
+        let base = buf.as_mut_ptr();
         Segment {
             inner: Arc::new(SegmentInner {
-                buf: RwLock::new(vec![0u8; size].into_boxed_slice()),
+                buf: RwLock::new(buf),
+                base,
                 alloc: RwLock::new(Allocator::new(size)),
                 size,
             }),
@@ -270,6 +288,129 @@ impl Segment {
             *v = f32::from_le_bytes(buf[base + 4 * i..base + 4 * i + 4].try_into().unwrap());
         }
         Ok(())
+    }
+
+    // -- atomics ------------------------------------------------------------
+
+    /// An `AtomicU64` view of the 8-byte word at `offset`, or `None` when
+    /// the word is not naturally aligned in the heap allocation.
+    ///
+    /// SAFETY CONTRACT (private): the caller must hold the `buf` lock (read
+    /// suffices) for the lifetime of the returned reference. Non-atomic
+    /// accessors mutate only under the write lock, so a read-locked atomic
+    /// view can race only with *other atomic views* — which is exactly what
+    /// `AtomicU64` makes sound.
+    fn atomic_view(&self, offset: u64) -> Option<&AtomicU64> {
+        // `base` is non-null for any in-bounds offset (check() rejected
+        // everything if size == 0).
+        let p = unsafe { self.inner.base.add(offset as usize) };
+        if (p as usize) % std::mem::align_of::<AtomicU64>() != 0 {
+            return None;
+        }
+        // SAFETY: in-bounds (caller ran check), aligned (just tested), and
+        // data-race-free per the contract above.
+        Some(unsafe { &*(p as *const AtomicU64) })
+    }
+
+    /// Atomically read-modify-write the 8-byte word at `offset` with a
+    /// scalar [`AtomicOp`]; returns the old value. Values are read and
+    /// written little-endian, matching the wire/word order everywhere else
+    /// in the segment.
+    ///
+    /// Lock-free when the word is naturally aligned (an `AtomicU64` RMW
+    /// under the read lock, so concurrent atomics from the fast path and
+    /// the AM engine don't serialize behind each other); misaligned words
+    /// fall back to a locked RMW under the write lock. A given offset
+    /// always takes the same path, so mixed-path races cannot happen.
+    pub fn atomic_rmw(&self, offset: u64, op: AtomicOp, operand: u64, operand2: u64) -> Result<u64> {
+        if op.is_accumulate() {
+            return Err(Error::BadDescriptor(format!(
+                "accumulate op {op} on the scalar atomic path"
+            )));
+        }
+        self.check(offset, 8)?;
+        let apply = |old: u64| -> u64 {
+            match op {
+                AtomicOp::FaaAdd => old.wrapping_add(operand),
+                AtomicOp::FaaMin => old.min(operand),
+                AtomicOp::FaaMax => old.max(operand),
+                AtomicOp::FaaAnd => old & operand,
+                AtomicOp::FaaOr => old | operand,
+                AtomicOp::FaaXor => old ^ operand,
+                AtomicOp::Swap => operand,
+                AtomicOp::Cas => {
+                    if old == operand {
+                        operand2
+                    } else {
+                        old
+                    }
+                }
+                AtomicOp::AccSum | AtomicOp::AccMin | AtomicOp::AccMax => old,
+            }
+        };
+        let guard = self.inner.buf.read().unwrap();
+        if let Some(a) = self.atomic_view(offset) {
+            let raw = a
+                .fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                    Some(apply(u64::from_le(cur)).to_le())
+                })
+                .expect("fetch_update closure always returns Some");
+            drop(guard);
+            return Ok(u64::from_le(raw));
+        }
+        drop(guard);
+        let mut buf = self.inner.buf.write().unwrap();
+        let i = offset as usize;
+        let old = u64::from_le_bytes(buf[i..i + 8].try_into().unwrap());
+        let new = apply(old);
+        buf[i..i + 8].copy_from_slice(&new.to_le_bytes());
+        Ok(old)
+    }
+
+    /// Element-wise atomic accumulate: fold `data`'s 8-byte lanes into the
+    /// segment starting at `offset` with `op` over `lane`-typed elements.
+    ///
+    /// U64 lanes on aligned words run lock-free (one `AtomicU64` RMW per
+    /// lane under the read lock). F64 lanes — and misaligned U64 ranges —
+    /// take the write lock: IEEE arithmetic has no hardware RMW, and the
+    /// exclusive lock makes the read-modify-write of every lane atomic
+    /// with respect to all other segment writers.
+    pub fn accumulate(&self, offset: u64, op: ReduceOp, lane: Lane, data: &[u8]) -> Result<()> {
+        if data.is_empty() || data.len() % 8 != 0 {
+            return Err(Error::BadDescriptor(format!(
+                "accumulate payload must be a non-empty multiple of 8 B, got {}",
+                data.len()
+            )));
+        }
+        self.check(offset, data.len())?;
+        if lane == Lane::U64 {
+            let guard = self.inner.buf.read().unwrap();
+            if self.atomic_view(offset).is_some() {
+                // offset is aligned, so every 8-byte lane after it is too.
+                for (k, chunk) in data.chunks_exact(8).enumerate() {
+                    let v = u64::from_le_bytes(chunk.try_into().unwrap());
+                    let a = self
+                        .atomic_view(offset + 8 * k as u64)
+                        .expect("aligned base implies aligned lanes");
+                    a.fetch_update(Ordering::AcqRel, Ordering::Acquire, |cur| {
+                        let old = u64::from_le(cur);
+                        let new = match op {
+                            ReduceOp::Sum => old.wrapping_add(v),
+                            ReduceOp::Min => old.min(v),
+                            ReduceOp::Max => old.max(v),
+                        };
+                        Some(new.to_le())
+                    })
+                    .expect("fetch_update closure always returns Some");
+                }
+                return Ok(());
+            }
+            drop(guard);
+        }
+        // F64 lanes and misaligned U64 ranges: exclusive-lock fold.
+        let mut buf = self.inner.buf.write().unwrap();
+        let i = offset as usize;
+        collectives::combine(op, lane, &mut buf[i..i + data.len()], data)
     }
 
     // -- allocation ---------------------------------------------------------
@@ -508,6 +649,113 @@ mod tests {
             }
             live.push((off, len));
         }
+    }
+
+    #[test]
+    fn atomic_rmw_scalar_family() {
+        let s = Segment::new(256);
+        s.write(8, &5u64.to_le_bytes()).unwrap();
+        assert_eq!(s.atomic_rmw(8, AtomicOp::FaaAdd, 3, 0).unwrap(), 5);
+        assert_eq!(s.atomic_rmw(8, AtomicOp::FaaMax, 100, 0).unwrap(), 8);
+        assert_eq!(s.atomic_rmw(8, AtomicOp::FaaMin, 7, 0).unwrap(), 100);
+        assert_eq!(s.atomic_rmw(8, AtomicOp::FaaAnd, 0b110, 0).unwrap(), 7);
+        assert_eq!(s.atomic_rmw(8, AtomicOp::FaaOr, 0b1000, 0).unwrap(), 6);
+        assert_eq!(s.atomic_rmw(8, AtomicOp::FaaXor, 0b1111, 0).unwrap(), 14);
+        // 14 ^ 15 = 1.
+        assert_eq!(s.atomic_rmw(8, AtomicOp::Swap, 42, 0).unwrap(), 1);
+        // CAS success and failure both return the old value.
+        assert_eq!(s.atomic_rmw(8, AtomicOp::Cas, 42, 50).unwrap(), 42);
+        assert_eq!(s.atomic_rmw(8, AtomicOp::Cas, 42, 99).unwrap(), 50);
+        assert_eq!(s.read(8, 8).unwrap(), 50u64.to_le_bytes());
+        // Accumulate ops are rejected on the scalar path; bounds checked.
+        assert!(s.atomic_rmw(8, AtomicOp::AccSum, 1, 0).is_err());
+        assert!(s.atomic_rmw(250, AtomicOp::FaaAdd, 1, 0).is_err());
+    }
+
+    #[test]
+    fn atomic_rmw_handles_misaligned_offsets() {
+        let s = Segment::new(64);
+        // An odd offset exercises the locked fallback on any 8-aligned heap
+        // base; whichever path runs, the semantics must be identical.
+        s.write(3, &9u64.to_le_bytes()).unwrap();
+        assert_eq!(s.atomic_rmw(3, AtomicOp::FaaAdd, 1, 0).unwrap(), 9);
+        assert_eq!(s.read(3, 8).unwrap(), 10u64.to_le_bytes());
+    }
+
+    #[test]
+    fn concurrent_faa_sums_exactly() {
+        let s = Segment::new(64);
+        let threads = 8;
+        let per = 1000u64;
+        let mut hs = Vec::new();
+        for _ in 0..threads {
+            let s2 = s.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..per {
+                    s2.atomic_rmw(0, AtomicOp::FaaAdd, 1, 0).unwrap();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let v = u64::from_le_bytes(s.read(0, 8).unwrap().try_into().unwrap());
+        assert_eq!(v, threads as u64 * per);
+    }
+
+    #[test]
+    fn accumulate_u64_and_f64_lanes() {
+        let s = Segment::new(128);
+        s.write(0, &collectives::encode_u64s(&[1, 10, 100])).unwrap();
+        s.accumulate(0, ReduceOp::Sum, Lane::U64, &collectives::encode_u64s(&[2, 20, 200]))
+            .unwrap();
+        assert_eq!(
+            collectives::decode_u64s(&s.read(0, 24).unwrap()).unwrap(),
+            vec![3, 30, 300]
+        );
+        s.accumulate(0, ReduceOp::Max, Lane::U64, &collectives::encode_u64s(&[5, 25, 250]))
+            .unwrap();
+        assert_eq!(
+            collectives::decode_u64s(&s.read(0, 24).unwrap()).unwrap(),
+            vec![5, 30, 300]
+        );
+        s.write(64, &collectives::encode_f64s(&[1.5, -2.0])).unwrap();
+        s.accumulate(64, ReduceOp::Min, Lane::F64, &collectives::encode_f64s(&[0.5, 7.0]))
+            .unwrap();
+        assert_eq!(
+            collectives::decode_f64s(&s.read(64, 16).unwrap()).unwrap(),
+            vec![0.5, -2.0]
+        );
+        // Ragged or empty payloads and out-of-bounds ranges are rejected.
+        assert!(s.accumulate(0, ReduceOp::Sum, Lane::U64, &[0; 12]).is_err());
+        assert!(s.accumulate(0, ReduceOp::Sum, Lane::U64, &[]).is_err());
+        assert!(s.accumulate(124, ReduceOp::Sum, Lane::U64, &[0; 8]).is_err());
+    }
+
+    #[test]
+    fn concurrent_accumulate_sums_exactly() {
+        let s = Segment::new(64);
+        let contribution = collectives::encode_u64s(&[1, 2, 3, 4]);
+        let threads = 8;
+        let per = 500;
+        let mut hs = Vec::new();
+        for _ in 0..threads {
+            let s2 = s.clone();
+            let c = contribution.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..per {
+                    s2.accumulate(0, ReduceOp::Sum, Lane::U64, &c).unwrap();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let n = (threads * per) as u64;
+        assert_eq!(
+            collectives::decode_u64s(&s.read(0, 32).unwrap()).unwrap(),
+            vec![n, 2 * n, 3 * n, 4 * n]
+        );
     }
 
     #[test]

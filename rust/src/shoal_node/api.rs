@@ -15,6 +15,16 @@
 //! | `am_long_vectored`    | Long Vectored| kernel         | extent scatter |
 //! | `am_medium_get`       | Medium get   | remote memory  | kernel stream  |
 //! | `am_long_get`         | Long get     | remote memory  | local memory   |
+//! | `am_atomic`           | Atomic       | —              | word RMW       |
+//! | `am_accumulate`       | Atomic       | kernel         | element fold   |
+//!
+//! This is the low-level, handler-carrying tier. For plain PGAS data
+//! movement (put/get/atomic against a global address, no handler), prefer
+//! the typed one-sided tier: [`rma`](ShoalKernel::rma) returns an
+//! [`Rma`](crate::shoal_node::rma::Rma) facade whose
+//! [`OpOptions`](crate::shoal_node::rma::OpOptions) replace the
+//! `_async`/`_from_mem` variant matrix; it lowers onto exactly these
+//! builders.
 //!
 //! Completion is per operation: every `am_*` send returns an [`AmHandle`]
 //! registered in the kernel's completion table (a multi-chunk send returns
@@ -50,10 +60,10 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use crate::am::completion::{AmHandle, CompletionTable};
-use crate::am::engine::{barrier_op, BarrierState, ReceivedMedium};
+use crate::am::engine::{barrier_op, execute_atomic, BarrierState, ReceivedMedium};
 use crate::am::handlers::HandlerTable;
 use crate::am::header::AmMessage;
-use crate::am::types::{handler_ids, AmFlags, AmType};
+use crate::am::types::{handler_ids, AmFlags, AmType, AtomicOp};
 use crate::am::wire::{WireBuilder, WireDesc};
 use crate::collectives::{
     decode_f64s, decode_u64s, encode_f64s, encode_u64s, CollDesc, CollectiveHandle,
@@ -97,6 +107,13 @@ pub struct ShoalKernel {
     /// reclaims encode-failure buffers; the steady-state send cost is one
     /// exact-size allocation.
     wire_pool: BufPool,
+    /// When set, the intra-node fast path is skipped for subsequent sends —
+    /// [`Rma`](crate::shoal_node::rma::Rma) per-op locality control; also
+    /// what the benchmarks' `no_fastpath` placement measures.
+    pub(crate) force_wire: bool,
+    /// Per-operation chunk policy override ([`Rma`] `OpOptions::chunk`);
+    /// `None` defers to the cluster-wide policy.
+    pub(crate) chunk_override: Option<ChunkPolicy>,
     /// Replies consumed by previous waits (`wait_replies` shim bookkeeping).
     consumed: u64,
     /// Barrier epoch counter (local).
@@ -135,6 +152,8 @@ impl ShoalKernel {
             medium_rx,
             fastpath,
             wire_pool: BufPool::default(),
+            force_wire: false,
+            chunk_override: None,
             consumed: 0,
             epoch: 0,
             coll_seq: 0,
@@ -156,6 +175,16 @@ impl ShoalKernel {
     /// the cheap side of the PGAS local/remote distinction).
     pub fn mem(&self) -> &Segment {
         &self.segment
+    }
+
+    /// The typed one-sided tier: put/get/atomics against a
+    /// [`GlobalAddress`](crate::memory::GlobalAddress) with per-operation
+    /// [`OpOptions`](crate::shoal_node::rma::OpOptions), lowered entirely
+    /// onto the `am_*` builders (wire behavior unchanged). Borrows this
+    /// kernel mutably, so `k.rma().put(...)` interleaves freely with raw-AM
+    /// calls.
+    pub fn rma(&mut self) -> crate::shoal_node::rma::Rma<'_> {
+        crate::shoal_node::rma::Rma::new(self)
     }
 
     /// The cluster description.
@@ -264,7 +293,12 @@ impl ShoalKernel {
 
     /// The fast-path registry, cloned out so a borrowed `LocalPeer` does not
     /// pin `self` (the operations need `&mut self` for the router/pool).
+    /// Empty while `force_wire` is set: every send then takes the codec +
+    /// router path even to a same-node kernel.
     fn local(&self) -> Option<Arc<LocalFastPath>> {
+        if self.force_wire {
+            return None;
+        }
         self.fastpath.clone()
     }
 
@@ -670,7 +704,23 @@ impl ShoalKernel {
         len: usize,
         dst_addr: u64,
     ) -> Result<AmHandle> {
-        let flags = AmFlags::new();
+        self.long_from_mem_flags(dst, handler, args, src_offset, len, dst_addr, AmFlags::new())
+    }
+
+    /// [`am_long_from_mem`](Self::am_long_from_mem) with caller-chosen flags
+    /// (the [`Rma`](crate::shoal_node::rma::Rma) tier's `Completion::Async`
+    /// maps here with the ASYNC flag set).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn long_from_mem_flags(
+        &mut self,
+        dst: u16,
+        handler: u8,
+        args: &[u64],
+        src_offset: u64,
+        len: usize,
+        dst_addr: u64,
+        flags: AmFlags,
+    ) -> Result<AmHandle> {
         let plan = self.long_plan(dst, handler, args, len, dst_addr, flags)?;
         self.segment.check_range(src_offset, len)?;
         if let Some(fp) = self.local() {
@@ -691,7 +741,11 @@ impl ShoalKernel {
             }
         }
         let seg = self.segment.clone();
-        let h = self.completion.create(plan.len() as u64);
+        let h = if flags.is_async() {
+            AmHandle::completed()
+        } else {
+            self.completion.create(plan.len() as u64)
+        };
         for (off, clen, desc) in plan {
             let mut wb = WireBuilder {
                 am_type: AmType::Long,
@@ -704,7 +758,10 @@ impl ShoalKernel {
                 desc,
             };
             let chunk_base = src_offset + off; // bounds pre-checked above
-            if !self.send_tracked_with(h, &mut wb, clen, |out| seg.read_into(chunk_base, out)) {
+            if flags.is_async() {
+                self.send_wire_with(&wb, clen, |out| seg.read_into(chunk_base, out))?;
+            } else if !self.send_tracked_with(h, &mut wb, clen, |out| seg.read_into(chunk_base, out))
+            {
                 break;
             }
         }
@@ -996,6 +1053,196 @@ impl ShoalKernel {
         Ok(h)
     }
 
+    // -- atomics ---------------------------------------------------------------
+
+    /// Scalar remote atomic on the 8-byte little-endian word at `addr` in
+    /// the destination kernel's partition: FAA (add/min/max/and/or/xor),
+    /// compare-and-swap (`operand` = expected, `operand2` = replacement) or
+    /// swap. The op executes **at the target's AM engine** — serialized with
+    /// every other atomic on that word regardless of datapath — and the
+    /// pre-op value returns on the reply path into the handle; extract it
+    /// with [`wait_fetch`](Self::wait_fetch). On a same-node software
+    /// destination the op executes lock-free against the target segment and
+    /// the handle resolves (value included) at issue time.
+    pub fn am_atomic(
+        &mut self,
+        dst: u16,
+        addr: u64,
+        op: AtomicOp,
+        operand: u64,
+        operand2: u64,
+    ) -> Result<AmHandle> {
+        self.atomic_impl(dst, addr, op, operand, operand2, AmFlags::new())
+    }
+
+    /// Asynchronous scalar atomic: the update is applied at the target but
+    /// no reply is generated — the pre-op value is discarded and the
+    /// returned handle is already complete. A lost message is silently lost
+    /// (as for every async AM).
+    pub fn am_atomic_async(
+        &mut self,
+        dst: u16,
+        addr: u64,
+        op: AtomicOp,
+        operand: u64,
+        operand2: u64,
+    ) -> Result<AmHandle> {
+        self.atomic_impl(dst, addr, op, operand, operand2, AmFlags::new().with(AmFlags::ASYNC))
+    }
+
+    fn atomic_impl(
+        &mut self,
+        dst: u16,
+        addr: u64,
+        op: AtomicOp,
+        operand: u64,
+        operand2: u64,
+        flags: AmFlags,
+    ) -> Result<AmHandle> {
+        if op.is_accumulate() {
+            return Err(Error::BadDescriptor(format!(
+                "{op} carries an element-wise payload; use am_accumulate"
+            )));
+        }
+        self.spec.kernel(dst)?;
+        let mut wb = WireBuilder {
+            am_type: AmType::Atomic,
+            flags,
+            src: self.id,
+            dst,
+            handler: handler_ids::REPLY,
+            token: 0,
+            args: &[],
+            desc: WireDesc::Atomic { addr, op, lane: Lane::U64, operand, operand2 },
+        };
+        // Intra-node fast path: execute against the target segment via the
+        // same executor the ingress engine uses (lock-free for aligned
+        // words) and resolve the handle — fetched value included — at issue
+        // time. Atomics never dispatch handlers, so every local software
+        // peer is eligible, like gets.
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                return Ok(self.finish_local_atomic(
+                    execute_atomic(&peer.segment, addr, op, Lane::U64, operand, operand2, &[]),
+                    flags,
+                ));
+            }
+        }
+        if flags.is_async() {
+            self.send_wire(&wb, &[])?;
+            return Ok(AmHandle::completed());
+        }
+        let h = self.completion.create(1);
+        self.send_tracked(h, &mut wb, &[]);
+        Ok(h)
+    }
+
+    /// Element-wise remote accumulate: fold `payload` (8-byte lanes of
+    /// `lane`, reduction `op`) into the destination partition starting at
+    /// `addr`. Accumulates fetch nothing: the handle completes on the
+    /// ordinary ack (or at issue time on the fast path) and is consumed with
+    /// the plain [`wait`](Self::wait) family.
+    pub fn am_accumulate(
+        &mut self,
+        dst: u16,
+        addr: u64,
+        op: ReduceOp,
+        lane: Lane,
+        payload: &[u8],
+    ) -> Result<AmHandle> {
+        self.accumulate_impl(dst, addr, op, lane, payload, AmFlags::new())
+    }
+
+    /// Asynchronous accumulate — applied at the target, no ack.
+    pub fn am_accumulate_async(
+        &mut self,
+        dst: u16,
+        addr: u64,
+        op: ReduceOp,
+        lane: Lane,
+        payload: &[u8],
+    ) -> Result<AmHandle> {
+        self.accumulate_impl(dst, addr, op, lane, payload, AmFlags::new().with(AmFlags::ASYNC))
+    }
+
+    fn accumulate_impl(
+        &mut self,
+        dst: u16,
+        addr: u64,
+        op: ReduceOp,
+        lane: Lane,
+        payload: &[u8],
+        flags: AmFlags,
+    ) -> Result<AmHandle> {
+        self.spec.kernel(dst)?;
+        let aop = AtomicOp::accumulate(op);
+        if payload.is_empty() || payload.len() % 8 != 0 {
+            return Err(Error::BadDescriptor(format!(
+                "accumulate payload of {} bytes is not a whole number of 8-byte lanes",
+                payload.len()
+            )));
+        }
+        let mut wb = WireBuilder {
+            am_type: AmType::Atomic,
+            flags,
+            src: self.id,
+            dst,
+            handler: handler_ids::REPLY,
+            token: 0,
+            args: &[],
+            desc: WireDesc::Atomic { addr, op: aop, lane, operand: 0, operand2: 0 },
+        };
+        // Accumulates ride one AM: splitting would be semantically fine
+        // (the fold is element-wise) but would blur the one-op-one-handle
+        // failure attribution, so oversized payloads are an error.
+        if payload.len() > wb.max_payload() {
+            return Err(Error::AmTooLarge { payload: payload.len(), limit: wb.max_payload() });
+        }
+        if let Some(fp) = self.local() {
+            if let Some(peer) = fp.peer(self.node, dst) {
+                return Ok(self.finish_local_atomic(
+                    execute_atomic(&peer.segment, addr, aop, lane, 0, 0, payload),
+                    flags,
+                ));
+            }
+        }
+        if flags.is_async() {
+            self.send_wire(&wb, payload)?;
+            return Ok(AmHandle::completed());
+        }
+        let h = self.completion.create(1);
+        self.send_tracked(h, &mut wb, payload);
+        Ok(h)
+    }
+
+    /// Turn a fast-path atomic's outcome into a handle with the wire path's
+    /// shape: success resolves the handle carrying the pre-op value, failure
+    /// fails it (surfacing at `wait`/`wait_fetch` as
+    /// [`Error::OperationFailed`]), and asynchronous ops complete vacuously
+    /// either way.
+    fn finish_local_atomic(&self, outcome: Result<u64>, flags: AmFlags) -> AmHandle {
+        match outcome {
+            Ok(old) => {
+                if flags.is_async() {
+                    return AmHandle::completed();
+                }
+                let h = self.completion.create(1);
+                let t = self.completion.bind_token(h);
+                self.completion.resolve_with(t, old);
+                h
+            }
+            Err(e) => {
+                log::warn!("kernel {}: local atomic dropped: {e}", self.id);
+                if flags.is_async() {
+                    return AmHandle::completed();
+                }
+                let h = self.completion.create(1);
+                self.completion.fail(h, &format!("local atomic failed: {e}"));
+                h
+            }
+        }
+    }
+
     // -- completion ------------------------------------------------------------
 
     /// Block until `h` completes, consuming it. A failed send surfaces its
@@ -1041,6 +1288,19 @@ impl ShoalKernel {
         Ok(())
     }
 
+    /// Block until the fetch atomic `h` completes, consuming it, and return
+    /// the pre-op value of the target word. Fails with
+    /// [`Error::OperationFailed`] if the operation failed, or if `h` is not
+    /// an unconsumed fetch (accumulates and plain sends carry no value; a
+    /// value is extracted exactly once).
+    pub fn wait_fetch(&mut self, h: AmHandle) -> Result<u64> {
+        let (v, first) = self.completion.wait_value(h, self.timeout)?;
+        if first {
+            self.consumed += h.messages;
+        }
+        Ok(v)
+    }
+
     /// Block until *any* handle in `hs` completes; returns the index of the
     /// completed handle (consuming only that one). An empty slice returns
     /// [`Error::EmptyWaitSet`] immediately — nothing could ever complete.
@@ -1056,6 +1316,16 @@ impl ShoalKernel {
     /// completion model, retained as a shim over the completion table
     /// (callers sum the `AmHandle::messages` of the operations they wait
     /// on). Do not mix with handle waits *for the same operations*.
+    ///
+    /// Deprecated: counter-style completion cannot attribute a failure or a
+    /// fetched value to an operation — wait on the per-operation handles
+    /// ([`wait`](Self::wait), [`wait_all`](Self::wait_all),
+    /// [`wait_fetch`](Self::wait_fetch)) instead. The shim keeps compiling
+    /// and behaves as before; it only warns.
+    #[deprecated(
+        note = "wait on per-operation handles (wait/wait_all/wait_fetch) instead; \
+                counter-style completion cannot attribute failures or fetch results"
+    )]
     pub fn wait_replies(&mut self, n: u64) -> Result<()> {
         let target = self.consumed + n;
         self.completion.wait_total(target, self.timeout)?;
@@ -1348,7 +1618,7 @@ impl ShoalKernel {
         if len <= max {
             return Ok(vec![(0, len)]);
         }
-        match self.spec.chunk_policy {
+        match self.chunk_override.unwrap_or(self.spec.chunk_policy) {
             ChunkPolicy::Reject => Err(Error::AmTooLarge { payload: len, limit: max }),
             ChunkPolicy::Chunked => {
                 let mut out = Vec::with_capacity(len.div_ceil(max));

@@ -12,8 +12,12 @@
 //! - [`fastpath`] — the intra-node one-sided fast path: puts/gets between
 //!   same-node software kernels write/read the target segment directly and
 //!   bypass codec + router.
+//! - [`rma`] — `Rma`: the typed one-sided tier (put/get/atomics against a
+//!   `GlobalAddress` with per-op `OpOptions`), lowered entirely onto the
+//!   `am_*` builders.
 
 pub mod api;
 pub mod cluster;
 pub mod fastpath;
 pub mod handler_thread;
+pub mod rma;

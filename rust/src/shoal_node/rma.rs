@@ -1,0 +1,328 @@
+//! The typed one-sided tier: `Rma` over [`ShoalKernel`].
+//!
+//! The raw `am_*` builders expose the paper's active-message surface —
+//! handler ids, arg vectors, FIFO-vs-memory payload sourcing — which is the
+//! right tier when the destination runs a handler. But PGAS *data movement*
+//! (put/get/atomic against a global address) doesn't want a handler id or an
+//! `_async`/`_from_mem` suffix matrix; it wants an address and options. The
+//! `Rma` facade is that tier:
+//!
+//! | `Rma` call     | lowers to                              | class      |
+//! |----------------|----------------------------------------|------------|
+//! | `put`          | `am_long` / `am_long_async`            | Long       |
+//! | `put_from`     | `am_long_from_mem` (+ ASYNC flag)      | Long       |
+//! | `get`          | `am_long_get`                          | Long get   |
+//! | `faa`          | `am_atomic` (FAA family)               | Atomic     |
+//! | `cas` / `swap` | `am_atomic`                            | Atomic     |
+//! | `accumulate`   | `am_accumulate` / `am_accumulate_async`| Atomic     |
+//!
+//! Every method is implemented **entirely over the existing builders** — the
+//! wire format and remote-visible behavior are bitwise identical to calling
+//! the `am_*` tier directly. [`OpOptions`] replaces the suffix matrix:
+//! completion mode (tracked handle vs. fire-and-forget), chunking override,
+//! and datapath locality are per-call options instead of per-variant
+//! function names.
+//!
+//! Fetch atomics return a [`FetchHandle<T>`]: a completion handle whose
+//! resolution carries the target word's pre-op value, extracted exactly once
+//! with [`Rma::wait_fetch`]. A failed or lost atomic fails the owning handle
+//! like any other tracked send. Fetch ops cannot be issued fire-and-forget
+//! ([`Error::BadDescriptor`]) — with no reply there is nothing to fetch.
+
+use std::marker::PhantomData;
+
+use crate::am::completion::AmHandle;
+use crate::am::types::{handler_ids, AmFlags, AtomicOp};
+use crate::collectives::{Lane, ReduceOp};
+use crate::config::ChunkPolicy;
+use crate::error::{Error, Result};
+use crate::shoal_node::api::ShoalKernel;
+
+pub use crate::memory::GlobalAddress;
+
+/// How an `Rma` operation completes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Completion {
+    /// Tracked: the returned handle resolves when the target has acked (or
+    /// at issue time on the intra-node fast path) and composes with
+    /// `wait`/`test`/`wait_all`/`wait_any`.
+    #[default]
+    Handle,
+    /// Fire-and-forget: no reply is generated and the returned handle is
+    /// already complete. Not valid for gets or fetch atomics.
+    Async,
+}
+
+/// Per-operation chunking control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Chunk {
+    /// Defer to the cluster's [`ChunkPolicy`].
+    #[default]
+    Auto,
+    /// The transfer must fit one AM; a payload that would chunk is an
+    /// [`Error::AmTooLarge`] before anything is sent.
+    Single,
+}
+
+/// Per-operation datapath control.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Locality {
+    /// Use the intra-node fast path when the destination is eligible.
+    #[default]
+    Auto,
+    /// Always take the codec + router path, even to a same-node kernel
+    /// (deterministic datapath for benchmarking and validation).
+    Wire,
+}
+
+/// Options for one `Rma` operation — the typed replacement for the `am_*`
+/// tier's `_async` variants and cluster-global knobs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpOptions {
+    pub completion: Completion,
+    pub chunk: Chunk,
+    pub locality: Locality,
+}
+
+impl OpOptions {
+    /// Fire-and-forget completion.
+    pub fn fire_and_forget() -> OpOptions {
+        OpOptions { completion: Completion::Async, ..OpOptions::default() }
+    }
+
+    /// Require the transfer to fit a single AM.
+    pub fn single_message(mut self) -> OpOptions {
+        self.chunk = Chunk::Single;
+        self
+    }
+
+    /// Skip the intra-node fast path.
+    pub fn force_wire(mut self) -> OpOptions {
+        self.locality = Locality::Wire;
+        self
+    }
+}
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u64 {}
+    impl Sealed for f64 {}
+}
+
+/// Types a fetch atomic can resolve to: the target's 8-byte little-endian
+/// word, reinterpreted.
+pub trait FetchValue: sealed::Sealed + Copy {
+    fn from_word(w: u64) -> Self;
+}
+
+impl FetchValue for u64 {
+    fn from_word(w: u64) -> u64 {
+        w
+    }
+}
+
+impl FetchValue for f64 {
+    fn from_word(w: u64) -> f64 {
+        f64::from_bits(w)
+    }
+}
+
+/// A typed handle to an in-flight fetch atomic. `am` is an ordinary
+/// completion handle (it composes with `wait_all`/`wait_any` fences); the
+/// pre-op value itself is extracted exactly once with
+/// [`Rma::wait_fetch`] (or [`ShoalKernel::wait_fetch`] on the raw tier).
+#[derive(Clone, Copy, Debug)]
+pub struct FetchHandle<T: FetchValue> {
+    pub am: AmHandle,
+    _marker: PhantomData<T>,
+}
+
+/// The one-sided tier over a kernel; obtained from
+/// [`ShoalKernel::rma`]. Borrows the kernel mutably, so interleave freely:
+/// `k.rma().put(...)` then `k.wait(...)`.
+pub struct Rma<'k> {
+    k: &'k mut ShoalKernel,
+}
+
+impl<'k> Rma<'k> {
+    pub(crate) fn new(k: &'k mut ShoalKernel) -> Rma<'k> {
+        Rma { k }
+    }
+
+    /// Run `f` with the kernel's per-op overrides set from `opts`, restoring
+    /// them after — options are strictly per-call.
+    fn with_opts<T>(
+        &mut self,
+        opts: OpOptions,
+        f: impl FnOnce(&mut ShoalKernel) -> Result<T>,
+    ) -> Result<T> {
+        let force_wire = self.k.force_wire;
+        let chunk_override = self.k.chunk_override;
+        self.k.force_wire = force_wire || opts.locality == Locality::Wire;
+        self.k.chunk_override = match opts.chunk {
+            Chunk::Auto => chunk_override,
+            Chunk::Single => Some(ChunkPolicy::Reject),
+        };
+        let r = f(self.k);
+        self.k.force_wire = force_wire;
+        self.k.chunk_override = chunk_override;
+        r
+    }
+
+    /// Put `data` at `dst` (a Long put with no handler side effects).
+    pub fn put(&mut self, dst: GlobalAddress, data: &[u8], opts: OpOptions) -> Result<AmHandle> {
+        self.with_opts(opts, |k| match opts.completion {
+            Completion::Handle => k.am_long(dst.kernel, handler_ids::NOP, &[], data, dst.offset),
+            Completion::Async => {
+                k.am_long_async(dst.kernel, handler_ids::NOP, &[], data, dst.offset)
+            }
+        })
+    }
+
+    /// Put `len` bytes of this kernel's own partition (from `src_offset`)
+    /// at `dst` — segment-to-segment, no intermediate buffer.
+    pub fn put_from(
+        &mut self,
+        dst: GlobalAddress,
+        src_offset: u64,
+        len: usize,
+        opts: OpOptions,
+    ) -> Result<AmHandle> {
+        let flags = match opts.completion {
+            Completion::Handle => AmFlags::new(),
+            Completion::Async => AmFlags::new().with(AmFlags::ASYNC),
+        };
+        self.with_opts(opts, |k| {
+            k.long_from_mem_flags(dst.kernel, handler_ids::NOP, &[], src_offset, len, dst.offset, flags)
+        })
+    }
+
+    /// Get `len` bytes at `src` into this kernel's partition at
+    /// `local_offset`. A get always needs its data reply, so
+    /// `Completion::Async` is rejected.
+    pub fn get(
+        &mut self,
+        src: GlobalAddress,
+        local_offset: u64,
+        len: usize,
+        opts: OpOptions,
+    ) -> Result<AmHandle> {
+        if opts.completion == Completion::Async {
+            return Err(Error::BadDescriptor(
+                "a get cannot be fire-and-forget: its completion is the data reply".into(),
+            ));
+        }
+        self.with_opts(opts, |k| {
+            k.am_long_get(src.kernel, handler_ids::NOP, src.offset, len, local_offset)
+        })
+    }
+
+    /// Fetch-and-op on the word at `dst`: `op` must be of the FAA family
+    /// (add/min/max/and/or/xor). Returns a typed handle resolving to the
+    /// pre-op value.
+    pub fn faa(
+        &mut self,
+        dst: GlobalAddress,
+        op: AtomicOp,
+        operand: u64,
+        opts: OpOptions,
+    ) -> Result<FetchHandle<u64>> {
+        if matches!(op, AtomicOp::Cas | AtomicOp::Swap) || op.is_accumulate() {
+            return Err(Error::BadDescriptor(format!("{op} is not a fetch-and-op")));
+        }
+        self.fetch(dst, op, operand, 0, opts)
+    }
+
+    /// Compare-and-swap: iff the word at `dst` equals `expected`, replace it
+    /// with `desired`. The returned handle resolves to the observed value —
+    /// the CAS succeeded iff it equals `expected`.
+    pub fn cas(
+        &mut self,
+        dst: GlobalAddress,
+        expected: u64,
+        desired: u64,
+        opts: OpOptions,
+    ) -> Result<FetchHandle<u64>> {
+        self.fetch(dst, AtomicOp::Cas, expected, desired, opts)
+    }
+
+    /// Unconditionally store `value` at `dst`, resolving to the old value.
+    pub fn swap(
+        &mut self,
+        dst: GlobalAddress,
+        value: u64,
+        opts: OpOptions,
+    ) -> Result<FetchHandle<u64>> {
+        self.fetch(dst, AtomicOp::Swap, value, 0, opts)
+    }
+
+    fn fetch(
+        &mut self,
+        dst: GlobalAddress,
+        op: AtomicOp,
+        operand: u64,
+        operand2: u64,
+        opts: OpOptions,
+    ) -> Result<FetchHandle<u64>> {
+        if opts.completion == Completion::Async {
+            return Err(Error::BadDescriptor(format!(
+                "{op} fetches the old value; a fire-and-forget op has no reply to carry it \
+                 (use accumulate for reply-free updates)"
+            )));
+        }
+        let am = self.with_opts(opts, |k| {
+            k.am_atomic(dst.kernel, dst.offset, op, operand, operand2)
+        })?;
+        Ok(FetchHandle { am, _marker: PhantomData })
+    }
+
+    /// Element-wise accumulate of `data` (8-byte `lane` lanes, reduction
+    /// `op`) into the partition at `dst`. Fetches nothing; the handle is
+    /// consumed with the plain wait family.
+    pub fn accumulate(
+        &mut self,
+        dst: GlobalAddress,
+        op: ReduceOp,
+        lane: Lane,
+        data: &[u8],
+        opts: OpOptions,
+    ) -> Result<AmHandle> {
+        self.with_opts(opts, |k| match opts.completion {
+            Completion::Handle => k.am_accumulate(dst.kernel, dst.offset, op, lane, data),
+            Completion::Async => k.am_accumulate_async(dst.kernel, dst.offset, op, lane, data),
+        })
+    }
+
+    /// Block until the fetch atomic completes and return the typed pre-op
+    /// value. Extracted exactly once; a failed atomic surfaces as
+    /// [`Error::OperationFailed`].
+    pub fn wait_fetch<T: FetchValue>(&mut self, h: FetchHandle<T>) -> Result<T> {
+        self.k.wait_fetch(h.am).map(T::from_word)
+    }
+
+    /// Block until `h` completes ([`ShoalKernel::wait`] convenience, so a
+    /// put/accumulate sequence can stay on this tier).
+    pub fn wait(&mut self, h: AmHandle) -> Result<()> {
+        self.k.wait(h)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_options_builders_compose() {
+        let o = OpOptions::fire_and_forget().single_message().force_wire();
+        assert_eq!(o.completion, Completion::Async);
+        assert_eq!(o.chunk, Chunk::Single);
+        assert_eq!(o.locality, Locality::Wire);
+        assert_eq!(OpOptions::default().completion, Completion::Handle);
+    }
+
+    #[test]
+    fn fetch_values_reinterpret_the_word() {
+        assert_eq!(u64::from_word(7), 7);
+        assert_eq!(f64::from_word(1.5f64.to_bits()), 1.5);
+    }
+}

@@ -1,0 +1,289 @@
+//! Remote atomics battery: exactness under concurrency on every datapath
+//! (intra-node fast path, forced wire path, TCP, lossy reliable UDP), CAS
+//! linearizability, and the typed one-sided `Rma` tier end-to-end.
+
+use shoal::config::{ChunkPolicy, ClusterBuilder, ClusterSpec, Platform, TransportKind};
+use shoal::prelude::*;
+
+/// Handles in flight per kernel before a `wait_all` fence.
+const WINDOW: usize = 16;
+
+/// Serializes the env-writing lossy-UDP test against anything else in this
+/// binary that might read env (concurrent `setenv`/`getenv` is UB on glibc).
+static ENV_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Every kernel fires `per_kernel` tracked FAA(+1)s at kernel 0's word 0;
+/// afterwards the word must equal kernels × per_kernel exactly — a lost or
+/// double-applied atomic shows up as an off-by-n, a failed one fails its
+/// handle.
+fn concurrent_faa(cluster: &ShoalCluster, kernels: u16, per_kernel: usize, opts: OpOptions) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    for kid in 0..kernels {
+        let tx = tx.clone();
+        cluster.run_kernel(kid, move |mut k| {
+            if kid == 0 {
+                k.mem().write(0, &[0u8; 8]).unwrap();
+            }
+            k.barrier().unwrap();
+            let mut inflight: Vec<AmHandle> = Vec::new();
+            for _ in 0..per_kernel {
+                let h = k
+                    .rma()
+                    .faa(GlobalAddress::new(0, 0), AtomicOp::FaaAdd, 1, opts)
+                    .unwrap();
+                inflight.push(h.am);
+                if inflight.len() == WINDOW {
+                    k.wait_all(&inflight).unwrap();
+                    inflight.clear();
+                }
+            }
+            k.wait_all(&inflight).unwrap();
+            k.barrier().unwrap();
+            if kid == 0 {
+                let word = k.mem().read(0, 8).unwrap();
+                let sum = u64::from_le_bytes(word.try_into().unwrap());
+                assert_eq!(
+                    sum,
+                    kernels as u64 * per_kernel as u64,
+                    "concurrent FAA lost or duplicated updates"
+                );
+            }
+            tx.send(()).unwrap();
+        });
+    }
+    drop(tx);
+    for _ in 0..kernels {
+        rx.recv_timeout(std::time::Duration::from_secs(120)).expect("kernel finished");
+    }
+}
+
+#[test]
+fn concurrent_faa_exact_on_fast_path() {
+    let spec = ClusterSpec::single_node("faa", 4);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    concurrent_faa(&cluster, 4, 500, OpOptions::default());
+    cluster.join().unwrap();
+}
+
+#[test]
+fn concurrent_faa_exact_on_forced_wire_path() {
+    // Same node, but Locality::Wire pushes every atomic through codec +
+    // router + AM engine — the datapath a remote kernel would take.
+    let spec = ClusterSpec::single_node("faw", 4);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    concurrent_faa(&cluster, 4, 200, OpOptions::default().force_wire());
+    cluster.join().unwrap();
+}
+
+#[test]
+fn concurrent_faa_exact_over_tcp() {
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Tcp);
+    let n0 = b.node_at("a", Platform::Sw, "127.0.0.1:0");
+    let n1 = b.node_at("b", Platform::Sw, "127.0.0.1:0");
+    b.kernel(n0);
+    b.kernel(n0);
+    b.kernel(n1);
+    b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    concurrent_faa(&cluster, 4, 150, OpOptions::default());
+    cluster.join().unwrap();
+}
+
+#[test]
+fn concurrent_faa_exact_over_lossy_reliable_udp() {
+    // 8% injected datagram loss on every ARQ endpoint: the sliding-window
+    // retransmit layer must deliver every atomic exactly once — the sum
+    // check catches both losses and retransmit-induced double application.
+    let _env = ENV_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    std::env::set_var("SHOAL_UDP_DROP", "0.08");
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Udp);
+    b.udp_window(16).udp_retries(8);
+    let n0 = b.node_at("a", Platform::Sw, "127.0.0.1:0");
+    let n1 = b.node_at("b", Platform::Sw, "127.0.0.1:0");
+    b.kernel(n0);
+    b.kernel(n1);
+    b.kernel(n1);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    std::env::remove_var("SHOAL_UDP_DROP");
+    concurrent_faa(&cluster, 3, 60, OpOptions::default());
+    cluster.join().unwrap();
+}
+
+/// CAS linearizability on one hot word: competing kernels claim counter
+/// values with read-then-CAS loops. Linearizability means every successful
+/// CAS claims a *distinct* value, and the claimed set is exactly
+/// `0..kernels*per_kernel` with the word left at the count.
+#[test]
+fn cas_increments_linearize_on_a_hot_word() {
+    const KERNELS: u16 = 3;
+    const PER: usize = 40;
+    let spec = ClusterSpec::single_node("cas", KERNELS);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<Vec<u64>>();
+    for kid in 0..KERNELS {
+        let tx = tx.clone();
+        cluster.run_kernel(kid, move |mut k| {
+            if kid == 0 {
+                k.mem().write(0, &[0u8; 8]).unwrap();
+            }
+            k.barrier().unwrap();
+            let addr = GlobalAddress::new(0, 0);
+            let mut claimed = Vec::with_capacity(PER);
+            while claimed.len() < PER {
+                // FAA(+0) is an atomic read of the word.
+                let h = k.rma().faa(addr, AtomicOp::FaaAdd, 0, OpOptions::default()).unwrap();
+                let cur = k.wait_fetch(h.am).unwrap();
+                let h = k.rma().cas(addr, cur, cur + 1, OpOptions::default()).unwrap();
+                let seen = k.wait_fetch(h.am).unwrap();
+                if seen == cur {
+                    claimed.push(cur); // the CAS took effect at value `cur`
+                }
+            }
+            k.barrier().unwrap();
+            tx.send(claimed).unwrap();
+        });
+    }
+    drop(tx);
+    let mut all: Vec<u64> = Vec::new();
+    for _ in 0..KERNELS {
+        all.extend(rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap());
+    }
+    cluster.join().unwrap();
+    all.sort_unstable();
+    let expect: Vec<u64> = (0..KERNELS as u64 * PER as u64).collect();
+    assert_eq!(all, expect, "CAS claims must be distinct and gap-free");
+}
+
+/// The `Rma` tier end-to-end: put / get / put_from / swap round trips, the
+/// typed fetch values, and an f64 accumulate — all against real kernels.
+#[test]
+fn rma_tier_moves_data_and_fetches_old_values() {
+    let spec = ClusterSpec::single_node("rma", 2);
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let dst = GlobalAddress::new(1, 0);
+        // put then get back.
+        let h = k.rma().put(dst, &5u64.to_le_bytes(), OpOptions::default()).unwrap();
+        k.wait(h).unwrap();
+        let h = k.rma().get(dst, 256, 8, OpOptions::default()).unwrap();
+        k.wait(h).unwrap();
+        assert_eq!(k.mem().read(256, 8).unwrap(), 5u64.to_le_bytes());
+
+        // swap observes the put value; a FAA(+0) read observes the swap.
+        let h = k.rma().swap(dst, 42, OpOptions::default()).unwrap();
+        assert_eq!(k.rma().wait_fetch(h).unwrap(), 5);
+        let h = k.rma().faa(dst, AtomicOp::FaaAdd, 0, OpOptions::default()).unwrap();
+        assert_eq!(k.rma().wait_fetch(h).unwrap(), 42);
+
+        // put_from: segment-to-segment from our own partition.
+        k.mem().write(512, b"from-mem").unwrap();
+        let h = k.rma().put_from(GlobalAddress::new(1, 64), 512, 8, OpOptions::default()).unwrap();
+        k.wait(h).unwrap();
+
+        // f64 accumulate: Sum lane-wise into the peer's partition.
+        let h = k
+            .rma()
+            .put(GlobalAddress::new(1, 128), &shoal::collectives::encode_f64s(&[1.5, 2.5]), OpOptions::default())
+            .unwrap();
+        k.wait(h).unwrap();
+        let h = k
+            .rma()
+            .accumulate(
+                GlobalAddress::new(1, 128),
+                ReduceOp::Sum,
+                Lane::F64,
+                &shoal::collectives::encode_f64s(&[0.25, 0.75]),
+                OpOptions::default(),
+            )
+            .unwrap();
+        k.wait(h).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(64, 8).unwrap(), b"from-mem");
+        let acc = shoal::collectives::decode_f64s(&k.mem().read(128, 16).unwrap()).unwrap();
+        assert_eq!(acc, vec![1.75, 3.25]);
+    });
+    cluster.join().unwrap();
+}
+
+/// `OpOptions` contracts: fire-and-forget is rejected where a reply is the
+/// point (gets, fetch atomics), `Chunk::Single` overrides a chunking
+/// cluster policy with a pre-send error, and a fetched value can be
+/// extracted exactly once.
+#[test]
+fn op_options_and_fetch_contracts() {
+    let mut b = ClusterBuilder::new();
+    let n = b.node("n", Platform::Sw);
+    b.kernel(n);
+    b.kernel(n);
+    b.default_segment(256 << 10);
+    b.chunk_policy(ChunkPolicy::Chunked);
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+    cluster.run_kernel(0, |mut k| {
+        let dst = GlobalAddress::new(1, 0);
+        // Async get / async fetch atomic: rejected before anything is sent.
+        let err = k.rma().get(dst, 0, 8, OpOptions::fire_and_forget()).unwrap_err();
+        assert!(matches!(err, shoal::Error::BadDescriptor(_)), "{err}");
+        let err = k
+            .rma()
+            .faa(dst, AtomicOp::FaaAdd, 1, OpOptions::fire_and_forget())
+            .unwrap_err();
+        assert!(matches!(err, shoal::Error::BadDescriptor(_)), "{err}");
+        // CAS through the faa entry point is a usage error.
+        let err = k.rma().faa(dst, AtomicOp::Cas, 1, OpOptions::default()).unwrap_err();
+        assert!(matches!(err, shoal::Error::BadDescriptor(_)), "{err}");
+
+        // The cluster chunks 40 KiB; Chunk::Single demands one AM instead.
+        let big = vec![0xABu8; 40 << 10];
+        let h = k.rma().put(dst, &big, OpOptions::default()).unwrap();
+        assert!(h.messages > 1, "cluster policy must chunk: {}", h.messages);
+        k.wait(h).unwrap();
+        let err = k
+            .rma()
+            .put(dst, &big, OpOptions::default().single_message())
+            .unwrap_err();
+        assert!(matches!(err, shoal::Error::AmTooLarge { .. }), "{err}");
+
+        // Fetch results are single-consumption: the second extraction is a
+        // typed error, not a stale value.
+        let h = k.rma().faa(dst, AtomicOp::FaaAdd, 3, OpOptions::default()).unwrap();
+        let _ = k.wait_fetch(h.am).unwrap();
+        let err = k.wait_fetch(h.am).unwrap_err();
+        assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
+
+        // Locality::Wire on the put still lands the data (datapath choice
+        // is invisible to the memory contract).
+        let h = k
+            .rma()
+            .put(GlobalAddress::new(1, 512), &[9u8; 16], OpOptions::default().force_wire())
+            .unwrap();
+        k.wait(h).unwrap();
+        k.barrier().unwrap();
+    });
+    cluster.run_kernel(1, |mut k| {
+        k.barrier().unwrap();
+        assert_eq!(k.mem().read(512, 16).unwrap(), vec![9u8; 16]);
+    });
+    cluster.join().unwrap();
+}
+
+/// The in-process GUPS app (random Rma FAAs, windowed handles) is exact —
+/// the same body `shoal serve --app gups` runs across real processes.
+#[test]
+fn gups_app_is_exact_in_process() {
+    let r = shoal::apps::gups::run(&shoal::apps::gups::GupsConfig {
+        kernels: 4,
+        updates: 400,
+        table_words: 128,
+    })
+    .unwrap();
+    assert_eq!(r.total_updates, 1600);
+    assert!(r.updates_per_sec > 0.0);
+}

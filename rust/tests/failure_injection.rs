@@ -34,8 +34,8 @@ fn out_of_bounds_long_put_does_not_corrupt() {
         // Write far beyond k1's 1 KiB segment: rejected at the destination.
         k.am_long_async(k1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
         // A valid put afterwards still works.
-        k.am_long(k1, handlers::NOP, &[], &[2; 64], 0).unwrap();
-        k.wait_replies(1).unwrap();
+        let h = k.am_long(k1, handlers::NOP, &[], &[2; 64], 0).unwrap();
+        k.wait(h).unwrap();
         k.barrier().unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {
@@ -57,8 +57,8 @@ fn malformed_network_packet_is_dropped() {
     cluster.run_kernel(0, |mut k| {
         k.barrier().unwrap();
         // Normal traffic still works after the garbage.
-        k.am_medium(1, handlers::NOP, &[], b"after-garbage").unwrap();
-        k.wait_replies(1).unwrap();
+        let h = k.am_medium(1, handlers::NOP, &[], b"after-garbage").unwrap();
+        k.wait(h).unwrap();
     });
     cluster.run_kernel(1, |mut k| {
         k.barrier().unwrap();
@@ -120,8 +120,8 @@ fn hw_udp_fragmentation_refused() {
     let cluster = ShoalCluster::launch(&spec).unwrap();
     cluster.run_kernel(k0, move |mut k| {
         // Small payload crosses fine.
-        k.am_medium(k1, handlers::NOP, &[], &[1; 256]).unwrap();
-        k.wait_replies(1).unwrap();
+        let h = k.am_medium(k1, handlers::NOP, &[], &[1; 256]).unwrap();
+        k.wait(h).unwrap();
         // A 2 KiB payload exceeds the MTU: the hardware UDP core drops it.
         // The router logs the egress failure; the send itself returns Ok
         // because the API handed the packet to the middleware (asynchronous
@@ -130,8 +130,8 @@ fn hw_udp_fragmentation_refused() {
         k.am_medium_async(k1, handlers::NOP, &[], &[2; 2048]).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(100));
         // Traffic continues to flow afterwards.
-        k.am_medium(k1, handlers::NOP, &[], &[3; 128]).unwrap();
-        k.wait_replies(1).unwrap();
+        let h = k.am_medium(k1, handlers::NOP, &[], &[3; 128]).unwrap();
+        k.wait(h).unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {
         let a = k.recv_medium().unwrap();

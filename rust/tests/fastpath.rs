@@ -13,6 +13,7 @@ use shoal::prelude::*;
 /// complete at issue time — `test` succeeds without any waiting, which is
 /// only possible if the operation never entered the router round trip.
 #[test]
+#[allow(deprecated)] // deliberately exercises the wait_replies shim alongside handles
 fn long_put_completes_at_issue_time() {
     let spec = ClusterSpec::single_node("n", 2);
     let cluster = ShoalCluster::launch(&spec).unwrap();
@@ -161,6 +162,7 @@ fn medium_put_with_user_handler_keeps_payload() {
 /// the default Reject policy errors locally too, and a chunked local put
 /// still reports per-chunk `messages` for the shim bookkeeping.
 #[test]
+#[allow(deprecated)] // checks the shim counter is credited for local chunked puts
 fn size_policies_apply_locally() {
     let spec = ClusterSpec::single_node("n", 2);
     let cluster = ShoalCluster::launch(&spec).unwrap();

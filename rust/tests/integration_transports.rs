@@ -39,24 +39,24 @@ fn exchange_with_batching(
     cluster.run_kernel(k0, move |mut k| {
         // Ping-pong 20 messages.
         for i in 0..20u64 {
-            k.am_medium(k1, handlers::NOP, &[i], &[i as u8; 64]).unwrap();
-            k.wait_replies(1).unwrap();
+            let h = k.am_medium(k1, handlers::NOP, &[i], &[i as u8; 64]).unwrap();
+            k.wait(h).unwrap();
             let pong = k.recv_medium().unwrap();
             assert_eq!(pong.args, vec![i + 100]);
         }
         // A long put and read-back via get.
-        k.am_long(k1, handlers::NOP, &[], &[0xEE; 777], 1000).unwrap();
-        k.wait_replies(1).unwrap();
+        let put = k.am_long(k1, handlers::NOP, &[], &[0xEE; 777], 1000).unwrap();
+        k.wait(put).unwrap();
         let r = k.am_long_get(k1, handlers::NOP, 1000, 777, 0).unwrap();
-        k.wait_replies(r.messages).unwrap();
+        k.wait(r).unwrap();
         assert_eq!(k.mem().read(0, 777).unwrap(), vec![0xEE; 777]);
         k.barrier().unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {
         for _ in 0..20 {
             let ping = k.recv_medium().unwrap();
-            k.am_medium(k0, handlers::NOP, &[ping.args[0] + 100], b"pong").unwrap();
-            k.wait_replies(1).unwrap();
+            let h = k.am_medium(k0, handlers::NOP, &[ping.args[0] + 100], b"pong").unwrap();
+            k.wait(h).unwrap();
         }
         k.barrier().unwrap();
     });
@@ -130,11 +130,10 @@ fn tcp_all_to_all() {
     for &kid in &kernels {
         let peers = kernels.clone();
         cluster.run_kernel(kid, move |mut k| {
-            let mut expected_replies = 0;
+            let mut handles = Vec::new();
             for &p in &peers {
                 if p != kid {
-                    k.am_medium(p, handlers::NOP, &[kid as u64], &[kid as u8]).unwrap();
-                    expected_replies += 1;
+                    handles.push(k.am_medium(p, handlers::NOP, &[kid as u64], &[kid as u8]).unwrap());
                 }
             }
             // Receive from everyone else.
@@ -144,7 +143,7 @@ fn tcp_all_to_all() {
                 assert_eq!(m.payload, vec![m.src as u8]);
                 assert!(seen.insert(m.src), "duplicate from {}", m.src);
             }
-            k.wait_replies(expected_replies).unwrap();
+            k.wait_all(&handles).unwrap();
             k.barrier().unwrap();
         });
     }
@@ -163,10 +162,10 @@ fn gascore_internal_routing_for_local_fifo() {
     let spec = b.build().unwrap();
     let cluster = ShoalCluster::launch(&spec).unwrap();
     cluster.run_kernel(k0, move |mut k| {
-        for i in 0..10u64 {
-            k.am_medium(k1, handlers::NOP, &[i], &[i as u8; 32]).unwrap();
-        }
-        k.wait_replies(10).unwrap();
+        let handles: Vec<AmHandle> = (0..10u64)
+            .map(|i| k.am_medium(k1, handlers::NOP, &[i], &[i as u8; 32]).unwrap())
+            .collect();
+        k.wait_all(&handles).unwrap();
         k.barrier().unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {
@@ -194,8 +193,8 @@ fn gascore_long_locals_not_internal() {
     let spec = b.build().unwrap();
     let cluster = ShoalCluster::launch(&spec).unwrap();
     cluster.run_kernel(k0, move |mut k| {
-        k.am_long(k1, handlers::NOP, &[], &[7; 128], 64).unwrap();
-        k.wait_replies(1).unwrap();
+        let h = k.am_long(k1, handlers::NOP, &[], &[7; 128], 64).unwrap();
+        k.wait(h).unwrap();
         k.barrier().unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {
@@ -217,10 +216,10 @@ fn router_stats_count_traffic() {
     let spec = b.build().unwrap();
     let cluster = ShoalCluster::launch(&spec).unwrap();
     cluster.run_kernel(k0, move |mut k| {
-        for _ in 0..10 {
-            k.am_medium(k1, handlers::NOP, &[], b"x").unwrap();
-        }
-        k.wait_replies(10).unwrap();
+        let handles: Vec<AmHandle> = (0..10)
+            .map(|_| k.am_medium(k1, handlers::NOP, &[], b"x").unwrap())
+            .collect();
+        k.wait_all(&handles).unwrap();
         k.barrier().unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {

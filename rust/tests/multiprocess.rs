@@ -65,6 +65,30 @@ fn spawn_server(path: &std::path::Path, node: u16, app: &str, max_msgs: u64) -> 
         .expect("spawn shoal serve")
 }
 
+/// Like `spawn_server` but for the gups app, which takes its workload shape
+/// on the command line; driver and servers must agree on `--updates` or the
+/// app's own exactness fold fails.
+fn spawn_gups_server(path: &std::path::Path, node: u16, updates: usize, table_words: u64) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_shoal"))
+        .args([
+            "serve",
+            "--cluster",
+            path.to_str().unwrap(),
+            "--node",
+            &node.to_string(),
+            "--app",
+            "gups",
+            "--updates",
+            &updates.to_string(),
+            "--table-words",
+            &table_words.to_string(),
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shoal serve --app gups")
+}
+
 #[test]
 fn two_process_echo_over_tcp() {
     let _guard = PORT_LOCK.lock().unwrap();
@@ -89,11 +113,12 @@ fn two_process_echo_over_tcp() {
     cluster.run_kernel(0, move |mut k| {
         for target in [1u16, 2] {
             for i in 0..MSGS {
-                k.am_medium(target, handlers::NOP, &[i], format!("msg-{i}").as_bytes())
+                let h = k
+                    .am_medium(target, handlers::NOP, &[i], format!("msg-{i}").as_bytes())
                     .unwrap();
                 // Echo comes back asynchronously on our stream; the put
                 // itself is acked.
-                k.wait_replies(1).unwrap();
+                k.wait(h).unwrap();
                 let echo = k.recv_medium().unwrap();
                 assert_eq!(echo.src, target);
                 assert_eq!(echo.args, vec![i]);
@@ -157,6 +182,58 @@ fn cross_transport_all_reduce() {
         cluster.join().unwrap();
 
         let status = server.wait().expect("server exits after the collective");
+        assert!(status.success(), "server exit over {transport}: {status:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// Cross-process remote atomics: `shoal serve --app gups` hosts node 1's two
+/// kernels while this process hosts node 0 (kernel 0, the handshake
+/// coordinator); all three kernels hammer each other's tables with windowed
+/// fetch-and-adds through the Rma tier, then the app's own all-reduce fold
+/// asserts not one update was lost or double-applied — over TCP and UDP.
+#[test]
+fn cross_transport_gups() {
+    const UPDATES: usize = 600;
+    const TABLE_WORDS: u64 = 256;
+    for transport in ["tcp", "udp"] {
+        let _guard = PORT_LOCK.lock().unwrap();
+        let (p0, p1) = free_ports();
+        let text = cluster_file(transport, p0, p1);
+        let spec = parse_cluster(&text).unwrap();
+
+        let dir = std::env::temp_dir().join(format!("shoal-mp-gups-{transport}-{p0}-{p1}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cluster.toml");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+        drop(f);
+
+        let mut server = spawn_gups_server(&path, 1, UPDATES, TABLE_WORDS);
+        let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
+        let (tx, rx) = std::sync::mpsc::channel();
+        cluster.run_kernel(0, move |mut k| {
+            // Same readiness handshake as the allreduce app: gups opens with
+            // a barrier, and a barrier message to an unbound UDP port would
+            // be lost with no retransmit.
+            let mut seen = std::collections::HashSet::new();
+            while seen.len() < 2 {
+                seen.insert(k.recv_medium().unwrap().src);
+            }
+            for kid in [1u16, 2] {
+                k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+            }
+            let rate = shoal::apps::gups::kernel_body(&mut k, &[0, 1, 2], UPDATES, TABLE_WORDS)
+                .expect("gups exactness fold");
+            tx.send(rate).unwrap();
+        });
+        let rate = rx
+            .recv_timeout(std::time::Duration::from_secs(120))
+            .unwrap_or_else(|_| panic!("gups over {transport} timed out"));
+        assert!(rate > 0.0, "gups rate over {transport}");
+        cluster.join().unwrap();
+
+        let status = server.wait().expect("server exits after the fold");
         assert!(status.success(), "server exit over {transport}: {status:?}");
         std::fs::remove_dir_all(&dir).ok();
     }

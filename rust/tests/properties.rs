@@ -4,7 +4,8 @@
 //! cases with failing-seed reporting (`SHOAL_PROP_SEED` to replay).
 
 use shoal::am::header::{AmMessage, Descriptor, MAX_VECTORED};
-use shoal::am::types::{AmFlags, AmType};
+use shoal::am::types::{AmFlags, AmType, AtomicOp};
+use shoal::collectives::Lane;
 use shoal::collectives::{CollectiveTree, ReduceOp, TreeKind};
 use shoal::galapagos::packet::{Packet, MAX_PAYLOAD_BYTES};
 use shoal::galapagos::router::RoutingTable;
@@ -22,6 +23,7 @@ fn random_am(rng: &mut Rng) -> AmMessage {
         AmType::Long,
         AmType::LongStrided,
         AmType::LongVectored,
+        AmType::Atomic,
     ]);
     let mut flags = AmFlags::new();
     if rng.chance(0.3) {
@@ -95,6 +97,41 @@ fn random_am(rng: &mut Rng) -> AmMessage {
             let total: usize = entries.iter().map(|(_, l)| *l as usize).sum();
             (Descriptor::Vectored { entries }, rng.bytes(total), flags)
         }
+        AmType::Atomic => {
+            // Scalar ops carry no payload (U64 lane); accumulates carry a
+            // non-empty multiple-of-8 element vector in either lane.
+            let op = *rng.pick(&[
+                AtomicOp::FaaAdd,
+                AtomicOp::FaaMin,
+                AtomicOp::FaaMax,
+                AtomicOp::FaaAnd,
+                AtomicOp::FaaOr,
+                AtomicOp::FaaXor,
+                AtomicOp::Cas,
+                AtomicOp::Swap,
+                AtomicOp::AccSum,
+                AtomicOp::AccMin,
+                AtomicOp::AccMax,
+            ]);
+            let (lane, payload) = if op.is_accumulate() {
+                let lane = *rng.pick(&[Lane::U64, Lane::F64]);
+                let words = rng.range(1, 64) as usize;
+                (lane, rng.bytes(words * 8))
+            } else {
+                (Lane::U64, vec![])
+            };
+            (
+                Descriptor::Atomic {
+                    addr: rng.below(1 << 30),
+                    op,
+                    lane,
+                    operand: rng.next_u64(),
+                    operand2: rng.next_u64(),
+                },
+                payload,
+                flags,
+            )
+        }
     };
 
     AmMessage {
@@ -161,6 +198,7 @@ fn prop_reply_token_flags_class_roundtrip() {
             AmType::Long,
             AmType::LongStrided,
             AmType::LongVectored,
+            AmType::Atomic,
         ] {
             let mut flags = AmFlags::new();
             if rng.chance(0.5) {
@@ -190,6 +228,18 @@ fn prop_reply_token_flags_class_roundtrip() {
                 AmType::LongVectored => (
                     Descriptor::Vectored { entries: vec![(rng.below(1 << 20), 32)] },
                     rng.bytes(32),
+                ),
+                // The fetch-reply path rides on these exact bits: a mangled
+                // token or HANDLE flag orphans the FetchHandle.
+                AmType::Atomic => (
+                    Descriptor::Atomic {
+                        addr: rng.below(1 << 20),
+                        op: *rng.pick(&[AtomicOp::FaaAdd, AtomicOp::Cas, AtomicOp::Swap]),
+                        lane: Lane::U64,
+                        operand: rng.next_u64(),
+                        operand2: rng.next_u64(),
+                    },
+                    Vec::new(),
                 ),
             };
             let msg = AmMessage {
@@ -546,11 +596,11 @@ fn prop_random_put_sequences_reach_consistent_state() {
         }
         let ops2 = ops.clone();
         cluster.run_kernel(0, move |mut k| {
-            let mut outstanding = 0;
+            let mut handles = Vec::new();
             for (off, data) in &ops2 {
-                outstanding += k.am_long(1, handlers::NOP, &[], data, *off).unwrap().messages;
+                handles.push(k.am_long(1, handlers::NOP, &[], data, *off).unwrap());
             }
-            k.wait_replies(outstanding).unwrap();
+            k.wait_all(&handles).unwrap();
             k.barrier().unwrap();
         });
         let (tx, rx) = std::sync::mpsc::channel();

@@ -88,10 +88,10 @@ fn gascore_cycle_stats_feed_model_scale() {
     let spec = b.build().unwrap();
     let cluster = ShoalCluster::launch(&spec).unwrap();
     cluster.run_kernel(k0, move |mut k| {
-        for _ in 0..100 {
-            k.am_long(k1, handlers::NOP, &[], &[7; 1024], 0).unwrap();
-        }
-        k.wait_replies(100).unwrap();
+        let handles: Vec<AmHandle> = (0..100)
+            .map(|_| k.am_long(k1, handlers::NOP, &[], &[7; 1024], 0).unwrap())
+            .collect();
+        k.wait_all(&handles).unwrap();
         k.barrier().unwrap();
     });
     cluster.run_kernel(k1, move |mut k| {
