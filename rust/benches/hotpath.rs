@@ -10,6 +10,8 @@
 //! - intra-node one-sided put vs the loopback-router path (`local_put`
 //!   stage)
 //! - TCP egress datapath: unbatched vs coalesced small-message send rate
+//! - router fan-out: `router_shards = 4` vs a single reactor, 4 producers
+//!   to 16 peers over the in-process fabric (`router` stage)
 //! - PGAS segment read/write bandwidth (incl. strided)
 //! - in-process Medium round trip (API → router → handler → reply)
 //! - in-process Long-put throughput
@@ -47,7 +49,7 @@ use shoal::bench::micro::{
 };
 use shoal::bench::report;
 use shoal::galapagos::packet::Packet;
-use shoal::galapagos::router::RouterMsg;
+use shoal::galapagos::router::{RouterHandle, RouterMsg};
 use shoal::galapagos::transport::arq::{ArqConfig, ArqEndpoint};
 use shoal::galapagos::transport::batch::BufPool;
 use shoal::galapagos::transport::tcp::{TcpEgress, TcpIngress};
@@ -78,7 +80,8 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
 /// unbatched path.
 fn tcp_send_rate(batch: Option<(usize, usize)>, msgs: usize) -> f64 {
     let (tx, rx) = std::sync::mpsc::channel();
-    let mut ingress = TcpIngress::bind("127.0.0.1:0", tx).expect("bind loopback");
+    let mut ingress =
+        TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).expect("bind loopback");
     let addr = ingress.local_addr().to_string();
 
     // Drain received packets so socket buffers never stall the sender;
@@ -169,16 +172,21 @@ fn udp_send_rate(reliable: bool, msgs: usize) -> f64 {
         _keep_ack_rx = Some(ack_rx); // keep the channel open for the bench's life
         let a = UdpIngress::start_with_reliability(
             tx_sock.try_clone().unwrap(),
-            ack_tx,
+            RouterHandle::single(ack_tx),
             false,
             Some(std::sync::Arc::clone(&sender_ep)),
         )
         .expect("ack ingress");
-        let b = UdpIngress::start_with_reliability(rx_sock, tx, false, Some(recv_ep))
-            .expect("rx ingress");
+        let b = UdpIngress::start_with_reliability(
+            rx_sock,
+            RouterHandle::single(tx),
+            false,
+            Some(recv_ep),
+        )
+        .expect("rx ingress");
         (Some(sender_ep), vec![a, b])
     } else {
-        let b = UdpIngress::start(rx_sock, tx, false).expect("rx ingress");
+        let b = UdpIngress::start(rx_sock, RouterHandle::single(tx), false).expect("rx ingress");
         (None, vec![b])
     };
 
@@ -227,6 +235,91 @@ fn udp_send_rate(reliable: bool, msgs: usize) -> f64 {
     if sender_ep.is_some() {
         assert_eq!(received, expected, "reliable UDP lost messages");
     }
+    rate
+}
+
+/// Time the router fan-out stage: 4 producer threads pushing 64 B packets
+/// through one node's router reactor(s) to 16 single-kernel peer nodes over
+/// the in-process Local fabric; returns messages/second (measured until the
+/// last packet is *delivered*, not merely enqueued). The peers are faked as
+/// `RouterHandle::single` registrations with counting drain threads, so the
+/// measured cost is exactly the handoff-queue → reactor → egress datapath
+/// that `router_shards` parallelizes.
+fn router_fanout_rate(shards: usize, total_msgs: usize) -> f64 {
+    use shoal::config::{ClusterBuilder, Platform, TransportKind};
+    use shoal::galapagos::node::BoundNode;
+    use shoal::galapagos::transport::local::LocalFabric;
+
+    const PEERS: u16 = 16;
+    const SENDERS: usize = 4;
+    assert_eq!(total_msgs % (SENDERS * PEERS as usize), 0);
+
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Local);
+    b.router_shards(shards);
+    let mut kernel_of_node = Vec::new();
+    for i in 0..=PEERS {
+        let n = b.node(&format!("n{i}"), Platform::Sw);
+        kernel_of_node.push(b.kernel(n));
+    }
+    let spec = b.build().expect("fan-out spec");
+
+    // Only the hub (node 0) runs real reactors; each peer is a registered
+    // handle draining into a counter.
+    let fabric = LocalFabric::new();
+    let per_peer = total_msgs / PEERS as usize;
+    let mut drains = Vec::new();
+    for peer in 1..=PEERS {
+        let (tx, rx) = std::sync::mpsc::channel();
+        fabric.register(peer, RouterHandle::single(tx));
+        drains.push(std::thread::spawn(move || {
+            let mut n = 0usize;
+            while n < per_peer {
+                match rx.recv_timeout(std::time::Duration::from_secs(30)) {
+                    Ok(RouterMsg::FromNetwork(_)) => n += 1,
+                    Ok(_) => {}
+                    Err(_) => break,
+                }
+            }
+            n
+        }));
+    }
+    let hub_kernel = kernel_of_node[0];
+    let (hub_tx, _hub_rx) = std::sync::mpsc::channel();
+    let mut node = BoundNode::bind(&spec, 0)
+        .expect("bind hub")
+        .start_with_delivery(HashMap::new(), &fabric, HashMap::from([(hub_kernel, hub_tx)]))
+        .expect("start hub");
+    assert_eq!(node.shard_count(), shards, "spec shard count must be in effect");
+
+    let t0 = Instant::now();
+    let senders: Vec<_> = (0..SENDERS)
+        .map(|s| {
+            let handle = node.router_handle();
+            let dests = kernel_of_node[1..].to_vec();
+            let per_sender = total_msgs / SENDERS;
+            std::thread::spawn(move || {
+                let payload = vec![0xA5u8; 64];
+                for i in 0..per_sender {
+                    // Offset by the sender index so every peer receives the
+                    // same share regardless of SENDERS/PEERS interleaving.
+                    let dst = dests[(i + s) % dests.len()];
+                    let pkt = Packet::new(dst, hub_kernel, payload.clone()).unwrap();
+                    handle.from_kernel(pkt).expect("router alive");
+                }
+            })
+        })
+        .collect();
+    for s in senders {
+        s.join().expect("sender thread");
+    }
+    let mut delivered = 0usize;
+    for d in drains {
+        delivered += d.join().expect("drain thread");
+    }
+    let rate = total_msgs as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(delivered, total_msgs, "router fan-out lost packets");
+    node.shutdown();
     rate
 }
 
@@ -436,6 +529,35 @@ fn main() {
     );
     if !ok {
         failed_checks.push("reliable UDP below 0.8x raw UDP send rate");
+    }
+
+    println!("== hotpath: router fan-out (4 producers -> 16 peers, 64 B) ==");
+    let fan_msgs = if quick { 40_000 } else { 400_000 };
+    let single = router_fanout_rate(1, fan_msgs);
+    println!("  single router (router_shards = 1)      {:>12.0} msgs/s", single);
+    let sharded = router_fanout_rate(4, fan_msgs);
+    println!("  sharded routers (router_shards = 4)    {:>12.0} msgs/s", sharded);
+    let fan_ratio = sharded / single;
+    println!("      -> sharding speedup {fan_ratio:.2}×");
+    let mut rcsv = Table::new("hotpath router stage").header(["stage", "value", "unit"]);
+    for (name, v, unit) in [
+        ("router_single", single, "msgs/s"),
+        ("router_sharded4", sharded, "msgs/s"),
+        ("router_shard_speedup", fan_ratio, "x"),
+    ] {
+        rcsv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+        csv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+    }
+    if let Ok(p) = report::save_csv(&rcsv, "hotpath_router") {
+        println!("  csv: {}", p.display());
+    }
+    let ok = fan_ratio >= 1.5;
+    println!(
+        "  [{}] 4-shard fan-out ≥1.5× the single-router rate at 16 peers",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push("4-shard router fan-out below 1.5x the single-router rate");
     }
 
     println!("== hotpath: PGAS segment ==");

@@ -130,6 +130,12 @@ pub struct ClusterSpec {
     /// bench's baseline, and for programs that rely on queued-AM ordering
     /// between local puts and other in-flight AMs).
     pub local_fastpath: bool,
+    /// Router shards per node: each shard is its own reactor thread owning
+    /// a destination-hashed, disjoint subset of peer nodes (its own egress
+    /// staging, connections/ARQ windows and timers). Default
+    /// `min(4, cores)`; `1` reproduces the paper's single-router behavior
+    /// exactly. Overridable at launch with `SHOAL_ROUTER_SHARDS`.
+    pub router_shards: usize,
 }
 
 /// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
@@ -152,6 +158,20 @@ pub const DEFAULT_UDP_RETRIES: u32 = 6;
 
 /// Default standalone-ACK delay (milliseconds).
 pub const DEFAULT_UDP_ACK_INTERVAL_MS: u64 = 2;
+
+/// Hard cap on `router_shards`: beyond this the per-shard threads cost more
+/// than the hashing spreads.
+pub const MAX_ROUTER_SHARDS: usize = 64;
+
+/// Default router shard count: `min(4, cores)` — enough to take the router
+/// off the critical path on a multicore host without spawning threads a
+/// small machine can't run.
+pub fn default_router_shards() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .clamp(1, 4)
+}
 
 impl ClusterSpec {
     /// A single software node with `kernels` kernels — the simplest cluster.
@@ -206,6 +226,22 @@ impl ClusterSpec {
         Ok(self.node_of(a)? == self.node_of(b)?)
     }
 
+    /// The shard count nodes actually launch with: the spec's
+    /// `router_shards`, unless `SHOAL_ROUTER_SHARDS` overrides it (so CI
+    /// and operators can force a count without editing cluster files).
+    /// Invalid or out-of-range env values are ignored with a warning.
+    pub fn effective_router_shards(&self) -> usize {
+        if let Ok(v) = std::env::var("SHOAL_ROUTER_SHARDS") {
+            match v.parse::<usize>() {
+                Ok(n) if (1..=MAX_ROUTER_SHARDS).contains(&n) => return n,
+                _ => log::warn!(
+                    "ignoring SHOAL_ROUTER_SHARDS={v:?} (want 1..={MAX_ROUTER_SHARDS})"
+                ),
+            }
+        }
+        self.router_shards
+    }
+
     /// Validate internal consistency (unique ids, kernels map to nodes,
     /// addresses present when a network transport is selected).
     pub fn validate(&self) -> Result<()> {
@@ -251,6 +287,12 @@ impl ClusterSpec {
                 self.udp_window
             )));
         }
+        if self.router_shards == 0 || self.router_shards > MAX_ROUTER_SHARDS {
+            return Err(Error::Config(format!(
+                "router_shards of {} is out of range (1..={MAX_ROUTER_SHARDS})",
+                self.router_shards
+            )));
+        }
         Ok(())
     }
 }
@@ -271,6 +313,7 @@ pub struct ClusterBuilder {
     udp_retries: u32,
     udp_ack_interval_ms: u64,
     local_fastpath: bool,
+    router_shards: usize,
 }
 
 impl ClusterBuilder {
@@ -283,6 +326,7 @@ impl ClusterBuilder {
             udp_retries: DEFAULT_UDP_RETRIES,
             udp_ack_interval_ms: DEFAULT_UDP_ACK_INTERVAL_MS,
             local_fastpath: true,
+            router_shards: default_router_shards(),
             ..Default::default()
         }
     }
@@ -378,6 +422,12 @@ impl ClusterBuilder {
         self
     }
 
+    /// Router shards per node (`1` = the paper's single router thread).
+    pub fn router_shards(&mut self, shards: usize) -> &mut Self {
+        self.router_shards = shards;
+        self
+    }
+
     pub fn build(self) -> Result<ClusterSpec> {
         let spec = ClusterSpec {
             nodes: self.nodes,
@@ -393,6 +443,7 @@ impl ClusterBuilder {
             udp_retries: self.udp_retries,
             udp_ack_interval_ms: self.udp_ack_interval_ms,
             local_fastpath: self.local_fastpath,
+            router_shards: self.router_shards,
         };
         spec.validate()?;
         Ok(spec)
@@ -513,5 +564,29 @@ mod tests {
         b.kernel(0);
         b.batch_max_msgs(0);
         assert!(matches!(b.build(), Err(Error::Config(_))));
+    }
+
+    #[test]
+    fn router_shards_defaults_to_min_4_cores() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert_eq!(s.router_shards, default_router_shards());
+        assert!((1..=4).contains(&s.router_shards));
+    }
+
+    #[test]
+    fn router_shards_roundtrips_and_validates() {
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.router_shards(8);
+        assert_eq!(b.build().unwrap().router_shards, 8);
+
+        for bad in [0, MAX_ROUTER_SHARDS + 1] {
+            let mut b = ClusterBuilder::new();
+            b.node("x", Platform::Sw);
+            b.kernel(0);
+            b.router_shards(bad);
+            assert!(matches!(b.build(), Err(Error::Config(_))), "router_shards={bad}");
+        }
     }
 }

@@ -12,6 +12,7 @@
 //! batch_max_msgs = 64          # flush after this many staged messages
 //! flush_on_idle = true         # drain staged batches when routers idle
 //! local_fastpath = true        # intra-node one-sided puts/gets bypass the router
+//! router_shards = 4            # reactor threads per node; 1 = single router
 //!
 //! [[node]]
 //! name = "cpu0"
@@ -72,6 +73,7 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     let mut udp_retries: Option<u32> = None;
     let mut udp_ack_interval: Option<u64> = None;
     let mut local_fastpath: Option<bool> = None;
+    let mut router_shards: Option<usize> = None;
     let mut nodes: Vec<NodeSec> = Vec::new();
     let mut kernels: Vec<KernelSec> = Vec::new();
 
@@ -178,6 +180,10 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
                         _ => return Err(err("local_fastpath must be true or false")),
                     })
                 }
+                "router_shards" => {
+                    router_shards =
+                        Some(value.parse().map_err(|_| err("router_shards must be an integer"))?)
+                }
                 k => return Err(err(&format!("unknown top-level key '{k}'"))),
             },
             Section::Node(n) => match key {
@@ -225,6 +231,9 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     }
     if let Some(on) = local_fastpath {
         b.local_fastpath(on);
+    }
+    if let Some(s) = router_shards {
+        b.router_shards(s);
     }
 
     let mut node_ids: Vec<(String, u16)> = Vec::new();
@@ -415,5 +424,17 @@ segment = 4096
                 .unwrap();
         assert_eq!(raw.udp_window, 0);
         assert!(parse_cluster("udp_retries = \"many\"\n[[node]]\nname = \"a\"").is_err());
+    }
+
+    #[test]
+    fn parses_router_shards_knob() {
+        let base = "\n[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        let s = parse_cluster(&format!("router_shards = 8{base}")).unwrap();
+        assert_eq!(s.router_shards, 8);
+        // Default when unspecified: min(4, cores).
+        let d = parse_cluster("[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n").unwrap();
+        assert_eq!(d.router_shards, crate::config::default_router_shards());
+        assert!(parse_cluster(&format!("router_shards = \"many\"{base}")).is_err());
+        assert!(parse_cluster(&format!("router_shards = 0{base}")).is_err());
     }
 }

@@ -6,32 +6,30 @@
 //! `send` goes to the node router, `recv` is this kernel's inbox, filled by
 //! the router (SW nodes) or the GAScore (HW nodes).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::Duration;
 
 use super::packet::Packet;
 use crate::error::{Error, Result};
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::RouterHandle;
 
 /// The stream pair a kernel uses to communicate.
 pub struct GalapagosInterface {
     /// This kernel's id (destination addressing uses globally unique ids).
     pub kernel_id: u16,
-    to_router: Sender<RouterMsg>,
+    to_router: RouterHandle,
     inbox: Receiver<Packet>,
 }
 
 impl GalapagosInterface {
-    pub(crate) fn new(kernel_id: u16, to_router: Sender<RouterMsg>, inbox: Receiver<Packet>) -> Self {
+    pub(crate) fn new(kernel_id: u16, to_router: RouterHandle, inbox: Receiver<Packet>) -> Self {
         Self { kernel_id, to_router, inbox }
     }
 
     /// Send a packet toward its destination kernel (local or remote — the
-    /// router decides).
+    /// shard owning the destination decides).
     pub fn send(&self, pkt: Packet) -> Result<()> {
-        self.to_router
-            .send(RouterMsg::FromKernel(pkt))
-            .map_err(|_| Error::Disconnected("router"))
+        self.to_router.from_kernel(pkt)
     }
 
     /// Blocking receive.
@@ -63,12 +61,13 @@ impl GalapagosInterface {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc;
+    use crate::galapagos::router::RouterMsg;
+    use std::sync::mpsc::{self, Sender};
 
     fn pair() -> (GalapagosInterface, Receiver<RouterMsg>, Sender<Packet>) {
         let (to_router, router_rx) = mpsc::channel();
         let (inbox_tx, inbox_rx) = mpsc::channel();
-        (GalapagosInterface::new(5, to_router, inbox_rx), router_rx, inbox_tx)
+        (GalapagosInterface::new(5, RouterHandle::single(to_router), inbox_rx), router_rx, inbox_tx)
     }
 
     #[test]

@@ -1,14 +1,31 @@
-//! The per-node router.
+//! The per-node router, sharded into N reactor threads.
 //!
 //! "All local kernels on the node communicate using a router thread in
 //! libGalapagos while data for external kernels are routed from this router
-//! to an external driver such as TCP" (paper §III-B). The router owns a map
-//! from *local* kernel id → delivery sender, a kernel→node table for the
-//! whole cluster, and an egress driver for remote traffic.
+//! to an external driver such as TCP" (paper §III-B). The paper's design is
+//! one router thread per node; here that thread is generalized to
+//! `router_shards` reactor threads, each owning a **destination-hashed,
+//! disjoint subset of peer nodes** — its own egress staging, its own
+//! reliability timers, its own counters. With one shard the behavior is the
+//! paper's, bitwise.
+//!
+//! ## Ownership and the single-writer invariant
+//!
+//! Shard ownership is a pure function of the destination ([`shard_of_node`]
+//! for remote traffic, [`shard_of_kernel`] for local delivery): senders
+//! compute it at enqueue time through a [`RouterHandle`] and hand the packet
+//! straight to the owning shard's queue — an mpsc channel, so the
+//! steady-state send path takes **no cross-shard lock**. Because a given
+//! destination always hashes to the same shard, per-(source, destination)
+//! FIFO ordering survives sharding, and each shard's egress state
+//! (`Coalescer` batches, TCP streams, ARQ windows) stays strictly
+//! single-writer. Ingress threads deliver `FromNetwork` packets to the
+//! shard owning the *source* peer, so a peer's in-order ARQ flow is also
+//! serviced by exactly one reactor.
 //!
 //! The egress driver follows the staged-send/flush contract
 //! (see [`super::transport`]): `send` may coalesce packets into per-peer
-//! batches, and the router calls `flush` whenever its inbound queue goes
+//! batches, and each shard calls `flush` whenever its inbound queue goes
 //! idle — so bursts amortize syscalls while a lone message still leaves
 //! immediately after its send is processed.
 
@@ -19,10 +36,10 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::packet::Packet;
-use super::transport::Egress;
+use super::transport::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 
-/// Messages processed by the router thread.
+/// Messages processed by a router shard.
 #[derive(Debug)]
 pub enum RouterMsg {
     /// Sent by a local kernel (or its handler thread / GAScore) toward any
@@ -34,7 +51,9 @@ pub enum RouterMsg {
     Shutdown,
 }
 
-/// Counters exposed for tests and the bench harness.
+/// Counters exposed for tests and the bench harness. Each shard owns one
+/// set; [`RouterStats::absorb`] folds shard counters into a summed view so
+/// existing consumers keep reading one set of numbers.
 #[derive(Debug, Default)]
 pub struct RouterStats {
     pub local_delivered: AtomicU64,
@@ -45,31 +64,180 @@ pub struct RouterStats {
     pub idle_flushes: AtomicU64,
 }
 
+impl RouterStats {
+    /// Add `other`'s counters into `self` (the cross-shard aggregation).
+    pub fn absorb(&self, other: &RouterStats) {
+        self.local_delivered
+            .fetch_add(other.local_delivered.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.forwarded.fetch_add(other.forwarded.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.received_external
+            .fetch_add(other.received_external.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.dropped_unknown
+            .fetch_add(other.dropped_unknown.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.idle_flushes
+            .fetch_add(other.idle_flushes.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+}
+
+/// Unmapped slot sentinel in the dense routing table. Node ids are assigned
+/// sequentially from 0 by `ClusterBuilder`, so `u16::MAX` can never name a
+/// real node.
+const UNMAPPED: u16 = u16::MAX;
+
 /// Routing table: kernel id → node id for every kernel in the cluster.
+///
+/// Kernel ids are small and contiguous (the builder assigns them
+/// sequentially), so the table is a dense `Vec` indexed by kernel id — the
+/// lookup on every send is a bounds check and a load, not a hash.
 #[derive(Clone, Debug, Default)]
 pub struct RoutingTable {
-    map: HashMap<u16, u16>,
+    nodes: Vec<u16>,
+    len: usize,
 }
 
 impl RoutingTable {
     pub fn new(entries: impl IntoIterator<Item = (u16, u16)>) -> Self {
-        Self { map: entries.into_iter().collect() }
+        let mut nodes = Vec::new();
+        let mut len = 0usize;
+        for (kernel, node) in entries {
+            let idx = kernel as usize;
+            if idx >= nodes.len() {
+                nodes.resize(idx + 1, UNMAPPED);
+            }
+            if nodes[idx] == UNMAPPED {
+                len += 1;
+            }
+            nodes[idx] = node;
+        }
+        Self { nodes, len }
     }
 
     pub fn node_of(&self, kernel: u16) -> Result<u16> {
-        self.map.get(&kernel).copied().ok_or(Error::UnknownKernel(kernel))
+        match self.nodes.get(kernel as usize) {
+            Some(&n) if n != UNMAPPED => Ok(n),
+            _ => Err(Error::UnknownKernel(kernel)),
+        }
     }
 
     pub fn len(&self) -> usize {
-        self.map.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.map.is_empty()
+        self.len == 0
     }
 }
 
-/// Handle to a running router thread.
+/// The shard owning egress toward `node`. Stable (a pure function of the
+/// ids), disjoint (every node maps to exactly one shard), and balanced for
+/// the contiguous ids the builder assigns.
+pub fn shard_of_node(node: u16, shards: usize) -> usize {
+    if shards <= 1 {
+        0
+    } else {
+        node as usize % shards
+    }
+}
+
+/// The shard owning local delivery into `kernel` (same-node traffic hashes
+/// by destination kernel so hot local inboxes don't contend on one queue).
+pub fn shard_of_kernel(kernel: u16, shards: usize) -> usize {
+    if shards <= 1 {
+        0
+    } else {
+        kernel as usize % shards
+    }
+}
+
+/// Clonable sender half of a (possibly sharded) node router: computes the
+/// owning shard from the routing table at enqueue time and hands the packet
+/// straight to that shard's queue. This is the lock-free handoff — the only
+/// synchronization on the steady-state send path is the mpsc channel of the
+/// owning shard.
+#[derive(Clone)]
+pub struct RouterHandle {
+    node_id: u16,
+    table: Arc<RoutingTable>,
+    shards: Arc<[Sender<RouterMsg>]>,
+}
+
+impl RouterHandle {
+    /// Handle over `shards` reactor queues for `node_id`, routing with
+    /// `table`.
+    pub fn new(node_id: u16, table: Arc<RoutingTable>, shards: Vec<Sender<RouterMsg>>) -> Self {
+        assert!(!shards.is_empty(), "a router needs at least one shard");
+        Self { node_id, table, shards: shards.into() }
+    }
+
+    /// Handle over a single raw queue (no sharding, no table consulted) —
+    /// the hardware GAScore egress adapter and unit tests.
+    pub fn single(tx: Sender<RouterMsg>) -> Self {
+        Self { node_id: 0, table: Arc::new(RoutingTable::default()), shards: vec![tx].into() }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Enqueue a kernel-originated packet onto the shard owning its
+    /// destination (the destination node for remote traffic, the
+    /// destination kernel for local delivery). A destination the table
+    /// doesn't know goes to shard 0, whose reactor reports the drop through
+    /// the failure sink — identical to the unsharded behavior.
+    pub fn from_kernel(&self, pkt: Packet) -> Result<()> {
+        let shard = match self.shards.len() {
+            1 => 0,
+            n => match self.table.node_of(pkt.dest) {
+                Ok(node) if node == self.node_id => shard_of_kernel(pkt.dest, n),
+                Ok(node) => shard_of_node(node, n),
+                Err(_) => 0,
+            },
+        };
+        self.shards[shard]
+            .send(RouterMsg::FromKernel(pkt))
+            .map_err(|_| Error::Disconnected("router"))
+    }
+
+    /// Enqueue a network-received packet onto the shard owning the source
+    /// peer (the node hosting `pkt.src`), so one peer's in-order flow is
+    /// serviced by one reactor.
+    pub fn from_network(&self, pkt: Packet) -> Result<()> {
+        self.try_from_network(pkt).map_err(|_| Error::Disconnected("router"))
+    }
+
+    /// Like [`Self::from_network`] but returns the packet on a
+    /// disconnected shard, so callers with a retry path (the in-process
+    /// fabric's stale-cache recovery) don't lose it.
+    pub fn try_from_network(&self, pkt: Packet) -> std::result::Result<(), Packet> {
+        let shard = match self.shards.len() {
+            1 => 0,
+            n => match self.table.node_of(pkt.src) {
+                Ok(node) => shard_of_node(node, n),
+                Err(_) => 0,
+            },
+        };
+        self.shards[shard].send(RouterMsg::FromNetwork(pkt)).map_err(|e| match e.0 {
+            RouterMsg::FromNetwork(p) => p,
+            _ => unreachable!("send returns the message it was given"),
+        })
+    }
+}
+
+/// Identity and policy of one router shard (the non-shared `spawn`
+/// parameters).
+pub struct RouterConfig {
+    pub node_id: u16,
+    /// This shard's index (names the reactor thread).
+    pub shard: usize,
+    /// Drain staged egress batches whenever the inbound queue goes idle.
+    pub flush_on_idle: bool,
+    /// Fails the owning completion handle of every packet this shard has to
+    /// drop (unknown destination kernel, dead local inbox). Egress drivers
+    /// carry their own copy for wire-level losses.
+    pub failure_sink: Option<SendFailureSink>,
+}
+
+/// Handle to one running router shard.
 pub struct Router {
     pub tx: Sender<RouterMsg>,
     pub stats: Arc<RouterStats>,
@@ -77,42 +245,40 @@ pub struct Router {
 }
 
 impl Router {
-    /// Spawn the router thread for `node_id`.
+    /// Spawn one router shard.
     ///
     /// `local` maps each local kernel id to the sender that delivers into
     /// that kernel's runtime (handler thread inbox on SW nodes, GAScore
-    /// ingress on HW nodes). `egress` carries packets for other nodes.
-    /// With `flush_on_idle` set, staged egress batches are drained whenever
-    /// the inbound queue empties (and always on shutdown).
+    /// ingress on HW nodes). `egress` carries packets for the peer nodes
+    /// this shard owns.
     pub fn spawn(
-        node_id: u16,
-        table: RoutingTable,
+        cfg: RouterConfig,
+        table: Arc<RoutingTable>,
         local: HashMap<u16, Sender<Packet>>,
         mut egress: Box<dyn Egress>,
         rx: Receiver<RouterMsg>,
         tx: Sender<RouterMsg>,
-        flush_on_idle: bool,
     ) -> Router {
         let stats = Arc::new(RouterStats::default());
         let stats2 = Arc::clone(&stats);
         let handle = std::thread::Builder::new()
-            .name(format!("router-n{node_id}"))
+            .name(format!("router-n{}s{}", cfg.node_id, cfg.shard))
             .spawn(move || {
-                Self::run(node_id, table, local, &mut *egress, rx, &stats2, flush_on_idle);
+                Self::run(&cfg, &table, &local, &mut *egress, rx, &stats2);
             })
             .expect("spawn router thread");
         Router { tx, stats, handle: Some(handle) }
     }
 
     fn run(
-        node_id: u16,
-        table: RoutingTable,
-        local: HashMap<u16, Sender<Packet>>,
+        cfg: &RouterConfig,
+        table: &RoutingTable,
+        local: &HashMap<u16, Sender<Packet>>,
         egress: &mut dyn Egress,
         rx: Receiver<RouterMsg>,
         stats: &RouterStats,
-        flush_on_idle: bool,
     ) {
+        let node_id = cfg.node_id;
         // Messages processed since the last egress timer service: a
         // saturated queue must not starve ARQ retransmissions (one lost
         // datagram would otherwise stall its peer's in-order flow until
@@ -138,7 +304,7 @@ impl Router {
                 }
                 Err(TryRecvError::Empty) => {
                     since_service = 0; // the idle path services below
-                    if flush_on_idle && egress.has_staged() {
+                    if cfg.flush_on_idle && egress.has_staged() {
                         stats.idle_flushes.fetch_add(1, Ordering::Relaxed);
                         if let Err(e) = egress.flush() {
                             log::warn!("router n{node_id}: idle flush failed: {e}");
@@ -164,13 +330,16 @@ impl Router {
                 RouterMsg::FromKernel(pkt) => {
                     match table.node_of(pkt.dest) {
                         Ok(dest_node) if dest_node == node_id => {
-                            Self::deliver_local(&local, pkt, stats);
+                            Self::deliver_local(cfg, local, pkt, stats);
                         }
                         Ok(dest_node) => match egress.send(dest_node, pkt) {
                             Ok(()) => {
                                 stats.forwarded.fetch_add(1, Ordering::Relaxed);
                             }
                             Err(e) => {
+                                // The egress driver reports the loss through
+                                // its own failure sink (it owns the packet
+                                // by now); here only log and count.
                                 log::warn!("router n{node_id}: egress failed: {e}");
                                 stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
                             }
@@ -180,13 +349,14 @@ impl Router {
                                 "router n{node_id}: dropping packet for unknown kernel {}",
                                 pkt.dest
                             );
+                            Self::report_drop(cfg, &pkt, "unknown destination kernel");
                             stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
                         }
                     }
                 }
                 RouterMsg::FromNetwork(pkt) => {
                     stats.received_external.fetch_add(1, Ordering::Relaxed);
-                    Self::deliver_local(&local, pkt, stats);
+                    Self::deliver_local(cfg, local, pkt, stats);
                 }
             }
         }
@@ -200,17 +370,34 @@ impl Router {
         egress.drain(std::time::Duration::from_secs(10));
     }
 
-    fn deliver_local(local: &HashMap<u16, Sender<Packet>>, pkt: Packet, stats: &RouterStats) {
+    /// A packet the router cannot route anywhere must still fail its owning
+    /// completion handle — otherwise the sender blocks until timeout on an
+    /// operation that went nowhere.
+    fn report_drop(cfg: &RouterConfig, pkt: &Packet, what: &str) {
+        if let Some(sink) = &cfg.failure_sink {
+            sink(pkt, &format!("router dropped packet for kernel {}: {what}", pkt.dest));
+        }
+    }
+
+    fn deliver_local(
+        cfg: &RouterConfig,
+        local: &HashMap<u16, Sender<Packet>>,
+        pkt: Packet,
+        stats: &RouterStats,
+    ) {
         match local.get(&pkt.dest) {
-            Some(tx) => {
-                if tx.send(pkt).is_ok() {
+            Some(tx) => match tx.send(pkt) {
+                Ok(()) => {
                     stats.local_delivered.fetch_add(1, Ordering::Relaxed);
-                } else {
+                }
+                Err(std::sync::mpsc::SendError(p)) => {
+                    Self::report_drop(cfg, &p, "local delivery channel closed");
                     stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
                 }
-            }
+            },
             None => {
                 log::warn!("packet for kernel {} arrived at wrong node", pkt.dest);
+                Self::report_drop(cfg, &pkt, "not hosted on this node");
                 stats.dropped_unknown.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -236,10 +423,15 @@ mod tests {
     use super::*;
     use crate::galapagos::transport::NullEgress;
     use std::sync::mpsc;
-    use std::sync::Mutex;
+    use std::sync::{Condvar, Mutex};
+    use std::time::Duration;
 
-    fn table2() -> RoutingTable {
-        RoutingTable::new([(0u16, 0u16), (1, 0), (2, 1)])
+    fn table2() -> Arc<RoutingTable> {
+        Arc::new(RoutingTable::new([(0u16, 0u16), (1, 0), (2, 1)]))
+    }
+
+    fn cfg(node_id: u16, flush_on_idle: bool) -> RouterConfig {
+        RouterConfig { node_id, shard: 0, flush_on_idle, failure_sink: None }
     }
 
     #[test]
@@ -249,12 +441,24 @@ mod tests {
         let mut local = HashMap::new();
         local.insert(0u16, k0_tx);
         let mut r =
-            Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone(), true);
+            Router::spawn(cfg(0, true), table2(), local, Box::new(NullEgress), rx, tx.clone());
         tx.send(RouterMsg::FromKernel(Packet::new(0, 1, vec![9]).unwrap())).unwrap();
-        let got = k0_rx.recv_timeout(std::time::Duration::from_secs(1)).unwrap();
+        let got = k0_rx.recv_timeout(Duration::from_secs(1)).unwrap();
         assert_eq!(got.data, vec![9]);
         r.shutdown();
         assert_eq!(r.stats.local_delivered.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn dense_table_matches_entries_and_rejects_gaps() {
+        let t = RoutingTable::new([(0u16, 3u16), (2, 5)]);
+        assert_eq!(t.len(), 2);
+        assert!(!t.is_empty());
+        assert_eq!(t.node_of(0).unwrap(), 3);
+        assert_eq!(t.node_of(2).unwrap(), 5);
+        assert!(t.node_of(1).is_err(), "gap in the id space must error");
+        assert!(t.node_of(99).is_err(), "beyond the table must error");
+        assert!(RoutingTable::default().node_of(0).is_err());
     }
 
     /// Test egress capturing sends and flushes.
@@ -287,14 +491,14 @@ mod tests {
         let sink = Arc::clone(&cap.sent);
         let (tx, rx) = mpsc::channel();
         let mut r =
-            Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone(), true);
+            Router::spawn(cfg(0, true), table2(), HashMap::new(), Box::new(cap), rx, tx.clone());
         tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![1]).unwrap())).unwrap();
         // Wait for processing.
         for _ in 0..100 {
             if !sink.lock().unwrap().is_empty() {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_millis(5));
+            std::thread::sleep(Duration::from_millis(5));
         }
         r.shutdown();
         let got = sink.lock().unwrap();
@@ -311,7 +515,7 @@ mod tests {
         let sent = Arc::clone(&cap.sent);
         let (tx, rx) = mpsc::channel();
         let mut r =
-            Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone(), true);
+            Router::spawn(cfg(0, true), table2(), HashMap::new(), Box::new(cap), rx, tx.clone());
         // A burst of remote packets, then silence.
         for i in 0..5u8 {
             tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![i]).unwrap())).unwrap();
@@ -321,7 +525,7 @@ mod tests {
             if flushes.load(Ordering::Relaxed) > 0 && sent.lock().unwrap().len() == 5 {
                 break;
             }
-            std::thread::sleep(std::time::Duration::from_millis(5));
+            std::thread::sleep(Duration::from_millis(5));
         }
         assert_eq!(sent.lock().unwrap().len(), 5);
         assert!(flushes.load(Ordering::Relaxed) >= 1, "no idle flush happened");
@@ -340,9 +544,9 @@ mod tests {
         let flushes = Arc::clone(&cap.flushes);
         let (tx, rx) = mpsc::channel();
         let mut r =
-            Router::spawn(0, table2(), HashMap::new(), Box::new(cap), rx, tx.clone(), false);
+            Router::spawn(cfg(0, false), table2(), HashMap::new(), Box::new(cap), rx, tx.clone());
         tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![1]).unwrap())).unwrap();
-        std::thread::sleep(std::time::Duration::from_millis(50));
+        std::thread::sleep(Duration::from_millis(50));
         assert_eq!(r.stats.idle_flushes.load(Ordering::Relaxed), 0);
         assert_eq!(flushes.load(Ordering::Relaxed), 0);
         r.shutdown();
@@ -350,20 +554,28 @@ mod tests {
     }
 
     #[test]
-    fn drops_unknown_kernel() {
+    fn drops_unknown_kernel_and_reports_through_sink() {
+        let failed: Arc<Mutex<Vec<(u16, String)>>> = Arc::new(Mutex::new(Vec::new()));
+        let failed2 = Arc::clone(&failed);
+        let sink: SendFailureSink = Arc::new(move |pkt: &Packet, reason: &str| {
+            failed2.lock().unwrap().push((pkt.dest, reason.to_string()));
+        });
         let (tx, rx) = mpsc::channel();
         let mut r = Router::spawn(
-            0,
+            RouterConfig { node_id: 0, shard: 0, flush_on_idle: true, failure_sink: Some(sink) },
             table2(),
             HashMap::new(),
             Box::new(NullEgress),
             rx,
             tx.clone(),
-            true,
         );
         tx.send(RouterMsg::FromKernel(Packet::new(99, 0, vec![]).unwrap())).unwrap();
         r.shutdown();
         assert_eq!(r.stats.dropped_unknown.load(Ordering::Relaxed), 1);
+        let failed = failed.lock().unwrap();
+        assert_eq!(failed.len(), 1, "dropped packet must reach the failure sink");
+        assert_eq!(failed[0].0, 99);
+        assert!(failed[0].1.contains("unknown"), "reason names the cause: {}", failed[0].1);
     }
 
     #[test]
@@ -373,10 +585,141 @@ mod tests {
         let mut local = HashMap::new();
         local.insert(1u16, k1_tx);
         let mut r =
-            Router::spawn(0, table2(), local, Box::new(NullEgress), rx, tx.clone(), true);
+            Router::spawn(cfg(0, true), table2(), local, Box::new(NullEgress), rx, tx.clone());
         tx.send(RouterMsg::FromNetwork(Packet::new(1, 2, vec![5]).unwrap())).unwrap();
-        assert_eq!(k1_rx.recv_timeout(std::time::Duration::from_secs(1)).unwrap().data, vec![5]);
+        assert_eq!(k1_rx.recv_timeout(Duration::from_secs(1)).unwrap().data, vec![5]);
         r.shutdown();
         assert_eq!(r.stats.received_external.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn handle_hashes_by_destination() {
+        // 4 nodes, one kernel each; self is node 0.
+        let table = Arc::new(RoutingTable::new([(0u16, 0u16), (1, 1), (2, 2), (3, 3)]));
+        let (txs, rxs): (Vec<_>, Vec<_>) = (0..2).map(|_| mpsc::channel()).unzip();
+        let h = RouterHandle::new(0, table, txs);
+        // Remote kernels 1/2/3 live on nodes 1/2/3 → shards 1, 0, 1.
+        for dest in [1u16, 2, 3] {
+            h.from_kernel(Packet::new(dest, 0, vec![dest as u8]).unwrap()).unwrap();
+        }
+        // Local kernel 0 hashes by kernel id → shard 0.
+        h.from_kernel(Packet::new(0, 0, vec![0]).unwrap()).unwrap();
+        let drain = |rx: &Receiver<RouterMsg>| {
+            let mut dests = Vec::new();
+            while let Ok(RouterMsg::FromKernel(p)) = rx.try_recv() {
+                dests.push(p.dest);
+            }
+            dests
+        };
+        assert_eq!(drain(&rxs[0]), vec![2, 0]);
+        assert_eq!(drain(&rxs[1]), vec![1, 3]);
+        // FromNetwork hashes by the *source* peer: src kernel 3 → node 3 →
+        // shard 1.
+        h.from_network(Packet::new(0, 3, vec![9]).unwrap()).unwrap();
+        match rxs[1].recv_timeout(Duration::from_secs(1)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p.src, 3),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// Egress that parks every `send` until released — stands in for a
+    /// shard wedged on a dead peer.
+    struct Wedge {
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl Egress for Wedge {
+        fn send(&mut self, _node: u16, _pkt: Packet) -> Result<()> {
+            let (lock, cv) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cv.wait(open).unwrap();
+            }
+            Ok(())
+        }
+    }
+
+    /// The acceptance check for the lock-free handoff: with one shard's
+    /// reactor wedged inside its egress, sends routed to the *other* shard
+    /// still flow, and enqueues toward the wedged shard return immediately
+    /// instead of blocking the caller.
+    #[test]
+    fn wedged_shard_does_not_block_other_shards() {
+        // Kernel 10 → node 2 (shard 0), kernel 11 → node 1 (shard 1).
+        let table = Arc::new(RoutingTable::new([(0u16, 0u16), (10, 2), (11, 1)]));
+        let (tx0, rx0) = mpsc::channel();
+        let (tx1, rx1) = mpsc::channel();
+        let h = RouterHandle::new(0, Arc::clone(&table), vec![tx0.clone(), tx1.clone()]);
+
+        let cap = Cap::default();
+        let sent = Arc::clone(&cap.sent);
+        let mut shard0 = Router::spawn(
+            cfg(0, true),
+            Arc::clone(&table),
+            HashMap::new(),
+            Box::new(cap),
+            rx0,
+            tx0,
+        );
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let mut shard1 = Router::spawn(
+            RouterConfig { node_id: 0, shard: 1, flush_on_idle: true, failure_sink: None },
+            table,
+            HashMap::new(),
+            Box::new(Wedge { gate: Arc::clone(&gate) }),
+            rx1,
+            tx1,
+        );
+
+        // Wedge shard 1: its reactor blocks inside egress.send.
+        h.from_kernel(Packet::new(11, 0, vec![1]).unwrap()).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+
+        // Sends to both shards must return promptly; shard-0 traffic flows.
+        let t0 = std::time::Instant::now();
+        for i in 0..100u8 {
+            h.from_kernel(Packet::new(10, 0, vec![i]).unwrap()).unwrap();
+            h.from_kernel(Packet::new(11, 0, vec![i]).unwrap()).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_millis(500),
+            "handoff blocked behind the wedged shard"
+        );
+        for _ in 0..400 {
+            if sent.lock().unwrap().len() == 100 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            sent.lock().unwrap().len(),
+            100,
+            "shard 0 must keep forwarding while shard 1 is wedged"
+        );
+
+        // Release the wedge so shutdown can drain shard 1.
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        shard0.shutdown();
+        shard1.shutdown();
+    }
+
+    #[test]
+    fn stats_absorb_sums_counters() {
+        let a = RouterStats::default();
+        a.forwarded.store(3, Ordering::Relaxed);
+        a.local_delivered.store(1, Ordering::Relaxed);
+        let b = RouterStats::default();
+        b.forwarded.store(4, Ordering::Relaxed);
+        b.dropped_unknown.store(2, Ordering::Relaxed);
+        let sum = RouterStats::default();
+        sum.absorb(&a);
+        sum.absorb(&b);
+        assert_eq!(sum.forwarded.load(Ordering::Relaxed), 7);
+        assert_eq!(sum.local_delivered.load(Ordering::Relaxed), 1);
+        assert_eq!(sum.dropped_unknown.load(Ordering::Relaxed), 2);
     }
 }

@@ -5,18 +5,20 @@
 //! process, generalized to connect multiple logical "nodes" without sockets.
 
 use std::collections::HashMap;
-use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 
-use super::Egress;
+use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::Packet;
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::RouterHandle;
 
-/// Shared registry of router ingress senders, one per node.
+/// Shared registry of router ingress handles, one per node. A destination
+/// node's [`RouterHandle`] hashes the packet to the shard owning its source
+/// peer, so sharded receivers keep the single-writer invariant even for
+/// in-process traffic.
 #[derive(Clone, Default)]
 pub struct LocalFabric {
-    inner: Arc<Mutex<HashMap<u16, Sender<RouterMsg>>>>,
+    inner: Arc<Mutex<HashMap<u16, RouterHandle>>>,
 }
 
 impl LocalFabric {
@@ -25,13 +27,13 @@ impl LocalFabric {
     }
 
     /// Register `node`'s router ingress.
-    pub fn register(&self, node: u16, tx: Sender<RouterMsg>) {
-        self.inner.lock().unwrap().insert(node, tx);
+    pub fn register(&self, node: u16, handle: RouterHandle) {
+        self.inner.lock().unwrap().insert(node, handle);
     }
 
     /// Create the egress half for one node.
     pub fn egress(&self) -> LocalEgress {
-        LocalEgress { fabric: self.clone(), cache: HashMap::new() }
+        LocalEgress { fabric: self.clone(), cache: HashMap::new(), failure_sink: None }
     }
 }
 
@@ -39,55 +41,78 @@ impl LocalFabric {
 ///
 /// Steady-state sends are lock-free: the shared registry `Mutex` is only
 /// taken on the *first* send toward a destination (and after a stale cached
-/// sender), after which the cloned `Sender` is used directly — an mpsc
-/// `Sender` is its own handle, so no further coordination is needed.
+/// handle), after which the cloned [`RouterHandle`] is used directly — its
+/// mpsc senders are their own handles, so no further coordination is needed.
 pub struct LocalEgress {
     fabric: LocalFabric,
-    /// Per-destination sender clones cached after the first registry lookup.
-    cache: HashMap<u16, Sender<RouterMsg>>,
+    /// Per-destination handle clones cached after the first registry lookup.
+    cache: HashMap<u16, RouterHandle>,
+    /// Reports packets this egress cannot deliver, so the owning completion
+    /// handle fails instead of timing out.
+    failure_sink: Option<SendFailureSink>,
+}
+
+impl LocalEgress {
+    /// Report undeliverable packets (unknown node, shut-down destination)
+    /// through `sink`.
+    pub fn with_failure_sink(mut self, sink: SendFailureSink) -> Self {
+        self.failure_sink = Some(sink);
+        self
+    }
+
+    fn report(&self, pkt: &Packet, reason: &str) {
+        if let Some(sink) = &self.failure_sink {
+            sink(pkt, reason);
+        }
+    }
 }
 
 impl Egress for LocalEgress {
     fn send(&mut self, dest_node: u16, pkt: Packet) -> Result<()> {
-        // Fast path: cached sender, no registry lock.
+        // Fast path: cached handle, no registry lock.
         let pkt = match self.cache.get(&dest_node) {
-            Some(tx) => match tx.send(RouterMsg::FromNetwork(pkt)) {
+            Some(handle) => match handle.try_from_network(pkt) {
                 Ok(()) => return Ok(()),
-                Err(std::sync::mpsc::SendError(RouterMsg::FromNetwork(p))) => {
+                Err(p) => {
                     // Stale cache entry (peer re-registered or shut down):
                     // recover the packet and retry through the registry.
                     self.cache.remove(&dest_node);
                     p
                 }
-                Err(_) => unreachable!("send returns the message it was given"),
             },
             None => pkt,
         };
-        let tx = self
-            .fabric
-            .inner
-            .lock()
-            .unwrap()
-            .get(&dest_node)
-            .cloned()
-            .ok_or(Error::UnknownNode(dest_node))?;
-        tx.send(RouterMsg::FromNetwork(pkt))
-            .map_err(|_| Error::Disconnected("remote router"))?;
-        self.cache.insert(dest_node, tx);
-        Ok(())
+        let handle = match self.fabric.inner.lock().unwrap().get(&dest_node).cloned() {
+            Some(h) => h,
+            None => {
+                self.report(&pkt, &format!("no in-process route to node {dest_node}"));
+                return Err(Error::UnknownNode(dest_node));
+            }
+        };
+        match handle.try_from_network(pkt) {
+            Ok(()) => {
+                self.cache.insert(dest_node, handle);
+                Ok(())
+            }
+            Err(p) => {
+                self.report(&p, &format!("node {dest_node} router shut down"));
+                Err(Error::Disconnected("remote router"))
+            }
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::galapagos::router::RouterMsg;
     use std::sync::mpsc;
 
     #[test]
     fn delivers_between_registered_nodes() {
         let fabric = LocalFabric::new();
         let (tx1, rx1) = mpsc::channel();
-        fabric.register(1, tx1);
+        fabric.register(1, RouterHandle::single(tx1));
         let mut egress = fabric.egress();
         egress.send(1, Packet::new(2, 0, vec![8]).unwrap()).unwrap();
         match rx1.recv().unwrap() {
@@ -97,22 +122,31 @@ mod tests {
     }
 
     #[test]
-    fn unknown_node_errors() {
+    fn unknown_node_errors_and_reports() {
         let fabric = LocalFabric::new();
-        let mut egress = fabric.egress();
+        let failed = Arc::new(Mutex::new(Vec::new()));
+        let failed2 = Arc::clone(&failed);
+        let mut egress = fabric.egress().with_failure_sink(Arc::new(
+            move |pkt: &Packet, reason: &str| {
+                failed2.lock().unwrap().push((pkt.dest, reason.to_string()));
+            },
+        ));
         assert!(matches!(
             egress.send(7, Packet::new(0, 0, vec![]).unwrap()),
             Err(Error::UnknownNode(7))
         ));
+        let failed = failed.lock().unwrap();
+        assert_eq!(failed.len(), 1, "undeliverable packet must hit the sink");
+        assert!(failed[0].1.contains("no in-process route"));
     }
 
     /// After the first send the registry lock is never taken again: the
-    /// cached sender delivers even when the registry entry is gone.
+    /// cached handle delivers even when the registry entry is gone.
     #[test]
     fn steady_state_uses_cached_sender() {
         let fabric = LocalFabric::new();
         let (tx1, rx1) = mpsc::channel();
-        fabric.register(1, tx1);
+        fabric.register(1, RouterHandle::single(tx1));
         let mut egress = fabric.egress();
         egress.send(1, Packet::new(2, 0, vec![1]).unwrap()).unwrap();
         assert!(egress.cache.contains_key(&1));
@@ -127,18 +161,18 @@ mod tests {
         }
     }
 
-    /// A stale cached sender (receiver gone) falls back to the registry and
-    /// re-caches the fresh sender — the re-registration path.
+    /// A stale cached handle (receiver gone) falls back to the registry and
+    /// re-caches the fresh handle — the re-registration path.
     #[test]
     fn stale_cache_recovers_through_registry() {
         let fabric = LocalFabric::new();
         let (tx_old, rx_old) = mpsc::channel();
-        fabric.register(1, tx_old);
+        fabric.register(1, RouterHandle::single(tx_old));
         let mut egress = fabric.egress();
         egress.send(1, Packet::new(2, 0, vec![1]).unwrap()).unwrap();
-        drop(rx_old); // cached sender goes stale
+        drop(rx_old); // cached handle goes stale
         let (tx_new, rx_new) = mpsc::channel();
-        fabric.register(1, tx_new);
+        fabric.register(1, RouterHandle::single(tx_new));
         egress.send(1, Packet::new(2, 0, vec![9]).unwrap()).unwrap();
         match rx_new.recv().unwrap() {
             RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![9]),

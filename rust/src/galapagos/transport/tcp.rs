@@ -17,14 +17,13 @@
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::mpsc::Sender;
 use std::thread::JoinHandle;
 
 use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS, LEN_PREFIX_BYTES};
 use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::RouterHandle;
 
 /// Bytes of TCP frame header (`u32` length prefix).
 pub const FRAME_HEADER_BYTES: usize = LEN_PREFIX_BYTES;
@@ -234,8 +233,9 @@ pub struct TcpIngress {
 }
 
 impl TcpIngress {
-    /// Bind `addr` and start accepting. Received packets go to `router_tx`.
-    pub fn bind(addr: &str, router_tx: Sender<RouterMsg>) -> Result<TcpIngress> {
+    /// Bind `addr` and start accepting. Received packets go through
+    /// `router`, which hashes each one to the shard owning its source peer.
+    pub fn bind(addr: &str, router: RouterHandle) -> Result<TcpIngress> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
         let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -253,10 +253,10 @@ impl TcpIngress {
                         Ok((stream, _peer)) => {
                             stream.set_nonblocking(false).ok();
                             stream.set_nodelay(true).ok();
-                            let tx = router_tx.clone();
+                            let handle = router.clone();
                             let sd2 = std::sync::Arc::clone(&sd);
                             readers.push(std::thread::spawn(move || {
-                                read_frames(stream, tx, sd2);
+                                read_frames(stream, handle, sd2);
                             }));
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -301,7 +301,7 @@ impl Drop for TcpIngress {
 /// in send order — the stream carries no batch boundaries.
 fn read_frames(
     mut stream: TcpStream,
-    tx: Sender<RouterMsg>,
+    router: RouterHandle,
     shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
 ) {
     // Bounded read timeout so the thread notices shutdown.
@@ -357,7 +357,7 @@ fn read_frames(
         }
         match Packet::from_wire(&buf) {
             Ok(pkt) => {
-                if tx.send(RouterMsg::FromNetwork(pkt)).is_err() {
+                if router.from_network(pkt).is_err() {
                     break; // router gone
                 }
             }
@@ -371,12 +371,13 @@ fn read_frames(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::galapagos::router::RouterMsg;
     use std::sync::mpsc;
 
     #[test]
     fn roundtrip_over_loopback() {
         let (tx, rx) = mpsc::channel();
-        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let ingress = TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).unwrap();
         let addr = ingress.local_addr().to_string();
 
         let mut egress = TcpEgress::new(HashMap::from([(1u16, addr)]));
@@ -392,7 +393,7 @@ mod tests {
     #[test]
     fn many_packets_in_order_per_connection() {
         let (tx, rx) = mpsc::channel();
-        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let ingress = TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).unwrap();
         let addr = ingress.local_addr().to_string();
         let mut egress = TcpEgress::new(HashMap::from([(1u16, addr)]));
         for i in 0..100u8 {
@@ -420,7 +421,7 @@ mod tests {
     #[test]
     fn coalesced_frames_yield_n_packets_in_order() {
         let (tx, rx) = mpsc::channel();
-        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let ingress = TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).unwrap();
         let addr = ingress.local_addr().to_string();
         let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, addr)]), 1 << 16, 1024);
         const N: u8 = 50;
@@ -445,7 +446,7 @@ mod tests {
     #[test]
     fn byte_budget_triggers_flush() {
         let (tx, rx) = mpsc::channel();
-        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let ingress = TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).unwrap();
         let addr = ingress.local_addr().to_string();
         // Budget fits 3 of the 28-byte frames (4 prefix + 8 header + 16
         // payload); the 4th would overflow, so it flushes the first 3 and
@@ -472,7 +473,7 @@ mod tests {
     #[test]
     fn msg_budget_triggers_flush() {
         let (tx, rx) = mpsc::channel();
-        let ingress = TcpIngress::bind("127.0.0.1:0", tx).unwrap();
+        let ingress = TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).unwrap();
         let addr = ingress.local_addr().to_string();
         let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, addr)]), 1 << 20, 8);
         for i in 0..8u8 {

@@ -20,16 +20,15 @@
 
 use std::collections::HashMap;
 use std::net::UdpSocket;
-use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use super::arq::{for_each_frame, ArqEndpoint};
+use super::arq::{for_each_frame, ArqEndpoint, ARQ_HEADER_BYTES, ARQ_MAGIC};
 use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS};
 use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::{shard_of_node, RouterHandle};
 
 /// Standard Ethernet MTU payload available to a UDP datagram
 /// (1500 − 20 IP − 8 UDP).
@@ -264,13 +263,13 @@ pub struct UdpIngress {
 }
 
 impl UdpIngress {
-    /// Start receiving on `socket` (must already be bound); packets go to
-    /// `router_tx`. When `hw_core` is set, datagrams longer than the MTU are
-    /// dropped (fragmented receive unsupported on the FPGA core). Each
-    /// datagram is frame-decoded: it may carry several coalesced wire
+    /// Start receiving on `socket` (must already be bound); packets go
+    /// through `router`. When `hw_core` is set, datagrams longer than the
+    /// MTU are dropped (fragmented receive unsupported on the FPGA core).
+    /// Each datagram is frame-decoded: it may carry several coalesced wire
     /// packets (see [`UdpEgress::with_batching`]).
-    pub fn start(socket: UdpSocket, router_tx: Sender<RouterMsg>, hw_core: bool) -> Result<UdpIngress> {
-        Self::start_with_reliability(socket, router_tx, hw_core, None)
+    pub fn start(socket: UdpSocket, router: RouterHandle, hw_core: bool) -> Result<UdpIngress> {
+        Self::start_sharded(socket, router, hw_core, Vec::new())
     }
 
     /// Start receiving with an optional ARQ endpoint (shared with the
@@ -281,9 +280,27 @@ impl UdpIngress {
     /// retransmissions) happens inside the same call.
     pub fn start_with_reliability(
         socket: UdpSocket,
-        router_tx: Sender<RouterMsg>,
+        router: RouterHandle,
         hw_core: bool,
         arq: Option<Arc<ArqEndpoint>>,
+    ) -> Result<UdpIngress> {
+        Self::start_sharded(socket, router, hw_core, arq.into_iter().collect())
+    }
+
+    /// Start receiving with one ARQ endpoint per router shard. The socket
+    /// still has a single reader thread, but every reliable datagram names
+    /// its sender in the ARQ header (`src_node`, bytes 2–3), so the reader
+    /// dispatches each one — DATA and ACK alike — to the endpoint owned by
+    /// the shard that owns that peer. Sequence spaces and sliding-window
+    /// state therefore stay strictly single-writer per peer: for the flow
+    /// A→B, exactly one endpoint on A sends and exactly one endpoint on B
+    /// receives, regardless of either node's shard count. An empty `arqs`
+    /// means the raw lossy datapath.
+    pub fn start_sharded(
+        socket: UdpSocket,
+        router: RouterHandle,
+        hw_core: bool,
+        arqs: Vec<Arc<ArqEndpoint>>,
     ) -> Result<UdpIngress> {
         let local_addr = socket.local_addr()?;
         let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -303,18 +320,25 @@ impl UdpIngress {
                                 log::warn!("hw udp core dropped fragmented datagram of {n} bytes");
                                 continue;
                             }
-                            match &arq {
-                                Some(endpoint) => {
-                                    for payload in endpoint.on_datagram(&buf[..n]) {
-                                        if !decode_datagram(&payload, &router_tx) {
-                                            return; // router gone
-                                        }
-                                    }
+                            if arqs.is_empty() {
+                                if !decode_datagram(&buf[..n], &router) {
+                                    break; // router gone
                                 }
-                                None => {
-                                    if !decode_datagram(&buf[..n], &router_tx) {
-                                        break; // router gone
-                                    }
+                                continue;
+                            }
+                            let dgram = &buf[..n];
+                            if dgram.len() < ARQ_HEADER_BYTES || dgram[0] != ARQ_MAGIC {
+                                log::warn!(
+                                    "arq: dropping non-ARQ datagram of {} bytes",
+                                    dgram.len()
+                                );
+                                continue;
+                            }
+                            let src_node = u16::from_le_bytes([dgram[2], dgram[3]]);
+                            let endpoint = &arqs[shard_of_node(src_node, arqs.len())];
+                            for payload in endpoint.on_datagram(dgram) {
+                                if !decode_datagram(&payload, &router) {
+                                    return; // router gone
                                 }
                             }
                         }
@@ -352,9 +376,9 @@ impl Drop for UdpIngress {
 
 /// Frame-decode loop over one datagram: the wire format is self-delimiting
 /// (header carries the payload length), so a batched datagram of N frames
-/// yields N router packets in order. Returns `false` when the router side
-/// of the channel is gone.
-fn decode_datagram(mut dgram: &[u8], tx: &Sender<RouterMsg>) -> bool {
+/// yields N router packets in order (each hashed to the shard owning its
+/// source peer). Returns `false` when the router side is gone.
+fn decode_datagram(mut dgram: &[u8], router: &RouterHandle) -> bool {
     while !dgram.is_empty() {
         let frame_len = match Packet::peek_wire_len(dgram) {
             Some(l) if l <= dgram.len() => l,
@@ -368,7 +392,7 @@ fn decode_datagram(mut dgram: &[u8], tx: &Sender<RouterMsg>) -> bool {
         };
         match Packet::from_wire(&dgram[..frame_len]) {
             Ok(pkt) => {
-                if tx.send(RouterMsg::FromNetwork(pkt)).is_err() {
+                if router.from_network(pkt).is_err() {
                     return false;
                 }
             }
@@ -383,6 +407,7 @@ fn decode_datagram(mut dgram: &[u8], tx: &Sender<RouterMsg>) -> bool {
 mod tests {
     use super::*;
     use super::super::arq::ArqConfig;
+    use crate::galapagos::router::RouterMsg;
     use std::sync::mpsc;
     use std::time::Duration;
 
@@ -413,7 +438,7 @@ mod tests {
         let (ack_tx, ack_rx) = mpsc::channel();
         let ack_reader = UdpIngress::start_with_reliability(
             tx_sock.try_clone().unwrap(),
-            ack_tx,
+            RouterHandle::single(ack_tx),
             false,
             Some(Arc::clone(&sender)),
         )
@@ -441,7 +466,8 @@ mod tests {
         ));
         let (tx, rx) = mpsc::channel();
         let _ingress =
-            UdpIngress::start_with_reliability(rx_sock, tx, false, Some(recv_ep)).unwrap();
+            UdpIngress::start_with_reliability(rx_sock, RouterHandle::single(tx), false, Some(recv_ep))
+                .unwrap();
 
         let mut egress =
             UdpEgress::with_batching(tx_sock, HashMap::from([(1u16, rx_addr)]), false, 256, 4)
@@ -515,7 +541,7 @@ mod tests {
         let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         let addr = rx_sock.local_addr().unwrap().to_string();
         let (tx, rx) = mpsc::channel();
-        let _ingress = UdpIngress::start(rx_sock, tx, false).unwrap();
+        let _ingress = UdpIngress::start(rx_sock, RouterHandle::single(tx), false).unwrap();
 
         let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         let mut egress = UdpEgress::new(tx_sock, HashMap::from([(1u16, addr)]), false);
@@ -545,7 +571,7 @@ mod tests {
         let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         let addr = rx_sock.local_addr().unwrap().to_string();
         let (tx, rx) = mpsc::channel();
-        let _ingress = UdpIngress::start(rx_sock, tx, false).unwrap();
+        let _ingress = UdpIngress::start(rx_sock, RouterHandle::single(tx), false).unwrap();
         let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         let mut egress = UdpEgress::new(tx_sock, HashMap::from([(1u16, addr)]), false);
         let pkt = Packet::new(1, 2, vec![7; 4096]).unwrap();
@@ -563,7 +589,7 @@ mod tests {
         let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         let addr = rx_sock.local_addr().unwrap().to_string();
         let (tx, rx) = mpsc::channel();
-        let _ingress = UdpIngress::start(rx_sock, tx, false).unwrap();
+        let _ingress = UdpIngress::start(rx_sock, RouterHandle::single(tx), false).unwrap();
 
         let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         let mut egress =
@@ -586,7 +612,8 @@ mod tests {
     /// the format contract, independent of the egress implementation.
     #[test]
     fn decode_loop_on_raw_coalesced_datagram() {
-        let (tx, rx) = mpsc::channel();
+        let (raw_tx, rx) = mpsc::channel();
+        let tx = RouterHandle::single(raw_tx);
         let a = Packet::new(1, 2, vec![0xAA; 8]).unwrap();
         let b = Packet::new(3, 4, vec![]).unwrap();
         let c = Packet::new(5, 6, vec![0xCC; 100]).unwrap();
@@ -622,7 +649,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         // Receive with hw_core = true: an over-MTU datagram would be
         // dropped, so delivery of every packet proves the cap held.
-        let _ingress = UdpIngress::start(rx_sock, tx, true).unwrap();
+        let _ingress = UdpIngress::start(rx_sock, RouterHandle::single(tx), true).unwrap();
 
         let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
         // Budget far above the MTU: the hard cap must win.
@@ -670,6 +697,96 @@ mod tests {
         for p in &pkts {
             let (n, _) = rx_sock.recv_from(&mut buf).unwrap();
             assert_eq!(&buf[..n], &p.to_wire()[..], "datagram bytes differ");
+        }
+    }
+
+    /// A sharded ingress dispatches each reliable datagram to the endpoint
+    /// owned by the shard of its *source* node (ARQ header bytes 2–3), so
+    /// two peers with independent sequence spaces land on their own
+    /// endpoints and both flows deliver exactly once.
+    #[test]
+    fn sharded_ingress_dispatches_by_source_node() {
+        let cfg = |node_id| ArqConfig {
+            node_id,
+            window: 8,
+            max_retries: 4,
+            ack_interval: Duration::from_millis(2),
+        };
+        let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let rx_addr = rx_sock.local_addr().unwrap().to_string();
+        let s0 = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let s1 = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let s0_addr = s0.local_addr().unwrap().to_string();
+        let s1_addr = s1.local_addr().unwrap().to_string();
+        // Receiver node 9 with two shards: shard 0 owns peer node 0,
+        // shard 1 owns peer node 1 (node % 2).
+        let rx_ep0 = Arc::new(ArqEndpoint::new(
+            cfg(9),
+            rx_sock.try_clone().unwrap(),
+            HashMap::from([(0u16, s0_addr)]),
+            None,
+        ));
+        let rx_ep1 = Arc::new(ArqEndpoint::new(
+            cfg(9),
+            rx_sock.try_clone().unwrap(),
+            HashMap::from([(1u16, s1_addr)]),
+            None,
+        ));
+        let (tx, rx) = mpsc::channel();
+        let _ingress = UdpIngress::start_sharded(
+            rx_sock,
+            RouterHandle::single(tx),
+            false,
+            vec![rx_ep0, rx_ep1],
+        )
+        .unwrap();
+
+        const PER_PEER: u8 = 20;
+        let mut keep = Vec::new();
+        let mut senders = Vec::new();
+        for (node, sock) in [(0u16, s0), (1u16, s1)] {
+            let ep = Arc::new(ArqEndpoint::new(
+                cfg(node),
+                sock.try_clone().unwrap(),
+                HashMap::from([(9u16, rx_addr.clone())]),
+                None,
+            ));
+            let (ack_tx, ack_rx) = mpsc::channel();
+            keep.push((
+                UdpIngress::start_with_reliability(
+                    sock,
+                    RouterHandle::single(ack_tx),
+                    false,
+                    Some(Arc::clone(&ep)),
+                )
+                .unwrap(),
+                ack_rx,
+            ));
+            for i in 0..PER_PEER {
+                // src kernel encodes the sending node; payload the seq.
+                let mut dgram = Vec::new();
+                Packet::new(7, node, vec![i]).unwrap().write_wire(&mut dgram);
+                ep.send(9, &dgram).unwrap();
+            }
+            senders.push(ep);
+        }
+        // Every frame arrives exactly once, in per-peer order.
+        let mut next = [0u8; 2];
+        for _ in 0..(2 * PER_PEER as usize) {
+            match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => {
+                    let peer = p.src as usize;
+                    assert_eq!(p.data, vec![next[peer]], "out of order for peer {peer}");
+                    next[peer] += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(next, [PER_PEER; 2]);
+        // ACKs found their way back to each sender's endpoint.
+        for ep in senders {
+            ep.drain(Duration::from_secs(5));
+            assert!(!ep.has_inflight(), "sender window did not drain");
         }
     }
 }

@@ -43,7 +43,7 @@ use super::stages::{am_rx_parse, xpams_tx_route, EgressRoute, HoldBuffer};
 use crate::am::engine::KernelRuntime;
 use crate::am::types::{handler_ids, AmType};
 use crate::galapagos::packet::Packet;
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::RouterHandle;
 
 /// Traffic entering the GAScore: packets from the network (`am_rx` side) or
 /// command packets from local kernels (`xpams_tx` side, §III-C egress
@@ -113,12 +113,12 @@ pub struct GAScoreServer {
 impl GAScoreServer {
     /// Spawn the GAScore for `node_id`, serving `runtimes` (one per local
     /// kernel). `inbox` is the shared network-delivery channel from the
-    /// router; egress (including replies) goes out through `router_tx`.
+    /// router; egress (including replies) goes out through `router`.
     pub fn spawn(
         node_id: u16,
         runtimes: Vec<KernelRuntime>,
         inbox: Receiver<Packet>,
-        router_tx: Sender<RouterMsg>,
+        router: RouterHandle,
     ) -> GAScoreServer {
         let stats = Arc::new(GAScoreStats::default());
         let stats2 = Arc::clone(&stats);
@@ -142,7 +142,7 @@ impl GAScoreServer {
         let handle = std::thread::Builder::new()
             .name(format!("gascore-n{node_id}"))
             .spawn(move || {
-                run(node_id, runtimes, msg_rx, router_tx, &stats2);
+                run(node_id, runtimes, msg_rx, router, &stats2);
             })
             .expect("spawn gascore thread");
         GAScoreServer {
@@ -186,7 +186,7 @@ struct Pipeline {
     by_kernel: HashMap<u16, KernelRuntime>,
     local_kernels: Vec<u16>,
     hold: HoldBuffer,
-    router_tx: Sender<RouterMsg>,
+    router: RouterHandle,
     /// Set when the router side disconnected: time to exit.
     dead: bool,
 }
@@ -195,7 +195,7 @@ fn run(
     node_id: u16,
     runtimes: Vec<KernelRuntime>,
     inbox: Receiver<GAScoreMsg>,
-    router_tx: Sender<RouterMsg>,
+    router: RouterHandle,
     stats: &GAScoreStats,
 ) {
     let local_kernels: Vec<u16> = runtimes.iter().map(|r| r.kernel_id).collect();
@@ -205,7 +205,7 @@ fn run(
         by_kernel: runtimes.into_iter().map(|rt| (rt.kernel_id, rt)).collect(),
         local_kernels,
         hold: HoldBuffer::new(),
-        router_tx,
+        router,
         dead: false,
     };
 
@@ -330,7 +330,7 @@ impl Pipeline {
                                 stats.handle_replies_out.fetch_add(1, Ordering::Relaxed);
                             }
                         }
-                        if self.router_tx.send(RouterMsg::FromKernel(p)).is_err() {
+                        if self.router.from_kernel(p).is_err() {
                             self.dead = true;
                         }
                     }
@@ -347,6 +347,7 @@ impl Pipeline {
 mod tests {
     use super::*;
     use crate::am::completion::CompletionTable;
+    use crate::galapagos::router::RouterMsg;
     use crate::am::engine::BarrierState;
     use crate::am::handlers::HandlerTable;
     use crate::am::header::{AmMessage, Descriptor};
@@ -391,7 +392,7 @@ mod tests {
         let (rt3, seg3, _mrx3) = runtime(3);
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, router_rx) = mpsc::channel();
-        let mut g = GAScoreServer::spawn(0, vec![rt2, rt3], inbox_rx, router_tx);
+        let mut g = GAScoreServer::spawn(0, vec![rt2, rt3], inbox_rx, RouterHandle::single(router_tx));
 
         for (dst, val) in [(2u16, 7u8), (3, 9)] {
             let m = AmMessage {
@@ -441,7 +442,7 @@ mod tests {
         let completion = Arc::clone(&rt.completion);
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, _router_rx) = mpsc::channel();
-        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, RouterHandle::single(router_tx));
 
         let h = completion.create(1);
         let token = completion.bind_token(h);
@@ -469,7 +470,7 @@ mod tests {
         let (rt, _seg, _mrx) = runtime(2);
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, router_rx) = mpsc::channel();
-        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, RouterHandle::single(router_tx));
 
         let m = AmMessage {
             am_type: AmType::Long,
@@ -511,7 +512,7 @@ mod tests {
         let completion = Arc::clone(&rt.completion);
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, router_rx) = mpsc::channel();
-        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, RouterHandle::single(router_tx));
 
         let d = CollDesc {
             kind: CollectiveKind::AllReduce,
@@ -566,7 +567,7 @@ mod tests {
         let (rt, seg, _mrx) = runtime(2);
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, router_rx) = mpsc::channel();
-        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, RouterHandle::single(router_tx));
 
         seg.write(64, &100u64.to_le_bytes()).unwrap();
         let faa = AmMessage {
@@ -615,7 +616,7 @@ mod tests {
         let (rt, _seg, _mrx) = runtime(2);
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, _router_rx) = mpsc::channel();
-        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, router_tx);
+        let mut g = GAScoreServer::spawn(0, vec![rt], inbox_rx, RouterHandle::single(router_tx));
         inbox_tx.send(Packet::new(2, 0, vec![0xEE; 5]).unwrap()).unwrap();
         // Let the server process.
         std::thread::sleep(Duration::from_millis(50));

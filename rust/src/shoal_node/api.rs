@@ -72,7 +72,7 @@ use crate::collectives::{
 use crate::config::{ApiProfile, ChunkPolicy, ClusterSpec};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::Packet;
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::RouterHandle;
 use crate::galapagos::transport::batch::BufPool;
 use crate::memory::Segment;
 use crate::shoal_node::fastpath::{LocalFastPath, PutDisposition};
@@ -91,7 +91,7 @@ pub struct ShoalKernel {
     /// Node hosting this kernel (intra-node fast-path eligibility check).
     pub(crate) node: u16,
     pub(crate) spec: Arc<ClusterSpec>,
-    pub(crate) router_tx: std::sync::mpsc::Sender<RouterMsg>,
+    pub(crate) router: RouterHandle,
     pub(crate) segment: Segment,
     pub(crate) completion: Arc<CompletionTable>,
     pub(crate) barrier_state: Arc<BarrierState>,
@@ -130,7 +130,7 @@ impl ShoalKernel {
         id: u16,
         node: u16,
         spec: Arc<ClusterSpec>,
-        router_tx: std::sync::mpsc::Sender<RouterMsg>,
+        router: RouterHandle,
         segment: Segment,
         completion: Arc<CompletionTable>,
         barrier_state: Arc<BarrierState>,
@@ -143,7 +143,7 @@ impl ShoalKernel {
             id,
             node,
             spec,
-            router_tx,
+            router,
             segment,
             completion,
             barrier_state,
@@ -202,9 +202,7 @@ impl ShoalKernel {
     fn send_msg(&self, msg: &AmMessage) -> Result<()> {
         let bytes = msg.encode()?;
         let pkt = Packet::new(msg.dst, msg.src, bytes)?;
-        self.router_tx
-            .send(RouterMsg::FromKernel(pkt))
-            .map_err(|_| Error::Disconnected("router"))
+        self.router.from_kernel(pkt)
     }
 
     /// The zero-copy egress: encode header + args + payload straight from
@@ -242,9 +240,7 @@ impl ShoalKernel {
     /// router.
     fn dispatch_wire(&self, wb: &WireBuilder<'_>, buf: Vec<u8>) -> Result<()> {
         let pkt = Packet::new(wb.dst, wb.src, buf)?;
-        self.router_tx
-            .send(RouterMsg::FromKernel(pkt))
-            .map_err(|_| Error::Disconnected("router"))
+        self.router.from_kernel(pkt)
     }
 
     /// Stamp one chunk's token + HANDLE flag onto `wb`.

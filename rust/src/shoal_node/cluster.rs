@@ -21,6 +21,7 @@ use crate::collectives::CollectiveState;
 use crate::config::{ClusterSpec, Platform};
 use crate::error::{Error, Result};
 use crate::galapagos::node::{BoundNode, GalapagosNode};
+use crate::galapagos::router::RouterHandle;
 use crate::galapagos::transport::local::LocalFabric;
 use crate::gascore::server::GAScoreServer;
 use crate::gascore::GAScoreStats;
@@ -205,8 +206,7 @@ impl ShoalCluster {
         let mut handler_threads = Vec::new();
         let mut gascores = Vec::new();
         let mut adapters: Vec<JoinHandle<()>> = Vec::new();
-        let mut router_txs: HashMap<u16, mpsc::Sender<crate::galapagos::router::RouterMsg>> =
-            HashMap::new();
+        let mut routers: HashMap<u16, RouterHandle> = HashMap::new();
 
         for mut b in bound {
             b.set_failure_sink(Arc::clone(&sink));
@@ -240,16 +240,16 @@ impl ShoalCluster {
                         pending.push((kid, rx));
                     }
                     let node = b.start_with_delivery(peer_addrs, &fabric, delivery)?;
-                    let router_tx = node.router_tx();
+                    let router = node.router_handle();
                     for (kid, rx) in pending {
                         let ks = kstate.get(&kid).unwrap();
                         handler_threads.push(HandlerThread::spawn(
                             make_rt(kid, ks),
                             rx,
-                            router_tx.clone(),
+                            router.clone(),
                         ));
                     }
-                    router_txs.insert(node_id, node.router_tx());
+                    routers.insert(node_id, router);
                     nodes.push(node);
                 }
                 Platform::Hw => {
@@ -263,7 +263,7 @@ impl ShoalCluster {
                         .map(|&kid| make_rt(kid, kstate.get(&kid).unwrap()))
                         .collect();
                     let gascore =
-                        GAScoreServer::spawn(node_id, runtimes, rx, node.router_tx());
+                        GAScoreServer::spawn(node_id, runtimes, rx, node.router_handle());
 
                     // Hardware kernels send through the GAScore's
                     // "From Kernels" interface (§III-C egress step 1), not
@@ -292,7 +292,7 @@ impl ShoalCluster {
                     adapters.push(adapter);
 
                     gascores.push(gascore);
-                    router_txs.insert(node_id, adapter_tx);
+                    routers.insert(node_id, RouterHandle::single(adapter_tx));
                     nodes.push(node);
                 }
             }
@@ -304,7 +304,7 @@ impl ShoalCluster {
         let mut kernels = HashMap::new();
         for k in spec.kernels.iter().filter(|k| hosted.contains(&k.node)) {
             let ks = kstate.get_mut(&k.id).unwrap();
-            let router_tx = router_txs
+            let router = routers
                 .get(&k.node)
                 .ok_or(Error::UnknownNode(k.node))?
                 .clone();
@@ -318,7 +318,7 @@ impl ShoalCluster {
                     k.id,
                     k.node,
                     Arc::clone(&spec),
-                    router_tx,
+                    router,
                     ks.segment.clone(),
                     Arc::clone(&ks.completion),
                     Arc::clone(&ks.barrier),
@@ -387,8 +387,8 @@ impl ShoalCluster {
             .map(|g| g.stats())
     }
 
-    /// Router statistics for a node.
-    pub fn router_stats(&self, node_id: u16) -> Option<&crate::galapagos::router::RouterStats> {
+    /// Router statistics for a node, summed across its shards.
+    pub fn router_stats(&self, node_id: u16) -> Option<crate::galapagos::router::RouterStats> {
         self.nodes
             .iter()
             .find(|n| n.node_id == node_id)

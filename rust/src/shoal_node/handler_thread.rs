@@ -11,12 +11,12 @@
 //! so a blocked `wait(handle)` on the kernel thread wakes the moment this
 //! thread processes the matching reply packet.
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::Receiver;
 use std::thread::JoinHandle;
 
 use crate::am::engine::KernelRuntime;
 use crate::galapagos::packet::Packet;
-use crate::galapagos::router::RouterMsg;
+use crate::galapagos::router::RouterHandle;
 use crate::am::header::AmMessage;
 
 /// Handle to a running handler thread.
@@ -27,7 +27,7 @@ pub struct HandlerThread {
 impl HandlerThread {
     /// Spawn the gatekeeper for one software kernel. Exits when the delivery
     /// channel disconnects (node shutdown).
-    pub fn spawn(rt: KernelRuntime, inbox: Receiver<Packet>, router_tx: Sender<RouterMsg>) -> Self {
+    pub fn spawn(rt: KernelRuntime, inbox: Receiver<Packet>, router: RouterHandle) -> Self {
         let kernel_id = rt.kernel_id;
         let handle = std::thread::Builder::new()
             .name(format!("handler-k{kernel_id}"))
@@ -49,7 +49,7 @@ impl HandlerThread {
                             .and_then(|bytes| Packet::new(reply.dst, reply.src, bytes))
                         {
                             Ok(p) => {
-                                if router_tx.send(RouterMsg::FromKernel(p)).is_err() {
+                                if router.from_kernel(p).is_err() {
                                     emit_err = Some("router disconnected");
                                 }
                             }
@@ -83,6 +83,7 @@ impl HandlerThread {
 mod tests {
     use super::*;
     use crate::am::completion::CompletionTable;
+    use crate::galapagos::router::RouterMsg;
     use crate::am::engine::BarrierState;
     use crate::am::handlers::HandlerTable;
     use crate::collectives::CollectiveState;
@@ -108,7 +109,7 @@ mod tests {
         };
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, router_rx) = mpsc::channel();
-        let mut ht = HandlerThread::spawn(rt, inbox_rx, router_tx);
+        let mut ht = HandlerThread::spawn(rt, inbox_rx, RouterHandle::single(router_tx));
 
         let msg = AmMessage {
             am_type: AmType::Medium,
@@ -158,7 +159,7 @@ mod tests {
         };
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, _router_rx) = mpsc::channel();
-        let mut ht = HandlerThread::spawn(rt, inbox_rx, router_tx);
+        let mut ht = HandlerThread::spawn(rt, inbox_rx, RouterHandle::single(router_tx));
 
         // Register an operation the way the API does, then feed its reply in
         // through the network-delivery channel.
@@ -198,7 +199,7 @@ mod tests {
         };
         let (inbox_tx, inbox_rx) = mpsc::channel();
         let (router_tx, _router_rx) = mpsc::channel();
-        let mut ht = HandlerThread::spawn(rt, inbox_rx, router_tx);
+        let mut ht = HandlerThread::spawn(rt, inbox_rx, RouterHandle::single(router_tx));
 
         inbox_tx.send(Packet::new(1, 0, vec![0xFF; 3]).unwrap()).unwrap();
         // A valid message afterwards still gets through.

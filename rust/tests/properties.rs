@@ -419,6 +419,53 @@ fn prop_routing_table_total() {
     });
 }
 
+/// Router sharding's destination-hash ownership map is a true partition for
+/// every shard count 1..=8: each node (and kernel) id maps to exactly one
+/// in-range shard, the map is stable call-to-call (egress enqueue and
+/// ingress dispatch must agree or a peer's ARQ window would be touched by
+/// two reactors), `shards = 1` collapses everything onto shard 0, and
+/// contiguous ids spread across shards within one slot of each other.
+#[test]
+fn prop_shard_ownership_is_a_stable_partition() {
+    use shoal::galapagos::router::{shard_of_kernel, shard_of_node};
+    check("shard-ownership", 500, |rng| {
+        let nodes = rng.range(1, 256) as u16;
+        for shards in 1..=8usize {
+            let mut counts = vec![0usize; shards];
+            for node in 0..nodes {
+                let s = shard_of_node(node, shards);
+                prop_assert!(s < shards, "shard {s} out of range for {shards} shards");
+                // Stable: the send side and the ingress side compute the
+                // owner independently; they must always agree.
+                prop_assert_eq!(s, shard_of_node(node, shards));
+                prop_assert_eq!(s, shard_of_kernel(node, shards));
+                if shards == 1 {
+                    prop_assert_eq!(s, 0);
+                }
+                counts[s] += 1;
+            }
+            // Every node owned by exactly one shard (partition, not cover).
+            prop_assert_eq!(counts.iter().sum::<usize>(), nodes as usize);
+            // Contiguous ids balance within one slot of each other.
+            let min = *counts.iter().min().unwrap();
+            let max = *counts.iter().max().unwrap();
+            prop_assert!(
+                max - min <= 1,
+                "unbalanced ownership for {nodes} nodes over {shards} shards: {counts:?}"
+            );
+        }
+        // Sparse ids are still stable and in range.
+        for _ in 0..32 {
+            let node = rng.next_u32() as u16;
+            let shards = rng.range(1, 8) as usize;
+            let s = shard_of_node(node, shards);
+            prop_assert!(s < shards);
+            prop_assert_eq!(s, shard_of_node(node, shards));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_header_overhead_matches_wire() {
     check("header-overhead", 1000, |rng| {

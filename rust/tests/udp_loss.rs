@@ -69,18 +69,25 @@ count = 2
 }
 
 fn spawn_server(path: &std::path::Path, node: u16) -> Child {
-    Command::new(env!("CARGO_BIN_EXE_shoal"))
-        .args([
-            "serve",
-            "--cluster",
-            path.to_str().unwrap(),
-            "--node",
-            &node.to_string(),
-            "--app",
-            "allreduce",
-        ])
-        .env("SHOAL_UDP_DROP", DROP)
-        .stdout(Stdio::piped())
+    spawn_server_with(path, node, &[])
+}
+
+fn spawn_server_with(path: &std::path::Path, node: u16, envs: &[(&str, &str)]) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_shoal"));
+    cmd.args([
+        "serve",
+        "--cluster",
+        path.to_str().unwrap(),
+        "--node",
+        &node.to_string(),
+        "--app",
+        "allreduce",
+    ])
+    .env("SHOAL_UDP_DROP", DROP);
+    for (k, v) in envs {
+        cmd.env(k, v);
+    }
+    cmd.stdout(Stdio::piped())
         .stderr(Stdio::null())
         .spawn()
         .expect("spawn shoal serve")
@@ -165,6 +172,106 @@ fn jacobi_with_tolerance_over_lossy_udp_matches_tcp() {
     assert_eq!(tcp.iters_done, udp.iters_done, "convergence sweep count diverged");
     assert_eq!(tcp.converged, udp.converged);
     assert_eq!(tcp.grid, udp.grid, "lossy-UDP grid differs from the TCP reference");
+}
+
+/// Sharded reactors under loss: with `router_shards = 4`, destination-hashed
+/// egress ownership keeps each (source, peer) flow on exactly one ARQ
+/// endpoint pair — so delivery must stay exactly-once and in-order *per
+/// peer* even while four reactor threads drive disjoint windows over the
+/// same lossy socket.
+#[test]
+fn sharded_routers_preserve_per_peer_ordering_over_lossy_udp() {
+    let _battery = battery_guard();
+    let mut b = ClusterBuilder::new();
+    b.transport(TransportKind::Udp);
+    b.udp_window(8).udp_retries(10);
+    b.router_shards(4);
+    let n0 = b.node_at("hub", Platform::Sw, "127.0.0.1:0");
+    let k0 = b.kernel(n0);
+    let mut peer_kernels = Vec::new();
+    for i in 1..=2u16 {
+        let n = b.node_at(&format!("peer{i}"), Platform::Sw, "127.0.0.1:0");
+        peer_kernels.push(b.kernel(n));
+    }
+    let spec = b.build().unwrap();
+    let cluster = ShoalCluster::launch(&spec).unwrap();
+
+    const PER_PEER: u64 = 48;
+    let dests = peer_kernels.clone();
+    cluster.run_kernel(k0, move |mut k| {
+        let mut handles = Vec::new();
+        for seq in 0..PER_PEER {
+            for &dst in &dests {
+                handles.push(k.am_medium(dst, handlers::NOP, &[], &seq.to_le_bytes()).unwrap());
+            }
+        }
+        k.wait_all(&handles).unwrap();
+    });
+    let (tx, rx) = std::sync::mpsc::channel();
+    for &kid in &peer_kernels {
+        let tx = tx.clone();
+        cluster.run_kernel(kid, move |k| {
+            for want in 0..PER_PEER {
+                let m = k.recv_medium().unwrap();
+                let got = u64::from_le_bytes(m.payload.as_slice().try_into().unwrap());
+                assert_eq!(got, want, "kernel {kid}: medium out of order or duplicated");
+            }
+            tx.send(kid).unwrap();
+        });
+    }
+    drop(tx);
+    let mut done = std::collections::HashSet::new();
+    while done.len() < peer_kernels.len() {
+        done.insert(
+            rx.recv_timeout(std::time::Duration::from_secs(120)).expect("peer finished"),
+        );
+    }
+    cluster.join().unwrap();
+}
+
+/// The multiprocess acceptance run with four reactors per node:
+/// `SHOAL_ROUTER_SHARDS=4` exported to both processes must leave the lossy
+/// all-reduce result identical to the single-router reference.
+#[test]
+fn multiprocess_all_reduce_over_lossy_udp_with_sharded_routers() {
+    let _battery = battery_guard();
+    std::env::set_var("SHOAL_ROUTER_SHARDS", "4");
+    let _guard = PORT_LOCK.lock().unwrap();
+    let (p0, p1) = free_ports();
+    let text = cluster_file("udp", p0, p1);
+    let spec = parse_cluster(&text).unwrap();
+
+    let dir = std::env::temp_dir().join(format!("shoal-loss-shards-{p0}-{p1}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cluster.toml");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(text.as_bytes()).unwrap();
+    drop(f);
+
+    let mut server = spawn_server_with(&path, 1, &[("SHOAL_ROUTER_SHARDS", "4")]);
+    let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel();
+    cluster.run_kernel(0, move |mut k| {
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < 2 {
+            seen.insert(k.recv_medium().unwrap().src);
+        }
+        for kid in [1u16, 2] {
+            k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+        }
+        let ch = k.all_reduce_u64(ReduceOp::Sum, &[k.id() as u64]).unwrap();
+        let v = k.collective_wait_u64(ch).unwrap();
+        tx.send(v).unwrap();
+    });
+    let v = rx
+        .recv_timeout(std::time::Duration::from_secs(120))
+        .expect("sharded all-reduce over lossy udp timed out");
+    cluster.join().unwrap();
+    std::env::remove_var("SHOAL_ROUTER_SHARDS");
+    let status = server.wait().expect("server exits after the collective");
+    assert!(status.success(), "sharded server exit: {status:?}");
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(v, vec![3], "kernel ids 0+1+2");
 }
 
 /// A simulated-hardware node behind a lossy UDP link: the GAScore must see
