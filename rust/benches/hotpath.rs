@@ -10,6 +10,9 @@
 //! - intra-node one-sided put vs the loopback-router path (`local_put`
 //!   stage)
 //! - TCP egress datapath: unbatched vs coalesced small-message send rate
+//! - TCP ingress fan-in: readiness-polled per-shard event loops vs the
+//!   thread-per-connection ingress, 16 concurrent peers (`ingress_poll`
+//!   stage)
 //! - router fan-out: `router_shards = 4` vs a single reactor, 4 producers
 //!   to 16 peers over the in-process fabric (`router` stage)
 //! - PGAS segment read/write bandwidth (incl. strided)
@@ -30,7 +33,9 @@
 //! the zero-copy medium-AM send must sustain ≥1.5× the owned-encode
 //! baseline msgs/s, the intra-node one-sided put must complete in ≤0.25×
 //! the loopback-router path's latency, the batched ≤64 B send stage must
-//! sustain ≥2× the messages/sec of the unbatched stage, handle-overlapped
+//! sustain ≥2× the messages/sec of the unbatched stage, the polled ingress
+//! must sustain ≥1× the thread-per-connection msgs/s at 16 peers while
+//! holding its thread count at O(shards), handle-overlapped
 //! Long gets must complete at least as fast as the same number of
 //! sequential `wait_replies` round trips, the fast-path FAA must complete
 //! in ≤0.25× the routed FAA's latency, and the tree all-reduce must finish
@@ -125,6 +130,73 @@ fn tcp_send_rate(batch: Option<(usize, usize)>, msgs: usize) -> f64 {
     drop(egress);
     ingress.shutdown();
     rate
+}
+
+/// Time the ingress side: `peers` concurrent loopback TCP senders blasting
+/// 64 B length-prefixed frames into one node's ingress tier; returns
+/// (messages/second, steady-state ingress thread count captured while
+/// every peer is still connected). `polled = true` runs the per-shard
+/// readiness poller over 4 shards; `false` runs the historical accept
+/// thread + reader-thread-per-connection ingress.
+fn tcp_ingress_fanin(polled: bool, peers: usize, frames_per_peer: usize) -> (f64, usize) {
+    use std::io::Write;
+    const SHARDS: usize = 4;
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut ingress = if polled {
+        TcpIngress::bind_polled("127.0.0.1:0", RouterHandle::single(tx), SHARDS)
+    } else {
+        TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx))
+    }
+    .expect("bind loopback");
+    let addr = ingress.local_addr();
+
+    // Every peer connected before any traffic flows.
+    let streams: Vec<std::net::TcpStream> = (0..peers)
+        .map(|_| std::net::TcpStream::connect(addr).expect("connect"))
+        .collect();
+
+    // One pre-encoded burst per peer, written in 8 KiB chunks so the
+    // measured cost is the ingress side (accept/decode/dispatch), not
+    // frame encoding.
+    let one = {
+        let wire = Packet::new(0, 0, vec![0xA5u8; 64]).unwrap().to_wire();
+        let mut f = Vec::with_capacity(4 + wire.len());
+        f.extend_from_slice(&(wire.len() as u32).to_le_bytes());
+        f.extend_from_slice(&wire);
+        f
+    };
+    let burst: std::sync::Arc<Vec<u8>> = std::sync::Arc::new(
+        one.iter().copied().cycle().take(one.len() * frames_per_peer).collect(),
+    );
+
+    let total = peers * frames_per_peer;
+    let t0 = Instant::now();
+    let writers: Vec<_> = streams
+        .into_iter()
+        .map(|mut s| {
+            let burst = std::sync::Arc::clone(&burst);
+            std::thread::spawn(move || {
+                for chunk in burst.chunks(8 << 10) {
+                    s.write_all(chunk).expect("peer write");
+                }
+                s // hold the connection open until the caller counts threads
+            })
+        })
+        .collect();
+    let mut n = 0usize;
+    while n < total {
+        match rx.recv_timeout(std::time::Duration::from_secs(30)) {
+            Ok(RouterMsg::FromNetwork(_)) => n += 1,
+            Ok(_) => {}
+            Err(e) => panic!("ingress fan-in stalled at {n}/{total}: {e}"),
+        }
+    }
+    let rate = total as f64 / t0.elapsed().as_secs_f64();
+    let held: Vec<_> = writers.into_iter().map(|w| w.join().expect("writer")).collect();
+    let threads = ingress.ingress_threads();
+    drop(held);
+    ingress.shutdown();
+    (rate, threads)
 }
 
 /// Time the send side of `msgs` 64-byte packets through a loopback UDP
@@ -500,6 +572,47 @@ fn main() {
     println!("  [{}] batched ≥2× unbatched (small messages)", if ok { "✓" } else { "✗" });
     if !ok {
         failed_checks.push("batched send stage < 2x unbatched");
+    }
+
+    println!("== hotpath: TCP ingress fan-in (16 concurrent peers, 64 B) ==");
+    let in_frames = if quick { 500 } else { 5_000 };
+    let (legacy_rate, legacy_threads) = tcp_ingress_fanin(false, 16, in_frames);
+    println!(
+        "  thread-per-connection ingress          {:>12.0} msgs/s  ({legacy_threads} threads)",
+        legacy_rate
+    );
+    let (poll_a, polled_threads) = tcp_ingress_fanin(true, 16, in_frames);
+    let (poll_b, _) = tcp_ingress_fanin(true, 16, in_frames);
+    let polled_rate = poll_a.max(poll_b);
+    println!(
+        "  polled ingress (4 shards, best of 2)   {:>12.0} msgs/s  ({polled_threads} threads)",
+        polled_rate
+    );
+    let in_ratio = polled_rate / legacy_rate;
+    println!("      -> polled ingress {in_ratio:.2}× of thread-per-connection");
+    let mut icsv = Table::new("hotpath ingress stage").header(["stage", "value", "unit"]);
+    for (name, v, unit) in [
+        ("ingress_legacy", legacy_rate, "msgs/s"),
+        ("ingress_polled", polled_rate, "msgs/s"),
+        ("ingress_poll_ratio", in_ratio, "x"),
+        ("ingress_legacy_threads", legacy_threads as f64, "threads"),
+        ("ingress_polled_threads", polled_threads as f64, "threads"),
+    ] {
+        icsv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+        csv.row([name.to_string(), format!("{v:.2}"), unit.to_string()]);
+    }
+    if let Ok(p) = report::save_csv(&icsv, "hotpath_ingress") {
+        println!("  csv: {}", p.display());
+    }
+    let ok = in_ratio >= 1.0 && polled_threads <= 4;
+    println!(
+        "  [{}] polled ≥1× thread-per-connection at 16 peers, O(shards) threads",
+        if ok { "✓" } else { "✗" }
+    );
+    if !ok {
+        failed_checks.push(
+            "polled ingress below 1x thread-per-connection at 16 peers, or >O(shards) threads",
+        );
     }
 
     println!("== hotpath: UDP ARQ datapath (loopback, 64 B, batched) ==");

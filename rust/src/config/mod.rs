@@ -136,6 +136,15 @@ pub struct ClusterSpec {
     /// `min(4, cores)`; `1` reproduces the paper's single-router behavior
     /// exactly. Overridable at launch with `SHOAL_ROUTER_SHARDS`.
     pub router_shards: usize,
+    /// Readiness-polled ingress (default `true`): each router shard runs
+    /// one event loop (epoll on Linux, `poll(2)` elsewhere on unix)
+    /// multiplexing the TCP listener, every accepted stream it owns, and
+    /// the shared UDP socket — O(shards) ingress threads regardless of
+    /// peer count. `false` restores the historical accept thread +
+    /// reader-thread-per-connection ingress. With `router_shards = 1` and
+    /// this knob off, the datapath is the paper's single-router design
+    /// exactly. Overridable at launch with `SHOAL_INGRESS_POLL`.
+    pub ingress_poll: bool,
 }
 
 /// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
@@ -242,6 +251,25 @@ impl ClusterSpec {
         self.router_shards
     }
 
+    /// Whether nodes launch the readiness-polled ingress: the spec's
+    /// `ingress_poll`, unless `SHOAL_INGRESS_POLL` overrides it
+    /// (`1`/`true` on, `0`/`false` off). The poller needs a unix readiness
+    /// API, so non-unix targets always fall back to the thread-per-
+    /// connection ingress regardless of the knob.
+    pub fn effective_ingress_poll(&self) -> bool {
+        if !cfg!(unix) {
+            return false;
+        }
+        if let Ok(v) = std::env::var("SHOAL_INGRESS_POLL") {
+            match v.as_str() {
+                "1" | "true" => return true,
+                "0" | "false" => return false,
+                _ => log::warn!("ignoring SHOAL_INGRESS_POLL={v:?} (want 0/1/true/false)"),
+            }
+        }
+        self.ingress_poll
+    }
+
     /// Validate internal consistency (unique ids, kernels map to nodes,
     /// addresses present when a network transport is selected).
     pub fn validate(&self) -> Result<()> {
@@ -314,6 +342,7 @@ pub struct ClusterBuilder {
     udp_ack_interval_ms: u64,
     local_fastpath: bool,
     router_shards: usize,
+    ingress_poll: bool,
 }
 
 impl ClusterBuilder {
@@ -327,6 +356,7 @@ impl ClusterBuilder {
             udp_ack_interval_ms: DEFAULT_UDP_ACK_INTERVAL_MS,
             local_fastpath: true,
             router_shards: default_router_shards(),
+            ingress_poll: true,
             ..Default::default()
         }
     }
@@ -428,6 +458,12 @@ impl ClusterBuilder {
         self
     }
 
+    /// Readiness-polled ingress (`false` = thread-per-connection).
+    pub fn ingress_poll(&mut self, on: bool) -> &mut Self {
+        self.ingress_poll = on;
+        self
+    }
+
     pub fn build(self) -> Result<ClusterSpec> {
         let spec = ClusterSpec {
             nodes: self.nodes,
@@ -444,6 +480,7 @@ impl ClusterBuilder {
             udp_ack_interval_ms: self.udp_ack_interval_ms,
             local_fastpath: self.local_fastpath,
             router_shards: self.router_shards,
+            ingress_poll: self.ingress_poll,
         };
         spec.validate()?;
         Ok(spec)
@@ -571,6 +608,17 @@ mod tests {
         let s = ClusterSpec::single_node("n0", 1);
         assert_eq!(s.router_shards, default_router_shards());
         assert!((1..=4).contains(&s.router_shards));
+    }
+
+    #[test]
+    fn ingress_poll_defaults_on_and_roundtrips() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert!(s.ingress_poll);
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.ingress_poll(false);
+        assert!(!b.build().unwrap().ingress_poll);
     }
 
     #[test]

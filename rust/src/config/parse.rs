@@ -13,6 +13,7 @@
 //! flush_on_idle = true         # drain staged batches when routers idle
 //! local_fastpath = true        # intra-node one-sided puts/gets bypass the router
 //! router_shards = 4            # reactor threads per node; 1 = single router
+//! ingress_poll = true          # readiness-polled ingress; false = thread-per-connection
 //!
 //! [[node]]
 //! name = "cpu0"
@@ -74,6 +75,7 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     let mut udp_ack_interval: Option<u64> = None;
     let mut local_fastpath: Option<bool> = None;
     let mut router_shards: Option<usize> = None;
+    let mut ingress_poll: Option<bool> = None;
     let mut nodes: Vec<NodeSec> = Vec::new();
     let mut kernels: Vec<KernelSec> = Vec::new();
 
@@ -184,6 +186,13 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
                     router_shards =
                         Some(value.parse().map_err(|_| err("router_shards must be an integer"))?)
                 }
+                "ingress_poll" => {
+                    ingress_poll = Some(match value.as_str() {
+                        "true" => true,
+                        "false" => false,
+                        _ => return Err(err("ingress_poll must be true or false")),
+                    })
+                }
                 k => return Err(err(&format!("unknown top-level key '{k}'"))),
             },
             Section::Node(n) => match key {
@@ -234,6 +243,9 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     }
     if let Some(s) = router_shards {
         b.router_shards(s);
+    }
+    if let Some(on) = ingress_poll {
+        b.ingress_poll(on);
     }
 
     let mut node_ids: Vec<(String, u16)> = Vec::new();
@@ -436,5 +448,16 @@ segment = 4096
         assert_eq!(d.router_shards, crate::config::default_router_shards());
         assert!(parse_cluster(&format!("router_shards = \"many\"{base}")).is_err());
         assert!(parse_cluster(&format!("router_shards = 0{base}")).is_err());
+    }
+
+    #[test]
+    fn parses_ingress_poll_knob() {
+        let base = "\n[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        let s = parse_cluster(&format!("ingress_poll = false{base}")).unwrap();
+        assert!(!s.ingress_poll);
+        // Default when unspecified: polled ingress on.
+        let d = parse_cluster("[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n").unwrap();
+        assert!(d.ingress_poll);
+        assert!(parse_cluster(&format!("ingress_poll = maybe{base}")).is_err());
     }
 }

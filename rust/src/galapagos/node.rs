@@ -77,7 +77,14 @@ impl BoundNode {
                     .address
                     .as_deref()
                     .ok_or_else(|| Error::Config(format!("node {} has no address", node.name)))?;
-                let ing = TcpIngress::bind(addr, handle.clone())?;
+                // Polled mode: one event loop per router shard multiplexes
+                // the listener and every accepted stream; legacy mode keeps
+                // the accept thread + reader-thread-per-connection.
+                let ing = if spec.effective_ingress_poll() {
+                    TcpIngress::bind_polled(addr, handle.clone(), shards)?
+                } else {
+                    TcpIngress::bind(addr, handle.clone())?
+                };
                 advertised = Some(ing.local_addr().to_string());
                 tcp_ingress = Some(ing);
             }
@@ -257,13 +264,28 @@ impl BoundNode {
             egresses.push(egress);
         }
 
+        // With polled ingress, each shard's poller thread owns its
+        // `ArqEndpoint`'s RTO/ACK deadlines (folded into the poll timeout),
+        // so the routers park on a plain `recv` instead of waking on
+        // `recv_timeout` to service timers they no longer own.
+        let ingress_poll = self.spec.effective_ingress_poll();
+        let external_timers = ingress_poll && !arq_endpoints.is_empty();
         let udp_ingress = match (&self.spec.transport, self.udp_socket) {
-            (TransportKind::Udp, Some(sock)) => Some(UdpIngress::start_sharded(
-                sock,
-                self.handle.clone(),
-                self.udp_hw_core,
-                arq_endpoints,
-            )?),
+            (TransportKind::Udp, Some(sock)) => Some(if ingress_poll {
+                UdpIngress::start_polled(
+                    sock,
+                    self.handle.clone(),
+                    self.udp_hw_core,
+                    arq_endpoints,
+                )?
+            } else {
+                UdpIngress::start_sharded(
+                    sock,
+                    self.handle.clone(),
+                    self.udp_hw_core,
+                    arq_endpoints,
+                )?
+            }),
             _ => None,
         };
 
@@ -281,6 +303,7 @@ impl BoundNode {
                     shard,
                     flush_on_idle: self.spec.flush_on_idle,
                     failure_sink: self.failure_sink.clone(),
+                    external_timers,
                 },
                 Arc::clone(&self.table),
                 delivery.clone(),
@@ -294,8 +317,8 @@ impl BoundNode {
             node_id: self.node_id,
             routers,
             handle: self.handle,
-            _tcp_ingress: self.tcp_ingress,
-            _udp_ingress: udp_ingress,
+            tcp_ingress: self.tcp_ingress,
+            udp_ingress,
         })
     }
 }
@@ -306,8 +329,8 @@ pub struct GalapagosNode {
     pub node_id: u16,
     routers: Vec<Router>,
     handle: RouterHandle,
-    _tcp_ingress: Option<TcpIngress>,
-    _udp_ingress: Option<UdpIngress>,
+    tcp_ingress: Option<TcpIngress>,
+    udp_ingress: Option<UdpIngress>,
 }
 
 impl GalapagosNode {
@@ -342,12 +365,30 @@ impl GalapagosNode {
         GalapagosInterface::new(kernel_id, self.handle.clone(), inbox)
     }
 
-    /// Stop every router shard (transports stop on drop). Each shard
-    /// flushes its staged batches and drains its in-flight ARQ window
-    /// before joining.
+    /// Live ingress threads (accept/reader threads in legacy mode, one
+    /// poller per shard in polled mode). The connection-scaling acceptance
+    /// check reads this: polled mode holds it at O(shards) no matter how
+    /// many peers are connected.
+    pub fn ingress_thread_count(&self) -> usize {
+        self.tcp_ingress.as_ref().map_or(0, |i| i.ingress_threads())
+            + self.udp_ingress.as_ref().map_or(0, |i| i.ingress_threads())
+    }
+
+    /// Stop every router shard, then the ingress tier. Each shard flushes
+    /// its staged batches and drains its in-flight ARQ window before
+    /// joining — ingress must outlive that drain, because settling the ARQ
+    /// window needs the ingress threads alive to process returning ACKs.
+    /// Joining ingress afterwards guarantees no dispatch into the
+    /// now-stopped routers can still be in flight when this returns.
     pub fn shutdown(&mut self) {
         for r in &mut self.routers {
             r.shutdown();
+        }
+        if let Some(ing) = &mut self.tcp_ingress {
+            ing.shutdown();
+        }
+        if let Some(ing) = &mut self.udp_ingress {
+            ing.shutdown();
         }
     }
 }

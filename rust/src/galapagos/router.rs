@@ -62,6 +62,10 @@ pub struct RouterStats {
     pub dropped_unknown: AtomicU64,
     /// Egress flushes issued because the inbound queue went idle.
     pub idle_flushes: AtomicU64,
+    /// Flushes (idle or shutdown) that returned an error. Every frame of
+    /// the doomed batch is failed through the egress's own failure sink —
+    /// this counter is how tests and operators see that the path fired.
+    pub flush_failures: AtomicU64,
 }
 
 impl RouterStats {
@@ -76,6 +80,8 @@ impl RouterStats {
             .fetch_add(other.dropped_unknown.load(Ordering::Relaxed), Ordering::Relaxed);
         self.idle_flushes
             .fetch_add(other.idle_flushes.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.flush_failures
+            .fetch_add(other.flush_failures.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 }
 
@@ -235,6 +241,11 @@ pub struct RouterConfig {
     /// drop (unknown destination kernel, dead local inbox). Egress drivers
     /// carry their own copy for wire-level losses.
     pub failure_sink: Option<SendFailureSink>,
+    /// The transport's reliability timers are serviced by another thread
+    /// (the per-shard ingress poller folds ARQ RTO deadlines into its
+    /// `epoll_wait` timeout), so this reactor blocks indefinitely when idle
+    /// instead of waking on `recv_timeout` to call `Egress::service`.
+    pub external_timers: bool,
 }
 
 /// Handle to one running router shard.
@@ -298,7 +309,11 @@ impl Router {
                     since_service += 1;
                     if since_service >= SERVICE_EVERY {
                         since_service = 0;
-                        egress.service();
+                        // With external timers the ingress poller owns the
+                        // reliability deadlines; skip the periodic service.
+                        if !cfg.external_timers {
+                            egress.service();
+                        }
                     }
                     m
                 }
@@ -307,10 +322,20 @@ impl Router {
                     if cfg.flush_on_idle && egress.has_staged() {
                         stats.idle_flushes.fetch_add(1, Ordering::Relaxed);
                         if let Err(e) = egress.flush() {
+                            // The egress has already failed every frame of
+                            // the doomed batch through its own sink (the
+                            // transport failure contract); count it so the
+                            // loss is visible beyond a log line.
+                            stats.flush_failures.fetch_add(1, Ordering::Relaxed);
                             log::warn!("router n{node_id}: idle flush failed: {e}");
                         }
                     }
-                    match egress.service() {
+                    // With external timers the ingress poller owns the
+                    // reliability deadlines; this reactor parks until the
+                    // next enqueue (a poller wakeup via `from_network` or a
+                    // kernel send) instead of polling `recv_timeout`.
+                    let deadline = if cfg.external_timers { None } else { egress.service() };
+                    match deadline {
                         None => match rx.recv() {
                             Ok(m) => m,
                             Err(_) => break, // all senders gone
@@ -365,6 +390,7 @@ impl Router {
         // datagram has no other retransmitter once this process exits;
         // retry exhaustion bounds the wait well under the cap).
         if let Err(e) = egress.flush() {
+            stats.flush_failures.fetch_add(1, Ordering::Relaxed);
             log::warn!("router n{node_id}: final flush failed: {e}");
         }
         egress.drain(std::time::Duration::from_secs(10));
@@ -431,7 +457,13 @@ mod tests {
     }
 
     fn cfg(node_id: u16, flush_on_idle: bool) -> RouterConfig {
-        RouterConfig { node_id, shard: 0, flush_on_idle, failure_sink: None }
+        RouterConfig {
+            node_id,
+            shard: 0,
+            flush_on_idle,
+            failure_sink: None,
+            external_timers: false,
+        }
     }
 
     #[test]
@@ -562,7 +594,13 @@ mod tests {
         });
         let (tx, rx) = mpsc::channel();
         let mut r = Router::spawn(
-            RouterConfig { node_id: 0, shard: 0, flush_on_idle: true, failure_sink: Some(sink) },
+            RouterConfig {
+                node_id: 0,
+                shard: 0,
+                flush_on_idle: true,
+                failure_sink: Some(sink),
+                external_timers: false,
+            },
             table2(),
             HashMap::new(),
             Box::new(NullEgress),
@@ -663,7 +701,13 @@ mod tests {
         );
         let gate = Arc::new((Mutex::new(false), Condvar::new()));
         let mut shard1 = Router::spawn(
-            RouterConfig { node_id: 0, shard: 1, flush_on_idle: true, failure_sink: None },
+            RouterConfig {
+                node_id: 0,
+                shard: 1,
+                flush_on_idle: true,
+                failure_sink: None,
+                external_timers: false,
+            },
             table,
             HashMap::new(),
             Box::new(Wedge { gate: Arc::clone(&gate) }),
@@ -705,6 +749,127 @@ mod tests {
         }
         shard0.shutdown();
         shard1.shutdown();
+    }
+
+    /// Egress that stages sends and fails every flush — first reporting
+    /// each staged frame through its failure sink, per the transport
+    /// failure contract (the real TCP/UDP egresses behave this way).
+    struct FailingFlush {
+        staged: Vec<Packet>,
+        sink: SendFailureSink,
+    }
+
+    impl Egress for FailingFlush {
+        fn send(&mut self, _node: u16, pkt: Packet) -> Result<()> {
+            self.staged.push(pkt);
+            Ok(())
+        }
+
+        fn flush(&mut self) -> Result<()> {
+            if self.staged.is_empty() {
+                return Ok(());
+            }
+            for p in self.staged.drain(..) {
+                (self.sink)(&p, "injected idle-flush failure");
+            }
+            Err(Error::OperationFailed("injected idle-flush failure".into()))
+        }
+
+        fn has_staged(&self) -> bool {
+            !self.staged.is_empty()
+        }
+    }
+
+    /// Regression: an idle-flush failure must fail the exact staged
+    /// frames through the sink — not strand their owners behind a lone
+    /// warning — and the router must count it.
+    #[test]
+    fn injected_idle_flush_failure_fails_the_exact_staged_frames() {
+        let failed: Arc<Mutex<Vec<u8>>> = Arc::new(Mutex::new(Vec::new()));
+        let failed2 = Arc::clone(&failed);
+        let sink: SendFailureSink = Arc::new(move |pkt: &Packet, reason: &str| {
+            assert!(reason.contains("idle-flush"), "reason names the cause: {reason}");
+            failed2.lock().unwrap().push(pkt.data[0]);
+        });
+        let (tx, rx) = mpsc::channel();
+        let mut r = Router::spawn(
+            cfg(0, true),
+            table2(),
+            HashMap::new(),
+            Box::new(FailingFlush { staged: Vec::new(), sink }),
+            rx,
+            tx.clone(),
+        );
+        // Three remote packets (kernel 2 lives on node 1), then silence:
+        // the queue idles and the injected flush failure fires.
+        for i in [7u8, 8, 9] {
+            tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![i]).unwrap())).unwrap();
+        }
+        for _ in 0..400 {
+            if failed.lock().unwrap().len() == 3 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(
+            *failed.lock().unwrap(),
+            vec![7, 8, 9],
+            "every staged frame must reach the sink, in order"
+        );
+        r.shutdown();
+        assert!(
+            r.stats.flush_failures.load(Ordering::Relaxed) >= 1,
+            "flush failure must be counted, not just logged"
+        );
+    }
+
+    /// Egress that counts `service` calls and always reports an imminent
+    /// timer deadline.
+    struct TimerSpy {
+        calls: Arc<AtomicU64>,
+    }
+
+    impl Egress for TimerSpy {
+        fn send(&mut self, _node: u16, _pkt: Packet) -> Result<()> {
+            Ok(())
+        }
+
+        fn service(&mut self) -> Option<Duration> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            Some(Duration::from_millis(1))
+        }
+    }
+
+    /// With `external_timers` the reactor must park on a plain `recv` —
+    /// no `recv_timeout` polling, no `service` calls (the ingress poller
+    /// owns the deadlines). Without it, the idle loop services repeatedly.
+    #[test]
+    fn external_timers_stop_the_idle_service_polling() {
+        let run = |external: bool| {
+            let calls = Arc::new(AtomicU64::new(0));
+            let (tx, rx) = mpsc::channel();
+            let mut r = Router::spawn(
+                RouterConfig {
+                    node_id: 0,
+                    shard: 0,
+                    flush_on_idle: true,
+                    failure_sink: None,
+                    external_timers: external,
+                },
+                table2(),
+                HashMap::new(),
+                Box::new(TimerSpy { calls: Arc::clone(&calls) }),
+                rx,
+                tx.clone(),
+            );
+            tx.send(RouterMsg::FromKernel(Packet::new(2, 0, vec![1]).unwrap())).unwrap();
+            std::thread::sleep(Duration::from_millis(80));
+            let n = calls.load(Ordering::Relaxed);
+            r.shutdown();
+            n
+        };
+        assert_eq!(run(true), 0, "external timers must suppress router-side service");
+        assert!(run(false) >= 1, "internal timers must keep servicing on idle");
     }
 
     #[test]

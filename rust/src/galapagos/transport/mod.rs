@@ -65,10 +65,16 @@
 //! - [`arq`]   — sliding-window ARQ (sequence numbers, cumulative ACK +
 //!   SACK, retransmission, backpressure) under the UDP transport.
 //! - [`batch`] — the shared coalescing/pooling building blocks.
+//! - [`poll`]  — readiness polling (epoll with a portable `poll(2)`
+//!   fallback) behind the per-shard ingress event loops: with the
+//!   `ingress_poll` knob on, each router shard multiplexes its accepted
+//!   TCP streams, the listener, and the shared UDP socket over one
+//!   blocking wait instead of a thread per connection.
 
 pub mod arq;
 pub mod batch;
 pub mod local;
+pub mod poll;
 pub mod tcp;
 pub mod udp;
 

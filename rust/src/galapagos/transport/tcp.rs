@@ -13,13 +13,43 @@
 //! is just a byte sequence, coalescing frames into one write is bitwise
 //! identical on the wire to writing them one by one — the ingress frame
 //! decoder is unchanged either way.
+//!
+//! Ingress runs in one of two modes:
+//!
+//! - **Polled** (`ingress_poll = true`, the default): one event-loop
+//!   thread per router shard, each owning a [`poll::Poller`](super::poll)
+//!   over its accepted nonblocking streams. Shard 0 additionally owns the
+//!   nonblocking listener; accepted connections are handed round-robin to
+//!   their owning shard through a channel + waker. Partial-frame decode
+//!   state lives in a per-connection [`FrameAssembler`], so a shard can
+//!   serve hundreds of peers from O(shards) threads with no sleep-based
+//!   busy polling anywhere on the accept path. Per-peer ordering is
+//!   preserved exactly as in the thread-per-connection design: one
+//!   connection is read, in order, by exactly one thread, and
+//!   `RouterHandle::from_network` hashes by source peer.
+//! - **Thread-per-connection** (`ingress_poll = false`): the historical
+//!   accept thread + blocking reader thread per peer.
+//!
+//! Both modes share the accept-error policy ([`classify_accept_error`]):
+//! transient failures (EMFILE, ECONNABORTED, EINTR, ...) back off and
+//! retry; a truly fatal listener death is surfaced through
+//! [`IngressStats::listener_dead`] and an error log instead of silently
+//! wedging new-connection intake. Both also join their threads with a
+//! bounded deadline on shutdown, so no detached reader can dispatch into a
+//! router that is already draining.
 
 use std::collections::HashMap;
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS, LEN_PREFIX_BYTES};
+use super::poll::{PollEvent, Poller, Waker};
 use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
@@ -224,68 +254,278 @@ impl Egress for TcpEgress {
     }
 }
 
-/// Inbound half: accept loop + per-connection reader threads feeding the
-/// router ingress.
+/// Counters for one node's TCP ingress tier, shared by its accept/poll
+/// threads. Exposed so listener health is observable — a dead listener is
+/// a real event the node must surface, not a log line to lose.
+#[derive(Debug, Default)]
+pub struct IngressStats {
+    /// Connections accepted over the ingress lifetime.
+    pub accepted: AtomicU64,
+    /// Connections closed (peer EOF, read error, or protocol violation).
+    pub closed: AtomicU64,
+    /// Transient accept failures retried with backoff (EMFILE,
+    /// ECONNABORTED, EINTR, ...).
+    pub transient_accept_errors: AtomicU64,
+    /// Set when the listener died fatally: the node stops admitting *new*
+    /// connections. Established connections keep flowing.
+    pub listener_dead: AtomicBool,
+}
+
+/// What an `accept(2)` error means for the listener.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AcceptDisposition {
+    /// Per-accept condition that clears on its own (fd exhaustion, the
+    /// peer aborted mid-handshake, a signal) — back off and keep
+    /// accepting.
+    Transient,
+    /// The listener itself is broken; retrying can never succeed.
+    Fatal,
+}
+
+/// Classify an accept error. Treating every error as fatal was the
+/// historical silent-death bug: one EMFILE burst and the node never
+/// admitted a connection again.
+pub fn classify_accept_error(e: &std::io::Error) -> AcceptDisposition {
+    use std::io::ErrorKind as K;
+    match e.kind() {
+        K::WouldBlock
+        | K::Interrupted
+        | K::ConnectionAborted
+        | K::ConnectionReset
+        | K::TimedOut => return AcceptDisposition::Transient,
+        _ => {}
+    }
+    // Resource exhaustion has no stable ErrorKind; match raw errnos (Linux
+    // values): EINTR, EAGAIN, ENOMEM, ENFILE, EMFILE, EPROTO,
+    // ECONNABORTED, ENOBUFS.
+    match e.raw_os_error() {
+        Some(4 | 11 | 12 | 23 | 24 | 71 | 103 | 105) => AcceptDisposition::Transient,
+        _ => AcceptDisposition::Fatal,
+    }
+}
+
+const ACCEPT_BACKOFF_MIN: Duration = Duration::from_millis(5);
+const ACCEPT_BACKOFF_MAX: Duration = Duration::from_millis(200);
+
+/// Doubling backoff for transient accept errors, reset by any success.
+struct AcceptBackoff {
+    cur: Duration,
+}
+
+impl AcceptBackoff {
+    fn new() -> Self {
+        Self { cur: ACCEPT_BACKOFF_MIN }
+    }
+    fn next(&mut self) -> Duration {
+        let d = self.cur;
+        self.cur = (self.cur * 2).min(ACCEPT_BACKOFF_MAX);
+        d
+    }
+    fn reset(&mut self) {
+        self.cur = ACCEPT_BACKOFF_MIN;
+    }
+}
+
+/// Per-connection partial-frame decode state for the polled ingress: a
+/// nonblocking read delivers an arbitrary byte run, the assembler buffers
+/// it and yields every complete `[u32 LE len | wire]` frame in order.
+#[derive(Default)]
+pub struct FrameAssembler {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl FrameAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Buffered bytes not yet assembled into a frame.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Feed `bytes`, invoking `deliver` once per completed packet (in wire
+    /// order). Returns `false` when the connection must close: an
+    /// oversized frame (protocol violation — resynchronization is
+    /// impossible on a corrupt length prefix) or `deliver` refusing a
+    /// packet (router gone). Malformed packet bodies are logged and
+    /// skipped, matching the blocking decoder.
+    pub fn push(&mut self, bytes: &[u8], deliver: &mut dyn FnMut(Packet) -> bool) -> bool {
+        self.buf.extend_from_slice(bytes);
+        loop {
+            let avail = self.buf.len() - self.start;
+            if avail < FRAME_HEADER_BYTES {
+                break;
+            }
+            let len = u32::from_le_bytes(
+                self.buf[self.start..self.start + FRAME_HEADER_BYTES].try_into().unwrap(),
+            ) as usize;
+            if len > MAX_PACKET_BYTES {
+                log::warn!("tcp frame of {len} bytes exceeds packet cap; closing connection");
+                return false;
+            }
+            if avail < FRAME_HEADER_BYTES + len {
+                break;
+            }
+            let body = self.start + FRAME_HEADER_BYTES;
+            let frame = &self.buf[body..body + len];
+            match Packet::from_wire(frame) {
+                Ok(pkt) => {
+                    if !deliver(pkt) {
+                        return false;
+                    }
+                }
+                Err(e) => log::warn!("tcp: malformed packet dropped: {e}"),
+            }
+            self.start += FRAME_HEADER_BYTES + len;
+        }
+        // Reclaim consumed space: free when fully drained, compact once the
+        // dead prefix is worth a memmove.
+        if self.start == self.buf.len() {
+            self.buf.clear();
+            self.start = 0;
+        } else if self.start >= 64 * 1024 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        true
+    }
+}
+
+/// Inbound half: per-shard polled event loops (`bind_polled`) or the
+/// thread-per-connection accept loop (`bind`), both feeding the router.
 pub struct TcpIngress {
-    accept_handle: Option<JoinHandle<()>>,
     local_addr: std::net::SocketAddr,
-    shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<IngressStats>,
+    /// Thread-per-connection mode.
+    accept_handle: Option<JoinHandle<()>>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    /// Polled mode: one event loop per router shard.
+    pollers: Vec<JoinHandle<()>>,
+    wakers: Vec<Waker>,
 }
 
 impl TcpIngress {
-    /// Bind `addr` and start accepting. Received packets go through
-    /// `router`, which hashes each one to the shard owning its source peer.
+    /// Bind `addr` and start the thread-per-connection ingress (the
+    /// `ingress_poll = false` path). Received packets go through `router`,
+    /// which hashes each one to the shard owning its source peer.
     pub fn bind(addr: &str, router: RouterHandle) -> Result<TcpIngress> {
         let listener = TcpListener::bind(addr)?;
         let local_addr = listener.local_addr()?;
-        let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let sd = std::sync::Arc::clone(&shutdown);
         listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(IngressStats::default());
+        let readers = Arc::new(Mutex::new(Vec::new()));
+        let (sd, st, rd) = (Arc::clone(&shutdown), Arc::clone(&stats), Arc::clone(&readers));
         let accept_handle = std::thread::Builder::new()
             .name(format!("tcp-accept-{local_addr}"))
             .spawn(move || {
-                let mut readers = Vec::new();
-                loop {
-                    if sd.load(std::sync::atomic::Ordering::Relaxed) {
-                        break;
-                    }
-                    match listener.accept() {
-                        Ok((stream, _peer)) => {
-                            stream.set_nonblocking(false).ok();
-                            stream.set_nodelay(true).ok();
-                            let handle = router.clone();
-                            let sd2 = std::sync::Arc::clone(&sd);
-                            readers.push(std::thread::spawn(move || {
-                                read_frames(stream, handle, sd2);
-                            }));
-                        }
-                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(2));
-                        }
-                        Err(e) => {
-                            log::warn!("tcp accept error: {e}");
-                            break;
-                        }
-                    }
-                }
-                // Reader threads exit when their peer closes or on shutdown
-                // flag; detach rather than join to avoid blocking teardown on
-                // an idle read.
-                drop(readers);
+                run_accept_loop(|| listener.accept().map(|(s, _)| s), router, sd, rd, st)
             })
             .expect("spawn tcp accept thread");
-        Ok(TcpIngress { accept_handle: Some(accept_handle), local_addr, shutdown })
+        Ok(TcpIngress {
+            local_addr,
+            shutdown,
+            stats,
+            accept_handle: Some(accept_handle),
+            readers,
+            pollers: Vec::new(),
+            wakers: Vec::new(),
+        })
+    }
+
+    /// Bind `addr` and start the polled ingress: `shards` event-loop
+    /// threads over nonblocking sockets (the `ingress_poll = true` path).
+    /// Shard 0's poller owns the listener; accepted streams are assigned
+    /// round-robin and each is read, in order, by exactly one shard.
+    pub fn bind_polled(addr: &str, router: RouterHandle, shards: usize) -> Result<TcpIngress> {
+        let shards = shards.max(1);
+        let listener = TcpListener::bind(addr)?;
+        let local_addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let stats = Arc::new(IngressStats::default());
+        let mut pollers_init = Vec::with_capacity(shards);
+        let mut wakers = Vec::with_capacity(shards);
+        let mut conn_txs = Vec::with_capacity(shards);
+        let mut conn_rxs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let p = Poller::new().map_err(Error::Io)?;
+            wakers.push(p.waker());
+            let (tx, rx) = std::sync::mpsc::channel();
+            conn_txs.push(tx);
+            conn_rxs.push(rx);
+            pollers_init.push(p);
+        }
+        let mut listener = Some(listener);
+        let mut threads = Vec::with_capacity(shards);
+        for (shard, (poller, conn_rx)) in pollers_init.into_iter().zip(conn_rxs).enumerate() {
+            let ps = PolledShard {
+                shard,
+                shards,
+                poller,
+                listener: if shard == 0 { listener.take() } else { None },
+                conn_rx,
+                conn_txs: if shard == 0 { conn_txs.clone() } else { Vec::new() },
+                wakers: if shard == 0 { wakers.clone() } else { Vec::new() },
+                router: router.clone(),
+                shutdown: Arc::clone(&shutdown),
+                stats: Arc::clone(&stats),
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("tcp-poll-{local_addr}-s{shard}"))
+                    .spawn(move || ps.run())
+                    .expect("spawn tcp poll thread"),
+            );
+        }
+        Ok(TcpIngress {
+            local_addr,
+            shutdown,
+            stats,
+            accept_handle: None,
+            readers: Arc::new(Mutex::new(Vec::new())),
+            pollers: threads,
+            wakers,
+        })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.local_addr
     }
 
+    /// Shared ingress counters (listener health, connection churn).
+    pub fn stats(&self) -> Arc<IngressStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Live ingress threads: O(shards) in polled mode, accept thread +
+    /// one reader per live connection in thread-per-connection mode.
+    pub fn ingress_threads(&self) -> usize {
+        if !self.pollers.is_empty() {
+            return self.pollers.len();
+        }
+        let readers = self.readers.lock().unwrap().iter().filter(|h| !h.is_finished()).count();
+        usize::from(self.accept_handle.is_some()) + readers
+    }
+
+    /// Stop accepting and reading, then join every ingress thread with a
+    /// bounded deadline. When this returns, no thread of this ingress will
+    /// dispatch another packet — the teardown guarantee the historical
+    /// detach-on-shutdown violated.
     pub fn shutdown(&mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
+        self.shutdown.store(true, Ordering::Relaxed);
+        for w in &self.wakers {
+            w.wake();
+        }
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        let readers = std::mem::take(&mut *self.readers.lock().unwrap());
+        join_bounded(readers, Duration::from_secs(2), "reader");
+        join_bounded(std::mem::take(&mut self.pollers), Duration::from_secs(2), "poller");
     }
 }
 
@@ -295,15 +535,313 @@ impl Drop for TcpIngress {
     }
 }
 
+/// Join `handles`, bounding the *total* wait by `deadline`; a handle that
+/// misses it is detached with a warning rather than blocking teardown
+/// forever.
+fn join_bounded(handles: Vec<JoinHandle<()>>, deadline: Duration, what: &str) {
+    let t0 = Instant::now();
+    for h in handles {
+        while !h.is_finished() && t0.elapsed() < deadline {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        if h.is_finished() {
+            let _ = h.join();
+        } else {
+            log::warn!(
+                "tcp ingress: {what} thread missed the {deadline:?} shutdown deadline; detaching"
+            );
+        }
+    }
+}
+
+/// Thread-per-connection accept loop (`ingress_poll = false`). Factored
+/// over an accept closure so the error policy is testable with injected
+/// failures.
+fn run_accept_loop(
+    mut accept: impl FnMut() -> std::io::Result<TcpStream>,
+    router: RouterHandle,
+    shutdown: Arc<AtomicBool>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    stats: Arc<IngressStats>,
+) {
+    let mut backoff = AcceptBackoff::new();
+    loop {
+        if shutdown.load(Ordering::Relaxed) {
+            break;
+        }
+        match accept() {
+            Ok(stream) => {
+                backoff.reset();
+                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                stream.set_nonblocking(false).ok();
+                stream.set_nodelay(true).ok();
+                let handle = router.clone();
+                let sd2 = Arc::clone(&shutdown);
+                let st2 = Arc::clone(&stats);
+                let reader = std::thread::spawn(move || {
+                    read_frames(stream, handle, sd2);
+                    st2.closed.fetch_add(1, Ordering::Relaxed);
+                });
+                let mut guard = readers.lock().unwrap();
+                // Reap finished readers so the vec tracks live connections.
+                guard.retain(|h| !h.is_finished());
+                guard.push(reader);
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => match classify_accept_error(&e) {
+                AcceptDisposition::Transient => {
+                    stats.transient_accept_errors.fetch_add(1, Ordering::Relaxed);
+                    let pause = backoff.next();
+                    log::warn!("tcp accept: transient error (retrying in {pause:?}): {e}");
+                    std::thread::sleep(pause);
+                }
+                AcceptDisposition::Fatal => {
+                    stats.listener_dead.store(true, Ordering::Relaxed);
+                    log::error!("tcp listener died; node no longer admits connections: {e}");
+                    break;
+                }
+            },
+        }
+    }
+}
+
+/// Token the listener is registered under in shard 0's poller
+/// (connection tokens count up from 0; `WAKE_TOKEN` is `u64::MAX`).
+const LISTENER_TOKEN: u64 = u64::MAX - 1;
+/// Read buffer per shard; one buffer serves every connection the shard
+/// owns since reads are sequential within the event loop.
+const READ_CHUNK_BYTES: usize = 64 << 10;
+/// Fairness bounds: level-triggered readiness re-reports leftover work on
+/// the next wait, so bounding per-event work keeps one hot fd from
+/// starving the rest of the shard.
+const MAX_ACCEPTS_PER_WAKE: usize = 64;
+const MAX_READS_PER_EVENT: usize = 8;
+
+/// One router shard's ingress event loop: its poller, its owned
+/// connections, and (shard 0 only) the node's listener plus the handoff
+/// lanes to the other shards.
+struct PolledShard {
+    shard: usize,
+    shards: usize,
+    poller: Poller,
+    listener: Option<TcpListener>,
+    conn_rx: Receiver<TcpStream>,
+    conn_txs: Vec<Sender<TcpStream>>,
+    wakers: Vec<Waker>,
+    router: RouterHandle,
+    shutdown: Arc<AtomicBool>,
+    stats: Arc<IngressStats>,
+}
+
+impl PolledShard {
+    fn run(self) {
+        let PolledShard {
+            shard,
+            shards,
+            mut poller,
+            mut listener,
+            conn_rx,
+            conn_txs,
+            wakers,
+            router,
+            shutdown,
+            stats,
+        } = self;
+        let mut conns: HashMap<u64, (TcpStream, FrameAssembler)> = HashMap::new();
+        let mut next_token = 0u64;
+        let mut accepted_total = 0u64;
+        let mut backoff = AcceptBackoff::new();
+        let mut accept_paused_until: Option<Instant> = None;
+        let mut events: Vec<PollEvent> = Vec::new();
+        let mut scratch = vec![0u8; READ_CHUNK_BYTES];
+
+        if let Some(l) = &listener {
+            if let Err(e) = poller.register(l.as_raw_fd(), LISTENER_TOKEN) {
+                log::error!("tcp ingress shard {shard}: cannot watch listener: {e}");
+                stats.listener_dead.store(true, Ordering::Relaxed);
+                listener = None;
+            }
+        }
+
+        loop {
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            // Re-arm the listener once a transient-error pause elapses; until
+            // then the pause bounds the wait (no sleeps on the accept path).
+            let mut timeout = None;
+            if let Some(t) = accept_paused_until {
+                let now = Instant::now();
+                if now >= t {
+                    accept_paused_until = None;
+                    if let Some(l) = &listener {
+                        if let Err(e) = poller.register(l.as_raw_fd(), LISTENER_TOKEN) {
+                            log::error!("tcp ingress shard {shard}: cannot re-arm listener: {e}");
+                            stats.listener_dead.store(true, Ordering::Relaxed);
+                            listener = None;
+                        }
+                    }
+                } else {
+                    timeout = Some(t - now);
+                }
+            }
+            if let Err(e) = poller.wait(timeout, &mut events) {
+                log::error!("tcp ingress shard {shard}: poll failed, shard exiting: {e}");
+                break;
+            }
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            for &ev in &events {
+                if ev.token == super::poll::WAKE_TOKEN {
+                    // New connections handed over by shard 0's accept path.
+                    while let Ok(s) = conn_rx.try_recv() {
+                        adopt_conn(&mut poller, &mut conns, &mut next_token, s, &stats);
+                    }
+                } else if ev.token == LISTENER_TOKEN {
+                    let mut drop_listener = false;
+                    if let Some(l) = &listener {
+                        let mut pause = false;
+                        let mut fatal = false;
+                        for _ in 0..MAX_ACCEPTS_PER_WAKE {
+                            match l.accept() {
+                                Ok((s, _peer)) => {
+                                    backoff.reset();
+                                    stats.accepted.fetch_add(1, Ordering::Relaxed);
+                                    let target = (accepted_total % shards as u64) as usize;
+                                    accepted_total += 1;
+                                    if target == shard {
+                                        adopt_conn(
+                                            &mut poller,
+                                            &mut conns,
+                                            &mut next_token,
+                                            s,
+                                            &stats,
+                                        );
+                                    } else if conn_txs[target].send(s).is_ok() {
+                                        wakers[target].wake();
+                                    }
+                                }
+                                Err(ref e)
+                                    if e.kind() == std::io::ErrorKind::WouldBlock =>
+                                {
+                                    break;
+                                }
+                                Err(e) => match classify_accept_error(&e) {
+                                    AcceptDisposition::Transient => {
+                                        stats
+                                            .transient_accept_errors
+                                            .fetch_add(1, Ordering::Relaxed);
+                                        let pause_for = backoff.next();
+                                        log::warn!(
+                                            "tcp accept: transient error (pausing {pause_for:?}): {e}"
+                                        );
+                                        accept_paused_until = Some(Instant::now() + pause_for);
+                                        pause = true;
+                                        break;
+                                    }
+                                    AcceptDisposition::Fatal => {
+                                        stats.listener_dead.store(true, Ordering::Relaxed);
+                                        log::error!(
+                                            "tcp listener died; node no longer admits connections: {e}"
+                                        );
+                                        fatal = true;
+                                        break;
+                                    }
+                                },
+                            }
+                        }
+                        if pause || fatal {
+                            let _ = poller.deregister(l.as_raw_fd());
+                        }
+                        drop_listener = fatal;
+                    }
+                    if drop_listener {
+                        listener = None;
+                    }
+                } else {
+                    let close = match conns.get_mut(&ev.token) {
+                        // Already closed earlier in this event batch.
+                        None => continue,
+                        Some((stream, asm)) => {
+                            let mut close = false;
+                            for _ in 0..MAX_READS_PER_EVENT {
+                                match stream.read(&mut scratch) {
+                                    Ok(0) => {
+                                        close = true;
+                                        break;
+                                    }
+                                    Ok(n) => {
+                                        let ok = asm.push(&scratch[..n], &mut |p| {
+                                            router.from_network(p).is_ok()
+                                        });
+                                        if !ok {
+                                            close = true;
+                                            break;
+                                        }
+                                    }
+                                    Err(ref e)
+                                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                                    {
+                                        break;
+                                    }
+                                    Err(ref e)
+                                        if e.kind() == std::io::ErrorKind::Interrupted =>
+                                    {
+                                        continue;
+                                    }
+                                    Err(e) => {
+                                        log::debug!("tcp connection read error: {e}");
+                                        close = true;
+                                        break;
+                                    }
+                                }
+                            }
+                            close
+                        }
+                    };
+                    if close {
+                        if let Some((stream, _)) = conns.remove(&ev.token) {
+                            let _ = poller.deregister(stream.as_raw_fd());
+                            stats.closed.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Take ownership of an accepted stream in this shard's event loop.
+fn adopt_conn(
+    poller: &mut Poller,
+    conns: &mut HashMap<u64, (TcpStream, FrameAssembler)>,
+    next_token: &mut u64,
+    stream: TcpStream,
+    stats: &IngressStats,
+) {
+    if stream.set_nonblocking(true).is_err() {
+        stats.closed.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    stream.set_nodelay(true).ok();
+    let token = *next_token;
+    *next_token += 1;
+    if let Err(e) = poller.register(stream.as_raw_fd(), token) {
+        log::warn!("tcp ingress: cannot watch new connection: {e}");
+        stats.closed.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    conns.insert(token, (stream, FrameAssembler::new()));
+}
+
 /// Frame-decode loop over the (possibly coalesced) byte stream: read a
 /// length prefix, read that many wire bytes, hand the packet to the
 /// router, repeat. A batch of N coalesced frames yields N router packets
 /// in send order — the stream carries no batch boundaries.
-fn read_frames(
-    mut stream: TcpStream,
-    router: RouterHandle,
-    shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
-) {
+fn read_frames(mut stream: TcpStream, router: RouterHandle, shutdown: Arc<AtomicBool>) {
     // Bounded read timeout so the thread notices shutdown.
     stream
         .set_read_timeout(Some(std::time::Duration::from_millis(100)))
@@ -548,5 +1086,243 @@ mod tests {
         let mut got = vec![0u8; expect.len()];
         conn.read_exact(&mut got).unwrap();
         assert_eq!(got, expect);
+    }
+
+    // ---- accept-error policy (satellite: silent listener death) ----
+
+    #[test]
+    fn accept_error_classification() {
+        use std::io::{Error as IoError, ErrorKind};
+        // Resource exhaustion and per-connection handshake failures are
+        // transient...
+        for errno in [24 /* EMFILE */, 23 /* ENFILE */, 4 /* EINTR */, 103 /* ECONNABORTED */] {
+            assert_eq!(
+                classify_accept_error(&IoError::from_raw_os_error(errno)),
+                AcceptDisposition::Transient,
+                "errno {errno}"
+            );
+        }
+        assert_eq!(
+            classify_accept_error(&IoError::new(ErrorKind::ConnectionAborted, "aborted")),
+            AcceptDisposition::Transient
+        );
+        // ...but a broken listener fd is fatal.
+        assert_eq!(
+            classify_accept_error(&IoError::from_raw_os_error(9 /* EBADF */)),
+            AcceptDisposition::Fatal
+        );
+        assert_eq!(
+            classify_accept_error(&IoError::new(ErrorKind::InvalidInput, "bogus")),
+            AcceptDisposition::Fatal
+        );
+    }
+
+    /// Regression (silent accept death): a transient-error storm must not
+    /// stop intake — connections accepted after EMFILE/ECONNABORTED/EINTR
+    /// still get readers — while a truly fatal error ends the loop loudly
+    /// through stats instead of a silent break.
+    #[test]
+    fn injected_accept_failures_retry_then_surface_fatal_death() {
+        use std::collections::VecDeque;
+        let (tx, rx) = mpsc::channel();
+        let router = RouterHandle::single(tx);
+        // A real connected pair: the "accepted" side goes through the loop.
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let mut client = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (server, _) = l.accept().unwrap();
+        let mut script: VecDeque<std::io::Result<TcpStream>> = VecDeque::from([
+            Err(std::io::Error::from_raw_os_error(24)), // EMFILE
+            Err(std::io::Error::new(std::io::ErrorKind::ConnectionAborted, "aborted")),
+            Err(std::io::Error::from_raw_os_error(4)), // EINTR
+            Ok(server),
+            Err(std::io::Error::from_raw_os_error(9)), // EBADF: fatal
+        ]);
+        let readers = Arc::new(Mutex::new(Vec::new()));
+        let stats = Arc::new(IngressStats::default());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        run_accept_loop(
+            move || script.pop_front().expect("loop must stop at the fatal error"),
+            router,
+            Arc::clone(&shutdown),
+            Arc::clone(&readers),
+            Arc::clone(&stats),
+        );
+        // The loop returned because of the fatal error — and said so.
+        assert!(stats.listener_dead.load(Ordering::Relaxed));
+        assert_eq!(stats.transient_accept_errors.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.accepted.load(Ordering::Relaxed), 1);
+        // The connection admitted mid-storm is live: frames still flow.
+        let pkt = Packet::new(1, 2, vec![7, 8, 9]).unwrap();
+        client.write_all(&(pkt.wire_len() as u32).to_le_bytes()).unwrap();
+        client.write_all(&pkt.to_wire()).unwrap();
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p, pkt),
+            other => panic!("unexpected {other:?}"),
+        }
+        shutdown.store(true, Ordering::Relaxed);
+        join_bounded(
+            std::mem::take(&mut *readers.lock().unwrap()),
+            std::time::Duration::from_secs(2),
+            "reader",
+        );
+    }
+
+    // ---- FrameAssembler (polled-mode decode state) ----
+
+    fn frame_bytes(pkts: &[Packet]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for p in pkts {
+            out.extend_from_slice(&(p.wire_len() as u32).to_le_bytes());
+            out.extend_from_slice(&p.to_wire());
+        }
+        out
+    }
+
+    /// Any split of the byte stream — down to one byte per push — yields
+    /// the same packets in the same order.
+    #[test]
+    fn assembler_reassembles_across_arbitrary_splits() {
+        let pkts: Vec<Packet> = (0..20u8)
+            .map(|i| Packet::new(i as u16, 3, vec![i; 1 + (i as usize % 7)]).unwrap())
+            .collect();
+        let bytes = frame_bytes(&pkts);
+        for chunk in [1usize, 2, 3, 5, 16, bytes.len()] {
+            let mut asm = FrameAssembler::new();
+            let mut got = Vec::new();
+            for piece in bytes.chunks(chunk) {
+                assert!(asm.push(piece, &mut |p| {
+                    got.push(p);
+                    true
+                }));
+            }
+            assert_eq!(got, pkts, "chunk size {chunk}");
+            assert_eq!(asm.pending_bytes(), 0);
+        }
+    }
+
+    #[test]
+    fn assembler_rejects_oversized_frame() {
+        let mut asm = FrameAssembler::new();
+        let bogus = ((MAX_PACKET_BYTES + 1) as u32).to_le_bytes();
+        assert!(!asm.push(&bogus, &mut |_| true), "oversized length prefix must close");
+    }
+
+    #[test]
+    fn assembler_skips_malformed_packet_but_keeps_stream() {
+        let good = Packet::new(5, 6, vec![1, 2]).unwrap();
+        let mut bytes = Vec::new();
+        // A frame whose body is not a decodable packet...
+        bytes.extend_from_slice(&3u32.to_le_bytes());
+        bytes.extend_from_slice(&[0xFF, 0xFF, 0xFF]);
+        // ...followed by a good one.
+        bytes.extend_from_slice(&(good.wire_len() as u32).to_le_bytes());
+        bytes.extend_from_slice(&good.to_wire());
+        let mut got = Vec::new();
+        let mut asm = FrameAssembler::new();
+        assert!(asm.push(&bytes, &mut |p| {
+            got.push(p);
+            true
+        }));
+        assert_eq!(got, vec![good]);
+    }
+
+    #[test]
+    fn assembler_stops_when_deliver_refuses() {
+        let pkts: Vec<Packet> = (0..3u8).map(|i| Packet::new(0, 0, vec![i]).unwrap()).collect();
+        let bytes = frame_bytes(&pkts);
+        let mut n = 0;
+        let mut asm = FrameAssembler::new();
+        assert!(!asm.push(&bytes, &mut |_| {
+            n += 1;
+            n < 2 // refuse the second packet (router gone)
+        }));
+        assert_eq!(n, 2);
+    }
+
+    // ---- polled ingress ----
+
+    #[test]
+    fn polled_roundtrip_over_loopback() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind_polled("127.0.0.1:0", RouterHandle::single(tx), 2).unwrap();
+        assert_eq!(ingress.ingress_threads(), 2, "polled mode is O(shards) threads");
+        let addr = ingress.local_addr().to_string();
+        let mut egress = TcpEgress::new(HashMap::from([(1u16, addr)]));
+        let pkt = Packet::new(3, 4, vec![1, 2, 3]).unwrap();
+        egress.send(1, pkt.clone()).unwrap();
+        match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p, pkt),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// Coalesced batches decode to N packets in send order through the
+    /// polled per-connection assembler, exactly like the blocking decoder.
+    #[test]
+    fn polled_ingress_decodes_coalesced_batches_in_order() {
+        let (tx, rx) = mpsc::channel();
+        let ingress = TcpIngress::bind_polled("127.0.0.1:0", RouterHandle::single(tx), 4).unwrap();
+        let addr = ingress.local_addr().to_string();
+        let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, addr)]), 1 << 16, 1024);
+        const N: u8 = 50;
+        for i in 0..N {
+            egress.send(1, Packet::new(2, 3, vec![i; 16]).unwrap()).unwrap();
+        }
+        egress.flush().unwrap();
+        for i in 0..N {
+            match rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap() {
+                RouterMsg::FromNetwork(p) => assert_eq!(p.data, vec![i; 16]),
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+    }
+
+    // ---- teardown race (satellite: detached readers vs. draining router) ----
+
+    /// After `shutdown()` returns, no ingress thread may dispatch another
+    /// packet — the historical detach-on-shutdown let a reader hand frames
+    /// to a router that was already draining.
+    fn no_dispatch_after_shutdown(polled: bool) {
+        let (tx, rx) = mpsc::channel();
+        let mut ingress = if polled {
+            TcpIngress::bind_polled("127.0.0.1:0", RouterHandle::single(tx), 2).unwrap()
+        } else {
+            TcpIngress::bind("127.0.0.1:0", RouterHandle::single(tx)).unwrap()
+        };
+        let addr = ingress.local_addr();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        // A writer that keeps blasting frames through shutdown.
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            let pkt = Packet::new(0, 0, vec![1; 32]).unwrap();
+            let mut frame = (pkt.wire_len() as u32).to_le_bytes().to_vec();
+            frame.extend_from_slice(&pkt.to_wire());
+            while !stop2.load(Ordering::Relaxed) {
+                if s.write_all(&frame).is_err() {
+                    break;
+                }
+            }
+        });
+        // Traffic is flowing...
+        rx.recv_timeout(std::time::Duration::from_secs(5)).expect("traffic must flow");
+        ingress.shutdown();
+        // Everything in the queue was dispatched before shutdown returned;
+        // drain it, then nothing new may arrive.
+        while rx.try_recv().is_ok() {}
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        assert!(rx.try_recv().is_err(), "packet dispatched after shutdown() returned");
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn no_dispatch_after_shutdown_thread_per_connection() {
+        no_dispatch_after_shutdown(false);
+    }
+
+    #[test]
+    fn no_dispatch_after_shutdown_polled() {
+        no_dispatch_after_shutdown(true);
     }
 }

@@ -20,11 +20,15 @@
 
 use std::collections::HashMap;
 use std::net::UdpSocket;
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use super::arq::{for_each_frame, ArqEndpoint, ARQ_HEADER_BYTES, ARQ_MAGIC};
 use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS};
+use super::poll::{self, Poller, Waker};
 use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
@@ -255,11 +259,15 @@ impl Egress for UdpEgress {
     }
 }
 
-/// Inbound half: a reader thread on the bound socket.
+/// Inbound half: either a single blocking reader thread on the bound
+/// socket (`start*`), or — with `ingress_poll` on — one readiness-polled
+/// reader per router shard (`start_polled`), each servicing its own
+/// `ArqEndpoint`'s socket readiness and RTO timers from one wait.
 pub struct UdpIngress {
-    handle: Option<JoinHandle<()>>,
+    threads: Vec<JoinHandle<()>>,
+    wakers: Vec<Waker>,
     local_addr: std::net::SocketAddr,
-    shutdown: std::sync::Arc<std::sync::atomic::AtomicBool>,
+    shutdown: Arc<AtomicBool>,
 }
 
 impl UdpIngress {
@@ -303,15 +311,15 @@ impl UdpIngress {
         arqs: Vec<Arc<ArqEndpoint>>,
     ) -> Result<UdpIngress> {
         let local_addr = socket.local_addr()?;
-        let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let sd = std::sync::Arc::clone(&shutdown);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let sd = Arc::clone(&shutdown);
         socket.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
         let handle = std::thread::Builder::new()
             .name(format!("udp-rx-{local_addr}"))
             .spawn(move || {
                 let mut buf = vec![0u8; MAX_PACKET_BYTES + 64];
                 loop {
-                    if sd.load(std::sync::atomic::Ordering::Relaxed) {
+                    if sd.load(Ordering::Relaxed) {
                         break;
                     }
                     match socket.recv_from(&mut buf) {
@@ -353,16 +361,89 @@ impl UdpIngress {
                 }
             })
             .expect("spawn udp reader");
-        Ok(UdpIngress { handle: Some(handle), local_addr, shutdown })
+        Ok(UdpIngress { threads: vec![handle], wakers: Vec::new(), local_addr, shutdown })
+    }
+
+    /// Start the readiness-polled ingress (`ingress_poll = true`): one
+    /// event-loop thread per ARQ endpoint (per router shard), each with its
+    /// own poller watching the *shared* socket. Reads use `MSG_DONTWAIT`
+    /// per call, so the socket itself stays blocking for the egress side.
+    ///
+    /// Every thread opportunistically receives from the socket; a datagram
+    /// whose source peer belongs to a sibling shard is forwarded through
+    /// that shard's handoff lane (channel + waker). All ARQ processing and
+    /// router dispatch for one peer therefore happen on exactly one thread
+    /// — sequence spaces stay single-writer and per-peer delivery order is
+    /// preserved (the window machinery reorders any handoff-lane skew, as
+    /// it would network reordering). Each thread also services its own
+    /// endpoint's RTO/ACK timers, bounding its wait by the next deadline —
+    /// this replaces the router idle loop's `recv_timeout` timer servicing
+    /// (see `RouterConfig::external_timers`).
+    ///
+    /// With no endpoints (`arqs` empty — the raw lossy datapath) a single
+    /// polled thread serves the socket, preserving the historical
+    /// single-reader arrival order.
+    pub fn start_polled(
+        socket: UdpSocket,
+        router: RouterHandle,
+        hw_core: bool,
+        arqs: Vec<Arc<ArqEndpoint>>,
+    ) -> Result<UdpIngress> {
+        let local_addr = socket.local_addr()?;
+        let shards = arqs.len().max(1);
+        let socket = Arc::new(socket);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let mut pollers_init = Vec::with_capacity(shards);
+        let mut wakers = Vec::with_capacity(shards);
+        let mut dgram_txs = Vec::with_capacity(shards);
+        let mut dgram_rxs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let p = Poller::new().map_err(Error::Io)?;
+            wakers.push(p.waker());
+            let (tx, rx) = std::sync::mpsc::channel::<Vec<u8>>();
+            dgram_txs.push(tx);
+            dgram_rxs.push(rx);
+            pollers_init.push(p);
+        }
+        let mut threads = Vec::with_capacity(shards);
+        for (shard, (poller, dgram_rx)) in pollers_init.into_iter().zip(dgram_rxs).enumerate() {
+            let us = PolledUdpShard {
+                shard,
+                socket: Arc::clone(&socket),
+                poller,
+                dgram_rx,
+                dgram_txs: dgram_txs.clone(),
+                wakers: wakers.clone(),
+                arqs: arqs.clone(),
+                router: router.clone(),
+                hw_core,
+                shutdown: Arc::clone(&shutdown),
+            };
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("udp-poll-{local_addr}-s{shard}"))
+                    .spawn(move || us.run())
+                    .expect("spawn udp poll thread"),
+            );
+        }
+        Ok(UdpIngress { threads, wakers, local_addr, shutdown })
     }
 
     pub fn local_addr(&self) -> std::net::SocketAddr {
         self.local_addr
     }
 
+    /// Live ingress reader threads (O(shards) in polled mode, 1 otherwise).
+    pub fn ingress_threads(&self) -> usize {
+        self.threads.len()
+    }
+
     pub fn shutdown(&mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::Relaxed);
-        if let Some(h) = self.handle.take() {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for w in &self.wakers {
+            w.wake();
+        }
+        for h in self.threads.drain(..) {
             let _ = h.join();
         }
     }
@@ -371,6 +452,120 @@ impl UdpIngress {
 impl Drop for UdpIngress {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Per-wake fairness bound on socket reads; level-triggered readiness
+/// re-reports any leftover queue on the next wait.
+const MAX_RECVS_PER_WAKE: usize = 256;
+/// Token the shared UDP socket is registered under in each shard's poller.
+const UDP_SOCKET_TOKEN: u64 = 1;
+
+/// One router shard's polled UDP reader: its poller over the shared
+/// socket, its own ARQ endpoint's timers, and the handoff lanes to and
+/// from sibling shards.
+struct PolledUdpShard {
+    shard: usize,
+    socket: Arc<UdpSocket>,
+    poller: Poller,
+    dgram_rx: Receiver<Vec<u8>>,
+    dgram_txs: Vec<Sender<Vec<u8>>>,
+    wakers: Vec<Waker>,
+    arqs: Vec<Arc<ArqEndpoint>>,
+    router: RouterHandle,
+    hw_core: bool,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl PolledUdpShard {
+    fn run(mut self) {
+        let fd = self.socket.as_raw_fd();
+        if let Err(e) = self.poller.register(fd, UDP_SOCKET_TOKEN) {
+            log::error!("udp ingress shard {}: cannot watch socket: {e}", self.shard);
+            return;
+        }
+        let own_arq = self.arqs.get(self.shard).cloned();
+        let mut buf = vec![0u8; MAX_PACKET_BYTES + 64];
+        let mut events = Vec::new();
+        'outer: loop {
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            // Service this shard's due ARQ timers (retransmits, delayed
+            // ACKs); the next deadline bounds the wait so an RTO can never
+            // oversleep.
+            let timeout = own_arq.as_ref().and_then(|ep| ep.service());
+            if let Err(e) = self.poller.wait(timeout, &mut events) {
+                log::error!("udp ingress shard {}: poll failed, shard exiting: {e}", self.shard);
+                break;
+            }
+            if self.shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            // Datagrams a sibling shard received whose source peer we own.
+            while let Ok(d) = self.dgram_rx.try_recv() {
+                if !handle_owned_datagram(&d, own_arq.as_deref(), &self.router) {
+                    break 'outer; // router gone
+                }
+            }
+            if !events.iter().any(|e| e.token == UDP_SOCKET_TOKEN) {
+                continue;
+            }
+            for _ in 0..MAX_RECVS_PER_WAKE {
+                match poll::recv_nonblocking(fd, &mut buf) {
+                    Ok(n) => {
+                        if self.hw_core && n > UDP_MTU_PAYLOAD {
+                            log::warn!("hw udp core dropped fragmented datagram of {n} bytes");
+                            continue;
+                        }
+                        let dgram = &buf[..n];
+                        if self.arqs.is_empty() {
+                            if !decode_datagram(dgram, &self.router) {
+                                break 'outer; // router gone
+                            }
+                            continue;
+                        }
+                        if dgram.len() < ARQ_HEADER_BYTES || dgram[0] != ARQ_MAGIC {
+                            log::warn!("arq: dropping non-ARQ datagram of {} bytes", dgram.len());
+                            continue;
+                        }
+                        let src_node = u16::from_le_bytes([dgram[2], dgram[3]]);
+                        let owner = shard_of_node(src_node, self.arqs.len());
+                        if owner == self.shard {
+                            if !handle_owned_datagram(dgram, own_arq.as_deref(), &self.router) {
+                                break 'outer; // router gone
+                            }
+                        } else if self.dgram_txs[owner].send(dgram.to_vec()).is_ok() {
+                            self.wakers[owner].wake();
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => {
+                        log::warn!("udp recv error: {e}");
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Process one datagram owned by this shard: through its ARQ endpoint in
+/// reliable mode (header strip, ACK, dedup/reorder — only in-order
+/// payloads come back), straight to the frame decoder otherwise. Returns
+/// `false` when the router side is gone.
+fn handle_owned_datagram(dgram: &[u8], arq: Option<&ArqEndpoint>, router: &RouterHandle) -> bool {
+    match arq {
+        None => decode_datagram(dgram, router),
+        Some(ep) => {
+            for payload in ep.on_datagram(dgram) {
+                if !decode_datagram(&payload, router) {
+                    return false;
+                }
+            }
+            true
+        }
     }
 }
 
@@ -465,9 +660,13 @@ mod tests {
             None,
         ));
         let (tx, rx) = mpsc::channel();
-        let _ingress =
-            UdpIngress::start_with_reliability(rx_sock, RouterHandle::single(tx), false, Some(recv_ep))
-                .unwrap();
+        let _ingress = UdpIngress::start_with_reliability(
+            rx_sock,
+            RouterHandle::single(tx),
+            false,
+            Some(recv_ep),
+        )
+        .unwrap();
 
         let mut egress =
             UdpEgress::with_batching(tx_sock, HashMap::from([(1u16, rx_addr)]), false, 256, 4)
@@ -700,12 +899,33 @@ mod tests {
         }
     }
 
+    /// Raw (no-ARQ) datapath through the polled ingress: a single polled
+    /// reader replaces the blocking one, same decode, same delivery.
+    #[test]
+    fn polled_raw_roundtrip_over_loopback() {
+        let rx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let addr = rx_sock.local_addr().unwrap().to_string();
+        let (tx, rx) = mpsc::channel();
+        let ingress =
+            UdpIngress::start_polled(rx_sock, RouterHandle::single(tx), false, Vec::new()).unwrap();
+        assert_eq!(ingress.ingress_threads(), 1, "raw polled mode is single-reader");
+
+        let tx_sock = UdpSocket::bind("127.0.0.1:0").unwrap();
+        let mut egress = UdpEgress::new(tx_sock, HashMap::from([(1u16, addr)]), false);
+        let pkt = Packet::new(1, 2, vec![42; 100]).unwrap();
+        egress.send(1, pkt.clone()).unwrap();
+        match rx.recv_timeout(Duration::from_secs(5)).unwrap() {
+            RouterMsg::FromNetwork(p) => assert_eq!(p, pkt),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
     /// A sharded ingress dispatches each reliable datagram to the endpoint
     /// owned by the shard of its *source* node (ARQ header bytes 2–3), so
     /// two peers with independent sequence spaces land on their own
-    /// endpoints and both flows deliver exactly once.
-    #[test]
-    fn sharded_ingress_dispatches_by_source_node() {
+    /// endpoints and both flows deliver exactly once. Exercised through
+    /// both the blocking single-reader and the per-shard polled ingress.
+    fn sharded_dispatch_by_source_node(polled: bool) {
         let cfg = |node_id| ArqConfig {
             node_id,
             window: 8,
@@ -733,13 +953,13 @@ mod tests {
             None,
         ));
         let (tx, rx) = mpsc::channel();
-        let _ingress = UdpIngress::start_sharded(
-            rx_sock,
-            RouterHandle::single(tx),
-            false,
-            vec![rx_ep0, rx_ep1],
-        )
-        .unwrap();
+        let arqs = vec![rx_ep0, rx_ep1];
+        let ingress = if polled {
+            UdpIngress::start_polled(rx_sock, RouterHandle::single(tx), false, arqs).unwrap()
+        } else {
+            UdpIngress::start_sharded(rx_sock, RouterHandle::single(tx), false, arqs).unwrap()
+        };
+        assert_eq!(ingress.ingress_threads(), if polled { 2 } else { 1 });
 
         const PER_PEER: u8 = 20;
         let mut keep = Vec::new();
@@ -788,5 +1008,15 @@ mod tests {
             ep.drain(Duration::from_secs(5));
             assert!(!ep.has_inflight(), "sender window did not drain");
         }
+    }
+
+    #[test]
+    fn sharded_ingress_dispatches_by_source_node() {
+        sharded_dispatch_by_source_node(false);
+    }
+
+    #[test]
+    fn polled_sharded_ingress_dispatches_by_source_node() {
+        sharded_dispatch_by_source_node(true);
     }
 }

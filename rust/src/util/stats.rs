@@ -95,7 +95,9 @@ impl Summary {
             return f64::NAN;
         }
         let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // total_cmp: a stray NaN sample (e.g. a zero-duration timing
+        // artifact divided out) must not panic the whole bench report.
+        s.sort_by(f64::total_cmp);
         let pos = q.clamp(0.0, 1.0) * (s.len() - 1) as f64;
         let lo = pos.floor() as usize;
         let hi = pos.ceil() as usize;
@@ -224,6 +226,24 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert!(s.median().is_nan());
+    }
+
+    /// Regression: percentile() used `partial_cmp().unwrap()`, which
+    /// panicked the moment any sample was NaN. With `total_cmp` the sort
+    /// is total — NaN sorts above +inf — and finite quantiles survive.
+    #[test]
+    fn percentile_survives_nan_and_inf_samples() {
+        let mut s = Summary::new();
+        for v in [3.0, f64::NAN, 1.0, f64::INFINITY, 2.0, f64::NEG_INFINITY] {
+            s.push(v);
+        }
+        // Must not panic; the extremes land at the ends of the total order.
+        assert_eq!(s.percentile(0.0), f64::NEG_INFINITY);
+        assert!(s.percentile(1.0).is_nan(), "NaN sorts last under total_cmp");
+        // The median of [-inf, 1, 2, 3, +inf, NaN] interpolates 2 and 3.
+        assert!((s.median() - 2.5).abs() < 1e-12);
+        let p40 = s.percentile(0.4);
+        assert!(p40.is_finite(), "interior percentile stays finite, got {p40}");
     }
 
     #[test]

@@ -1,0 +1,116 @@
+//! Connection-scaling acceptance test for the readiness-polled ingress:
+//! one 4-shard node must serve ≥128 *simultaneous* TCP peers with
+//! O(shards) ingress threads — no thread per connection — while
+//! preserving exactly-once, in-order delivery per peer and dispatching
+//! each peer's flow to the shard owning its source node (the PR 7
+//! invariant).
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use shoal::galapagos::packet::Packet;
+use shoal::galapagos::router::{shard_of_node, RouterHandle, RouterMsg, RoutingTable};
+use shoal::galapagos::transport::tcp::TcpIngress;
+
+const PEERS: u16 = 128;
+const SHARDS: usize = 4;
+const FRAMES_PER_PEER: u8 = 32;
+
+/// Length-prefixed wire frame carrying one packet from kernel `src`.
+fn frame(src: u16, seq: u8) -> Vec<u8> {
+    let pkt = Packet::new(0, src, vec![seq, 0xAB, 0xCD]).unwrap();
+    let wire = pkt.to_wire();
+    let mut out = Vec::with_capacity(4 + wire.len());
+    out.extend_from_slice(&(wire.len() as u32).to_le_bytes());
+    out.extend_from_slice(&wire);
+    out
+}
+
+#[test]
+fn polled_node_serves_128_peers_with_shard_count_threads() {
+    // Kernel i lives on node i: source-peer ownership is then
+    // `shard_of_node(src)` exactly as the sharded router computes it.
+    let table = std::sync::Arc::new(RoutingTable::new(
+        (0..=PEERS).map(|i| (i, i)),
+    ));
+    let (txs, rxs): (Vec<_>, Vec<_>) = (0..SHARDS).map(|_| mpsc::channel()).unzip();
+    let handle = RouterHandle::new(0, table, txs);
+    let mut ingress = TcpIngress::bind_polled("127.0.0.1:0", handle, SHARDS).unwrap();
+    let addr = ingress.local_addr();
+
+    // One poller thread per shard, independent of how many peers connect.
+    assert_eq!(ingress.ingress_threads(), SHARDS);
+
+    // All 128 streams open before any traffic flows: the node holds every
+    // connection simultaneously.
+    let mut streams: Vec<(u16, TcpStream)> = (1..=PEERS)
+        .map(|peer| {
+            let s = TcpStream::connect(addr).unwrap_or_else(|e| {
+                panic!("peer {peer} failed to connect (of {PEERS}): {e}")
+            });
+            (peer, s)
+        })
+        .collect();
+
+    // Per-shard drains, started before the writers so backpressure can't
+    // wedge the pollers' dispatch.
+    let drains: Vec<_> = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(shard, rx)| {
+            std::thread::spawn(move || {
+                // Nodes 1..=128 split evenly: 32 peers per shard.
+                let expect = (PEERS as usize / SHARDS) * FRAMES_PER_PEER as usize;
+                let mut got: Vec<(u16, u8)> = Vec::with_capacity(expect);
+                while got.len() < expect {
+                    match rx.recv_timeout(Duration::from_secs(30)) {
+                        Ok(RouterMsg::FromNetwork(p)) => got.push((p.src, p.data[0])),
+                        Ok(other) => panic!("shard {shard}: unexpected {other:?}"),
+                        Err(e) => panic!(
+                            "shard {shard}: stalled at {}/{expect} packets: {e}",
+                            got.len()
+                        ),
+                    }
+                }
+                got
+            })
+        })
+        .collect();
+
+    // Interleave writes across all peers, splitting every frame into two
+    // TCP writes so shards constantly juggle partial-frame decode state
+    // across hundreds of streams.
+    for seq in 0..FRAMES_PER_PEER {
+        for (peer, stream) in &mut streams {
+            let f = frame(*peer, seq);
+            stream.write_all(&f[..3]).unwrap();
+            stream.write_all(&f[3..]).unwrap();
+        }
+    }
+
+    let mut per_peer: HashMap<u16, Vec<u8>> = HashMap::new();
+    for (shard, d) in drains.into_iter().enumerate() {
+        for (src, seq) in d.join().unwrap() {
+            assert_eq!(
+                shard_of_node(src, SHARDS),
+                shard,
+                "peer {src} dispatched to shard {shard}, not its owner"
+            );
+            per_peer.entry(src).or_default().push(seq);
+        }
+    }
+    assert_eq!(per_peer.len(), PEERS as usize, "every peer must deliver");
+    let want: Vec<u8> = (0..FRAMES_PER_PEER).collect();
+    for (peer, seqs) in &per_peer {
+        assert_eq!(seqs, &want, "peer {peer}: exactly-once in-order delivery broken");
+    }
+
+    // Steady state with 128 live connections: still O(shards) threads.
+    assert_eq!(ingress.ingress_threads(), SHARDS);
+
+    drop(streams);
+    ingress.shutdown();
+}
