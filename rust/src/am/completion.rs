@@ -43,6 +43,7 @@ const COMPLETED_KEEP: usize = 4096;
 /// what the `wait_replies(n)` compatibility shim counts (0 for asynchronous
 /// sends, > 1 when chunking split an oversized payload).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[must_use = "completion is only observed by waiting on the handle"]
 pub struct AmHandle {
     slot: u32,
     gen: u32,
@@ -143,9 +144,11 @@ impl CompletionTable {
         if chunks == 0 {
             return AmHandle::completed();
         }
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         // Bound completed-but-unwaited entries (wait_replies-only callers).
         while g.completed_fifo.len() > COMPLETED_KEEP {
+            // shoal-lint: allow(unwrap) the while condition guarantees a queued entry
             let (slot, gen) = g.completed_fifo.pop_front().unwrap();
             let reap = matches!(
                 g.slots.get(slot as usize),
@@ -178,6 +181,7 @@ impl CompletionTable {
     /// Issue a fresh nonzero wire token bound to `h`. Each chunk of an
     /// operation carries its own token; the reply's token resolves it.
     pub fn bind_token(&self, h: AmHandle) -> u32 {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         debug_assert!(h.slot != SLOT_NONE, "bind_token on a completed handle");
         loop {
@@ -201,6 +205,7 @@ impl CompletionTable {
     /// `token` and bump the shim counter. Unknown or stale tokens (operation
     /// already failed/reaped) still count toward `wait_replies`.
     pub fn resolve(&self, token: u32) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         Self::resolve_token(&mut g, token, None);
         self.cv.notify_all();
@@ -210,6 +215,7 @@ impl CompletionTable {
     /// old word a remote atomic returned). The value is stored on the slot
     /// for [`wait_value`](CompletionTable::wait_value) to extract.
     pub fn resolve_with(&self, token: u32, value: u64) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         Self::resolve_token(&mut g, token, Some(value));
         self.cv.notify_all();
@@ -241,6 +247,7 @@ impl CompletionTable {
     /// Count a reply that carries no handle token (legacy THeGASNet-style
     /// Short replies): shim counter only.
     pub fn resolve_legacy(&self) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         g.resolved_total += 1;
         self.cv.notify_all();
@@ -272,6 +279,7 @@ impl CompletionTable {
         if h.slot == SLOT_NONE {
             return;
         }
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         Self::fail_slot(&mut g, h.slot, h.gen, reason);
         self.cv.notify_all();
@@ -285,6 +293,7 @@ impl CompletionTable {
     /// the exact handle fails instead of stranding until timeout. Unknown
     /// or stale tokens (operation already completed or reaped) are ignored.
     pub fn fail_token(&self, token: u32, reason: &str) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         if let Some(&(slot, gen)) = g.tokens.get(&token) {
             Self::fail_slot(&mut g, slot, gen, reason);
@@ -299,6 +308,7 @@ impl CompletionTable {
     /// reply bookkeeping). A failed operation surfaces its reason as an
     /// error (also consuming).
     pub fn test(&self, h: AmHandle) -> Result<Option<bool>> {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         match Self::terminal_state(&g, h) {
             Some(Ok(())) => {
@@ -319,6 +329,7 @@ impl CompletionTable {
     /// failed operation returns its send error instead.
     pub fn wait(&self, h: AmHandle, timeout: Duration) -> Result<bool> {
         let deadline = std::time::Instant::now() + timeout;
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         loop {
             match Self::terminal_state(&g, h) {
@@ -331,6 +342,7 @@ impl CompletionTable {
                     if now >= deadline {
                         return Err(Error::Timeout("handle completion"));
                     }
+                    // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
                     let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
                     g = guard;
                 }
@@ -345,6 +357,7 @@ impl CompletionTable {
     /// reading as zero. A failed operation returns its send error.
     pub fn wait_value(&self, h: AmHandle, timeout: Duration) -> Result<(u64, bool)> {
         let deadline = std::time::Instant::now() + timeout;
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         loop {
             match Self::terminal_state(&g, h) {
@@ -372,6 +385,7 @@ impl CompletionTable {
                     if now >= deadline {
                         return Err(Error::Timeout("fetch completion"));
                     }
+                    // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
                     let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
                     g = guard;
                 }
@@ -395,6 +409,7 @@ impl CompletionTable {
             return Err(Error::EmptyWaitSet("wait_any"));
         }
         let deadline = std::time::Instant::now() + timeout;
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         loop {
             let start = g.wait_any_rr % hs.len();
@@ -411,6 +426,7 @@ impl CompletionTable {
             if now >= deadline {
                 return Err(Error::Timeout("handle completion (any)"));
             }
+            // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
             let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
         }
@@ -470,6 +486,7 @@ impl CompletionTable {
 
     /// Total replies ever resolved (handle-bound and legacy).
     pub fn resolved_total(&self) -> u64 {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         self.inner.lock().unwrap().resolved_total
     }
 
@@ -479,6 +496,7 @@ impl CompletionTable {
     /// this fails fast with the cause instead of burning the full timeout.
     pub fn wait_total(&self, target: u64, timeout: Duration) -> Result<()> {
         let deadline = std::time::Instant::now() + timeout;
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         while g.resolved_total < target {
             // Unreachable target: even if every live operation's reply lands,
@@ -495,6 +513,7 @@ impl CompletionTable {
             if now >= deadline {
                 return Err(Error::Timeout("replies"));
             }
+            // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
             let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
         }
@@ -503,6 +522,7 @@ impl CompletionTable {
 
     /// Live (in-flight or terminal-unconsumed) entries — table occupancy.
     pub fn live_entries(&self) -> usize {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let g = self.inner.lock().unwrap();
         g.slots.len() - g.free.len()
     }

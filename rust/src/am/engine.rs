@@ -72,6 +72,7 @@ impl BarrierState {
 
     /// Record that `kernel` entered `epoch` (master side).
     pub fn record_enter(&self, kernel: u16, epoch: u64) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         g.ledger.record_enter(kernel, epoch);
         self.cv.notify_all();
@@ -81,6 +82,7 @@ impl BarrierState {
     /// ledger at epoch 0, so a barrier timeout names peers that never
     /// entered any barrier at all.
     pub fn note_members(&self, kernels: &[u16]) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         for &k in kernels {
             g.ledger.note_member(k);
@@ -89,6 +91,7 @@ impl BarrierState {
 
     /// Record a RELEASE for `epoch` (worker side).
     pub fn record_release(&self, epoch: u64) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         g.released = g.released.max(epoch);
         self.cv.notify_all();
@@ -97,6 +100,7 @@ impl BarrierState {
     /// Master: wait until `n` kernels have entered `epoch`. A timeout names
     /// the straggling kernels the ledger knows about.
     pub fn wait_enters(&self, epoch: u64, n: u64, timeout: Duration) -> Result<()> {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         let deadline = std::time::Instant::now() + timeout;
         while g.ledger.entered_count(epoch) < n {
@@ -109,6 +113,7 @@ impl BarrierState {
                 );
                 return Err(Error::Timeout("barrier enters"));
             }
+            // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
             let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
         }
@@ -117,6 +122,7 @@ impl BarrierState {
 
     /// Worker: wait until `epoch` has been released.
     pub fn wait_release(&self, epoch: u64, timeout: Duration) -> Result<()> {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         let deadline = std::time::Instant::now() + timeout;
         while g.released < epoch {
@@ -124,6 +130,7 @@ impl BarrierState {
             if now >= deadline {
                 return Err(Error::Timeout("barrier release"));
             }
+            // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
             let (guard, _) = self.cv.wait_timeout(g, deadline - now).unwrap();
             g = guard;
         }
@@ -133,6 +140,7 @@ impl BarrierState {
     /// Highest epoch all of `expected` peers have entered (master-side
     /// cluster progress view).
     pub fn cluster_epoch(&self, expected: u64) -> u64 {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         self.inner.lock().unwrap().ledger.cluster_epoch(expected)
     }
 }
@@ -437,6 +445,7 @@ pub(crate) fn execute_atomic(
     payload: &[u8],
 ) -> Result<u64> {
     if op.is_accumulate() {
+        // shoal-lint: allow(unwrap) is_accumulate() guarantees a reduction mapping
         let rop = op.reduce_op().expect("accumulate op maps to a reduction");
         segment.accumulate(addr, rop, lane, payload)?;
         Ok(0)

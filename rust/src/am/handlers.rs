@@ -62,6 +62,7 @@ impl HandlerTable {
                 "handler id {id} is reserved (user ids start at {USER_BASE})"
             )));
         }
+        // shoal-lint: allow(unwrap) handler-table RwLock poisoning propagates a handler panic
         self.user.write().unwrap().insert(id, f);
         Ok(())
     }
@@ -72,6 +73,7 @@ impl HandlerTable {
         if msg.handler < USER_BASE {
             return Ok(false); // built-ins handled by the engine
         }
+        // shoal-lint: allow(unwrap) handler-table RwLock poisoning propagates a handler panic
         let table = self.user.read().unwrap();
         match table.get(&msg.handler) {
             Some(f) => {
@@ -88,6 +90,7 @@ impl HandlerTable {
     }
 
     pub fn has(&self, id: u8) -> bool {
+        // shoal-lint: allow(unwrap) handler-table RwLock poisoning propagates a handler panic
         self.user.read().unwrap().contains_key(&id)
     }
 }

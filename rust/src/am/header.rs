@@ -445,6 +445,7 @@ impl<'a> Reader<'a> {
 
     fn u64(&mut self) -> Result<u64> {
         let s = self.take(8)?;
+        // shoal-lint: allow(unwrap) the slice length is fixed by the bytes just taken
         Ok(u64::from_le_bytes(s.try_into().unwrap()))
     }
 }

@@ -1,0 +1,357 @@
+//! A lightweight Rust lexer for `shoal-check`.
+//!
+//! This is not a compiler front end: it produces exactly the token stream
+//! the repo-specific lints in [`super::lints`] need — identifiers,
+//! single-character punctuation, and opaque literal tokens — plus a side
+//! list of comments with their line spans (the lints read `// SAFETY:`
+//! justifications and `// shoal-lint:` annotations out of them). It
+//! understands the parts of the surface syntax that would otherwise
+//! produce false tokens: nested block comments, string/char/byte/raw-string
+//! literals, and the `'a` lifetime vs `'a'` char ambiguity.
+
+/// What a token is; `text` in [`Tok`] carries the identifier or
+/// punctuation character, and is empty for literals (their content is
+/// irrelevant to every lint and must never be mistaken for code).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Lifetime,
+    Num,
+}
+
+/// One token with the 1-based source line it starts on.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub line: u32,
+    pub kind: TokKind,
+    pub text: String,
+}
+
+/// One comment (line `//…` or block `/*…*/`, doc or plain) with the
+/// 1-based lines it covers and its full text including delimiters.
+#[derive(Clone, Debug)]
+pub struct Comment {
+    pub line: u32,
+    pub line_end: u32,
+    pub text: String,
+}
+
+/// Lexer output: the code tokens and, separately, every comment.
+#[derive(Debug, Default)]
+pub struct Lexed {
+    pub tokens: Vec<Tok>,
+    pub comments: Vec<Comment>,
+}
+
+struct Cursor {
+    chars: Vec<char>,
+    i: usize,
+    line: u32,
+}
+
+impl Cursor {
+    fn peek(&self) -> Option<char> {
+        self.chars.get(self.i).copied()
+    }
+
+    fn peek_at(&self, ahead: usize) -> Option<char> {
+        self.chars.get(self.i + ahead).copied()
+    }
+
+    fn bump(&mut self) -> Option<char> {
+        let c = self.chars.get(self.i).copied();
+        if let Some(c) = c {
+            self.i += 1;
+            if c == '\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens + comments. Never fails: unterminated literals
+/// or comments simply run to end of input (the lints operate on whatever
+/// was recognized, and `cargo build` is the authority on well-formedness).
+pub fn lex(src: &str) -> Lexed {
+    let mut cur = Cursor { chars: src.chars().collect(), i: 0, line: 1 };
+    let mut out = Lexed::default();
+
+    while let Some(c) = cur.peek() {
+        let line = cur.line;
+        match c {
+            c if c.is_whitespace() => {
+                cur.bump();
+            }
+            '/' if cur.peek_at(1) == Some('/') => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek() {
+                    if c == '\n' {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                out.comments.push(Comment { line, line_end: line, text });
+            }
+            '/' if cur.peek_at(1) == Some('*') => {
+                let mut text = String::new();
+                let mut depth = 0usize;
+                // Nested block comments: `/* /* */ */` is one comment.
+                while let Some(c) = cur.peek() {
+                    if c == '/' && cur.peek_at(1) == Some('*') {
+                        depth += 1;
+                        text.push_str("/*");
+                        cur.bump();
+                        cur.bump();
+                    } else if c == '*' && cur.peek_at(1) == Some('/') {
+                        depth -= 1;
+                        text.push_str("*/");
+                        cur.bump();
+                        cur.bump();
+                        if depth == 0 {
+                            break;
+                        }
+                    } else {
+                        text.push(c);
+                        cur.bump();
+                    }
+                }
+                out.comments.push(Comment { line, line_end: cur.line, text });
+            }
+            '"' => {
+                lex_string(&mut cur);
+                out.tokens.push(Tok { line, kind: TokKind::Str, text: String::new() });
+            }
+            '\'' => {
+                let kind = lex_quote(&mut cur);
+                out.tokens.push(Tok { line, kind, text: String::new() });
+            }
+            c if c.is_ascii_digit() => {
+                lex_number(&mut cur);
+                out.tokens.push(Tok { line, kind: TokKind::Num, text: String::new() });
+            }
+            c if is_ident_start(c) => {
+                let mut text = String::new();
+                while let Some(c) = cur.peek() {
+                    if !is_ident_continue(c) {
+                        break;
+                    }
+                    text.push(c);
+                    cur.bump();
+                }
+                // Raw/byte literal prefixes: the "identifier" was really
+                // the start of a literal (`r"…"`, `r#"…"#`, `b"…"`,
+                // `br#"…"#`, `b'…'`).
+                let next = cur.peek();
+                let raw_prefix = matches!(text.as_str(), "r" | "br" | "rb")
+                    && matches!(next, Some('"' | '#'))
+                    && raw_string_follows(&cur);
+                if raw_prefix {
+                    lex_raw_string(&mut cur);
+                    out.tokens.push(Tok { line, kind: TokKind::Str, text: String::new() });
+                } else if text == "b" && next == Some('"') {
+                    lex_string(&mut cur);
+                    out.tokens.push(Tok { line, kind: TokKind::Str, text: String::new() });
+                } else if text == "b" && next == Some('\'') {
+                    let kind = lex_quote(&mut cur);
+                    out.tokens.push(Tok { line, kind, text: String::new() });
+                } else {
+                    out.tokens.push(Tok { line, kind: TokKind::Ident, text });
+                }
+            }
+            c => {
+                cur.bump();
+                out.tokens.push(Tok { line, kind: TokKind::Punct, text: c.to_string() });
+            }
+        }
+    }
+    out
+}
+
+/// After an `r`/`br` prefix, is this actually a raw string (`"` now, or
+/// `#…#"`)? Guards against `r#foo` raw identifiers.
+fn raw_string_follows(cur: &Cursor) -> bool {
+    let mut ahead = 0;
+    while cur.peek_at(ahead) == Some('#') {
+        ahead += 1;
+    }
+    cur.peek_at(ahead) == Some('"')
+}
+
+/// Consume a `"…"` literal including escapes; cursor is on the opening
+/// quote.
+fn lex_string(cur: &mut Cursor) {
+    cur.bump(); // opening "
+    while let Some(c) = cur.bump() {
+        match c {
+            '\\' => {
+                cur.bump();
+            }
+            '"' => break,
+            _ => {}
+        }
+    }
+}
+
+/// Consume a raw string `r#"…"#` (any number of `#`s, including zero);
+/// cursor is on the first `#` or the `"`.
+fn lex_raw_string(cur: &mut Cursor) {
+    let mut hashes = 0usize;
+    while cur.peek() == Some('#') {
+        hashes += 1;
+        cur.bump();
+    }
+    cur.bump(); // opening "
+    'outer: while let Some(c) = cur.bump() {
+        if c == '"' {
+            for ahead in 0..hashes {
+                if cur.peek_at(ahead) != Some('#') {
+                    continue 'outer;
+                }
+            }
+            for _ in 0..hashes {
+                cur.bump();
+            }
+            break;
+        }
+    }
+}
+
+/// Disambiguate `'a'` (char) from `'a` (lifetime); cursor is on the `'`.
+fn lex_quote(cur: &mut Cursor) -> TokKind {
+    cur.bump(); // opening '
+    match cur.peek() {
+        Some('\\') => {
+            // Escaped char literal: consume escape, then to closing quote.
+            cur.bump();
+            cur.bump();
+            while let Some(c) = cur.bump() {
+                if c == '\'' {
+                    break;
+                }
+            }
+            TokKind::Char
+        }
+        Some(c) if is_ident_start(c) => {
+            // `'abc'` is a (multi-segment, invalid-but-lexable) char;
+            // `'abc` with no closing quote is a lifetime.
+            let mut ahead = 0;
+            while matches!(cur.peek_at(ahead), Some(c) if is_ident_continue(c)) {
+                ahead += 1;
+            }
+            if cur.peek_at(ahead) == Some('\'') {
+                for _ in 0..=ahead {
+                    cur.bump();
+                }
+                TokKind::Char
+            } else {
+                for _ in 0..ahead {
+                    cur.bump();
+                }
+                TokKind::Lifetime
+            }
+        }
+        _ => {
+            // `'('`-style single-char literal (or stray quote at EOF).
+            cur.bump();
+            if cur.peek() == Some('\'') {
+                cur.bump();
+            }
+            TokKind::Char
+        }
+    }
+}
+
+/// Consume a numeric literal (ints, floats, suffixed, hex/oct/bin).
+/// `0..10` must leave the range dots alone.
+fn lex_number(cur: &mut Cursor) {
+    while let Some(c) = cur.peek() {
+        if is_ident_continue(c) {
+            cur.bump();
+        } else if c == '.'
+            && matches!(cur.peek_at(1), Some(d) if d.is_ascii_digit())
+        {
+            cur.bump();
+        } else {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .tokens
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn strings_and_comments_hide_keywords() {
+        let src = r##"
+            // unsafe in a line comment
+            /* unsafe /* nested */ still comment */
+            let s = "unsafe { }";
+            let r = r#"thread::spawn"#;
+            let b = b"unwrap()";
+            fn real() {}
+        "##;
+        let ids = idents(src);
+        assert!(!ids.contains(&"unsafe".to_string()));
+        assert!(!ids.contains(&"spawn".to_string()));
+        assert!(!ids.contains(&"unwrap".to_string()));
+        assert!(ids.contains(&"real".to_string()));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let lexed = lex("fn f<'a>(x: &'a str) { let c = 'x'; let n = '\\n'; }");
+        let kinds: Vec<TokKind> = lexed.tokens.iter().map(|t| t.kind).collect();
+        assert_eq!(kinds.iter().filter(|k| **k == TokKind::Lifetime).count(), 2);
+        assert_eq!(kinds.iter().filter(|k| **k == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn comment_lines_are_tracked() {
+        let lexed = lex("let a = 1; // tail\n/* two\nline */ let b = 2;");
+        assert_eq!(lexed.comments.len(), 2);
+        assert_eq!((lexed.comments[0].line, lexed.comments[0].line_end), (1, 1));
+        assert_eq!((lexed.comments[1].line, lexed.comments[1].line_end), (2, 3));
+    }
+
+    #[test]
+    fn ranges_do_not_eat_dots() {
+        let lexed = lex("for i in 0..10 { }");
+        let dots = lexed
+            .tokens
+            .iter()
+            .filter(|t| t.kind == TokKind::Punct && t.text == ".")
+            .count();
+        assert_eq!(dots, 2);
+    }
+
+    #[test]
+    fn raw_identifiers_are_idents() {
+        let ids = idents("let r#type = 1; let x = r#\"raw\"#;");
+        assert!(ids.contains(&"r".to_string()) || ids.contains(&"type".to_string()));
+        // The raw string right after must not have swallowed the rest.
+        assert!(ids.contains(&"x".to_string()));
+    }
+}

@@ -1,0 +1,398 @@
+//! The repo-specific lint rules `shoal-check` enforces.
+//!
+//! | lint | rule |
+//! |------|------|
+//! | L1 `safety`   | every `unsafe` token carries a `// SAFETY:` justification in the contiguous comment block above (or on the same line) |
+//! | L2 `hotpath`  | a fn marked `// shoal-lint: hotpath` must not lock (`.lock(`, `RwLock`) or block (`.recv(`, `.recv_timeout(`, `.wait(`, `.wait_timeout(`) |
+//! | L3 `unwrap`   | no `.unwrap()` / `.expect()` in non-test `galapagos/` and `am/` code unless annotated `// shoal-lint: allow(unwrap) <reason>` |
+//! | L4 `spawn`    | every `thread::spawn` goes through a named `thread::Builder` |
+//!
+//! Test code (`#[test]` fns, `#[cfg(test)]` mods and items) is exempt from
+//! every lint: tests may unwrap, lock and spawn freely.
+
+use std::collections::HashMap;
+use std::fmt;
+
+use super::lexer::{self, Tok, TokKind};
+
+/// Which rule fired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lint {
+    /// L1: `unsafe` without a `// SAFETY:` justification.
+    Safety,
+    /// L2: locking/blocking call inside a `// shoal-lint: hotpath` fn.
+    Hotpath,
+    /// L3: unannotated `.unwrap()`/`.expect()` in datapath code.
+    Unwrap,
+    /// L4: `thread::spawn` instead of a named `thread::Builder`.
+    Spawn,
+}
+
+impl Lint {
+    pub fn code(self) -> &'static str {
+        match self {
+            Lint::Safety => "L1(safety)",
+            Lint::Hotpath => "L2(hotpath)",
+            Lint::Unwrap => "L3(unwrap)",
+            Lint::Spawn => "L4(spawn)",
+        }
+    }
+}
+
+/// One finding, formatted `file:line: LN(code): message`.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub file: String,
+    pub line: u32,
+    pub lint: Lint,
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: {}: {}", self.file, self.line, self.lint.code(), self.msg)
+    }
+}
+
+/// The marker that exempts a fn's body from L2's lock/block ban — placed
+/// on sends, fast paths and shard-reactor steps that must stay lock-free.
+pub const HOTPATH_MARKER: &str = "shoal-lint: hotpath";
+/// The annotation that exempts one `.unwrap()`/`.expect()` from L3; a
+/// non-empty reason must follow.
+pub const ALLOW_UNWRAP: &str = "shoal-lint: allow(unwrap)";
+
+/// Methods a hotpath fn must not call (lock acquisition or blocking waits).
+const HOTPATH_FORBIDDEN: &[&str] = &["lock", "recv", "recv_timeout", "wait", "wait_timeout"];
+
+/// Does this comment *carry* the given `shoal-lint:` directive? Directives
+/// must start the comment (after the `//`/`//!`/`/*` decoration) so prose
+/// that merely mentions one — like this module's own docs — is inert.
+fn directive_at(text: &str, directive: &str) -> Option<usize> {
+    let stripped = text.trim_start_matches(['/', '!', '*']).trim_start();
+    if stripped.starts_with(directive) {
+        Some(text.len() - stripped.len() + directive.len())
+    } else {
+        None
+    }
+}
+
+/// Run every lint over one source file. `file` is the label used in
+/// diagnostics and decides L3 applicability (datapath = a path with a
+/// `galapagos` or `am` component).
+pub fn check_source(file: &str, src: &str) -> Vec<Diagnostic> {
+    let lexed = lexer::lex(src);
+    let toks = &lexed.tokens;
+    let test = test_mask(toks);
+    let lines: Vec<&str> = src.lines().collect();
+
+    // line (1-based) -> indices of comments covering it.
+    let mut comments_at: HashMap<u32, Vec<usize>> = HashMap::new();
+    for (i, c) in lexed.comments.iter().enumerate() {
+        for l in c.line..=c.line_end {
+            comments_at.entry(l).or_default().push(i);
+        }
+    }
+    let comment_contains = |l: u32, needle: &str| -> bool {
+        comments_at
+            .get(&l)
+            .is_some_and(|idx| idx.iter().any(|&i| lexed.comments[i].text.contains(needle)))
+    };
+
+    let mut out = Vec::new();
+    let diag = |out: &mut Vec<Diagnostic>, line: u32, lint: Lint, msg: String| {
+        out.push(Diagnostic { file: file.to_string(), line, lint, msg });
+    };
+
+    // L1: unsafe needs a SAFETY justification in the contiguous
+    // comment/blank/attribute block ending on the line above (or inline).
+    for (i, t) in toks.iter().enumerate() {
+        if test[i] || t.kind != TokKind::Ident || t.text != "unsafe" {
+            continue;
+        }
+        let mut ok = comment_contains(t.line, "SAFETY");
+        let mut l = t.line.saturating_sub(1);
+        let mut budget = 40; // bound the walk; no justification is this far away
+        while !ok && l >= 1 && budget > 0 {
+            let content = lines.get(l as usize - 1).map_or("", |s| s.trim());
+            let passthrough =
+                content.is_empty() || comments_at.contains_key(&l) || content.starts_with("#[");
+            if !passthrough {
+                break;
+            }
+            ok = comment_contains(l, "SAFETY");
+            l -= 1;
+            budget -= 1;
+        }
+        if !ok {
+            diag(
+                &mut out,
+                t.line,
+                Lint::Safety,
+                "`unsafe` without a `// SAFETY:` justification in the comment block above"
+                    .to_string(),
+            );
+        }
+    }
+
+    // L2: hotpath-marked fns must not lock or block.
+    for c in &lexed.comments {
+        if directive_at(&c.text, HOTPATH_MARKER).is_none() {
+            continue;
+        }
+        // The marked fn: the first `fn` token at/below the marker.
+        let fn_idx = toks
+            .iter()
+            .position(|t| t.line >= c.line && t.kind == TokKind::Ident && t.text == "fn");
+        let fn_idx = match fn_idx {
+            Some(i) if toks[i].line <= c.line_end + 10 => i,
+            _ => {
+                diag(
+                    &mut out,
+                    c.line,
+                    Lint::Hotpath,
+                    "dangling `shoal-lint: hotpath` marker: no fn follows it".to_string(),
+                );
+                continue;
+            }
+        };
+        let Some((body_start, body_end)) = fn_body(toks, fn_idx) else {
+            continue; // trait method declaration (`fn f(…);`): nothing to scan
+        };
+        for i in body_start..body_end {
+            let t = &toks[i];
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "RwLock" {
+                diag(
+                    &mut out,
+                    t.line,
+                    Lint::Hotpath,
+                    "RwLock used inside a `shoal-lint: hotpath` fn".to_string(),
+                );
+            } else if HOTPATH_FORBIDDEN.contains(&t.text.as_str()) && is_method_call(toks, i) {
+                diag(
+                    &mut out,
+                    t.line,
+                    Lint::Hotpath,
+                    format!("blocking `.{}()` inside a `shoal-lint: hotpath` fn", t.text),
+                );
+            }
+        }
+    }
+
+    // L3: unwrap/expect burndown in the datapath modules.
+    if in_datapath(file) {
+        for (i, t) in toks.iter().enumerate() {
+            if test[i]
+                || t.kind != TokKind::Ident
+                || !(t.text == "unwrap" || t.text == "expect")
+                || !is_method_call(toks, i)
+            {
+                continue;
+            }
+            let annotated = [t.line, t.line.saturating_sub(1)].iter().any(|&l| {
+                comments_at.get(&l).is_some_and(|idx| {
+                    idx.iter().any(|&ci| {
+                        let text = &lexed.comments[ci].text;
+                        directive_at(text, ALLOW_UNWRAP)
+                            .is_some_and(|p| !text[p..].trim().is_empty())
+                    })
+                })
+            });
+            if !annotated {
+                diag(
+                    &mut out,
+                    t.line,
+                    Lint::Unwrap,
+                    format!(
+                        "`.{}()` in datapath code without `// {} <reason>`",
+                        t.text, ALLOW_UNWRAP
+                    ),
+                );
+            }
+        }
+    }
+
+    // L4: bare thread::spawn (a named Builder never lexes as `thread::spawn`).
+    for (i, t) in toks.iter().enumerate() {
+        if test[i] || t.kind != TokKind::Ident || t.text != "spawn" || i < 3 {
+            continue;
+        }
+        let p = |j: usize, s: &str| toks[j].kind == TokKind::Punct && toks[j].text == s;
+        let id = |j: usize, s: &str| toks[j].kind == TokKind::Ident && toks[j].text == s;
+        if p(i - 1, ":") && p(i - 2, ":") && id(i - 3, "thread") {
+            diag(
+                &mut out,
+                t.line,
+                Lint::Spawn,
+                "bare `thread::spawn`; use a named `thread::Builder` so panics and \
+                 profiles identify the thread"
+                    .to_string(),
+            );
+        }
+    }
+
+    out
+}
+
+/// Does `file` live in the modules L3 applies to? (Any path with a
+/// `galapagos` or `am` component.)
+fn in_datapath(file: &str) -> bool {
+    file.split(['/', '\\']).any(|seg| seg == "galapagos" || seg == "am")
+}
+
+/// Is token `i` (an ident) a `.name(` method call?
+fn is_method_call(toks: &[Tok], i: usize) -> bool {
+    i >= 1
+        && toks[i - 1].kind == TokKind::Punct
+        && toks[i - 1].text == "."
+        && toks.get(i + 1).is_some_and(|t| t.kind == TokKind::Punct && t.text == "(")
+}
+
+/// The token range of the body of the fn whose `fn` keyword is at
+/// `fn_idx`: `Some((first_inside, close_brace))`, or `None` for a
+/// body-less declaration.
+fn fn_body(toks: &[Tok], fn_idx: usize) -> Option<(usize, usize)> {
+    let mut i = fn_idx;
+    let mut angle = 0i32; // skip `->` / generics; body is the first free `{`
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "<" => angle += 1,
+                ">" => angle = (angle - 1).max(0),
+                ";" if angle == 0 => return None,
+                "{" if angle == 0 => break,
+                _ => {}
+            }
+        }
+        i += 1;
+    }
+    if i >= toks.len() {
+        return None;
+    }
+    let open = i;
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open) {
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some((open + 1, j));
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    Some((open + 1, toks.len()))
+}
+
+/// Per-token mask: `true` for tokens inside `#[test]`-/`#[cfg(test)]`-
+/// attributed items (including every nested token of a test mod).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let p = |j: usize, s: &str| {
+        toks.get(j).is_some_and(|t| t.kind == TokKind::Punct && t.text == s)
+    };
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !p(i, "#") {
+            i += 1;
+            continue;
+        }
+        if p(i + 1, "!") {
+            // Inner attribute `#![…]`: skip it, it never introduces an item.
+            i = skip_bracketed(toks, i + 2).unwrap_or(i + 2);
+            continue;
+        }
+        if !p(i + 1, "[") {
+            i += 1;
+            continue;
+        }
+        // An attribute run: `#[a] #[b] … item`.
+        let run_start = i;
+        let mut is_test = false;
+        let mut j = i;
+        while p(j, "#") && p(j + 1, "[") {
+            let end = match skip_bracketed(toks, j + 1) {
+                Some(e) => e,
+                None => return mask,
+            };
+            let mut has_test = false;
+            let mut has_not = false;
+            for t in &toks[j + 2..end] {
+                if t.kind == TokKind::Ident {
+                    has_test |= t.text == "test";
+                    has_not |= t.text == "not";
+                }
+            }
+            // `#[cfg(test)]`/`#[test]` mark test code; `#[cfg(not(test))]`
+            // is production code.
+            is_test |= has_test && !has_not;
+            j = end + 1;
+        }
+        if !is_test {
+            i = j;
+            continue;
+        }
+        // Mark the attributed item: to the matching `}` of its first free
+        // `{`, or to the first `;` outside any nesting.
+        let mut depth = 0i64;
+        let mut saw_brace = false;
+        let mut end = toks.len() - 1;
+        for (k, t) in toks.iter().enumerate().skip(j) {
+            if t.kind != TokKind::Punct {
+                continue;
+            }
+            match t.text.as_str() {
+                "{" | "(" | "[" => {
+                    saw_brace |= t.text == "{";
+                    depth += 1;
+                }
+                "}" | ")" | "]" => {
+                    depth -= 1;
+                    if depth == 0 && saw_brace && t.text == "}" {
+                        end = k;
+                        break;
+                    }
+                }
+                ";" if depth == 0 => {
+                    end = k;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        for m in mask.iter_mut().take(end + 1).skip(run_start) {
+            *m = true;
+        }
+        i = end + 1;
+    }
+    mask
+}
+
+/// `start` points at the `[` of an attribute: the index of its matching
+/// `]` (bracket depth aware), or `None` if unterminated.
+fn skip_bracketed(toks: &[Tok], start: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (k, t) in toks.iter().enumerate().skip(start) {
+        if t.kind != TokKind::Punct {
+            continue;
+        }
+        match t.text.as_str() {
+            "[" => depth += 1,
+            "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(k);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}

@@ -1,0 +1,157 @@
+//! `shoal-check`: in-tree, dependency-free static analysis for the crate's
+//! own sources.
+//!
+//! PRs 7–8 made correctness depend on conventions no compiler checks: shard
+//! reactors must single-write their own staging/streams/windows, the raw-FFI
+//! poller and the atomic segment views are `unsafe` audited by eye, and the
+//! datapath must not silently `unwrap()` its way past recoverable errors.
+//! This module enforces those conventions mechanically:
+//!
+//! - [`lexer`] — a lightweight Rust lexer (comments, strings, lifetimes);
+//! - [`lints`] — the four repo-specific rules (L1 `SAFETY`, L2 hotpath
+//!   no-locking, L3 datapath unwrap burndown, L4 named spawns);
+//! - the `shoal_check` binary (`cargo run --bin shoal_check`) walks
+//!   `src/`, prints `file:line: LN(code): message` diagnostics and exits
+//!   nonzero when any lint fires. CI runs it as a required gate.
+//!
+//! The dynamic half of the story is [`crate::galapagos::shard_owned`]: the
+//! lints prove the code *as written* respects the sharding conventions;
+//! `ShardOwned<T>` (under `--features race-check`) asserts at runtime that
+//! no unexpected thread ever touches another shard's state.
+//!
+//! Fixture sources under `src/analysis/testdata/` are deliberately
+//! violating snippets used by this module's tests; the walker skips them.
+
+pub mod lexer;
+pub mod lints;
+
+pub use lints::{check_source, Diagnostic, Lint};
+
+use std::path::{Path, PathBuf};
+
+/// Recursively collect every `.rs` file under `root`, skipping the lint
+/// fixtures in `analysis/testdata/`. Sorted for deterministic output.
+pub fn collect_sources(root: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut files = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        if dir.file_name().is_some_and(|n| n == "testdata") {
+            continue;
+        }
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    Ok(files)
+}
+
+/// Run every lint over every source file under `root` (normally the
+/// crate's `src/`). Diagnostics use paths relative to `root`'s parent so
+/// they are clickable from the repo checkout.
+pub fn run_checks(root: &Path) -> std::io::Result<Vec<Diagnostic>> {
+    let mut out = Vec::new();
+    for path in collect_sources(root)? {
+        let src = std::fs::read_to_string(&path)?;
+        let label = path
+            .strip_prefix(root.parent().unwrap_or(root))
+            .unwrap_or(&path)
+            .display()
+            .to_string();
+        out.extend(check_source(&label, &src));
+    }
+    Ok(out)
+}
+
+/// The crate's own `src/` directory (compiled in; `shoal_check` accepts an
+/// explicit root argument for checking other trees).
+pub fn default_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("src")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str) -> String {
+        let path = default_root().join("analysis/testdata").join(name);
+        std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("fixture {} unreadable: {e}", path.display()))
+    }
+
+    /// Each lint fires on its known-bad fixture, at the marked lines.
+    #[test]
+    fn bad_fixture_trips_every_lint() {
+        let diags = check_source("galapagos/bad.rs", &fixture("bad.rs"));
+        let fired: Vec<Lint> = diags.iter().map(|d| d.lint).collect();
+        for lint in [Lint::Safety, Lint::Hotpath, Lint::Unwrap, Lint::Spawn] {
+            assert!(
+                fired.contains(&lint),
+                "{:?} did not fire on bad.rs; got: {:#?}",
+                lint,
+                diags
+            );
+        }
+        // Diagnostics carry real positions: every reported line is one of
+        // the fixture's `// lint:` marked lines.
+        let src = fixture("bad.rs");
+        for d in &diags {
+            let line = src.lines().nth(d.line as usize - 1).unwrap_or("");
+            let prev = if d.line >= 2 {
+                src.lines().nth(d.line as usize - 2).unwrap_or("")
+            } else {
+                ""
+            };
+            assert!(
+                line.contains("lint:") || prev.contains("lint:"),
+                "diagnostic at unmarked line {}: {d}",
+                d.line
+            );
+        }
+    }
+
+    /// The clean fixture uses every construct the lints police — but
+    /// annotated/named/justified — and must stay quiet.
+    #[test]
+    fn clean_fixture_is_quiet() {
+        let diags = check_source("galapagos/clean.rs", &fixture("clean.rs"));
+        assert!(diags.is_empty(), "clean.rs tripped: {:#?}", diags);
+    }
+
+    /// Test code is exempt: the same violations under `#[cfg(test)]` and
+    /// `#[test]` produce no diagnostics.
+    #[test]
+    fn test_code_is_exempt() {
+        let diags = check_source("galapagos/testonly.rs", &fixture("testonly.rs"));
+        assert!(diags.is_empty(), "test-only fixture tripped: {:#?}", diags);
+    }
+
+    /// L3 only applies to the datapath modules: the same unwraps under a
+    /// non-datapath label are fine (L1/L2/L4 still apply everywhere).
+    #[test]
+    fn unwrap_lint_is_scoped_to_datapath() {
+        let src = "pub fn f(x: Option<u8>) -> u8 { x.unwrap() }\n";
+        assert!(check_source("bench/report.rs", src).is_empty());
+        let diags = check_source("galapagos/router.rs", src);
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].lint, Lint::Unwrap);
+    }
+
+    /// The tree itself is clean: `cargo test` enforces the burndown even
+    /// where CI skips the dedicated `shoal_check` gate.
+    #[test]
+    fn crate_sources_pass_all_lints() {
+        let diags = run_checks(&default_root()).expect("walk src/");
+        assert!(
+            diags.is_empty(),
+            "shoal-check found {} violation(s) in the tree:\n{}",
+            diags.len(),
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

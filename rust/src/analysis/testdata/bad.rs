@@ -1,0 +1,42 @@
+//! Known-bad fixture: every lint must fire on this file.
+//!
+//! Not compiled into the crate — read by `analysis::tests` only. Each
+//! violating line carries a `lint:` marker comment (same line or the line
+//! above) so the tests can assert diagnostics point at real positions.
+
+use std::sync::{Mutex, RwLock};
+
+pub fn missing_safety(p: *const u8) -> u8 {
+    // Reads a raw pointer with no justification at all.
+    unsafe { *p } // lint: L1 fires here
+}
+
+// lint: L1 — an unsafe impl is an unsafe token too
+unsafe impl Send for Holder {}
+
+pub struct Holder {
+    pub inner: *mut u8,
+}
+
+// shoal-lint: hotpath
+pub fn hot_bad(m: &Mutex<u32>, rx: &std::sync::mpsc::Receiver<u32>) -> u32 {
+    let guard = m.lock(); // lint: L2 — lock inside a hotpath fn
+    let _ = rx.recv(); // lint: L2 — blocking recv inside a hotpath fn
+    let cell: RwLock<u32> = RwLock::new(0); // lint: L2 — RwLock in a hotpath fn
+    let _ = cell;
+    match guard {
+        Ok(g) => *g,
+        Err(_) => 0,
+    }
+}
+
+pub fn unwraps(x: Option<u32>, y: Result<u32, ()>) -> u32 {
+    let a = x.unwrap(); // lint: L3 — unannotated unwrap in datapath code
+    let b = y.expect("boom"); // lint: L3 — unannotated expect in datapath code
+    a + b
+}
+
+pub fn unnamed_spawn() {
+    let h = std::thread::spawn(|| 1 + 1); // lint: L4 — bare thread::spawn
+    let _ = h.join();
+}

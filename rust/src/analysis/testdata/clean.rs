@@ -1,0 +1,51 @@
+//! Clean fixture: uses every construct the lints police — justified,
+//! annotated, named — and must produce zero diagnostics.
+//!
+//! Not compiled into the crate — read by `analysis::tests` only.
+
+use std::sync::Mutex;
+
+/// The word unsafe in a doc comment is not a token; neither is the
+/// string literal below.
+pub const DECOY: &str = "unsafe { thread::spawn(x.unwrap()) }";
+
+pub fn justified(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` points into a live, readable
+    // allocation for the duration of this call.
+    unsafe { *p }
+}
+
+// SAFETY: `Holder::inner` is only dereferenced on the owning thread; the
+// pointer itself is freely sendable. The justification may span several
+// lines and sit above an attribute — the lint walks the contiguous
+// comment/attribute block.
+#[allow(dead_code)]
+unsafe impl Send for Holder {}
+
+pub struct Holder {
+    pub inner: *mut u8,
+}
+
+// shoal-lint: hotpath
+pub fn hot_ok(buf: &mut Vec<u8>, frame: &[u8]) -> usize {
+    // Lock-free: grows a caller-owned buffer. `receiver` and `lockstep`
+    // in identifiers must not trip the blocking-call scan.
+    let receiver_hint = frame.len();
+    buf.extend_from_slice(frame);
+    receiver_hint
+}
+
+pub fn annotated(x: Option<u32>, m: &Mutex<u32>) -> u32 {
+    // shoal-lint: allow(unwrap) the constructor established Some; None here is a logic bug
+    let a = x.unwrap();
+    let b = *m.lock().expect("poisoned"); // shoal-lint: allow(unwrap) mutex poisoning is already a panic upstream
+    a + b
+}
+
+pub fn named_spawn() {
+    let h = std::thread::Builder::new()
+        .name("clean-worker".to_string())
+        .spawn(|| 1 + 1)
+        .expect("spawn clean-worker"); // shoal-lint: allow(unwrap) thread spawn failure at startup is fatal
+    let _ = h.join();
+}

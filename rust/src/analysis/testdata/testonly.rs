@@ -1,0 +1,27 @@
+//! Test-exemption fixture: the same violations `bad.rs` is flagged for,
+//! but inside `#[test]` fns and a `#[cfg(test)]` mod — every lint must
+//! stay quiet.
+//!
+//! Not compiled into the crate — read by `analysis::tests` only.
+
+#[test]
+fn test_fn_is_exempt() {
+    let x: Option<u32> = Some(1);
+    let _ = x.unwrap();
+    let h = std::thread::spawn(|| 1 + 1);
+    let _ = h.join();
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn nested_violations_are_exempt() {
+        let p = &7u8 as *const u8;
+        let v = unsafe { *p };
+        assert_eq!(v, 7);
+        let y: Result<u32, ()> = Ok(2);
+        let _ = y.expect("fine in tests");
+        let h = std::thread::spawn(|| ());
+        let _ = h.join();
+    }
+}

@@ -106,6 +106,7 @@ fn send_halos(
 }
 
 /// The worker kernel function.
+// 8 params: the worker contract mirrors the paper's kernel signature.
 #[allow(clippy::too_many_arguments)]
 pub fn worker_kernel(
     mut k: ShoalKernel,

@@ -1,0 +1,47 @@
+//! `shoal-check` — the repo-specific static analysis gate.
+//!
+//! Walks the crate's sources (or an explicit root) and enforces the four
+//! lints in [`shoal::analysis::lints`]: `// SAFETY:` on every `unsafe`,
+//! no locking/blocking in `// shoal-lint: hotpath` fns, the datapath
+//! unwrap burndown, and named thread spawns.
+//!
+//! ```text
+//! cargo run --bin shoal_check            # check src/, exit 1 on findings
+//! cargo run --bin shoal_check -- <dir>   # check another tree
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use shoal::analysis;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let root = match args.next() {
+        Some(a) if a == "-h" || a == "--help" => {
+            eprintln!("usage: shoal_check [SRC_ROOT]");
+            eprintln!("  repo-specific lints: L1(safety) L2(hotpath) L3(unwrap) L4(spawn)");
+            eprintln!("  default SRC_ROOT is this crate's own src/ directory");
+            return ExitCode::SUCCESS;
+        }
+        Some(a) => PathBuf::from(a),
+        None => analysis::default_root(),
+    };
+    let diags = match analysis::run_checks(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("shoal-check: cannot walk {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    for d in &diags {
+        println!("{d}");
+    }
+    if diags.is_empty() {
+        eprintln!("shoal-check: clean ({} ok)", root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("shoal-check: {} violation(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}

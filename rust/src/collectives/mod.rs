@@ -188,6 +188,7 @@ pub mod coll_dir {
 /// to also retrieve the result bytes (and to get straggler-naming timeout
 /// errors).
 #[derive(Clone, Copy, Debug)]
+#[must_use = "a collective only completes when the handle is waited on"]
 pub struct CollectiveHandle {
     pub am: AmHandle,
     /// Cluster-wide collective sequence number (kernels must issue

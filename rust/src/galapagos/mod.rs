@@ -21,6 +21,7 @@ pub mod interface;
 pub mod node;
 pub mod packet;
 pub mod router;
+pub mod shard_owned;
 pub mod transport;
 
 pub use interface::GalapagosInterface;

@@ -237,6 +237,7 @@ impl BoundNode {
                     let sock = self
                         .udp_socket
                         .as_ref()
+                        // shoal-lint: allow(unwrap) bind() creates the socket for TransportKind::Udp before start
                         .expect("udp transport bound a socket")
                         .try_clone()?;
                     let mut e = UdpEgress::with_batching(

@@ -118,6 +118,7 @@ impl RoutingTable {
         Self { nodes, len }
     }
 
+    // shoal-lint: hotpath
     pub fn node_of(&self, kernel: u16) -> Result<u16> {
         match self.nodes.get(kernel as usize) {
             Some(&n) if n != UNMAPPED => Ok(n),
@@ -137,6 +138,7 @@ impl RoutingTable {
 /// The shard owning egress toward `node`. Stable (a pure function of the
 /// ids), disjoint (every node maps to exactly one shard), and balanced for
 /// the contiguous ids the builder assigns.
+// shoal-lint: hotpath
 pub fn shard_of_node(node: u16, shards: usize) -> usize {
     if shards <= 1 {
         0
@@ -147,6 +149,7 @@ pub fn shard_of_node(node: u16, shards: usize) -> usize {
 
 /// The shard owning local delivery into `kernel` (same-node traffic hashes
 /// by destination kernel so hot local inboxes don't contend on one queue).
+// shoal-lint: hotpath
 pub fn shard_of_kernel(kernel: u16, shards: usize) -> usize {
     if shards <= 1 {
         0
@@ -190,6 +193,7 @@ impl RouterHandle {
     /// destination kernel for local delivery). A destination the table
     /// doesn't know goes to shard 0, whose reactor reports the drop through
     /// the failure sink — identical to the unsharded behavior.
+    // shoal-lint: hotpath
     pub fn from_kernel(&self, pkt: Packet) -> Result<()> {
         let shard = match self.shards.len() {
             1 => 0,
@@ -207,6 +211,7 @@ impl RouterHandle {
     /// Enqueue a network-received packet onto the shard owning the source
     /// peer (the node hosting `pkt.src`), so one peer's in-order flow is
     /// serviced by one reactor.
+    // shoal-lint: hotpath
     pub fn from_network(&self, pkt: Packet) -> Result<()> {
         self.try_from_network(pkt).map_err(|_| Error::Disconnected("router"))
     }
@@ -214,6 +219,7 @@ impl RouterHandle {
     /// Like [`Self::from_network`] but returns the packet on a
     /// disconnected shard, so callers with a retry path (the in-process
     /// fabric's stale-cache recovery) don't lose it.
+    // shoal-lint: hotpath
     pub fn try_from_network(&self, pkt: Packet) -> std::result::Result<(), Packet> {
         let shard = match self.shards.len() {
             1 => 0,
@@ -277,6 +283,7 @@ impl Router {
             .spawn(move || {
                 Self::run(&cfg, &table, &local, &mut *egress, rx, &stats2);
             })
+            // shoal-lint: allow(unwrap) failing to start this thread at bind time is unrecoverable
             .expect("spawn router thread");
         Router { tx, stats, handle: Some(handle) }
     }

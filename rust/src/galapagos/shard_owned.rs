@@ -1,0 +1,193 @@
+//! Dynamic single-writer assertion for shard-local state.
+//!
+//! The sharded router (PR 7) holds its hot mutable state — each shard's
+//! staged [`Coalescer`](super::transport::batch::Coalescer)s, the TCP
+//! connection cache, the ARQ send lane — without locks, on the strength of
+//! a structural invariant: *exactly one reactor thread ever touches it*.
+//! Nothing enforces that invariant; a refactor that leaks a reference to a
+//! second thread compiles fine and corrupts state silently.
+//!
+//! [`ShardOwned<T>`] turns the invariant into a checked assertion. Under
+//! the `race-check` cargo feature every access records the first accessing
+//! thread and panics — naming the state and both threads — if any other
+//! thread ever touches the value. With the feature off (the default) the
+//! wrapper is a zero-sized-overhead newtype: no atomic, no branch, and
+//! `Deref`/`DerefMut` compile down to a field projection.
+//!
+//! Ownership is claimed by the **first dereference**, not at construction:
+//! egress objects are built on the control thread and only then moved into
+//! their reactor, so tagging at construction would blame the wrong thread.
+//! Builder methods must therefore replace the whole wrapper
+//! (`self.arq = ShardOwned::new(..)`) rather than dereference into it.
+
+use std::ops::{Deref, DerefMut};
+
+#[cfg(feature = "race-check")]
+mod token {
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    /// Monotonic per-thread tokens. `ThreadId::as_u64` is unstable, so we
+    /// mint our own: the first call on each thread draws the next id.
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+
+    thread_local! {
+        static TOKEN: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn current() -> u64 {
+        TOKEN.with(|t| *t)
+    }
+}
+
+/// Wrapper asserting that exactly one thread dereferences the value.
+///
+/// See the module docs for the claiming discipline. The `state` label names
+/// the wrapped state in the panic message (e.g. `"tcp-egress.stage"`).
+pub struct ShardOwned<T> {
+    inner: T,
+    #[cfg(feature = "race-check")]
+    state: &'static str,
+    /// 0 = unclaimed; otherwise the token of the claiming thread.
+    #[cfg(feature = "race-check")]
+    owner: std::sync::atomic::AtomicU64,
+}
+
+impl<T> ShardOwned<T> {
+    pub fn new(state: &'static str, inner: T) -> Self {
+        #[cfg(not(feature = "race-check"))]
+        let _ = state;
+        Self {
+            inner,
+            #[cfg(feature = "race-check")]
+            state,
+            #[cfg(feature = "race-check")]
+            owner: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Consume the wrapper without asserting ownership (shutdown paths that
+    /// hand remaining state to a different thread).
+    pub fn into_inner(self) -> T {
+        self.inner
+    }
+
+    /// Forget the current owner: the next dereference — from any thread —
+    /// claims afresh. For deliberate ownership transfer, e.g. a drain step
+    /// that migrates a shard's state to the join thread.
+    pub fn release(&self) {
+        #[cfg(feature = "race-check")]
+        self.owner.store(0, std::sync::atomic::Ordering::Release);
+    }
+
+    #[cfg(feature = "race-check")]
+    fn assert_owner(&self) {
+        use std::sync::atomic::Ordering;
+        let me = token::current();
+        match self
+            .owner
+            .compare_exchange(0, me, Ordering::AcqRel, Ordering::Acquire)
+        {
+            Ok(_) => {}
+            Err(cur) if cur == me => {}
+            Err(cur) => panic!(
+                "race-check: shard state `{}` is owned by thread token {cur} \
+                 but was accessed from thread token {me} — single-writer \
+                 invariant violated",
+                self.state
+            ),
+        }
+    }
+}
+
+impl<T> Deref for ShardOwned<T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        #[cfg(feature = "race-check")]
+        self.assert_owner();
+        &self.inner
+    }
+}
+
+impl<T> DerefMut for ShardOwned<T> {
+    fn deref_mut(&mut self) -> &mut T {
+        #[cfg(feature = "race-check")]
+        self.assert_owner();
+        &mut self.inner
+    }
+}
+
+impl<T: std::fmt::Debug> std::fmt::Debug for ShardOwned<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Bypass the ownership assertion: Debug formatting happens on
+        // whatever thread holds the panic/log machinery.
+        self.inner.fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::ShardOwned;
+
+    #[test]
+    fn same_thread_access_is_transparent() {
+        let mut owned = ShardOwned::new("test.vec", vec![1u32]);
+        owned.push(2);
+        assert_eq!(owned.len(), 2);
+        assert_eq!(*owned, vec![1, 2]);
+        assert_eq!(owned.into_inner(), vec![1, 2]);
+    }
+
+    #[test]
+    fn construction_then_move_claims_on_the_accessing_thread() {
+        // Built here, first dereferenced on the spawned thread: the spawned
+        // thread becomes the owner, so its accesses must not panic.
+        let owned = ShardOwned::new("test.moved", vec![7u32]);
+        let joined = std::thread::Builder::new()
+            .name("shard-owned-claim".into())
+            .spawn(move || owned.len())
+            .unwrap()
+            .join();
+        assert_eq!(joined.unwrap(), 1);
+    }
+
+    #[cfg(feature = "race-check")]
+    #[test]
+    fn cross_thread_access_panics_under_race_check() {
+        let mut owned = ShardOwned::new("test.raced", vec![1u32]);
+        owned.push(2); // claims this thread
+        let joined = std::thread::Builder::new()
+            .name("shard-owned-racer".into())
+            .spawn(move || owned.len())
+            .unwrap()
+            .join();
+        assert!(joined.is_err(), "second thread's access must panic");
+    }
+
+    #[cfg(feature = "race-check")]
+    #[test]
+    fn release_transfers_ownership() {
+        let mut owned = ShardOwned::new("test.handoff", vec![1u32]);
+        owned.push(2); // claims this thread
+        owned.release();
+        let joined = std::thread::Builder::new()
+            .name("shard-owned-heir".into())
+            .spawn(move || owned.len())
+            .unwrap()
+            .join();
+        assert_eq!(joined.unwrap(), 2, "released state may be re-claimed");
+    }
+
+    #[cfg(not(feature = "race-check"))]
+    #[test]
+    fn cross_thread_access_is_unchecked_when_disabled() {
+        let mut owned = ShardOwned::new("test.unchecked", vec![1u32]);
+        owned.push(2);
+        let joined = std::thread::Builder::new()
+            .name("shard-owned-free".into())
+            .spawn(move || owned.len())
+            .unwrap()
+            .join();
+        assert_eq!(joined.unwrap(), 2);
+    }
+}

@@ -231,6 +231,7 @@ impl ArqCore {
     /// so the hot path copies nothing extra). Returns `false` without
     /// calling `emit` when the window is full — the caller applies
     /// backpressure and retries after ACKs arrive.
+    // shoal-lint: hotpath
     pub fn try_send_with(
         &mut self,
         peer: u16,
@@ -280,9 +281,13 @@ impl ArqCore {
         }
         let kind = dgram[1];
         let peer = u16::from_le_bytes([dgram[2], dgram[3]]);
+        // shoal-lint: allow(unwrap) the header length was verified against ARQ_HEADER_BYTES above
         let seq = u32::from_le_bytes(dgram[4..8].try_into().unwrap());
+        // shoal-lint: allow(unwrap) the header length was verified against ARQ_HEADER_BYTES above
         let ack = u32::from_le_bytes(dgram[8..12].try_into().unwrap());
+        // shoal-lint: allow(unwrap) the header length was verified against ARQ_HEADER_BYTES above
         let sack = u32::from_le_bytes(dgram[12..16].try_into().unwrap());
+        // shoal-lint: allow(unwrap) the header length was verified against ARQ_HEADER_BYTES above
         let base = u32::from_le_bytes(dgram[16..20].try_into().unwrap());
 
         self.process_ack(peer, ack, sack, now, &mut out.emit);
@@ -321,6 +326,7 @@ impl ArqCore {
             p.rx.unacked = ack_every;
         }
         let ack_now = {
+            // shoal-lint: allow(unwrap) the peer entry was created at the top of on_datagram
             let p = self.peers.get_mut(&peer).expect("entry exists");
             if p.rx.unacked >= ack_every {
                 true
@@ -352,6 +358,7 @@ impl ArqCore {
         // Free everything cumulatively acknowledged...
         while let Some(f) = p.tx.inflight.front() {
             if seq_lt(f.seq, ack) {
+                // shoal-lint: allow(unwrap) front() matched on the line above
                 let f = p.tx.inflight.pop_front().unwrap();
                 self.pool.release(f.dgram);
             } else {
@@ -473,6 +480,7 @@ impl ArqCore {
         for peer in peer_ids {
             // Delayed ACK due?
             let ack_now = {
+                // shoal-lint: allow(unwrap) peer ids were collected from this map and entries are never removed
                 let p = self.peers.get_mut(&peer).unwrap();
                 match p.rx.ack_due {
                     Some(due) if due <= now => true,
@@ -492,6 +500,7 @@ impl ArqCore {
             // notify must survive a little loss to do its job.
             let notify_budget = max_retries.max(3);
             let notify_now = {
+                // shoal-lint: allow(unwrap) peer ids were collected from this map and entries are never removed
                 let p = self.peers.get_mut(&peer).unwrap();
                 match &mut p.tx.notify {
                     Some(n) if n.due <= now => {
@@ -522,6 +531,7 @@ impl ArqCore {
             let mut expired: Vec<(u32, Vec<u8>)> = Vec::new();
             let mut failed: Vec<Vec<u8>> = Vec::new();
             {
+                // shoal-lint: allow(unwrap) peer ids were collected from this map and entries are never removed
                 let p = self.peers.get_mut(&peer).unwrap();
                 p.tx.inflight.retain_mut(|f| {
                     let backoff = rto.checked_mul(1u32 << f.retries.min(5)).unwrap_or(cap).min(cap);
@@ -565,6 +575,7 @@ impl ArqCore {
                 // would not survive the very loss that caused the
                 // abandonment.
                 {
+                    // shoal-lint: allow(unwrap) peer ids were collected from this map and entries are never removed
                     let p = self.peers.get_mut(&peer).unwrap();
                     let base = tx_base(&p.tx);
                     p.tx.notify = Some(Notify { base, due: now + rto, tries: 0 });
@@ -755,6 +766,7 @@ impl ArqEndpoint {
     /// waits (the sender thread may be the only one awake).
     pub fn send(&self, peer: u16, payload: &[u8]) -> Result<()> {
         let deadline = Instant::now() + SEND_BLOCK_TIMEOUT;
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut st = self.state.lock().unwrap();
         loop {
             let now = Instant::now();
@@ -774,6 +786,7 @@ impl ArqEndpoint {
             }
             let next = self.service_locked(&mut st, now).unwrap_or(deadline);
             let wait = next.min(deadline).saturating_duration_since(now).max(Duration::from_millis(1));
+            // shoal-lint: allow(unwrap) condvar waits only fail on mutex poisoning; propagate the panic
             let (guard, _) = self.cv.wait_timeout(st, wait).unwrap();
             st = guard;
         }
@@ -782,6 +795,7 @@ impl ArqEndpoint {
     /// Ingress path: feed one received datagram; returns the in-order
     /// payloads (coalesced frame batches) to frame-decode and deliver.
     pub fn on_datagram(&self, dgram: &[u8]) -> Vec<Vec<u8>> {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut st = self.state.lock().unwrap();
         let d = st.core.on_datagram(dgram, Instant::now());
         for e in d.emit {
@@ -795,6 +809,7 @@ impl ArqEndpoint {
     /// Timer service for the router's idle loop: perform due retransmits /
     /// delayed ACKs, and say how long until the next deadline.
     pub fn service(&self) -> Option<Duration> {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut st = self.state.lock().unwrap();
         let now = Instant::now();
         self.service_locked(&mut st, now)
@@ -803,6 +818,7 @@ impl ArqEndpoint {
 
     /// True while any window still holds unacknowledged datagrams.
     pub fn has_inflight(&self) -> bool {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         self.state.lock().unwrap().core.has_inflight()
     }
 
@@ -814,6 +830,7 @@ impl ArqEndpoint {
         let deadline = Instant::now() + max_wait;
         loop {
             {
+                // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
                 let mut st = self.state.lock().unwrap();
                 if !st.core.has_pending() {
                     // Settle ALL receive-side ACK debt before going away —
@@ -833,6 +850,7 @@ impl ArqEndpoint {
             let now = Instant::now();
             if now >= deadline {
                 log::warn!("arq: drain timed out with datagrams still in flight");
+                // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
                 let mut st = self.state.lock().unwrap();
                 let acks = st.core.flush_acks();
                 for e in acks {
@@ -841,6 +859,7 @@ impl ArqEndpoint {
                 return;
             }
             let next = {
+                // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
                 let mut st = self.state.lock().unwrap();
                 self.service_locked(&mut st, now)
             };

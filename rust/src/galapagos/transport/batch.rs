@@ -53,11 +53,13 @@ impl BufPool {
     }
 
     /// Take a cleared buffer from the pool (or allocate a fresh one).
+    // shoal-lint: hotpath
     pub fn acquire(&mut self) -> Vec<u8> {
         self.free.pop().unwrap_or_default()
     }
 
     /// Return a buffer to the pool for reuse.
+    // shoal-lint: hotpath
     pub fn release(&mut self, mut buf: Vec<u8>) {
         if self.free.len() < self.max_buffers {
             buf.clear();
@@ -141,6 +143,7 @@ impl Coalescer {
     /// (without calling `encode`) when the frame doesn't fit the current
     /// batch — the caller flushes and retries, which then always succeeds
     /// for any `frame_len <= hard_cap`.
+    // shoal-lint: hotpath
     pub fn stage(&mut self, frame_len: usize, encode: impl FnOnce(&mut Vec<u8>)) -> Staged {
         let fits_cap = self.buf.len() + frame_len <= self.hard_cap;
         let fits_budget = self.batching() && self.buf.len() + frame_len <= self.batch_bytes;
@@ -165,6 +168,7 @@ impl Coalescer {
     /// buffer (header + payload appended in place — no per-frame scratch
     /// buffer). `len_prefix` selects the stream framing (`u32` length
     /// before the wire bytes); datagram transports stage the bare packet.
+    // shoal-lint: hotpath
     pub fn stage_packet(&mut self, pkt: &Packet, len_prefix: bool) -> Staged {
         let frame_len = pkt.wire_len() + if len_prefix { LEN_PREFIX_BYTES } else { 0 };
         self.stage(frame_len, |buf| {
@@ -178,6 +182,7 @@ impl Coalescer {
     /// Take the staged bytes, swapping the staging buffer against a pooled
     /// one. Returns the batch; the caller releases it back to `pool` after
     /// the write so the capacity is recycled.
+    // shoal-lint: hotpath
     pub fn take(&mut self, pool: &mut BufPool) -> Vec<u8> {
         self.msgs = 0;
         std::mem::replace(&mut self.buf, pool.acquire())

@@ -28,6 +28,7 @@ impl LocalFabric {
 
     /// Register `node`'s router ingress.
     pub fn register(&self, node: u16, handle: RouterHandle) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         self.inner.lock().unwrap().insert(node, handle);
     }
 
@@ -82,6 +83,7 @@ impl Egress for LocalEgress {
             },
             None => pkt,
         };
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let handle = match self.fabric.inner.lock().unwrap().get(&dest_node).cloned() {
             Some(h) => h,
             None => {

@@ -133,6 +133,9 @@ pub fn recv_nonblocking(fd: RawFd, buf: &mut [u8]) -> io::Result<usize> {
     extern "C" {
         fn recv(fd: i32, buf: *mut std::ffi::c_void, len: usize, flags: i32) -> isize;
     }
+    // SAFETY: `buf` is a live, exclusively borrowed slice; the kernel
+    // writes at most `buf.len()` bytes into it. `fd` is only an integer —
+    // a stale descriptor yields EBADF, not UB.
     let n = unsafe { recv(fd, buf.as_mut_ptr() as *mut std::ffi::c_void, buf.len(), MSG_DONTWAIT) };
     if n < 0 {
         Err(io::Error::last_os_error())
@@ -179,6 +182,8 @@ mod backend {
 
     impl Backend {
         pub fn new() -> io::Result<Backend> {
+            // SAFETY: takes no pointers; the returned fd is validated below
+            // and owned by `Backend` until its `Drop` closes it.
             let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
             if epfd < 0 {
                 return Err(io::Error::last_os_error());
@@ -188,6 +193,9 @@ mod backend {
 
         pub fn register(&mut self, fd: RawFd, token: u64) -> io::Result<()> {
             let mut ev = EpollEvent { events: EPOLLIN | EPOLLRDHUP, data: token };
+            // SAFETY: `ev` is a live stack value for the duration of the
+            // call; the kernel copies it before returning and keeps no
+            // reference to it.
             if unsafe { epoll_ctl(self.epfd, EPOLL_CTL_ADD, fd, &mut ev) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -196,6 +204,9 @@ mod backend {
 
         pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
             let mut ev = EpollEvent { events: 0, data: 0 };
+            // SAFETY: DEL ignores the event argument on kernels >= 2.6.9,
+            // but a valid pointer is passed anyway for the older ABI; `ev`
+            // outlives the call.
             if unsafe { epoll_ctl(self.epfd, EPOLL_CTL_DEL, fd, &mut ev) } < 0 {
                 return Err(io::Error::last_os_error());
             }
@@ -204,6 +215,9 @@ mod backend {
 
         pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<PollEvent>) -> io::Result<()> {
             let mut events = [EpollEvent { events: 0, data: 0 }; 64];
+            // SAFETY: `events` is a live stack array and `maxevents` is its
+            // exact length, so the kernel writes only within bounds; the
+            // return value caps how many entries are read back.
             let n = unsafe {
                 epoll_wait(self.epfd, events.as_mut_ptr(), events.len() as i32, timeout_ms)
             };
@@ -228,6 +242,9 @@ mod backend {
 
     impl Drop for Backend {
         fn drop(&mut self) {
+            // SAFETY: `epfd` is owned exclusively by this Backend and was
+            // validated at creation; Drop runs once, so it cannot double
+            // close or race another user of the descriptor.
             unsafe { close(self.epfd) };
         }
     }
@@ -240,6 +257,7 @@ mod backend {
     //! the shard-local fd counts this library sees off-Linux.
 
     use super::PollEvent;
+    use std::ffi::c_ulong;
     use std::io;
     use std::os::unix::io::RawFd;
 
@@ -255,7 +273,7 @@ mod backend {
     }
 
     extern "C" {
-        fn poll(fds: *mut PollFd, nfds: std::ffi::c_ulong, timeout: i32) -> i32;
+        fn poll(fds: *mut PollFd, nfds: c_ulong, timeout: i32) -> i32;
     }
 
     pub struct Backend {
@@ -290,8 +308,9 @@ mod backend {
                 .iter()
                 .map(|(fd, _)| PollFd { fd: *fd, events: POLLIN, revents: 0 })
                 .collect();
-            let n =
-                unsafe { poll(fds.as_mut_ptr(), fds.len() as std::ffi::c_ulong, timeout_ms) };
+            // SAFETY: `fds` is a live Vec whose length is passed as nfds;
+            // the kernel only writes each entry's `revents` field in place.
+            let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as c_ulong, timeout_ms) };
             if n < 0 {
                 let e = io::Error::last_os_error();
                 if e.kind() == io::ErrorKind::Interrupted {

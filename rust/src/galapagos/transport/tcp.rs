@@ -54,6 +54,7 @@ use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::RouterHandle;
+use crate::galapagos::shard_owned::ShardOwned;
 
 /// Bytes of TCP frame header (`u32` length prefix).
 pub const FRAME_HEADER_BYTES: usize = LEN_PREFIX_BYTES;
@@ -63,9 +64,11 @@ pub const FRAME_HEADER_BYTES: usize = LEN_PREFIX_BYTES;
 pub struct TcpEgress {
     /// node id → address, for every peer node.
     peers: HashMap<u16, String>,
-    conns: HashMap<u16, TcpStream>,
-    /// Per-peer staged batch.
-    stage: HashMap<u16, Coalescer>,
+    /// Cached outbound connections. Shard-local: only the owning reactor
+    /// thread connects, writes, and evicts.
+    conns: ShardOwned<HashMap<u16, TcpStream>>,
+    /// Per-peer staged batch. Shard-local like `conns`.
+    stage: ShardOwned<HashMap<u16, Coalescer>>,
     batch_bytes: usize,
     batch_max_msgs: usize,
     pool: BufPool,
@@ -91,8 +94,8 @@ impl TcpEgress {
     ) -> Self {
         Self {
             peers,
-            conns: HashMap::new(),
-            stage: HashMap::new(),
+            conns: ShardOwned::new("tcp-egress.conns", HashMap::new()),
+            stage: ShardOwned::new("tcp-egress.stage", HashMap::new()),
             batch_bytes,
             batch_max_msgs,
             pool: BufPool::default(),
@@ -115,6 +118,7 @@ impl TcpEgress {
         let Some(sink) = &self.failure_sink else { return };
         let mut rest = batch;
         while rest.len() >= FRAME_HEADER_BYTES {
+            // shoal-lint: allow(unwrap) the loop condition guarantees FRAME_HEADER_BYTES available
             let len = u32::from_le_bytes(rest[..FRAME_HEADER_BYTES].try_into().unwrap()) as usize;
             let Some(frame) = rest.get(FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + len) else {
                 return;
@@ -150,6 +154,7 @@ impl TcpEgress {
                 return Err(Error::Io(e));
             }
         }
+        // shoal-lint: allow(unwrap) the connect loop above inserted the entry or returned an error
         Ok(self.conns.get_mut(&node).unwrap())
     }
 
@@ -169,6 +174,7 @@ impl TcpEgress {
         let batch = self
             .stage
             .get_mut(&node)
+            // shoal-lint: allow(unwrap) the staged coalescer was verified non-empty above
             .expect("checked above")
             .take(&mut self.pool);
         let written = match self.conn(node) {
@@ -215,6 +221,7 @@ impl Egress for TcpEgress {
                 let again = self
                     .stage
                     .get_mut(&dest_node)
+                    // shoal-lint: allow(unwrap) stage_packet above created the entry
                     .expect("coalescer exists after staging attempt")
                     .stage_packet(&pkt, true);
                 match again {
@@ -351,6 +358,7 @@ impl FrameAssembler {
     /// impossible on a corrupt length prefix) or `deliver` refusing a
     /// packet (router gone). Malformed packet bodies are logged and
     /// skipped, matching the blocking decoder.
+    // shoal-lint: hotpath
     pub fn push(&mut self, bytes: &[u8], deliver: &mut dyn FnMut(Packet) -> bool) -> bool {
         self.buf.extend_from_slice(bytes);
         loop {
@@ -359,6 +367,7 @@ impl FrameAssembler {
                 break;
             }
             let len = u32::from_le_bytes(
+                // shoal-lint: allow(unwrap) avail >= FRAME_HEADER_BYTES was checked above
                 self.buf[self.start..self.start + FRAME_HEADER_BYTES].try_into().unwrap(),
             ) as usize;
             if len > MAX_PACKET_BYTES {
@@ -424,6 +433,7 @@ impl TcpIngress {
             .spawn(move || {
                 run_accept_loop(|| listener.accept().map(|(s, _)| s), router, sd, rd, st)
             })
+            // shoal-lint: allow(unwrap) failing to start this thread at bind time is unrecoverable
             .expect("spawn tcp accept thread");
         Ok(TcpIngress {
             local_addr,
@@ -478,6 +488,7 @@ impl TcpIngress {
                 std::thread::Builder::new()
                     .name(format!("tcp-poll-{local_addr}-s{shard}"))
                     .spawn(move || ps.run())
+                    // shoal-lint: allow(unwrap) failing to start this thread at bind time is unrecoverable
                     .expect("spawn tcp poll thread"),
             );
         }
@@ -507,6 +518,7 @@ impl TcpIngress {
         if !self.pollers.is_empty() {
             return self.pollers.len();
         }
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let readers = self.readers.lock().unwrap().iter().filter(|h| !h.is_finished()).count();
         usize::from(self.accept_handle.is_some()) + readers
     }
@@ -523,6 +535,7 @@ impl TcpIngress {
         if let Some(h) = self.accept_handle.take() {
             let _ = h.join();
         }
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let readers = std::mem::take(&mut *self.readers.lock().unwrap());
         join_bounded(readers, Duration::from_secs(2), "reader");
         join_bounded(std::mem::take(&mut self.pollers), Duration::from_secs(2), "poller");
@@ -578,14 +591,31 @@ fn run_accept_loop(
                 let handle = router.clone();
                 let sd2 = Arc::clone(&shutdown);
                 let st2 = Arc::clone(&stats);
-                let reader = std::thread::spawn(move || {
-                    read_frames(stream, handle, sd2);
-                    st2.closed.fetch_add(1, Ordering::Relaxed);
-                });
-                let mut guard = readers.lock().unwrap();
-                // Reap finished readers so the vec tracks live connections.
-                guard.retain(|h| !h.is_finished());
-                guard.push(reader);
+                let peer = stream
+                    .peer_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "unknown".to_string());
+                let spawned = std::thread::Builder::new()
+                    .name(format!("tcp-rx-{peer}"))
+                    .spawn(move || {
+                        read_frames(stream, handle, sd2);
+                        st2.closed.fetch_add(1, Ordering::Relaxed);
+                    });
+                match spawned {
+                    Ok(reader) => {
+                        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
+                        let mut guard = readers.lock().unwrap();
+                        // Reap finished readers so the vec tracks live connections.
+                        guard.retain(|h| !h.is_finished());
+                        guard.push(reader);
+                    }
+                    Err(e) => {
+                        // Out of threads: drop the stream (peer sees a close
+                        // and may retry) rather than killing the accept loop.
+                        log::error!("tcp ingress: cannot spawn reader for {peer}: {e}");
+                        stats.closed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_millis(2));

@@ -33,6 +33,7 @@ use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::{shard_of_node, RouterHandle};
+use crate::galapagos::shard_owned::ShardOwned;
 
 /// Standard Ethernet MTU payload available to a UDP datagram
 /// (1500 − 20 IP − 8 UDP).
@@ -44,14 +45,17 @@ pub struct UdpEgress {
     peers: HashMap<u16, String>,
     /// Model the FPGA UDP core: refuse to emit datagrams that would fragment.
     hw_core: bool,
-    /// Per-peer staged datagram.
-    stage: HashMap<u16, Coalescer>,
+    /// Per-peer staged datagram. Shard-local: only the owning reactor
+    /// thread stages and flushes.
+    stage: ShardOwned<HashMap<u16, Coalescer>>,
     batch_bytes: usize,
     batch_max_msgs: usize,
     pool: BufPool,
     /// Reliability layer: present = every datagram goes through the ARQ
     /// window (`udp_window > 0`); absent = the historical lossy datapath.
-    arq: Option<Arc<ArqEndpoint>>,
+    /// The egress-side lane is shard-local (the shared `ArqEndpoint` is
+    /// internally synchronized, but only this shard's reactor sends on it).
+    arq: ShardOwned<Option<Arc<ArqEndpoint>>>,
     /// Peers whose UDP core is the hardware one (drops > MTU datagrams on
     /// receive). In reliable mode the egress must respect *their* MTU too:
     /// retransmitting a datagram the receiver deterministically drops
@@ -84,11 +88,11 @@ impl UdpEgress {
             socket,
             peers,
             hw_core,
-            stage: HashMap::new(),
+            stage: ShardOwned::new("udp-egress.stage", HashMap::new()),
             batch_bytes,
             batch_max_msgs,
             pool: BufPool::default(),
-            arq: None,
+            arq: ShardOwned::new("udp-egress.arq", None),
             hw_peers: std::collections::HashSet::new(),
             failure_sink: None,
         }
@@ -97,7 +101,9 @@ impl UdpEgress {
     /// Route every datagram through the ARQ reliability layer (shared with
     /// this node's ingress, which processes the returning ACKs).
     pub fn with_reliability(mut self, arq: Arc<ArqEndpoint>) -> Self {
-        self.arq = Some(arq);
+        // Replace the whole wrapper (a dereference here would claim shard
+        // ownership for the construction thread under `race-check`).
+        self.arq = ShardOwned::new("udp-egress.arq", Some(arq));
         self
     }
 
@@ -161,9 +167,10 @@ impl UdpEgress {
         let batch = self
             .stage
             .get_mut(&node)
+            // shoal-lint: allow(unwrap) the staged coalescer was verified non-empty above
             .expect("checked above")
             .take(&mut self.pool);
-        let result = match (&self.arq, self.peers.get(&node)) {
+        let result = match (self.arq.as_ref(), self.peers.get(&node)) {
             (Some(arq), Some(_)) => arq.send(node, &batch),
             (None, Some(addr)) => {
                 self.socket.send_to(&batch, addr).map(|_| ()).map_err(Error::Io)
@@ -210,6 +217,7 @@ impl Egress for UdpEgress {
                 let again = self
                     .stage
                     .get_mut(&dest_node)
+                    // shoal-lint: allow(unwrap) stage_packet above created the entry
                     .expect("coalescer exists after staging attempt")
                     .stage_packet(&pkt, false);
                 match again {
@@ -253,7 +261,7 @@ impl Egress for UdpEgress {
     }
 
     fn drain(&mut self, max_wait: std::time::Duration) {
-        if let Some(arq) = &self.arq {
+        if let Some(arq) = self.arq.as_ref() {
             arq.drain(max_wait);
         }
     }
@@ -360,6 +368,7 @@ impl UdpIngress {
                     }
                 }
             })
+            // shoal-lint: allow(unwrap) failing to start this thread at bind time is unrecoverable
             .expect("spawn udp reader");
         Ok(UdpIngress { threads: vec![handle], wakers: Vec::new(), local_addr, shutdown })
     }
@@ -423,6 +432,7 @@ impl UdpIngress {
                 std::thread::Builder::new()
                     .name(format!("udp-poll-{local_addr}-s{shard}"))
                     .spawn(move || us.run())
+                    // shoal-lint: allow(unwrap) failing to start this thread at bind time is unrecoverable
                     .expect("spawn udp poll thread"),
             );
         }

@@ -27,6 +27,7 @@
 //! reproduction of every table and figure.
 
 pub mod am;
+pub mod analysis;
 pub mod apps;
 pub mod bench;
 pub mod collectives;

@@ -82,6 +82,8 @@ struct SegmentInner {
 // documented on `atomic_view` (under the buf lock), which serializes it
 // against the RwLock-guarded accessors. The pointer itself is immutable.
 unsafe impl Send for SegmentInner {}
+// SAFETY: as for `Send` — shared references only reach `base` through the
+// same lock-serialized atomic views, so aliasing across threads is sound.
 unsafe impl Sync for SegmentInner {}
 
 impl Segment {
@@ -301,8 +303,10 @@ impl Segment {
     /// view can race only with *other atomic views* — which is exactly what
     /// `AtomicU64` makes sound.
     fn atomic_view(&self, offset: u64) -> Option<&AtomicU64> {
-        // `base` is non-null for any in-bounds offset (check() rejected
-        // everything if size == 0).
+        // SAFETY: pointer arithmetic stays inside the boxed allocation —
+        // the caller ran check(), so `offset + 8 <= size`, and `base` is
+        // non-null for any in-bounds offset (check() rejects everything
+        // when size == 0).
         let p = unsafe { self.inner.base.add(offset as usize) };
         if (p as usize) % std::mem::align_of::<AtomicU64>() != 0 {
             return None;

@@ -79,11 +79,13 @@ pub struct Engine {
     stats: EngineStats,
 }
 
-// With the PJRT backend: the CPU client and loaded executables are
+// SAFETY: with the PJRT backend, the CPU client and loaded executables are
 // internally synchronized; the xla crate just doesn't mark them. All
 // mutation on our side is behind the Mutex above. The native backend is
 // trivially Send + Sync, but the impls must cover both cfgs.
 unsafe impl Send for Engine {}
+// SAFETY: as for `Send` — shared access goes through the internally
+// synchronized PJRT client or the Mutex-guarded executable cache.
 unsafe impl Sync for Engine {}
 
 impl Engine {

@@ -125,6 +125,8 @@ pub struct ShoalKernel {
 }
 
 impl ShoalKernel {
+    // 11 params: the kernel aggregates every per-kernel resource once at
+    // launch; callers never see this internal constructor.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn new(
         id: u16,
@@ -706,6 +708,7 @@ impl ShoalKernel {
     /// [`am_long_from_mem`](Self::am_long_from_mem) with caller-chosen flags
     /// (the [`Rma`](crate::shoal_node::rma::Rma) tier's `Completion::Async`
     /// maps here with the ASYNC flag set).
+    // 8 params: the full long-AM descriptor; every public variant narrows it.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn long_from_mem_flags(
         &mut self,
@@ -1392,7 +1395,9 @@ impl ShoalKernel {
             self.barrier_state
                 .wait_enters(epoch, n - 1, self.timeout)?;
             for &kid in ids.iter().skip(1) {
-                self.am_short_async(
+                // Fire-and-forget: release delivery is confirmed by the
+                // peer leaving its `wait_release`, not by this handle.
+                let _ = self.am_short_async(
                     kid,
                     handler_ids::BARRIER,
                     &[barrier_op::RELEASE, epoch],
@@ -1400,7 +1405,9 @@ impl ShoalKernel {
             }
             Ok(())
         } else {
-            self.am_short_async(master, handler_ids::BARRIER, &[barrier_op::ENTER, epoch])?;
+            // Fire-and-forget: the master's RELEASE is the acknowledgment.
+            let _ =
+                self.am_short_async(master, handler_ids::BARRIER, &[barrier_op::ENTER, epoch])?;
             self.barrier_state.wait_release(epoch, self.timeout)
         }
     }

@@ -87,6 +87,7 @@ impl LocalPeer {
 
     /// Deliver a Medium payload straight onto this peer's kernel stream —
     /// the single copy of the local Medium path (caller slice → stream).
+    // shoal-lint: hotpath
     pub(crate) fn deliver_medium(
         &self,
         src: u16,
@@ -100,6 +101,7 @@ impl LocalPeer {
 
     /// `deliver_medium` moving an already-owned payload (the `from_mem`
     /// path's segment read goes straight into the stream without re-copying).
+    // shoal-lint: hotpath
     pub(crate) fn deliver_medium_owned(
         &self,
         src: u16,
@@ -116,6 +118,8 @@ impl LocalPeer {
     /// Serve a local Medium get: read this peer's segment and deliver onto
     /// the *requesting* kernel's stream, mirroring the wire data reply
     /// (src = responder, args = [chunk offset]).
+    // 8 params: the flat get-request descriptor (requester, handler,
+    // token, source range, chunk) — a struct would outlive this one caller.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn serve_medium_get(
         &self,

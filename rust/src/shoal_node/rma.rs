@@ -132,6 +132,7 @@ impl FetchValue for f64 {
 /// pre-op value itself is extracted exactly once with
 /// [`Rma::wait_fetch`] (or [`ShoalKernel::wait_fetch`] on the raw tier).
 #[derive(Clone, Copy, Debug)]
+#[must_use = "the fetched value is only retrieved by waiting on the handle"]
 pub struct FetchHandle<T: FetchValue> {
     pub am: AmHandle,
     _marker: PhantomData<T>,

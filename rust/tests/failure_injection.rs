@@ -32,7 +32,7 @@ fn out_of_bounds_long_put_does_not_corrupt() {
     let cluster = ShoalCluster::launch(&spec).unwrap();
     cluster.run_kernel(k0, move |mut k| {
         // Write far beyond k1's 1 KiB segment: rejected at the destination.
-        k.am_long_async(k1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
+        let _ = k.am_long_async(k1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
         // A valid put afterwards still works.
         let h = k.am_long(k1, handlers::NOP, &[], &[2; 64], 0).unwrap();
         k.wait(h).unwrap();
@@ -127,7 +127,7 @@ fn hw_udp_fragmentation_refused() {
         // because the API handed the packet to the middleware (asynchronous
         // failure, as on the real FPGA where the core silently drops —
         // §IV-B1 "These packets may have been dropped by the core").
-        k.am_medium_async(k1, handlers::NOP, &[], &[2; 2048]).unwrap();
+        let _ = k.am_medium_async(k1, handlers::NOP, &[], &[2; 2048]).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(100));
         // Traffic continues to flow afterwards.
         let h = k.am_medium(k1, handlers::NOP, &[], &[3; 128]).unwrap();

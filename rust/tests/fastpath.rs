@@ -22,7 +22,7 @@ fn long_put_completes_at_issue_time() {
         assert_eq!(h.messages, 1);
         assert!(k.test(h).unwrap(), "local put must be complete at issue time");
         // The shim model works too (separate op, consumed via wait_replies).
-        k.am_long(1, handlers::NOP, &[], &[8; 16], 512).unwrap();
+        let _ = k.am_long(1, handlers::NOP, &[], &[8; 16], 512).unwrap();
         k.wait_replies(1).unwrap();
         k.barrier().unwrap();
     });
@@ -238,7 +238,7 @@ fn out_of_bounds_local_put_fails_the_handle() {
         let err = k.wait(h).unwrap_err();
         assert!(matches!(err, shoal::Error::OperationFailed(_)), "{err}");
         // Async variant: dropped silently, like the engine.
-        k.am_long_async(1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
+        let _ = k.am_long_async(1, handlers::NOP, &[], &[1; 64], 1 << 20).unwrap();
         // A valid put afterwards still works.
         let h = k.am_long(1, handlers::NOP, &[], &[2; 64], 0).unwrap();
         k.wait(h).unwrap();

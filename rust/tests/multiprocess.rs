@@ -168,7 +168,7 @@ fn cross_transport_all_reduce() {
                 seen.insert(k.recv_medium().unwrap().src);
             }
             for kid in [1u16, 2] {
-                k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+                let _ = k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
             }
             let ch = k.all_reduce_u64(ReduceOp::Sum, &[k.id() as u64]).unwrap();
             let v = k.collective_wait_u64(ch).unwrap();
@@ -221,7 +221,7 @@ fn cross_transport_gups() {
                 seen.insert(k.recv_medium().unwrap().src);
             }
             for kid in [1u16, 2] {
-                k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+                let _ = k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
             }
             let rate = shoal::apps::gups::kernel_body(&mut k, &[0, 1, 2], UPDATES, TABLE_WORDS)
                 .expect("gups exactness fold");

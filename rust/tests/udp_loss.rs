@@ -124,7 +124,7 @@ fn multiprocess_all_reduce_over_lossy_udp_matches_tcp() {
                 seen.insert(k.recv_medium().unwrap().src);
             }
             for kid in [1u16, 2] {
-                k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+                let _ = k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
             }
             let ch = k.all_reduce_u64(ReduceOp::Sum, &[k.id() as u64]).unwrap();
             let v = k.collective_wait_u64(ch).unwrap();
@@ -257,7 +257,7 @@ fn multiprocess_all_reduce_over_lossy_udp_with_sharded_routers() {
             seen.insert(k.recv_medium().unwrap().src);
         }
         for kid in [1u16, 2] {
-            k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
+            let _ = k.am_medium_async(kid, handlers::NOP, &[], b"go").unwrap();
         }
         let ch = k.all_reduce_u64(ReduceOp::Sum, &[k.id() as u64]).unwrap();
         let v = k.collective_wait_u64(ch).unwrap();
