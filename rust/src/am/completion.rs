@@ -67,7 +67,10 @@ enum SlotState {
     Free,
     InFlight { remaining: u64 },
     Complete,
-    Failed(String),
+    /// Send failed. When the failure is a dead-peer fence, `dead_peer`
+    /// carries the node id so waiters get the structured
+    /// [`Error::PeerDead`] instead of a string-only [`Error::OperationFailed`].
+    Failed { reason: String, dead_peer: Option<u16> },
 }
 
 #[derive(Debug)]
@@ -258,12 +261,18 @@ impl CompletionTable {
     /// so the `wait_replies` shim fails fast instead of timing out. Shared
     /// by the handle-side [`fail`](CompletionTable::fail) and the
     /// transport-side [`fail_token`](CompletionTable::fail_token).
-    fn fail_slot(inner: &mut TableInner, slot: u32, gen: u32, reason: &str) {
+    fn fail_slot(
+        inner: &mut TableInner,
+        slot: u32,
+        gen: u32,
+        reason: &str,
+        dead_peer: Option<u16>,
+    ) {
         if let Some(s) = inner.slots.get_mut(slot as usize) {
             if s.gen == gen {
                 if let SlotState::InFlight { remaining } = &s.state {
                     let remaining = *remaining;
-                    s.state = SlotState::Failed(reason.to_string());
+                    s.state = SlotState::Failed { reason: reason.to_string(), dead_peer };
                     inner.lost_replies += remaining;
                     inner.inflight_replies = inner.inflight_replies.saturating_sub(remaining);
                 }
@@ -281,7 +290,26 @@ impl CompletionTable {
         }
         // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
-        Self::fail_slot(&mut g, h.slot, h.gen, reason);
+        Self::fail_slot(&mut g, h.slot, h.gen, reason, None);
+        self.cv.notify_all();
+    }
+
+    /// [`fail`](CompletionTable::fail) preserving error structure: a
+    /// [`Error::PeerDead`] cause records the dead node on the slot so
+    /// waiters observe the same structured variant (fail-at-issue on a
+    /// fenced peer); any other cause degrades to the plain reason string.
+    pub fn fail_error(&self, h: AmHandle, err: &Error) {
+        if h.slot == SLOT_NONE {
+            return;
+        }
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
+        let mut g = self.inner.lock().unwrap();
+        match err {
+            Error::PeerDead { node, detail } => {
+                Self::fail_slot(&mut g, h.slot, h.gen, detail, Some(*node))
+            }
+            other => Self::fail_slot(&mut g, h.slot, h.gen, &other.to_string(), None),
+        }
         self.cv.notify_all();
     }
 
@@ -296,7 +324,20 @@ impl CompletionTable {
         // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut g = self.inner.lock().unwrap();
         if let Some(&(slot, gen)) = g.tokens.get(&token) {
-            Self::fail_slot(&mut g, slot, gen, reason);
+            Self::fail_slot(&mut g, slot, gen, reason, None);
+        }
+        self.cv.notify_all();
+    }
+
+    /// [`fail_token`](CompletionTable::fail_token) for dead-peer fences:
+    /// records which node died so waiters observe the structured
+    /// [`Error::PeerDead`] (`detail` is the evidence — "no traffic for
+    /// 900 ms", "udp ARQ retries exhausted", ...).
+    pub fn fail_token_peer_dead(&self, token: u32, node: u16, detail: &str) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
+        let mut g = self.inner.lock().unwrap();
+        if let Some(&(slot, gen)) = g.tokens.get(&token) {
+            Self::fail_slot(&mut g, slot, gen, detail, Some(node));
         }
         self.cv.notify_all();
     }
@@ -444,7 +485,10 @@ impl CompletionTable {
             Some(s) if s.gen == h.gen => match &s.state {
                 SlotState::InFlight { .. } => None,
                 SlotState::Complete => Some(Ok(())),
-                SlotState::Failed(reason) => {
+                SlotState::Failed { reason, dead_peer: Some(node) } => {
+                    Some(Err(Error::PeerDead { node: *node, detail: reason.clone() }))
+                }
+                SlotState::Failed { reason, dead_peer: None } => {
                     Some(Err(Error::OperationFailed(reason.clone())))
                 }
                 SlotState::Free => Some(Ok(())),
@@ -611,6 +655,30 @@ mod tests {
         tab.wait(h2, T).unwrap();
         tab.fail_token(tok2, "late"); // already resolved + reaped
         assert_eq!(tab.live_entries(), 0);
+    }
+
+    #[test]
+    fn peer_dead_failures_surface_the_structured_variant() {
+        let tab = CompletionTable::new();
+        // Transport-side fence: a token owned by a dead peer's frame.
+        let h = tab.create(1);
+        let tok = tab.bind_token(h);
+        tab.fail_token_peer_dead(tok, 3, "no traffic for 900 ms");
+        match tab.wait(h, T).unwrap_err() {
+            Error::PeerDead { node, detail } => {
+                assert_eq!(node, 3);
+                assert_eq!(detail, "no traffic for 900 ms");
+            }
+            e => panic!("expected PeerDead, got {e}"),
+        }
+        // Issue-side fence: the router rejected the send outright.
+        let h2 = tab.create(1);
+        tab.fail_error(h2, &Error::PeerDead { node: 5, detail: "fenced at issue".into() });
+        assert!(matches!(tab.wait(h2, T), Err(Error::PeerDead { node: 5, .. })));
+        // Non-peer-dead causes degrade to the plain reason string.
+        let h3 = tab.create(1);
+        tab.fail_error(h3, &Error::Disconnected("router"));
+        assert!(matches!(tab.wait(h3, T), Err(Error::OperationFailed(_))));
     }
 
     #[test]

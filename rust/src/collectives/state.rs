@@ -75,6 +75,11 @@ struct Inner {
     /// Coordinator view: highest collective sequence each kernel has
     /// contributed to (names stragglers per-collective on timeouts).
     ledger: EpochLedger,
+    /// Kernels on nodes the failure detector declared dead: kernel →
+    /// (dead node, evidence). Collectives span every kernel, so once this
+    /// is non-empty no new collective can complete — `begin` fails at
+    /// issue with [`Error::PeerDead`] naming the node.
+    dead: HashMap<u16, (u16, String)>,
 }
 
 /// Outcome of one ingress collective message: the next tree hops to emit,
@@ -241,6 +246,16 @@ impl CollectiveState {
             let mut g = self.inner.lock().unwrap();
             // Split the guard into disjoint field borrows (entries vs ledger).
             let inner: &mut Inner = &mut g;
+            // Fail-at-issue once any participant's node is dead: the
+            // spanning tree includes every kernel, so the collective can
+            // never complete — error now, naming the peer, instead of
+            // stranding the caller until timeout.
+            if let Some((k, (node, detail))) = inner.dead.iter().next() {
+                return Err(Error::PeerDead {
+                    node: *node,
+                    detail: format!("{detail} (collective peer kernel {k} unreachable)"),
+                });
+            }
             // Reclaim ancient done-and-resolved entries nobody fetched (see
             // RESOLVED_KEEP) before the map grows without bound.
             if inner.entries.len() > RESOLVED_KEEP as usize {
@@ -451,6 +466,56 @@ impl CollectiveState {
             }
             _ => (Vec::new(), None),
         }
+    }
+
+    /// Abort every in-flight collective when `kernels` (those hosted on
+    /// `node`) died at membership `epoch` with evidence `detail` — invoked
+    /// from the failure detector's death sink. Each unfinished entry's
+    /// completion token is failed with the structured dead-peer error
+    /// (collectives span every kernel, so none of them can ever finish),
+    /// the death is recorded in the coordinator ledger, and subsequent
+    /// `begin` calls fail at issue. Returns the number of collectives
+    /// aborted. Idempotent per token: an already-failed or completed
+    /// operation is untouched.
+    pub fn abort_for_dead_kernels(
+        &self,
+        kernels: &[u16],
+        node: u16,
+        epoch: u64,
+        detail: &str,
+    ) -> usize {
+        let mut failed_tokens = Vec::new();
+        {
+            let mut g = self.inner.lock().unwrap();
+            let inner: &mut Inner = &mut g;
+            inner.ledger.record_death(node, epoch);
+            for &k in kernels {
+                inner.dead.entry(k).or_insert_with(|| (node, detail.to_string()));
+            }
+            for e in inner.entries.values_mut() {
+                if e.done || e.resolved {
+                    continue;
+                }
+                // Mark resolved so a late zombie message cannot re-resolve
+                // the (now failed) token; `done` stays false so
+                // `take_result` reports the collective incomplete.
+                e.resolved = true;
+                if let Some(t) = e.token {
+                    failed_tokens.push(t);
+                }
+            }
+        }
+        // Fail outside the state lock: the completion table takes its own
+        // lock and wakes waiters.
+        for &t in &failed_tokens {
+            self.completion.fail_token_peer_dead(t, node, detail);
+        }
+        failed_tokens.len()
+    }
+
+    /// Membership epoch recorded in this kernel's ledger (0 = no deaths).
+    pub fn membership_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().ledger.membership_epoch()
     }
 
     /// Coordinator view: kernels (ever seen contributing, or expected as
@@ -720,6 +785,40 @@ mod tests {
             decode_u64s(&st.take_result(total).unwrap()).unwrap(),
             vec![total]
         );
+    }
+
+    #[test]
+    fn dead_kernel_aborts_inflight_and_rejects_new() {
+        // Root of {0,1,2} begins, children never contribute, then kernel 2's
+        // node dies: the in-flight collective must fail immediately with the
+        // structured error naming the node, and new collectives must fail
+        // at issue instead of stranding until timeout.
+        let (st, completion) = state(0, &[0, 1, 2]);
+        let d = desc(CollectiveKind::AllReduce, 0);
+        let (h, tok) = issue(&completion);
+        start(&st, &completion, 1, d, &encode_u64s(&[1]), tok);
+        assert_eq!(st.abort_for_dead_kernels(&[2], 9, 1, "no traffic for 900 ms"), 1);
+        match completion.wait(h, T) {
+            Err(Error::PeerDead { node, detail }) => {
+                assert_eq!(node, 9);
+                assert!(detail.contains("no traffic"), "{detail}");
+            }
+            r => panic!("expected PeerDead, got {r:?}"),
+        }
+        assert_eq!(st.membership_epoch(), 1);
+        // Re-reporting the same death aborts nothing further.
+        assert_eq!(st.abort_for_dead_kernels(&[2], 9, 1, "again"), 0);
+        let (h2, tok2) = issue(&completion);
+        match st.begin(2, d, &encode_u64s(&[1]), tok2) {
+            Err(Error::PeerDead { node: 9, .. }) => {}
+            r => panic!("expected fail-at-issue PeerDead, got {:?}", r.is_ok()),
+        }
+        completion.fail_error(h2, &Error::PeerDead { node: 9, detail: "fenced".into() });
+        // A late zombie UP for the aborted collective must not resolve it.
+        let mut up = st.coll_msg(0, coll_dir::UP, 1, d, encode_u64s(&[5]));
+        up.src = 1;
+        let r = st.on_message(&up).unwrap();
+        assert!(r.resolve.is_none(), "aborted entry must never re-resolve");
     }
 
     #[test]

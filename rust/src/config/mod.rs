@@ -145,6 +145,23 @@ pub struct ClusterSpec {
     /// this knob off, the datapath is the paper's single-router design
     /// exactly. Overridable at launch with `SHOAL_INGRESS_POLL`.
     pub ingress_poll: bool,
+    /// Heartbeat cadence in milliseconds of the peer-health failure
+    /// detector (see `galapagos::health`): each router shard emits a
+    /// lightweight heartbeat toward its owned peers on this interval from
+    /// the egress/ARQ timer wheel, and any received traffic counts as
+    /// liveness. `0` (default) disables the detector entirely — no
+    /// `PeerHealth` is constructed and every datapath behaves exactly as
+    /// before.
+    pub heartbeat_interval_ms: u64,
+    /// Ingress silence (milliseconds) after which a peer turns `Suspect`
+    /// (still revivable by any traffic). Only meaningful with a nonzero
+    /// `heartbeat_interval_ms`.
+    pub suspect_after_ms: u64,
+    /// Ingress silence (milliseconds) after which a peer is declared
+    /// `Dead` and fenced: its staged/in-flight frames fail with
+    /// `Error::PeerDead`, new sends are rejected at issue, and in-flight
+    /// collectives touching its kernels abort. Dead is sticky for the run.
+    pub dead_after_ms: u64,
 }
 
 /// Default PGAS segment size per kernel (enough for a 4096×4096/2 f32 strip
@@ -171,6 +188,14 @@ pub const DEFAULT_UDP_ACK_INTERVAL_MS: u64 = 2;
 /// Hard cap on `router_shards`: beyond this the per-shard threads cost more
 /// than the hashing spreads.
 pub const MAX_ROUTER_SHARDS: usize = 64;
+
+/// Default `suspect_after_ms` when heartbeats are enabled without an
+/// explicit value: a few missed heartbeats at the default cadence.
+pub const DEFAULT_SUSPECT_AFTER_MS: u64 = 500;
+
+/// Default `dead_after_ms` when heartbeats are enabled without an explicit
+/// value.
+pub const DEFAULT_DEAD_AFTER_MS: u64 = 2000;
 
 /// Default router shard count: `min(4, cores)` — enough to take the router
 /// off the critical path on a multicore host without spawning threads a
@@ -270,6 +295,20 @@ impl ClusterSpec {
         self.ingress_poll
     }
 
+    /// The failure-detector knobs as a `HealthConfig`, or `None` when
+    /// heartbeats are disabled (`heartbeat_interval_ms == 0`) — the signal
+    /// for nodes not to construct a `PeerHealth` at all.
+    pub fn health_config(&self) -> Option<crate::galapagos::health::HealthConfig> {
+        if self.heartbeat_interval_ms == 0 {
+            return None;
+        }
+        Some(crate::galapagos::health::HealthConfig {
+            heartbeat_interval: std::time::Duration::from_millis(self.heartbeat_interval_ms),
+            suspect_after: std::time::Duration::from_millis(self.suspect_after_ms),
+            dead_after: std::time::Duration::from_millis(self.dead_after_ms),
+        })
+    }
+
     /// Validate internal consistency (unique ids, kernels map to nodes,
     /// addresses present when a network transport is selected).
     pub fn validate(&self) -> Result<()> {
@@ -321,6 +360,23 @@ impl ClusterSpec {
                 self.router_shards
             )));
         }
+        if self.heartbeat_interval_ms > 0 {
+            if self.suspect_after_ms < self.heartbeat_interval_ms {
+                return Err(Error::Config(format!(
+                    "suspect_after of {} ms is shorter than the heartbeat \
+                     interval of {} ms — every peer would flap suspect \
+                     between beats",
+                    self.suspect_after_ms, self.heartbeat_interval_ms
+                )));
+            }
+            if self.dead_after_ms <= self.suspect_after_ms {
+                return Err(Error::Config(format!(
+                    "dead_after of {} ms must exceed suspect_after of {} ms \
+                     (a peer must pass through Suspect before Dead)",
+                    self.dead_after_ms, self.suspect_after_ms
+                )));
+            }
+        }
         Ok(())
     }
 }
@@ -343,6 +399,9 @@ pub struct ClusterBuilder {
     local_fastpath: bool,
     router_shards: usize,
     ingress_poll: bool,
+    heartbeat_interval_ms: u64,
+    suspect_after_ms: u64,
+    dead_after_ms: u64,
 }
 
 impl ClusterBuilder {
@@ -357,6 +416,9 @@ impl ClusterBuilder {
             local_fastpath: true,
             router_shards: default_router_shards(),
             ingress_poll: true,
+            heartbeat_interval_ms: 0,
+            suspect_after_ms: DEFAULT_SUSPECT_AFTER_MS,
+            dead_after_ms: DEFAULT_DEAD_AFTER_MS,
             ..Default::default()
         }
     }
@@ -464,6 +526,26 @@ impl ClusterBuilder {
         self
     }
 
+    /// Heartbeat cadence of the peer failure detector (`0` = detector off,
+    /// the default — behavior is then bitwise identical to a build without
+    /// the subsystem).
+    pub fn heartbeat_interval_ms(&mut self, ms: u64) -> &mut Self {
+        self.heartbeat_interval_ms = ms;
+        self
+    }
+
+    /// Ingress silence before a peer turns `Suspect`.
+    pub fn suspect_after_ms(&mut self, ms: u64) -> &mut Self {
+        self.suspect_after_ms = ms;
+        self
+    }
+
+    /// Ingress silence before a peer is declared `Dead` and fenced.
+    pub fn dead_after_ms(&mut self, ms: u64) -> &mut Self {
+        self.dead_after_ms = ms;
+        self
+    }
+
     pub fn build(self) -> Result<ClusterSpec> {
         let spec = ClusterSpec {
             nodes: self.nodes,
@@ -481,6 +563,9 @@ impl ClusterBuilder {
             local_fastpath: self.local_fastpath,
             router_shards: self.router_shards,
             ingress_poll: self.ingress_poll,
+            heartbeat_interval_ms: self.heartbeat_interval_ms,
+            suspect_after_ms: self.suspect_after_ms,
+            dead_after_ms: self.dead_after_ms,
         };
         spec.validate()?;
         Ok(spec)
@@ -619,6 +704,50 @@ mod tests {
         b.kernel(0);
         b.ingress_poll(false);
         assert!(!b.build().unwrap().ingress_poll);
+    }
+
+    #[test]
+    fn heartbeats_default_off_and_roundtrip() {
+        let s = ClusterSpec::single_node("n0", 1);
+        assert_eq!(s.heartbeat_interval_ms, 0);
+        assert!(s.health_config().is_none(), "detector off by default");
+
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.heartbeat_interval_ms(50).suspect_after_ms(150).dead_after_ms(600);
+        let s = b.build().unwrap();
+        assert_eq!(s.heartbeat_interval_ms, 50);
+        assert_eq!(s.suspect_after_ms, 150);
+        assert_eq!(s.dead_after_ms, 600);
+        let hc = s.health_config().unwrap();
+        assert_eq!(hc.heartbeat_interval, std::time::Duration::from_millis(50));
+        assert_eq!(hc.suspect_after, std::time::Duration::from_millis(150));
+        assert_eq!(hc.dead_after, std::time::Duration::from_millis(600));
+    }
+
+    #[test]
+    fn heartbeat_knobs_validate_ordering() {
+        // suspect_after shorter than the beat interval: every peer flaps.
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.heartbeat_interval_ms(100).suspect_after_ms(50);
+        assert!(matches!(b.build(), Err(Error::Config(_))));
+
+        // dead_after must exceed suspect_after.
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.heartbeat_interval_ms(100).suspect_after_ms(300).dead_after_ms(300);
+        assert!(matches!(b.build(), Err(Error::Config(_))));
+
+        // With heartbeats off the other two knobs are inert.
+        let mut b = ClusterBuilder::new();
+        b.node("x", Platform::Sw);
+        b.kernel(0);
+        b.suspect_after_ms(1).dead_after_ms(1);
+        assert!(b.build().is_ok());
     }
 
     #[test]

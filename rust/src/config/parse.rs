@@ -76,6 +76,9 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     let mut local_fastpath: Option<bool> = None;
     let mut router_shards: Option<usize> = None;
     let mut ingress_poll: Option<bool> = None;
+    let mut heartbeat_interval: Option<u64> = None;
+    let mut suspect_after: Option<u64> = None;
+    let mut dead_after: Option<u64> = None;
     let mut nodes: Vec<NodeSec> = Vec::new();
     let mut kernels: Vec<KernelSec> = Vec::new();
 
@@ -193,6 +196,22 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
                         _ => return Err(err("ingress_poll must be true or false")),
                     })
                 }
+                "heartbeat_interval" => {
+                    heartbeat_interval = Some(
+                        value
+                            .parse()
+                            .map_err(|_| err("heartbeat_interval must be an integer (ms)"))?,
+                    )
+                }
+                "suspect_after" => {
+                    suspect_after = Some(
+                        value.parse().map_err(|_| err("suspect_after must be an integer (ms)"))?,
+                    )
+                }
+                "dead_after" => {
+                    dead_after =
+                        Some(value.parse().map_err(|_| err("dead_after must be an integer (ms)"))?)
+                }
                 k => return Err(err(&format!("unknown top-level key '{k}'"))),
             },
             Section::Node(n) => match key {
@@ -246,6 +265,15 @@ pub fn parse_cluster(text: &str) -> Result<ClusterSpec> {
     }
     if let Some(on) = ingress_poll {
         b.ingress_poll(on);
+    }
+    if let Some(ms) = heartbeat_interval {
+        b.heartbeat_interval_ms(ms);
+    }
+    if let Some(ms) = suspect_after {
+        b.suspect_after_ms(ms);
+    }
+    if let Some(ms) = dead_after {
+        b.dead_after_ms(ms);
     }
 
     let mut node_ids: Vec<(String, u16)> = Vec::new();
@@ -448,6 +476,28 @@ segment = 4096
         assert_eq!(d.router_shards, crate::config::default_router_shards());
         assert!(parse_cluster(&format!("router_shards = \"many\"{base}")).is_err());
         assert!(parse_cluster(&format!("router_shards = 0{base}")).is_err());
+    }
+
+    #[test]
+    fn parses_heartbeat_knobs() {
+        let base = "\n[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n";
+        let text = format!(
+            "heartbeat_interval = 50\nsuspect_after = 150\ndead_after = 600{base}"
+        );
+        let s = parse_cluster(&text).unwrap();
+        assert_eq!(s.heartbeat_interval_ms, 50);
+        assert_eq!(s.suspect_after_ms, 150);
+        assert_eq!(s.dead_after_ms, 600);
+        assert!(s.health_config().is_some());
+        // Default when unspecified: detector off.
+        let d = parse_cluster("[[node]]\nname = \"a\"\n[[kernel]]\nnode = \"a\"\n").unwrap();
+        assert_eq!(d.heartbeat_interval_ms, 0);
+        assert!(d.health_config().is_none());
+        assert!(parse_cluster(&format!("heartbeat_interval = \"soon\"{base}")).is_err());
+        // Builder validation still applies through the parser.
+        assert!(
+            parse_cluster(&format!("heartbeat_interval = 100\nsuspect_after = 10{base}")).is_err()
+        );
     }
 
     #[test]

@@ -13,7 +13,7 @@
 //! ([`BarrierState`](crate::am::engine::BarrierState) holds it under the
 //! barrier mutex); it owns no synchronization of its own.
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Per-kernel record of the highest barrier epoch each kernel has entered.
 ///
@@ -28,6 +28,14 @@ pub struct EpochLedger {
     /// tree subsystem with their own cluster-wide ordering, and a timeout
     /// there must name stragglers per-collective, not per-barrier.
     collective: HashMap<u16, u64>,
+    /// *Membership* epoch: bumped once per node death reported by the
+    /// failure detector (`galapagos::health`). Maps dead node → the epoch
+    /// its death established; ordered so the death history reads back in
+    /// epoch order. A third dimension again: node deaths are cluster
+    /// topology events, not barrier or collective progress.
+    deaths: BTreeMap<u64, u16>,
+    /// Highest membership epoch recorded (0 = full initial membership).
+    membership: u64,
 }
 
 impl EpochLedger {
@@ -111,6 +119,32 @@ impl EpochLedger {
         self.collective.get(&kernel).copied()
     }
 
+    // -- membership epochs -------------------------------------------------
+
+    /// Record that `node` died at membership `epoch` (as stamped by the
+    /// failure detector). Epochs only move forward; re-reports of the same
+    /// death are idempotent.
+    pub fn record_death(&mut self, node: u16, epoch: u64) {
+        self.deaths.entry(epoch).or_insert(node);
+        self.membership = self.membership.max(epoch);
+    }
+
+    /// Current membership epoch: 0 until a death is recorded, then the
+    /// highest epoch any recorded death established.
+    pub fn membership_epoch(&self) -> u64 {
+        self.membership
+    }
+
+    /// Nodes recorded dead, in membership-epoch order.
+    pub fn dead_nodes(&self) -> Vec<u16> {
+        self.deaths.values().copied().collect()
+    }
+
+    /// Whether `node` has been recorded dead.
+    pub fn is_dead(&self, node: u16) -> bool {
+        self.deaths.values().any(|&n| n == node)
+    }
+
     /// Kernels known to the collective dimension that have *not* reached
     /// collective `seq` — named by a collective-timeout diagnostic.
     pub fn collective_stragglers(&self, seq: u64) -> Vec<u16> {
@@ -186,6 +220,24 @@ mod tests {
         assert_eq!(l.collective_stragglers(3), vec![2]);
         assert_eq!(l.collective_stragglers(4), vec![1, 2]);
         assert_eq!(l.collective_stragglers(0), Vec::<u16>::new());
+    }
+
+    #[test]
+    fn membership_epochs_track_deaths_in_order() {
+        let mut l = EpochLedger::new();
+        assert_eq!(l.membership_epoch(), 0);
+        assert!(l.dead_nodes().is_empty());
+        l.record_death(3, 1);
+        l.record_death(1, 2);
+        l.record_death(3, 1); // idempotent re-report
+        assert_eq!(l.membership_epoch(), 2);
+        assert_eq!(l.dead_nodes(), vec![3, 1], "epoch order, not node order");
+        assert!(l.is_dead(3));
+        assert!(!l.is_dead(2));
+        // Membership is independent of barrier/collective dimensions.
+        l.record_enter(5, 9);
+        l.record_collective(5, 9);
+        assert_eq!(l.membership_epoch(), 2);
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub enum Error {
     /// issued; `wait`/`test` on the handle surface the reason.
     OperationFailed(String),
 
+    /// The peer node this operation was routed to has been declared dead by
+    /// the heartbeat failure detector (see `galapagos::health`). Structured
+    /// so callers can match on peer death — and learn *which* peer — instead
+    /// of parsing `OperationFailed` strings. `detail` carries the evidence
+    /// ("udp ARQ retries exhausted", "no traffic for 900 ms", ...).
+    PeerDead { node: u16, detail: String },
+
     /// `wait_any` was called on an empty handle slice. "Any of nothing" has
     /// no completable element, so the call can neither return an index nor
     /// block meaningfully — a typed error instead of a loop or panic.
@@ -118,6 +125,9 @@ impl std::fmt::Display for Error {
                 write!(f, "message type {what} is disabled by the active API profile")
             }
             Error::OperationFailed(msg) => write!(f, "operation failed: {msg}"),
+            Error::PeerDead { node, detail } => {
+                write!(f, "peer node {node} is dead: {detail}")
+            }
             Error::EmptyWaitSet(what) => {
                 write!(f, "{what} called on an empty handle set")
             }
@@ -163,6 +173,18 @@ mod tests {
         assert_eq!(
             Error::Timeout("packet receive").to_string(),
             "timeout waiting for packet receive"
+        );
+    }
+
+    #[test]
+    fn peer_dead_display_matches_the_sink_reason_format() {
+        // The fencing paths format failure-sink reasons with
+        // `health::dead_peer_reason`; the structured variant must render
+        // identically so logs and handle errors agree.
+        let e = Error::PeerDead { node: 3, detail: "no traffic for 900 ms".into() };
+        assert_eq!(
+            e.to_string(),
+            crate::galapagos::health::dead_peer_reason(3, "no traffic for 900 ms")
         );
     }
 

@@ -1,0 +1,532 @@
+//! Peer liveness: heartbeat failure detection and dead-peer fencing.
+//!
+//! A node that dies mid-run must fail **exactly** the operations routed to
+//! it — promptly, with the peer named — and nothing else. [`PeerHealth`] is
+//! the per-node state machine that decides *when* a peer is gone:
+//!
+//! ```text
+//!            silence ≥ suspect_after           silence ≥ dead_after
+//!   Alive ──────────────────────────► Suspect ─────────────────────► Dead
+//!     ▲                                  │                            │
+//!     └────────── any ingress ───────────┘            (sticky: never revived)
+//! ```
+//!
+//! Three evidence streams drive it:
+//!
+//! - **Heartbeats** — each router shard emits a lightweight heartbeat toward
+//!   its owned peers every `heartbeat_interval` from the egress/ARQ timer
+//!   wheel (a magic frame on TCP, a standalone ACK datagram on reliable
+//!   UDP), and any received traffic counts as liveness via [`touch`].
+//! - **Hard transport evidence** — exhausted ARQ retries, exhausted TCP
+//!   connect retries: the peer is provably unreachable, transition straight
+//!   to `Dead` ([`peer_dead`]).
+//! - **Soft transport evidence** — `ConnectionReset`/`BrokenPipe` on an
+//!   established stream: the process is probably gone but the heartbeat
+//!   timeout confirms it, so only `Alive → Suspect` ([`suspect`]).
+//!
+//! Every `Dead` transition bumps the cluster **membership epoch** (stamped
+//! on the peer's slot), and runs the installed [`DeathSink`] exactly once —
+//! the runtime uses it to abort in-flight collectives and record the epoch
+//! bump in the coordinator ledger. Dead is sticky: a dead peer's frames were
+//! already fenced into failure sinks, so late packets from a zombie process
+//! must not resurrect it within this run.
+//!
+//! The whole subsystem is **off by default**: with `heartbeat_interval = 0`
+//! no `PeerHealth` is constructed and every datapath behaves bitwise as
+//! before. The read side ([`state`], [`is_dead`], [`touch`]) is a single
+//! atomic access — safe on the send hot path.
+//!
+//! [`touch`]: PeerHealth::touch
+//! [`peer_dead`]: PeerHealth::peer_dead
+//! [`suspect`]: PeerHealth::suspect
+//! [`state`]: PeerHealth::state
+//! [`is_dead`]: PeerHealth::is_dead
+
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const ALIVE: u8 = 0;
+const SUSPECT: u8 = 1;
+const DEAD: u8 = 2;
+
+/// A peer's liveness state as seen by this node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerState {
+    Alive,
+    Suspect,
+    Dead,
+}
+
+/// Detection knobs (see `ClusterSpec`): all three in effect only when
+/// `heartbeat_interval` is nonzero.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// Cadence of outbound heartbeats per peer.
+    pub heartbeat_interval: Duration,
+    /// Ingress silence after which a peer turns `Suspect`.
+    pub suspect_after: Duration,
+    /// Ingress silence after which a peer is declared `Dead`.
+    pub dead_after: Duration,
+}
+
+/// Callback invoked exactly once per `Dead` transition, outside any
+/// `PeerHealth` lock: `(dead node, membership epoch after the bump, detail)`.
+/// The runtime installs one that aborts in-flight collectives touching the
+/// dead node's kernels and records the epoch bump in the coordinator ledger.
+pub type DeathSink = Arc<dyn Fn(u16, u64, &str) + Send + Sync>;
+
+struct PeerSlot {
+    /// True for actual remote peers; padding slots (and our own node id)
+    /// stay permanently `Alive` and are never ticked.
+    tracked: bool,
+    state: AtomicU8,
+    /// Milliseconds (on this instance's clock) we last heard *anything*
+    /// from the peer.
+    last_heard_ms: AtomicU64,
+    /// Milliseconds we last emitted a heartbeat toward the peer.
+    last_beat_ms: AtomicU64,
+    /// Membership epoch stamped at the peer's `Dead` transition.
+    died_epoch: AtomicU64,
+}
+
+impl PeerSlot {
+    fn new(tracked: bool) -> PeerSlot {
+        PeerSlot {
+            tracked,
+            state: AtomicU8::new(ALIVE),
+            last_heard_ms: AtomicU64::new(0),
+            last_beat_ms: AtomicU64::new(0),
+            died_epoch: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Per-node peer liveness (see module docs). One shared instance per
+/// `GalapagosNode`; each router shard drives timed transitions for the
+/// peers it owns from its own timer wheel, while ingress threads record
+/// liveness and transport errors from wherever they surface. All methods
+/// take explicit millisecond timestamps (from [`now_ms`]) so the state
+/// machine is testable on virtual time, like the ARQ core.
+///
+/// [`now_ms`]: PeerHealth::now_ms
+pub struct PeerHealth {
+    node_id: u16,
+    cfg: HealthConfig,
+    origin: Instant,
+    slots: Vec<PeerSlot>,
+    /// Cluster membership epoch: starts at 0, +1 per `Dead` transition.
+    epoch: AtomicU64,
+    /// Handles/frames fenced into failure sinks on behalf of dead peers.
+    fenced: AtomicU64,
+    death_sink: Mutex<Option<DeathSink>>,
+}
+
+impl PeerHealth {
+    /// Track liveness of `peers` (remote node ids) on behalf of `node_id`.
+    pub fn new(node_id: u16, peers: &[u16], cfg: HealthConfig) -> Arc<PeerHealth> {
+        let len = peers.iter().map(|&p| p as usize + 1).max().unwrap_or(0);
+        let mut slots = Vec::with_capacity(len);
+        for id in 0..len {
+            slots.push(PeerSlot::new(peers.contains(&(id as u16))));
+        }
+        Arc::new(PeerHealth {
+            node_id,
+            cfg,
+            origin: Instant::now(),
+            slots,
+            epoch: AtomicU64::new(0),
+            fenced: AtomicU64::new(0),
+            death_sink: Mutex::new(None),
+        })
+    }
+
+    /// Install the callback run once per `Dead` transition.
+    pub fn set_death_sink(&self, sink: DeathSink) {
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
+        *self.death_sink.lock().unwrap() = Some(sink);
+    }
+
+    /// Milliseconds elapsed on this instance's clock — the timestamp every
+    /// other method expects.
+    pub fn now_ms(&self) -> u64 {
+        self.origin.elapsed().as_millis() as u64
+    }
+
+    pub fn config(&self) -> HealthConfig {
+        self.cfg
+    }
+
+    /// The node this instance watches peers on behalf of.
+    pub fn node_id(&self) -> u16 {
+        self.node_id
+    }
+
+    fn slot(&self, node: u16) -> Option<&PeerSlot> {
+        self.slots.get(node as usize).filter(|s| s.tracked)
+    }
+
+    /// Current state of `node`. Untracked ids are permanently `Alive`.
+    // shoal-lint: hotpath
+    pub fn state(&self, node: u16) -> PeerState {
+        match self.slot(node).map(|s| s.state.load(Ordering::Relaxed)) {
+            Some(SUSPECT) => PeerState::Suspect,
+            Some(DEAD) => PeerState::Dead,
+            _ => PeerState::Alive,
+        }
+    }
+
+    /// Whether `node` has been declared dead — the send-side fencing gate.
+    // shoal-lint: hotpath
+    pub fn is_dead(&self, node: u16) -> bool {
+        matches!(
+            self.slot(node).map(|s| s.state.load(Ordering::Relaxed)),
+            Some(DEAD)
+        )
+    }
+
+    /// Record liveness evidence from `node` (any ingress traffic). Revives
+    /// a `Suspect` back to `Alive`; `Dead` is sticky.
+    // shoal-lint: hotpath
+    pub fn touch(&self, node: u16, now: u64) {
+        if let Some(s) = self.slot(node) {
+            s.last_heard_ms.store(now, Ordering::Relaxed);
+            // Revive Suspect → Alive; a racing Dead transition wins (the
+            // exchange only succeeds from SUSPECT).
+            let _ = s.state.compare_exchange(
+                SUSPECT,
+                ALIVE,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+        }
+    }
+
+    /// Whether any liveness evidence has ever been recorded for `node`
+    /// (`touch`ed at least once since construction). Gates hard-evidence
+    /// escalation: a peer we have *never* heard from may still be starting
+    /// up, so only the `dead_after` silence timer may declare it.
+    pub fn heard_from(&self, node: u16) -> bool {
+        self.slot(node)
+            .is_some_and(|s| s.last_heard_ms.load(Ordering::Relaxed) > 0)
+    }
+
+    /// Record soft transport evidence against `node` (connection reset /
+    /// broken pipe on an established stream): `Alive → Suspect`. The
+    /// heartbeat timeout — or harder evidence — finishes the job.
+    pub fn suspect(&self, node: u16, detail: &str) {
+        if let Some(s) = self.slot(node) {
+            if s
+                .state
+                .compare_exchange(ALIVE, SUSPECT, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                log::warn!(
+                    "node {}: peer node {node} suspect ({detail})",
+                    self.node_id
+                );
+            }
+        }
+    }
+
+    /// Record hard transport evidence: `node` is provably unreachable
+    /// (exhausted ARQ retries, exhausted connect retries). Transitions
+    /// straight to `Dead`; returns `true` when *this* call performed the
+    /// transition (the caller should fence), `false` when the peer was
+    /// already dead or is untracked.
+    pub fn peer_dead(&self, node: u16, detail: &str) -> bool {
+        let Some(s) = self.slot(node) else { return false };
+        loop {
+            let cur = s.state.load(Ordering::Relaxed);
+            if cur == DEAD {
+                return false;
+            }
+            if s
+                .state
+                .compare_exchange(cur, DEAD, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        let epoch = self.epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        s.died_epoch.store(epoch, Ordering::Relaxed);
+        log::warn!(
+            "node {}: peer node {node} DEAD at membership epoch {epoch} ({detail})",
+            self.node_id
+        );
+        // Clone the sink out so it runs without holding the lock (it may
+        // fan out into collective/completion state).
+        // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
+        let sink = self.death_sink.lock().unwrap().clone();
+        if let Some(sink) = sink {
+            sink(node, epoch, detail);
+        }
+        true
+    }
+
+    /// Advance timed transitions for the given (shard-owned) peers: silence
+    /// past `suspect_after` suspects, past `dead_after` kills. Returns the
+    /// peers that died *in this call*, which the owning shard must fence.
+    pub fn tick(&self, peers: &[u16], now: u64) -> Vec<u16> {
+        let mut died = Vec::new();
+        for &p in peers {
+            let Some(s) = self.slot(p) else { continue };
+            if s.state.load(Ordering::Relaxed) == DEAD {
+                continue;
+            }
+            let silence = now.saturating_sub(s.last_heard_ms.load(Ordering::Relaxed));
+            if silence >= self.cfg.dead_after.as_millis() as u64 {
+                if self.peer_dead(p, &format!("no traffic for {silence} ms")) {
+                    died.push(p);
+                }
+            } else if silence >= self.cfg.suspect_after.as_millis() as u64 {
+                self.suspect(p, &format!("no traffic for {silence} ms"));
+            }
+        }
+        died
+    }
+
+    /// Peers among `peers` due an outbound heartbeat (dead peers excluded);
+    /// marks them beaten at `now`, so each interval fires once.
+    pub fn due_heartbeats(&self, peers: &[u16], now: u64) -> Vec<u16> {
+        let interval = self.cfg.heartbeat_interval.as_millis() as u64;
+        let mut due = Vec::new();
+        for &p in peers {
+            let Some(s) = self.slot(p) else { continue };
+            if s.state.load(Ordering::Relaxed) == DEAD {
+                continue;
+            }
+            if now.saturating_sub(s.last_beat_ms.load(Ordering::Relaxed)) >= interval {
+                s.last_beat_ms.store(now, Ordering::Relaxed);
+                due.push(p);
+            }
+        }
+        due
+    }
+
+    /// How long (from `now`) until the next heartbeat or timed transition
+    /// among `peers` is due — the bound a shard's timer wait must respect.
+    /// `None` when every listed peer is dead (or none are tracked).
+    pub fn next_deadline(&self, peers: &[u16], now: u64) -> Option<Duration> {
+        let interval = self.cfg.heartbeat_interval.as_millis() as u64;
+        let suspect = self.cfg.suspect_after.as_millis() as u64;
+        let dead = self.cfg.dead_after.as_millis() as u64;
+        let mut next: Option<u64> = None;
+        let mut fold = |due: u64| {
+            let wait = due.saturating_sub(now);
+            next = Some(next.map_or(wait, |n| n.min(wait)));
+        };
+        for &p in peers {
+            let Some(s) = self.slot(p) else { continue };
+            if s.state.load(Ordering::Relaxed) == DEAD {
+                continue;
+            }
+            fold(s.last_beat_ms.load(Ordering::Relaxed) + interval);
+            let heard = s.last_heard_ms.load(Ordering::Relaxed);
+            let silence = now.saturating_sub(heard);
+            fold(heard + if silence >= suspect { dead } else { suspect });
+        }
+        next.map(Duration::from_millis)
+    }
+
+    /// Current cluster membership epoch (0 until the first death).
+    pub fn membership_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// The membership epoch stamped when `node` died (0 if it has not).
+    pub fn died_epoch(&self, node: u16) -> u64 {
+        self.slot(node).map_or(0, |s| s.died_epoch.load(Ordering::Relaxed))
+    }
+
+    /// Record `n` handles/frames fenced into failure sinks for dead peers.
+    pub fn note_fenced(&self, n: u64) {
+        self.fenced.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn fenced(&self) -> u64 {
+        self.fenced.load(Ordering::Relaxed)
+    }
+
+    pub fn suspect_count(&self) -> u64 {
+        self.count(SUSPECT)
+    }
+
+    pub fn dead_count(&self) -> u64 {
+        self.count(DEAD)
+    }
+
+    fn count(&self, state: u8) -> u64 {
+        self.slots
+            .iter()
+            .filter(|s| s.tracked && s.state.load(Ordering::Relaxed) == state)
+            .count() as u64
+    }
+}
+
+/// The canonical failure-sink reason for frames fenced on behalf of a dead
+/// peer. [`parse_dead_peer`] is its inverse: the runtime's sink recognizes
+/// the prefix and fails the owning handle with the *structured*
+/// [`Error::PeerDead`](crate::error::Error::PeerDead) instead of a string.
+pub fn dead_peer_reason(node: u16, detail: &str) -> String {
+    format!("peer node {node} is dead: {detail}")
+}
+
+/// Recover `(dead node id, detail)` from a [`dead_peer_reason`]-formatted
+/// string. `None` for any other failure reason.
+pub fn parse_dead_peer(reason: &str) -> Option<(u16, &str)> {
+    let rest = reason.strip_prefix("peer node ")?;
+    let (id, rest) = rest.split_once(' ')?;
+    let detail = rest.strip_prefix("is dead: ")?;
+    Some((id.parse().ok()?, detail))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn cfg(interval: u64, suspect: u64, dead: u64) -> HealthConfig {
+        HealthConfig {
+            heartbeat_interval: Duration::from_millis(interval),
+            suspect_after: Duration::from_millis(suspect),
+            dead_after: Duration::from_millis(dead),
+        }
+    }
+
+    #[test]
+    fn silence_walks_alive_suspect_dead() {
+        let h = PeerHealth::new(0, &[1, 2], cfg(10, 50, 200));
+        assert_eq!(h.state(1), PeerState::Alive);
+        assert!(h.tick(&[1, 2], 49).is_empty());
+        assert_eq!(h.state(1), PeerState::Alive);
+        assert!(h.tick(&[1, 2], 50).is_empty());
+        assert_eq!(h.state(1), PeerState::Suspect);
+        assert_eq!(h.state(2), PeerState::Suspect);
+        let died = h.tick(&[1, 2], 200);
+        assert_eq!(died, vec![1, 2]);
+        assert_eq!(h.state(1), PeerState::Dead);
+        assert!(h.is_dead(2));
+        // Second tick reports nothing new.
+        assert!(h.tick(&[1, 2], 300).is_empty());
+    }
+
+    #[test]
+    fn ingress_revives_suspect_but_dead_is_sticky() {
+        let h = PeerHealth::new(0, &[1], cfg(10, 50, 200));
+        h.tick(&[1], 60);
+        assert_eq!(h.state(1), PeerState::Suspect);
+        h.touch(1, 61);
+        assert_eq!(h.state(1), PeerState::Alive);
+        // Fresh liveness resets the silence clock: no flapping back.
+        assert!(h.tick(&[1], 100).is_empty());
+        assert_eq!(h.state(1), PeerState::Alive);
+        // Silence from the revival point kills it eventually.
+        assert_eq!(h.tick(&[1], 261), vec![1]);
+        h.touch(1, 262);
+        assert!(h.is_dead(1), "dead must be sticky against zombie traffic");
+    }
+
+    #[test]
+    fn hard_evidence_kills_immediately_and_once() {
+        let h = PeerHealth::new(0, &[1, 3], cfg(10, 50, 200));
+        assert_eq!(h.membership_epoch(), 0);
+        assert!(h.peer_dead(1, "retries exhausted"));
+        assert!(!h.peer_dead(1, "again"), "second report is a no-op");
+        assert_eq!(h.membership_epoch(), 1);
+        assert_eq!(h.died_epoch(1), 1);
+        assert!(h.peer_dead(3, "connect refused"));
+        assert_eq!(h.membership_epoch(), 2);
+        assert_eq!(h.died_epoch(3), 2, "epochs are monotone per death");
+        assert_eq!(h.dead_count(), 2);
+    }
+
+    #[test]
+    fn untracked_nodes_are_permanently_alive() {
+        let h = PeerHealth::new(0, &[2], cfg(10, 50, 200));
+        assert_eq!(h.state(0), PeerState::Alive);
+        assert_eq!(h.state(7), PeerState::Alive);
+        assert!(!h.peer_dead(7, "nope"));
+        assert!(h.tick(&[0, 7], 10_000).is_empty());
+        assert!(!h.is_dead(7));
+    }
+
+    #[test]
+    fn heartbeats_fire_once_per_interval_and_skip_dead() {
+        let h = PeerHealth::new(0, &[1, 2], cfg(100, 300, 900));
+        assert_eq!(h.due_heartbeats(&[1, 2], 100), vec![1, 2]);
+        assert!(h.due_heartbeats(&[1, 2], 150).is_empty());
+        assert_eq!(h.due_heartbeats(&[1, 2], 200), vec![1, 2]);
+        h.peer_dead(2, "gone");
+        assert_eq!(h.due_heartbeats(&[1, 2], 300), vec![1]);
+    }
+
+    #[test]
+    fn next_deadline_bounds_the_timer_wait() {
+        let h = PeerHealth::new(0, &[1], cfg(100, 300, 900));
+        h.due_heartbeats(&[1], 0);
+        h.touch(1, 0);
+        // Next event: heartbeat at t=100.
+        assert_eq!(h.next_deadline(&[1], 40), Some(Duration::from_millis(60)));
+        // Once suspect, the dead boundary governs. A service pass always
+        // emits due heartbeats before computing its wait, so beat first —
+        // otherwise the overdue-heartbeat fold pins the deadline at zero.
+        h.tick(&[1], 300);
+        assert_eq!(h.state(1), PeerState::Suspect);
+        assert_eq!(h.due_heartbeats(&[1], 800), vec![1]);
+        assert_eq!(h.next_deadline(&[1], 800), Some(Duration::from_millis(100)));
+        h.peer_dead(1, "gone");
+        assert_eq!(h.next_deadline(&[1], 800), None, "dead peers need no timer");
+    }
+
+    #[test]
+    fn death_sink_runs_exactly_once_per_peer() {
+        let h = PeerHealth::new(0, &[1], cfg(10, 50, 200));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        let (hits2, seen2) = (Arc::clone(&hits), Arc::clone(&seen));
+        h.set_death_sink(Arc::new(move |node, epoch, detail| {
+            hits2.fetch_add(1, Ordering::SeqCst);
+            seen2.lock().unwrap().push((node, epoch, detail.to_string()));
+        }));
+        assert_eq!(h.tick(&[1], 500), vec![1]);
+        h.peer_dead(1, "late echo");
+        assert_eq!(hits.load(Ordering::SeqCst), 1);
+        let seen = seen.lock().unwrap();
+        assert_eq!(seen[0].0, 1);
+        assert_eq!(seen[0].1, 1);
+        assert!(seen[0].2.contains("no traffic"));
+    }
+
+    #[test]
+    fn heard_from_gates_startup_grace() {
+        let h = PeerHealth::new(0, &[1, 2], cfg(10, 50, 200));
+        // Never touched: no liveness evidence yet, so hard transport
+        // evidence (connect-ladder exhaustion) must not escalate to Dead —
+        // the peer may still be launching.
+        assert!(!h.heard_from(1));
+        h.touch(2, 5);
+        assert!(h.heard_from(2));
+        // Untracked slots never report evidence either way.
+        assert!(!h.heard_from(0));
+        assert!(!h.heard_from(99));
+    }
+
+    #[test]
+    fn fenced_counter_accumulates() {
+        let h = PeerHealth::new(0, &[1], cfg(10, 50, 200));
+        h.note_fenced(3);
+        h.note_fenced(2);
+        assert_eq!(h.fenced(), 5);
+    }
+
+    #[test]
+    fn dead_peer_reason_roundtrips() {
+        let r = dead_peer_reason(42, "udp ARQ retries exhausted");
+        assert_eq!(parse_dead_peer(&r), Some((42, "udp ARQ retries exhausted")));
+        assert_eq!(parse_dead_peer("tcp write to node 3 failed"), None);
+        assert_eq!(parse_dead_peer("peer node x is dead: y"), None);
+        assert_eq!(parse_dead_peer(""), None);
+    }
+}

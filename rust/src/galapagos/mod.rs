@@ -17,6 +17,7 @@
 //! - [`node`] — node lifecycle: builds the router, binds transports, hands
 //!   out kernel interfaces.
 
+pub mod health;
 pub mod interface;
 pub mod node;
 pub mod packet;

@@ -17,6 +17,7 @@ use std::collections::HashMap;
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
 
+use super::health::PeerHealth;
 use super::interface::GalapagosInterface;
 use super::packet::Packet;
 use super::router::{
@@ -45,6 +46,9 @@ pub struct BoundNode {
     /// Installed by the runtime before `start`: fails the completion handle
     /// of every message the transport had to give up on.
     failure_sink: Option<SendFailureSink>,
+    /// Peer failure detector, present when `heartbeat_interval > 0` and the
+    /// transport has a heartbeat path (TCP, or UDP with the ARQ layer on).
+    health: Option<Arc<PeerHealth>>,
     /// The address peers should use to reach this node.
     pub advertised_addr: Option<String>,
 }
@@ -64,7 +68,30 @@ impl BoundNode {
         let (shard_txs, shard_rxs): (Vec<_>, Vec<_>) =
             (0..shards).map(|_| mpsc::channel()).unzip();
         let table = Arc::new(RoutingTable::new(spec.kernels.iter().map(|k| (k.id, k.node))));
-        let handle = RouterHandle::new(node_id, Arc::clone(&table), shard_txs.clone());
+        // Failure detection needs a heartbeat path: TCP heartbeats ride the
+        // normal framing, UDP heartbeats are standalone ARQ ACKs (so the ARQ
+        // layer must be on). Local fabric and raw UDP get no detector — with
+        // `heartbeat_interval = 0` this is None and behavior is unchanged.
+        let health = spec
+            .health_config()
+            .filter(|_| match spec.transport {
+                TransportKind::Tcp => true,
+                TransportKind::Udp => spec.udp_window > 0,
+                TransportKind::Local => false,
+            })
+            .map(|cfg| {
+                let peers: Vec<u16> = spec
+                    .nodes
+                    .iter()
+                    .map(|n| n.id)
+                    .filter(|&id| id != node_id)
+                    .collect();
+                PeerHealth::new(node_id, &peers, cfg)
+            });
+        let mut handle = RouterHandle::new(node_id, Arc::clone(&table), shard_txs.clone());
+        if let Some(h) = &health {
+            handle = handle.with_health(Arc::clone(h));
+        }
         let mut tcp_ingress = None;
         let mut udp_socket = None;
         let mut advertised = None;
@@ -110,6 +137,7 @@ impl BoundNode {
             udp_socket,
             udp_hw_core,
             failure_sink: None,
+            health,
             advertised_addr: advertised,
         })
     }
@@ -118,6 +146,13 @@ impl BoundNode {
     /// closure that fails the owning completion handles) before `start`.
     pub fn set_failure_sink(&mut self, sink: SendFailureSink) {
         self.failure_sink = Some(sink);
+    }
+
+    /// The node's failure detector, if heartbeats are configured and the
+    /// transport supports them. The runtime installs its death sink here
+    /// (aborting collectives, bumping the membership epoch) before `start`.
+    pub fn health(&self) -> Option<Arc<PeerHealth>> {
+        self.health.clone()
     }
 
     /// Launch the routers with a default delivery map: a fresh channel per
@@ -184,7 +219,7 @@ impl BoundNode {
             match (&self.spec.transport, &self.udp_socket) {
                 (TransportKind::Udp, Some(sock)) if self.spec.udp_window > 0 => (0..shards)
                     .map(|shard| {
-                        Ok(Arc::new(ArqEndpoint::new(
+                        let mut ep = ArqEndpoint::new(
                             ArqConfig {
                                 node_id: self.node_id,
                                 window: self.spec.udp_window,
@@ -196,7 +231,11 @@ impl BoundNode {
                             sock.try_clone()?,
                             owned_peers(shard),
                             self.failure_sink.clone(),
-                        )))
+                        );
+                        if let Some(h) = &self.health {
+                            ep = ep.with_health(Arc::clone(h));
+                        }
+                        Ok(Arc::new(ep))
                     })
                     .collect::<Result<_>>()?,
                 _ => Vec::new(),
@@ -230,6 +269,9 @@ impl BoundNode {
                     );
                     if let Some(sink) = &self.failure_sink {
                         e = e.with_failure_sink(sink.clone());
+                    }
+                    if let Some(h) = &self.health {
+                        e = e.with_health(Arc::clone(h));
                     }
                     Box::new(e)
                 }
@@ -320,6 +362,7 @@ impl BoundNode {
             handle: self.handle,
             tcp_ingress: self.tcp_ingress,
             udp_ingress,
+            health: self.health,
         })
     }
 }
@@ -332,6 +375,7 @@ pub struct GalapagosNode {
     handle: RouterHandle,
     tcp_ingress: Option<TcpIngress>,
     udp_ingress: Option<UdpIngress>,
+    health: Option<Arc<PeerHealth>>,
 }
 
 impl GalapagosNode {
@@ -347,13 +391,27 @@ impl GalapagosNode {
     }
 
     /// Router statistics summed across shards (delivered/forwarded/dropped
-    /// counts) — a snapshot, consumers keep reading one set of numbers.
+    /// counts) — a snapshot, consumers keep reading one set of numbers. The
+    /// failure-detector gauges (suspect/dead peers, fenced handles) are
+    /// sampled from `PeerHealth` at collection time; per-shard stats never
+    /// carry them, so the absorb loop sums zeros there.
     pub fn stats(&self) -> RouterStats {
+        use std::sync::atomic::Ordering;
         let sum = RouterStats::default();
         for r in &self.routers {
             sum.absorb(&r.stats);
         }
+        if let Some(h) = &self.health {
+            sum.peers_suspect.store(h.suspect_count(), Ordering::Relaxed);
+            sum.peers_dead.store(h.dead_count(), Ordering::Relaxed);
+            sum.fenced_handles.store(h.fenced(), Ordering::Relaxed);
+        }
         sum
+    }
+
+    /// The node's failure detector, if one is running.
+    pub fn health(&self) -> Option<Arc<PeerHealth>> {
+        self.health.clone()
     }
 
     /// Per-shard counters, indexed by shard.

@@ -35,6 +35,7 @@ use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::health::PeerHealth;
 use super::packet::Packet;
 use super::transport::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
@@ -66,6 +67,14 @@ pub struct RouterStats {
     /// the doomed batch is failed through the egress's own failure sink —
     /// this counter is how tests and operators see that the path fired.
     pub flush_failures: AtomicU64,
+    /// Peers currently Suspect per the failure detector (snapshot, not a
+    /// cumulative count; populated at stats-collection time from
+    /// `PeerHealth`).
+    pub peers_suspect: AtomicU64,
+    /// Peers declared Dead by the failure detector (snapshot).
+    pub peers_dead: AtomicU64,
+    /// Frames/handles fenced into failure sinks on behalf of dead peers.
+    pub fenced_handles: AtomicU64,
 }
 
 impl RouterStats {
@@ -82,6 +91,11 @@ impl RouterStats {
             .fetch_add(other.idle_flushes.load(Ordering::Relaxed), Ordering::Relaxed);
         self.flush_failures
             .fetch_add(other.flush_failures.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.peers_suspect
+            .fetch_add(other.peers_suspect.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.peers_dead.fetch_add(other.peers_dead.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.fenced_handles
+            .fetch_add(other.fenced_handles.load(Ordering::Relaxed), Ordering::Relaxed);
     }
 }
 
@@ -168,6 +182,10 @@ pub struct RouterHandle {
     node_id: u16,
     table: Arc<RoutingTable>,
     shards: Arc<[Sender<RouterMsg>]>,
+    /// Failure detector, when heartbeats are enabled: sends to a dead peer
+    /// fail at issue ([`Error::PeerDead`]) and network arrivals count as
+    /// liveness. `None` (heartbeats off) keeps both paths bitwise as before.
+    health: Option<Arc<PeerHealth>>,
 }
 
 impl RouterHandle {
@@ -175,13 +193,34 @@ impl RouterHandle {
     /// `table`.
     pub fn new(node_id: u16, table: Arc<RoutingTable>, shards: Vec<Sender<RouterMsg>>) -> Self {
         assert!(!shards.is_empty(), "a router needs at least one shard");
-        Self { node_id, table, shards: shards.into() }
+        Self { node_id, table, shards: shards.into(), health: None }
     }
 
     /// Handle over a single raw queue (no sharding, no table consulted) —
     /// the hardware GAScore egress adapter and unit tests.
     pub fn single(tx: Sender<RouterMsg>) -> Self {
-        Self { node_id: 0, table: Arc::new(RoutingTable::default()), shards: vec![tx].into() }
+        Self {
+            node_id: 0,
+            table: Arc::new(RoutingTable::default()),
+            shards: vec![tx].into(),
+            health: None,
+        }
+    }
+
+    /// Attach the failure detector (heartbeats enabled).
+    pub fn with_health(mut self, health: Arc<PeerHealth>) -> Self {
+        self.health = Some(health);
+        self
+    }
+
+    /// Record a received transport-level heartbeat from `node` as liveness
+    /// evidence. Heartbeat frames never become packets, so the ingress
+    /// decoders report them here instead of through `from_network`.
+    // shoal-lint: hotpath
+    pub fn note_peer_heartbeat(&self, node: u16) {
+        if let Some(h) = &self.health {
+            h.touch(node, h.now_ms());
+        }
     }
 
     pub fn shard_count(&self) -> usize {
@@ -195,6 +234,21 @@ impl RouterHandle {
     /// the failure sink — identical to the unsharded behavior.
     // shoal-lint: hotpath
     pub fn from_kernel(&self, pkt: Packet) -> Result<()> {
+        // Fail-at-issue fencing: a send routed to a dead peer errors here,
+        // naming the peer, instead of queuing work the transport can only
+        // fail later (or hang on). One atomic load per send when heartbeats
+        // are on; nothing at all when they are off.
+        if let Some(h) = &self.health {
+            if let Ok(node) = self.table.node_of(pkt.dest) {
+                if node != self.node_id && h.is_dead(node) {
+                    h.note_fenced(1);
+                    return Err(Error::PeerDead {
+                        node,
+                        detail: "send rejected at issue (peer fenced)".into(),
+                    });
+                }
+            }
+        }
         let shard = match self.shards.len() {
             1 => 0,
             n => match self.table.node_of(pkt.dest) {
@@ -221,6 +275,13 @@ impl RouterHandle {
     /// fabric's stale-cache recovery) don't lose it.
     // shoal-lint: hotpath
     pub fn try_from_network(&self, pkt: Packet) -> std::result::Result<(), Packet> {
+        // Any received packet is liveness evidence for the sending node
+        // (revives a Suspect; atomic stores only).
+        if let Some(h) = &self.health {
+            if let Ok(node) = self.table.node_of(pkt.src) {
+                h.touch(node, h.now_ms());
+            }
+        }
         let shard = match self.shards.len() {
             1 => 0,
             n => match self.table.node_of(pkt.src) {
@@ -877,6 +938,39 @@ mod tests {
         };
         assert_eq!(run(true), 0, "external timers must suppress router-side service");
         assert!(run(false) >= 1, "internal timers must keep servicing on idle");
+    }
+
+    #[test]
+    fn dead_peer_sends_fail_at_issue_but_ingress_still_flows() {
+        use crate::galapagos::health::{HealthConfig, PeerHealth};
+        let health = PeerHealth::new(
+            0,
+            &[1],
+            HealthConfig {
+                heartbeat_interval: Duration::from_millis(10),
+                suspect_after: Duration::from_millis(50),
+                dead_after: Duration::from_millis(200),
+            },
+        );
+        let (tx, rx) = mpsc::channel();
+        let h = RouterHandle::new(0, table2(), vec![tx]).with_health(Arc::clone(&health));
+        // Alive: the send enqueues normally.
+        h.from_kernel(Packet::new(2, 0, vec![1]).unwrap()).unwrap();
+        assert!(matches!(rx.try_recv(), Ok(RouterMsg::FromKernel(_))));
+        // Dead: fenced at issue, naming the peer; nothing reaches the shard.
+        health.peer_dead(1, "retries exhausted");
+        match h.from_kernel(Packet::new(2, 0, vec![2]).unwrap()) {
+            Err(Error::PeerDead { node: 1, .. }) => {}
+            r => panic!("expected PeerDead fence, got {r:?}"),
+        }
+        assert!(rx.try_recv().is_err());
+        assert_eq!(health.fenced(), 1);
+        // Local delivery (kernel 0 is on node 0) is never fenced.
+        h.from_kernel(Packet::new(0, 0, vec![3]).unwrap()).unwrap();
+        // Ingress from the (zombie) peer still routes — fencing is a
+        // send-side gate, and touch must not resurrect a dead peer.
+        h.from_network(Packet::new(0, 2, vec![4]).unwrap()).unwrap();
+        assert!(health.is_dead(1));
     }
 
     #[test]

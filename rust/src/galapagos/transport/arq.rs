@@ -33,12 +33,13 @@
 
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::net::UdpSocket;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use super::batch::BufPool;
 use super::SendFailureSink;
 use crate::error::{Error, Result};
+use crate::galapagos::health::{dead_peer_reason, PeerHealth};
 use crate::galapagos::packet::Packet;
 
 /// First byte of every ARQ datagram (raw wire packets start with a kernel
@@ -224,6 +225,21 @@ impl ArqCore {
     /// Whether the window toward `peer` has room for another datagram.
     pub fn can_send(&self, peer: u16) -> bool {
         self.inflight(peer) < self.cfg.window
+    }
+
+    /// Dead-peer fence: abandon every in-flight datagram toward `peer`
+    /// (and any pending abandon-notify — there is nobody left to notify),
+    /// returning their payloads so the caller can fail each frame's owning
+    /// handle. The freed window slots unblock any backpressured sender.
+    pub fn take_inflight(&mut self, peer: u16) -> Vec<Vec<u8>> {
+        let Some(p) = self.peers.get_mut(&peer) else { return Vec::new() };
+        p.tx.notify = None;
+        let mut out = Vec::new();
+        while let Some(f) = p.tx.inflight.pop_front() {
+            out.push(f.dgram[ARQ_HEADER_BYTES..].to_vec());
+            self.pool.release(f.dgram);
+        }
+        out
     }
 
     /// Stage `payload` (a coalesced frame batch) toward `peer` and hand the
@@ -661,6 +677,13 @@ pub struct ArqEndpoint {
     /// Peer addresses, resolved once at construction — the emit path runs
     /// under the state lock and must not re-parse strings per datagram.
     peers: HashMap<u16, std::net::SocketAddr>,
+    /// Failure detector (heartbeats enabled): `service` drives heartbeat
+    /// ACKs and timed transitions for `owned`, retry exhaustion becomes
+    /// hard death evidence, and a dead peer's window is fenced. `None`
+    /// keeps the endpoint bitwise as before.
+    health: Option<Arc<PeerHealth>>,
+    /// The peer ids this endpoint heartbeats/ticks (its address map keys).
+    owned: Vec<u16>,
 }
 
 struct EndpointState {
@@ -689,7 +712,7 @@ impl ArqEndpoint {
             log::info!("arq: node {} injecting {:.1}% datagram loss", cfg.node_id, l.rate * 100.0);
         }
         use std::net::ToSocketAddrs;
-        let peers = peers
+        let peers: HashMap<u16, std::net::SocketAddr> = peers
             .into_iter()
             .filter_map(|(id, a)| match a.to_socket_addrs().ok().and_then(|mut i| i.next()) {
                 Some(sa) => Some((id, sa)),
@@ -699,12 +722,23 @@ impl ArqEndpoint {
                 }
             })
             .collect();
+        let mut owned: Vec<u16> = peers.keys().copied().collect();
+        owned.sort_unstable();
         ArqEndpoint {
             state: Mutex::new(EndpointState { core: ArqCore::new(cfg), loss, sink }),
             cv: Condvar::new(),
             socket,
             peers,
+            health: None,
+            owned,
         }
+    }
+
+    /// Attach the failure detector (heartbeats enabled for this endpoint's
+    /// peers).
+    pub fn with_health(mut self, health: Arc<PeerHealth>) -> ArqEndpoint {
+        self.health = Some(health);
+        self
     }
 
     /// Bytes of per-datagram overhead this endpoint imposes.
@@ -735,30 +769,115 @@ impl ArqEndpoint {
         self.emit_bytes(&mut st.loss, e.peer, &e.dgram);
     }
 
-    /// Fail every frame of a lost datagram payload through the sink.
+    /// Fail every frame of a lost datagram payload through the sink. When
+    /// the failure detector has declared the peer dead, the reason carries
+    /// the canonical dead-peer format so the runtime sink surfaces the
+    /// structured [`Error::PeerDead`]; otherwise (an isolated loss to a
+    /// live peer) the classic retries-exhausted reason is preserved.
     fn report_failures(&self, st: &mut EndpointState, failures: Vec<(u16, Vec<u8>)>) {
         if failures.is_empty() {
             return;
         }
         let Some(sink) = st.sink.clone() else { return };
         for (peer, payload) in failures {
-            let reason = format!("udp ARQ retries exhausted toward node {peer}");
-            for_each_frame(&payload, |pkt| sink(&pkt, &reason));
+            let dead = self.health.as_ref().is_some_and(|h| h.is_dead(peer));
+            let reason = if dead {
+                dead_peer_reason(peer, "udp ARQ retries exhausted")
+            } else {
+                format!("udp ARQ retries exhausted toward node {peer}")
+            };
+            let mut frames = 0u64;
+            for_each_frame(&payload, |pkt| {
+                frames += 1;
+                sink(&pkt, &reason);
+            });
+            if dead {
+                if let Some(h) = &self.health {
+                    h.note_fenced(frames);
+                }
+            }
         }
+    }
+
+    /// Dead-peer fence: drain everything still in flight toward `peer`,
+    /// failing each frame's owning handle with the canonical dead-peer
+    /// reason. Freed window slots wake any backpressured sender (the
+    /// caller notifies the condvar).
+    fn fence_peer_locked(&self, st: &mut EndpointState, peer: u16, detail: &str) {
+        let payloads = st.core.take_inflight(peer);
+        if payloads.is_empty() {
+            return;
+        }
+        log::warn!(
+            "arq: fencing {} in-flight datagram(s) toward dead node {peer}",
+            payloads.len()
+        );
+        let reason = dead_peer_reason(peer, detail);
+        let mut frames = 0u64;
+        if let Some(sink) = st.sink.clone() {
+            for payload in &payloads {
+                for_each_frame(payload, |pkt| {
+                    frames += 1;
+                    sink(&pkt, &reason);
+                });
+            }
+        }
+        if let Some(h) = &self.health {
+            h.note_fenced(frames);
+        }
+    }
+
+    /// Timed failure-detector work: advance silence-driven transitions for
+    /// this endpoint's peers, fence the newly dead, and emit due heartbeats
+    /// (standalone ACK datagrams — self-describing liveness the peer's ARQ
+    /// header parser already accepts). Returns true when fencing freed
+    /// window slots.
+    fn health_pass_locked(&self, st: &mut EndpointState) -> bool {
+        let Some(h) = &self.health else { return false };
+        let now = h.now_ms();
+        let dead_ms = h.config().dead_after.as_millis();
+        let mut freed = false;
+        for peer in h.tick(&self.owned, now) {
+            self.fence_peer_locked(st, peer, &format!("no traffic for over {dead_ms} ms"));
+            freed = true;
+        }
+        for peer in h.due_heartbeats(&self.owned, now) {
+            let beat = st.core.make_ack(peer);
+            self.emit(st, beat);
+        }
+        freed
     }
 
     /// Run one timer pass under the lock held in `st`.
     fn service_locked(&self, st: &mut EndpointState, now: Instant) -> Option<Instant> {
         let polled = st.core.poll(now);
-        let had_failures = !polled.failures.is_empty();
+        let mut freed = !polled.failures.is_empty();
         for e in polled.emit {
             self.emit(st, e);
         }
-        self.report_failures(st, polled.failures);
-        if had_failures {
-            self.cv.notify_all(); // failures freed window slots
+        // Retry exhaustion is hard death evidence: the peer is provably
+        // unreachable. Declare it first so the failure reasons below (and
+        // everything fenced after) carry the dead-peer format.
+        if let Some(h) = &self.health {
+            for &(peer, _) in &polled.failures {
+                if h.peer_dead(peer, "udp ARQ retries exhausted") {
+                    self.fence_peer_locked(st, peer, "udp ARQ retries exhausted");
+                }
+            }
         }
-        polled.next
+        self.report_failures(st, polled.failures);
+        freed |= self.health_pass_locked(st);
+        if freed {
+            self.cv.notify_all(); // failures/fences freed window slots
+        }
+        let mut next = polled.next;
+        if let Some(h) = &self.health {
+            if let Some(d) = h.next_deadline(&self.owned, h.now_ms()) {
+                let t = now + d;
+                next = Some(next.map_or(t, |n| n.min(t)));
+            }
+        }
+        next
     }
 
     /// Reliable send of one coalesced frame batch: blocks while the window
@@ -769,6 +888,18 @@ impl ArqEndpoint {
         // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut st = self.state.lock().unwrap();
         loop {
+            // Fail-fast fence: never queue (or block) toward a peer the
+            // failure detector has declared dead — rechecked per wakeup so
+            // a death mid-backpressure unblocks with the right error.
+            if let Some(h) = &self.health {
+                if h.is_dead(peer) {
+                    h.note_fenced(1);
+                    return Err(Error::PeerDead {
+                        node: peer,
+                        detail: "send rejected (peer fenced)".into(),
+                    });
+                }
+            }
             let now = Instant::now();
             // Disjoint borrows: the core stages while the emit closure uses
             // the loss injector + socket — no datagram copy on the hot path.
@@ -795,6 +926,13 @@ impl ArqEndpoint {
     /// Ingress path: feed one received datagram; returns the in-order
     /// payloads (coalesced frame batches) to frame-decode and deliver.
     pub fn on_datagram(&self, dgram: &[u8]) -> Vec<Vec<u8>> {
+        // Any well-formed ARQ datagram — DATA, ACK, or heartbeat — is
+        // liveness evidence for the node its header names.
+        if let Some(h) = &self.health {
+            if dgram.len() >= ARQ_HEADER_BYTES && dgram[0] == ARQ_MAGIC {
+                h.touch(u16::from_le_bytes([dgram[2], dgram[3]]), h.now_ms());
+            }
+        }
         // shoal-lint: allow(unwrap) mutex poisoning means a sibling thread already panicked; propagate
         let mut st = self.state.lock().unwrap();
         let d = st.core.on_datagram(dgram, Instant::now());
@@ -1176,6 +1314,64 @@ mod tests {
         }
         assert!(!ep.has_inflight(), "retry exhaustion must clear the window");
         assert_eq!(*failed.lock().unwrap(), vec![a, b], "both frames must fail");
+    }
+
+    /// With heartbeats on and a silent (dead-ended) peer, the failure
+    /// detector must declare the peer dead within `dead_after`, fence the
+    /// in-flight window through the sink with the canonical dead-peer
+    /// reason, and reject subsequent sends at issue.
+    #[test]
+    fn heartbeats_detect_death_and_fence_the_window() {
+        use crate::galapagos::health::{parse_dead_peer, HealthConfig, PeerHealth};
+        let sa = UdpSocket::bind("127.0.0.1:0").unwrap();
+        // Bound-then-dropped socket: datagrams sent there vanish.
+        let dead_addr = {
+            let s = UdpSocket::bind("127.0.0.1:0").unwrap();
+            s.local_addr().unwrap().to_string()
+        };
+        let reasons = std::sync::Arc::new(Mutex::new(Vec::<String>::new()));
+        let reasons2 = std::sync::Arc::clone(&reasons);
+        let sink: SendFailureSink = std::sync::Arc::new(move |_pkt: &Packet, reason: &str| {
+            reasons2.lock().unwrap().push(reason.to_string());
+        });
+        let mut cfg = cfg(0, 8);
+        // Retries effectively unbounded: only the silence-driven detector
+        // may fail this flow — proving the fence works without hard
+        // evidence from retry exhaustion.
+        cfg.max_retries = u32::MAX;
+        let health = PeerHealth::new(
+            0,
+            &[1],
+            HealthConfig {
+                heartbeat_interval: Duration::from_millis(10),
+                suspect_after: Duration::from_millis(40),
+                dead_after: Duration::from_millis(120),
+            },
+        );
+        let ep = ArqEndpoint::new(cfg, sa, HashMap::from([(1u16, dead_addr)]), Some(sink))
+            .with_health(std::sync::Arc::clone(&health));
+
+        let pkt = Packet::new(1, 2, vec![0x5A; 16]).unwrap();
+        ep.send(1, &pkt.to_wire()).unwrap();
+
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while !health.is_dead(1) && Instant::now() < deadline {
+            let wait = ep.service().unwrap_or(Duration::from_millis(5));
+            std::thread::sleep(wait.min(Duration::from_millis(10)));
+        }
+        assert!(health.is_dead(1), "a silent peer must be declared dead");
+        ep.service(); // one more pass fences anything the death freed
+        assert!(!ep.has_inflight(), "the dead peer's window must be fenced");
+        let got = reasons.lock().unwrap();
+        assert!(!got.is_empty(), "the fenced frame must reach the sink");
+        let (node, _) = parse_dead_peer(&got[0]).expect("dead-peer reason format");
+        assert_eq!(node, 1);
+        drop(got);
+        match ep.send(1, &pkt.to_wire()) {
+            Err(Error::PeerDead { node: 1, .. }) => {}
+            other => panic!("send to a dead peer must fail at issue, got {other:?}"),
+        }
+        assert!(health.fenced() >= 2, "fence + rejected send both count");
     }
 
     #[test]

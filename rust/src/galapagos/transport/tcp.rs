@@ -52,12 +52,43 @@ use super::batch::{BufPool, Coalescer, Staged, DEFAULT_BATCH_MAX_MSGS, LEN_PREFI
 use super::poll::{PollEvent, Poller, Waker};
 use super::{Egress, SendFailureSink};
 use crate::error::{Error, Result};
+use crate::galapagos::health::{dead_peer_reason, PeerHealth, PeerState};
 use crate::galapagos::packet::{Packet, MAX_PACKET_BYTES};
 use crate::galapagos::router::RouterHandle;
 use crate::galapagos::shard_owned::ShardOwned;
 
 /// Bytes of TCP frame header (`u32` length prefix).
 pub const FRAME_HEADER_BYTES: usize = LEN_PREFIX_BYTES;
+
+/// Body of a TCP heartbeat frame: `[magic0, magic1, src_node u16 LE]`.
+/// Rides the ordinary length-prefixed framing, so the ingress decoders
+/// recognize it before packet decode; it never becomes a router packet.
+/// `0xA7` matches the ARQ magic (both mark non-packet transport frames);
+/// no valid `Packet` wire image is this short, so the body cannot collide
+/// with application frames.
+pub const HEARTBEAT_BODY_BYTES: usize = 4;
+const HEARTBEAT_MAGIC: [u8; 2] = [0xA7, 0xB7];
+
+/// Encode a heartbeat frame (length prefix included) naming `node` as the
+/// sender.
+pub fn heartbeat_frame(node: u16) -> [u8; FRAME_HEADER_BYTES + HEARTBEAT_BODY_BYTES] {
+    let mut f = [0u8; FRAME_HEADER_BYTES + HEARTBEAT_BODY_BYTES];
+    f[..FRAME_HEADER_BYTES].copy_from_slice(&(HEARTBEAT_BODY_BYTES as u32).to_le_bytes());
+    f[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + 2].copy_from_slice(&HEARTBEAT_MAGIC);
+    f[FRAME_HEADER_BYTES + 2..].copy_from_slice(&node.to_le_bytes());
+    f
+}
+
+/// Recover the sending node id from a heartbeat frame *body*; `None` for
+/// any other frame body.
+// shoal-lint: hotpath
+pub fn parse_heartbeat(body: &[u8]) -> Option<u16> {
+    if body.len() == HEARTBEAT_BODY_BYTES && body[..2] == HEARTBEAT_MAGIC {
+        Some(u16::from_le_bytes([body[2], body[3]]))
+    } else {
+        None
+    }
+}
 
 /// Outbound half: per-peer cached connections with staged, coalesced
 /// frames.
@@ -75,6 +106,13 @@ pub struct TcpEgress {
     /// Where frames a failed flush had staged are reported, so their
     /// owning completion handles fail instead of hanging.
     failure_sink: Option<SendFailureSink>,
+    /// Failure detector (heartbeats enabled): `service` emits heartbeat
+    /// frames and fences dead peers' staged batches; connect/write failures
+    /// feed evidence back. `None` keeps the egress bitwise as before.
+    health: Option<Arc<PeerHealth>>,
+    /// This egress's peer ids, sorted — the subset of the cluster its
+    /// owning shard heartbeats and ticks.
+    owned: Vec<u16>,
 }
 
 impl TcpEgress {
@@ -92,6 +130,8 @@ impl TcpEgress {
         batch_bytes: usize,
         batch_max_msgs: usize,
     ) -> Self {
+        let mut owned: Vec<u16> = peers.keys().copied().collect();
+        owned.sort_unstable();
         Self {
             peers,
             conns: ShardOwned::new("tcp-egress.conns", HashMap::new()),
@@ -100,6 +140,8 @@ impl TcpEgress {
             batch_max_msgs,
             pool: BufPool::default(),
             failure_sink: None,
+            health: None,
+            owned,
         }
     }
 
@@ -107,6 +149,13 @@ impl TcpEgress {
     /// egress had to give up on.
     pub fn with_failure_sink(mut self, sink: SendFailureSink) -> Self {
         self.failure_sink = Some(sink);
+        self
+    }
+
+    /// Attach the failure detector (heartbeats enabled for this egress's
+    /// peers).
+    pub fn with_health(mut self, health: Arc<PeerHealth>) -> Self {
+        self.health = Some(health);
         self
     }
 
@@ -134,9 +183,16 @@ impl TcpEgress {
         if !self.conns.contains_key(&node) {
             let addr = self.peers.get(&node).ok_or(Error::UnknownNode(node))?;
             // The destination node's listener may not be up yet during
-            // cluster launch; retry briefly.
+            // cluster launch; retry briefly. A peer the failure detector
+            // already suspects gets ONE attempt — the historical bug
+            // re-ran this full ~1s loop for every batch staged toward an
+            // unreachable peer, stalling the whole shard per flush.
+            let attempts = match self.health.as_ref().map(|h| h.state(node)) {
+                None | Some(PeerState::Alive) => 50,
+                Some(_) => 1,
+            };
             let mut last_err: Option<std::io::Error> = None;
-            for _ in 0..50 {
+            for attempt in 0..attempts {
                 match TcpStream::connect(addr) {
                     Ok(s) => {
                         s.set_nodelay(true)?;
@@ -146,16 +202,57 @@ impl TcpEgress {
                     }
                     Err(e) => {
                         last_err = Some(e);
-                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        if attempt + 1 < attempts {
+                            std::thread::sleep(std::time::Duration::from_millis(20));
+                        }
                     }
                 }
             }
             if let Some(e) = last_err {
+                // Escalation ladder: exhausting the full retry budget
+                // suspects an Alive peer; failing again while Suspect is
+                // hard evidence (connect retries exhausted) — Dead. A peer
+                // we have *never* heard from is exempt from the hard step:
+                // it may still be launching (the driver of a multi-process
+                // cluster starts heartbeating before its peers finish
+                // exec), so only the dead_after silence timer may declare
+                // it.
+                if let Some(h) = &self.health {
+                    match h.state(node) {
+                        PeerState::Alive => h.suspect(node, "tcp connect retries exhausted"),
+                        PeerState::Suspect if h.heard_from(node) => {
+                            h.peer_dead(node, "tcp connect retries exhausted");
+                        }
+                        PeerState::Suspect | PeerState::Dead => {}
+                    }
+                }
                 return Err(Error::Io(e));
             }
         }
         // shoal-lint: allow(unwrap) the connect loop above inserted the entry or returned an error
         Ok(self.conns.get_mut(&node).unwrap())
+    }
+
+    /// Dead-peer fence: drop `node`'s cached connection and fail every
+    /// frame of its staged batch with the canonical dead-peer reason.
+    fn fence_node(&mut self, node: u16, detail: &str) {
+        self.conns.remove(&node);
+        let msgs = match self.stage.get(&node) {
+            Some(c) if !c.is_empty() => c.pending_msgs(),
+            _ => return,
+        };
+        let batch = self
+            .stage
+            .get_mut(&node)
+            // shoal-lint: allow(unwrap) the staged coalescer was verified non-empty above
+            .expect("checked above")
+            .take(&mut self.pool);
+        log::warn!("tcp: fencing {msgs} staged message(s) to dead node {node}");
+        self.fail_batch(&batch, &dead_peer_reason(node, detail));
+        if let Some(h) = &self.health {
+            h.note_fenced(msgs as u64);
+        }
+        self.pool.release(batch);
     }
 
     /// Write `node`'s staged batch (if any) with a single `write_all`.
@@ -167,6 +264,13 @@ impl TcpEgress {
     /// loss is logged with its message count, and the error surfaces to
     /// the caller.
     fn flush_node(&mut self, node: u16) -> Result<()> {
+        // Fenced peer: fail the staged batch immediately — no connect
+        // attempt, no retry loop (the historical bug re-ran the ~1s
+        // connect loop for every batch staged toward a dead peer).
+        if self.health.as_ref().is_some_and(|h| h.is_dead(node)) {
+            self.fence_node(node, "tcp egress fenced");
+            return Err(Error::PeerDead { node, detail: "tcp egress fenced".into() });
+        }
         let msgs = match self.stage.get(&node) {
             Some(c) if !c.is_empty() => c.pending_msgs(),
             _ => return Ok(()),
@@ -181,15 +285,34 @@ impl TcpEgress {
             Ok(stream) => stream.write_all(&batch),
             Err(e) => {
                 log::warn!("tcp: dropped {msgs} staged message(s) to unreachable node {node}");
-                self.fail_batch(&batch, &format!("tcp connect to node {node} failed: {e}"));
+                // conn() may just have escalated the peer to Dead; the
+                // dead-peer reason lets the runtime sink surface the
+                // structured error and counts the fence.
+                if self.health.as_ref().is_some_and(|h| h.is_dead(node)) {
+                    self.fail_batch(&batch, &dead_peer_reason(node, "tcp connect retries exhausted"));
+                    if let Some(h) = &self.health {
+                        h.note_fenced(msgs as u64);
+                    }
+                } else {
+                    self.fail_batch(&batch, &format!("tcp connect to node {node} failed: {e}"));
+                }
                 self.pool.release(batch);
                 return Err(e);
             }
         };
         if let Err(e) = written {
             // Connection died mid-write; drop it so the next send
-            // reconnects.
+            // reconnects. A reset/broken pipe on an established stream is
+            // soft death evidence — the heartbeat timeout confirms it.
             self.conns.remove(&node);
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+            ) {
+                if let Some(h) = &self.health {
+                    h.suspect(node, "tcp stream reset mid-write");
+                }
+            }
             log::warn!("tcp: dropped a batch of {msgs} staged message(s) to node {node}: {e}");
             self.fail_batch(&batch, &format!("tcp write to node {node} failed: {e}"));
             self.pool.release(batch);
@@ -206,6 +329,18 @@ impl Egress for TcpEgress {
         // that can never connect would otherwise sit in the batch forever.
         if !self.peers.contains_key(&dest_node) {
             return Err(Error::UnknownNode(dest_node));
+        }
+        // Fenced peer: fail at stage time instead of parking frames a dead
+        // peer can never drain (covers packets that reach the egress
+        // without passing the router-handle gate).
+        if let Some(h) = &self.health {
+            if h.is_dead(dest_node) {
+                h.note_fenced(1);
+                return Err(Error::PeerDead {
+                    node: dest_node,
+                    detail: "send rejected (peer fenced)".into(),
+                });
+            }
         }
         let (bb, bm) = (self.batch_bytes, self.batch_max_msgs);
         let staged = self
@@ -258,6 +393,40 @@ impl Egress for TcpEgress {
 
     fn has_staged(&self) -> bool {
         self.stage.values().any(|c| !c.is_empty())
+    }
+
+    /// Failure-detector timers (heartbeats on): advance silence-driven
+    /// transitions for this shard's peers, fence the newly dead, and write
+    /// due heartbeat frames. The router calls this on idle and bounds its
+    /// blocking receive by the returned deadline. With heartbeats off this
+    /// is the default no-op — TCP itself needs no timers.
+    fn service(&mut self) -> Option<Duration> {
+        let h = Arc::clone(self.health.as_ref()?);
+        let now = h.now_ms();
+        let owned = self.owned.clone();
+        let dead_ms = h.config().dead_after.as_millis();
+        for peer in h.tick(&owned, now) {
+            self.fence_node(peer, &format!("no traffic for over {dead_ms} ms"));
+        }
+        for peer in h.due_heartbeats(&owned, now) {
+            let frame = heartbeat_frame(h.node_id());
+            // Best-effort: conn() applies its own evidence ladder on
+            // connect failure; a write failure drops the cached stream so
+            // the next attempt reconnects.
+            if let Ok(stream) = self.conn(peer) {
+                if let Err(e) = stream.write_all(&frame) {
+                    log::debug!("tcp: heartbeat to node {peer} failed: {e}");
+                    self.conns.remove(&peer);
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                    ) {
+                        h.suspect(peer, "tcp stream reset on heartbeat");
+                    }
+                }
+            }
+        }
+        h.next_deadline(&self.owned, h.now_ms())
     }
 }
 
@@ -360,6 +529,19 @@ impl FrameAssembler {
     /// skipped, matching the blocking decoder.
     // shoal-lint: hotpath
     pub fn push(&mut self, bytes: &[u8], deliver: &mut dyn FnMut(Packet) -> bool) -> bool {
+        self.push_with_heartbeats(bytes, deliver, &mut |_| {})
+    }
+
+    /// [`push`](FrameAssembler::push) with heartbeat interception:
+    /// `on_heartbeat` is invoked (with the sending node id) for each
+    /// heartbeat frame, which is consumed instead of packet-decoded.
+    // shoal-lint: hotpath
+    pub fn push_with_heartbeats(
+        &mut self,
+        bytes: &[u8],
+        deliver: &mut dyn FnMut(Packet) -> bool,
+        on_heartbeat: &mut dyn FnMut(u16),
+    ) -> bool {
         self.buf.extend_from_slice(bytes);
         loop {
             let avail = self.buf.len() - self.start;
@@ -379,13 +561,17 @@ impl FrameAssembler {
             }
             let body = self.start + FRAME_HEADER_BYTES;
             let frame = &self.buf[body..body + len];
-            match Packet::from_wire(frame) {
-                Ok(pkt) => {
-                    if !deliver(pkt) {
-                        return false;
+            if let Some(node) = parse_heartbeat(frame) {
+                on_heartbeat(node);
+            } else {
+                match Packet::from_wire(frame) {
+                    Ok(pkt) => {
+                        if !deliver(pkt) {
+                            return false;
+                        }
                     }
+                    Err(e) => log::warn!("tcp: malformed packet dropped: {e}"),
                 }
-                Err(e) => log::warn!("tcp: malformed packet dropped: {e}"),
             }
             self.start += FRAME_HEADER_BYTES + len;
         }
@@ -804,9 +990,11 @@ impl PolledShard {
                                         break;
                                     }
                                     Ok(n) => {
-                                        let ok = asm.push(&scratch[..n], &mut |p| {
-                                            router.from_network(p).is_ok()
-                                        });
+                                        let ok = asm.push_with_heartbeats(
+                                            &scratch[..n],
+                                            &mut |p| router.from_network(p).is_ok(),
+                                            &mut |node| router.note_peer_heartbeat(node),
+                                        );
                                         if !ok {
                                             close = true;
                                             break;
@@ -922,6 +1110,10 @@ fn read_frames(mut stream: TcpStream, router: RouterHandle, shutdown: Arc<Atomic
                 }
                 Err(_) => break 'outer,
             }
+        }
+        if let Some(node) = parse_heartbeat(&buf) {
+            router.note_peer_heartbeat(node);
+            continue;
         }
         match Packet::from_wire(&buf) {
             Ok(pkt) => {
@@ -1305,6 +1497,119 @@ mod tests {
                 other => panic!("unexpected {other:?}"),
             }
         }
+    }
+
+    // ---- failure detection (heartbeats + dead-peer fencing) ----
+
+    fn health_cfg(interval: u64, suspect: u64, dead: u64) -> crate::galapagos::health::HealthConfig {
+        crate::galapagos::health::HealthConfig {
+            heartbeat_interval: std::time::Duration::from_millis(interval),
+            suspect_after: std::time::Duration::from_millis(suspect),
+            dead_after: std::time::Duration::from_millis(dead),
+        }
+    }
+
+    /// Heartbeat frames are consumed by the assembler (they never decode
+    /// into packets) and surface the sending node id.
+    #[test]
+    fn heartbeat_frames_are_intercepted_not_delivered() {
+        let beat = heartbeat_frame(7);
+        assert_eq!(parse_heartbeat(&beat[FRAME_HEADER_BYTES..]), Some(7));
+        assert_eq!(parse_heartbeat(&[1, 2, 3]), None);
+        let good = Packet::new(1, 2, vec![5]).unwrap();
+        let mut bytes = beat.to_vec();
+        bytes.extend_from_slice(&frame_bytes(std::slice::from_ref(&good)));
+        bytes.extend_from_slice(&heartbeat_frame(9));
+        let (mut beats, mut got) = (Vec::new(), Vec::new());
+        let mut asm = FrameAssembler::new();
+        assert!(asm.push_with_heartbeats(
+            &bytes,
+            &mut |p| {
+                got.push(p);
+                true
+            },
+            &mut |n| beats.push(n),
+        ));
+        assert_eq!(beats, vec![7, 9]);
+        assert_eq!(got, vec![good]);
+        assert_eq!(asm.pending_bytes(), 0);
+    }
+
+    /// Regression (the PR's satellite bugfix): a batch staged toward a peer
+    /// later declared dead must fail immediately with the peer named — the
+    /// historical path re-ran the full ~1s connect retry loop per batch.
+    #[test]
+    fn fenced_peer_flushes_fail_fast_without_connect_retries() {
+        use crate::galapagos::health::{parse_dead_peer, PeerHealth};
+        // Bound-then-dropped listener: connects would be refused (slowly).
+        let dead_addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let health = PeerHealth::new(0, &[1], health_cfg(50, 150, 600));
+        let reasons = std::sync::Arc::new(std::sync::Mutex::new(Vec::<String>::new()));
+        let reasons2 = std::sync::Arc::clone(&reasons);
+        let sink: SendFailureSink = std::sync::Arc::new(move |_p: &Packet, r: &str| {
+            reasons2.lock().unwrap().push(r.to_string());
+        });
+        let mut egress = TcpEgress::with_batching(HashMap::from([(1u16, dead_addr)]), 1 << 16, 64)
+            .with_failure_sink(sink)
+            .with_health(std::sync::Arc::clone(&health));
+        // Staged while alive...
+        egress.send(1, Packet::new(0, 9, vec![1; 8]).unwrap()).unwrap();
+        // ...then the peer dies before the flush.
+        health.peer_dead(1, "killed by test");
+        let t0 = std::time::Instant::now();
+        match egress.flush() {
+            Err(Error::PeerDead { node: 1, .. }) => {}
+            other => panic!("fenced flush must name the dead peer, got {other:?}"),
+        }
+        assert!(
+            t0.elapsed() < std::time::Duration::from_millis(500),
+            "fenced flush must not run the connect retry loop"
+        );
+        let got = reasons.lock().unwrap();
+        assert_eq!(got.len(), 1, "the staged frame must reach the sink");
+        assert_eq!(parse_dead_peer(&got[0]).map(|(n, _)| n), Some(1));
+        drop(got);
+        // New sends fail at stage time.
+        match egress.send(1, Packet::new(0, 9, vec![2; 8]).unwrap()) {
+            Err(Error::PeerDead { node: 1, .. }) => {}
+            other => panic!("send to a fenced peer must fail at issue, got {other:?}"),
+        }
+        assert!(health.fenced() >= 2);
+    }
+
+    /// End-to-end over loopback: egress `service()` emits heartbeats that
+    /// the polled ingress converts into liveness on the receiving node's
+    /// detector, so an otherwise-idle peer is never falsely suspected.
+    #[test]
+    fn heartbeats_keep_an_idle_peer_alive() {
+        use crate::galapagos::health::{PeerHealth, PeerState};
+        let health_a = PeerHealth::new(0, &[1], health_cfg(20, 150, 600));
+        let health_b = PeerHealth::new(1, &[0], health_cfg(20, 150, 600));
+        let (tx, _rx) = mpsc::channel();
+        let ingress_b = TcpIngress::bind_polled(
+            "127.0.0.1:0",
+            RouterHandle::single(tx).with_health(Arc::clone(&health_b)),
+            2,
+        )
+        .unwrap();
+        let addr = ingress_b.local_addr().to_string();
+        let mut egress_a = TcpEgress::new(HashMap::from([(1u16, addr)]))
+            .with_health(Arc::clone(&health_a));
+        // No application traffic at all: only heartbeats flow for well past
+        // suspect_after.
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < std::time::Duration::from_millis(300) {
+            egress_a.service();
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        assert!(
+            health_b.tick(&[0], health_b.now_ms()).is_empty(),
+            "heartbeats must count as liveness"
+        );
+        assert_eq!(health_b.state(0), PeerState::Alive);
     }
 
     // ---- teardown race (satellite: detached readers vs. draining router) ----

@@ -17,6 +17,13 @@
 //! ingress side decodes a datagram with a frame loop — one datagram in, N
 //! packets out, in order. With `batch_bytes = 0` every datagram carries
 //! exactly one packet, bitwise identical to the historical path.
+//!
+//! Failure detection (`heartbeat_interval > 0`) rides entirely inside the
+//! [`ArqEndpoint`]: heartbeats are standalone ACK datagrams, any received
+//! ARQ datagram counts as liveness, and a dead peer's window is fenced by
+//! the endpoint's timer service. The **raw** (no-ARQ) datapath has no
+//! reliability timers to piggyback on and therefore no heartbeat support —
+//! the node constructs no detector for it (documented on `ClusterSpec`).
 
 use std::collections::HashMap;
 use std::net::UdpSocket;

@@ -262,7 +262,13 @@ impl ShoalKernel {
             Ok(()) => true,
             Err(e) => {
                 log::warn!("kernel {}: send failed; failing its handle: {e}", self.id);
-                self.completion.fail(h, &format!("send failed: {e}"));
+                // A send fenced at issue (dead peer) keeps its structured
+                // error so `wait` reports `Error::PeerDead`, not a string.
+                if matches!(e, Error::PeerDead { .. }) {
+                    self.completion.fail_error(h, &e);
+                } else {
+                    self.completion.fail(h, &format!("send failed: {e}"));
+                }
                 false
             }
         }

@@ -190,7 +190,16 @@ impl ShoalCluster {
                         // its own timeout.
                         let owner = if m.flags.is_reply() { pkt.dest } else { pkt.src };
                         if let Some(table) = completions.get(&owner) {
-                            table.fail_token(m.token, reason);
+                            // Dead-peer fencing reports through the same
+                            // sink with a structured reason string; decode
+                            // it so the handle fails with `Error::PeerDead`
+                            // naming the peer instead of a generic string.
+                            match crate::galapagos::health::parse_dead_peer(reason) {
+                                Some((node, detail)) => {
+                                    table.fail_token_peer_dead(m.token, node, detail)
+                                }
+                                None => table.fail_token(m.token, reason),
+                            }
                         }
                     }
                     // Async sends and collective fan messages carry no
@@ -210,6 +219,23 @@ impl ShoalCluster {
 
         for mut b in bound {
             b.set_failure_sink(Arc::clone(&sink));
+            // When the node runs a failure detector, a peer's death must
+            // reach the collectives layer: abort every in-flight collective
+            // whose tree includes a kernel on the dead node (the straggler
+            // timeout would eventually fire, but the detector knows *now*),
+            // and poison future begins so they fail at issue. The ledger
+            // inside each CollectiveState records the membership epoch.
+            if let Some(h) = b.health() {
+                let spec_for_deaths = Arc::clone(&spec);
+                let collectives: Vec<Arc<CollectiveState>> =
+                    kstate.values().map(|ks| Arc::clone(&ks.collective)).collect();
+                h.set_death_sink(Arc::new(move |node, epoch, detail| {
+                    let dead_kernels = spec_for_deaths.kernels_on(node);
+                    for c in &collectives {
+                        c.abort_for_dead_kernels(&dead_kernels, node, epoch, detail);
+                    }
+                }));
+            }
             let node_id = b.node_id();
             let platform = spec.node(node_id)?.platform;
             let local_kernels = spec.kernels_on(node_id);
@@ -393,6 +419,15 @@ impl ShoalCluster {
             .iter()
             .find(|n| n.node_id == node_id)
             .map(|n| n.stats())
+    }
+
+    /// A hosted node's failure detector, if heartbeats are configured and
+    /// the transport supports them.
+    pub fn peer_health(
+        &self,
+        node_id: u16,
+    ) -> Option<Arc<crate::galapagos::health::PeerHealth>> {
+        self.nodes.iter().find(|n| n.node_id == node_id).and_then(|n| n.health())
     }
 
     /// Wait for all kernel threads started by `run_kernel`, then tear down

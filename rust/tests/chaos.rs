@@ -1,0 +1,324 @@
+//! Chaos battery: SIGKILL one node of a live three-node cluster and assert
+//! the survivors fail **exactly what the dead node owes** — promptly, with
+//! errors naming the peer — while traffic to the healthy node keeps
+//! flowing and shutdown completes. `cfg(unix)` because the kill is a real
+//! SIGKILL (no shutdown handshake, no FIN: the peer just goes silent).
+
+#![cfg(unix)]
+
+use std::io::{BufRead, BufReader, Write};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use shoal::config::parse::parse_cluster;
+use shoal::prelude::*;
+use shoal::shoal_node::cluster::ShoalCluster;
+
+/// Guard serializing port allocation + binding across parallel tests (same
+/// idiom as `multiprocess.rs`).
+static PORT_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+const HEARTBEAT_MS: u64 = 100;
+const SUSPECT_MS: u64 = 400;
+const DEAD_MS: u64 = 1500;
+/// The issue's bound: a survivor must observe the death within three
+/// `dead_after` windows of the kill.
+const DETECT_BUDGET: Duration = Duration::from_millis(3 * DEAD_MS);
+
+fn free_ports3() -> (u16, u16, u16) {
+    let a = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let b = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let c = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    (
+        a.local_addr().unwrap().port(),
+        b.local_addr().unwrap().port(),
+        c.local_addr().unwrap().port(),
+    )
+}
+
+/// Three nodes, one kernel each: driver (node 0, this process) plus two
+/// spawned servers. Failure detection on; UDP runs with the ARQ layer
+/// (raw UDP has no heartbeat path).
+fn cluster_file(transport: &str, p0: u16, p1: u16, p2: u16) -> String {
+    let udp = if transport == "udp" { "udp_window = 8\n" } else { "" };
+    format!(
+        r#"
+transport = "{transport}"
+heartbeat_interval = {HEARTBEAT_MS}
+suspect_after = {SUSPECT_MS}
+dead_after = {DEAD_MS}
+{udp}
+[[node]]
+name = "driver"
+platform = "sw"
+address = "127.0.0.1:{p0}"
+
+[[node]]
+name = "server1"
+platform = "sw"
+address = "127.0.0.1:{p1}"
+
+[[node]]
+name = "server2"
+platform = "sw"
+address = "127.0.0.1:{p2}"
+
+[[kernel]]
+node = "driver"
+
+[[kernel]]
+node = "server1"
+
+[[kernel]]
+node = "server2"
+"#
+    )
+}
+
+fn write_cluster(dir_tag: &str, text: &str) -> (std::path::PathBuf, std::path::PathBuf) {
+    let dir = std::env::temp_dir().join(dir_tag);
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cluster.toml");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(text.as_bytes()).unwrap();
+    (dir, path)
+}
+
+fn spawn_server(path: &std::path::Path, node: u16, app: &str) -> Child {
+    Command::new(env!("CARGO_BIN_EXE_shoal"))
+        .args([
+            "serve",
+            "--cluster",
+            path.to_str().unwrap(),
+            "--node",
+            &node.to_string(),
+            "--app",
+            app,
+            "--max-msgs",
+            "0",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn shoal serve")
+}
+
+/// Block until the server prints its "node up" line — its transport is
+/// bound, so the driver's detector can't falsely suspect a peer that is
+/// merely still exec'ing.
+fn wait_ready(child: &mut Child) {
+    let stdout = child.stdout.take().expect("server stdout piped");
+    let mut line = String::new();
+    BufReader::new(stdout).read_line(&mut line).expect("server readiness line");
+    assert!(line.contains("up"), "unexpected server banner: {line:?}");
+}
+
+fn reap(mut child: Child) {
+    let _ = child.kill();
+    let _ = child.wait();
+}
+
+/// SIGKILL a peer mid-stream: the probes in flight toward it fail with
+/// `Error::PeerDead` naming node 2 within the detection budget, later
+/// sends fail at issue, traffic to the surviving server still completes,
+/// no handle is stranded, and shutdown returns.
+fn kill_mid_stream(transport: &'static str) {
+    let _guard = PORT_LOCK.lock().unwrap();
+    let (p0, p1, p2) = free_ports3();
+    let text = cluster_file(transport, p0, p1, p2);
+    let spec = parse_cluster(&text).unwrap();
+    let (dir, path) = write_cluster(&format!("shoal-chaos-{transport}-{p0}"), &text);
+
+    // Driver first: its ingress binds inside `launch_node`, so the servers'
+    // detectors find a live listener from their very first heartbeat. The
+    // driver's own first heartbeats toward the still-exec'ing servers are
+    // covered by the never-heard startup grace: connect-ladder exhaustion
+    // only hard-kills a peer that has produced liveness evidence before,
+    // so a slow-starting server answers its first connect well inside the
+    // dead_after silence budget.
+    let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
+    let mut s1 = spawn_server(&path, 1, "echo");
+    let mut s2 = spawn_server(&path, 2, "echo");
+    wait_ready(&mut s1);
+    wait_ready(&mut s2);
+
+    let (warm_tx, warm_rx) = mpsc::channel();
+    let (killed_tx, killed_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    cluster.run_kernel(0, move |mut k| {
+        // Warm-up: both servers echo, so every connection/window is live.
+        for target in [1u16, 2] {
+            let h = k.am_medium(target, handlers::NOP, &[7], b"warmup").unwrap();
+            k.wait(h).unwrap();
+            let echo = k.recv_medium().unwrap();
+            assert_eq!(echo.src, target, "warmup echo from the wrong kernel");
+        }
+        warm_tx.send(()).unwrap();
+        killed_rx.recv().unwrap(); // server 2 is now SIGKILLed
+
+        // Probe the dead peer until its handles fail structurally. Early
+        // probes may fail with transport-flavoured reasons (a batch that
+        // died with the first broken flush); the detector must upgrade
+        // that to `PeerDead` naming node 2 within the budget. Every wait
+        // returns — a stranded handle would hang here and trip the outer
+        // timeout.
+        let start = Instant::now();
+        let mut named_dead = None;
+        while start.elapsed() < DETECT_BUDGET + Duration::from_secs(5) {
+            let h = k.am_medium(2, handlers::NOP, &[1], b"probe").unwrap();
+            match k.wait(h) {
+                Err(shoal::Error::PeerDead { node, .. }) => {
+                    named_dead = Some((node, start.elapsed()));
+                    break;
+                }
+                Ok(_) | Err(_) => std::thread::sleep(Duration::from_millis(25)),
+            }
+        }
+        let (node, elapsed) = named_dead.expect("no PeerDead error before the outer cap");
+        assert_eq!(node, 2, "death must name the killed node");
+        assert!(
+            elapsed <= DETECT_BUDGET,
+            "detection took {elapsed:?}, budget {DETECT_BUDGET:?} over {transport}"
+        );
+
+        // Fail-at-issue: the next send toward the fenced peer dies without
+        // touching the transport.
+        let h = k.am_medium(2, handlers::NOP, &[2], b"post-mortem").unwrap();
+        match k.wait(h) {
+            Err(shoal::Error::PeerDead { node: 2, .. }) => {}
+            other => panic!("expected fenced send to fail PeerDead(2), got {other:?}"),
+        }
+
+        // The surviving server is untouched by the fence.
+        let h = k.am_medium(1, handlers::NOP, &[9], b"survivor").unwrap();
+        k.wait(h).unwrap();
+        let echo = k.recv_medium().unwrap();
+        assert_eq!(echo.src, 1, "survivor echo");
+        done_tx.send(()).unwrap();
+    });
+
+    warm_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("warmup over both servers");
+    let kill_at = Instant::now();
+    reap(s2);
+    killed_tx.send(()).unwrap();
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .unwrap_or_else(|_| panic!("driver kernel hung after the kill over {transport}"));
+    assert!(
+        kill_at.elapsed() <= DETECT_BUDGET + Duration::from_secs(30),
+        "post-kill phase exceeded every budget"
+    );
+
+    // The node-level view agrees: node 2 dead, handles fenced, epoch
+    // bumped — and only node 2 (`server1` stays Alive).
+    let health = cluster.peer_health(0).expect("detector runs with heartbeats on");
+    assert!(health.is_dead(2));
+    assert!(!health.is_dead(1));
+    assert!(health.membership_epoch() >= 1);
+    let stats = cluster.router_stats(0).unwrap();
+    assert!(stats.peers_dead.load(Ordering::Relaxed) >= 1);
+    assert!(stats.fenced_handles.load(Ordering::Relaxed) >= 1);
+
+    cluster.join().unwrap();
+    reap(s1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// SIGKILL a peer mid-all-reduce: the in-flight collective fails naming
+/// node 2 instead of hanging, and new collectives fail at issue.
+fn kill_mid_all_reduce(transport: &'static str) {
+    let _guard = PORT_LOCK.lock().unwrap();
+    let (p0, p1, p2) = free_ports3();
+    let text = cluster_file(transport, p0, p1, p2);
+    let spec = parse_cluster(&text).unwrap();
+    let (dir, path) = write_cluster(&format!("shoal-chaos-ar-{transport}-{p0}"), &text);
+
+    // Same ordering as `kill_mid_stream`: bind the driver's ingress before
+    // the servers start heartbeating at it. The remote kernels' hellos
+    // queue on kernel 0's stream until `run_kernel` starts consuming.
+    let cluster = ShoalCluster::launch_node(&spec, 0).unwrap();
+    let mut s1 = spawn_server(&path, 1, "allreduce");
+    let mut s2 = spawn_server(&path, 2, "allreduce");
+    wait_ready(&mut s1);
+    wait_ready(&mut s2);
+
+    let (armed_tx, armed_rx) = mpsc::channel();
+    let (killed_tx, killed_rx) = mpsc::channel();
+    let (done_tx, done_rx) = mpsc::channel();
+    cluster.run_kernel(0, move |mut k| {
+        // Both remote kernels repeat hello until released (the allreduce
+        // app's handshake). Release kernel 1 only: kernel 2 dies instead
+        // of ever contributing, so the collective is genuinely in flight
+        // and incompletable when the kill lands.
+        let mut seen = std::collections::HashSet::new();
+        while seen.len() < 2 {
+            seen.insert(k.recv_medium().unwrap().src);
+        }
+        k.am_medium_async(1, handlers::NOP, &[], b"go").unwrap();
+        let ch = k.all_reduce_u64(ReduceOp::Sum, &[k.id() as u64]).unwrap();
+        armed_tx.send(()).unwrap();
+        killed_rx.recv().unwrap(); // server 2 is now SIGKILLed
+
+        let start = Instant::now();
+        match k.collective_wait_u64(ch) {
+            Err(shoal::Error::PeerDead { node, .. }) => {
+                assert_eq!(node, 2, "collective abort must name the killed node");
+            }
+            other => panic!("expected the all-reduce to fail PeerDead(2), got {other:?}"),
+        }
+        assert!(
+            start.elapsed() <= DETECT_BUDGET,
+            "collective abort took {:?}, budget {DETECT_BUDGET:?} over {transport}",
+            start.elapsed()
+        );
+
+        // A dead member poisons future collectives at issue — no new
+        // operation may strand on the fenced peer.
+        match k.all_reduce_u64(ReduceOp::Sum, &[1]) {
+            Err(shoal::Error::PeerDead { node: 2, .. }) => {}
+            Ok(_) => panic!("new collective must fail at issue with a dead member"),
+            Err(other) => panic!("expected PeerDead(2) at issue, got {other}"),
+        }
+        done_tx.send(()).unwrap();
+    });
+
+    armed_rx
+        .recv_timeout(Duration::from_secs(60))
+        .expect("collective armed with kernel 2 unreleased");
+    reap(s2);
+    killed_tx.send(()).unwrap();
+    done_rx
+        .recv_timeout(Duration::from_secs(60))
+        .unwrap_or_else(|_| panic!("all-reduce hung after the kill over {transport}"));
+
+    cluster.join().unwrap();
+    // Server 1 was released into the same doomed collective; its own
+    // detector aborts it too, so the process exits (on its own or via the
+    // reaper) — either way it must not wedge this test.
+    reap(s1);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn sigkill_mid_stream_tcp() {
+    kill_mid_stream("tcp");
+}
+
+#[test]
+fn sigkill_mid_stream_udp() {
+    kill_mid_stream("udp");
+}
+
+#[test]
+fn sigkill_mid_all_reduce_tcp() {
+    kill_mid_all_reduce("tcp");
+}
+
+#[test]
+fn sigkill_mid_all_reduce_udp() {
+    kill_mid_all_reduce("udp");
+}

@@ -781,3 +781,113 @@ fn prop_arq_delivers_exactly_once_in_order_under_loss() {
         Ok(())
     });
 }
+
+/// The failure detector's state machine on virtual time: random interleaved
+/// evidence (ingress touches, soft suspicion, hard death reports, timer
+/// ticks) must keep every invariant the fencing layers lean on — `Dead` is
+/// sticky, the membership epoch is monotone and counts deaths exactly,
+/// each death fires the sink exactly once with a unique dense epoch, tick
+/// reports each death exactly once, and the timer bound is never larger
+/// than one heartbeat interval while anyone is still undead.
+#[test]
+fn prop_peer_health_state_machine_invariants() {
+    use shoal::galapagos::health::{HealthConfig, PeerHealth, PeerState};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Arc as StdArc, Mutex as StdMutex};
+    use std::time::Duration;
+
+    check("peer-health", 300, |rng| {
+        let peers: Vec<u16> = (1..=rng.range(1, 6) as u16).collect();
+        let hb = rng.range(5, 50);
+        let suspect_ms = hb + rng.range(1, 100);
+        let dead_ms = suspect_ms + rng.range(1, 200);
+        let h = PeerHealth::new(
+            0,
+            &peers,
+            HealthConfig {
+                heartbeat_interval: Duration::from_millis(hb),
+                suspect_after: Duration::from_millis(suspect_ms),
+                dead_after: Duration::from_millis(dead_ms),
+            },
+        );
+        let sink_calls = StdArc::new(AtomicU64::new(0));
+        let sink_epochs = StdArc::new(StdMutex::new(Vec::<u64>::new()));
+        {
+            let (calls, epochs) = (StdArc::clone(&sink_calls), StdArc::clone(&sink_epochs));
+            h.set_death_sink(StdArc::new(move |_node, epoch, _detail| {
+                calls.fetch_add(1, Ordering::Relaxed);
+                epochs.lock().unwrap().push(epoch);
+            }));
+        }
+
+        let mut now = 0u64;
+        let mut tick_deaths = Vec::new();
+        let mut epoch_seen = 0u64;
+        for _ in 0..200 {
+            now += rng.below(dead_ms + 50);
+            match rng.below(4) {
+                0 => h.touch(*rng.pick(&peers), now),
+                1 => h.suspect(*rng.pick(&peers), "prop: soft evidence"),
+                2 => {
+                    if rng.chance(0.2) {
+                        let _ = h.peer_dead(*rng.pick(&peers), "prop: hard evidence");
+                    }
+                }
+                _ => tick_deaths.extend(h.tick(&peers, now)),
+            }
+            let _ = h.due_heartbeats(&peers, now);
+
+            let epoch = h.membership_epoch();
+            prop_assert!(epoch >= epoch_seen, "membership epoch went backwards");
+            epoch_seen = epoch;
+            // The epoch counts deaths exactly, and the sink fired once per.
+            prop_assert_eq!(epoch, h.dead_count());
+            prop_assert_eq!(sink_calls.load(Ordering::Relaxed), h.dead_count());
+            for &p in &peers {
+                if h.is_dead(p) {
+                    h.touch(p, now);
+                    prop_assert!(h.is_dead(p), "Dead must be sticky under touch");
+                    let de = h.died_epoch(p);
+                    prop_assert!(de >= 1 && de <= epoch, "death epoch stamp out of range");
+                } else {
+                    prop_assert_eq!(h.died_epoch(p), 0);
+                }
+            }
+            if h.dead_count() < peers.len() as u64 {
+                let d = h
+                    .next_deadline(&peers, now)
+                    .ok_or("undead peers but no deadline")?;
+                prop_assert!(
+                    d <= Duration::from_millis(hb),
+                    "timer bound {d:?} exceeds the heartbeat interval"
+                );
+            }
+        }
+
+        // Terminal silence: one long-enough gap kills every survivor.
+        now += dead_ms;
+        tick_deaths.extend(h.tick(&peers, now));
+        prop_assert_eq!(h.dead_count(), peers.len() as u64);
+        prop_assert!(h.next_deadline(&peers, now).is_none(), "all dead: no deadline");
+        prop_assert!(h.tick(&peers, now + dead_ms).is_empty(), "dead peers re-reported");
+        prop_assert!(
+            h.due_heartbeats(&peers, now + dead_ms).is_empty(),
+            "heartbeats to dead peers"
+        );
+        for &p in &peers {
+            prop_assert_eq!(h.state(p), PeerState::Dead);
+        }
+
+        // tick() never reports the same death twice, and every death —
+        // timed or hard-evidence — delivered the sink a unique dense epoch.
+        let reported = tick_deaths.len();
+        tick_deaths.sort_unstable();
+        tick_deaths.dedup();
+        prop_assert_eq!(tick_deaths.len(), reported);
+        let mut epochs = sink_epochs.lock().unwrap().clone();
+        epochs.sort_unstable();
+        prop_assert_eq!(epochs, (1..=peers.len() as u64).collect::<Vec<_>>());
+        prop_assert_eq!(sink_calls.load(Ordering::Relaxed), peers.len() as u64);
+        Ok(())
+    });
+}
